@@ -1,0 +1,16 @@
+//! Regenerate every table and figure of the paper's evaluation into
+//! `figures/*.csv` (also printed). See DESIGN.md §4 for the index and
+//! EXPERIMENTS.md for the paper-vs-measured discussion.
+//!
+//! ```sh
+//! cargo run --release --example paper_figures [-- --quick]
+//! ```
+
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let tables = pimacolaba::figures::all(Path::new("figures"), quick)?;
+    println!("\nregenerated {} tables into figures/", tables.len());
+    Ok(())
+}

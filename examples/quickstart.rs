@@ -1,0 +1,48 @@
+//! Quickstart: plan a collaborative FFT, inspect the model's prediction, and
+//! run a PIM-FFT-Tile *functionally* on the simulated in-memory compute
+//! units, checking the numbers against the reference FFT.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::PimTileExecutor;
+use pimacolaba::fft::{fft_soa, SoaVec};
+use pimacolaba::planner::Planner;
+use pimacolaba::routines::OptLevel;
+
+fn main() -> anyhow::Result<()> {
+    // 1) The paper's Table 1 system with the §6.2 ALU augmentation.
+    let sys = SystemConfig::baseline().with_hw_opt();
+    println!(
+        "system: {} — {} banks, {} PIM units, {} concurrent lane-FFTs",
+        sys.name,
+        sys.hbm.total_banks(),
+        sys.pim.units_per_stack * sys.hbm.stacks,
+        sys.concurrent_ffts()
+    );
+
+    // 2) Plan a 2^13-point FFT at batch 4096 (Pimacolaba = sw-hw-opt tiles).
+    let mut planner = Planner::new(&sys);
+    let plan = planner.plan(1 << 13, 1 << 12);
+    let eval = planner.evaluate(&plan)?;
+    println!("\n{plan}");
+    println!("  modeled speedup over GPU-only: {:.3}x", eval.speedup());
+    println!("  data-movement savings:         {:.3}x", eval.movement_savings());
+    println!("  butterflies offloaded to PIM:  {:.1}%", eval.offload_fraction * 100.0);
+
+    // 3) Execute a 32-point PIM-FFT-Tile on the simulated units and verify.
+    let tile = PimTileExecutor::new(&sys, OptLevel::SwHw, 32)?;
+    let inputs: Vec<SoaVec> = (0..16).map(|i| SoaVec::random(32, 1000 + i)).collect();
+    let outputs = tile.run(&inputs)?;
+    let max_err = inputs
+        .iter()
+        .zip(&outputs)
+        .map(|(x, y)| y.max_abs_diff(&fft_soa(x)))
+        .fold(0.0f32, f32::max);
+    println!("\nPIM tile (n=32, sw-hw-opt) on simulated units: 16 FFTs, max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-3);
+    println!("quickstart OK");
+    Ok(())
+}

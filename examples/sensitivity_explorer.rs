@@ -1,0 +1,52 @@
+//! Architecture-exploration example: sweeps the §6.6 PIM design knobs
+//! (register file, row buffer, unit provisioning) *jointly* — extending the
+//! paper's one-at-a-time Figure 19 — and reports the best configuration per
+//! PIM-FFT-Tile plus the resulting Pimacolaba headline speedup.
+//!
+//! ```sh
+//! cargo run --release --example sensitivity_explorer
+//! ```
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::planner::{Planner, TileModel};
+use pimacolaba::routines::OptLevel;
+
+fn configs() -> Vec<SystemConfig> {
+    let mut out = Vec::new();
+    for regs in [16usize, 32] {
+        for rb in [1024usize, 2048] {
+            for units in [256usize, 512] {
+                let mut s = SystemConfig::baseline();
+                s.pim = s.pim.with_regs(regs).with_units_per_stack(units);
+                s.hbm = s.hbm.with_row_buffer(rb);
+                s.name = format!("rf{regs}-rb{rb}-u{units}");
+                out.push(s.with_hw_opt());
+            }
+        }
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("{:<22} {:>9} {:>9} {:>9} {:>12}", "config", "tile 2^5", "tile 2^8", "tile 2^10", "pimacolaba");
+    let mut best: Option<(f64, String)> = None;
+    for sys in configs() {
+        let mut tm = TileModel::new(&sys, OptLevel::SwHw);
+        let e5 = tm.efficiency(1 << 5)?;
+        let e8 = tm.efficiency(1 << 8)?;
+        let e10 = tm.efficiency(1 << 10)?;
+        let mut p = Planner::with_opt(&sys, OptLevel::SwHw);
+        let mut max = 0.0f64;
+        for ls in 13..=24u32 {
+            let plan = p.plan(1usize << ls, 1 << 12);
+            max = max.max(p.evaluate(&plan)?.speedup());
+        }
+        println!("{:<22} {e5:>9.3} {e8:>9.3} {e10:>9.3} {max:>11.3}x", sys.name);
+        if best.as_ref().map_or(true, |(b, _)| max > *b) {
+            best = Some((max, sys.name.clone()));
+        }
+    }
+    let (speedup, name) = best.unwrap();
+    println!("\nbest Pimacolaba config: {name} at {speedup:.3}x (paper baseline: 1.38x; paper pim-per-bank: 1.64x)");
+    Ok(())
+}

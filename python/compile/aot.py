@@ -1,0 +1,122 @@
+"""AOT lowering: jax (L2+L1) -> HLO *text* artifacts for the rust runtime.
+
+HLO text, NOT ``lowered.compiler_ir().serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly -- see /opt/xla-example/README.md.
+
+Emits one artifact per (kind, N, B[, M1]) variant plus ``manifest.json`` which
+the rust ``runtime::artifact`` registry consumes. Run via ``make artifacts``
+(no-op when inputs are unchanged); python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Baseline GPU-path batched FFT kernels: one artifact per size, canonical
+# request-batch 8 (the coordinator's batcher pads partial batches).
+FFT_SIZES = [32, 64, 128, 256, 512, 1024, 2048, 4096]
+FFT_BATCH = 8
+
+# Collaborative-plan GPU components: (N, M1, M2, B). Tiles M2 are the
+# PIM-FFT-Tile sizes the planner may select for the e2e demo sizes.
+GPU_PART_VARIANTS = [
+    (8192, 256, 32, 4),
+    (8192, 128, 64, 4),
+    (16384, 512, 32, 4),
+    (16384, 256, 64, 4),
+    (32768, 1024, 32, 2),
+    (65536, 2048, 32, 2),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # elides big literals as "{...}", which the text parser on the rust side
+    # silently zero-fills — bit-reversal permutations and twiddle tables
+    # would all become zeros.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_fft(n: int, b: int) -> str:
+    spec = jax.ShapeDtypeStruct((b, n), jnp.float32)
+    return to_hlo_text(jax.jit(model.batched_fft).lower(spec, spec))
+
+
+def lower_gpu_part(n: int, m1: int, m2: int, b: int) -> str:
+    # Column-major contract (see model.gpu_component_cols): rows = b*m2.
+    spec = jax.ShapeDtypeStruct((b * m2, m1), jnp.float32)
+    fn = lambda re, im: model.gpu_component_cols(re, im, m1, m2)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    def emit(name: str, text: str, **meta):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            dict(
+                path=name,
+                sha256=hashlib.sha256(text.encode()).hexdigest(),
+                **meta,
+            )
+        )
+        print(f"  wrote {name} ({len(text)} chars)")
+
+    for n in FFT_SIZES:
+        emit(
+            f"fft_n{n}_b{FFT_BATCH}.hlo.txt",
+            lower_fft(n, FFT_BATCH),
+            kind="fft",
+            n=n,
+            b=FFT_BATCH,
+        )
+    for n, m1, m2, b in GPU_PART_VARIANTS:
+        emit(
+            f"gpupart_n{n}_m1{m1}_b{b}.hlo.txt",
+            lower_gpu_part(n, m1, m2, b),
+            kind="gpu_part",
+            n=n,
+            m1=m1,
+            m2=m2,
+            b=b,
+        )
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = p.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

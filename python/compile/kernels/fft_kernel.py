@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: batched in-VMEM radix-2 FFT.
+
+Hardware adaptation of the paper's GPU component (see DESIGN.md
+SS Hardware-Adaptation): rocFFT keeps one FFT resident in LDS and runs all
+log2(N) butterfly stages before writing back; here one (TB, N) tile of the
+batch is resident in VMEM, the grid walks the batch dimension, and the whole
+stage loop happens on VPU registers/VMEM. HBM traffic is therefore exactly one
+read + one write of the signal -- the "single GPU kernel" regime of Fig 11.
+
+The kernel is lowered with ``interpret=True`` everywhere in this repo: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, and correctness (vs
+``ref.fft_oracle``) is the build-time contract. Real-TPU tiling notes live in
+DESIGN.md SSPerf.
+
+Data is SoA float32 (separate re/im), mirroring the paper's even-bank /
+odd-bank placement of real and imaginary components (Fig 6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import bit_reverse_permutation, twiddles
+
+# Soft cap on resident elements per grid step: 2 arrays x TB x N x 4B plus
+# twiddle constants must sit comfortably in a ~16 MiB VMEM budget. 1<<16
+# elements/array = 512 KiB for both operands -- conservative, leaves room for
+# double-buffering on a real TPU.
+_VMEM_ELEMS = 1 << 16
+
+
+def batch_tile(b: int, n: int) -> int:
+    """Largest power-of-two batch tile TB such that TB*N fits the VMEM budget
+    and TB divides b."""
+    tb = max(1, min(b, _VMEM_ELEMS // max(n, 1)))
+    while b % tb:
+        tb //= 2
+    return max(tb, 1)
+
+
+def packed_twiddles(n: int):
+    """All stage twiddles packed into two (N-1,) float32 arrays.
+
+    Stage ``s`` (half = 2**s) occupies the slice ``[2**s - 1, 2**(s+1) - 1)``.
+    Packing lets the pallas_call receive every stage constant as a single
+    operand pair (pallas kernels may not capture traced constants).
+    """
+    wr = np.empty(n - 1, np.float32)
+    wi = np.empty(n - 1, np.float32)
+    for s in range(n.bit_length() - 1):
+        half = 1 << s
+        r, i = twiddles(half * 2)
+        wr[half - 1 : 2 * half - 1] = r
+        wi[half - 1 : 2 * half - 1] = i
+    return wr, wi
+
+
+def _fft_stage_loop(re, im, wr_pack, wi_pack, n: int):
+    """All log2(N) DIT butterfly stages over a (TB, N) tile held in registers.
+
+    Unrolled at trace time; every stage is a reshape + fused multiply-add, the
+    exact butterfly of paper Fig 1 vectorized across the tile.
+    """
+    tb = re.shape[0]
+    stages = n.bit_length() - 1
+    for s in range(stages):
+        half = 1 << s
+        m = half * 2
+        wr = wr_pack[half - 1 : 2 * half - 1]
+        wi = wi_pack[half - 1 : 2 * half - 1]
+        re = re.reshape(tb, n // m, m)
+        im = im.reshape(tb, n // m, m)
+        er, od_r = re[:, :, :half], re[:, :, half:]
+        ei, od_i = im[:, :, :half], im[:, :, half:]
+        # Butterfly: t = w * odd; y1 = even + t; y2 = even - t   (Fig 1 right)
+        tr = od_r * wr - od_i * wi
+        ti = od_r * wi + od_i * wr
+        re = jnp.concatenate([er + tr, er - tr], axis=2)
+        im = jnp.concatenate([ei + ti, ei - ti], axis=2)
+    return re.reshape(tb, n), im.reshape(tb, n)
+
+
+def _fft_kernel(re_ref, im_ref, perm_ref, wr_ref, wi_ref, out_re_ref, out_im_ref, *, n: int):
+    perm = perm_ref[...]
+    re = jnp.take(re_ref[...], perm, axis=1)
+    im = jnp.take(im_ref[...], perm, axis=1)
+    re, im = _fft_stage_loop(re, im, wr_ref[...], wi_ref[...], n)
+    out_re_ref[...] = re
+    out_im_ref[...] = im
+
+
+def fft_pallas(re: jnp.ndarray, im: jnp.ndarray, *, interpret: bool = True):
+    """Forward FFT along the last axis of a (B, N) SoA pair via Pallas.
+
+    Returns (re, im) of the spectrum. N must be a power of two >= 2.
+    """
+    b, n = re.shape
+    if n & (n - 1) or n < 2:
+        raise ValueError(f"N must be a power of two >= 2, got {n}")
+    if im.shape != (b, n):
+        raise ValueError(f"re/im shape mismatch: {re.shape} vs {im.shape}")
+    tb = batch_tile(b, n)
+    grid = (b // tb,)
+    spec = pl.BlockSpec((tb, n), lambda i: (i, 0))
+    perm_spec = pl.BlockSpec((n,), lambda i: (0,))
+    tw_spec = pl.BlockSpec((n - 1,), lambda i: (0,)) if n > 1 else perm_spec
+    out_shape = [
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+    ]
+    perm = jnp.asarray(bit_reverse_permutation(n))
+    wr_pack, wi_pack = packed_twiddles(n)
+    return pl.pallas_call(
+        functools.partial(_fft_kernel, n=n),
+        grid=grid,
+        in_specs=[spec, spec, perm_spec, tw_spec, tw_spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(re, im, perm, jnp.asarray(wr_pack), jnp.asarray(wi_pack))
+
+
+def _twiddle_mul_kernel(re_ref, im_ref, tr_ref, ti_ref, out_re_ref, out_im_ref):
+    re, im = re_ref[...], im_ref[...]
+    tr, ti = tr_ref[...], ti_ref[...]
+    out_re_ref[...] = re * tr - im * ti
+    out_im_ref[...] = re * ti + im * tr
+
+
+def twiddle_mul_pallas(re, im, tw_re, tw_im, *, interpret: bool = True):
+    """Elementwise complex multiply of a (B, M1, M2) tile stack by the
+    inter-factor twiddle matrix T[k2, n1] (paper Fig 11 GPU->PIM handoff)."""
+    b, m1, m2 = re.shape
+    tb = batch_tile(b, m1 * m2)
+    grid = (b // tb,)
+    xspec = pl.BlockSpec((tb, m1, m2), lambda i: (i, 0, 0))
+    tspec = pl.BlockSpec((m1, m2), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((b, m1, m2), jnp.float32),
+        jax.ShapeDtypeStruct((b, m1, m2), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _twiddle_mul_kernel,
+        grid=grid,
+        in_specs=[xspec, xspec, tspec, tspec],
+        out_specs=[xspec, xspec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(re, im, tw_re, tw_im)

@@ -1,0 +1,95 @@
+"""Pure-jnp correctness oracles for the FFT kernels.
+
+Two independent references:
+
+* :func:`fft_oracle` -- ``jnp.fft.fft`` on complex64, the ground truth every
+  kernel (Pallas L1 and the rust-side reference FFT) is validated against.
+* :func:`radix2_dit_soa` -- a straight-line radix-2 decimation-in-time FFT over
+  SoA (separate re/im) float32 arrays. This mirrors the butterfly schedule the
+  paper maps onto PIM (Figure 1) and is the algorithmic reference for the
+  Pallas kernel; it is deliberately written with plain jnp ops only.
+
+All FFTs here are *forward* complex DFTs with the engineering sign convention
+``X[k] = sum_n x[n] * exp(-2*pi*i*n*k/N)`` (same as jnp.fft.fft).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def bit_reverse_permutation(n: int) -> np.ndarray:
+    """Index permutation that sorts ``n`` points into bit-reversed order.
+
+    ``n`` must be a power of two. Returned as a host numpy array so it can be
+    baked into traced programs as a constant gather.
+    """
+    if n & (n - 1) or n <= 0:
+        raise ValueError(f"n must be a positive power of two, got {n}")
+    bits = n.bit_length() - 1
+    idx = np.arange(n, dtype=np.int32)
+    rev = np.zeros(n, dtype=np.int32)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def twiddles(m: int) -> tuple:
+    """(re, im) of ``W_m^j = exp(-2*pi*i*j/m)`` for ``j in [0, m/2)``."""
+    j = np.arange(m // 2, dtype=np.float64)
+    ang = -2.0 * np.pi * j / m
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def radix2_dit_soa(re: jnp.ndarray, im: jnp.ndarray) -> tuple:
+    """Batched iterative radix-2 DIT FFT over SoA float32 arrays.
+
+    ``re``/``im`` have shape ``(..., N)`` with ``N`` a power of two; the FFT is
+    taken along the last axis. The stage loop is unrolled at trace time (N is
+    static), matching the log2(N)-step butterfly schedule of Figure 1.
+    """
+    n = re.shape[-1]
+    perm = bit_reverse_permutation(n)
+    re = jnp.take(re, perm, axis=-1)
+    im = jnp.take(im, perm, axis=-1)
+    stages = n.bit_length() - 1
+    lead = re.shape[:-1]
+    for s in range(stages):
+        half = 1 << s
+        m = half * 2
+        wr, wi = twiddles(m)  # (half,)
+        shape = lead + (n // m, m)
+        re = re.reshape(shape)
+        im = im.reshape(shape)
+        er, od_r = re[..., :half], re[..., half:]
+        ei, od_i = im[..., :half], im[..., half:]
+        tr = od_r * wr - od_i * wi
+        ti = od_r * wi + od_i * wr
+        re = jnp.concatenate([er + tr, er - tr], axis=-1)
+        im = jnp.concatenate([ei + ti, ei - ti], axis=-1)
+    re = re.reshape(lead + (n,))
+    im = im.reshape(lead + (n,))
+    return re, im
+
+
+def fft_oracle(re, im) -> tuple:
+    """Ground-truth forward FFT via jnp.fft.fft (complex64)."""
+    x = jnp.asarray(re, jnp.float32) + 1j * jnp.asarray(im, jnp.float32)
+    y = jnp.fft.fft(x.astype(jnp.complex64), axis=-1)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def fourstep_twiddle(n: int, m1: int, m2: int) -> tuple:
+    """Inter-factor twiddle matrix ``T[k2, n1] = W_N^(k2*n1)`` (re, im).
+
+    Used between the GPU component (size-M1 column FFTs) and the PIM component
+    (size-M2 row FFTs) of the collaborative decomposition (paper Fig 11).
+    Shape ``(m1, m2)``.
+    """
+    if m1 * m2 != n:
+        raise ValueError(f"m1*m2 must equal n: {m1}*{m2} != {n}")
+    k2 = np.arange(m1, dtype=np.float64)[:, None]
+    n1 = np.arange(m2, dtype=np.float64)[None, :]
+    ang = -2.0 * np.pi * (k2 * n1) / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)

@@ -1,0 +1,96 @@
+"""L2: the jax compute graph for the GPU side of Pimacolaba.
+
+Two entry points, both lowered AOT by :mod:`compile.aot` and executed from the
+rust coordinator via PJRT -- python is never on the request path:
+
+* :func:`batched_fft` -- the baseline GPU path: a batch of independent
+  size-N FFTs, the "single GPU kernel" of paper Fig 11 (N <= LDS/VMEM tile).
+* :func:`gpu_component` -- the GPU half of collaborative decomposition
+  (paper SS5.1): for each request, view the size-N signal as an (M1, M2)
+  matrix (n = n2*M2 + n1), run M2 column FFTs of size M1, and apply the
+  inter-factor twiddle W_N^(k2*n1). The rust side then hands each of the M1
+  rows (size M2, contiguous -- PIM-friendly) to the PIM-FFT-Tile and gathers
+  the final transpose X[k1*M1 + k2] = O[k2, k1].
+
+Both call the L1 Pallas kernel so the butterfly hot-spot lowers into the same
+HLO module.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.fft_kernel import fft_pallas, twiddle_mul_pallas
+from .kernels.ref import fourstep_twiddle
+
+
+def batched_fft(re: jnp.ndarray, im: jnp.ndarray):
+    """Forward FFT along the last axis of (B, N) SoA float32 arrays."""
+    return tuple(fft_pallas(re, im))
+
+
+def gpu_component(re: jnp.ndarray, im: jnp.ndarray, m1: int, m2: int):
+    """GPU half of the collaborative plan for (B, N=M1*M2) inputs.
+
+    Returns Z as (B, N) flattened row-major over (k2 in [0,M1), n1 in [0,M2)):
+    Z[k2, n1] = W_N^(k2*n1) * sum_n2 x[n2*M2 + n1] W_M1^(n2*k2).
+    Row n1-contiguity is exactly the layout the PIM strided mapping wants.
+    """
+    b, n = re.shape
+    assert m1 * m2 == n, (m1, m2, n)
+    # x[n2, n1]: column FFTs of length M1 = FFT over axis 1 after transpose.
+    re3 = re.reshape(b, m1, m2).transpose(0, 2, 1).reshape(b * m2, m1)
+    im3 = im.reshape(b, m1, m2).transpose(0, 2, 1).reshape(b * m2, m1)
+    yre, yim = fft_pallas(re3, im3)
+    # back to [k2, n1]
+    yre = yre.reshape(b, m2, m1).transpose(0, 2, 1)
+    yim = yim.reshape(b, m2, m1).transpose(0, 2, 1)
+    tw_re, tw_im = fourstep_twiddle(n, m1, m2)
+    zre, zim = twiddle_mul_pallas(yre, yim, jnp.asarray(tw_re), jnp.asarray(tw_im))
+    return zre.reshape(b, n), zim.reshape(b, n)
+
+
+def gpu_component_cols(re2: jnp.ndarray, im2: jnp.ndarray, m1: int, m2: int):
+    """Transpose-free variant of :func:`gpu_component` used for AOT lowering.
+
+    The caller (the rust scheduler) supplies the column gather: input row
+    ``sig*M2 + n1`` holds ``x_sig[n2*M2 + n1]`` for ``n2 in [0, M1)``. The
+    output keeps the same row layout with ``k2`` along the last axis:
+    ``Z2[sig*M2 + n1, k2] = W_N^(k2*n1) * FFT_M1(col n1)[k2]``.
+
+    Why this exists: a jitted transpose lowers to HLO ``transpose`` ops whose
+    non-default result layouts inside while-loop tuples mis-execute on the
+    xla_extension 0.5.1 CPU runtime the rust `xla` crate embeds (outputs come
+    back NaN). Keeping the AOT graph elementwise + Pallas-call only
+    sidesteps the bug; the rust side owns the (cheap, host-local) gathers.
+    """
+    b2, m1_ = re2.shape
+    assert m1_ == m1 and b2 % m2 == 0, (re2.shape, m1, m2)
+    n = m1 * m2
+    yre, yim = fft_pallas(re2, im2)  # FFT over n2 (length M1) per row
+    tw_re, tw_im = fourstep_twiddle(n, m1, m2)  # T[k2, n1], shape (m1, m2)
+    # Row r has n1 = r % M2: broadcast T^T (m2, m1) over signal groups.
+    t2r = jnp.asarray(tw_re.T)[None]  # (1, m2, m1)
+    t2i = jnp.asarray(tw_im.T)[None]
+    yre3 = yre.reshape(-1, m2, m1)
+    yim3 = yim.reshape(-1, m2, m1)
+    zre = yre3 * t2r - yim3 * t2i
+    zim = yre3 * t2i + yim3 * t2r
+    return zre.reshape(b2, m1), zim.reshape(b2, m1)
+
+
+def fourstep_full(re: jnp.ndarray, im: jnp.ndarray, m1: int, m2: int):
+    """Full four-step FFT (GPU component + row FFTs + transpose gather).
+
+    Pure-jax mirror of what coordinator::scheduler does with the PIM
+    simulator in the loop; used as a build-time consistency check that the
+    decomposition algebra reproduces jnp.fft.fft.
+    """
+    b, n = re.shape
+    zre, zim = gpu_component(re, im, m1, m2)
+    zre = zre.reshape(b, m1, m2)
+    zim = zim.reshape(b, m1, m2)
+    ore, oim = fft_pallas(zre.reshape(b * m1, m2), zim.reshape(b * m1, m2))
+    ore = ore.reshape(b, m1, m2).transpose(0, 2, 1).reshape(b, n)  # X[k1*M1+k2]
+    oim = oim.reshape(b, m1, m2).transpose(0, 2, 1).reshape(b, n)
+    return ore, oim

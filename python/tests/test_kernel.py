@@ -1,0 +1,158 @@
+"""L1 correctness: Pallas FFT kernel vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute hot-spot: everything the
+rust runtime executes was lowered from these functions.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fft_kernel import batch_tile, fft_pallas, twiddle_mul_pallas
+
+
+def rand_soa(b, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal((b, n)).astype(np.float32),
+        rng.standard_normal((b, n)).astype(np.float32),
+    )
+
+
+def assert_fft_close(got, want, n):
+    # f32 radix-2 error grows ~ sqrt(log2 N); scale tolerance by signal norm.
+    scale = max(np.max(np.abs(want[0])), np.max(np.abs(want[1])), 1.0)
+    tol = 2e-6 * scale * (n.bit_length())
+    np.testing.assert_allclose(got[0], want[0], atol=tol, rtol=1e-4)
+    np.testing.assert_allclose(got[1], want[1], atol=tol, rtol=1e-4)
+
+
+class TestBitReverse:
+    def test_n8(self):
+        np.testing.assert_array_equal(
+            ref.bit_reverse_permutation(8), [0, 4, 2, 6, 1, 5, 3, 7]
+        )
+
+    def test_involution(self):
+        for n in [2, 4, 16, 64, 256]:
+            p = ref.bit_reverse_permutation(n)
+            np.testing.assert_array_equal(p[p], np.arange(n))
+
+    def test_rejects_non_pow2(self):
+        for bad in [0, 3, 12, -4]:
+            with pytest.raises(ValueError):
+                ref.bit_reverse_permutation(bad)
+
+
+class TestOracleSelfConsistency:
+    @pytest.mark.parametrize("n", [2, 4, 8, 32, 128, 1024])
+    def test_radix2_matches_jnpfft(self, n):
+        re, im = rand_soa(3, n, seed=n)
+        got = ref.radix2_dit_soa(jnp.asarray(re), jnp.asarray(im))
+        want = ref.fft_oracle(re, im)
+        assert_fft_close((np.asarray(got[0]), np.asarray(got[1])), want, n)
+
+    def test_dc_signal(self):
+        re = np.ones((1, 16), np.float32)
+        im = np.zeros((1, 16), np.float32)
+        r, i = ref.radix2_dit_soa(jnp.asarray(re), jnp.asarray(im))
+        assert float(r[0, 0]) == pytest.approx(16.0)
+        np.testing.assert_allclose(np.asarray(r)[0, 1:], 0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(i), 0, atol=1e-5)
+
+
+class TestPallasFft:
+    @pytest.mark.parametrize("n", [2, 4, 8, 16, 64, 256, 1024])
+    @pytest.mark.parametrize("b", [1, 3, 8])
+    def test_matches_oracle(self, n, b):
+        re, im = rand_soa(b, n, seed=7 * n + b)
+        got = fft_pallas(jnp.asarray(re), jnp.asarray(im))
+        want = ref.fft_oracle(re, im)
+        assert_fft_close((np.asarray(got[0]), np.asarray(got[1])), want, n)
+
+    def test_rejects_non_pow2(self):
+        re, im = rand_soa(2, 12)
+        with pytest.raises(ValueError):
+            fft_pallas(jnp.asarray(re), jnp.asarray(im))
+
+    def test_rejects_shape_mismatch(self):
+        with pytest.raises(ValueError):
+            fft_pallas(jnp.zeros((2, 8)), jnp.zeros((2, 16)))
+
+    def test_linearity(self):
+        re1, im1 = rand_soa(2, 64, seed=1)
+        re2, im2 = rand_soa(2, 64, seed=2)
+        a = fft_pallas(jnp.asarray(re1 + re2), jnp.asarray(im1 + im2))
+        b1 = fft_pallas(jnp.asarray(re1), jnp.asarray(im1))
+        b2 = fft_pallas(jnp.asarray(re2), jnp.asarray(im2))
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b1[0] + b2[0]), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b1[1] + b2[1]), atol=1e-3)
+
+    def test_parseval(self):
+        re, im = rand_soa(1, 256, seed=9)
+        r, i = fft_pallas(jnp.asarray(re), jnp.asarray(im))
+        t = np.sum(re**2 + im**2)
+        f = float(jnp.sum(r**2 + i**2)) / 256
+        assert f == pytest.approx(t, rel=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        logn=st.integers(min_value=1, max_value=9),
+        b=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, logn, b, seed):
+        n = 1 << logn
+        rng = np.random.default_rng(seed)
+        re = rng.uniform(-4, 4, (b, n)).astype(np.float32)
+        im = rng.uniform(-4, 4, (b, n)).astype(np.float32)
+        got = fft_pallas(jnp.asarray(re), jnp.asarray(im))
+        want = ref.fft_oracle(re, im)
+        assert_fft_close((np.asarray(got[0]), np.asarray(got[1])), want, n)
+
+
+class TestBatchTile:
+    def test_divides_batch(self):
+        for b in [1, 2, 3, 6, 8, 40]:
+            for n in [16, 1024, 65536]:
+                tb = batch_tile(b, n)
+                assert b % tb == 0 and tb >= 1
+
+    def test_vmem_cap(self):
+        assert batch_tile(1024, 65536) == 1
+        assert batch_tile(8, 32) == 8
+
+
+class TestTwiddleMul:
+    def test_matches_complex_mul(self):
+        b, m1, m2 = 2, 8, 4
+        rng = np.random.default_rng(3)
+        re = rng.standard_normal((b, m1, m2)).astype(np.float32)
+        im = rng.standard_normal((b, m1, m2)).astype(np.float32)
+        tr, ti = ref.fourstep_twiddle(m1 * m2, m1, m2)
+        got_r, got_i = twiddle_mul_pallas(
+            jnp.asarray(re), jnp.asarray(im), jnp.asarray(tr), jnp.asarray(ti)
+        )
+        x = re + 1j * im
+        t = tr + 1j * ti
+        want = x * t[None]
+        np.testing.assert_allclose(np.asarray(got_r), want.real, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(got_i), want.imag, atol=1e-5)
+
+
+class TestFourstepTwiddle:
+    def test_unit_modulus(self):
+        tr, ti = ref.fourstep_twiddle(64, 8, 8)
+        np.testing.assert_allclose(tr**2 + ti**2, 1.0, atol=1e-6)
+
+    def test_first_row_col_is_one(self):
+        tr, ti = ref.fourstep_twiddle(64, 16, 4)
+        np.testing.assert_allclose(tr[0], 1.0, atol=1e-7)
+        np.testing.assert_allclose(tr[:, 0], 1.0, atol=1e-7)
+        np.testing.assert_allclose(ti[0], 0.0, atol=1e-7)
+
+    def test_rejects_bad_factorization(self):
+        with pytest.raises(ValueError):
+            ref.fourstep_twiddle(64, 8, 4)

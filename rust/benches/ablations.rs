@@ -1,0 +1,69 @@
+//! Ablation bench for the design choices DESIGN.md calls out: what each
+//! modeling/architecture assumption buys, measured on the 2^5 and 2^8
+//! PIM-FFT-Tiles and on the Pimacolaba headline.
+use pimacolaba::config::SystemConfig;
+use pimacolaba::planner::{Planner, TileModel};
+use pimacolaba::routines::OptLevel;
+
+fn tile_eff(sys: &SystemConfig, n: usize) -> f64 {
+    TileModel::new(sys, if sys.pim.hw_maddsub { OptLevel::SwHw } else { OptLevel::Base })
+        .efficiency(n)
+        .unwrap()
+}
+
+fn pimacolaba_max(sys: &SystemConfig) -> f64 {
+    let mut p = Planner::new(sys);
+    (13..=24u32)
+        .map(|ls| {
+            let plan = p.plan(1usize << ls, 1 << 12);
+            p.evaluate(&plan).unwrap().speedup()
+        })
+        .fold(0.0, f64::max)
+}
+
+fn main() {
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    let mut probe = |name: &str, sys: SystemConfig| {
+        rows.push((name.to_string(), tile_eff(&sys, 32), tile_eff(&sys, 256), pimacolaba_max(&sys)));
+    };
+
+    probe("pimacolaba (sw-hw)", SystemConfig::baseline().with_hw_opt());
+
+    // Ablation: no bank-pair fusion — every even/odd micro-op pair pays its
+    // own command slot (§ DESIGN.md command-slot discipline).
+    let mut s = SystemConfig::baseline().with_hw_opt();
+    s.pim.bank_pair_fused = false;
+    s.name = "no-pair-fusion".into();
+    probe(&s.name.clone(), s);
+
+    // Ablation: pim-MOV at the half-rate compute window instead of plain
+    // column rate.
+    let mut s = SystemConfig::baseline().with_hw_opt();
+    s.pim.mov_full_rate = false;
+    s.name = "mov-half-rate".into();
+    probe(&s.name.clone(), s);
+
+    // Ablation: full-rate PIM issue (the §2.3 "potential" bound).
+    let mut s = SystemConfig::baseline().with_hw_opt();
+    s.pim.issue_rate_divisor = 1.0;
+    s.name = "full-rate-issue".into();
+    probe(&s.name.clone(), s);
+
+    // Ablation: costlier command/constant traffic (16 B/command).
+    let mut s = SystemConfig::baseline().with_hw_opt();
+    s.pim.cmd_bytes = 16.0;
+    s.name = "cmd-16B".into();
+    probe(&s.name.clone(), s);
+
+    // No hardware augmentation at all (sw path only → pim-base tiles).
+    probe("no-hw-opt (pim-base tiles)", SystemConfig::baseline());
+
+    println!("{:<28} {:>10} {:>10} {:>14}", "config", "tile 2^5", "tile 2^8", "pimacolaba max");
+    for (name, e5, e8, max) in &rows {
+        println!("{name:<28} {e5:>9.3}x {e8:>9.3}x {max:>13.3}x");
+    }
+    // Sanity: fusion and full-rate movs are load-bearing; full-rate issue is
+    // the upside bound.
+    assert!(rows[0].3 > rows[1].3 && rows[0].3 > rows[2].3);
+    assert!(rows[3].3 > rows[0].3);
+}

@@ -1,0 +1,69 @@
+//! End-to-end serving benchmark: the coordinator (batcher + scheduler +
+//! PJRT artifacts when present + PIM simulator) over a synthetic trace.
+//! Reports host throughput/latency plus the modeled paper metrics.
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{synthetic_trace, FftRequest, Scheduler, Server, ServiceReport};
+use pimacolaba::fft::SoaVec;
+use pimacolaba::runtime::Registry;
+use pimacolaba::util::benchkit::fmt_ns;
+use pimacolaba::util::Rng;
+
+fn run_trace(requests: usize, sizes: &[usize], use_artifacts: bool) -> (ServiceReport, f64) {
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let server = Server::spawn(
+        move || {
+            let registry = if use_artifacts {
+                Registry::load(Path::new("artifacts")).ok().map(|mut r| {
+                    r.warmup().expect("artifact warmup");
+                    r
+                })
+            } else {
+                None
+            };
+            Scheduler::new(&sys, registry)
+        },
+        16,
+        Duration::from_millis(2),
+        512,
+    );
+    let trace = synthetic_trace(requests, sizes, 10.0, 42);
+    let mut rng = Rng::new(1);
+    // Wait for the worker (incl. artifact warmup) before starting the clock.
+    server
+        .call(FftRequest::random(u64::MAX, sizes[0], 1, 0))
+        .expect("warmup request");
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let signals = (0..e.batch).map(|_| SoaVec::random(e.n, rng.next_u64())).collect();
+        pending.push(server.submit(FftRequest::new(i as u64, e.n, signals)).unwrap());
+    }
+    let mut report = ServiceReport::default();
+    for rx in pending {
+        report.add(&rx.recv().unwrap().unwrap());
+    }
+    let wall = t0.elapsed().as_nanos() as f64;
+    server.shutdown();
+    (report, wall)
+}
+
+fn main() {
+    let have_artifacts = Path::new("artifacts/manifest.json").exists();
+    for (label, use_art) in [("host-reference-gpu", false), ("pjrt-artifacts", have_artifacts)] {
+        if label == "pjrt-artifacts" && !have_artifacts {
+            println!("pjrt-artifacts: SKIP (run `make artifacts`)");
+            continue;
+        }
+        let (report, wall) = run_trace(48, &[32, 256, 4096, 8192, 16384], use_art);
+        println!(
+            "e2e[{label}]: {} requests in {} ({:.1} req/s) | {}",
+            report.requests,
+            fmt_ns(wall),
+            report.requests as f64 / (wall / 1e9),
+            report.summary()
+        );
+    }
+}

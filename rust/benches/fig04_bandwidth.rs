@@ -1,0 +1,10 @@
+//! Bench target for Figure 4: times the generator, then prints the rows.
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig04_bandwidth/generate", || figures::fig04_bandwidth(false));
+    println!("{}", figures::fig04_bandwidth(false));
+    println!("{}", figures::table1_parameters());
+}

@@ -1,0 +1,9 @@
+//! Bench target for Figure 5: times the generator, then prints the rows.
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig05_boost/generate", || figures::fig05_boost());
+    println!("{}", figures::fig05_boost());
+}

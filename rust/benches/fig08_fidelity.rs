@@ -1,0 +1,9 @@
+//! Bench target for Figure 8: times the generator, then prints the rows.
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig08_fidelity/generate", || figures::fig08_fidelity(false));
+    println!("{}", figures::fig08_fidelity(false));
+}

@@ -1,0 +1,11 @@
+//! Bench target for Figure 9: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 9).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig09_mapping/generate", || figures::fig09_mapping(false).unwrap());
+    let table = figures::fig09_mapping(false).unwrap();
+    println!("{table}");
+}

@@ -1,0 +1,11 @@
+//! Bench target for Figure 10: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 10).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig10_pimbase/generate", || figures::fig10_pimbase(false).unwrap());
+    let table = figures::fig10_pimbase(false).unwrap();
+    println!("{table}");
+}

@@ -1,0 +1,11 @@
+//! Bench target for Figure 12: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 12).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig12_pimcolab/generate", || figures::fig12_pimcolab(false).unwrap());
+    let table = figures::fig12_pimcolab(false).unwrap();
+    println!("{table}");
+}

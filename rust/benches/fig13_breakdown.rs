@@ -1,0 +1,11 @@
+//! Bench target for Figure 13: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 13).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig13_breakdown/generate", || figures::fig13_breakdown(false).unwrap());
+    let table = figures::fig13_breakdown(false).unwrap();
+    println!("{table}");
+}

@@ -1,0 +1,11 @@
+//! Bench target for Figure 16: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 16).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig16_tiles/generate", || figures::fig16_tiles(false).unwrap());
+    let table = figures::fig16_tiles(false).unwrap();
+    println!("{table}");
+}

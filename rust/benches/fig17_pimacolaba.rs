@@ -1,0 +1,11 @@
+//! Bench target for Figure 17: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 17).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig17_pimacolaba/generate", || figures::fig17_pimacolaba(false).unwrap());
+    let table = figures::fig17_pimacolaba(false).unwrap();
+    println!("{table}");
+}

@@ -1,0 +1,11 @@
+//! Bench target for Figure 18: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 18).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig18_movement/generate", || figures::fig18_movement(false).unwrap());
+    let table = figures::fig18_movement(false).unwrap();
+    println!("{table}");
+}

@@ -1,0 +1,11 @@
+//! Bench target for Figure 19: times the generator, then prints the regenerated
+//! rows (the reproduction of the paper's Figure 19).
+use pimacolaba::figures;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    bench.run("fig19_sensitivity/generate", || figures::fig19_sensitivity(false).unwrap());
+    let table = figures::fig19_sensitivity(false).unwrap();
+    println!("{table}");
+}

@@ -1,0 +1,40 @@
+//! GPU baseline — AMD Instinct MI210 class (paper §4.4.1).
+
+/// The GPU the paper baselines against, reduced to the quantities its
+/// performance models consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Compute units (MI210: 104).
+    pub compute_units: usize,
+    /// Peak single-precision throughput, TFLOP/s (MI210: 22.6).
+    pub fp32_tflops: f64,
+    /// Largest FFT whose working set fits the per-workgroup scratchpad
+    /// (LDS), i.e. the single-kernel regime boundary of paper Fig 11
+    /// (< 2^13 on the authors' setup ⇒ max single-kernel size 2^12).
+    pub lds_max_fft: usize,
+    /// Sustained streaming efficiency: BabelStream copy bandwidth divided
+    /// by peak (§3.1 anchors every model on this number).
+    pub stream_efficiency: f64,
+    /// Fixed kernel launch + wave ramp overhead, µs — only the *measured*
+    /// GPU simulator uses this (it is what makes the analytical model
+    /// optimistic for small sizes in paper Fig 8).
+    pub kernel_launch_us: f64,
+    /// Resident threads needed to saturate bandwidth; below this the
+    /// measured simulator derates achieved bandwidth (small-batch regime of
+    /// paper Fig 4).
+    pub saturation_threads: f64,
+}
+
+impl GpuConfig {
+    /// MI210-class baseline.
+    pub fn mi210() -> Self {
+        Self {
+            compute_units: 104,
+            fp32_tflops: 22.6,
+            lds_max_fft: 1 << 12,
+            stream_efficiency: 0.85,
+            kernel_launch_us: 6.0,
+            saturation_threads: 104.0 * 2048.0,
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! HBM memory geometry and DRAM timing — paper Table 1 (JESD238A HBM3).
+
+/// HBM stack geometry + DRAM timing parameters (paper Table 1).
+///
+/// The baseline models a forward-looking HBM3 stack: 512 banks per 4-high
+/// stack, 1 KiB row buffer, 4.8 Gb/s/pin, 614.4 GB/s of GPU-visible
+/// bandwidth per stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmConfig {
+    /// Number of HBM stacks attached to the GPU (MI210: 4).
+    pub stacks: usize,
+    /// Banks per stack (Table 1: 512 for a 4-high stack).
+    pub banks_per_stack: usize,
+    /// Banks sharing one pseudo-channel data bus (HBM3: 16).
+    pub banks_per_pc: usize,
+    /// Row buffer (page) size in bytes (Table 1: 1024 B).
+    pub row_buffer_bytes: usize,
+    /// Rows per bank. Sets bank capacity; 2^14 rows × 1 KiB = 16 MiB/bank,
+    /// i.e. 8 GiB per 512-bank stack — consistent with a 16 GB 4-high stack
+    /// of 16 Gb dies at 2 ranks. Only capacity checks depend on this.
+    pub rows_per_bank: usize,
+    /// DRAM word transferred per column access, bytes (256-bit bank I/O).
+    pub word_bytes: usize,
+    /// Precharge time, ns (Table 1: tRP = 15 ns).
+    pub t_rp_ns: f64,
+    /// Row-access strobe, ns (Table 1: tRAS = 33 ns).
+    pub t_ras_ns: f64,
+    /// Column-to-column delay (long), ns (Table 1: tCCDL = 3.33 ns).
+    pub t_ccdl_ns: f64,
+    /// Per-pin signalling rate, Gb/s (Table 1: 4.8).
+    pub pin_gbps: f64,
+    /// GPU-visible peak bandwidth per stack, GB/s (Table 1: 614.4).
+    pub gpu_bw_per_stack_gbs: f64,
+}
+
+impl HbmConfig {
+    /// Paper Table 1 baseline.
+    pub fn hbm3() -> Self {
+        Self {
+            stacks: 4,
+            banks_per_stack: 512,
+            banks_per_pc: 16,
+            row_buffer_bytes: 1024,
+            rows_per_bank: 1 << 14,
+            word_bytes: 32,
+            t_rp_ns: 15.0,
+            t_ras_ns: 33.0,
+            t_ccdl_ns: 3.33,
+            pin_gbps: 4.8,
+            gpu_bw_per_stack_gbs: 614.4,
+        }
+    }
+
+    /// Pseudo channels per stack.
+    pub fn pcs_per_stack(&self) -> usize {
+        self.banks_per_stack / self.banks_per_pc
+    }
+
+    /// Total pseudo channels across all stacks.
+    pub fn total_pcs(&self) -> usize {
+        self.pcs_per_stack() * self.stacks
+    }
+
+    /// Total banks across all stacks.
+    pub fn total_banks(&self) -> usize {
+        self.banks_per_stack * self.stacks
+    }
+
+    /// f32 elements per DRAM word (256-bit word → 8 lanes).
+    pub fn lanes(&self) -> usize {
+        self.word_bytes / 4
+    }
+
+    /// DRAM words per row buffer (1 KiB / 32 B = 32).
+    pub fn words_per_row(&self) -> usize {
+        self.row_buffer_bytes / self.word_bytes
+    }
+
+    /// Aggregate GPU-visible peak bandwidth, bytes/ns (== GB/s × 1e-9 ×1e9).
+    pub fn gpu_peak_bw_bytes_per_ns(&self) -> f64 {
+        self.gpu_bw_per_stack_gbs * self.stacks as f64
+    }
+
+    /// Bytes the GPU moves per pseudo-channel per tCCDL slot, implied by the
+    /// per-stack bandwidth spec. (≈64 B for the Table 1 baseline: bank
+    /// interleaving keeps the 64-bit PC bus busy every slot.)
+    pub fn gpu_bytes_per_pc_slot(&self) -> f64 {
+        self.gpu_bw_per_stack_gbs * self.t_ccdl_ns / self.pcs_per_stack() as f64
+    }
+
+    /// Full row-cycle penalty charged when a command needs a row switch:
+    /// precharge + activate window (tRP + tRAS). A deliberate strawman
+    /// simplification — the paper's "Rest" bucket.
+    pub fn row_switch_ns(&self) -> f64 {
+        self.t_rp_ns + self.t_ras_ns
+    }
+
+    /// Bank capacity in f32 elements.
+    pub fn bank_elems(&self) -> usize {
+        self.rows_per_bank * self.row_buffer_bytes / 4
+    }
+
+    /// Sensitivity variant: double the row buffer (paper Fig 19 "RB×2").
+    pub fn with_row_buffer(mut self, bytes: usize) -> Self {
+        self.row_buffer_bytes = bytes;
+        self
+    }
+
+    /// Sensitivity variant: 1024 banks/stack (paper Fig 5 "large #banks").
+    pub fn with_banks_per_stack(mut self, banks: usize) -> Self {
+        self.banks_per_stack = banks;
+        self
+    }
+}

@@ -1,0 +1,13 @@
+//! System configuration: the strawman HBM-PIM architecture (paper Table 1),
+//! the MI210-class GPU baseline, and the sensitivity-study variants of
+//! paper §6.6 / Figure 19.
+
+mod gpu;
+mod hbm;
+mod pim;
+mod system;
+
+pub use gpu::GpuConfig;
+pub use hbm::HbmConfig;
+pub use pim::PimConfig;
+pub use system::SystemConfig;

@@ -1,0 +1,67 @@
+//! PIM compute-unit provisioning — paper Table 1 PIM parameters plus the
+//! orchestration assumptions of §2.3/§4.1.
+
+/// Configuration of the in-memory compute units.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PimConfig {
+    /// PIM units per stack (Table 1: 256 → one unit per two banks).
+    pub units_per_stack: usize,
+    /// Register file entries per ALU (Table 1: 16 × 256-bit).
+    pub regs_per_unit: usize,
+    /// PIM command issue-rate divisor relative to plain reads/writes
+    /// (§2.3: PIM ops issue at *half* the column rate to accommodate
+    /// multi-bank broadcast ⇒ 2.0).
+    pub issue_rate_divisor: f64,
+    /// Whether the paper's §6.2 ALU augmentation (single-command
+    /// multiply-add **and** subtract, dual register-file write port) is
+    /// available. `hw-opt` / `sw-hw-opt` routines require it.
+    pub hw_maddsub: bool,
+    /// Both banks of a unit execute the mirrored re/im micro-op of one
+    /// broadcast command concurrently (even bank = real component, odd =
+    /// imaginary — paper Fig 6 ❶❻). On: a command slot retires the paired
+    /// ops; off: each op serializes. Commercial designs pair banks exactly
+    /// to enable this.
+    pub bank_pair_fused: bool,
+    /// pim-MOV transfers (row buffer ↔ PIM registers) issue like regular
+    /// column accesses at full tCCDL rate; only multi-bank *compute*
+    /// broadcasts pay the §2.3 half-rate window. Disable to charge every
+    /// PIM command the compute-slot rate (ablation: `bench ablations`).
+    pub mov_full_rate: bool,
+    /// Bytes of command/constant traffic the GPU sends per issued PIM
+    /// command (opcode + address + 32-bit immediate) — counted against
+    /// data-movement savings per the paper's footnote 3.
+    pub cmd_bytes: f64,
+}
+
+impl PimConfig {
+    /// Paper Table 1 baseline.
+    pub fn baseline() -> Self {
+        Self {
+            units_per_stack: 256,
+            regs_per_unit: 16,
+            issue_rate_divisor: 2.0,
+            hw_maddsub: false,
+            bank_pair_fused: true,
+            mov_full_rate: true,
+            cmd_bytes: 8.0,
+        }
+    }
+
+    /// Fig 19 sensitivity: double the register file (16 → 32).
+    pub fn with_regs(mut self, regs: usize) -> Self {
+        self.regs_per_unit = regs;
+        self
+    }
+
+    /// Fig 19 sensitivity: one PIM unit per bank.
+    pub fn with_units_per_stack(mut self, units: usize) -> Self {
+        self.units_per_stack = units;
+        self
+    }
+
+    /// Enable the §6.2 hardware augmentation.
+    pub fn with_hw_maddsub(mut self, on: bool) -> Self {
+        self.hw_maddsub = on;
+        self
+    }
+}

@@ -1,0 +1,174 @@
+//! Bundled system presets, including every sensitivity variant the paper
+//! evaluates (§6.6, Fig 19 / Fig 5).
+
+use super::{GpuConfig, HbmConfig, PimConfig};
+
+/// Full system description consumed by every model and simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub hbm: HbmConfig,
+    pub pim: PimConfig,
+    pub gpu: GpuConfig,
+    /// Human-readable preset label (shows up in reports/figures).
+    pub name: String,
+}
+
+impl SystemConfig {
+    /// Paper Table 1 baseline: HBM3 ×4 stacks, 256 PIM units/stack, MI210.
+    pub fn baseline() -> Self {
+        Self {
+            hbm: HbmConfig::hbm3(),
+            pim: PimConfig::baseline(),
+            gpu: GpuConfig::mi210(),
+            name: "baseline".into(),
+        }
+    }
+
+    /// Fig 19: register file doubled to 32 entries.
+    pub fn rf32() -> Self {
+        let mut s = Self::baseline();
+        s.pim = s.pim.with_regs(32);
+        s.name = "rf32".into();
+        s
+    }
+
+    /// Fig 19: row buffer doubled to 2 KiB.
+    pub fn rb2k() -> Self {
+        let mut s = Self::baseline();
+        s.hbm = s.hbm.with_row_buffer(2048);
+        s.name = "rb2k".into();
+        s
+    }
+
+    /// Fig 19: one PIM unit per bank (512 units/stack).
+    pub fn pim_per_bank() -> Self {
+        let mut s = Self::baseline();
+        s.pim = s.pim.with_units_per_stack(512);
+        s.name = "pim-per-bank".into();
+        s
+    }
+
+    /// Fig 5: hypothetical 1024 banks/stack (with matching PIM units).
+    pub fn banks1024() -> Self {
+        let mut s = Self::baseline();
+        s.hbm = s.hbm.with_banks_per_stack(1024);
+        s.pim = s.pim.with_units_per_stack(512);
+        s.name = "banks1024".into();
+        s
+    }
+
+    /// Enable the §6.2 hardware MADD+SUB augmentation.
+    pub fn with_hw_opt(mut self) -> Self {
+        self.pim = self.pim.with_hw_maddsub(true);
+        self.name = format!("{}+hw", self.name);
+        self
+    }
+
+    // ---- derived quantities shared by models ----
+
+    /// Banks served by one PIM unit (baseline: 2).
+    pub fn banks_per_unit(&self) -> usize {
+        self.hbm.banks_per_stack / self.pim.units_per_stack
+    }
+
+    /// PIM units per pseudo channel.
+    pub fn units_per_pc(&self) -> usize {
+        self.hbm.banks_per_pc / self.banks_per_unit()
+    }
+
+    /// Command-slot duration for one broadcast PIM command on a pseudo
+    /// channel, ns (issue-rate divisor × tCCDL).
+    pub fn pim_slot_ns(&self) -> f64 {
+        self.hbm.t_ccdl_ns * self.pim.issue_rate_divisor
+    }
+
+    /// FFTs resident/concurrent across the whole memory system under the
+    /// strided mapping: every unit computes `lanes` independent FFTs.
+    pub fn concurrent_ffts(&self) -> usize {
+        self.hbm.stacks * self.hbm.pcs_per_stack() * self.units_per_pc() * self.hbm.lanes()
+    }
+
+    /// Sustained GPU streaming bandwidth, bytes/ns (BabelStream anchor).
+    pub fn gpu_stream_bw(&self) -> f64 {
+        self.gpu.stream_efficiency * self.hbm.gpu_peak_bw_bytes_per_ns()
+    }
+
+    /// Largest PIM-FFT size under the strided mapping (§4.2.2: 2^18,
+    /// driven by SIMD width and row-buffer size). Scales with the row
+    /// buffer for the Fig 19 sensitivity variant.
+    pub fn max_strided_fft(&self) -> usize {
+        (1 << 18) * (self.hbm.row_buffer_bytes / 1024).max(1)
+    }
+
+    /// Largest FFT fitting a bank pair (§4.2.1: 2^21 single-precision).
+    pub fn max_bankpair_fft(&self) -> usize {
+        // re in even bank, im in odd bank: N f32 elements per bank.
+        self.hbm.bank_elems().min(1 << 21)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_table1() {
+        let s = SystemConfig::baseline();
+        assert_eq!(s.hbm.banks_per_stack, 512);
+        assert_eq!(s.hbm.row_buffer_bytes, 1024);
+        assert_eq!(s.pim.units_per_stack, 256);
+        assert_eq!(s.pim.regs_per_unit, 16);
+        assert!((s.hbm.t_rp_ns - 15.0).abs() < 1e-9);
+        assert!((s.hbm.t_ccdl_ns - 3.33).abs() < 1e-9);
+        assert!((s.hbm.t_ras_ns - 33.0).abs() < 1e-9);
+        assert!((s.hbm.gpu_bw_per_stack_gbs - 614.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derived_geometry() {
+        let s = SystemConfig::baseline();
+        assert_eq!(s.hbm.pcs_per_stack(), 32);
+        assert_eq!(s.banks_per_unit(), 2);
+        assert_eq!(s.units_per_pc(), 8);
+        assert_eq!(s.hbm.lanes(), 8);
+        assert_eq!(s.hbm.words_per_row(), 32);
+        assert_eq!(s.concurrent_ffts(), 8192);
+        // ~64 B per PC per slot implied by 614.4 GB/s over 32 PCs.
+        let b = s.hbm.gpu_bytes_per_pc_slot();
+        assert!((b - 63.94).abs() < 0.1, "{b}");
+    }
+
+    #[test]
+    fn pim_slot_is_half_rate() {
+        let s = SystemConfig::baseline();
+        assert!((s.pim_slot_ns() - 6.66).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sensitivity_variants() {
+        assert_eq!(SystemConfig::rf32().pim.regs_per_unit, 32);
+        assert_eq!(SystemConfig::rb2k().hbm.words_per_row(), 64);
+        assert_eq!(SystemConfig::pim_per_bank().banks_per_unit(), 1);
+        assert_eq!(SystemConfig::pim_per_bank().units_per_pc(), 16);
+        assert_eq!(SystemConfig::banks1024().hbm.pcs_per_stack(), 64);
+        assert!(SystemConfig::baseline().with_hw_opt().pim.hw_maddsub);
+    }
+
+    #[test]
+    fn strided_limit_scales_with_row_buffer() {
+        assert_eq!(SystemConfig::baseline().max_strided_fft(), 1 << 18);
+        assert_eq!(SystemConfig::rb2k().max_strided_fft(), 1 << 19);
+    }
+
+    #[test]
+    fn pim_peak_is_roughly_gpu_over_seven() {
+        // Paper footnote 2: peak f32 PIM throughput ≈ 7× below the GPU.
+        let s = SystemConfig::baseline();
+        let units = s.pim.units_per_stack * s.hbm.stacks;
+        // One fused MADD per slot per unit = lanes × banks_per_unit MACs.
+        let macs_per_slot = (s.hbm.lanes() * s.banks_per_unit()) as f64;
+        let tflops = units as f64 * macs_per_slot * 2.0 / s.pim_slot_ns() / 1000.0;
+        let ratio = s.gpu.fp32_tflops / tflops;
+        assert!(ratio > 3.0 && ratio < 9.0, "PIM/GPU ratio {ratio}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Dynamic batcher: groups queued requests by FFT size so one artifact
+//! execution serves several requests (the artifacts have fixed PJRT shapes;
+//! partial batches are padded — the serving analog of §4.2.3's "batching
+//! avoids memory wastage").
+
+use std::collections::BTreeMap;
+
+use super::FftRequest;
+
+/// Requests of one FFT size, ready for a shared execution.
+#[derive(Debug)]
+pub struct Batch {
+    pub n: usize,
+    pub requests: Vec<FftRequest>,
+}
+
+impl Batch {
+    /// Total signals across the batch.
+    pub fn total_signals(&self) -> usize {
+        self.requests.iter().map(|r| r.batch()).sum()
+    }
+}
+
+/// Size-keyed request accumulator.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    queues: BTreeMap<usize, Vec<FftRequest>>,
+}
+
+impl Batcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, req: FftRequest) {
+        self.queues.entry(req.n).or_default().push(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Drain everything into size-homogeneous batches (ascending n).
+    pub fn flush(&mut self) -> Vec<Batch> {
+        std::mem::take(&mut self.queues)
+            .into_iter()
+            .map(|(n, requests)| Batch { n, requests })
+            .collect()
+    }
+
+    /// Drain only sizes with at least `min` queued signals (windowed
+    /// batching policy; the server flushes the rest on its deadline tick).
+    pub fn flush_ready(&mut self, min: usize) -> Vec<Batch> {
+        let ready: Vec<usize> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| q.iter().map(|r| r.batch()).sum::<usize>() >= min)
+            .map(|(n, _)| *n)
+            .collect();
+        ready
+            .into_iter()
+            .map(|n| Batch { n, requests: self.queues.remove(&n).unwrap() })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, n: usize, b: usize) -> FftRequest {
+        FftRequest::random(id, n, b, id)
+    }
+
+    #[test]
+    fn groups_by_size() {
+        let mut b = Batcher::new();
+        b.push(req(1, 64, 2));
+        b.push(req(2, 32, 1));
+        b.push(req(3, 64, 1));
+        assert_eq!(b.pending(), 3);
+        let batches = b.flush();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].n, 32);
+        assert_eq!(batches[1].n, 64);
+        assert_eq!(batches[1].total_signals(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flush_ready_respects_threshold() {
+        let mut b = Batcher::new();
+        b.push(req(1, 64, 2));
+        b.push(req(2, 32, 8));
+        let ready = b.flush_ready(4);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].n, 32);
+        assert_eq!(b.pending(), 1); // the 64-point request still queued
+    }
+}

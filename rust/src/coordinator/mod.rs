@@ -1,0 +1,28 @@
+//! **L3 — the coordinator**: Pimacolaba as a service.
+//!
+//! The deployment shape mirrors the FFT-serving scenario the paper's
+//! collaborative decomposition targets: clients submit batched FFT requests;
+//! the router consults the §5.1 planner; the batcher packs requests into the
+//! fixed shapes of the AOT artifacts; the scheduler executes the GPU
+//! component on the PJRT runtime and the PIM-FFT-Tile on the functional PIM
+//! simulator; metrics report the modeled speedup and data-movement savings
+//! of every request against the GPU-only baseline.
+//!
+//! Python never appears on this path — the jax/Pallas model was lowered to
+//! HLO at build time (`make artifacts`).
+
+mod batcher;
+mod pim_exec;
+mod report;
+mod request;
+mod scheduler;
+mod server;
+mod trace;
+
+pub use batcher::{Batch, Batcher};
+pub use pim_exec::PimTileExecutor;
+pub use report::ServiceReport;
+pub use request::{FftRequest, FftResponse, RequestMetrics};
+pub use scheduler::Scheduler;
+pub use server::Server;
+pub use trace::{synthetic_trace, Trace, TraceEntry};

@@ -1,0 +1,124 @@
+//! Aggregated service metrics: the numbers `examples/serve_trace` and the
+//! e2e bench report (modeled speedup + data-movement savings over a whole
+//! trace, host latency percentiles).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::DataMovement;
+use crate::planner::PlanKind;
+
+use super::FftResponse;
+
+/// Rollup over a set of responses.
+#[derive(Debug, Default, Clone)]
+pub struct ServiceReport {
+    pub requests: usize,
+    pub signals: usize,
+    pub collaborative: usize,
+    pub modeled_gpu_only_ns: f64,
+    pub modeled_plan_ns: f64,
+    pub movement_base: DataMovement,
+    pub movement_plan: DataMovement,
+    pub host_wall_ns: Vec<u64>,
+    pub max_error: f32,
+    /// Per-size request counts.
+    pub by_size: BTreeMap<usize, usize>,
+}
+
+impl ServiceReport {
+    pub fn add(&mut self, r: &FftResponse) {
+        self.requests += 1;
+        self.signals += r.spectra.len();
+        if matches!(r.metrics.plan.kind, PlanKind::Collaborative { .. }) {
+            self.collaborative += 1;
+        }
+        self.modeled_gpu_only_ns += r.metrics.modeled_gpu_only_ns;
+        self.modeled_plan_ns += r.metrics.modeled_plan_ns;
+        self.movement_base.add_assign(&r.metrics.movement_base);
+        self.movement_plan.add_assign(&r.metrics.movement_plan);
+        self.host_wall_ns.push(r.metrics.host_wall_ns);
+        if let Some(e) = r.metrics.max_error {
+            self.max_error = self.max_error.max(e);
+        }
+        *self.by_size.entry(r.metrics.plan.n).or_default() += 1;
+    }
+
+    /// Trace-wide modeled speedup (the headline metric).
+    pub fn modeled_speedup(&self) -> f64 {
+        self.modeled_gpu_only_ns / self.modeled_plan_ns
+    }
+
+    /// Trace-wide data-movement savings (paper Fig 18 currency).
+    pub fn movement_savings(&self) -> f64 {
+        self.movement_plan.savings_vs(&self.movement_base)
+    }
+
+    pub fn host_latency_percentile_ns(&self, p: f64) -> u64 {
+        if self.host_wall_ns.is_empty() {
+            return 0;
+        }
+        let mut s = self.host_wall_ns.clone();
+        s.sort_unstable();
+        let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+        s[rank.clamp(1, s.len()) - 1]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} signals={} collaborative={} modeled-speedup={:.3}x \
+             movement-savings={:.3}x host-p50={}ns host-p99={}ns max-err={:.2e}",
+            self.requests,
+            self.signals,
+            self.collaborative,
+            self.modeled_speedup(),
+            self.movement_savings(),
+            self.host_latency_percentile_ns(50.0),
+            self.host_latency_percentile_ns(99.0),
+            self.max_error,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::coordinator::{Batch, FftRequest, Scheduler};
+
+    fn sample_responses() -> Vec<FftResponse> {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut s = Scheduler::new(&sys, None);
+        s.verify = true;
+        let mut out = Vec::new();
+        for (id, n) in [(1u64, 64usize), (2, 1 << 13)] {
+            let b = Batch { n, requests: vec![FftRequest::random(id, n, 2, id)] };
+            out.extend(s.execute(b).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn rollup_counts_and_ratios() {
+        let mut r = ServiceReport::default();
+        for resp in sample_responses() {
+            r.add(&resp);
+        }
+        assert_eq!(r.requests, 2);
+        assert_eq!(r.signals, 4);
+        assert_eq!(r.collaborative, 1);
+        assert_eq!(r.by_size.len(), 2);
+        assert!(r.modeled_speedup() > 0.0);
+        assert!(r.movement_savings() >= 1.0);
+        assert!(r.max_error < 0.5 && r.max_error > 0.0);
+        assert!(r.summary().contains("requests=2"));
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let mut r = ServiceReport::default();
+        r.host_wall_ns = vec![5, 1, 9, 3, 7];
+        assert!(r.host_latency_percentile_ns(50.0) <= r.host_latency_percentile_ns(99.0));
+        assert_eq!(r.host_latency_percentile_ns(99.0), 9);
+        assert_eq!(ServiceReport::default().host_latency_percentile_ns(50.0), 0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Request/response types of the FFT service.
+
+use crate::fft::SoaVec;
+use crate::metrics::DataMovement;
+use crate::planner::CollabPlan;
+
+/// One client request: `batch` signals of `n` complex points each.
+#[derive(Debug, Clone)]
+pub struct FftRequest {
+    pub id: u64,
+    /// FFT size (power of two).
+    pub n: usize,
+    /// The signals (each of length `n`).
+    pub signals: Vec<SoaVec>,
+}
+
+impl FftRequest {
+    pub fn new(id: u64, n: usize, signals: Vec<SoaVec>) -> Self {
+        debug_assert!(signals.iter().all(|s| s.len() == n));
+        Self { id, n, signals }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.signals.len()
+    }
+
+    /// Deterministic random request (tests, traces).
+    pub fn random(id: u64, n: usize, batch: usize, seed: u64) -> Self {
+        let signals = (0..batch).map(|i| SoaVec::random(n, seed ^ (i as u64) << 17)).collect();
+        Self { id, n, signals }
+    }
+}
+
+/// Modeled + measured outcome of one request.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    /// The plan the router chose.
+    pub plan: CollabPlan,
+    /// Modeled GPU-only time (the baseline of every paper figure), ns.
+    pub modeled_gpu_only_ns: f64,
+    /// Modeled time of the executed plan, ns.
+    pub modeled_plan_ns: f64,
+    /// Modeled data movement of baseline/plan.
+    pub movement_base: DataMovement,
+    pub movement_plan: DataMovement,
+    /// Wall-clock spent by this host actually serving the request, ns.
+    pub host_wall_ns: u64,
+    /// Max abs error vs the host reference FFT (populated when the
+    /// scheduler runs with verification on).
+    pub max_error: Option<f32>,
+}
+
+impl RequestMetrics {
+    pub fn modeled_speedup(&self) -> f64 {
+        self.modeled_gpu_only_ns / self.modeled_plan_ns
+    }
+
+    pub fn movement_savings(&self) -> f64 {
+        self.movement_plan.savings_vs(&self.movement_base)
+    }
+}
+
+/// The response: spectra in natural frequency order + metrics.
+#[derive(Debug, Clone)]
+pub struct FftResponse {
+    pub id: u64,
+    pub spectra: Vec<SoaVec>,
+    pub metrics: RequestMetrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_request_shapes() {
+        let r = FftRequest::random(7, 64, 3, 42);
+        assert_eq!(r.batch(), 3);
+        assert_eq!(r.n, 64);
+        assert!(r.signals.iter().all(|s| s.len() == 64));
+        // Distinct signals per batch index.
+        assert!(r.signals[0].max_abs_diff(&r.signals[1]) > 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! The service loop: a worker thread owns the scheduler (PJRT executables
+//! are not shared across threads) and drains an mpsc request queue with
+//! windowed batching; clients get responses over per-request channels.
+//!
+//! std-threads + channels rather than an async runtime: the environment is
+//! offline (no tokio) and the workload is a simulation — a dedicated
+//! scheduler thread with bounded queues gives the same serving semantics
+//! (admission, batching window, backpressure) without an executor.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::{Batcher, FftRequest, FftResponse, Scheduler};
+
+enum Msg {
+    Request(FftRequest, Sender<Result<FftResponse>>),
+    Shutdown,
+}
+
+/// Handle to the running service.
+pub struct Server {
+    tx: SyncSender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the scheduler thread. `window` requests (or `max_wait`) per
+    /// batching round; `queue_depth` bounds admission (backpressure).
+    ///
+    /// Takes a *factory* because PJRT handles are not `Send`: the runtime is
+    /// created on the worker thread that owns it for its whole life.
+    pub fn spawn<F>(make_scheduler: F, window: usize, max_wait: Duration, queue_depth: usize) -> Self
+    where
+        F: FnOnce() -> Scheduler + Send + 'static,
+    {
+        let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = mpsc::sync_channel(queue_depth);
+        let worker = std::thread::spawn(move || {
+            let mut scheduler = make_scheduler();
+            let mut batcher = Batcher::new();
+            let mut waiters: Vec<(u64, Sender<Result<FftResponse>>)> = Vec::new();
+            let mut open = true;
+            while open {
+                // Collect up to `window` requests or until the deadline.
+                let mut got = 0;
+                let deadline = std::time::Instant::now() + max_wait;
+                while got < window {
+                    let timeout = deadline.saturating_duration_since(std::time::Instant::now());
+                    match rx.recv_timeout(timeout) {
+                        Ok(Msg::Request(req, reply)) => {
+                            waiters.push((req.id, reply));
+                            batcher.push(req);
+                            got += 1;
+                        }
+                        Ok(Msg::Shutdown) => {
+                            open = false;
+                            break;
+                        }
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                for batch in batcher.flush() {
+                    match scheduler.execute(batch) {
+                        Ok(responses) => {
+                            for resp in responses {
+                                if let Some(pos) = waiters.iter().position(|(id, _)| *id == resp.id)
+                                {
+                                    let (_, reply) = waiters.swap_remove(pos);
+                                    let _ = reply.send(Ok(resp));
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // Fail everything still waiting (batch is gone).
+                            for (_, reply) in waiters.drain(..) {
+                                let _ = reply.send(Err(anyhow!("batch failed: {e:#}")));
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        Self { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request; blocks if the admission queue is full
+    /// (backpressure). Returns the response receiver.
+    pub fn submit(&self, req: FftRequest) -> Result<Receiver<Result<FftResponse>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(req, tx))
+            .map_err(|_| anyhow!("service is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, req: FftRequest) -> Result<FftResponse> {
+        self.submit(req)?.recv().map_err(|_| anyhow!("service dropped the request"))?
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::fft::{fft_soa, SoaVec};
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let sys = SystemConfig::baseline();
+        let server = Server::spawn(
+            move || Scheduler::new(&sys, None),
+            8,
+            Duration::from_millis(5),
+            64,
+        );
+        let x = SoaVec::random(64, 5);
+        let want = fft_soa(&x);
+        let resp = server.call(FftRequest::new(1, 64, vec![x])).unwrap();
+        assert_eq!(resp.id, 1);
+        assert!(resp.spectra[0].max_abs_diff(&want) < 1e-3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_answers() {
+        let sys = SystemConfig::baseline();
+        let server = std::sync::Arc::new(Server::spawn(
+            move || Scheduler::new(&sys, None),
+            16,
+            Duration::from_millis(2),
+            64,
+        ));
+        let mut handles = Vec::new();
+        for id in 0..12u64 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                let n = if id % 2 == 0 { 32 } else { 64 };
+                let x = SoaVec::random(n, id);
+                let want = fft_soa(&x);
+                let resp = s.call(FftRequest::new(id, n, vec![x])).unwrap();
+                assert_eq!(resp.id, id);
+                assert!(resp.spectra[0].max_abs_diff(&want) < 1e-3, "id {id}");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Workload traces: the request mixes the service is exercised and
+//! benchmarked with. Since the paper's evaluation sweeps FFT size × batch,
+//! the synthetic generator draws from exactly that grid; traces round-trip
+//! through JSON so runs are reproducible artifacts.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::{Json, Rng};
+
+/// One trace record: a request arriving `at_us` after trace start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub at_us: f64,
+    pub n: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+/// A reproducible request trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            (
+                "entries",
+                Json::arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("at_us", Json::num(e.at_us)),
+                                ("n", Json::num(e.n as f64)),
+                                ("batch", Json::num(e.batch as f64)),
+                                // u64 doesn't survive f64 JSON numbers — hex string.
+                                ("seed", Json::str(format!("{:016x}", e.seed))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut entries = Vec::new();
+        for e in j.field("entries")?.as_arr()? {
+            entries.push(TraceEntry {
+                at_us: e.field("at_us")?.as_f64()?,
+                n: e.field("n")?.as_usize()?,
+                batch: e.field("batch")?.as_usize()?,
+                seed: u64::from_str_radix(e.field("seed")?.as_str()?, 16)?,
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Synthetic trace: `requests` arrivals (Poisson, `mean_gap_us` apart),
+/// sizes drawn from `sizes`, batch 1–4 signals.
+pub fn synthetic_trace(requests: usize, sizes: &[usize], mean_gap_us: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut entries = Vec::with_capacity(requests);
+    for i in 0..requests {
+        t += rng.exp(mean_gap_us);
+        entries.push(TraceEntry {
+            at_us: t,
+            n: *rng.choose(sizes),
+            batch: rng.range(1, 5),
+            seed: seed ^ (i as u64).wrapping_mul(0x2545F4914F6CDD1D),
+        });
+    }
+    Trace { entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_json() {
+        let t = synthetic_trace(20, &[32, 8192], 10.0, 3);
+        let j = t.to_json();
+        assert_eq!(Trace::from_json(&j).unwrap(), t);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(synthetic_trace(10, &[64], 5.0, 1), synthetic_trace(10, &[64], 5.0, 1));
+        assert_ne!(synthetic_trace(10, &[64], 5.0, 1), synthetic_trace(10, &[64], 5.0, 2));
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let t = synthetic_trace(50, &[32], 2.0, 9);
+        for w in t.entries.windows(2) {
+            assert!(w[1].at_us >= w[0].at_us);
+        }
+    }
+}

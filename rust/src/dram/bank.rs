@@ -1,0 +1,89 @@
+//! Functional bank storage at word granularity.
+
+use super::{Half, Word, LANES};
+
+/// One DRAM bank: a flat array of 256-bit words plus its row-buffer state.
+///
+/// Storage is allocated lazily up to the word range a routine touches; the
+/// configured `rows_per_bank` capacity is enforced by the mapping layer, not
+/// here.
+#[derive(Debug, Clone, Default)]
+pub struct Bank {
+    words: Vec<Word>,
+}
+
+impl Bank {
+    pub fn with_words(n_words: usize) -> Self {
+        Self { words: vec![[0.0; LANES]; n_words] }
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn word(&self, w: u32) -> &Word {
+        &self.words[w as usize]
+    }
+
+    pub fn word_mut(&mut self, w: u32) -> &mut Word {
+        &mut self.words[w as usize]
+    }
+
+    pub fn get(&self, w: u32, lane: usize) -> f32 {
+        self.words[w as usize][lane]
+    }
+
+    pub fn set(&mut self, w: u32, lane: usize, v: f32) {
+        self.words[w as usize][lane] = v;
+    }
+}
+
+/// The bank pair served by one PIM unit (even = re, odd = im).
+#[derive(Debug, Clone, Default)]
+pub struct BankPair {
+    pub even: Bank,
+    pub odd: Bank,
+}
+
+impl BankPair {
+    pub fn with_words(n_words: usize) -> Self {
+        Self { even: Bank::with_words(n_words), odd: Bank::with_words(n_words) }
+    }
+
+    pub fn bank(&self, half: Half) -> &Bank {
+        match half {
+            Half::Even => &self.even,
+            Half::Odd => &self.odd,
+        }
+    }
+
+    pub fn bank_mut(&mut self, half: Half) -> &mut Bank {
+        match half {
+            Half::Even => &mut self.even,
+            Half::Odd => &mut self.odd,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_get_set() {
+        let mut b = Bank::with_words(4);
+        b.set(2, 5, 1.25);
+        assert_eq!(b.get(2, 5), 1.25);
+        assert_eq!(b.get(2, 4), 0.0);
+        assert_eq!(b.n_words(), 4);
+    }
+
+    #[test]
+    fn pair_halves_are_independent() {
+        let mut p = BankPair::with_words(2);
+        p.bank_mut(Half::Even).set(0, 0, 1.0);
+        p.bank_mut(Half::Odd).set(0, 0, 2.0);
+        assert_eq!(p.bank(Half::Even).get(0, 0), 1.0);
+        assert_eq!(p.bank(Half::Odd).get(0, 0), 2.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! DRAM substrate: bank storage, row-buffer state, and command-level timing
+//! for the strawman HBM-PIM architecture (paper Fig 3, Table 1).
+//!
+//! The unit of storage is the 256-bit DRAM *word* — 8 f32 lanes, matching
+//! the PIM ALU width. A PIM unit is shared by a **bank pair**: the even bank
+//! holds real components, the odd bank imaginary components (paper Fig 6 ❶❻),
+//! so one broadcast command can engage mirrored re/im micro-ops on both banks.
+
+mod bank;
+mod timing;
+
+pub use bank::{Bank, BankPair};
+pub use timing::RowTimer;
+
+/// f32 lanes per DRAM word (256-bit bank I/O ÷ 32-bit operands, §2.3).
+pub const LANES: usize = 8;
+
+/// One SIMD word: 8 f32 lanes.
+pub type Word = [f32; LANES];
+
+/// Which bank of a PIM unit's pair an operand lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Half {
+    /// Even bank — real components.
+    Even,
+    /// Odd bank — imaginary components.
+    Odd,
+}
+
+impl Half {
+    pub fn index(self) -> usize {
+        match self {
+            Half::Even => 0,
+            Half::Odd => 1,
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Row-buffer state machine: charges the tRP+tRAS row-switch penalty the
+//! paper's "Rest" bucket is made of (§4.4.1: "we deduce the exact DRAM
+//! commands needed ... including row activations").
+
+use crate::config::HbmConfig;
+
+use super::Half;
+
+/// Open-row tracker for one bank pair.
+///
+/// The command streams broadcast to every unit in a pseudo channel are
+/// identical, so one tracker models the row behaviour of all banks in the
+/// broadcast domain.
+#[derive(Debug, Clone, Default)]
+pub struct RowTimer {
+    open: [Option<u32>; 2],
+    switches: u64,
+}
+
+impl RowTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an access to `row` in bank `half`; returns the ns penalty
+    /// (0 for a row-buffer hit, tRP+tRAS for a switch or cold activation).
+    #[inline]
+    pub fn access(&mut self, half: Half, row: u32, hbm: &HbmConfig) -> f64 {
+        let slot = &mut self.open[half.index()];
+        if *slot == Some(row) {
+            0.0
+        } else {
+            *slot = Some(row);
+            self.switches += 1;
+            hbm.row_switch_ns()
+        }
+    }
+
+    /// Total row activations performed.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Currently open row of a bank (None if never activated).
+    pub fn open_row(&self, half: Half) -> Option<u32> {
+        self.open[half.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_is_free_switch_costs() {
+        let hbm = HbmConfig::hbm3();
+        let mut t = RowTimer::new();
+        assert!(t.access(Half::Even, 0, &hbm) > 0.0); // cold activation
+        assert_eq!(t.access(Half::Even, 0, &hbm), 0.0); // hit
+        assert_eq!(t.access(Half::Even, 0, &hbm), 0.0);
+        let p = t.access(Half::Even, 1, &hbm); // switch
+        assert!((p - (15.0 + 33.0)).abs() < 1e-9);
+        assert_eq!(t.switches(), 2);
+    }
+
+    #[test]
+    fn halves_track_independently() {
+        let hbm = HbmConfig::hbm3();
+        let mut t = RowTimer::new();
+        t.access(Half::Even, 3, &hbm);
+        assert!(t.access(Half::Odd, 3, &hbm) > 0.0); // odd bank still cold
+        assert_eq!(t.open_row(Half::Even), Some(3));
+        assert_eq!(t.open_row(Half::Odd), Some(3));
+    }
+}

@@ -1,0 +1,46 @@
+//! Bit-reversal ordering (paper Fig 1: FFT inputs are sorted in bit-reversed
+//! order before the butterfly stages).
+
+/// Reverse the low `bits` bits of `x`.
+pub fn bit_reverse(x: usize, bits: u32) -> usize {
+    let mut y = 0;
+    for b in 0..bits {
+        y |= ((x >> b) & 1) << (bits - 1 - b);
+    }
+    y
+}
+
+/// The permutation sorting `n` points into bit-reversed order.
+///
+/// Panics if `n` is not a power of two.
+pub fn bit_reverse_permutation(n: usize) -> Vec<usize> {
+    assert!(super::is_pow2(n), "n must be a power of two, got {n}");
+    let bits = super::log2(n);
+    (0..n).map(|i| bit_reverse(i, bits)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_n8() {
+        assert_eq!(bit_reverse_permutation(8), vec![0, 4, 2, 6, 1, 5, 3, 7]);
+    }
+
+    #[test]
+    fn is_involution() {
+        for n in [1usize, 2, 4, 64, 1024] {
+            let p = bit_reverse_permutation(n);
+            for i in 0..n {
+                assert_eq!(p[p[i]], i);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        bit_reverse_permutation(12);
+    }
+}

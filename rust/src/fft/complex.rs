@@ -1,0 +1,121 @@
+//! Structure-of-arrays complex buffers.
+//!
+//! Real and imaginary components live in separate `f32` arrays throughout the
+//! stack — mirroring both the PIM mapping (re in even banks, im in odd banks,
+//! paper Fig 6) and the SoA layout of the L1 Pallas kernel.
+
+/// A batch-major SoA complex buffer: `re[i]`, `im[i]` hold element `i`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SoaVec {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl SoaVec {
+    /// Zero-filled buffer of `n` complex elements.
+    pub fn zeros(n: usize) -> Self {
+        Self { re: vec![0.0; n], im: vec![0.0; n] }
+    }
+
+    /// Build from component vectors (must be equal length).
+    pub fn new(re: Vec<f32>, im: Vec<f32>) -> Self {
+        assert_eq!(re.len(), im.len(), "re/im length mismatch");
+        Self { re, im }
+    }
+
+    /// Number of complex elements.
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Element accessor as an (re, im) pair.
+    pub fn get(&self, i: usize) -> (f32, f32) {
+        (self.re[i], self.im[i])
+    }
+
+    pub fn set(&mut self, i: usize, re: f32, im: f32) {
+        self.re[i] = re;
+        self.im[i] = im;
+    }
+
+    /// Deterministic pseudo-random test signal (xorshift; no rand dep here
+    /// so the fft module stays self-contained for doctests).
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // map to [-1, 1)
+            (state >> 11) as f32 / (1u64 << 53) as f32 * 2.0 - 1.0
+        };
+        let re = (0..n).map(|_| next()).collect();
+        let im = (0..n).map(|_| next()).collect();
+        Self { re, im }
+    }
+
+    /// Max absolute difference against another buffer (re and im pooled).
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.len(), other.len());
+        let mut m = 0.0f32;
+        for i in 0..self.len() {
+            m = m.max((self.re[i] - other.re[i]).abs());
+            m = m.max((self.im[i] - other.im[i]).abs());
+        }
+        m
+    }
+
+    /// L2 energy — used for Parseval checks.
+    pub fn energy(&self) -> f64 {
+        self.re
+            .iter()
+            .zip(&self.im)
+            .map(|(r, i)| (*r as f64) * (*r as f64) + (*i as f64) * (*i as f64))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_len() {
+        let v = SoaVec::zeros(5);
+        assert_eq!(v.len(), 5);
+        assert!(!v.is_empty());
+        assert_eq!(v.get(3), (0.0, 0.0));
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = SoaVec::zeros(4);
+        v.set(2, 1.5, -2.5);
+        assert_eq!(v.get(2), (1.5, -2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn new_rejects_mismatch() {
+        SoaVec::new(vec![0.0], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = SoaVec::random(128, 42);
+        let b = SoaVec::random(128, 42);
+        assert_eq!(a, b);
+        assert!(a.re.iter().chain(&a.im).all(|x| x.abs() <= 1.0));
+        assert!(a.max_abs_diff(&SoaVec::random(128, 43)) > 0.0);
+    }
+
+    #[test]
+    fn energy_sums_squares() {
+        let v = SoaVec::new(vec![3.0, 0.0], vec![4.0, 1.0]);
+        assert!((v.energy() - 26.0).abs() < 1e-12);
+    }
+}

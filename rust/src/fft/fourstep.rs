@@ -1,0 +1,149 @@
+//! Four-step (Cooley–Tukey mixed-radix) decomposition algebra — the math
+//! behind both GPU LDS decomposition (paper Fig 2) and the collaborative
+//! GPU+PIM split (paper Fig 11).
+//!
+//! For `N = M1·M2`, with input index `n = n2·M2 + n1` (`n1 < M2`, `n2 < M1`)
+//! and output index `k = k1·M1 + k2` (`k1 < M2`, `k2 < M1`):
+//!
+//! 1. view x as an (M1 × M2) matrix `A[n2][n1]`;
+//! 2. **GPU component**: column FFTs of size M1 (batch M2) → `Y[k2][n1]`;
+//! 3. **GPU component**: twiddle `Z[k2][n1] = Y[k2][n1] · W_N^(k2·n1)`;
+//! 4. **PIM component**: row FFTs of size M2 (batch M1) → `O[k2][k1]`;
+//! 5. gather `X[k1·M1 + k2] = O[k2][k1]`.
+//!
+//! The L2 jax `gpu_component` implements steps 1–3; the PIM simulator (or the
+//! host reference) implements step 4; [`FourStep::gather`] implements step 5.
+
+use super::{fft_inplace, is_pow2, SoaVec};
+
+/// A validated `N = M1·M2` factorization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FourStep {
+    pub n: usize,
+    /// GPU factor (column FFT size).
+    pub m1: usize,
+    /// PIM factor (row FFT size — the PIM-FFT-Tile).
+    pub m2: usize,
+}
+
+impl FourStep {
+    pub fn new(n: usize, m1: usize, m2: usize) -> Self {
+        assert!(is_pow2(n) && is_pow2(m1) && is_pow2(m2), "sizes must be powers of two");
+        assert_eq!(m1 * m2, n, "M1·M2 must equal N ({m1}·{m2} != {n})");
+        Self { n, m1, m2 }
+    }
+
+    /// Inter-factor twiddle `W_N^(k2·n1)` for matrix position (k2, n1).
+    pub fn twiddle(&self, k2: usize, n1: usize) -> (f32, f32) {
+        let ang = -2.0 * std::f64::consts::PI * ((k2 * n1) % self.n) as f64 / self.n as f64;
+        (ang.cos() as f32, ang.sin() as f32)
+    }
+
+    /// Steps 1–3 on the host (reference for the L2 `gpu_component` artifact):
+    /// input `x` of length N → Z of length N, row-major (k2, n1).
+    pub fn gpu_component_ref(&self, x: &SoaVec) -> SoaVec {
+        assert_eq!(x.len(), self.n);
+        let (m1, m2) = (self.m1, self.m2);
+        let mut z = SoaVec::zeros(self.n);
+        // Column n1: gather stride-M2 elements, FFT size M1, scatter back.
+        let mut cr = vec![0.0f32; m1];
+        let mut ci = vec![0.0f32; m1];
+        for n1 in 0..m2 {
+            for n2 in 0..m1 {
+                cr[n2] = x.re[n2 * m2 + n1];
+                ci[n2] = x.im[n2 * m2 + n1];
+            }
+            fft_inplace(&mut cr, &mut ci);
+            for k2 in 0..m1 {
+                let (tc, ts) = self.twiddle(k2, n1);
+                let idx = k2 * m2 + n1;
+                z.re[idx] = cr[k2] * tc - ci[k2] * ts;
+                z.im[idx] = cr[k2] * ts + ci[k2] * tc;
+            }
+        }
+        z
+    }
+
+    /// Step 4 on the host: row FFTs of Z (each row is one PIM-FFT-Tile input).
+    pub fn pim_component_ref(&self, z: &SoaVec) -> SoaVec {
+        assert_eq!(z.len(), self.n);
+        let mut o = z.clone();
+        for k2 in 0..self.m1 {
+            let row = k2 * self.m2..(k2 + 1) * self.m2;
+            fft_inplace(&mut o.re[row.clone()], &mut o.im[row]);
+        }
+        o
+    }
+
+    /// Step 5: final transpose gather `X[k1·M1 + k2] = O[k2][k1]`.
+    pub fn gather(&self, o: &SoaVec) -> SoaVec {
+        assert_eq!(o.len(), self.n);
+        let mut x = SoaVec::zeros(self.n);
+        for k2 in 0..self.m1 {
+            for k1 in 0..self.m2 {
+                let (r, i) = o.get(k2 * self.m2 + k1);
+                x.set(k1 * self.m1 + k2, r, i);
+            }
+        }
+        x
+    }
+
+    /// Full four-step FFT on the host (composition self-check).
+    pub fn fft_ref(&self, x: &SoaVec) -> SoaVec {
+        self.gather(&self.pim_component_ref(&self.gpu_component_ref(x)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::fft_soa;
+
+    #[test]
+    fn composition_equals_direct_fft() {
+        for (n, m1, m2) in [(16, 4, 4), (64, 8, 8), (256, 32, 8), (1024, 128, 8), (1024, 32, 32)] {
+            let fs = FourStep::new(n, m1, m2);
+            let x = SoaVec::random(n, 99 + n as u64);
+            let got = fs.fft_ref(&x);
+            let want = fft_soa(&x);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 2e-3 * (n as f32).sqrt(), "n={n} m1={m1} diff={d}");
+        }
+    }
+
+    #[test]
+    fn degenerate_factor_one() {
+        // M2 = N, M1 = 1: gpu component is identity-ish, PIM does everything.
+        let fs = FourStep::new(64, 1, 64);
+        let x = SoaVec::random(64, 5);
+        let got = fs.fft_ref(&x);
+        assert!(got.max_abs_diff(&fft_soa(&x)) < 1e-3);
+    }
+
+    #[test]
+    fn twiddle_row0_is_identity() {
+        let fs = FourStep::new(64, 8, 8);
+        for n1 in 0..8 {
+            let (c, s) = fs.twiddle(0, n1);
+            assert!((c - 1.0).abs() < 1e-7 && s.abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must equal N")]
+    fn rejects_bad_factorization() {
+        FourStep::new(64, 8, 4);
+    }
+
+    #[test]
+    fn gather_is_permutation() {
+        let fs = FourStep::new(32, 8, 4);
+        let x = SoaVec::random(32, 3);
+        let g = fs.gather(&x);
+        let mut sorted_a: Vec<u32> = x.re.iter().map(|f| f.to_bits()).collect();
+        let mut sorted_b: Vec<u32> = g.re.iter().map(|f| f.to_bits()).collect();
+        sorted_a.sort_unstable();
+        sorted_b.sort_unstable();
+        assert_eq!(sorted_a, sorted_b);
+    }
+}

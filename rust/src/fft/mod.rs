@@ -1,0 +1,33 @@
+//! Host-side FFT mathematics: SoA complex buffers, twiddle factors and their
+//! paper-§6.1 classification, bit reversal, a reference Cooley–Tukey FFT
+//! (the oracle every simulated routine is validated against), and the
+//! four-step decomposition algebra behind collaborative execution.
+
+mod bitrev;
+mod complex;
+pub mod fft2d;
+mod fourstep;
+mod plan;
+pub mod real;
+mod reference;
+mod twiddle;
+
+pub use bitrev::{bit_reverse, bit_reverse_permutation};
+pub use complex::SoaVec;
+pub use fourstep::FourStep;
+pub use plan::{Butterfly, StagePlan};
+pub use reference::{dft_naive, fft_inplace, fft_soa};
+pub use fft2d::{fft2d_ref, fft2d_via_scheduler, Image2d};
+pub use real::{pack_real, rfft, unpack_real_spectrum};
+pub use twiddle::{twiddle, TwiddleClass};
+
+/// True iff `n` is a power of two (and nonzero).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// log2 of a power of two.
+pub fn log2(n: usize) -> u32 {
+    debug_assert!(is_pow2(n));
+    n.trailing_zeros()
+}

@@ -1,0 +1,146 @@
+//! The butterfly schedule of one radix-2 DIT FFT — the shared ground truth
+//! that both the reference FFT and the PIM routine generators walk.
+
+use super::{is_pow2, log2, twiddle, TwiddleClass};
+
+/// One butterfly: indices of its two operands (post-bit-reversal layout),
+/// plus the twiddle `W_m^j` it applies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Butterfly {
+    /// Butterfly stage, `0..log2(n)`.
+    pub stage: u32,
+    /// Index of x1 (and of y1).
+    pub i1: usize,
+    /// Index of x2 (and of y2); `i2 = i1 + 2^stage`.
+    pub i2: usize,
+    /// Twiddle denominator `m = 2^(stage+1)`.
+    pub m: usize,
+    /// Twiddle numerator `j` within the block.
+    pub j: usize,
+}
+
+impl Butterfly {
+    /// The twiddle value (cos, sin).
+    pub fn twiddle(&self) -> (f32, f32) {
+        twiddle(self.m, self.j)
+    }
+
+    /// §6.1 class of this butterfly's twiddle.
+    pub fn class(&self) -> TwiddleClass {
+        TwiddleClass::of(self.m, self.j)
+    }
+}
+
+/// Stage-ordered butterfly schedule for an FFT of size `n`.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    n: usize,
+}
+
+impl StagePlan {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n) && n >= 2, "FFT size must be a power of two >= 2, got {n}");
+        Self { n }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn stages(&self) -> u32 {
+        log2(self.n)
+    }
+
+    /// Butterflies of one stage, in block-major order.
+    pub fn stage(&self, s: u32) -> impl Iterator<Item = Butterfly> + '_ {
+        let half = 1usize << s;
+        let m = half * 2;
+        let n = self.n;
+        (0..n).step_by(m).flat_map(move |block| {
+            (0..half).map(move |j| Butterfly { stage: s, i1: block + j, i2: block + j + half, m, j })
+        })
+    }
+
+    /// All butterflies, stage by stage.
+    pub fn iter(&self) -> impl Iterator<Item = Butterfly> + '_ {
+        (0..self.stages()).flat_map(move |s| self.stage(s))
+    }
+
+    /// Total butterflies: `N/2 · log2 N` (paper §2.1).
+    pub fn butterfly_count(&self) -> usize {
+        self.n / 2 * self.stages() as usize
+    }
+
+    /// Average §6.1 command cost per butterfly for a given per-class cost
+    /// function — the analytical check behind the paper's reported
+    /// MADD-per-butterfly ranges (4.85–5.54 sw, 2.67–3.46 sw-hw).
+    pub fn avg_cost(&self, cost: impl Fn(TwiddleClass) -> f64) -> f64 {
+        let mut total = 0.0;
+        for b in self.iter() {
+            total += cost(b.class());
+        }
+        total / self.butterfly_count() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_formula() {
+        for n in [2usize, 8, 64, 1024] {
+            let p = StagePlan::new(n);
+            assert_eq!(p.iter().count(), p.butterfly_count());
+            assert_eq!(p.butterfly_count(), n / 2 * (n.trailing_zeros() as usize));
+        }
+    }
+
+    #[test]
+    fn indices_are_a_permutation_per_stage() {
+        let p = StagePlan::new(64);
+        for s in 0..p.stages() {
+            let mut seen = vec![false; 64];
+            for b in p.stage(s) {
+                assert!(!seen[b.i1] && !seen[b.i2]);
+                seen[b.i1] = true;
+                seen[b.i2] = true;
+                assert_eq!(b.i2 - b.i1, 1 << s);
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+    }
+
+    #[test]
+    fn paper_sw_opt_averages() {
+        // §6.4.1: sw-opt lowers MADD/butterfly to 4.85 (N=2^5) … ≈5.54 as N
+        // grows; sw-hw-opt to 2.67 … 3.46. Exact combinatorics check.
+        let cost_sw = |c: TwiddleClass| if c.is_trivial() { 4.0 } else { 6.0 };
+        let cost_swhw = |c: TwiddleClass| match c {
+            c if c.is_trivial() => 2.0,
+            TwiddleClass::Sqrt2 => 3.0,
+            _ => 4.0,
+        };
+        let p32 = StagePlan::new(32);
+        assert!((p32.avg_cost(cost_sw) - 4.85).abs() < 0.01, "{}", p32.avg_cost(cost_sw));
+        assert!((p32.avg_cost(cost_swhw) - 2.675).abs() < 0.01);
+        let p4096 = StagePlan::new(4096);
+        let sw = p4096.avg_cost(cost_sw);
+        assert!(sw > 5.3 && sw < 5.6, "{sw}");
+        let swhw = p4096.avg_cost(cost_swhw);
+        assert!(swhw > 3.2 && swhw < 3.5, "{swhw}");
+    }
+
+    #[test]
+    fn stage0_all_trivial() {
+        let p = StagePlan::new(256);
+        assert!(p.stage(0).all(|b| b.class() == TwiddleClass::One));
+        assert!(p.stage(1).all(|b| b.class().is_trivial()));
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_size_one() {
+        StagePlan::new(1);
+    }
+}

@@ -1,0 +1,107 @@
+//! Real-input FFTs via the packing trick (paper §7.1 "Real FFTs": "packing
+//! real inputs into complex input with half the size").
+//!
+//! A length-2M real signal `x` packs into the length-M complex signal
+//! `z[t] = x[2t] + j·x[2t+1]`; one complex FFT of size M plus an O(M)
+//! unpacking pass recovers the first half of the real signal's spectrum
+//! (the rest follows from Hermitian symmetry). This lets every PIM routine
+//! and collaborative plan in the crate serve real workloads unchanged.
+
+use anyhow::{ensure, Result};
+
+use super::{fft_soa, is_pow2, SoaVec};
+
+/// Pack a real signal of even length `2M` into an M-point complex signal.
+pub fn pack_real(x: &[f32]) -> Result<SoaVec> {
+    ensure!(x.len() % 2 == 0 && x.len() >= 2, "real signal length must be even, got {}", x.len());
+    let m = x.len() / 2;
+    let mut z = SoaVec::zeros(m);
+    for t in 0..m {
+        z.re[t] = x[2 * t];
+        z.im[t] = x[2 * t + 1];
+    }
+    Ok(z)
+}
+
+/// Unpack the complex FFT `Z` of a packed real signal into the spectrum
+/// `X[0..=M]` of the original length-2M real signal (bins 0..=M; the
+/// remaining bins are the conjugate mirror).
+pub fn unpack_real_spectrum(z_hat: &SoaVec) -> SoaVec {
+    let m = z_hat.len();
+    let n = 2 * m;
+    let mut out = SoaVec::zeros(m + 1);
+    for k in 0..=m {
+        // Zk and Z_{M-k} (indices mod M).
+        let (zr, zi) = z_hat.get(k % m);
+        let (wr, wi) = z_hat.get((m - k) % m);
+        // Even part (FFT of x_even) and odd part (FFT of x_odd).
+        let er = 0.5 * (zr + wr);
+        let ei = 0.5 * (zi - wi);
+        let or_ = 0.5 * (zi + wi);
+        let oi = 0.5 * (wr - zr);
+        // X[k] = E[k] + e^{-2πik/N} O[k].
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        let (c, s) = (ang.cos() as f32, ang.sin() as f32);
+        out.re[k] = er + c * or_ - s * oi;
+        out.im[k] = ei + c * oi + s * or_;
+    }
+    out
+}
+
+/// Full real-input FFT on the host reference path (bins `0..=M`).
+pub fn rfft(x: &[f32]) -> Result<SoaVec> {
+    ensure!(is_pow2(x.len()) && x.len() >= 2, "length must be a power of two");
+    Ok(unpack_real_spectrum(&fft_soa(&pack_real(x)?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft_naive;
+
+    fn naive_real_spectrum(x: &[f32]) -> SoaVec {
+        let full = dft_naive(&SoaVec::new(x.to_vec(), vec![0.0; x.len()]));
+        let m = x.len() / 2;
+        SoaVec::new(full.re[..=m].to_vec(), full.im[..=m].to_vec())
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        for n in [4usize, 16, 64, 256] {
+            let x: Vec<f32> = (0..n).map(|t| ((t * 7 + 3) % 13) as f32 - 6.0).collect();
+            let got = rfft(&x).unwrap();
+            let want = naive_real_spectrum(&x);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-3 * (n as f32).sqrt(), "n={n}: {d}");
+        }
+    }
+
+    #[test]
+    fn dc_and_nyquist_are_real() {
+        let x: Vec<f32> = (0..64).map(|t| (t as f32 * 0.3).sin()).collect();
+        let y = rfft(&x).unwrap();
+        assert!(y.im[0].abs() < 1e-4, "DC must be real");
+        assert!(y.im[32].abs() < 1e-4, "Nyquist must be real");
+    }
+
+    #[test]
+    fn pure_cosine_peaks_once() {
+        let n = 128usize;
+        let k0 = 17;
+        let x: Vec<f32> =
+            (0..n).map(|t| (2.0 * std::f32::consts::PI * (k0 * t) as f32 / n as f32).cos()).collect();
+        let y = rfft(&x).unwrap();
+        assert!((y.re[k0] - n as f32 / 2.0).abs() < 1e-2);
+        for k in 0..=n / 2 {
+            if k != k0 {
+                let mag = (y.re[k].powi(2) + y.im[k].powi(2)).sqrt();
+                assert!(mag < 1e-2, "leakage at {k}: {mag}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_odd_length() {
+        assert!(pack_real(&[1.0, 2.0, 3.0]).is_err());
+    }
+}

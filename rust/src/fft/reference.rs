@@ -1,0 +1,149 @@
+//! Reference FFT implementations — the numeric oracle for every simulated
+//! PIM routine and every PJRT-executed artifact.
+
+use super::{bit_reverse_permutation, is_pow2, log2, twiddle, SoaVec};
+
+/// In-place iterative radix-2 DIT Cooley–Tukey FFT over SoA slices.
+///
+/// Exactly the paper Fig 1 schedule: bit-reverse, then `log2 N` stages of
+/// `N/2` butterflies `y1 = x1 + ω·x2`, `y2 = x1 − ω·x2`.
+pub fn fft_inplace(re: &mut [f32], im: &mut [f32]) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(is_pow2(n), "FFT size must be a power of two, got {n}");
+    if n == 1 {
+        return;
+    }
+    let perm = bit_reverse_permutation(n);
+    for i in 0..n {
+        if perm[i] > i {
+            re.swap(i, perm[i]);
+            im.swap(i, perm[i]);
+        }
+    }
+    for s in 0..log2(n) {
+        let half = 1usize << s;
+        let m = half * 2;
+        for block in (0..n).step_by(m) {
+            for j in 0..half {
+                let (wc, ws) = twiddle(m, j);
+                let (i1, i2) = (block + j, block + j + half);
+                let (ar, ai) = (re[i1], im[i1]);
+                let (br, bi) = (re[i2], im[i2]);
+                let tr = br * wc - bi * ws;
+                let ti = br * ws + bi * wc;
+                re[i1] = ar + tr;
+                im[i1] = ai + ti;
+                re[i2] = ar - tr;
+                im[i2] = ai - ti;
+            }
+        }
+    }
+}
+
+/// Forward FFT of an [`SoaVec`] (copying convenience wrapper).
+pub fn fft_soa(x: &SoaVec) -> SoaVec {
+    let mut out = x.clone();
+    fft_inplace(&mut out.re, &mut out.im);
+    out
+}
+
+/// O(N²) DFT — the independent ground truth `fft_inplace` is tested against.
+/// Accumulates in f64.
+pub fn dft_naive(x: &SoaVec) -> SoaVec {
+    let n = x.len();
+    let mut out = SoaVec::zeros(n);
+    for k in 0..n {
+        let (mut sr, mut si) = (0.0f64, 0.0f64);
+        for t in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (t * k % n) as f64 / n as f64;
+            let (c, s) = (ang.cos(), ang.sin());
+            sr += x.re[t] as f64 * c - x.im[t] as f64 * s;
+            si += x.re[t] as f64 * s + x.im[t] as f64 * c;
+        }
+        out.set(k, sr as f32, si as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &SoaVec, b: &SoaVec, tol: f32) {
+        let d = a.max_abs_diff(b);
+        assert!(d < tol, "max diff {d} >= {tol}");
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        for n in [1usize, 2, 4, 8, 32, 128, 512] {
+            let x = SoaVec::random(n, n as u64 + 1);
+            let got = fft_soa(&x);
+            let want = dft_naive(&x);
+            assert_close(&got, &want, 1e-3 * (n as f32).sqrt());
+        }
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = SoaVec::zeros(16);
+        x.set(0, 1.0, 0.0);
+        let y = fft_soa(&x);
+        for k in 0..16 {
+            assert!((y.re[k] - 1.0).abs() < 1e-6);
+            assert!(y.im[k].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_tone_peaks_at_bin() {
+        let n = 64usize;
+        let k0 = 5;
+        let mut x = SoaVec::zeros(n);
+        for t in 0..n {
+            let ang = 2.0 * std::f64::consts::PI * (k0 * t) as f64 / n as f64;
+            x.set(t, ang.cos() as f32, ang.sin() as f32);
+        }
+        let y = fft_soa(&x);
+        assert!((y.re[k0] - n as f32).abs() < 1e-3);
+        for k in 0..n {
+            if k != k0 {
+                assert!(y.re[k].abs() < 1e-3 && y.im[k].abs() < 1e-3, "bin {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let x = SoaVec::random(256, 7);
+        let y = fft_soa(&x);
+        let lhs = y.energy() / 256.0;
+        assert!((lhs - x.energy()).abs() < 1e-3 * x.energy());
+    }
+
+    #[test]
+    fn linearity() {
+        let a = SoaVec::random(64, 1);
+        let b = SoaVec::random(64, 2);
+        let sum = SoaVec::new(
+            a.re.iter().zip(&b.re).map(|(x, y)| x + y).collect(),
+            a.im.iter().zip(&b.im).map(|(x, y)| x + y).collect(),
+        );
+        let fa = fft_soa(&a);
+        let fb = fft_soa(&b);
+        let fsum = fft_soa(&sum);
+        for i in 0..64 {
+            assert!((fsum.re[i] - fa.re[i] - fb.re[i]).abs() < 1e-4);
+            assert!((fsum.im[i] - fa.im[i] - fb.im[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let mut re = vec![0.0; 3];
+        let mut im = vec![0.0; 3];
+        fft_inplace(&mut re, &mut im);
+    }
+}

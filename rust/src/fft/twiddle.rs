@@ -1,0 +1,133 @@
+//! Twiddle factors and the value classification driving the paper's §6.1
+//! twiddle-factor-aware orchestration (`sw-opt`).
+
+/// `W_m^j = exp(-2πi·j/m)` computed in f64 and rounded once.
+pub fn twiddle(m: usize, j: usize) -> (f32, f32) {
+    let ang = -2.0 * std::f64::consts::PI * j as f64 / m as f64;
+    (ang.cos() as f32, ang.sin() as f32)
+}
+
+/// The value classes §6.1/§6.3 exploit. For forward radix-2 DIT with
+/// `j < m/2` only `One`, `NegJ` and `Sqrt2` (|re| = |im| = 1/√2) occur
+/// besides the general case; the remaining trivial values are classified for
+/// completeness (inverse FFTs, other decimation orders).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TwiddleClass {
+    /// ω = +1 — butterfly degenerates to add/sub (4 pim-ADD, §6.1).
+    One,
+    /// ω = −1.
+    NegOne,
+    /// ω = −j.
+    NegJ,
+    /// ω = +j.
+    PlusJ,
+    /// ω = (±1 ∓ j)/√2 — the §6.3 symmetric case (3 commands with hw-opt).
+    Sqrt2,
+    /// Anything else — full Fig 14 routine (6 pim-MADD).
+    General,
+}
+
+impl TwiddleClass {
+    /// Classify a twiddle factor `W_m^j`.
+    ///
+    /// Classification is exact on the (m, j) integers, not on rounded floats:
+    /// j = 0 → One; 4j = m → −j; 8j ∈ {m, 3m} → Sqrt2; 2j = m → −1;
+    /// 4j = 3m → +j.
+    pub fn of(m: usize, j: usize) -> Self {
+        debug_assert!(j < m);
+        if j == 0 {
+            Self::One
+        } else if 2 * j == m {
+            Self::NegOne
+        } else if 4 * j == m {
+            Self::NegJ
+        } else if 4 * j == 3 * m {
+            Self::PlusJ
+        } else if 8 * j == m || 8 * j == 3 * m || 8 * j == 5 * m || 8 * j == 7 * m {
+            Self::Sqrt2
+        } else {
+            Self::General
+        }
+    }
+
+    /// Trivial values (±1, ±j) — 4 pim-ADD under sw-opt (paper Fig 14 left).
+    pub fn is_trivial(self) -> bool {
+        matches!(self, Self::One | Self::NegOne | Self::NegJ | Self::PlusJ)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_on_unit_circle() {
+        for m in [2usize, 8, 64, 1024] {
+            for j in 0..m / 2 {
+                let (c, s) = twiddle(m, j);
+                let norm = c * c + s * s;
+                assert!((norm - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn classify_exact() {
+        assert_eq!(TwiddleClass::of(8, 0), TwiddleClass::One);
+        assert_eq!(TwiddleClass::of(4, 1), TwiddleClass::NegJ);
+        assert_eq!(TwiddleClass::of(8, 2), TwiddleClass::NegJ);
+        assert_eq!(TwiddleClass::of(2, 1), TwiddleClass::NegOne);
+        assert_eq!(TwiddleClass::of(4, 3), TwiddleClass::PlusJ);
+        assert_eq!(TwiddleClass::of(8, 1), TwiddleClass::Sqrt2);
+        assert_eq!(TwiddleClass::of(8, 3), TwiddleClass::Sqrt2);
+        assert_eq!(TwiddleClass::of(16, 1), TwiddleClass::General);
+        assert_eq!(TwiddleClass::of(16, 3), TwiddleClass::General);
+    }
+
+    #[test]
+    fn classification_matches_values() {
+        // Cross-check the integer classification against the float values.
+        let inv_sqrt2 = std::f64::consts::FRAC_1_SQRT_2 as f32;
+        for m in [2usize, 4, 8, 16, 32, 256] {
+            for j in 0..m / 2 {
+                let (c, s) = twiddle(m, j);
+                match TwiddleClass::of(m, j) {
+                    TwiddleClass::One => {
+                        assert!((c - 1.0).abs() < 1e-6 && s.abs() < 1e-6)
+                    }
+                    TwiddleClass::NegOne => {
+                        assert!((c + 1.0).abs() < 1e-6 && s.abs() < 1e-6)
+                    }
+                    TwiddleClass::NegJ => {
+                        assert!(c.abs() < 1e-6 && (s + 1.0).abs() < 1e-6)
+                    }
+                    TwiddleClass::PlusJ => {
+                        assert!(c.abs() < 1e-6 && (s - 1.0).abs() < 1e-6)
+                    }
+                    TwiddleClass::Sqrt2 => {
+                        assert!((c.abs() - inv_sqrt2).abs() < 1e-6);
+                        assert!((s.abs() - inv_sqrt2).abs() < 1e-6);
+                    }
+                    TwiddleClass::General => {
+                        assert!(c.abs() > 1e-6 && (c.abs() - 1.0).abs() > 1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dit_stages_only_see_lower_half_plane() {
+        // Forward DIT uses j < m/2: PlusJ and NegOne never occur.
+        for s in 0..10u32 {
+            let m = 2usize << s;
+            for j in 0..m / 2 {
+                let class = TwiddleClass::of(m, j);
+                assert!(
+                    !matches!(class, TwiddleClass::PlusJ | TwiddleClass::NegOne),
+                    "m={m} j={j} {class:?}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Figure 4: efficient FFTs are memory-bandwidth-bound — achieved bandwidth
+//! relative to the BabelStream copy kernel across FFT size × batch.
+
+use crate::config::SystemConfig;
+use crate::gpu_model::measured_bw_utilization;
+
+use super::Table;
+
+/// (log2 size, log2 batch) grid of the paper's figure.
+pub fn grid(quick: bool) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let sizes: &[u32] = if quick { &[5, 15, 25] } else { &[5, 10, 15, 20, 25] };
+    for &ls in sizes {
+        for &lb in &[3u32, 8, 13, 20, 25] {
+            if ls + lb <= 30 {
+                out.push((ls, lb));
+            }
+        }
+    }
+    out
+}
+
+pub fn fig04_bandwidth(quick: bool) -> Table {
+    let sys = SystemConfig::baseline();
+    let mut t = Table::new(
+        "fig04_bandwidth",
+        "Figure 4: FFT memory bandwidth vs BabelStream",
+        &["log2n", "log2batch", "bw_vs_babelstream"],
+    );
+    for (ls, lb) in grid(quick) {
+        let u = measured_bw_utilization(1 << ls, 1 << lb, &sys);
+        t.row(vec![ls.to_string(), lb.to_string(), format!("{u:.4}")]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_points() {
+        // §3.1: ≈0.94–1.04× of BabelStream for 2^10 at large batch; up to
+        // ~80% for 2^5 at batch 2^25.
+        let t = fig04_bandwidth(false);
+        let r = t.lookup("log2n", "10").unwrap();
+        let big_batch = t
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(_, row)| row[0] == "10")
+            .map(|(i, _)| t.value(i, "bw_vs_babelstream"))
+            .fold(0.0f64, f64::max);
+        assert!(big_batch > 0.85, "2^10 large-batch utilization {big_batch}");
+        let _ = r;
+        let small = t.lookup("log2n", "5").map(|_| ()).unwrap();
+        let _ = small;
+        let v55 = t
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(_, row)| row[0] == "5" && row[1] == "25")
+            .map(|(i, _)| t.value(i, "bw_vs_babelstream"))
+            .next()
+            .unwrap();
+        assert!(v55 > 0.6 && v55 <= 1.0, "2^5×2^25 utilization {v55}");
+    }
+}

@@ -1,0 +1,71 @@
+//! Figure 5: PIM memory-bandwidth boost over a GPU at 100% bandwidth
+//! utilization, across bank count and PIM-unit provisioning.
+
+use crate::config::HbmConfig;
+
+use super::Table;
+
+/// The §2.3 boost model: all banks engaged by a broadcast compute on
+/// `min(banks, 2·units)` banks per command vs the GPU's pipelined column
+/// stream; commercial PIM pays the half-rate issue window, the "potential"
+/// series shows the full-rate #banks/2 bound the paper quotes.
+pub fn boost(hbm: &HbmConfig, units_per_stack: usize, issue_div: f64) -> f64 {
+    let banks_pc = hbm.banks_per_pc as f64;
+    let units_pc = (units_per_stack / hbm.pcs_per_stack()) as f64;
+    let engaged = banks_pc.min(2.0 * units_pc);
+    engaged * hbm.word_bytes as f64 / issue_div / hbm.gpu_bytes_per_pc_slot()
+}
+
+pub fn fig05_boost() -> Table {
+    let mut t = Table::new(
+        "fig05_boost",
+        "Figure 5: PIM bandwidth boost over GPU (100% util)",
+        &["banks_per_stack", "pim_units_per_stack", "issue", "boost"],
+    );
+    for &banks in &[512usize, 1024] {
+        let hbm = HbmConfig::hbm3().with_banks_per_stack(banks);
+        for &units in &[128usize, 256, 512, 1024] {
+            if units > banks {
+                continue;
+            }
+            for (label, div) in [("half-rate", 2.0), ("full-rate", 1.0)] {
+                t.row(vec![
+                    banks.to_string(),
+                    units.to_string(),
+                    label.into(),
+                    format!("{:.2}", boost(&hbm, units, div)),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PimConfig;
+
+    #[test]
+    fn baseline_boost_is_banks_over_four() {
+        // §2.3: "#banks/4 in practice … about 4x for 16 banks per PC".
+        let hbm = HbmConfig::hbm3();
+        let b = boost(&hbm, PimConfig::baseline().units_per_stack, 2.0);
+        assert!((b - 4.0).abs() < 0.1, "{b}");
+    }
+
+    #[test]
+    fn boost_reaches_paper_peak() {
+        // §3.2: up to ~12× for the 1024-bank exploration.
+        let t = fig05_boost();
+        let max = t.column("boost").into_iter().fold(0.0f64, f64::max);
+        assert!(max >= 8.0 && max <= 17.0, "max boost {max}");
+    }
+
+    #[test]
+    fn more_units_more_boost() {
+        let hbm = HbmConfig::hbm3();
+        assert!(boost(&hbm, 512, 2.0) >= boost(&hbm, 256, 2.0));
+        assert!(boost(&hbm, 256, 2.0) > boost(&hbm, 128, 2.0));
+    }
+}

@@ -1,0 +1,52 @@
+//! Figure 8: fidelity of the analytical GPU model vs the (simulated)
+//! measured GPU across size × batch.
+
+use crate::config::SystemConfig;
+use crate::gpu_model::{gpu_time_ns, measured_time_ns};
+
+use super::fig04::grid;
+use super::Table;
+
+pub fn fig08_fidelity(quick: bool) -> Table {
+    let sys = SystemConfig::baseline();
+    let mut t = Table::new(
+        "fig08_fidelity",
+        "Figure 8: GPU performance-model fidelity",
+        &["log2n", "log2batch", "model_us", "measured_us", "model_over_measured"],
+    );
+    for (ls, lb) in grid(quick) {
+        let m = gpu_time_ns(1 << ls, 1 << lb, &sys) / 1e3;
+        let meas = measured_time_ns(1 << ls, 1 << lb, &sys) / 1e3;
+        t.row(vec![
+            ls.to_string(),
+            lb.to_string(),
+            format!("{m:.3}"),
+            format!("{meas:.3}"),
+            format!("{:.4}", m / meas),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_tracks_large_and_diverges_small() {
+        let t = fig08_fidelity(false);
+        // Large memory-bound shapes: ratio ≈ 1.
+        let mut large = f64::NAN;
+        let mut small = f64::NAN;
+        for (i, row) in t.rows.iter().enumerate() {
+            if row[0] == "20" && row[1] == "8" {
+                large = t.value(i, "model_over_measured");
+            }
+            if row[0] == "5" && row[1] == "3" {
+                small = t.value(i, "model_over_measured");
+            }
+        }
+        assert!(large > 0.8 && large <= 1.0, "{large}");
+        assert!(small < 0.2, "analytical should be very optimistic: {small}");
+    }
+}

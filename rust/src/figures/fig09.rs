@@ -1,0 +1,76 @@
+//! Figure 9: strided vs baseline data mapping — execution-time breakdown
+//! (pim-MADD / pim-SHIFT / Rest), normalized to the strided mapping.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::pim::TimingSink;
+use crate::routines::{emit_baseline, emit_strided, OptLevel};
+
+use super::Table;
+
+pub fn fig09_mapping(quick: bool) -> Result<Table> {
+    let sys = SystemConfig::baseline();
+    let sizes: &[u32] = if quick { &[5, 8] } else { &[5, 6, 7, 8, 9, 10, 12] };
+    let mut t = Table::new(
+        "fig09_mapping",
+        "Figure 9: strided vs baseline mapping (time normalized to strided)",
+        &["log2n", "mapping", "total_norm", "madd_share", "shift_share", "rest_share"],
+    );
+    for &ls in sizes {
+        let n = 1usize << ls;
+        let mut s1 = TimingSink::new(&sys);
+        emit_strided(n, &sys, OptLevel::Base, &mut s1)?;
+        let strided = s1.finish();
+        let mut s2 = TimingSink::new(&sys);
+        emit_baseline(n, &sys, &mut s2)?;
+        let baseline = s2.finish();
+        let base_t = strided.time.total_ns();
+        for (name, rep) in [("strided", &strided), ("baseline", &baseline)] {
+            let tt = rep.time.total_ns();
+            t.row(vec![
+                ls.to_string(),
+                name.into(),
+                format!("{:.3}", tt / base_t),
+                format!("{:.3}", rep.time.madd_ns / tt),
+                format!("{:.3}", rep.time.shift_ns / tt),
+                format!("{:.3}", (tt - rep.time.madd_ns - rep.time.shift_ns) / tt),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strided_is_superior_with_shrinking_gap() {
+        // §4.4.2: strided wins everywhere; the schemes converge as N grows.
+        let t = fig09_mapping(false).unwrap();
+        let mut gaps = Vec::new();
+        for ls in [5u32, 10] {
+            let i = t
+                .rows
+                .iter()
+                .position(|r| r[0] == ls.to_string() && r[1] == "baseline")
+                .unwrap();
+            let g = t.value(i, "total_norm");
+            assert!(g > 1.0, "baseline must lose at 2^{ls}: {g}");
+            gaps.push(g);
+        }
+        assert!(gaps[0] > gaps[1], "gap should shrink with size: {gaps:?}");
+    }
+
+    #[test]
+    fn only_baseline_shifts() {
+        let t = fig09_mapping(true).unwrap();
+        for (i, row) in t.rows.iter().enumerate() {
+            let share = t.value(i, "shift_share");
+            if row[1] == "strided" {
+                assert_eq!(share, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Figure 10: speedup of whole-FFT PIM offload (pim-base) over the GPU —
+//! the result that motivates collaborative decomposition (average slowdown
+//! ≈ 52% in the paper).
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::planner::Planner;
+use crate::routines::OptLevel;
+
+use super::Table;
+
+pub fn fig10_pimbase(quick: bool) -> Result<Table> {
+    let sys = SystemConfig::baseline();
+    let mut p = Planner::with_opt(&sys, OptLevel::Base);
+    let batch = sys.concurrent_ffts(); // full occupancy, as the paper sweeps
+    let hi = if quick { 12 } else { 18 };
+    let mut t = Table::new(
+        "fig10_pimbase",
+        "Figure 10: PIM speedup under pim-base (whole-FFT offload)",
+        &["log2n", "speedup"],
+    );
+    for ls in 5..=hi {
+        let ev = p.whole_fft_eval(1usize << ls, batch)?;
+        t.row(vec![ls.to_string(), format!("{:.4}", ev.speedup())]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_wins_large_loses_average_slowdown() {
+        let t = fig10_pimbase(false).unwrap();
+        let s = t.column("speedup");
+        // 2^5 around parity (paper shows a small win there)…
+        assert!(s[0] > 0.9, "2^5 speedup {}", s[0]);
+        // …monotone-ish decline into clear slowdown…
+        assert!(*s.last().unwrap() < 0.5);
+        // …averaging to the paper's "considerable slowdown" regime.
+        let avg = s.iter().sum::<f64>() / s.len() as f64;
+        assert!(avg > 0.25 && avg < 0.6, "average speedup {avg} (paper ≈ 0.48)");
+    }
+}

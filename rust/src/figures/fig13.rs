@@ -1,0 +1,56 @@
+//! Figure 13: pim-colab execution-time proportioning on the PIM-FFT-Tiles —
+//! pim-MADD vs pim-MOV vs Rest.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::pim::TimingSink;
+use crate::routines::{emit_strided, OptLevel, RoutineStats};
+
+use super::Table;
+
+pub fn fig13_breakdown(quick: bool) -> Result<Table> {
+    let sys = SystemConfig::baseline();
+    let sizes: &[u32] = if quick { &[5, 8] } else { &[5, 6, 7, 8, 9, 10, 11, 12] };
+    let mut t = Table::new(
+        "fig13_breakdown",
+        "Figure 13: pim-colab tile time proportioning",
+        &["tile_log2", "madd_share", "mov_share", "rest_share", "madd_ops_per_bfly", "madd_share_of_compute_cmds"],
+    );
+    for &ls in sizes {
+        let n = 1usize << ls;
+        let mut sink = TimingSink::new(&sys);
+        emit_strided(n, &sys, OptLevel::Base, &mut sink)?;
+        let st = RoutineStats::new(n, sink.finish());
+        let compute_cmds = st.report.madd_ops + st.report.add_ops + st.report.mov_ops;
+        t.row(vec![
+            ls.to_string(),
+            format!("{:.3}", st.madd_time_share()),
+            format!("{:.3}", st.mov_time_share()),
+            format!("{:.3}", st.rest_time_share()),
+            format!("{:.3}", st.compute_ops_per_butterfly()),
+            format!("{:.3}", st.report.madd_ops as f64 / compute_cmds as f64),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn madd_dominates_time() {
+        // §5.2.2: MADD commands are the majority of PIM execution time
+        // (54% avg in the paper) and ~76% of commands.
+        let t = fig13_breakdown(false).unwrap();
+        let madd = t.column("madd_share");
+        let avg = madd.iter().sum::<f64>() / madd.len() as f64;
+        assert!(avg > 0.5, "avg MADD time share {avg}");
+        for (i, _) in t.rows.iter().enumerate() {
+            let total = t.value(i, "madd_share") + t.value(i, "mov_share") + t.value(i, "rest_share");
+            assert!((total - 1.0).abs() < 3e-3); // cells are rounded to 3 decimals
+            assert!((t.value(i, "madd_ops_per_bfly") - 6.0).abs() < 1e-6);
+        }
+    }
+}

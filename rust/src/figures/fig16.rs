@@ -1,0 +1,91 @@
+//! Figure 16: optimized PIM-FFT-Tile speedups over the GPU for the four
+//! optimization levels, plus the per-butterfly operation counts the paper
+//! quotes (sw 4.85–5.54, hw 4, sw-hw 2.67–3.46).
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::planner::TileModel;
+use crate::routines::OptLevel;
+
+use super::Table;
+
+pub fn fig16_tiles(quick: bool) -> Result<Table> {
+    let sizes: &[u32] = if quick { &[5, 8] } else { &[5, 6, 7, 8, 9, 10] };
+    let mut t = Table::new(
+        "fig16_tiles",
+        "Figure 16: optimized PIM-FFT-Tile speedup vs GPU",
+        &["tile_log2", "opt", "speedup_vs_gpu", "compute_ops_per_bfly"],
+    );
+    for opt in OptLevel::ALL {
+        let sys = if opt.needs_hw() {
+            SystemConfig::baseline().with_hw_opt()
+        } else {
+            SystemConfig::baseline()
+        };
+        let mut tm = TileModel::new(&sys, opt);
+        for &ls in sizes {
+            let n = 1usize << ls;
+            let eff = tm.efficiency(n)?;
+            let rep = tm.round_report(n)?;
+            let bflies = (n / 2) as f64 * ls as f64;
+            let ops = rep.compute_ops() as f64 / bflies;
+            t.row(vec![ls.to_string(), opt.name().into(), format!("{eff:.4}"), format!("{ops:.3}")]);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_ordering_and_op_counts() {
+        let t = fig16_tiles(false).unwrap();
+        let get = |opt: &str, ls: u32, col: &str| {
+            let i = t
+                .rows
+                .iter()
+                .position(|r| r[0] == ls.to_string() && r[1] == opt)
+                .unwrap();
+            t.value(i, col)
+        };
+        for ls in [5u32, 8, 10] {
+            // §6.4.1 ordering: base < sw < hw < sw-hw (hw beats sw because
+            // it helps every butterfly).
+            let b = get("pim-base", ls, "speedup_vs_gpu");
+            let sw = get("sw-opt", ls, "speedup_vs_gpu");
+            let hw = get("hw-opt", ls, "speedup_vs_gpu");
+            let shw = get("sw-hw-opt", ls, "speedup_vs_gpu");
+            assert!(sw >= b && hw >= sw && shw >= hw, "2^{ls}: {b} {sw} {hw} {shw}");
+        }
+        // Paper's exact per-butterfly counts.
+        assert!((get("pim-base", 5, "compute_ops_per_bfly") - 6.0).abs() < 1e-6);
+        assert!((get("sw-opt", 5, "compute_ops_per_bfly") - 4.85).abs() < 0.01);
+        assert!((get("hw-opt", 7, "compute_ops_per_bfly") - 4.0).abs() < 1e-6);
+        assert!((get("sw-hw-opt", 5, "compute_ops_per_bfly") - 2.675).abs() < 0.01);
+        let shw10 = get("sw-hw-opt", 10, "compute_ops_per_bfly");
+        assert!(shw10 > 3.0 && shw10 < 3.5, "{shw10} (paper range 2.67–3.46)");
+    }
+
+    #[test]
+    fn sw_opt_diminishes_with_size() {
+        // §6.4.1: sw-opt gains shrink as the trivial-twiddle share drops.
+        let t = fig16_tiles(false).unwrap();
+        let gain = |ls: u32| {
+            let b = t
+                .rows
+                .iter()
+                .position(|r| r[0] == ls.to_string() && r[1] == "pim-base")
+                .unwrap();
+            let s = t
+                .rows
+                .iter()
+                .position(|r| r[0] == ls.to_string() && r[1] == "sw-opt")
+                .unwrap();
+            t.value(s, "speedup_vs_gpu") / t.value(b, "speedup_vs_gpu")
+        };
+        assert!(gain(5) > gain(10), "{} vs {}", gain(5), gain(10));
+    }
+}

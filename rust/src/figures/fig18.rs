@@ -1,0 +1,44 @@
+//! Figure 18: reduction in overall data movement under Pimacolaba, plus the
+//! fraction of butterflies offloaded to PIM.
+
+use anyhow::Result;
+
+use crate::routines::OptLevel;
+
+use super::fig12::colab_table;
+use super::Table;
+
+pub fn fig18_movement(quick: bool) -> Result<Table> {
+    let sub = colab_table("tmp", "tmp", OptLevel::SwHw, quick)?;
+    let mut t = Table::new(
+        "fig18_movement",
+        "Figure 18: data-movement savings and GPU butterfly reduction",
+        &["log2n", "dm_savings", "offload_frac"],
+    );
+    for (i, row) in sub.rows.iter().enumerate() {
+        t.row(vec![
+            row[0].clone(),
+            format!("{:.4}", sub.value(i, "dm_savings")),
+            format!("{:.3}", sub.value(i, "offload_frac")),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_band_and_offload_average() {
+        // §6.5: 1.48–2.76× savings (1.81 avg), ≈33% of butterflies on PIM.
+        let t = fig18_movement(false).unwrap();
+        let savings = t.column("dm_savings");
+        let avg = savings.iter().sum::<f64>() / savings.len() as f64;
+        assert!(savings.iter().all(|&s| s > 1.3 && s < 3.0), "{savings:?}");
+        assert!(avg > 1.4 && avg < 2.2, "avg savings {avg} (paper 1.81)");
+        let off = t.column("offload_frac");
+        let avg_off = off.iter().sum::<f64>() / off.len() as f64;
+        assert!(avg_off > 0.2 && avg_off < 0.5, "avg offload {avg_off} (paper 0.33)");
+    }
+}

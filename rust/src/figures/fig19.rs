@@ -1,0 +1,96 @@
+//! Figure 19: PIM architecture sensitivity — register file ×2, row buffer
+//! ×2, PIM unit per bank — on tile speedups and the overall Pimacolaba max.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::planner::{Planner, TileModel};
+use crate::routines::OptLevel;
+
+use super::Table;
+
+fn variants() -> Vec<SystemConfig> {
+    vec![
+        SystemConfig::baseline().with_hw_opt(),
+        SystemConfig::rf32().with_hw_opt(),
+        SystemConfig::rb2k().with_hw_opt(),
+        SystemConfig::pim_per_bank().with_hw_opt(),
+    ]
+}
+
+pub fn fig19_sensitivity(quick: bool) -> Result<Table> {
+    let sizes: &[u32] = if quick { &[5, 6] } else { &[5, 6, 7, 8, 9, 10] };
+    let mut t = Table::new(
+        "fig19_sensitivity",
+        "Figure 19: PIM-FFT-Tile speedup under PIM architecture variants",
+        &["config", "tile_log2", "speedup_vs_gpu", "vs_baseline_cfg"],
+    );
+    let mut base_eff = std::collections::HashMap::new();
+    for sys in variants() {
+        let mut tm = TileModel::new(&sys, OptLevel::SwHw);
+        for &ls in sizes {
+            let eff = tm.efficiency(1usize << ls)?;
+            if sys.name == "baseline+hw" {
+                base_eff.insert(ls, eff);
+            }
+            let rel = eff / base_eff.get(&ls).copied().unwrap_or(eff);
+            t.row(vec![
+                sys.name.clone(),
+                ls.to_string(),
+                format!("{eff:.4}"),
+                format!("{rel:.4}"),
+            ]);
+        }
+    }
+    // Pimacolaba max per config (text of §6.6): appended as tile_log2 = 0.
+    for sys in variants() {
+        let mut p = Planner::with_opt(&sys, OptLevel::SwHw);
+        let mut max = 0.0f64;
+        let sizes: Vec<u32> = if quick { vec![13, 16] } else { (13..=24).collect() };
+        for ls in sizes {
+            let plan = p.plan(1usize << ls, 1 << 12);
+            max = max.max(p.evaluate(&plan)?.speedup());
+        }
+        t.row(vec![sys.name.clone(), "0".into(), format!("{max:.4}"), "-".into()]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sensitivity_directions_match_paper() {
+        let t = fig19_sensitivity(false).unwrap();
+        let rel = |cfg: &str, ls: u32| {
+            let i = t
+                .rows
+                .iter()
+                .position(|r| r[0] == cfg && r[1] == ls.to_string())
+                .unwrap();
+            t.value(i, "vs_baseline_cfg")
+        };
+        // RF×2 helps the large (cross-row) tiles (paper: 6–22%).
+        assert!(rel("rf32+hw", 10) > 1.02, "{}", rel("rf32+hw", 10));
+        // RB×2: no effect at 2^5 (fits one row), up to ~40% at 2^6.
+        assert!((rel("rb2k+hw", 5) - 1.0).abs() < 0.05);
+        assert!(rel("rb2k+hw", 6) > 1.1, "{}", rel("rb2k+hw", 6));
+        // PIM unit per bank: ≈2× on every tile.
+        for ls in [5u32, 8] {
+            let r = rel("pim-per-bank+hw", ls);
+            assert!(r > 1.7 && r < 2.3, "2^{ls}: {r}");
+        }
+    }
+
+    #[test]
+    fn pimacolaba_max_rises_with_pim_per_bank() {
+        // §6.6: 2× units lifts the overall max (1.38 → 1.64 in the paper).
+        let t = fig19_sensitivity(false).unwrap();
+        let max_of = |cfg: &str| {
+            let i = t.rows.iter().position(|r| r[0] == cfg && r[1] == "0").unwrap();
+            t.value(i, "speedup_vs_gpu")
+        };
+        assert!(max_of("pim-per-bank+hw") > max_of("baseline+hw") * 1.1);
+    }
+}

@@ -1,0 +1,63 @@
+//! Figure/table generators — one per table and figure of the paper's
+//! evaluation. Each returns a [`Table`] the criterion-style benches, the
+//! `figures` CLI subcommand and the paper-shape tests all consume; CSVs are
+//! written per figure for plotting.
+//!
+//! See DESIGN.md §4 for the experiment index mapping each figure to the
+//! modules that implement it, and EXPERIMENTS.md for paper-vs-measured.
+
+mod fig04;
+mod fig05;
+mod fig08;
+mod fig09;
+mod fig10;
+mod fig12;
+mod fig13;
+mod fig16;
+mod fig17;
+mod fig18;
+mod fig19;
+mod table;
+mod table1;
+
+pub use fig04::fig04_bandwidth;
+pub use fig05::fig05_boost;
+pub use fig08::fig08_fidelity;
+pub use fig09::fig09_mapping;
+pub use fig10::fig10_pimbase;
+pub use fig12::fig12_pimcolab;
+pub use fig13::fig13_breakdown;
+pub use fig16::fig16_tiles;
+pub use fig17::fig17_pimacolaba;
+pub use fig18::fig18_movement;
+pub use fig19::fig19_sensitivity;
+pub use table::Table;
+pub use table1::table1_parameters;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Generate every figure; writes `<out>/<name>.csv` and prints each table.
+/// `quick` subsamples the expensive sweeps (used by bench warmups).
+pub fn all(out: &Path, quick: bool) -> Result<Vec<Table>> {
+    std::fs::create_dir_all(out)?;
+    let tables = vec![
+        table1_parameters(),
+        fig04_bandwidth(quick),
+        fig05_boost(),
+        fig08_fidelity(quick),
+        fig09_mapping(quick)?,
+        fig10_pimbase(quick)?,
+        fig12_pimcolab(quick)?,
+        fig13_breakdown(quick)?,
+        fig16_tiles(quick)?,
+        fig17_pimacolaba(quick)?,
+        fig18_movement(quick)?,
+        fig19_sensitivity(quick)?,
+    ];
+    for t in &tables {
+        t.write_csv(out)?;
+        println!("{t}");
+    }
+    Ok(tables)
+}

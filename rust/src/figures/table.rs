@@ -1,0 +1,103 @@
+//! Row/column container shared by all figure generators.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A named table of string cells (numbers pre-formatted by the generator).
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// File stem, e.g. "fig10_pimbase".
+    pub name: String,
+    /// Human title, e.g. "Figure 10: PIM speedup under pim-base".
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, headers: &[&str]) -> Self {
+        Self {
+            name: name.into(),
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    /// Value of column `col` in row `r`, parsed as f64 (figure tests).
+    pub fn value(&self, r: usize, col: &str) -> f64 {
+        let c = self.headers.iter().position(|h| h == col).unwrap_or_else(|| {
+            panic!("no column '{col}' in {}", self.name)
+        });
+        self.rows[r][c].parse().unwrap_or(f64::NAN)
+    }
+
+    /// All values of a column.
+    pub fn column(&self, col: &str) -> Vec<f64> {
+        (0..self.rows.len()).map(|r| self.value(r, col)).collect()
+    }
+
+    /// Find the first row where `key_col == key`.
+    pub fn lookup(&self, key_col: &str, key: &str) -> Option<usize> {
+        let c = self.headers.iter().position(|h| h == key_col)?;
+        self.rows.iter().position(|r| r[c] == key)
+    }
+
+    pub fn write_csv(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&path, s).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "\n== {} ({})", self.title, self.name)?;
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows.iter().map(|r| r[i].len()).chain([h.len()]).max().unwrap_or(0)
+            })
+            .collect();
+        let line = |f: &mut fmt::Formatter<'_>, cells: &[String]| -> fmt::Result {
+            for (c, w) in cells.iter().zip(&widths) {
+                write!(f, " {c:>w$} |")?;
+            }
+            writeln!(f)
+        };
+        line(f, &self.headers)?;
+        for r in &self.rows {
+            line(f, r)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_and_lookup() {
+        let mut t = Table::new("t", "T", &["n", "x"]);
+        t.row(vec!["32".into(), "1.5".into()]);
+        t.row(vec!["64".into(), "2.5".into()]);
+        assert_eq!(t.value(1, "x"), 2.5);
+        assert_eq!(t.lookup("n", "64"), Some(1));
+        assert_eq!(t.column("x"), vec![1.5, 2.5]);
+    }
+}

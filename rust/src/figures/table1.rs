@@ -1,0 +1,38 @@
+//! Table 1: performance-model parameters.
+
+use crate::config::SystemConfig;
+
+use super::Table;
+
+pub fn table1_parameters() -> Table {
+    let s = SystemConfig::baseline();
+    let mut t = Table::new("table1_parameters", "Table 1: Parameters for performance model", &["parameter", "value"]);
+    let mut kv = |k: &str, v: String| t.row(vec![k.into(), v]);
+    kv("#Banks per Stack (4-high)", s.hbm.banks_per_stack.to_string());
+    kv("Bandwidth per Pin (Gb/s)", format!("{}", s.hbm.pin_gbps));
+    kv("GPU Memory Bandwidth per Stack (GB/s)", format!("{}", s.hbm.gpu_bw_per_stack_gbs));
+    kv("Row Buffer Size (B)", s.hbm.row_buffer_bytes.to_string());
+    kv("tRP (ns)", format!("{}", s.hbm.t_rp_ns));
+    kv("tCCDL (ns)", format!("{}", s.hbm.t_ccdl_ns));
+    kv("tRAS (ns)", format!("{}", s.hbm.t_ras_ns));
+    kv("#PIM Units per Stack", s.pim.units_per_stack.to_string());
+    kv("#PIM Registers per ALU", s.pim.regs_per_unit.to_string());
+    kv("HBM Stacks", s.hbm.stacks.to_string());
+    kv("GPU fp32 TFLOP/s", format!("{}", s.gpu.fp32_tflops));
+    kv("LDS max single-kernel FFT", s.gpu.lds_max_fft.to_string());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn matches_paper_table1() {
+        let t = super::table1_parameters();
+        let get = |k: &str| t.rows[t.lookup("parameter", k).unwrap()][1].clone();
+        assert_eq!(get("#Banks per Stack (4-high)"), "512");
+        assert_eq!(get("Row Buffer Size (B)"), "1024");
+        assert_eq!(get("#PIM Units per Stack"), "256");
+        assert_eq!(get("#PIM Registers per ALU"), "16");
+        assert_eq!(get("tCCDL (ns)"), "3.33");
+    }
+}

@@ -1,0 +1,47 @@
+//! The paper's GPU performance model (§4.4.1): execution time is bytes moved
+//! divided by sustained bandwidth; compute is free; transpose kernels are
+//! subtracted (assumed fused). Deliberately optimistic for small sizes —
+//! exactly as the paper discusses under Fig 8.
+
+use crate::config::SystemConfig;
+
+use super::{babelstream_bw_bytes_per_ns, kernel_count};
+
+/// Bytes of single-precision complex data per element per pass: 8 B read +
+/// 8 B written.
+pub const BYTES_PER_ELEM_PASS: f64 = 16.0;
+
+/// HBM bytes moved by the GPU computing `batch` FFTs of size `n`
+/// (FFT compute kernels only — no transposes, paper §4.4.1).
+pub fn gpu_bytes_moved(n: usize, batch: usize, sys: &SystemConfig) -> f64 {
+    let k = kernel_count(n, sys.gpu.lds_max_fft) as f64;
+    BYTES_PER_ELEM_PASS * n as f64 * batch as f64 * k
+}
+
+/// Modeled GPU execution time in ns.
+pub fn gpu_time_ns(n: usize, batch: usize, sys: &SystemConfig) -> f64 {
+    gpu_bytes_moved(n, batch, sys) / babelstream_bw_bytes_per_ns(sys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_scale_with_kernel_count() {
+        let sys = SystemConfig::baseline();
+        let one = gpu_bytes_moved(1 << 12, 1, &sys);
+        assert_eq!(one, 16.0 * 4096.0);
+        // 2^13 needs two kernels: 2× the per-element traffic of one pass.
+        let two = gpu_bytes_moved(1 << 13, 1, &sys);
+        assert_eq!(two, 16.0 * 8192.0 * 2.0);
+    }
+
+    #[test]
+    fn time_is_linear_in_batch() {
+        let sys = SystemConfig::baseline();
+        let t1 = gpu_time_ns(1 << 10, 64, &sys);
+        let t2 = gpu_time_ns(1 << 10, 128, &sys);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! BabelStream anchor (paper §3.1): the copy kernel's sustained bandwidth is
+//! the normalization for every bandwidth-bound model in the paper.
+
+use crate::config::SystemConfig;
+
+/// Sustained (BabelStream-copy) bandwidth in bytes/ns.
+///
+/// The paper measures this on the MI210 (it reports FFT kernels reaching
+/// 0.94–1.04× of it); we model it as a fixed efficiency of the Table 1 peak.
+pub fn babelstream_bw_bytes_per_ns(sys: &SystemConfig) -> f64 {
+    sys.gpu.stream_efficiency * sys.hbm.gpu_peak_bw_bytes_per_ns()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_value() {
+        let sys = SystemConfig::baseline();
+        // 0.85 × 4 stacks × 614.4 GB/s = 2088.96 GB/s = 2088.96 bytes/ns.
+        let bw = babelstream_bw_bytes_per_ns(&sys);
+        assert!((bw - 2088.96).abs() < 1e-6, "{bw}");
+        assert!(bw < sys.hbm.gpu_peak_bw_bytes_per_ns());
+    }
+}

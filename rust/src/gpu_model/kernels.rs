@@ -1,0 +1,69 @@
+//! rocFFT-style recursive decomposition (paper §2.2, Fig 2): an FFT whose
+//! N elements exceed the LDS capacity splits into factors that fit, each
+//! factor a batched-FFT kernel pass over the whole signal.
+
+use crate::fft::{is_pow2, log2};
+
+/// Number of GPU kernels (= passes over the data) to compute a size-`n` FFT
+/// with per-kernel LDS capacity `lds_max_fft` — the Fig 11 boundaries:
+/// 1 kernel through 2^12, 2 through 2^24, 3 through 2^36.
+pub fn kernel_count(n: usize, lds_max_fft: usize) -> usize {
+    assert!(is_pow2(n) && n >= 2 && is_pow2(lds_max_fft));
+    (log2(n) as usize).div_ceil(log2(lds_max_fft) as usize).max(1)
+}
+
+/// The factor sizes of the recursive decomposition (product == n, each
+/// ≤ lds_max_fft, largest-first — mirroring rocFFT's preference for big
+/// leading radices).
+pub fn lds_decompose(n: usize, lds_max_fft: usize) -> Vec<usize> {
+    let k = kernel_count(n, lds_max_fft);
+    let total_bits = log2(n) as usize;
+    let mut out = Vec::with_capacity(k);
+    let mut remaining = total_bits;
+    for i in 0..k {
+        let left = k - i;
+        // Spread bits as evenly as possible, larger factors first.
+        let bits = remaining.div_ceil(left);
+        out.push(1usize << bits);
+        remaining -= bits;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LDS: usize = 1 << 12;
+
+    #[test]
+    fn fig11_boundaries() {
+        assert_eq!(kernel_count(1 << 5, LDS), 1);
+        assert_eq!(kernel_count(1 << 12, LDS), 1);
+        assert_eq!(kernel_count(1 << 13, LDS), 2);
+        assert_eq!(kernel_count(1 << 24, LDS), 2);
+        assert_eq!(kernel_count(1 << 25, LDS), 3);
+        assert_eq!(kernel_count(1 << 30, LDS), 3);
+    }
+
+    #[test]
+    fn decompose_product_and_fit() {
+        for logn in 1..=30 {
+            let n = 1usize << logn;
+            let f = lds_decompose(n, LDS);
+            assert_eq!(f.iter().product::<usize>(), n, "n=2^{logn}");
+            assert!(f.iter().all(|&x| x <= LDS));
+            assert_eq!(f.len(), kernel_count(n, LDS));
+            // Largest-first ordering.
+            let mut sorted = f.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(f, sorted);
+        }
+    }
+
+    #[test]
+    fn single_kernel_is_identity_factor() {
+        assert_eq!(lds_decompose(1 << 10, LDS), vec![1 << 10]);
+        assert_eq!(lds_decompose(1 << 20, LDS), vec![1 << 10, 1 << 10]);
+    }
+}

@@ -1,0 +1,21 @@
+//! GPU performance models (paper §4.4.1):
+//!
+//! * [`analytical`] — the paper's model: FFT kernels are memory-bandwidth
+//!   bound, execution time = bytes moved / BabelStream-sustained bandwidth,
+//!   compute assumed free, transpose kernels subtracted out.
+//! * [`measured`] — a stand-in for the authors' MI210+rocFFT+Omniperf
+//!   measurements: the same kernel decomposition with compute roofs, launch
+//!   overhead and an occupancy-based bandwidth derate, reproducing the
+//!   small-size divergence of Fig 8 and the utilization curves of Fig 4.
+//! * [`kernels`] — the rocFFT-style recursive LDS decomposition both share
+//!   (paper Fig 2/Fig 11 kernel-count boundaries).
+
+mod analytical;
+mod bandwidth;
+mod kernels;
+mod measured;
+
+pub use analytical::{gpu_bytes_moved, gpu_time_ns, BYTES_PER_ELEM_PASS};
+pub use bandwidth::babelstream_bw_bytes_per_ns;
+pub use kernels::{kernel_count, lds_decompose};
+pub use measured::{measured_bw_utilization, measured_time_ns};

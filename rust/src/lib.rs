@@ -1,0 +1,46 @@
+//! # Pimacolaba — collaborative GPU+PIM acceleration of FFT
+//!
+//! Production-shaped reproduction of *"Collaborative Acceleration for FFT on
+//! Commercial Processing-In-Memory Architectures"* (Ibrahim & Aga, 2023).
+//!
+//! The paper maps radix-2 complex FFT onto a strawman commercial HBM-PIM
+//! design, finds whole-FFT offload loses to a memory-bandwidth-bound GPU
+//! (≈52% average slowdown), and recovers acceleration (≤1.38×) plus data
+//! movement savings (≤2.76×) by **collaborative decomposition**: the GPU
+//! executes the large FFT factor, the PIM executes a small *PIM-FFT-Tile*
+//! factor with twiddle-aware software routines (`sw-opt`) and a MADD+SUB ALU
+//! augmentation (`hw-opt`).
+//!
+//! ## Crate layout (three-layer architecture)
+//!
+//! * [`coordinator`] — **L3**: the FFT service. Routing, batching, hybrid
+//!   plan execution, metrics. Python is never on this path.
+//! * [`runtime`] — PJRT glue: loads `artifacts/*.hlo.txt` (AOT-lowered from
+//!   the L2 jax model, which calls the L1 Pallas butterfly kernel) and
+//!   executes them on the CPU client.
+//! * Substrates the paper depends on, all built here:
+//!   [`dram`] (command-level HBM timing), [`pim`] (functional + timing PIM
+//!   unit simulator), [`mapping`] (strided/baseline data layouts),
+//!   [`routines`] (PIM FFT command-stream generators), [`gpu_model`]
+//!   (the paper's analytical GPU model and a "measured" GPU simulator),
+//!   [`planner`] (collaborative decomposition), [`fft`] (host reference
+//!   FFT + four-step algebra).
+//! * [`figures`] — one generator per paper figure/table; used by the
+//!   criterion benches and the `figures` CLI subcommand.
+
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod fft;
+pub mod figures;
+pub mod gpu_model;
+pub mod mapping;
+pub mod metrics;
+pub mod pim;
+pub mod planner;
+pub mod routines;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,227 @@
+//! Pimacolaba CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `figures  [--out DIR] [--quick]`      regenerate every paper figure/table
+//! * `plan     --n N [--batch B] [--opt L]` show + evaluate the chosen plan
+//! * `tile     --n N [--opt L]`             PIM-FFT-Tile cost breakdown
+//! * `serve    [--requests R] [--sizes a,b] [--artifacts DIR] [--verify]`
+//!                                          run the service over a synthetic trace
+//! * `trace    --out FILE [--requests R]`   emit a reproducible workload trace
+//! * `artifacts [--dir DIR]`                list the AOT artifact manifest
+//! * `config   [--variant NAME]`            dump a system configuration
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{synthetic_trace, FftRequest, Scheduler, Server, ServiceReport};
+use pimacolaba::fft::SoaVec;
+use pimacolaba::figures;
+use pimacolaba::planner::{Planner, TileModel};
+use pimacolaba::routines::OptLevel;
+use pimacolaba::runtime::Registry;
+use pimacolaba::util::cli::Args;
+use pimacolaba::util::Rng;
+
+fn parse_opt(s: &str) -> Result<OptLevel> {
+    Ok(match s {
+        "base" | "pim-base" => OptLevel::Base,
+        "sw" | "sw-opt" => OptLevel::Sw,
+        "hw" | "hw-opt" => OptLevel::Hw,
+        "swhw" | "sw-hw-opt" | "pimacolaba" => OptLevel::SwHw,
+        other => bail!("unknown opt level '{other}' (base|sw|hw|swhw)"),
+    })
+}
+
+fn sys_for(opt: OptLevel, variant: &str) -> Result<SystemConfig> {
+    let base = match variant {
+        "baseline" => SystemConfig::baseline(),
+        "rf32" => SystemConfig::rf32(),
+        "rb2k" => SystemConfig::rb2k(),
+        "pim-per-bank" => SystemConfig::pim_per_bank(),
+        "banks1024" => SystemConfig::banks1024(),
+        other => bail!("unknown variant '{other}'"),
+    };
+    Ok(if opt.needs_hw() { base.with_hw_opt() } else { base })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["quick", "verify", "no-artifacts"])?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("figures") => cmd_figures(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("tile") => cmd_tile(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("config") => cmd_config(&args),
+        _ => {
+            eprintln!("usage: pimacolaba <figures|plan|tile|serve|trace|artifacts|config> [options]");
+            eprintln!("{}", include_str!("main.rs").lines().skip(2).take(10).collect::<Vec<_>>().join("\n"));
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "figures");
+    figures::all(Path::new(out), args.flag("quick"))?;
+    println!("\nwrote CSVs to {out}/");
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 1 << 13)?;
+    let batch = args.get_usize("batch", 1 << 12)?;
+    let opt = parse_opt(args.get_or("opt", "swhw"))?;
+    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
+    let mut p = Planner::with_opt(&sys, opt);
+    let plan = p.plan(n, batch);
+    let ev = p.evaluate(&plan)?;
+    println!("{plan}");
+    println!("  valid tiles: {:?}", p.valid_tiles(n));
+    println!("  modeled GPU-only: {:>12.3} µs", ev.gpu_only_ns / 1e3);
+    println!("  modeled plan:     {:>12.3} µs  (speedup {:.3}x)", ev.plan_ns / 1e3, ev.speedup());
+    println!(
+        "  data movement:    {:>12.3} MB → {:.3} MB  (savings {:.3}x)",
+        ev.movement_base.total() / 1e6,
+        ev.movement_plan.total() / 1e6,
+        ev.movement_savings()
+    );
+    println!("  butterflies offloaded to PIM: {:.1}%", ev.offload_fraction * 100.0);
+    Ok(())
+}
+
+fn cmd_tile(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 32)?;
+    let opt = parse_opt(args.get_or("opt", "swhw"))?;
+    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
+    let mut tm = TileModel::new(&sys, opt);
+    let rep = tm.round_report(n)?.clone();
+    let bflies = (n / 2) as f64 * (n.trailing_zeros() as f64);
+    println!("PIM-FFT-Tile n={n} ({opt}, {} config)", sys.name);
+    println!("  butterflies/FFT:        {bflies}");
+    println!("  broadcast commands:     {}", rep.commands);
+    println!("  command slots:          {}", rep.slots);
+    println!("  compute ops/butterfly:  {:.3}", rep.compute_ops() as f64 / bflies);
+    println!("  mov ops/butterfly:      {:.3}", rep.mov_ops as f64 / bflies);
+    println!("  row activations:        {}", rep.row_switches);
+    println!(
+        "  round time: {:.3} µs for {} concurrent FFTs",
+        rep.time.total_ns() / 1e3,
+        sys.concurrent_ffts()
+    );
+    println!(
+        "  time shares: madd {:.1}% | add {:.1}% | mov {:.1}% | rest {:.1}%",
+        100.0 * rep.time.madd_ns / rep.time.total_ns(),
+        100.0 * rep.time.add_ns / rep.time.total_ns(),
+        100.0 * rep.time.mov_ns / rep.time.total_ns(),
+        100.0 * rep.time.rest_ns / rep.time.total_ns()
+    );
+    println!("  efficiency vs GPU:      {:.3}x", tm.efficiency(n)?);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.get_usize("requests", 64)?;
+    let sizes: Vec<usize> = args
+        .get_or("sizes", "32,256,4096,8192,16384")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let opt = parse_opt(args.get_or("opt", "swhw"))?;
+    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
+    let verify = args.flag("verify");
+    let artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    let use_artifacts =
+        !args.flag("no-artifacts") && Path::new(&artifacts_dir).join("manifest.json").exists();
+
+    let trace = synthetic_trace(requests, &sizes, 50.0, args.get_usize("seed", 7)? as u64);
+    println!(
+        "serving {} requests over sizes {:?} (artifacts: {})",
+        trace.entries.len(),
+        sizes,
+        if use_artifacts { artifacts_dir.as_str() } else { "none (host reference GPU path)" }
+    );
+
+    let sys2 = sys.clone();
+    let server = Server::spawn(
+        move || {
+            let registry = if use_artifacts {
+                Some(Registry::load(Path::new(&artifacts_dir)).expect("loading artifacts"))
+            } else {
+                None
+            };
+            let mut s = Scheduler::new(&sys2, registry);
+            s.verify = verify;
+            s
+        },
+        16,
+        Duration::from_millis(5),
+        256,
+    );
+
+    let mut rng = Rng::new(11);
+    let mut pending = Vec::new();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let signals = (0..e.batch).map(|_| SoaVec::random(e.n, rng.next_u64())).collect();
+        pending.push(server.submit(FftRequest::new(i as u64, e.n, signals))?);
+    }
+    let mut report = ServiceReport::default();
+    for rx in pending {
+        report.add(&rx.recv()??);
+    }
+    server.shutdown();
+    println!("{}", report.summary());
+    println!("per-size request counts: {:?}", report.by_size);
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "trace.json");
+    let requests = args.get_usize("requests", 128)?;
+    let sizes: Vec<usize> = args
+        .get_or("sizes", "32,1024,8192,65536")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let t = synthetic_trace(requests, &sizes, args.get_f64("gap-us", 50.0)?, args.get_usize("seed", 7)? as u64);
+    t.save(Path::new(out))?;
+    println!("wrote {} entries to {out}", t.entries.len());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_or("dir", "artifacts");
+    let reg = Registry::load(Path::new(dir))?;
+    println!("platform: {}", reg.platform());
+    println!("{:<40} {:>6} {:>8} {:>6} {:>6}", "path", "kind", "n", "m1", "b");
+    for s in reg.specs() {
+        println!(
+            "{:<40} {:>6} {:>8} {:>6} {:>6}",
+            s.path.file_name().unwrap().to_string_lossy(),
+            match s.kind {
+                pimacolaba::runtime::ArtifactKind::Fft => "fft",
+                pimacolaba::runtime::ArtifactKind::GpuPart => "gpart",
+            },
+            s.n,
+            s.m1.map(|m| m.to_string()).unwrap_or_else(|| "-".into()),
+            s.b
+        );
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let sys = sys_for(
+        parse_opt(args.get_or("opt", "swhw"))?,
+        args.get_or("variant", "baseline"),
+    )?;
+    println!("{sys:#?}");
+    println!("derived: pcs/stack={} units/pc={} lanes={} words/row={} concurrent_ffts={} pim_slot={}ns",
+        sys.hbm.pcs_per_stack(), sys.units_per_pc(), sys.hbm.lanes(), sys.hbm.words_per_row(),
+        sys.concurrent_ffts(), sys.pim_slot_ns());
+    Ok(())
+}

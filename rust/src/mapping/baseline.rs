@@ -1,0 +1,98 @@
+//! The straw "baseline mapping" of paper §4.2.2/Fig 9: one FFT occupies all
+//! 8 lanes of `N/8` consecutive words.
+//!
+//! Kept for the Fig 9 comparison only — the paper (and this crate) uses the
+//! strided mapping for everything else. Butterflies with stride < 8 interact
+//! across lanes (pim-SHIFT), and per-lane twiddle values require vector
+//! loads from a reserved twiddle-table region instead of scalar immediates.
+
+use anyhow::{ensure, Result};
+
+use crate::config::SystemConfig;
+use crate::dram::LANES;
+use crate::fft::is_pow2;
+
+use super::Footprint;
+
+/// Placement of FFTs across lanes (word-major).
+#[derive(Debug, Clone)]
+pub struct BaselineMapping {
+    n: usize,
+}
+
+impl BaselineMapping {
+    pub fn new(n: usize, sys: &SystemConfig) -> Result<Self> {
+        ensure!(is_pow2(n) && n >= 2, "FFT size must be a power of two >= 2, got {n}");
+        ensure!(
+            n <= sys.max_bankpair_fft(),
+            "FFT size {n} exceeds bank-pair capacity (§4.2.1)"
+        );
+        Ok(Self { n })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Words of signal data per FFT.
+    pub fn words_per_fft(&self) -> usize {
+        self.n.div_ceil(LANES)
+    }
+
+    /// (lane, word) of element `elem` of resident FFT `slot`.
+    pub fn place(&self, slot: usize, elem: usize) -> (usize, u32) {
+        (elem % LANES, (slot * self.words_per_fft() + elem / LANES) as u32)
+    }
+
+    /// Words reserved per bank for per-stage twiddle vectors: stages with
+    /// butterfly stride ≥ LANES need one (cos, sin) word pair per butterfly
+    /// word; lane-crossing stages need them too. One word per stage per
+    /// butterfly-word is stored, laid out after the data region.
+    pub fn twiddle_words(&self) -> usize {
+        // Upper bound: one twiddle word per data word per stage.
+        self.words_per_fft() * (self.n.trailing_zeros() as usize)
+    }
+
+    pub fn footprint(&self, sys: &SystemConfig) -> Footprint {
+        let words = LANES * self.words_per_fft() + self.twiddle_words();
+        Footprint {
+            words_per_bank: words,
+            rows_per_bank: super::rows_for(words, sys),
+            ffts_per_unit: LANES,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_packs_lanes_first() {
+        let sys = SystemConfig::baseline();
+        let m = BaselineMapping::new(32, &sys).unwrap();
+        assert_eq!(m.words_per_fft(), 4);
+        assert_eq!(m.place(0, 0), (0, 0));
+        assert_eq!(m.place(0, 7), (7, 0));
+        assert_eq!(m.place(0, 8), (0, 1));
+        assert_eq!(m.place(2, 9), (1, 9)); // slot 2 starts at word 8
+    }
+
+    #[test]
+    fn footprint_includes_twiddle_region() {
+        let sys = SystemConfig::baseline();
+        let m = BaselineMapping::new(64, &sys).unwrap();
+        // 8 FFTs × 8 words data + 8×6 twiddle words.
+        assert_eq!(m.footprint(&sys).words_per_bank, 64 + 48);
+    }
+
+    #[test]
+    fn memory_wastage_vs_strided() {
+        // The paper's point: baseline wastes memory on twiddle tables that
+        // the strided mapping's scalar immediates avoid.
+        let sys = SystemConfig::baseline();
+        let b = BaselineMapping::new(256, &sys).unwrap();
+        let s = crate::mapping::StridedMapping::new(256, &sys).unwrap();
+        assert!(b.footprint(&sys).words_per_bank > s.footprint(&sys).words_per_bank);
+    }
+}

@@ -1,0 +1,51 @@
+//! Data mapping of FFT batches onto PIM bank pairs (paper §4.2, Fig 6).
+//!
+//! * [`StridedMapping`] — the paper's chosen design (§4.2.2): each SIMD lane
+//!   holds one complete FFT, real components in the even bank and imaginary
+//!   in the odd bank, elements stored in bit-reversed order along the word
+//!   axis (the GPU writes them that way when staging — §7.2). All interacting
+//!   elements share a lane ⇒ **no cross-SIMD shifts**, and one broadcast
+//!   command advances 8 FFTs per unit.
+//! * [`BaselineMapping`] — the straw alternative of Fig 9: one FFT spans the
+//!   8 lanes of consecutive words. Early stages interact *across* lanes
+//!   (costly pim-SHIFT), and per-lane twiddles defeat immediate broadcast,
+//!   forcing twiddle-vector loads from a reserved table region.
+
+mod baseline;
+mod strided;
+
+pub use baseline::BaselineMapping;
+pub use strided::StridedMapping;
+
+use crate::config::SystemConfig;
+
+/// Capacity/placement summary shared by the two mappings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Footprint {
+    /// Words used per bank of the pair.
+    pub words_per_bank: usize,
+    /// Rows touched per bank.
+    pub rows_per_bank: usize,
+    /// FFTs resident per PIM unit.
+    pub ffts_per_unit: usize,
+}
+
+/// Words → rows for the given system.
+pub fn rows_for(words: usize, sys: &SystemConfig) -> usize {
+    words.div_ceil(sys.hbm.words_per_row())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_for_rounds_up() {
+        let sys = SystemConfig::baseline();
+        assert_eq!(rows_for(1, &sys), 1);
+        assert_eq!(rows_for(32, &sys), 1);
+        assert_eq!(rows_for(33, &sys), 2);
+        let rb2k = SystemConfig::rb2k();
+        assert_eq!(rows_for(64, &rb2k), 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! The §4.2.2 strided mapping: one FFT per SIMD lane.
+
+use anyhow::{ensure, Result};
+
+use crate::config::SystemConfig;
+use crate::dram::{Half, LANES};
+use crate::fft::{bit_reverse_permutation, is_pow2, SoaVec};
+use crate::pim::UnitState;
+
+use super::Footprint;
+
+/// Placement of up to [`LANES`] size-`n` FFTs into one bank pair.
+#[derive(Debug, Clone)]
+pub struct StridedMapping {
+    n: usize,
+    perm: Vec<usize>,
+}
+
+impl StridedMapping {
+    /// Create a mapping for FFT size `n`, validating the paper's §4.2 size
+    /// limits against the system configuration.
+    pub fn new(n: usize, sys: &SystemConfig) -> Result<Self> {
+        ensure!(is_pow2(n) && n >= 2, "FFT size must be a power of two >= 2, got {n}");
+        ensure!(
+            n <= sys.max_strided_fft(),
+            "FFT size {n} exceeds the strided-mapping limit {} (§4.2.2)",
+            sys.max_strided_fft()
+        );
+        ensure!(
+            n <= sys.max_bankpair_fft(),
+            "FFT size {n} exceeds bank-pair capacity {} (§4.2.1)",
+            sys.max_bankpair_fft()
+        );
+        Ok(Self { n, perm: bit_reverse_permutation(n) })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Word index holding element `elem` (post-bit-reversal position).
+    pub fn word_of(&self, elem: usize) -> u32 {
+        debug_assert!(elem < self.n);
+        elem as u32
+    }
+
+    /// Memory footprint per unit.
+    pub fn footprint(&self, sys: &SystemConfig) -> Footprint {
+        Footprint {
+            words_per_bank: self.n,
+            rows_per_bank: super::rows_for(self.n, sys),
+            ffts_per_unit: LANES,
+        }
+    }
+
+    /// Stage inputs: FFT `slot`'s natural-order signal lands in lane `slot`,
+    /// bit-reversed along the word axis (re → even bank, im → odd bank).
+    pub fn load(&self, ffts: &[SoaVec], unit: &mut UnitState) -> Result<()> {
+        ensure!(ffts.len() <= LANES, "at most {LANES} FFTs per unit, got {}", ffts.len());
+        for f in ffts {
+            ensure!(f.len() == self.n, "FFT length {} != mapping size {}", f.len(), self.n);
+        }
+        ensure!(
+            unit.pair.even.n_words() >= self.n,
+            "unit bank too small: {} words < {}",
+            unit.pair.even.n_words(),
+            self.n
+        );
+        for (lane, f) in ffts.iter().enumerate() {
+            for w in 0..self.n {
+                let src = self.perm[w];
+                unit.pair.bank_mut(Half::Even).set(w as u32, lane, f.re[src]);
+                unit.pair.bank_mut(Half::Odd).set(w as u32, lane, f.im[src]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Read FFT `slot`'s spectrum back (DIT leaves results in natural order).
+    pub fn read_out(&self, unit: &UnitState, slot: usize) -> SoaVec {
+        let mut out = SoaVec::zeros(self.n);
+        for w in 0..self.n {
+            out.re[w] = unit.pair.bank(Half::Even).get(w as u32, slot);
+            out.im[w] = unit.pair.bank(Half::Odd).get(w as u32, slot);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_applies_bit_reversal() {
+        let sys = SystemConfig::baseline();
+        let m = StridedMapping::new(8, &sys).unwrap();
+        let mut f = SoaVec::zeros(8);
+        for i in 0..8 {
+            f.set(i, i as f32, -(i as f32));
+        }
+        let mut unit = UnitState::new(16, 8);
+        m.load(std::slice::from_ref(&f), &mut unit).unwrap();
+        // word w holds element bitrev(w): word 1 ← element 4.
+        assert_eq!(unit.pair.even.get(1, 0), 4.0);
+        assert_eq!(unit.pair.odd.get(1, 0), -4.0);
+        assert_eq!(unit.pair.even.get(3, 0), 6.0);
+        // lane 1 untouched
+        assert_eq!(unit.pair.even.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn read_out_is_natural_order_view() {
+        let sys = SystemConfig::baseline();
+        let m = StridedMapping::new(4, &sys).unwrap();
+        let mut unit = UnitState::new(16, 4);
+        for w in 0..4 {
+            unit.pair.even.set(w, 2, (10 + w) as f32);
+        }
+        let out = m.read_out(&unit, 2);
+        assert_eq!(out.re, vec![10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        let sys = SystemConfig::baseline();
+        assert!(StridedMapping::new(1 << 19, &sys).is_err());
+        assert!(StridedMapping::new(1 << 18, &sys).is_ok());
+        // RB×2 doubles the strided limit (§6.6).
+        assert!(StridedMapping::new(1 << 19, &SystemConfig::rb2k()).is_ok());
+    }
+
+    #[test]
+    fn rejects_too_many_ffts() {
+        let sys = SystemConfig::baseline();
+        let m = StridedMapping::new(4, &sys).unwrap();
+        let ffts = vec![SoaVec::zeros(4); 9];
+        let mut unit = UnitState::new(16, 4);
+        assert!(m.load(&ffts, &mut unit).is_err());
+    }
+
+    #[test]
+    fn footprint_matches_size() {
+        let sys = SystemConfig::baseline();
+        let m = StridedMapping::new(256, &sys).unwrap();
+        let fp = m.footprint(&sys);
+        assert_eq!(fp.words_per_bank, 256);
+        assert_eq!(fp.rows_per_bank, 8);
+        assert_eq!(fp.ffts_per_unit, 8);
+    }
+}

@@ -1,0 +1,6 @@
+//! Accounting shared by the models, planner and coordinator: data movement
+//! (the paper's Fig 18 currency) and simulated-time aggregation.
+
+mod movement;
+
+pub use movement::DataMovement;

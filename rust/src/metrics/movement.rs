@@ -1,0 +1,54 @@
+//! Data-movement accounting (paper Fig 18 and footnote 3).
+//!
+//! "Data movement" is bytes crossing the GPU↔HBM interface. PIM-computed
+//! butterflies move no signal data, but the GPU must transmit the PIM
+//! commands/constants — those bytes are charged here exactly as the paper's
+//! footnote 3 prescribes.
+
+/// Bytes moved for one FFT computation (or an aggregate of many).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DataMovement {
+    /// Signal bytes read+written by GPU kernels.
+    pub gpu_bytes: f64,
+    /// PIM command/constant traffic from the GPU (footnote 3).
+    pub pim_cmd_bytes: f64,
+}
+
+impl DataMovement {
+    pub fn gpu_only(bytes: f64) -> Self {
+        Self { gpu_bytes: bytes, pim_cmd_bytes: 0.0 }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.gpu_bytes + self.pim_cmd_bytes
+    }
+
+    /// Fig 18's metric: baseline bytes / collaborative bytes.
+    pub fn savings_vs(&self, baseline: &DataMovement) -> f64 {
+        baseline.total() / self.total()
+    }
+
+    pub fn add_assign(&mut self, other: &DataMovement) {
+        self.gpu_bytes += other.gpu_bytes;
+        self.pim_cmd_bytes += other.pim_cmd_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_ratio() {
+        let base = DataMovement::gpu_only(300.0);
+        let colab = DataMovement { gpu_bytes: 100.0, pim_cmd_bytes: 10.0 };
+        assert!((colab.savings_vs(&base) - 300.0 / 110.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulation() {
+        let mut a = DataMovement::gpu_only(5.0);
+        a.add_assign(&DataMovement { gpu_bytes: 1.0, pim_cmd_bytes: 2.0 });
+        assert_eq!(a.total(), 8.0);
+    }
+}

@@ -1,0 +1,498 @@
+//! Command-stream execution: functional (against bank contents) and temporal
+//! (command-level timing, the paper's §4.4.1 PIM performance model).
+//!
+//! Streams are *visited*, not materialized: routine generators push commands
+//! into a [`Sink`], so a 2^18-point tile (≈10M commands) times in O(1)
+//! memory. [`VecSink`] collects small streams for tests and functional runs.
+//!
+//! ## Timing model
+//! Each broadcast command occupies one pseudo-channel command slot of
+//! `issue_rate_divisor × tCCDL` (§2.3: PIM ops issue at half the column
+//! rate). With `bank_pair_fused` the even/odd micro-ops retire in that
+//! single slot (the unit drives both banks of its pair); otherwise each
+//! micro-op serializes. Row activations charge tRP+tRAS per switching bank
+//! (the "Rest" of paper Figs 9/13). Broadcast streams are identical across
+//! units/channels, so one pass over the stream times the whole machine.
+//!
+//! ## Structural validation
+//! Every command is checked against the strawman's constraints: register
+//! indices within the configured RF, all row-buffer operands of a bank in
+//! one row, per bank at most one column read and one column write per
+//! command (two writes with the §6.2 dual-write port), and dual-write ops
+//! gated on `hw_maddsub`.
+
+use anyhow::{ensure, Result};
+
+use crate::config::SystemConfig;
+use crate::dram::{Half, RowTimer};
+
+use super::{CmdKind, Operand, PimCommand, UnitState};
+
+/// Time spent per bucket, ns (per broadcast domain — i.e. wall-clock, since
+/// all domains run concurrently).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TimeBreakdown {
+    pub madd_ns: f64,
+    pub add_ns: f64,
+    pub mov_ns: f64,
+    pub shift_ns: f64,
+    /// Row activations + precharge — the paper's "Rest".
+    pub rest_ns: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total_ns(&self) -> f64 {
+        self.madd_ns + self.add_ns + self.mov_ns + self.shift_ns + self.rest_ns
+    }
+
+    /// Compute-command time (MADD + ADD buckets).
+    pub fn compute_ns(&self) -> f64 {
+        self.madd_ns + self.add_ns
+    }
+
+    pub fn scaled(&self, k: f64) -> TimeBreakdown {
+        TimeBreakdown {
+            madd_ns: self.madd_ns * k,
+            add_ns: self.add_ns * k,
+            mov_ns: self.mov_ns * k,
+            shift_ns: self.shift_ns * k,
+            rest_ns: self.rest_ns * k,
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &TimeBreakdown) {
+        self.madd_ns += other.madd_ns;
+        self.add_ns += other.add_ns;
+        self.mov_ns += other.mov_ns;
+        self.shift_ns += other.shift_ns;
+        self.rest_ns += other.rest_ns;
+    }
+}
+
+/// Full report of a stream execution (one broadcast domain).
+#[derive(Debug, Clone, Default)]
+pub struct ExecReport {
+    pub time: TimeBreakdown,
+    /// Command slots consumed on the command bus.
+    pub slots: u64,
+    /// Broadcast commands issued (== stream length).
+    pub commands: u64,
+    /// Micro-op counts per kind — matches the paper's "pim-MADD operations
+    /// per butterfly" accounting.
+    pub madd_ops: u64,
+    pub add_ops: u64,
+    pub mov_ops: u64,
+    pub shift_ops: u64,
+    /// Row activations.
+    pub row_switches: u64,
+}
+
+impl ExecReport {
+    /// Compute ops: MADD + ADD classes (the paper folds sw-opt ADDs into its
+    /// per-butterfly "pim-MADD command" counts).
+    pub fn compute_ops(&self) -> u64 {
+        self.madd_ops + self.add_ops
+    }
+}
+
+/// Receives a generated command stream.
+pub trait Sink {
+    fn accept(&mut self, cmd: &PimCommand) -> Result<()>;
+}
+
+/// Collects commands (tests / functional verification of small tiles).
+#[derive(Default)]
+pub struct VecSink(pub Vec<PimCommand>);
+
+impl Sink for VecSink {
+    fn accept(&mut self, cmd: &PimCommand) -> Result<()> {
+        self.0.push(cmd.clone());
+        Ok(())
+    }
+}
+
+/// Validates + times a stream on the fly.
+pub struct TimingSink<'a> {
+    cfg: &'a SystemConfig,
+    rows: RowTimer,
+    rep: ExecReport,
+    validate: bool,
+}
+
+impl<'a> TimingSink<'a> {
+    pub fn new(cfg: &'a SystemConfig) -> Self {
+        Self { cfg, rows: RowTimer::new(), rep: ExecReport::default(), validate: true }
+    }
+
+    /// Disable structural validation (hot benchmarking path; the test suite
+    /// runs every routine through the validating configuration).
+    pub fn unchecked(mut self) -> Self {
+        self.validate = false;
+        self
+    }
+
+    pub fn finish(self) -> ExecReport {
+        let mut rep = self.rep;
+        rep.row_switches = self.rows.switches();
+        rep
+    }
+}
+
+/// Validate one command against the strawman constraints.
+pub fn validate_cmd(cfg: &SystemConfig, cmd: &PimCommand) -> Result<()> {
+    let regs = cfg.pim.regs_per_unit;
+    let wpr = cfg.hbm.words_per_row() as u32;
+    let max_writes = if cfg.pim.hw_maddsub { 2 } else { 1 };
+    for half in [Half::Even, Half::Odd] {
+        let mut row = None;
+        // Distinct words: the same open-row word feeding both bank sides of
+        // a broadcast command is a single column access.
+        let mut reads: Vec<u32> = Vec::new();
+        let mut writes: Vec<u32> = Vec::new();
+        for op in cmd.ops() {
+            if op.needs_hw_opt() {
+                ensure!(
+                    cfg.pim.hw_maddsub,
+                    "stream uses §6.2 dual-write ops but hw_maddsub is disabled"
+                );
+            }
+            let mut check = |o: Operand, is_write: bool| -> Result<()> {
+                match o {
+                    Operand::Reg(r) => {
+                        ensure!((r as usize) < regs, "register r{r} out of range (RF size {regs})");
+                    }
+                    Operand::Row(h, w) => {
+                        if h == half {
+                            let r = w / wpr;
+                            match row {
+                                None => row = Some(r),
+                                Some(prev) => ensure!(
+                                    prev == r,
+                                    "command touches two rows ({prev}, {r}) of one bank"
+                                ),
+                            }
+                            if is_write {
+                                if !writes.contains(&w) {
+                                    writes.push(w);
+                                }
+                            } else if !reads.contains(&w) {
+                                reads.push(w);
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            };
+            for o in op.reads() {
+                check(o, false)?;
+            }
+            for o in op.writes() {
+                check(o, true)?;
+            }
+        }
+        ensure!(
+            reads.len() <= 1,
+            "command performs {} column reads on one bank",
+            reads.len()
+        );
+        ensure!(
+            writes.len() <= max_writes,
+            "command performs {} column writes on one bank (max {max_writes})",
+            writes.len()
+        );
+    }
+    Ok(())
+}
+
+impl Sink for TimingSink<'_> {
+    #[inline]
+    fn accept(&mut self, cmd: &PimCommand) -> Result<()> {
+        if self.validate {
+            validate_cmd(self.cfg, cmd)?;
+        }
+        let wpr = self.cfg.hbm.words_per_row() as u32;
+        // Row activations for every referenced row (allocation-free walk —
+        // this loop runs for every one of the tens of millions of commands a
+        // figure sweep simulates; see EXPERIMENTS.md §Perf).
+        let mut rest = 0.0;
+        for op in cmd.ops() {
+            op.for_each_row_operand(|h, w, _| {
+                rest += self.rows.access(h, w / wpr, &self.cfg.hbm);
+            });
+        }
+        self.rep.time.rest_ns += rest;
+        let slots =
+            if self.cfg.pim.bank_pair_fused { 1 } else { cmd.op_count() as u64 };
+        self.rep.slots += slots;
+        self.rep.commands += 1;
+        // §2.3: only multi-bank *compute* broadcasts pay the half-rate
+        // window; pim-MOV transfers between the open row and the PIM
+        // registers are RD/WR-like column accesses at full column rate.
+        let per_slot = if cmd.kind == CmdKind::Mov && self.cfg.pim.mov_full_rate {
+            self.cfg.hbm.t_ccdl_ns
+        } else {
+            self.cfg.pim_slot_ns()
+        };
+        let t = slots as f64 * per_slot;
+        match cmd.kind {
+            CmdKind::Madd => {
+                self.rep.time.madd_ns += t;
+                self.rep.madd_ops += cmd.op_count() as u64;
+            }
+            CmdKind::Add => {
+                self.rep.time.add_ns += t;
+                self.rep.add_ops += cmd.op_count() as u64;
+            }
+            CmdKind::Mov => {
+                self.rep.time.mov_ns += t;
+                self.rep.mov_ops += cmd.op_count() as u64;
+            }
+            CmdKind::Shift => {
+                self.rep.time.shift_ns += t;
+                self.rep.shift_ops += cmd.op_count() as u64;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Functionally executes a stream against one unit's state.
+pub struct FuncSink<'a, 'u> {
+    cfg: &'a SystemConfig,
+    unit: &'u mut UnitState,
+    validate: bool,
+}
+
+impl<'a, 'u> FuncSink<'a, 'u> {
+    pub fn new(cfg: &'a SystemConfig, unit: &'u mut UnitState) -> Self {
+        Self { cfg, unit, validate: true }
+    }
+
+    /// Skip structural validation — for broadcast replay of a stream that
+    /// was already validated once (identical across units by construction).
+    pub fn unchecked(mut self) -> Self {
+        self.validate = false;
+        self
+    }
+}
+
+impl Sink for FuncSink<'_, '_> {
+    fn accept(&mut self, cmd: &PimCommand) -> Result<()> {
+        if self.validate {
+            validate_cmd(self.cfg, cmd)?;
+        }
+        let hw = self.cfg.pim.hw_maddsub;
+        if let Some(op) = &cmd.even {
+            self.unit.exec(op, Half::Even, hw)?;
+        }
+        if let Some(op) = &cmd.odd {
+            self.unit.exec(op, Half::Odd, hw)?;
+        }
+        Ok(())
+    }
+}
+
+/// Fan a stream out to several sinks (e.g. time + execute in one pass).
+pub struct TeeSink<'s>(pub Vec<&'s mut dyn Sink>);
+
+impl Sink for TeeSink<'_> {
+    fn accept(&mut self, cmd: &PimCommand) -> Result<()> {
+        for s in self.0.iter_mut() {
+            s.accept(cmd)?;
+        }
+        Ok(())
+    }
+}
+
+/// Slice-based convenience wrapper around the sinks.
+pub struct Executor<'a> {
+    cfg: &'a SystemConfig,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(cfg: &'a SystemConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Time a materialized stream.
+    pub fn time_stream(&self, cmds: &[PimCommand]) -> Result<ExecReport> {
+        let mut sink = TimingSink::new(self.cfg);
+        for cmd in cmds {
+            sink.accept(cmd)?;
+        }
+        Ok(sink.finish())
+    }
+
+    /// Functionally execute a materialized stream against one unit.
+    pub fn run_stream(&self, cmds: &[PimCommand], unit: &mut UnitState) -> Result<()> {
+        let mut sink = FuncSink::new(self.cfg, unit);
+        for cmd in cmds {
+            sink.accept(cmd)?;
+        }
+        Ok(())
+    }
+
+    /// Functional replay without per-command validation (stream already
+    /// validated once — broadcast is identical across units).
+    pub fn run_stream_unchecked(&self, cmds: &[PimCommand], unit: &mut UnitState) -> Result<()> {
+        let mut sink = FuncSink::new(self.cfg, unit).unchecked();
+        for cmd in cmds {
+            sink.accept(cmd)?;
+        }
+        Ok(())
+    }
+
+    /// Functional + timing over several units sharing the broadcast stream.
+    pub fn broadcast(&self, cmds: &[PimCommand], units: &mut [UnitState]) -> Result<ExecReport> {
+        for unit in units.iter_mut() {
+            self.run_stream(cmds, unit)?;
+        }
+        self.time_stream(cmds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::MicroOp;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::baseline()
+    }
+
+    fn mov(dst: Operand, src: Operand) -> PimCommand {
+        PimCommand::single(CmdKind::Mov, MicroOp::Mov { dst, src })
+    }
+
+    #[test]
+    fn slot_accounting_fused_vs_not() {
+        let mut c = cfg();
+        let cmd = PimCommand::pair(
+            CmdKind::Madd,
+            MicroOp::Madd {
+                dst: Operand::Reg(0),
+                a: Operand::Row(Half::Even, 0),
+                b: Operand::Reg(1),
+                imm: 1.0,
+            },
+            MicroOp::Madd {
+                dst: Operand::Reg(2),
+                a: Operand::Row(Half::Odd, 0),
+                b: Operand::Reg(3),
+                imm: 1.0,
+            },
+        );
+        let rep = Executor::new(&c).time_stream(std::slice::from_ref(&cmd)).unwrap();
+        assert_eq!(rep.slots, 1);
+        assert_eq!(rep.madd_ops, 2);
+        assert!((rep.time.madd_ns - c.pim_slot_ns()).abs() < 1e-9);
+
+        c.pim.bank_pair_fused = false;
+        let rep2 = Executor::new(&c).time_stream(std::slice::from_ref(&cmd)).unwrap();
+        assert_eq!(rep2.slots, 2);
+        assert!((rep2.time.madd_ns - 2.0 * c.pim_slot_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_switch_charged_once_per_row() {
+        let c = cfg();
+        let cmds = vec![
+            mov(Operand::Reg(0), Operand::Row(Half::Even, 0)),
+            mov(Operand::Reg(1), Operand::Row(Half::Even, 1)), // same row (32 words/row)
+            mov(Operand::Reg(2), Operand::Row(Half::Even, 40)), // row 1
+            mov(Operand::Reg(3), Operand::Row(Half::Even, 2)),  // back to row 0
+        ];
+        let rep = Executor::new(&c).time_stream(&cmds).unwrap();
+        assert_eq!(rep.row_switches, 3); // cold + 2 switches
+        assert!((rep.time.rest_ns - 3.0 * c.hbm.row_switch_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_two_rows_same_bank_in_one_command() {
+        let c = cfg();
+        let bad = PimCommand::single(
+            CmdKind::Add,
+            MicroOp::Add {
+                dst: Operand::Reg(0),
+                a: Operand::Row(Half::Even, 0),
+                b: Operand::Row(Half::Even, 100),
+                sub: false,
+            },
+        );
+        assert!(Executor::new(&c).time_stream(&[bad]).is_err());
+    }
+
+    #[test]
+    fn rejects_two_reads_same_bank() {
+        let c = cfg();
+        let bad = PimCommand::single(
+            CmdKind::Add,
+            MicroOp::Add {
+                dst: Operand::Reg(0),
+                a: Operand::Row(Half::Even, 0),
+                b: Operand::Row(Half::Even, 1),
+                sub: false,
+            },
+        );
+        assert!(Executor::new(&c).time_stream(&[bad]).is_err());
+    }
+
+    #[test]
+    fn second_write_needs_hw_opt() {
+        let c = cfg().with_hw_opt();
+        let cmd = PimCommand::single(
+            CmdKind::Madd,
+            MicroOp::MaddSub {
+                dst_add: Operand::Row(Half::Even, 0),
+                dst_sub: Operand::Row(Half::Even, 1),
+                a: Operand::Row(Half::Even, 2),
+                b: Operand::Reg(0),
+                imm: 0.5,
+            },
+        );
+        assert!(Executor::new(&c).time_stream(std::slice::from_ref(&cmd)).is_ok());
+        let base = cfg();
+        assert!(Executor::new(&base).time_stream(&[cmd]).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_register() {
+        let c = cfg();
+        let bad = mov(Operand::Reg(16), Operand::Row(Half::Even, 0));
+        assert!(Executor::new(&c).time_stream(&[bad]).is_err());
+    }
+
+    #[test]
+    fn functional_matches_unit_semantics() {
+        let c = cfg();
+        let mut unit = UnitState::new(16, 4);
+        unit.pair.even.set(0, 0, 2.0);
+        let cmds = vec![
+            mov(Operand::Reg(0), Operand::Row(Half::Even, 0)),
+            PimCommand::single(
+                CmdKind::Madd,
+                MicroOp::Madd {
+                    dst: Operand::Row(Half::Even, 1),
+                    a: Operand::Reg(0),
+                    b: Operand::Reg(0),
+                    imm: 3.0,
+                },
+            ),
+        ];
+        Executor::new(&c).run_stream(&cmds, &mut unit).unwrap();
+        assert_eq!(unit.pair.even.get(1, 0), 8.0);
+    }
+
+    #[test]
+    fn tee_sink_fans_out() {
+        let _c = cfg();
+        let mut v1 = VecSink::default();
+        let mut v2 = VecSink::default();
+        {
+            let mut tee = TeeSink(vec![&mut v1, &mut v2]);
+            tee.accept(&mov(Operand::Reg(0), Operand::Row(Half::Even, 0))).unwrap();
+        }
+        assert_eq!(v1.0.len(), 1);
+        assert_eq!(v2.0.len(), 1);
+    }
+}

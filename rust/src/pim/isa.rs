@@ -1,0 +1,222 @@
+//! The PIM instruction set (paper §2.3/§4.1/§6.2).
+//!
+//! A [`PimCommand`] is what the (PIM-aware) GPU broadcasts to every PIM unit
+//! of a pseudo channel: up to two mirrored [`MicroOp`]s, one executed by the
+//! even-bank side of the unit and one by the odd-bank side. With
+//! `bank_pair_fused` both micro-ops retire in a single command slot — the
+//! paper's designs pair banks per unit exactly to expose this; with the
+//! conservative setting each op costs its own slot.
+//!
+//! Operands address either the unit's register file or an open-row word of
+//! one of the two banks; twiddle components arrive as 32-bit immediates in
+//! the command payload (§4.3 "online or offline computation of twiddle
+//! factor components" — counted as command/constant traffic, footnote 3).
+
+use crate::dram::Half;
+
+/// An ALU operand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operand {
+    /// Register file entry (256-bit, 8 lanes).
+    Reg(u8),
+    /// Word `word` of bank `half` — must be within the currently open row
+    /// (the executor charges a row switch otherwise).
+    Row(Half, u32),
+}
+
+impl Operand {
+    pub fn row(self) -> Option<(Half, u32)> {
+        match self {
+            Operand::Row(h, w) => Some((h, w)),
+            Operand::Reg(_) => None,
+        }
+    }
+}
+
+/// One lane-parallel micro-op executed by one bank-side of a PIM unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MicroOp {
+    /// `dst = src` (register ↔ row-buffer move; pim-MOV).
+    Mov { dst: Operand, src: Operand },
+    /// `dst = a ± b` (pim-ADD; `sub` selects subtraction).
+    Add { dst: Operand, a: Operand, b: Operand, sub: bool },
+    /// `dst = a + imm·b` (pim-MADD, Fig 7/14).
+    Madd { dst: Operand, a: Operand, b: Operand, imm: f32 },
+    /// `dst = a · b` lane-wise (vector twiddles — baseline mapping only,
+    /// where per-lane twiddles defeat scalar immediates).
+    Mul { dst: Operand, a: Operand, b: Operand },
+    /// `dst = dst ± a · b` (accumulating MAC, vector twiddles).
+    Fma { dst: Operand, a: Operand, b: Operand, sub: bool },
+    /// `dst1 = a + b`, `dst2 = a − b` — §6.2 dual-write augmentation
+    /// applied to a trivial butterfly.
+    AddSub { dst_add: Operand, dst_sub: Operand, a: Operand, b: Operand },
+    /// `dst1 = a + imm·b`, `dst2 = a − imm·b` — the §6.2 pim-MADD+SUB.
+    MaddSub { dst_add: Operand, dst_sub: Operand, a: Operand, b: Operand, imm: f32 },
+    /// Cross-lane rotate of a register by `amt` lanes (pim-SHIFT) — the
+    /// §4.2.2 cost the strided mapping exists to avoid.
+    Shift { dst: u8, src: u8, amt: i8 },
+}
+
+impl MicroOp {
+    /// True if this op needs the dual register-file write port (§6.2).
+    pub fn needs_hw_opt(&self) -> bool {
+        matches!(self, MicroOp::AddSub { .. } | MicroOp::MaddSub { .. })
+    }
+
+    /// Operands read by this op.
+    pub fn reads(&self) -> Vec<Operand> {
+        match *self {
+            MicroOp::Mov { src, .. } => vec![src],
+            MicroOp::Add { a, b, .. } | MicroOp::Madd { a, b, .. } | MicroOp::Mul { a, b, .. } => {
+                vec![a, b]
+            }
+            MicroOp::Fma { dst, a, b, .. } => vec![dst, a, b],
+            MicroOp::AddSub { a, b, .. } | MicroOp::MaddSub { a, b, .. } => vec![a, b],
+            MicroOp::Shift { src, .. } => vec![Operand::Reg(src)],
+        }
+    }
+
+    /// Visit every row-buffer operand without allocating:
+    /// `f(half, word, is_write)`. This is the hot-path accessor — the
+    /// timing sink calls it for every simulated command (tens of millions
+    /// per figure sweep); `reads()`/`writes()` remain for tests/validation.
+    #[inline]
+    pub fn for_each_row_operand(&self, mut f: impl FnMut(Half, u32, bool)) {
+        let mut r = |o: Operand| {
+            if let Operand::Row(h, w) = o {
+                f(h, w, false)
+            }
+        };
+        match *self {
+            MicroOp::Mov { dst, src } => {
+                r(src);
+                if let Operand::Row(h, w) = dst {
+                    f(h, w, true)
+                }
+            }
+            MicroOp::Add { dst, a, b, .. }
+            | MicroOp::Madd { dst, a, b, .. }
+            | MicroOp::Mul { dst, a, b } => {
+                r(a);
+                r(b);
+                if let Operand::Row(h, w) = dst {
+                    f(h, w, true)
+                }
+            }
+            MicroOp::Fma { dst, a, b, .. } => {
+                r(a);
+                r(b);
+                if let Operand::Row(h, w) = dst {
+                    f(h, w, false); // accumulator read
+                    f(h, w, true);
+                }
+            }
+            MicroOp::AddSub { dst_add, dst_sub, a, b }
+            | MicroOp::MaddSub { dst_add, dst_sub, a, b, .. } => {
+                r(a);
+                r(b);
+                for d in [dst_add, dst_sub] {
+                    if let Operand::Row(h, w) = d {
+                        f(h, w, true)
+                    }
+                }
+            }
+            MicroOp::Shift { .. } => {}
+        }
+    }
+
+    /// Operands written by this op.
+    pub fn writes(&self) -> Vec<Operand> {
+        match *self {
+            MicroOp::Mov { dst, .. }
+            | MicroOp::Add { dst, .. }
+            | MicroOp::Madd { dst, .. }
+            | MicroOp::Mul { dst, .. }
+            | MicroOp::Fma { dst, .. } => vec![dst],
+            MicroOp::AddSub { dst_add, dst_sub, .. }
+            | MicroOp::MaddSub { dst_add, dst_sub, .. } => vec![dst_add, dst_sub],
+            MicroOp::Shift { dst, .. } => vec![Operand::Reg(dst)],
+        }
+    }
+}
+
+/// Statistic bucket of a command (paper Figs 9/13 break time down by these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmdKind {
+    /// pim-MADD (includes the §6.2 MADD+SUB).
+    Madd,
+    /// pim-ADD (includes dual-write ADD+SUB).
+    Add,
+    /// pim-MOV: row-buffer ↔ register moves.
+    Mov,
+    /// pim-SHIFT: cross-lane shifts (baseline mapping only).
+    Shift,
+}
+
+/// One broadcast command: mirrored micro-ops for the even/odd bank sides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PimCommand {
+    pub even: Option<MicroOp>,
+    pub odd: Option<MicroOp>,
+    pub kind: CmdKind,
+}
+
+impl PimCommand {
+    /// Paired command engaging both bank sides.
+    pub fn pair(kind: CmdKind, even: MicroOp, odd: MicroOp) -> Self {
+        Self { even: Some(even), odd: Some(odd), kind }
+    }
+
+    /// Single-sided command.
+    pub fn single(kind: CmdKind, op: MicroOp) -> Self {
+        Self { even: Some(op), odd: None, kind }
+    }
+
+    pub fn ops(&self) -> impl Iterator<Item = &MicroOp> {
+        self.even.iter().chain(self.odd.iter())
+    }
+
+    /// Number of micro-ops (1 or 2).
+    pub fn op_count(&self) -> usize {
+        self.even.is_some() as usize + self.odd.is_some() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::Half;
+
+    #[test]
+    fn reads_writes_enumeration() {
+        let op = MicroOp::Madd {
+            dst: Operand::Reg(0),
+            a: Operand::Row(Half::Even, 3),
+            b: Operand::Reg(1),
+            imm: 0.5,
+        };
+        assert_eq!(op.reads().len(), 2);
+        assert_eq!(op.writes(), vec![Operand::Reg(0)]);
+        assert!(!op.needs_hw_opt());
+    }
+
+    #[test]
+    fn maddsub_is_hw_opt() {
+        let op = MicroOp::MaddSub {
+            dst_add: Operand::Reg(0),
+            dst_sub: Operand::Reg(1),
+            a: Operand::Reg(2),
+            b: Operand::Reg(3),
+            imm: 1.0,
+        };
+        assert!(op.needs_hw_opt());
+        assert_eq!(op.writes().len(), 2);
+    }
+
+    #[test]
+    fn command_op_count() {
+        let mv = MicroOp::Mov { dst: Operand::Reg(0), src: Operand::Row(Half::Even, 0) };
+        assert_eq!(PimCommand::single(CmdKind::Mov, mv).op_count(), 1);
+        assert_eq!(PimCommand::pair(CmdKind::Mov, mv, mv).op_count(), 2);
+    }
+}

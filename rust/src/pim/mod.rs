@@ -1,0 +1,15 @@
+//! The PIM unit simulator: ISA, register file, SIMD ALU (with the §6.2
+//! MADD+SUB augmentation), and an executor that runs broadcast command
+//! streams both **functionally** (against simulated bank contents, so every
+//! routine's numerics are validated against the reference FFT) and
+//! **temporally** (command-level timing per §4.4.1's model).
+
+mod executor;
+mod isa;
+mod regfile;
+mod unit;
+
+pub use executor::{validate_cmd, ExecReport, Executor, FuncSink, Sink, TeeSink, TimeBreakdown, TimingSink, VecSink};
+pub use isa::{CmdKind, MicroOp, Operand, PimCommand};
+pub use regfile::RegFile;
+pub use unit::UnitState;

@@ -1,0 +1,57 @@
+//! The PIM unit register file: `regs_per_unit` 256-bit entries (Table 1: 16)
+//! shared by both bank sides of the unit.
+
+use crate::dram::{Word, LANES};
+
+/// Register file of one PIM unit.
+#[derive(Debug, Clone)]
+pub struct RegFile {
+    regs: Vec<Word>,
+}
+
+impl RegFile {
+    pub fn new(n: usize) -> Self {
+        Self { regs: vec![[0.0; LANES]; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.regs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regs.is_empty()
+    }
+
+    /// Read a register; panics on out-of-range index (the routine generators
+    /// are responsible for respecting the configured RF size, and the
+    /// executor validates indices up front).
+    pub fn read(&self, r: u8) -> Word {
+        self.regs[r as usize]
+    }
+
+    pub fn write(&mut self, r: u8, w: Word) {
+        self.regs[r as usize] = w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write() {
+        let mut rf = RegFile::new(16);
+        assert_eq!(rf.len(), 16);
+        let mut w = [0.0; LANES];
+        w[3] = 9.0;
+        rf.write(2, w);
+        assert_eq!(rf.read(2)[3], 9.0);
+        assert_eq!(rf.read(0)[0], 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        RegFile::new(4).read(4);
+    }
+}

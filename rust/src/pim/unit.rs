@@ -1,0 +1,224 @@
+//! Functional execution of micro-ops on one PIM unit (ALU + register file +
+//! its bank pair).
+
+use anyhow::{bail, Result};
+
+use crate::dram::{BankPair, Half, Word, LANES};
+
+use super::{MicroOp, Operand, RegFile};
+
+/// Mutable state of one PIM unit during functional simulation.
+#[derive(Debug, Clone)]
+pub struct UnitState {
+    pub regs: RegFile,
+    pub pair: BankPair,
+}
+
+impl UnitState {
+    pub fn new(regs: usize, n_words: usize) -> Self {
+        Self { regs: RegFile::new(regs), pair: BankPair::with_words(n_words) }
+    }
+
+    fn load(&self, op: Operand, side: Half) -> Word {
+        match op {
+            Operand::Reg(r) => self.regs.read(r),
+            Operand::Row(h, w) => {
+                // Cross-bank reads are allowed (the unit sits between its two
+                // banks); `side` is only the executing ALU half.
+                let _ = side;
+                *self.pair.bank(h).word(w)
+            }
+        }
+    }
+
+    fn store(&mut self, op: Operand, w: Word) {
+        match op {
+            Operand::Reg(r) => self.regs.write(r, w),
+            Operand::Row(h, word) => *self.pair.bank_mut(h).word_mut(word) = w,
+        }
+    }
+
+    /// Execute one micro-op on the given bank side. `hw_maddsub` gates the
+    /// §6.2 dual-write ops.
+    pub fn exec(&mut self, op: &MicroOp, side: Half, hw_maddsub: bool) -> Result<()> {
+        if op.needs_hw_opt() && !hw_maddsub {
+            bail!("dual-write op {op:?} requires the hw-opt PIM ALU augmentation");
+        }
+        match *op {
+            MicroOp::Mov { dst, src } => {
+                let v = self.load(src, side);
+                self.store(dst, v);
+            }
+            MicroOp::Add { dst, a, b, sub } => {
+                let (va, vb) = (self.load(a, side), self.load(b, side));
+                let mut out = [0.0; LANES];
+                for l in 0..LANES {
+                    out[l] = if sub { va[l] - vb[l] } else { va[l] + vb[l] };
+                }
+                self.store(dst, out);
+            }
+            MicroOp::Madd { dst, a, b, imm } => {
+                let (va, vb) = (self.load(a, side), self.load(b, side));
+                let mut out = [0.0; LANES];
+                for l in 0..LANES {
+                    out[l] = va[l] + imm * vb[l];
+                }
+                self.store(dst, out);
+            }
+            MicroOp::Mul { dst, a, b } => {
+                let (va, vb) = (self.load(a, side), self.load(b, side));
+                let mut out = [0.0; LANES];
+                for l in 0..LANES {
+                    out[l] = va[l] * vb[l];
+                }
+                self.store(dst, out);
+            }
+            MicroOp::Fma { dst, a, b, sub } => {
+                let (vd, va, vb) = (self.load(dst, side), self.load(a, side), self.load(b, side));
+                let mut out = [0.0; LANES];
+                for l in 0..LANES {
+                    out[l] = if sub { vd[l] - va[l] * vb[l] } else { vd[l] + va[l] * vb[l] };
+                }
+                self.store(dst, out);
+            }
+            MicroOp::AddSub { dst_add, dst_sub, a, b } => {
+                let (va, vb) = (self.load(a, side), self.load(b, side));
+                let mut oa = [0.0; LANES];
+                let mut os = [0.0; LANES];
+                for l in 0..LANES {
+                    oa[l] = va[l] + vb[l];
+                    os[l] = va[l] - vb[l];
+                }
+                self.store(dst_add, oa);
+                self.store(dst_sub, os);
+            }
+            MicroOp::MaddSub { dst_add, dst_sub, a, b, imm } => {
+                let (va, vb) = (self.load(a, side), self.load(b, side));
+                let mut oa = [0.0; LANES];
+                let mut os = [0.0; LANES];
+                for l in 0..LANES {
+                    let t = imm * vb[l];
+                    oa[l] = va[l] + t;
+                    os[l] = va[l] - t;
+                }
+                self.store(dst_add, oa);
+                self.store(dst_sub, os);
+            }
+            MicroOp::Shift { dst, src, amt } => {
+                let v = self.regs.read(src);
+                let mut out = [0.0; LANES];
+                for l in 0..LANES {
+                    let from = (l as isize - amt as isize).rem_euclid(LANES as isize) as usize;
+                    out[l] = v[from];
+                }
+                self.regs.write(dst, out);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit() -> UnitState {
+        let mut u = UnitState::new(16, 4);
+        for l in 0..LANES {
+            u.pair.even.set(0, l, l as f32);
+            u.pair.odd.set(0, l, 10.0 + l as f32);
+        }
+        u
+    }
+
+    #[test]
+    fn mov_row_to_reg_and_back() {
+        let mut u = unit();
+        u.exec(
+            &MicroOp::Mov { dst: Operand::Reg(3), src: Operand::Row(Half::Even, 0) },
+            Half::Even,
+            false,
+        )
+        .unwrap();
+        assert_eq!(u.regs.read(3)[5], 5.0);
+        u.exec(
+            &MicroOp::Mov { dst: Operand::Row(Half::Odd, 1), src: Operand::Reg(3) },
+            Half::Odd,
+            false,
+        )
+        .unwrap();
+        assert_eq!(u.pair.odd.get(1, 5), 5.0);
+    }
+
+    #[test]
+    fn madd_lanewise() {
+        let mut u = unit();
+        u.exec(
+            &MicroOp::Madd {
+                dst: Operand::Reg(0),
+                a: Operand::Row(Half::Even, 0),
+                b: Operand::Row(Half::Odd, 0),
+                imm: -2.0,
+            },
+            Half::Even,
+            false,
+        )
+        .unwrap();
+        // lane l: l - 2*(10+l) = -20 - l
+        for l in 0..LANES {
+            assert_eq!(u.regs.read(0)[l], -20.0 - l as f32);
+        }
+    }
+
+    #[test]
+    fn maddsub_requires_hw_opt() {
+        let mut u = unit();
+        let op = MicroOp::MaddSub {
+            dst_add: Operand::Reg(0),
+            dst_sub: Operand::Reg(1),
+            a: Operand::Row(Half::Even, 0),
+            b: Operand::Row(Half::Odd, 0),
+            imm: 1.0,
+        };
+        assert!(u.exec(&op, Half::Even, false).is_err());
+        u.exec(&op, Half::Even, true).unwrap();
+        for l in 0..LANES {
+            assert_eq!(u.regs.read(0)[l], l as f32 + 10.0 + l as f32);
+            assert_eq!(u.regs.read(1)[l], l as f32 - (10.0 + l as f32));
+        }
+    }
+
+    #[test]
+    fn shift_rotates_lanes() {
+        let mut u = unit();
+        u.exec(
+            &MicroOp::Mov { dst: Operand::Reg(0), src: Operand::Row(Half::Even, 0) },
+            Half::Even,
+            false,
+        )
+        .unwrap();
+        u.exec(&MicroOp::Shift { dst: 1, src: 0, amt: 2 }, Half::Even, false).unwrap();
+        // dst[l] = src[l-2 mod 8]
+        assert_eq!(u.regs.read(1)[2], 0.0);
+        assert_eq!(u.regs.read(1)[0], 6.0);
+    }
+
+    #[test]
+    fn add_sub_variant() {
+        let mut u = unit();
+        u.exec(
+            &MicroOp::Add {
+                dst: Operand::Reg(2),
+                a: Operand::Row(Half::Odd, 0),
+                b: Operand::Row(Half::Even, 0),
+                sub: true,
+            },
+            Half::Odd,
+            false,
+        )
+        .unwrap();
+        for l in 0..LANES {
+            assert_eq!(u.regs.read(2)[l], 10.0);
+        }
+    }
+}

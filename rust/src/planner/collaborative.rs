@@ -1,0 +1,279 @@
+//! Plan construction and evaluation: GPU-only vs collaborative GPU+PIM
+//! (paper §5.1) with the performance/data-movement models of §4.4.1/Fig 18.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::fft::{is_pow2, log2};
+use crate::gpu_model::{babelstream_bw_bytes_per_ns, gpu_bytes_moved, gpu_time_ns, kernel_count};
+use crate::metrics::DataMovement;
+use crate::routines::OptLevel;
+
+use super::TileModel;
+
+/// Candidate PIM-FFT-Tile sizes considered by the offline table. 2^5 through
+/// 2^12 covers every N ≤ 2^30 while keeping the GPU factor within its
+/// kernel-count budget (see module tests).
+pub const TILE_CANDIDATES: [usize; 8] =
+    [1 << 5, 1 << 6, 1 << 7, 1 << 8, 1 << 9, 1 << 10, 1 << 11, 1 << 12];
+
+/// What the coordinator should run for one FFT shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    /// Single- or multi-kernel GPU execution (N below the collaboration
+    /// threshold, or no valid tile).
+    GpuOnly,
+    /// GPU computes size-`m1` column FFTs + twiddles; PIM runs the size-`m2`
+    /// row-FFT tile (batch m1 per request).
+    Collaborative { m1: usize, m2: usize },
+}
+
+/// A chosen plan for (n, batch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollabPlan {
+    pub n: usize,
+    pub batch: usize,
+    pub kind: PlanKind,
+    pub opt: OptLevel,
+}
+
+impl fmt::Display for CollabPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            PlanKind::GpuOnly => {
+                write!(f, "FFT n={} batch={}: GPU-only", self.n, self.batch)
+            }
+            PlanKind::Collaborative { m1, m2 } => write!(
+                f,
+                "FFT n={} batch={}: GPU(m1={}) + PIM-FFT-Tile(m2={}, {})",
+                self.n, self.batch, m1, m2, self.opt
+            ),
+        }
+    }
+}
+
+/// Model-predicted outcome of a plan vs the GPU-only baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanEval {
+    pub gpu_only_ns: f64,
+    pub plan_ns: f64,
+    pub movement_base: DataMovement,
+    pub movement_plan: DataMovement,
+    /// Fraction of butterflies offloaded to PIM (Fig 18 secondary axis).
+    pub offload_fraction: f64,
+}
+
+impl PlanEval {
+    pub fn speedup(&self) -> f64 {
+        self.gpu_only_ns / self.plan_ns
+    }
+
+    pub fn movement_savings(&self) -> f64 {
+        self.movement_plan.savings_vs(&self.movement_base)
+    }
+}
+
+/// The §5.1 planner: owns the offline tile table for one (system, opt).
+pub struct Planner {
+    sys: SystemConfig,
+    tiles: TileModel,
+}
+
+impl Planner {
+    /// Planner at a given optimization level (`OptLevel::SwHw` + a hw-opt
+    /// system = full Pimacolaba).
+    pub fn with_opt(sys: &SystemConfig, opt: OptLevel) -> Self {
+        Self { sys: sys.clone(), tiles: TileModel::new(sys, opt) }
+    }
+
+    /// Pimacolaba defaults: sw-hw-opt when the system has the ALU
+    /// augmentation, sw-opt otherwise.
+    pub fn new(sys: &SystemConfig) -> Self {
+        let opt = if sys.pim.hw_maddsub { OptLevel::SwHw } else { OptLevel::Sw };
+        Self::with_opt(sys, opt)
+    }
+
+    pub fn sys(&self) -> &SystemConfig {
+        &self.sys
+    }
+
+    pub fn opt(&self) -> OptLevel {
+        self.tiles.opt()
+    }
+
+    /// Valid tile sizes for N under the §5.1 kernel-count rule.
+    pub fn valid_tiles(&self, n: usize) -> Vec<usize> {
+        let k_gpu = kernel_count(n, self.sys.gpu.lds_max_fft);
+        TILE_CANDIDATES
+            .iter()
+            .copied()
+            .filter(|&m2| {
+                m2 < n && n % m2 == 0 && m2 <= self.sys.max_strided_fft() && {
+                    let m1 = n / m2;
+                    m1 >= 2 && kernel_count(m1, self.sys.gpu.lds_max_fft) + 1 <= k_gpu
+                }
+            })
+            .collect()
+    }
+
+    /// Choose the plan for (n, batch) — PIM only where the GPU is already
+    /// decomposing (n > LDS), tiles ranked by offline efficiency.
+    pub fn plan(&mut self, n: usize, batch: usize) -> CollabPlan {
+        assert!(is_pow2(n) && n >= 2, "FFT size must be a power of two >= 2");
+        let opt = self.tiles.opt();
+        if n <= self.sys.gpu.lds_max_fft {
+            // §5.2.1: single-kernel GPU FFTs are already efficient.
+            return CollabPlan { n, batch, kind: PlanKind::GpuOnly, opt };
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for m2 in self.valid_tiles(n) {
+            if let Ok(eff) = self.tiles.efficiency(m2) {
+                if best.map_or(true, |(b, _)| eff > b) {
+                    best = Some((eff, m2));
+                }
+            }
+        }
+        match best {
+            Some((_, m2)) => CollabPlan {
+                n,
+                batch,
+                kind: PlanKind::Collaborative { m1: n / m2, m2 },
+                opt,
+            },
+            None => CollabPlan { n, batch, kind: PlanKind::GpuOnly, opt },
+        }
+    }
+
+    /// Model-evaluate a plan (speedup + data movement vs GPU-only).
+    pub fn evaluate(&mut self, plan: &CollabPlan) -> Result<PlanEval> {
+        let (n, batch) = (plan.n, plan.batch);
+        let gpu_only_ns = gpu_time_ns(n, batch, &self.sys);
+        let movement_base = DataMovement::gpu_only(gpu_bytes_moved(n, batch, &self.sys));
+        match plan.kind {
+            PlanKind::GpuOnly => Ok(PlanEval {
+                gpu_only_ns,
+                plan_ns: gpu_only_ns,
+                movement_base,
+                movement_plan: movement_base,
+                offload_fraction: 0.0,
+            }),
+            PlanKind::Collaborative { m1, m2 } => {
+                // GPU component: k(m1) passes over the whole signal (column
+                // FFTs + fused twiddle multiply).
+                let k1 = kernel_count(m1, self.sys.gpu.lds_max_fft) as f64;
+                let gpu_bytes = 16.0 * n as f64 * batch as f64 * k1;
+                let gpu_part_ns = gpu_bytes / babelstream_bw_bytes_per_ns(&self.sys);
+                // PIM component: batch × m1 row FFTs of size m2.
+                let tile_ffts = batch * m1;
+                let pim_ns = self.tiles.pim_time_ns(m2, tile_ffts)?;
+                let cmd_bytes = self.tiles.cmd_bytes(m2, tile_ffts)?;
+                Ok(PlanEval {
+                    gpu_only_ns,
+                    plan_ns: gpu_part_ns + pim_ns,
+                    movement_base,
+                    movement_plan: DataMovement { gpu_bytes, pim_cmd_bytes: cmd_bytes },
+                    offload_fraction: log2(m2) as f64 / log2(n) as f64,
+                })
+            }
+        }
+    }
+
+    /// Fig 10's subject: offload the *entire* FFT to PIM (pim-base style)
+    /// and compare against the GPU model.
+    pub fn whole_fft_eval(&mut self, n: usize, batch: usize) -> Result<PlanEval> {
+        let gpu_only_ns = gpu_time_ns(n, batch, &self.sys);
+        let pim_ns = self.tiles.pim_time_ns(n, batch)?;
+        let cmd_bytes = self.tiles.cmd_bytes(n, batch)?;
+        Ok(PlanEval {
+            gpu_only_ns,
+            plan_ns: pim_ns,
+            movement_base: DataMovement::gpu_only(gpu_bytes_moved(n, batch, &self.sys)),
+            movement_plan: DataMovement { gpu_bytes: 0.0, pim_cmd_bytes: cmd_bytes },
+            offload_fraction: 1.0,
+        })
+    }
+
+    /// Access to the underlying tile table (figures, benches).
+    pub fn tiles_mut(&mut self) -> &mut TileModel {
+        &mut self.tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sizes_stay_on_gpu() {
+        // §5.2.1: below 2^13 the GPU runs one kernel; PIM is not invoked.
+        let sys = SystemConfig::baseline();
+        let mut p = Planner::new(&sys);
+        for logn in [5u32, 8, 12] {
+            let plan = p.plan(1 << logn, 64);
+            assert_eq!(plan.kind, PlanKind::GpuOnly, "2^{logn}");
+        }
+    }
+
+    #[test]
+    fn collaboration_starts_at_2p13() {
+        let sys = SystemConfig::baseline();
+        let mut p = Planner::new(&sys);
+        let plan = p.plan(1 << 13, 64);
+        match plan.kind {
+            PlanKind::Collaborative { m1, m2 } => {
+                assert_eq!(m1 * m2, 1 << 13);
+                assert!(m1 <= sys.gpu.lds_max_fft, "GPU factor must be single-kernel");
+            }
+            _ => panic!("expected collaboration at 2^13"),
+        }
+    }
+
+    #[test]
+    fn kernel_count_rule_holds_up_to_2p30() {
+        // §5.1: total kernels (GPU + PIM) never exceeds GPU-only kernels.
+        let sys = SystemConfig::baseline();
+        let mut p = Planner::new(&sys);
+        for logn in 13..=30 {
+            let n = 1usize << logn;
+            let plan = p.plan(n, 4);
+            if let PlanKind::Collaborative { m1, .. } = plan.kind {
+                let total = kernel_count(m1, sys.gpu.lds_max_fft) + 1;
+                assert!(total <= kernel_count(n, sys.gpu.lds_max_fft), "2^{logn}");
+            } else {
+                panic!("expected collaboration at 2^{logn}");
+            }
+        }
+    }
+
+    #[test]
+    fn valid_tiles_respect_divisibility() {
+        let sys = SystemConfig::baseline();
+        let p = Planner::new(&sys);
+        for m2 in p.valid_tiles(1 << 13) {
+            assert_eq!((1 << 13) % m2, 0);
+        }
+    }
+
+    #[test]
+    fn evaluation_reports_savings() {
+        let sys = SystemConfig::baseline();
+        let mut p = Planner::new(&sys);
+        let plan = p.plan(1 << 13, 1 << 10);
+        let eval = p.evaluate(&plan).unwrap();
+        // Two GPU kernels became one + command traffic: savings ∈ (1.5, 2].
+        let s = eval.movement_savings();
+        assert!(s > 1.5 && s <= 2.0, "savings {s}");
+        assert!(eval.offload_fraction > 0.0 && eval.offload_fraction < 1.0);
+    }
+
+    #[test]
+    fn whole_fft_offload_mostly_loses() {
+        // Fig 10's premise: pim-base slows down except tiny sizes.
+        let sys = SystemConfig::baseline();
+        let mut p = Planner::with_opt(&sys, OptLevel::Base);
+        let big = p.whole_fft_eval(1 << 14, 1 << 14).unwrap();
+        assert!(big.speedup() < 1.0, "2^14 whole-offload should lose: {}", big.speedup());
+    }
+}

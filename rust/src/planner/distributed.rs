@@ -1,0 +1,119 @@
+//! Distributed FFT modeling (paper §7.1 "Distributed FFT"): sizes beyond one
+//! GPU's memory split across G GPUs; PIM accelerates the GPU-local batched
+//! FFT passes while the inter-GPU all-to-all (transpose) is untouched —
+//! "resultant communication between GPUs can eat into the overall speedup
+//! that PIM can provide".
+//!
+//! Model: the distributed four-step runs one local pass per factor plus an
+//! all-to-all exchanging the full (N·16-byte) dataset per decomposition
+//! level, at the interconnect bandwidth. Pimacolaba applies to each local
+//! pass exactly as in the single-GPU planner.
+
+use anyhow::Result;
+
+use crate::fft::{is_pow2, log2};
+
+use super::{PlanKind, Planner};
+
+/// Interconnect description for the multi-GPU model.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Per-GPU all-to-all bandwidth, bytes/ns (e.g. ≈0.35 for a 2.8 Tb/s
+    /// Infinity-Fabric-class link set).
+    pub alltoall_bw_bytes_per_ns: f64,
+}
+
+impl Interconnect {
+    pub fn infinity_fabric() -> Self {
+        Self { alltoall_bw_bytes_per_ns: 0.35e3 * 1e-3 * 1000.0 }
+    }
+}
+
+/// Outcome of the distributed model.
+#[derive(Debug, Clone, Copy)]
+pub struct DistributedEval {
+    pub gpus: usize,
+    /// GPU-only local compute time across levels (per GPU), ns.
+    pub local_gpu_ns: f64,
+    /// PIM-collaborative local compute time, ns.
+    pub local_pim_ns: f64,
+    /// All-to-all communication time, ns.
+    pub comm_ns: f64,
+}
+
+impl DistributedEval {
+    /// End-to-end speedup PIM delivers once communication is included.
+    pub fn speedup(&self) -> f64 {
+        (self.local_gpu_ns + self.comm_ns) / (self.local_pim_ns + self.comm_ns)
+    }
+
+    /// Speedup on the local portions alone (the single-GPU Pimacolaba win).
+    pub fn local_speedup(&self) -> f64 {
+        self.local_gpu_ns / self.local_pim_ns
+    }
+}
+
+/// Evaluate a size-`n` FFT distributed over `gpus` GPUs.
+///
+/// Decomposition: `n = local^levels` with `local = n / gpus` per level
+/// handled as batched local FFTs (batch = per-GPU share), one all-to-all
+/// between levels.
+pub fn distributed_eval(
+    planner: &mut Planner,
+    n: usize,
+    gpus: usize,
+    link: Interconnect,
+) -> Result<DistributedEval> {
+    assert!(is_pow2(n) && is_pow2(gpus) && gpus >= 2);
+    let per_gpu_elems = n / gpus;
+    // Standard distributed four-step: every level is a batched local FFT of
+    // a size the single-GPU planner handles well (2^13 — deep enough to
+    // collaborate, small enough for full PIM occupancy), with an all-to-all
+    // re-shuffle between levels.
+    let local_n = (1usize << 13).min(per_gpu_elems);
+    let local_batch = (per_gpu_elems / local_n).max(1);
+    let levels = (log2(n) as usize).div_ceil(log2(local_n) as usize).max(2);
+    let mut local_gpu = 0.0;
+    let mut local_pim = 0.0;
+    for _ in 0..levels {
+        let plan = planner.plan(local_n, local_batch.max(1));
+        let ev = planner.evaluate(&plan)?;
+        local_gpu += ev.gpu_only_ns;
+        local_pim += match plan.kind {
+            PlanKind::GpuOnly => ev.gpu_only_ns,
+            PlanKind::Collaborative { .. } => ev.plan_ns,
+        };
+    }
+    // Each level exchanges the per-GPU share once.
+    let bytes_per_gpu = 16.0 * per_gpu_elems as f64;
+    let comm = (levels - 1) as f64 * bytes_per_gpu / link.alltoall_bw_bytes_per_ns;
+    Ok(DistributedEval { gpus, local_gpu_ns: local_gpu, local_pim_ns: local_pim, comm_ns: comm })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn communication_erodes_but_does_not_erase_speedup() {
+        // §7.1: PIM still helps GPU-local portions; communication eats into
+        // the overall win.
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut p = Planner::new(&sys);
+        let ev = distributed_eval(&mut p, 1 << 28, 8, Interconnect::infinity_fabric()).unwrap();
+        assert!(ev.local_speedup() > 1.0, "local {}", ev.local_speedup());
+        assert!(ev.speedup() > 1.0, "e2e {}", ev.speedup());
+        assert!(ev.speedup() < ev.local_speedup(), "comm must erode the win");
+    }
+
+    #[test]
+    fn slower_links_erode_more() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut p = Planner::new(&sys);
+        let fast = distributed_eval(&mut p, 1 << 28, 8, Interconnect { alltoall_bw_bytes_per_ns: 1000.0 }).unwrap();
+        let slow = distributed_eval(&mut p, 1 << 28, 8, Interconnect { alltoall_bw_bytes_per_ns: 10.0 }).unwrap();
+        assert!(slow.speedup() < fast.speedup());
+        assert!((slow.local_speedup() - fast.local_speedup()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! Collaborative decomposition planning (paper §5.1, Fig 11).
+//!
+//! The planner augments the GPU's LDS decomposition: a size-N FFT becomes a
+//! GPU component (batched size-M1 column FFTs + inter-factor twiddles) and a
+//! **PIM-FFT-Tile** (batched size-M2 row FFTs on the in-memory units), chosen
+//! so the total kernel count does not exceed the GPU-only plan and, among
+//! valid tiles, the offline tile-efficiency table picks the fastest
+//! (§5.1: "we pick the most efficient PIM-FFT-Tile … analyzed once, offline").
+
+mod collaborative;
+mod distributed;
+mod tile;
+
+pub use collaborative::{CollabPlan, PlanEval, PlanKind, Planner};
+pub use distributed::{distributed_eval, DistributedEval, Interconnect};
+pub use tile::TileModel;

@@ -1,0 +1,118 @@
+//! Offline PIM-FFT-Tile cost model: times one broadcast round of the strided
+//! routine per (tile size, opt level) and scales by occupancy — the table
+//! §5.1 consults when picking tiles, and the source of Figs 10/16/19 numbers.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::pim::{ExecReport, TimingSink};
+use crate::routines::{emit_strided, OptLevel};
+
+/// Cached per-round reports for one (system, opt level).
+pub struct TileModel {
+    sys: SystemConfig,
+    opt: OptLevel,
+    cache: HashMap<usize, ExecReport>,
+}
+
+impl TileModel {
+    pub fn new(sys: &SystemConfig, opt: OptLevel) -> Self {
+        Self { sys: sys.clone(), opt, cache: HashMap::new() }
+    }
+
+    pub fn opt(&self) -> OptLevel {
+        self.opt
+    }
+
+    pub fn sys(&self) -> &SystemConfig {
+        &self.sys
+    }
+
+    /// Per-round execution report for a size-`n` tile (one broadcast stream
+    /// advancing `concurrent_ffts()` FFTs). Cached.
+    pub fn round_report(&mut self, n: usize) -> Result<&ExecReport> {
+        if !self.cache.contains_key(&n) {
+            let mut sink = TimingSink::new(&self.sys).unchecked();
+            emit_strided(n, &self.sys, self.opt, &mut sink)?;
+            self.cache.insert(n, sink.finish());
+        }
+        Ok(&self.cache[&n])
+    }
+
+    /// Wall-clock ns for `ffts` size-`n` FFTs on PIM (whole batches of
+    /// rounds; partial rounds cost a full round — the §4.2.3 memory-wastage
+    /// effect).
+    pub fn pim_time_ns(&mut self, n: usize, ffts: usize) -> Result<f64> {
+        let capacity = self.sys.concurrent_ffts();
+        let rounds = ffts.div_ceil(capacity) as f64;
+        Ok(self.round_report(n)?.time.total_ns() * rounds)
+    }
+
+    /// GPU→PIM command/constant traffic in bytes for `ffts` tiles
+    /// (footnote 3): every command is issued on every engaged
+    /// pseudo-channel's command bus each round.
+    pub fn cmd_bytes(&mut self, n: usize, ffts: usize) -> Result<f64> {
+        let capacity = self.sys.concurrent_ffts();
+        let rounds = ffts.div_ceil(capacity);
+        let per_pc = capacity / self.sys.hbm.total_pcs();
+        let pcs_engaged = ffts.min(capacity).div_ceil(per_pc).min(self.sys.hbm.total_pcs());
+        let cmds = self.cache[&n].commands; // round_report must have run
+        Ok(cmds as f64 * rounds as f64 * pcs_engaged as f64 * self.sys.pim.cmd_bytes)
+    }
+
+    /// Tile efficiency: GPU time / PIM time at full occupancy (the offline
+    /// table's ranking key; >1 means PIM wins the tile — Fig 16's y-axis).
+    pub fn efficiency(&mut self, n: usize) -> Result<f64> {
+        let cap = self.sys.concurrent_ffts();
+        let gpu = crate::gpu_model::gpu_time_ns(n, cap, &self.sys);
+        Ok(gpu / self.pim_time_ns(n, cap)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_scale_with_batch() {
+        let sys = SystemConfig::baseline();
+        let mut tm = TileModel::new(&sys, OptLevel::Base);
+        let cap = sys.concurrent_ffts();
+        let one = tm.pim_time_ns(32, cap).unwrap();
+        let two = tm.pim_time_ns(32, cap + 1).unwrap();
+        assert!((two / one - 2.0).abs() < 1e-12, "partial round costs a full round");
+    }
+
+    #[test]
+    fn small_tile_is_most_efficient() {
+        // Fig 16: 2^5 is the sweet spot; efficiency decays with tile size.
+        let sys = SystemConfig::baseline();
+        let mut tm = TileModel::new(&sys, OptLevel::Base);
+        let e32 = tm.efficiency(32).unwrap();
+        let e1024 = tm.efficiency(1 << 10).unwrap();
+        assert!(e32 > e1024, "e32={e32} e1024={e1024}");
+    }
+
+    #[test]
+    fn swhw_beats_base_everywhere() {
+        let base_sys = SystemConfig::baseline();
+        let hw_sys = SystemConfig::baseline().with_hw_opt();
+        let mut base = TileModel::new(&base_sys, OptLevel::Base);
+        let mut swhw = TileModel::new(&hw_sys, OptLevel::SwHw);
+        for n in [32usize, 64, 256, 1024] {
+            assert!(swhw.efficiency(n).unwrap() > base.efficiency(n).unwrap(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn cmd_bytes_scale_with_engagement() {
+        let sys = SystemConfig::baseline();
+        let mut tm = TileModel::new(&sys, OptLevel::Base);
+        tm.round_report(32).unwrap();
+        let full = tm.cmd_bytes(32, sys.concurrent_ffts()).unwrap();
+        let tiny = tm.cmd_bytes(32, 64).unwrap();
+        assert!(full > tiny);
+    }
+}

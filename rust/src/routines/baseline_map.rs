@@ -1,0 +1,228 @@
+//! Command stream for the Fig 9 **baseline mapping** straw design: one FFT
+//! spans the 8 SIMD lanes of consecutive words.
+//!
+//! Consequences the stream exposes (§4.2.2):
+//! * stages with butterfly stride < 8 interact across lanes → pim-SHIFT
+//!   pairs around every compute group (and shifts are exactly what DRAM
+//!   metal layers make expensive);
+//! * twiddle factors differ per lane → scalar command immediates cannot be
+//!   used; (cos, sin) vectors load from a reserved table region (pim-MOV +
+//!   row pressure + the memory wastage §4.2.3 mentions).
+//!
+//! This routine exists purely for the Fig 9 timing comparison; Pimacolaba
+//! ships the strided mapping. The stream is structurally valid (register
+//! and row constraints hold) and is costed by the same executor, but only
+//! the strided routines carry the functional (numeric) contract.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::dram::{Half, LANES};
+use crate::fft::{is_pow2, log2};
+use crate::mapping::BaselineMapping;
+use crate::pim::{CmdKind, MicroOp, Operand, PimCommand, Sink, VecSink};
+
+/// Emit the baseline-mapping stream advancing the unit's 8 resident FFTs of
+/// size `n` through all stages.
+pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Result<()> {
+    assert!(is_pow2(n) && n >= 2);
+    let mapping = BaselineMapping::new(n, sys)?;
+    let wpf = mapping.words_per_fft() as u32;
+    let data_words = (LANES as u32) * wpf;
+    let wpr = sys.hbm.words_per_row() as u32;
+
+    let mov_pair = |dst: (u8, u8), we: u32, wo: u32| {
+        PimCommand::pair(
+            CmdKind::Mov,
+            MicroOp::Mov { dst: Operand::Reg(dst.0), src: Operand::Row(Half::Even, we) },
+            MicroOp::Mov { dst: Operand::Reg(dst.1), src: Operand::Row(Half::Odd, wo) },
+        )
+    };
+    let store_pair = |src: (u8, u8), we: u32, wo: u32| {
+        PimCommand::pair(
+            CmdKind::Mov,
+            MicroOp::Mov { dst: Operand::Row(Half::Even, we), src: Operand::Reg(src.0) },
+            MicroOp::Mov { dst: Operand::Row(Half::Odd, wo), src: Operand::Reg(src.1) },
+        )
+    };
+
+    for s in 0..log2(n) {
+        let half = 1u32 << s;
+        // Twiddle vectors for this stage live after the data region.
+        let tw_word = data_words + s * wpf;
+        if half < LANES as u32 {
+            // Cross-lane stage: same twiddle/lane pattern for every word —
+            // one vector load per stage, shifts around every word's compute.
+            sink.accept(&mov_pair((2, 3), tw_word, tw_word))?;
+            for slot in 0..LANES as u32 {
+                for w in 0..wpf {
+                    let (we, wo) = (slot * wpf + w, slot * wpf + w);
+                    sink.accept(&mov_pair((0, 1), we, wo))?;
+                    // Align x2 lanes onto x1 lanes.
+                    sink.accept(&PimCommand::pair(
+                        CmdKind::Shift,
+                        MicroOp::Shift { dst: 4, src: 0, amt: -(half as i8) },
+                        MicroOp::Shift { dst: 5, src: 1, amt: -(half as i8) },
+                    ))?;
+                    // t = ω·x2 (vector twiddle): tr = d·c − e·s, ti = d·s + e·c.
+                    sink.accept(&PimCommand::pair(
+                        CmdKind::Madd,
+                        MicroOp::Mul { dst: Operand::Reg(6), a: Operand::Reg(4), b: Operand::Reg(2) },
+                        MicroOp::Mul { dst: Operand::Reg(7), a: Operand::Reg(4), b: Operand::Reg(3) },
+                    ))?;
+                    sink.accept(&PimCommand::pair(
+                        CmdKind::Madd,
+                        MicroOp::Fma { dst: Operand::Reg(6), a: Operand::Reg(5), b: Operand::Reg(3), sub: true },
+                        MicroOp::Fma { dst: Operand::Reg(7), a: Operand::Reg(5), b: Operand::Reg(2), sub: false },
+                    ))?;
+                    // y1/y2 in x1-aligned lanes, then restore alignment.
+                    sink.accept(&PimCommand::pair(
+                        CmdKind::Add,
+                        MicroOp::Add { dst: Operand::Reg(8), a: Operand::Reg(0), b: Operand::Reg(6), sub: true },
+                        MicroOp::Add { dst: Operand::Reg(9), a: Operand::Reg(1), b: Operand::Reg(7), sub: true },
+                    ))?;
+                    sink.accept(&PimCommand::pair(
+                        CmdKind::Add,
+                        MicroOp::Add { dst: Operand::Reg(0), a: Operand::Reg(0), b: Operand::Reg(6), sub: false },
+                        MicroOp::Add { dst: Operand::Reg(1), a: Operand::Reg(1), b: Operand::Reg(7), sub: false },
+                    ))?;
+                    sink.accept(&PimCommand::pair(
+                        CmdKind::Shift,
+                        MicroOp::Shift { dst: 10, src: 8, amt: half as i8 },
+                        MicroOp::Shift { dst: 11, src: 9, amt: half as i8 },
+                    ))?;
+                    // Merge y1 (low lanes) and shifted y2 (high lanes).
+                    sink.accept(&PimCommand::pair(
+                        CmdKind::Add,
+                        MicroOp::Add { dst: Operand::Reg(0), a: Operand::Reg(0), b: Operand::Reg(10), sub: false },
+                        MicroOp::Add { dst: Operand::Reg(1), a: Operand::Reg(1), b: Operand::Reg(11), sub: false },
+                    ))?;
+                    sink.accept(&store_pair((0, 1), we, wo))?;
+                }
+            }
+        } else {
+            // Word-aligned stage: the same twiddle word applies to word
+            // position p of every block; loop p-outer to amortize its load.
+            let half_w = half / LANES as u32;
+            let m_w = half_w * 2;
+            for p in 0..half_w {
+                sink.accept(&mov_pair((2, 3), tw_word + p % wpf, tw_word + p % wpf))?;
+                for slot in 0..LANES as u32 {
+                    let base = slot * wpf;
+                    let mut blk = 0u32;
+                    while blk + m_w <= wpf {
+                        let w1 = base + blk + p;
+                        let w2 = w1 + half_w;
+                        let cross_row = w1 / wpr != w2 / wpr;
+                        if cross_row {
+                            // Stage x1 into registers so no command touches
+                            // two rows of one bank.
+                            sink.accept(&mov_pair((0, 1), w1, w1))?;
+                        }
+                        let (a, b) = if cross_row {
+                            (Operand::Reg(0), Operand::Reg(1))
+                        } else {
+                            (Operand::Row(Half::Even, w1), Operand::Row(Half::Odd, w1))
+                        };
+                        // t = ω·x2 with vector twiddle.
+                        sink.accept(&PimCommand::pair(
+                            CmdKind::Madd,
+                            MicroOp::Mul { dst: Operand::Reg(6), a: Operand::Row(Half::Even, w2), b: Operand::Reg(2) },
+                            MicroOp::Mul { dst: Operand::Reg(7), a: Operand::Row(Half::Even, w2), b: Operand::Reg(3) },
+                        ))?;
+                        sink.accept(&PimCommand::pair(
+                            CmdKind::Madd,
+                            MicroOp::Fma { dst: Operand::Reg(6), a: Operand::Row(Half::Odd, w2), b: Operand::Reg(3), sub: true },
+                            MicroOp::Fma { dst: Operand::Reg(7), a: Operand::Row(Half::Odd, w2), b: Operand::Reg(2), sub: false },
+                        ))?;
+                        sink.accept(&PimCommand::pair(
+                            CmdKind::Add,
+                            MicroOp::Add { dst: Operand::Row(Half::Even, w2), a, b: Operand::Reg(6), sub: true },
+                            MicroOp::Add { dst: Operand::Row(Half::Odd, w2), a: b, b: Operand::Reg(7), sub: true },
+                        ))?;
+                        if cross_row {
+                            sink.accept(&PimCommand::pair(
+                                CmdKind::Add,
+                                MicroOp::Add { dst: Operand::Reg(0), a, b: Operand::Reg(6), sub: false },
+                                MicroOp::Add { dst: Operand::Reg(1), a: b, b: Operand::Reg(7), sub: false },
+                            ))?;
+                            sink.accept(&store_pair((0, 1), w1, w1))?;
+                        } else {
+                            sink.accept(&PimCommand::pair(
+                                CmdKind::Add,
+                                MicroOp::Add { dst: Operand::Row(Half::Even, w1), a, b: Operand::Reg(6), sub: false },
+                                MicroOp::Add { dst: Operand::Row(Half::Odd, w1), a: b, b: Operand::Reg(7), sub: false },
+                            ))?;
+                        }
+                        blk += m_w;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Materialize the baseline stream (tests).
+pub fn baseline_stream(n: usize, sys: &SystemConfig) -> Result<Vec<PimCommand>> {
+    let mut sink = VecSink::default();
+    emit_baseline(n, sys, &mut sink)?;
+    Ok(sink.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::Executor;
+    use crate::routines::{strided_stream, OptLevel};
+
+    #[test]
+    fn stream_is_structurally_valid() {
+        let sys = SystemConfig::baseline();
+        for n in [8usize, 32, 64, 512] {
+            let stream = baseline_stream(n, &sys).unwrap();
+            Executor::new(&sys).time_stream(&stream).unwrap();
+        }
+    }
+
+    #[test]
+    fn small_sizes_are_shift_dominated() {
+        // §4.4.2 / Fig 9: only the baseline mapping pays pim-SHIFT, heavily
+        // so for small FFTs.
+        let sys = SystemConfig::baseline();
+        let rep = Executor::new(&sys).time_stream(&baseline_stream(32, &sys).unwrap()).unwrap();
+        assert!(rep.shift_ops > 0);
+        // 2 of the 8 slots of every cross-lane word group are shifts; with
+        // aligned stages and row overhead mixed in, ≥15% of time is shifting
+        // (and Fig 9 shows exactly this burden vanishing under the strided
+        // mapping).
+        assert!(rep.time.shift_ns > 0.15 * rep.time.total_ns(), "shift share too small");
+    }
+
+    #[test]
+    fn shift_share_drops_with_size() {
+        let sys = SystemConfig::baseline();
+        let exec = Executor::new(&sys);
+        let share = |n: usize| {
+            let r = exec.time_stream(&baseline_stream(n, &sys).unwrap()).unwrap();
+            r.time.shift_ns / r.time.total_ns()
+        };
+        assert!(share(32) > share(1024), "shift share should drop as N grows");
+    }
+
+    #[test]
+    fn strided_beats_baseline() {
+        // Fig 9: strided is superior across sizes, most at small N.
+        let sys = SystemConfig::baseline();
+        let exec = Executor::new(&sys);
+        for n in [32usize, 256, 1024] {
+            let tb = exec.time_stream(&baseline_stream(n, &sys).unwrap()).unwrap().time.total_ns();
+            let ts = exec
+                .time_stream(&strided_stream(n, &sys, OptLevel::Base).unwrap())
+                .unwrap()
+                .time
+                .total_ns();
+            assert!(tb > ts, "n={n}: baseline {tb} should exceed strided {ts}");
+        }
+    }
+}

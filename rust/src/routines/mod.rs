@@ -1,0 +1,64 @@
+//! PIM FFT routine generators: translate a radix-2 butterfly schedule into
+//! broadcast PIM command streams for the strided mapping (§4.3 Fig 7), at
+//! the four optimization levels the paper evaluates:
+//!
+//! * [`OptLevel::Base`]   — `pim-base`: 6 pim-MADD per butterfly (Fig 14
+//!   right), plus the register moves and row activations §4.4.1 accounts.
+//! * [`OptLevel::Sw`]     — §6.1 twiddle-aware orchestration: ω ∈ {±1, ±j}
+//!   butterflies become 4 pim-ADD.
+//! * [`OptLevel::Hw`]     — §6.2 MADD+SUB ALU augmentation: 4 compute ops
+//!   per butterfly regardless of twiddle.
+//! * [`OptLevel::SwHw`]   — §6.3 combined: 2 ops (trivial ω), 3 (±1/√2
+//!   symmetric), 4 (general).
+//!
+//! Command-slot discipline (see DESIGN.md §5): per command, each bank
+//! performs at most one column *read* and (with the hw-opt dual write port
+//! feeding the open row) at most two column *writes*; the even/odd micro-ops
+//! of one broadcast command retire in one slot when `bank_pair_fused`.
+//!
+//! A separate generator emits the Fig 9 *baseline-mapping* stream (cross-lane
+//! pim-SHIFTs + vector twiddle loads); it exists only for that comparison.
+
+mod baseline_map;
+mod stats;
+mod strided_routine;
+
+pub use baseline_map::{baseline_stream, emit_baseline};
+pub use stats::RoutineStats;
+pub use strided_routine::{emit_strided, strided_stream};
+
+/// The four optimization levels of the paper's evaluation (Figs 10/16/17).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptLevel {
+    /// pim-base (§4.3).
+    Base,
+    /// sw-opt (§6.1).
+    Sw,
+    /// hw-opt (§6.2) — requires `PimConfig::hw_maddsub`.
+    Hw,
+    /// sw-hw-opt (§6.3) — requires `PimConfig::hw_maddsub`.
+    SwHw,
+}
+
+impl OptLevel {
+    pub const ALL: [OptLevel; 4] = [OptLevel::Base, OptLevel::Sw, OptLevel::Hw, OptLevel::SwHw];
+
+    pub fn needs_hw(self) -> bool {
+        matches!(self, OptLevel::Hw | OptLevel::SwHw)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptLevel::Base => "pim-base",
+            OptLevel::Sw => "sw-opt",
+            OptLevel::Hw => "hw-opt",
+            OptLevel::SwHw => "sw-hw-opt",
+        }
+    }
+}
+
+impl std::fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

@@ -1,0 +1,155 @@
+//! Artifact registry: parses `artifacts/manifest.json` (emitted by aot.py)
+//! and lazily compiles the HLO variants the coordinator requests.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::client::{CompiledFft, Runtime};
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `batched_fft`: forward FFT along the last axis of f32[b, n].
+    Fft,
+    /// `gpu_component`: column FFTs (size m1) + inter-factor twiddle;
+    /// output rows are PIM-FFT-Tile inputs (paper Fig 11).
+    GpuPart,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub b: usize,
+    /// GPU factor (GpuPart only).
+    pub m1: Option<usize>,
+    /// PIM tile (GpuPart only).
+    pub m2: Option<usize>,
+    pub path: PathBuf,
+}
+
+/// Loaded manifest + compiled-executable cache.
+pub struct Registry {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+    runtime: Runtime,
+    cache: HashMap<PathBuf, CompiledFft>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json` and attach a PJRT runtime.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let version = json.field("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut specs = Vec::new();
+        for a in json.field("artifacts")?.as_arr()? {
+            let kind = match a.field("kind")?.as_str()? {
+                "fft" => ArtifactKind::Fft,
+                "gpu_part" => ArtifactKind::GpuPart,
+                other => bail!("unknown artifact kind '{other}'"),
+            };
+            specs.push(ArtifactSpec {
+                kind,
+                n: a.field("n")?.as_usize()?,
+                b: a.field("b")?.as_usize()?,
+                m1: a.get("m1").map(|v| v.as_usize()).transpose()?,
+                m2: a.get("m2").map(|v| v.as_usize()).transpose()?,
+                path: dir.join(a.field("path")?.as_str()?),
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), specs, runtime: Runtime::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Find the batched-FFT artifact for size `n`.
+    pub fn fft_spec(&self, n: usize) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.kind == ArtifactKind::Fft && s.n == n)
+    }
+
+    /// Find a gpu-component artifact for (n, m1).
+    pub fn gpu_part_spec(&self, n: usize, m1: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == ArtifactKind::GpuPart && s.n == n && s.m1 == Some(m1))
+    }
+
+    /// GPU factors available for collaborative execution of size `n`.
+    pub fn gpu_part_m1s(&self, n: usize) -> Vec<usize> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::GpuPart && s.n == n)
+            .filter_map(|s| s.m1)
+            .collect()
+    }
+
+    /// Compile (or fetch the cached) executable for a spec.
+    ///
+    /// Shape contracts: `Fft` artifacts take f32[b, n]; `GpuPart` artifacts
+    /// use the transpose-free column layout f32[b·m2, m1] (see
+    /// model.gpu_component_cols — the rust side owns the gathers because
+    /// jitted transposes mis-execute on xla_extension 0.5.1).
+    pub fn compiled(&mut self, spec: &ArtifactSpec) -> Result<&CompiledFft> {
+        if !self.cache.contains_key(&spec.path) {
+            let (rows, cols) = match spec.kind {
+                ArtifactKind::Fft => (spec.b, spec.n),
+                ArtifactKind::GpuPart => {
+                    let m1 = spec.m1.ok_or_else(|| anyhow!("gpu_part without m1"))?;
+                    let m2 = spec.m2.ok_or_else(|| anyhow!("gpu_part without m2"))?;
+                    (spec.b * m2, m1)
+                }
+            };
+            let exe = self.runtime.compile_hlo_file(&spec.path, rows, cols)?;
+            self.cache.insert(spec.path.clone(), exe);
+        }
+        Ok(&self.cache[&spec.path])
+    }
+
+    /// Compile every artifact up front (server warmup — avoids paying the
+    /// first-request XLA compile spike on the serving path).
+    pub fn warmup(&mut self) -> Result<()> {
+        for spec in self.specs.clone() {
+            self.compiled(&spec)?;
+        }
+        Ok(())
+    }
+
+    /// Convenience: compiled batched-FFT executable for size `n`.
+    pub fn fft(&mut self, n: usize) -> Result<&CompiledFft> {
+        let spec = self
+            .fft_spec(n)
+            .ok_or_else(|| anyhow!("no fft artifact for n={n} in {}", self.dir.display()))?
+            .clone();
+        self.compiled(&spec)
+    }
+
+    /// Convenience: compiled gpu-component executable for (n, m1).
+    pub fn gpu_part(&mut self, n: usize, m1: usize) -> Result<&CompiledFft> {
+        let spec = self
+            .gpu_part_spec(n, m1)
+            .ok_or_else(|| anyhow!("no gpu_part artifact for n={n}, m1={m1}"))?
+            .clone();
+        self.compiled(&spec)
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, lowered by
+//! `python/compile/aot.py` from the L2 jax model + L1 Pallas kernel) and
+//! executes them on the XLA CPU client from the rust request path.
+//!
+//! Python runs only at build time; after `make artifacts` the coordinator is
+//! a self-contained binary. Interchange is **HLO text** — see aot.py and
+//! /opt/xla-example/README.md for why serialized protos are rejected by
+//! xla_extension 0.5.1.
+
+mod artifact;
+mod client;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, Registry};
+pub use client::Runtime;

@@ -1,0 +1,125 @@
+//! Micro-benchmark harness (offline stand-in for criterion).
+//!
+//! Every `rust/benches/*.rs` target uses [`Bench`] to time its figure
+//! generator with warmup + repeated samples and prints mean/p50/p99, then
+//! prints the regenerated paper rows themselves.
+
+use std::time::Instant;
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Stats {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Nearest-rank percentile.
+        let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
+        s[rank.clamp(1, s.len()) - 1]
+    }
+
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} mean {:>12}  p50 {:>12}  p99 {:>12}  ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.percentile_ns(50.0)),
+            fmt_ns(self.percentile_ns(99.0)),
+            self.samples_ns.len(),
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner: warmup, then timed samples.
+pub struct Bench {
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Warmup iterations before sampling.
+    pub warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Keep suites fast; figure generators are deterministic so variance
+        // is scheduling noise only.
+        Self { samples: 10, warmup: 2 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { samples: 3, warmup: 1 }
+    }
+
+    /// Time `f`, preventing the result from being optimized out.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats { name: name.to_string(), samples_ns: samples };
+        stats.report();
+        stats
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats { name: "t".into(), samples_ns: (1..=100).map(|x| x as f64).collect() };
+        assert_eq!(s.percentile_ns(50.0), 50.0);
+        assert_eq!(s.percentile_ns(99.0), 99.0);
+        assert!((s.mean_ns() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench { samples: 5, warmup: 1 };
+        let mut calls = 0;
+        let s = b.run("noop", || calls += 1);
+        assert_eq!(s.samples_ns.len(), 5);
+        assert_eq!(calls, 6);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(10.0).ends_with("ns"));
+        assert!(fmt_ns(10_000.0).ends_with("µs"));
+        assert!(fmt_ns(10_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(10_000_000_000.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser (offline stand-in for clap): `--key value`,
+//! `--flag`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of arguments (program name already stripped).
+    /// `known_flags` lists options that take no value.
+    pub fn parse(args: impl IntoIterator<Item = String>, known_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{key} expects a value"))?;
+                    out.options.insert(key.to_string(), v);
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short options are not supported: {a}");
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from), flags)
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = parse("serve --port 8080 --verbose trace.json --rate=2.5", &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["serve", "trace.json"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse("--port", &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--n 64", &[]).unwrap();
+        assert_eq!(a.get_usize("n", 1).unwrap(), 64);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!(parse("--n x", &[]).unwrap().get_usize("n", 1).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities standing in for crates unavailable in the
+//! offline build environment: a JSON parser/emitter (`serde_json`), a
+//! deterministic RNG (`rand`), a micro-benchmark harness (`criterion`), a
+//! property-test helper (`proptest`), and a CLI argument parser (`clap`).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,52 @@
+//! Lightweight property-based testing (offline stand-in for proptest).
+//!
+//! [`forall`] runs a property over many seeded random cases and reports the
+//! failing seed so a failure is reproducible with `case(seed)`.
+
+use super::rng::Rng;
+
+/// Number of cases per property (kept moderate; the suites run many
+/// properties).
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` over `cases` deterministic RNG streams. Panics with the failing
+/// case index+seed on the first violation.
+pub fn forall_cases(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xA11CE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// [`forall_cases`] with [`DEFAULT_CASES`].
+pub fn forall(name: &str, prop: impl FnMut(&mut Rng)) {
+    forall_cases(name, DEFAULT_CASES, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall("u64 parity", |r| {
+            let x = r.next_u64();
+            assert_eq!(x % 2, x & 1);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_case() {
+        forall("always fails", |_| panic!("boom"));
+    }
+}

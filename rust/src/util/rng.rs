@@ -1,0 +1,138 @@
+//! Deterministic pseudo-random numbers (splitmix64 + xoshiro256**).
+//!
+//! Workload generation and property tests need reproducible randomness; this
+//! is the standard xoshiro256** generator seeded via splitmix64.
+
+/// Deterministic RNG. Same seed ⇒ same stream, on every platform.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 expansion of the seed into the xoshiro state.
+        let mut x = seed;
+        let mut next = move || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)`. Panics if `bound == 0`.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // Lemire's multiply-shift rejection method.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn signed_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32 * 2.0 - 1.0
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Random power of two in `[2^lo_log, 2^hi_log]`.
+    pub fn pow2(&mut self, lo_log: u32, hi_log: u32) -> usize {
+        1usize << self.range(lo_log as usize, hi_log as usize + 1)
+    }
+
+    /// Exponentially-distributed f64 with the given mean (for Poisson
+    /// arrival processes in the workload generator).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Rng::new(1);
+        for bound in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn signed_f32_in_range() {
+        let mut r = Rng::new(2);
+        let mut lo = f32::MAX;
+        let mut hi = f32::MIN;
+        for _ in 0..10_000 {
+            let x = r.signed_f32();
+            assert!((-1.0..1.0).contains(&x));
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        assert!(lo < -0.9 && hi > 0.9, "poor coverage: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn pow2_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let p = r.pow2(5, 10);
+            assert!(p >= 32 && p <= 1024 && p.is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn exp_mean_roughly_right() {
+        let mut r = Rng::new(4);
+        let mean: f64 = (0..20_000).map(|_| r.exp(3.0)).sum::<f64>() / 20_000.0;
+        assert!((mean - 3.0).abs() < 0.15, "{mean}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Deep numeric integration of the collaborative pipeline across sizes,
+//! tiles, and optimization levels — host GPU-reference path (no artifacts
+//! needed), the PIM component always on the simulated in-memory units.
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{Batch, FftRequest, PimTileExecutor, Scheduler};
+use pimacolaba::fft::{fft_soa, FourStep, SoaVec};
+use pimacolaba::routines::OptLevel;
+
+/// Manual four-step with the PIM simulator as step 4 — independent of the
+/// scheduler, pinning the algebra the scheduler must implement.
+fn collaborative_fft(
+    x: &SoaVec,
+    m1: usize,
+    m2: usize,
+    sys: &SystemConfig,
+    opt: OptLevel,
+) -> SoaVec {
+    let n = x.len();
+    let fs = FourStep::new(n, m1, m2);
+    let z = fs.gpu_component_ref(x);
+    let tile = PimTileExecutor::new(sys, opt, m2).unwrap();
+    let rows: Vec<SoaVec> = (0..m1)
+        .map(|k2| SoaVec::new(z.re[k2 * m2..(k2 + 1) * m2].to_vec(), z.im[k2 * m2..(k2 + 1) * m2].to_vec()))
+        .collect();
+    let rows_out = tile.run(&rows).unwrap();
+    let mut o = SoaVec::zeros(n);
+    for (k2, row) in rows_out.iter().enumerate() {
+        for k1 in 0..m2 {
+            let (r, i) = row.get(k1);
+            o.set(k1 * m1 + k2, r, i);
+        }
+    }
+    o
+}
+
+#[test]
+fn manual_fourstep_with_pim_tiles_all_opts() {
+    for opt in OptLevel::ALL {
+        let sys = if opt.needs_hw() {
+            SystemConfig::baseline().with_hw_opt()
+        } else {
+            SystemConfig::baseline()
+        };
+        for (n, m1, m2) in [(1 << 10, 1 << 5, 1 << 5), (1 << 12, 1 << 6, 1 << 6), (1 << 13, 1 << 8, 1 << 5)] {
+            let x = SoaVec::random(n, (n + m1) as u64);
+            let got = collaborative_fft(&x, m1, m2, &sys, opt);
+            let want = fft_soa(&x);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 3e-3 * (n as f32).sqrt(), "{opt} n={n} m2={m2}: diff {d}");
+        }
+    }
+}
+
+#[test]
+fn scheduler_matches_manual_composition() {
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let mut sched = Scheduler::new(&sys, None);
+    sched.verify = true;
+    for n in [1 << 13, 1 << 14] {
+        let batch = Batch { n, requests: vec![FftRequest::random(1, n, 2, n as u64)] };
+        let responses = sched.execute(batch).unwrap();
+        assert!(responses[0].metrics.max_error.unwrap() < 0.5, "n={n}");
+    }
+}
+
+#[test]
+fn impulse_and_tone_through_collaborative_path() {
+    // Structured signals with exactly-known spectra.
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let n = 1 << 10;
+    // Impulse → flat spectrum of ones.
+    let mut x = SoaVec::zeros(n);
+    x.set(0, 1.0, 0.0);
+    let y = collaborative_fft(&x, 32, 32, &sys, OptLevel::SwHw);
+    for k in 0..n {
+        assert!((y.re[k] - 1.0).abs() < 1e-3, "bin {k}: {}", y.re[k]);
+        assert!(y.im[k].abs() < 1e-3);
+    }
+    // Pure tone at k0 → single peak of magnitude n.
+    let k0 = 137;
+    let mut x = SoaVec::zeros(n);
+    for t in 0..n {
+        let ang = 2.0 * std::f64::consts::PI * (k0 * t % n) as f64 / n as f64;
+        x.set(t, ang.cos() as f32, ang.sin() as f32);
+    }
+    let y = collaborative_fft(&x, 32, 32, &sys, OptLevel::SwHw);
+    assert!((y.re[k0] - n as f32).abs() < 0.25);
+    for k in 0..n {
+        if k != k0 {
+            let mag = (y.re[k].powi(2) + y.im[k].powi(2)).sqrt();
+            assert!(mag < 0.25, "leakage at bin {k}: {mag}");
+        }
+    }
+}
+
+#[test]
+fn linearity_through_scheduler() {
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let mut sched = Scheduler::new(&sys, None);
+    let n = 1 << 13;
+    let a = SoaVec::random(n, 1);
+    let b = SoaVec::random(n, 2);
+    let sum = SoaVec::new(
+        a.re.iter().zip(&b.re).map(|(x, y)| x + y).collect(),
+        a.im.iter().zip(&b.im).map(|(x, y)| x + y).collect(),
+    );
+    let run = |s: &mut Scheduler, x: SoaVec| {
+        s.execute(Batch { n, requests: vec![FftRequest::new(0, n, vec![x])] })
+            .unwrap()
+            .remove(0)
+            .spectra
+            .remove(0)
+    };
+    let fa = run(&mut sched, a);
+    let fb = run(&mut sched, b);
+    let fsum = run(&mut sched, sum);
+    for i in 0..n {
+        assert!((fsum.re[i] - fa.re[i] - fb.re[i]).abs() < 0.2, "bin {i}");
+        assert!((fsum.im[i] - fa.im[i] - fb.im[i]).abs() < 0.2, "bin {i}");
+    }
+}

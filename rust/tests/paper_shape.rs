@@ -1,0 +1,118 @@
+//! Paper-shape regression suite: asserts the *shape* of every reproduced
+//! result — who wins, where crossovers fall, which ratios hold — against the
+//! bands the paper reports. Absolute nanoseconds are not asserted (our
+//! substrate is a simulator, not the authors' MI210 testbed); see
+//! EXPERIMENTS.md for the measured-vs-paper numbers.
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::figures::*;
+use pimacolaba::planner::{PlanKind, Planner};
+use pimacolaba::routines::OptLevel;
+
+#[test]
+fn fig4_bandwidth_boundedness() {
+    let t = fig04_bandwidth(false);
+    // Utilization grows along both axes and approaches BabelStream.
+    let max = t.column("bw_vs_babelstream").into_iter().fold(0.0f64, f64::max);
+    assert!(max > 0.9 && max <= 1.1, "{max}");
+}
+
+#[test]
+fn fig5_boost_range() {
+    let t = fig05_boost();
+    let boosts = t.column("boost");
+    let max = boosts.iter().copied().fold(0.0f64, f64::max);
+    let min = boosts.iter().copied().fold(f64::MAX, f64::min);
+    // §3.2: "considerable memory bandwidth boost over GPU (up to 12x)".
+    assert!(min >= 1.0, "PIM never below GPU bandwidth: {min}");
+    // Half-rate commercial tops out ~8x; the full-rate "potential" series
+    // shows the #banks/2 bound (16x) bracketing the paper's quoted 12x.
+    assert!((8.0..=16.5).contains(&max), "max boost {max}");
+    // The baseline commercial point is ≈4×.
+    let i = t
+        .rows
+        .iter()
+        .position(|r| r[0] == "512" && r[1] == "256" && r[2] == "half-rate")
+        .unwrap();
+    assert!((t.value(i, "boost") - 4.0).abs() < 0.2);
+}
+
+#[test]
+fn fig10_average_slowdown_near_half() {
+    let t = fig10_pimbase(false).unwrap();
+    let s = t.column("speedup");
+    let avg = s.iter().sum::<f64>() / s.len() as f64;
+    // Paper: "average slowdown of about 52%" ⇒ mean speedup ≈ 0.48; our
+    // command model lands the same regime.
+    assert!((0.3..0.6).contains(&avg), "mean pim-base speedup {avg}");
+    // 2^5 is the only (near-)winning size.
+    assert!(s[0] > 0.9);
+    assert!(s.iter().skip(2).all(|&x| x < 0.7));
+}
+
+#[test]
+fn fig12_vs_fig10_collaboration_wins() {
+    // The central claim: judicious collaboration strictly dominates
+    // whole-FFT offload wherever both apply.
+    let whole = fig10_pimbase(false).unwrap();
+    let colab = fig12_pimcolab(false).unwrap();
+    for ls in 13..=18u32 {
+        let iw = whole.lookup("log2n", &ls.to_string()).unwrap();
+        let ic = colab.lookup("log2n", &ls.to_string()).unwrap();
+        assert!(
+            colab.value(ic, "speedup") > whole.value(iw, "speedup"),
+            "2^{ls}: colab must beat whole-offload"
+        );
+    }
+}
+
+#[test]
+fn fig17_pimacolaba_band_and_ordering() {
+    let t = fig17_pimacolaba(false).unwrap();
+    let max_of = |opt: &str| {
+        t.rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r[1] == opt)
+            .map(|(i, _)| t.value(i, "speedup"))
+            .fold(0.0f64, f64::max)
+    };
+    let (sw, hw, shw) = (max_of("sw-opt"), max_of("hw-opt"), max_of("sw-hw-opt"));
+    // Paper: 1.16 / 1.24 / 1.38.
+    assert!(sw < hw && hw < shw, "{sw} {hw} {shw}");
+    assert!((1.2..1.5).contains(&shw), "Pimacolaba max {shw}");
+}
+
+#[test]
+fn fig18_savings_band() {
+    let t = fig18_movement(false).unwrap();
+    let s = t.column("dm_savings");
+    let avg = s.iter().sum::<f64>() / s.len() as f64;
+    // Paper: 1.48–2.76× (avg 1.81×), ≈33% butterflies offloaded.
+    assert!(s.iter().all(|&x| (1.3..3.0).contains(&x)));
+    assert!((1.4..2.2).contains(&avg), "avg {avg}");
+}
+
+#[test]
+fn fig19_sensitivity_directions() {
+    let t = fig19_sensitivity(false).unwrap();
+    let max_cfg = |cfg: &str| {
+        let i = t.rows.iter().position(|r| r[0] == cfg && r[1] == "0").unwrap();
+        t.value(i, "speedup_vs_gpu")
+    };
+    let base = max_cfg("baseline+hw");
+    // §6.6: RF×2 → 1.41; RB×2 → 1.38 (ties baseline); unit/bank → 1.64.
+    assert!(max_cfg("rf32+hw") >= base * 0.99);
+    assert!(max_cfg("rb2k+hw") >= base * 0.99);
+    assert!(max_cfg("pim-per-bank+hw") > base * 1.15);
+}
+
+#[test]
+fn planner_tile_shrinks_where_fig11_says() {
+    // Fig 11: collaboration shifts the kernel-count boundaries; tiles only
+    // appear past the single-kernel boundary (2^12).
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let mut p = Planner::with_opt(&sys, OptLevel::SwHw);
+    assert!(matches!(p.plan(1 << 12, 64).kind, PlanKind::GpuOnly));
+    assert!(matches!(p.plan(1 << 13, 64).kind, PlanKind::Collaborative { .. }));
+}

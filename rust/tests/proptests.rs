@@ -1,0 +1,238 @@
+//! Property-based tests (util::prop) over the core invariants:
+//! FFT algebra, mapping round-trips, routine correctness across random
+//! shapes/opt-levels/configurations, planner rules, and batcher integrity.
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{Batch, Batcher, FftRequest, Scheduler};
+use pimacolaba::fft::{bit_reverse_permutation, dft_naive, fft_soa, FourStep, SoaVec};
+use pimacolaba::gpu_model::{gpu_bytes_moved, kernel_count, lds_decompose};
+use pimacolaba::mapping::StridedMapping;
+use pimacolaba::pim::{Executor, UnitState};
+use pimacolaba::planner::{PlanKind, Planner};
+use pimacolaba::routines::{strided_stream, OptLevel};
+use pimacolaba::util::prop::{forall, forall_cases};
+use pimacolaba::util::Rng;
+
+fn rand_soa(rng: &mut Rng, n: usize) -> SoaVec {
+    SoaVec::new(
+        (0..n).map(|_| rng.signed_f32() * 4.0).collect(),
+        (0..n).map(|_| rng.signed_f32() * 4.0).collect(),
+    )
+}
+
+#[test]
+fn prop_fft_matches_naive_dft() {
+    forall_cases("fft == naive DFT", 48, |rng| {
+        let n = rng.pow2(0, 8);
+        let x = rand_soa(rng, n);
+        let got = fft_soa(&x);
+        let want = dft_naive(&x);
+        let d = got.max_abs_diff(&want);
+        assert!(d < 2e-3 * (n as f32).sqrt().max(1.0), "n={n} diff={d}");
+    });
+}
+
+#[test]
+fn prop_fft_parseval() {
+    forall("Parseval", |rng| {
+        let n = rng.pow2(1, 10);
+        let x = rand_soa(rng, n);
+        let y = fft_soa(&x);
+        let lhs = y.energy() / n as f64;
+        assert!((lhs - x.energy()).abs() < 1e-3 * x.energy().max(1.0));
+    });
+}
+
+#[test]
+fn prop_bitrev_involution_and_fixedpoints() {
+    forall("bitrev involution", |rng| {
+        let n = rng.pow2(0, 16);
+        let p = bit_reverse_permutation(n);
+        // Involution and permutation.
+        let mut seen = vec![false; n];
+        for i in 0..n {
+            assert_eq!(p[p[i]], i);
+            assert!(!seen[p[i]]);
+            seen[p[i]] = true;
+        }
+        // 0 and n-1 are always fixed points.
+        assert_eq!(p[0], 0);
+        if n > 1 {
+            assert_eq!(p[n - 1], n - 1);
+        }
+    });
+}
+
+#[test]
+fn prop_fourstep_any_factorization() {
+    forall_cases("four-step == direct FFT for every factorization", 40, |rng| {
+        let logn = rng.range(2, 11) as u32;
+        let log_m1 = rng.range(1, logn as usize) as u32;
+        let n = 1usize << logn;
+        let fs = FourStep::new(n, 1 << log_m1, 1 << (logn - log_m1));
+        let x = rand_soa(rng, n);
+        let d = fs.fft_ref(&x).max_abs_diff(&fft_soa(&x));
+        assert!(d < 3e-3 * (n as f32).sqrt(), "n={n} m1=2^{log_m1} diff={d}");
+    });
+}
+
+#[test]
+fn prop_strided_mapping_roundtrip() {
+    forall("strided load/read_out round-trip is bitrev", |rng| {
+        let sys = SystemConfig::baseline();
+        let n = rng.pow2(1, 8);
+        let m = StridedMapping::new(n, &sys).unwrap();
+        let lanes = rng.range(1, 9);
+        let ffts: Vec<SoaVec> = (0..lanes).map(|_| rand_soa(rng, n)).collect();
+        let mut unit = UnitState::new(16, n);
+        m.load(&ffts, &mut unit).unwrap();
+        let perm = bit_reverse_permutation(n);
+        for (l, f) in ffts.iter().enumerate() {
+            let out = m.read_out(&unit, l);
+            for w in 0..n {
+                assert_eq!(out.re[w], f.re[perm[w]]);
+                assert_eq!(out.im[w], f.im[perm[w]]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_routines_correct_across_configs_and_opts() {
+    // The heavyweight one: random (size, opt, config) → simulated PIM FFT
+    // must equal the reference FFT on every lane.
+    forall_cases("PIM routine == reference FFT", 32, |rng| {
+        let n = rng.pow2(1, 8);
+        let opt = *rng.choose(&OptLevel::ALL);
+        let mut sys = match rng.range(0, 3) {
+            0 => SystemConfig::baseline(),
+            1 => SystemConfig::rf32(),
+            _ => SystemConfig::rb2k(),
+        };
+        if opt.needs_hw() {
+            sys = sys.with_hw_opt();
+        }
+        let mapping = StridedMapping::new(n, &sys).unwrap();
+        let stream = strided_stream(n, &sys, opt).unwrap();
+        let ffts: Vec<SoaVec> = (0..8).map(|_| rand_soa(rng, n)).collect();
+        let mut unit = UnitState::new(sys.pim.regs_per_unit, n);
+        mapping.load(&ffts, &mut unit).unwrap();
+        Executor::new(&sys).run_stream(&stream, &mut unit).unwrap();
+        for (l, f) in ffts.iter().enumerate() {
+            let d = mapping.read_out(&unit, l).max_abs_diff(&fft_soa(f));
+            assert!(d < 3e-3 * (n as f32).sqrt(), "{opt} n={n} cfg={} lane={l}: {d}", sys.name);
+        }
+    });
+}
+
+#[test]
+fn prop_routine_command_counts() {
+    // Op-count invariants: compute ops per butterfly bounded by the paper's
+    // per-class costs; strided never shifts; slots ≥ commands.
+    forall_cases("routine op counts", 48, |rng| {
+        let n = rng.pow2(1, 10);
+        let opt = *rng.choose(&OptLevel::ALL);
+        let sys = if opt.needs_hw() {
+            SystemConfig::baseline().with_hw_opt()
+        } else {
+            SystemConfig::baseline()
+        };
+        let stream = strided_stream(n, &sys, opt).unwrap();
+        let rep = Executor::new(&sys).time_stream(&stream).unwrap();
+        let bflies = (n / 2) as f64 * n.trailing_zeros() as f64;
+        let ops = rep.compute_ops() as f64 / bflies;
+        let (lo, hi) = match opt {
+            OptLevel::Base => (6.0, 6.0),
+            OptLevel::Sw => (4.0, 6.0),
+            OptLevel::Hw => (4.0, 4.0),
+            OptLevel::SwHw => (2.0, 4.0),
+        };
+        assert!(ops >= lo - 1e-9 && ops <= hi + 1e-9, "{opt} n={n}: {ops}");
+        assert_eq!(rep.shift_ops, 0);
+        assert!(rep.slots >= rep.commands);
+    });
+}
+
+#[test]
+fn prop_kernel_count_and_decompose() {
+    forall("LDS decomposition invariants", |rng| {
+        let n = rng.pow2(1, 30);
+        let lds = rng.pow2(8, 14);
+        let k = kernel_count(n, lds);
+        let f = lds_decompose(n, lds);
+        assert_eq!(f.len(), k);
+        assert_eq!(f.iter().product::<usize>(), n);
+        assert!(f.iter().all(|&x| x <= lds && x >= 2 || k == 1));
+        // Monotonicity: more LDS never needs more kernels.
+        assert!(kernel_count(n, lds * 2) <= k);
+    });
+}
+
+#[test]
+fn prop_planner_rules() {
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let mut p = Planner::new(&sys);
+    forall_cases("planner respects §5.1 rules", 64, |rng| {
+        let n = rng.pow2(5, 30);
+        let batch = rng.pow2(0, 14);
+        let plan = p.plan(n, batch);
+        match plan.kind {
+            PlanKind::GpuOnly => {
+                // PIM skipped only below the decomposition threshold (or if
+                // no tile was valid — never the case for powers of two here).
+                assert!(n <= sys.gpu.lds_max_fft, "n={n} should collaborate");
+            }
+            PlanKind::Collaborative { m1, m2 } => {
+                assert_eq!(m1 * m2, n);
+                assert!(m2 <= sys.max_strided_fft());
+                let k_total = kernel_count(m1, sys.gpu.lds_max_fft) + 1;
+                assert!(k_total <= kernel_count(n, sys.gpu.lds_max_fft));
+            }
+        }
+        // Evaluation conserves movement: plan never moves more GPU bytes
+        // than the baseline.
+        let ev = p.evaluate(&plan).unwrap();
+        assert!(ev.movement_plan.gpu_bytes <= ev.movement_base.gpu_bytes + 1e-9);
+        assert!(ev.movement_base.gpu_bytes == gpu_bytes_moved(n, batch, &sys));
+    });
+}
+
+#[test]
+fn prop_batcher_preserves_requests() {
+    forall("batcher loses nothing, groups by n", |rng| {
+        let mut b = Batcher::new();
+        let count = rng.range(1, 40);
+        let mut total_signals = 0;
+        for id in 0..count {
+            let n = rng.pow2(4, 10);
+            let batch = rng.range(1, 5);
+            total_signals += batch;
+            b.push(FftRequest::random(id as u64, n, batch, id as u64));
+        }
+        let batches = b.flush();
+        let sum: usize = batches.iter().map(|x| x.total_signals()).sum();
+        assert_eq!(sum, total_signals);
+        for batch in &batches {
+            assert!(batch.requests.iter().all(|r| r.n == batch.n));
+        }
+        assert_eq!(b.pending(), 0);
+    });
+}
+
+#[test]
+fn prop_scheduler_host_path_always_correct() {
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let mut sched = Scheduler::new(&sys, None);
+    sched.verify = true;
+    forall_cases("scheduler responses verify vs reference", 12, |rng| {
+        let n = rng.pow2(4, 14);
+        let reqs: Vec<FftRequest> = (0..rng.range(1, 4))
+            .map(|i| FftRequest::random(i as u64, n, rng.range(1, 3), rng.next_u64()))
+            .collect();
+        let responses = sched.execute(Batch { n, requests: reqs }).unwrap();
+        for r in responses {
+            let err = r.metrics.max_error.unwrap();
+            assert!(err < 0.6, "n={n}: err {err}");
+        }
+    });
+}
