@@ -1,8 +1,9 @@
 //! Ablation bench for the design choices DESIGN.md calls out: what each
 //! modeling/architecture assumption buys, measured on the 2^5 and 2^8
 //! PIM-FFT-Tiles and on the Pimacolaba headline.
+use pimacolaba::backend::FftEngine;
 use pimacolaba::config::SystemConfig;
-use pimacolaba::planner::{Planner, TileModel};
+use pimacolaba::planner::TileModel;
 use pimacolaba::routines::OptLevel;
 
 fn tile_eff(sys: &SystemConfig, n: usize) -> f64 {
@@ -12,12 +13,9 @@ fn tile_eff(sys: &SystemConfig, n: usize) -> f64 {
 }
 
 fn pimacolaba_max(sys: &SystemConfig) -> f64 {
-    let mut p = Planner::new(sys);
+    let mut engine = FftEngine::builder().system(sys).build();
     (13..=24u32)
-        .map(|ls| {
-            let plan = p.plan(1usize << ls, 1 << 12);
-            p.evaluate(&plan).unwrap().speedup()
-        })
+        .map(|ls| engine.plan(1usize << ls, 1 << 12).unwrap().1.speedup())
         .fold(0.0, f64::max)
 }
 

@@ -4,6 +4,7 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{synthetic_trace, FftRequest, Scheduler, Server, ServiceReport};
 use pimacolaba::fft::SoaVec;
@@ -15,15 +16,14 @@ fn run_trace(requests: usize, sizes: &[usize], use_artifacts: bool) -> (ServiceR
     let sys = SystemConfig::baseline().with_hw_opt();
     let server = Server::spawn(
         move || {
-            let registry = if use_artifacts {
-                Registry::load(Path::new("artifacts")).ok().map(|mut r| {
+            let mut builder = FftEngine::builder().system(&sys);
+            if use_artifacts {
+                if let Ok(mut r) = Registry::load(Path::new("artifacts")) {
                     r.warmup().expect("artifact warmup");
-                    r
-                })
-            } else {
-                None
-            };
-            Scheduler::new(&sys, registry)
+                    builder = builder.gpu_backend(Box::new(PjrtGpuBackend::new(r)));
+                }
+            }
+            Scheduler::with_engine(builder.build())
         },
         16,
         Duration::from_millis(2),
@@ -51,7 +51,8 @@ fn run_trace(requests: usize, sizes: &[usize], use_artifacts: bool) -> (ServiceR
 }
 
 fn main() {
-    let have_artifacts = Path::new("artifacts/manifest.json").exists();
+    // PJRT execution needs the artifacts on disk AND the `pjrt` feature.
+    let have_artifacts = cfg!(feature = "pjrt") && Path::new("artifacts/manifest.json").exists();
     for (label, use_art) in [("host-reference-gpu", false), ("pjrt-artifacts", have_artifacts)] {
         if label == "pjrt-artifacts" && !have_artifacts {
             println!("pjrt-artifacts: SKIP (run `make artifacts`)");

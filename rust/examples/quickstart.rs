@@ -6,10 +6,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use pimacolaba::backend::FftEngine;
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::PimTileExecutor;
 use pimacolaba::fft::{fft_soa, SoaVec};
-use pimacolaba::planner::Planner;
 use pimacolaba::routines::OptLevel;
 
 fn main() -> anyhow::Result<()> {
@@ -23,10 +23,10 @@ fn main() -> anyhow::Result<()> {
         sys.concurrent_ffts()
     );
 
-    // 2) Plan a 2^13-point FFT at batch 4096 (Pimacolaba = sw-hw-opt tiles).
-    let mut planner = Planner::new(&sys);
-    let plan = planner.plan(1 << 13, 1 << 12);
-    let eval = planner.evaluate(&plan)?;
+    // 2) Plan a 2^13-point FFT at batch 4096 (Pimacolaba = sw-hw-opt tiles)
+    // through the unified engine (host GPU backend + simulated PIM backend).
+    let mut engine = FftEngine::builder().system(&sys).build();
+    let (plan, eval) = engine.plan(1 << 13, 1 << 12)?;
     println!("\n{plan}");
     println!("  modeled speedup over GPU-only: {:.3}x", eval.speedup());
     println!("  data-movement savings:         {:.3}x", eval.movement_savings());

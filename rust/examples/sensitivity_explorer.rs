@@ -7,8 +7,9 @@
 //! cargo run --release --example sensitivity_explorer
 //! ```
 
+use pimacolaba::backend::FftEngine;
 use pimacolaba::config::SystemConfig;
-use pimacolaba::planner::{Planner, TileModel};
+use pimacolaba::planner::TileModel;
 use pimacolaba::routines::OptLevel;
 
 fn configs() -> Vec<SystemConfig> {
@@ -35,11 +36,11 @@ fn main() -> anyhow::Result<()> {
         let e5 = tm.efficiency(1 << 5)?;
         let e8 = tm.efficiency(1 << 8)?;
         let e10 = tm.efficiency(1 << 10)?;
-        let mut p = Planner::with_opt(&sys, OptLevel::SwHw);
+        let mut engine = FftEngine::builder().system(&sys).opt(OptLevel::SwHw).build();
         let mut max = 0.0f64;
         for ls in 13..=24u32 {
-            let plan = p.plan(1usize << ls, 1 << 12);
-            max = max.max(p.evaluate(&plan)?.speedup());
+            let (_, ev) = engine.plan(1usize << ls, 1 << 12)?;
+            max = max.max(ev.speedup());
         }
         println!("{:<22} {e5:>9.3} {e8:>9.3} {e10:>9.3} {max:>11.3}x", sys.name);
         if best.as_ref().map_or(true, |(b, _)| max > *b) {

@@ -18,20 +18,22 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{synthetic_trace, FftRequest, Scheduler, Server, ServiceReport};
 use pimacolaba::fft::SoaVec;
-use pimacolaba::planner::PlanKind;
 use pimacolaba::runtime::Registry;
 use pimacolaba::util::json::Json;
 use pimacolaba::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = Path::new("artifacts");
-    let have_artifacts = artifacts.join("manifest.json").exists();
+    // PJRT needs the artifacts on disk AND the `pjrt` feature compiled in.
+    let have_artifacts = cfg!(feature = "pjrt") && artifacts.join("manifest.json").exists();
     if !have_artifacts {
-        eprintln!("WARNING: no artifacts/manifest.json — GPU components will use the host reference path.");
-        eprintln!("         run `make artifacts` for the full PJRT pipeline.");
+        eprintln!("WARNING: no artifacts/manifest.json (or built without the `pjrt` feature) —");
+        eprintln!("         GPU components will use the host reference path.");
+        eprintln!("         run `make artifacts` and enable `--features pjrt` for the full PJRT pipeline.");
     }
 
     let sys = SystemConfig::baseline().with_hw_opt();
@@ -47,16 +49,13 @@ fn main() -> anyhow::Result<()> {
     let sys2 = sys.clone();
     let server = Server::spawn(
         move || {
-            let registry = if have_artifacts {
-                {
-                    let mut r = Registry::load(Path::new("artifacts")).expect("artifact registry");
-                    r.warmup().expect("artifact warmup");
-                    Some(r)
-                }
-            } else {
-                None
-            };
-            let mut s = Scheduler::new(&sys2, registry);
+            let mut builder = FftEngine::builder().system(&sys2);
+            if have_artifacts {
+                let mut r = Registry::load(Path::new("artifacts")).expect("artifact registry");
+                r.warmup().expect("artifact warmup");
+                builder = builder.gpu_backend(Box::new(PjrtGpuBackend::new(r)));
+            }
+            let mut s = Scheduler::with_engine(builder.build());
             s.verify = true; // every spectrum checked vs the reference FFT
             s
         },
@@ -132,6 +131,5 @@ fn main() -> anyhow::Result<()> {
     ]);
     std::fs::write("figures/serve_trace_report.json", j.to_string())?;
     println!("wrote figures/serve_trace_report.json");
-    let _ = PlanKind::GpuOnly;
     Ok(())
 }

@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     let sensors = 24;
     let sys = SystemConfig::baseline().with_hw_opt();
     let server = Server::spawn(
-        move || Scheduler::new(&sys, None),
+        move || Scheduler::new(&sys),
         16,
         Duration::from_millis(3),
         128,

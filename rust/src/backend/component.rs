@@ -1,0 +1,75 @@
+//! Units of work a [`super::ComputeBackend`] can cost and execute.
+//!
+//! A [`crate::planner::CollabPlan`] decomposes into at most two components:
+//! the GPU side (a whole FFT, or the four-step column stage) and the PIM side
+//! (the PIM-FFT-Tile batch). Backends advertise costs and execute per
+//! component, so the same plan can be served by the host reference, by the
+//! PJRT runtime, or by the simulated in-memory units without the coordinator
+//! knowing which.
+
+use std::fmt;
+
+use crate::routines::OptLevel;
+
+/// One substrate's share of a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanComponent {
+    /// `batch` complete size-`n` FFTs (a GPU-only plan).
+    FullFft { n: usize, batch: usize },
+    /// Four-step steps 1–3 for `n = m1·m2`: size-`m1` column FFTs plus the
+    /// inter-factor twiddle, for `batch` signals. Output per signal is the
+    /// Z matrix in (k2, n1) row-major layout (see [`crate::fft::FourStep`]).
+    GpuStage { n: usize, m1: usize, m2: usize, batch: usize },
+    /// `count` independent size-`m2` row FFTs (the PIM-FFT-Tile inputs),
+    /// generated/executed at optimization level `opt`.
+    PimTile { m2: usize, count: usize, opt: OptLevel },
+}
+
+impl PlanComponent {
+    /// Length every input signal of this component must have.
+    pub fn input_len(&self) -> usize {
+        match *self {
+            PlanComponent::FullFft { n, .. } | PlanComponent::GpuStage { n, .. } => n,
+            PlanComponent::PimTile { m2, .. } => m2,
+        }
+    }
+
+    /// Number of input signals this component expects.
+    pub fn input_count(&self) -> usize {
+        match *self {
+            PlanComponent::FullFft { batch, .. } | PlanComponent::GpuStage { batch, .. } => batch,
+            PlanComponent::PimTile { count, .. } => count,
+        }
+    }
+}
+
+impl fmt::Display for PlanComponent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            PlanComponent::FullFft { n, batch } => write!(f, "full-fft(n={n}, batch={batch})"),
+            PlanComponent::GpuStage { n, m1, m2, batch } => {
+                write!(f, "gpu-stage(n={n}, m1={m1}, m2={m2}, batch={batch})")
+            }
+            PlanComponent::PimTile { m2, count, opt } => {
+                write!(f, "pim-tile(m2={m2}, count={count}, {opt})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_display() {
+        let c = PlanComponent::GpuStage { n: 64, m1: 8, m2: 8, batch: 3 };
+        assert_eq!(c.input_len(), 64);
+        assert_eq!(c.input_count(), 3);
+        assert!(c.to_string().contains("gpu-stage"));
+        let t = PlanComponent::PimTile { m2: 32, count: 9, opt: OptLevel::Sw };
+        assert_eq!(t.input_len(), 32);
+        assert_eq!(t.input_count(), 9);
+        assert!(t.to_string().contains("sw-opt"));
+    }
+}

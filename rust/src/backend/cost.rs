@@ -1,0 +1,124 @@
+//! Cost estimates and interchangeable GPU cost providers.
+//!
+//! [`CostEstimate`] is the currency every backend's `estimate` half speaks:
+//! modeled wall time plus modeled data movement (the paper's Fig 18 metric).
+//! [`GpuCostModel`] selects which §4.4.1 GPU model prices the GPU-side
+//! components — the paper's analytical bandwidth-bound model (the default:
+//! it is what every paper figure and the planner's numbers are built on) or
+//! the "measured" simulator with occupancy derating and launch overheads.
+
+use crate::config::SystemConfig;
+use crate::gpu_model::{gpu_bytes_moved, gpu_time_ns, measured_time_ns};
+use crate::metrics::DataMovement;
+
+/// Modeled cost of one [`super::PlanComponent`] on one backend.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CostEstimate {
+    /// Modeled execution time, ns.
+    pub time_ns: f64,
+    /// Modeled bytes crossing the GPU↔HBM interface (signal traffic for GPU
+    /// components, command/constant traffic for PIM components).
+    pub movement: DataMovement,
+}
+
+impl CostEstimate {
+    /// Sum of two estimates (sequential composition of components).
+    pub fn plus(&self, other: &CostEstimate) -> CostEstimate {
+        let mut movement = self.movement;
+        movement.add_assign(&other.movement);
+        CostEstimate { time_ns: self.time_ns + other.time_ns, movement }
+    }
+}
+
+/// Which GPU performance model prices GPU-side components.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GpuCostModel {
+    /// Paper §4.4.1: bytes moved / BabelStream bandwidth, compute free.
+    #[default]
+    Analytical,
+    /// The measured-GPU stand-in (occupancy derate + launch overhead,
+    /// reproducing Fig 4/Fig 8 behaviour).
+    Measured,
+}
+
+impl GpuCostModel {
+    /// Modeled time for `batch` size-`n` FFTs on the GPU, ns.
+    pub fn time_ns(self, n: usize, batch: usize, sys: &SystemConfig) -> f64 {
+        match self {
+            GpuCostModel::Analytical => gpu_time_ns(n, batch, sys),
+            GpuCostModel::Measured => measured_time_ns(n, batch, sys),
+        }
+    }
+
+    /// Cost of `batch` complete size-`n` FFTs.
+    pub fn full_fft(self, n: usize, batch: usize, sys: &SystemConfig) -> CostEstimate {
+        CostEstimate {
+            time_ns: self.time_ns(n, batch, sys),
+            movement: DataMovement::gpu_only(gpu_bytes_moved(n, batch, sys)),
+        }
+    }
+
+    /// Cost of the four-step GPU stage for `n = m1·m2`: the column FFTs are
+    /// `batch·m2` size-`m1` FFTs (one pass over the whole signal per m1
+    /// kernel, twiddle multiply fused), so both models price it as that
+    /// batched sub-FFT workload.
+    pub fn gpu_stage(self, n: usize, m1: usize, m2: usize, batch: usize, sys: &SystemConfig) -> CostEstimate {
+        debug_assert_eq!(m1 * m2, n, "gpu stage factors must multiply to n");
+        let sub_batch = batch * m2;
+        CostEstimate {
+            time_ns: self.time_ns(m1, sub_batch, sys),
+            movement: DataMovement::gpu_only(gpu_bytes_moved(m1, sub_batch, sys)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_model::{babelstream_bw_bytes_per_ns, kernel_count, BYTES_PER_ELEM_PASS};
+
+    #[test]
+    fn analytical_full_fft_matches_gpu_model() {
+        let sys = SystemConfig::baseline();
+        let c = GpuCostModel::Analytical.full_fft(1 << 13, 64, &sys);
+        assert_eq!(c.time_ns, gpu_time_ns(1 << 13, 64, &sys));
+        assert_eq!(c.movement.gpu_bytes, gpu_bytes_moved(1 << 13, 64, &sys));
+        assert_eq!(c.movement.pim_cmd_bytes, 0.0);
+    }
+
+    #[test]
+    fn analytical_stage_reproduces_legacy_planner_formula() {
+        // The legacy planner priced the GPU stage as
+        // 16·n·batch·k(m1) / babelstream — the batched sub-FFT view must be
+        // bit-identical (all factors are exact integers in f64).
+        let sys = SystemConfig::baseline();
+        let (n, m1, m2, batch) = (1 << 13, 1 << 8, 1 << 5, 1 << 12);
+        let c = GpuCostModel::Analytical.gpu_stage(n, m1, m2, batch, &sys);
+        let k1 = kernel_count(m1, sys.gpu.lds_max_fft) as f64;
+        let legacy_bytes = BYTES_PER_ELEM_PASS * n as f64 * batch as f64 * k1;
+        assert_eq!(c.movement.gpu_bytes, legacy_bytes);
+        assert_eq!(c.time_ns, legacy_bytes / babelstream_bw_bytes_per_ns(&sys));
+    }
+
+    #[test]
+    fn measured_model_is_slower_on_small_shapes() {
+        let sys = SystemConfig::baseline();
+        let a = GpuCostModel::Analytical.full_fft(1 << 5, 4, &sys);
+        let m = GpuCostModel::Measured.full_fft(1 << 5, 4, &sys);
+        assert!(m.time_ns > a.time_ns, "measured {} <= analytical {}", m.time_ns, a.time_ns);
+        // Movement accounting is model-independent.
+        assert_eq!(m.movement, a.movement);
+    }
+
+    #[test]
+    fn plus_sums_time_and_movement() {
+        let a = CostEstimate { time_ns: 2.0, movement: DataMovement::gpu_only(10.0) };
+        let b = CostEstimate {
+            time_ns: 3.0,
+            movement: DataMovement { gpu_bytes: 0.0, pim_cmd_bytes: 4.0 },
+        };
+        let s = a.plus(&b);
+        assert_eq!(s.time_ns, 5.0);
+        assert_eq!(s.movement.total(), 14.0);
+    }
+}

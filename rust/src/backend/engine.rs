@@ -1,0 +1,336 @@
+//! [`FftEngine`]: the one front door to planning, costing, and executing
+//! FFTs across substrates.
+//!
+//! The engine owns the §5.1 planner plus two [`ComputeBackend`]s — a GPU
+//! backend (host reference or PJRT artifacts) and a PIM backend (simulated
+//! in-memory units) — and a memoized plan cache keyed by
+//! `(n, batch, opt)`, so serve traces with repeated shapes skip re-planning
+//! and re-costing entirely.
+//!
+//! Composition of a collaborative plan (paper Fig 11):
+//!
+//! 1. GPU backend executes [`PlanComponent::GpuStage`] → Z matrices;
+//! 2. each Z row becomes a [`PlanComponent::PimTile`] input on the PIM
+//!    backend;
+//! 3. the engine performs the four-step transpose gather.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SystemConfig;
+use crate::fft::{is_pow2, log2, SoaVec};
+use crate::planner::{CollabPlan, PlanEval, PlanKind, Planner};
+use crate::routines::OptLevel;
+
+use super::{ComputeBackend, GpuCostModel, HostFftBackend, PimSimBackend, PlanComponent};
+
+/// Outcome of one [`FftEngine::run`]: spectra plus the plan and its model
+/// evaluation (the numbers every paper figure is built from).
+#[derive(Debug)]
+pub struct EngineRun {
+    pub plan: CollabPlan,
+    pub eval: PlanEval,
+    /// One spectrum per input signal, natural frequency order.
+    pub outputs: Vec<SoaVec>,
+}
+
+/// Builder for [`FftEngine`] — see [`FftEngine::builder`].
+///
+/// ```ignore
+/// let engine = FftEngine::builder()
+///     .system(&sys)
+///     .opt(OptLevel::SwHw)
+///     .gpu_backend(Box::new(PjrtGpuBackend::new(registry)))
+///     .build();
+/// ```
+#[derive(Default)]
+pub struct FftEngineBuilder {
+    sys: Option<SystemConfig>,
+    opt: Option<OptLevel>,
+    gpu_cost: GpuCostModel,
+    gpu: Option<Box<dyn ComputeBackend>>,
+    pim: Option<Box<dyn ComputeBackend>>,
+}
+
+impl FftEngineBuilder {
+    /// System configuration (default: paper Table 1 baseline).
+    pub fn system(mut self, sys: &SystemConfig) -> Self {
+        self.sys = Some(sys.clone());
+        self
+    }
+
+    /// PIM optimization level (default: sw-hw-opt when the system has the
+    /// §6.2 ALU augmentation, sw-opt otherwise — the Pimacolaba default).
+    pub fn opt(mut self, opt: OptLevel) -> Self {
+        self.opt = Some(opt);
+        self
+    }
+
+    /// GPU cost provider for the default backends and the planner
+    /// (default: the paper's analytical model).
+    pub fn gpu_cost_model(mut self, cost: GpuCostModel) -> Self {
+        self.gpu_cost = cost;
+        self
+    }
+
+    /// GPU substrate backend (default: [`HostFftBackend`]).
+    pub fn gpu_backend(mut self, backend: Box<dyn ComputeBackend>) -> Self {
+        self.gpu = Some(backend);
+        self
+    }
+
+    /// PIM substrate backend (default: [`PimSimBackend`]).
+    pub fn pim_backend(mut self, backend: Box<dyn ComputeBackend>) -> Self {
+        self.pim = Some(backend);
+        self
+    }
+
+    pub fn build(self) -> FftEngine {
+        let sys = self.sys.unwrap_or_else(SystemConfig::baseline);
+        let opt = self.opt.unwrap_or(if sys.pim.hw_maddsub { OptLevel::SwHw } else { OptLevel::Sw });
+        let gpu = self.gpu.unwrap_or_else(|| Box::new(HostFftBackend::new(self.gpu_cost)));
+        let pim = self.pim.unwrap_or_else(|| Box::new(PimSimBackend::new(&sys, opt)));
+        FftEngine {
+            planner: Planner::with_models(&sys, opt, self.gpu_cost),
+            sys,
+            gpu,
+            pim,
+            plan_cache: HashMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+}
+
+/// The unified FFT front door: plan + estimate + execute over pluggable
+/// substrate backends, with a memoized plan cache.
+pub struct FftEngine {
+    sys: SystemConfig,
+    planner: Planner,
+    gpu: Box<dyn ComputeBackend>,
+    pim: Box<dyn ComputeBackend>,
+    plan_cache: HashMap<(usize, usize, OptLevel), (CollabPlan, PlanEval)>,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+impl FftEngine {
+    pub fn builder() -> FftEngineBuilder {
+        FftEngineBuilder::default()
+    }
+
+    pub fn sys(&self) -> &SystemConfig {
+        &self.sys
+    }
+
+    pub fn opt(&self) -> OptLevel {
+        self.planner.opt()
+    }
+
+    pub fn gpu_backend_name(&self) -> &'static str {
+        self.gpu.name()
+    }
+
+    pub fn pim_backend_name(&self) -> &'static str {
+        self.pim.name()
+    }
+
+    /// Valid PIM-FFT-Tile sizes for `n` (§5.1 kernel-count rule).
+    pub fn valid_tiles(&self, n: usize) -> Vec<usize> {
+        self.planner.valid_tiles(n)
+    }
+
+    /// (hits, misses) of the plan cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache_hits, self.cache_misses)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.plan_cache.len()
+    }
+
+    /// Plan and model-evaluate `(n, batch)`, memoized. The plan is clamped
+    /// to GPU factors the GPU backend can actually execute (artifact-backed
+    /// pairs when PJRT is live — the clamp the scheduler used to own).
+    pub fn plan(&mut self, n: usize, batch: usize) -> Result<(CollabPlan, PlanEval)> {
+        ensure!(is_pow2(n) && n >= 2, "FFT size must be a power of two >= 2, got {n}");
+        ensure!(batch > 0, "batch must be positive");
+        let key = (n, batch, self.planner.opt());
+        if let Some(&hit) = self.plan_cache.get(&key) {
+            self.cache_hits += 1;
+            return Ok(hit);
+        }
+        let mut plan = self.planner.plan(n, batch);
+        if let PlanKind::Collaborative { m1, .. } = plan.kind {
+            if let Some(avail) = self.gpu.supported_m1s(n) {
+                if avail.is_empty() {
+                    plan.kind = PlanKind::GpuOnly; // no artifact → serve on GPU
+                } else if !avail.contains(&m1) {
+                    // Prefer the largest available GPU factor (smallest tile).
+                    let m1_best = *avail.iter().min_by_key(|&&m| n / m).unwrap();
+                    plan.kind = PlanKind::Collaborative { m1: m1_best, m2: n / m1_best };
+                }
+            }
+        }
+        let eval = self.compose_eval(&plan)?;
+        self.cache_misses += 1;
+        self.plan_cache.insert(key, (plan, eval));
+        Ok((plan, eval))
+    }
+
+    /// Fig 10's subject: whole-FFT PIM offload vs the GPU baseline.
+    pub fn whole_fft_eval(&mut self, n: usize, batch: usize) -> Result<PlanEval> {
+        self.planner.whole_fft_eval(n, batch)
+    }
+
+    /// Compose a [`PlanEval`] from the backends' `estimate` halves. For the
+    /// default (analytical) cost model this reproduces the legacy
+    /// `Planner::evaluate` numbers bit-for-bit (see the conformance suite).
+    fn compose_eval(&mut self, plan: &CollabPlan) -> Result<PlanEval> {
+        let (n, batch) = (plan.n, plan.batch);
+        let base = self.gpu.estimate(&PlanComponent::FullFft { n, batch }, &self.sys)?;
+        match plan.kind {
+            PlanKind::GpuOnly => Ok(PlanEval {
+                gpu_only_ns: base.time_ns,
+                plan_ns: base.time_ns,
+                movement_base: base.movement,
+                movement_plan: base.movement,
+                offload_fraction: 0.0,
+            }),
+            PlanKind::Collaborative { m1, m2 } => {
+                let stage =
+                    self.gpu.estimate(&PlanComponent::GpuStage { n, m1, m2, batch }, &self.sys)?;
+                let tile = self.pim.estimate(
+                    &PlanComponent::PimTile { m2, count: batch * m1, opt: plan.opt },
+                    &self.sys,
+                )?;
+                let combined = stage.plus(&tile);
+                Ok(PlanEval {
+                    gpu_only_ns: base.time_ns,
+                    plan_ns: combined.time_ns,
+                    movement_base: base.movement,
+                    movement_plan: combined.movement,
+                    offload_fraction: log2(m2) as f64 / log2(n) as f64,
+                })
+            }
+        }
+    }
+
+    /// Compute the spectra of `signals` (all of length `n`) under the cached
+    /// plan, routing each component to its substrate backend.
+    pub fn run(&mut self, n: usize, signals: &[SoaVec]) -> Result<EngineRun> {
+        ensure!(!signals.is_empty(), "empty signal batch");
+        ensure!(
+            signals.iter().all(|s| s.len() == n),
+            "signals must all have length {n}"
+        );
+        let (plan, eval) = self.plan(n, signals.len())?;
+        let outputs = match plan.kind {
+            PlanKind::GpuOnly => {
+                self.gpu.execute(&PlanComponent::FullFft { n, batch: signals.len() }, signals)?
+            }
+            PlanKind::Collaborative { m1, m2 } => {
+                // 1) GPU component: Z[k2][n1] per signal.
+                let zs = self.gpu.execute(
+                    &PlanComponent::GpuStage { n, m1, m2, batch: signals.len() },
+                    signals,
+                )?;
+                // 2) PIM component: every row of Z is one tile input.
+                let mut rows: Vec<SoaVec> = Vec::with_capacity(zs.len() * m1);
+                for z in &zs {
+                    for k2 in 0..m1 {
+                        rows.push(SoaVec::new(
+                            z.re[k2 * m2..(k2 + 1) * m2].to_vec(),
+                            z.im[k2 * m2..(k2 + 1) * m2].to_vec(),
+                        ));
+                    }
+                }
+                let rows_out = self.pim.execute(
+                    &PlanComponent::PimTile { m2, count: rows.len(), opt: plan.opt },
+                    &rows,
+                )?;
+                ensure!(rows_out.len() == rows.len(), "PIM backend dropped tile outputs");
+                // 3) Gather X[k1·m1 + k2] = O[k2][k1].
+                let mut outputs = Vec::with_capacity(zs.len());
+                for chunk in rows_out.chunks(m1) {
+                    let mut o = SoaVec::zeros(n);
+                    for (k2, row) in chunk.iter().enumerate() {
+                        for k1 in 0..m2 {
+                            let (r, i) = row.get(k1);
+                            o.set(k1 * m1 + k2, r, i);
+                        }
+                    }
+                    outputs.push(o);
+                }
+                outputs
+            }
+        };
+        ensure!(outputs.len() == signals.len(), "backend returned a wrong output count");
+        Ok(EngineRun { plan, eval, outputs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::fft_soa;
+
+    #[test]
+    fn builder_defaults_follow_system() {
+        let e = FftEngine::builder().build();
+        assert_eq!(e.opt(), OptLevel::Sw);
+        assert_eq!(e.gpu_backend_name(), "host-reference");
+        assert_eq!(e.pim_backend_name(), "pim-sim");
+        let hw = FftEngine::builder().system(&SystemConfig::baseline().with_hw_opt()).build();
+        assert_eq!(hw.opt(), OptLevel::SwHw);
+    }
+
+    #[test]
+    fn gpu_only_run_is_exact() {
+        let mut e = FftEngine::builder().build();
+        let xs: Vec<SoaVec> = (0..3).map(|i| SoaVec::random(64, 3 + i)).collect();
+        let run = e.run(64, &xs).unwrap();
+        assert_eq!(run.plan.kind, PlanKind::GpuOnly);
+        assert!((run.eval.speedup() - 1.0).abs() < 1e-12);
+        for (x, y) in xs.iter().zip(&run.outputs) {
+            assert!(y.max_abs_diff(&fft_soa(x)) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn collaborative_run_matches_reference() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut e = FftEngine::builder().system(&sys).build();
+        let n = 1 << 13;
+        let xs = vec![SoaVec::random(n, 11)];
+        let run = e.run(n, &xs).unwrap();
+        assert!(matches!(run.plan.kind, PlanKind::Collaborative { .. }));
+        let d = run.outputs[0].max_abs_diff(&fft_soa(&xs[0]));
+        assert!(d < 0.35, "collaborative diff {d}");
+        assert!(run.eval.movement_savings() > 1.4);
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeat_shapes() {
+        let mut e = FftEngine::builder().build();
+        e.plan(1 << 13, 64).unwrap();
+        assert_eq!(e.cache_stats(), (0, 1));
+        e.plan(1 << 13, 64).unwrap();
+        assert_eq!(e.cache_stats(), (1, 1));
+        assert_eq!(e.cache_len(), 1);
+        // A different batch is a different key.
+        e.plan(1 << 13, 128).unwrap();
+        assert_eq!(e.cache_stats(), (1, 2));
+        assert_eq!(e.cache_len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let mut e = FftEngine::builder().build();
+        assert!(e.plan(12, 1).is_err());
+        assert!(e.plan(64, 0).is_err());
+        assert!(e.run(64, &[]).is_err());
+        assert!(e.run(64, &[SoaVec::zeros(32)]).is_err());
+    }
+}

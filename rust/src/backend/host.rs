@@ -1,0 +1,117 @@
+//! Host reference backend: executes every component with the host FFT
+//! oracle. It stands in for the GPU when no AOT artifacts are loaded (tests,
+//! figures, fresh checkouts) and doubles as the conformance reference for
+//! every other backend.
+
+use anyhow::{ensure, Result};
+
+use crate::config::SystemConfig;
+use crate::fft::{fft_soa, FourStep, SoaVec};
+
+use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
+
+/// Reference implementation of every [`PlanComponent`] on the host CPU,
+/// priced with a pluggable GPU cost model (it models the GPU it stands in
+/// for, not the host wall-clock).
+#[derive(Debug, Default)]
+pub struct HostFftBackend {
+    cost: GpuCostModel,
+}
+
+impl HostFftBackend {
+    pub fn new(cost: GpuCostModel) -> Self {
+        Self { cost }
+    }
+
+    pub fn cost_model(&self) -> GpuCostModel {
+        self.cost
+    }
+}
+
+impl ComputeBackend for HostFftBackend {
+    fn name(&self) -> &'static str {
+        "host-reference"
+    }
+
+    fn estimate(&mut self, component: &PlanComponent, sys: &SystemConfig) -> Result<CostEstimate> {
+        match *component {
+            PlanComponent::FullFft { n, batch } => Ok(self.cost.full_fft(n, batch, sys)),
+            PlanComponent::GpuStage { n, m1, m2, batch } => {
+                Ok(self.cost.gpu_stage(n, m1, m2, batch, sys))
+            }
+            PlanComponent::PimTile { .. } => {
+                anyhow::bail!("host backend has no PIM cost model for {component}")
+            }
+        }
+    }
+
+    fn execute(&mut self, component: &PlanComponent, inputs: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        ensure!(
+            inputs.iter().all(|s| s.len() == component.input_len()),
+            "input length mismatch for {component}"
+        );
+        match *component {
+            PlanComponent::FullFft { .. } => Ok(inputs.iter().map(fft_soa).collect()),
+            PlanComponent::GpuStage { n, m1, m2, .. } => {
+                let fs = FourStep::new(n, m1, m2);
+                Ok(inputs.iter().map(|s| fs.gpu_component_ref(s)).collect())
+            }
+            // A PIM-FFT-Tile is just a batch of small row FFTs; the host
+            // reference computes them exactly.
+            PlanComponent::PimTile { .. } => Ok(inputs.iter().map(fft_soa).collect()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routines::OptLevel;
+
+    #[test]
+    fn full_fft_matches_reference() {
+        let mut b = HostFftBackend::default();
+        let xs: Vec<SoaVec> = (0..3).map(|i| SoaVec::random(64, 9 + i)).collect();
+        let ys = b.execute(&PlanComponent::FullFft { n: 64, batch: 3 }, &xs).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!(y.max_abs_diff(&fft_soa(x)) == 0.0);
+        }
+    }
+
+    #[test]
+    fn stage_then_tile_then_gather_is_the_fft() {
+        let (n, m1, m2) = (256, 32, 8);
+        let mut b = HostFftBackend::default();
+        let x = SoaVec::random(n, 5);
+        let z = b
+            .execute(&PlanComponent::GpuStage { n, m1, m2, batch: 1 }, std::slice::from_ref(&x))
+            .unwrap()
+            .remove(0);
+        let rows: Vec<SoaVec> = (0..m1)
+            .map(|k2| {
+                SoaVec::new(z.re[k2 * m2..(k2 + 1) * m2].to_vec(), z.im[k2 * m2..(k2 + 1) * m2].to_vec())
+            })
+            .collect();
+        let rows_out = b
+            .execute(&PlanComponent::PimTile { m2, count: m1, opt: OptLevel::Base }, &rows)
+            .unwrap();
+        let mut o = SoaVec::zeros(n);
+        for (k2, row) in rows_out.iter().enumerate() {
+            for k1 in 0..m2 {
+                let (r, i) = row.get(k1);
+                o.set(k1 * m1 + k2, r, i);
+            }
+        }
+        assert!(o.max_abs_diff(&fft_soa(&x)) < 2e-3 * (n as f32).sqrt());
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs_and_pim_estimates() {
+        let sys = SystemConfig::baseline();
+        let mut b = HostFftBackend::default();
+        let xs = vec![SoaVec::zeros(16)];
+        assert!(b.execute(&PlanComponent::FullFft { n: 32, batch: 1 }, &xs).is_err());
+        let tile = PlanComponent::PimTile { m2: 32, count: 1, opt: OptLevel::Base };
+        assert!(b.estimate(&tile, &sys).is_err());
+    }
+}

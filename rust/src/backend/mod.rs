@@ -1,0 +1,71 @@
+//! Pluggable compute backends + the unified [`FftEngine`].
+//!
+//! The paper's contribution is *collaborative* execution: one FFT split
+//! between a GPU factor and a PIM-FFT-Tile factor. This module makes the
+//! substrates first-class and interchangeable:
+//!
+//! * [`ComputeBackend`] — the two-sided substrate contract: `estimate` a
+//!   [`PlanComponent`] (modeled time + data movement, [`CostEstimate`]) and
+//!   `execute` it on real data.
+//! * [`HostFftBackend`] — reference FFT on the host; the artifact-free GPU
+//!   stand-in and the conformance oracle.
+//! * [`PjrtGpuBackend`] — GPU components through the AOT artifact registry
+//!   (PJRT), with host fallback for shapes lacking artifacts.
+//! * [`PimSimBackend`] — PIM-FFT-Tiles on the functional in-memory unit
+//!   simulator, priced by the §5.1 offline tile table.
+//! * [`GpuCostModel`] — interchangeable GPU cost providers (the paper's
+//!   analytical model, or the measured-GPU simulator).
+//! * [`FftEngine`] — builder-configured front door owning the planner, both
+//!   backends, and a memoized plan cache keyed by `(n, batch, opt)`.
+//!
+//! Everything above this module (coordinator, figures, CLI, benches) talks
+//! to substrates exclusively through the engine; nothing else reaches into
+//! `runtime::Registry` or the PIM executor.
+
+mod component;
+mod cost;
+mod engine;
+mod host;
+mod pim_sim;
+mod pjrt;
+
+pub use component::PlanComponent;
+pub use cost::{CostEstimate, GpuCostModel};
+pub use engine::{EngineRun, FftEngine, FftEngineBuilder};
+pub use host::HostFftBackend;
+pub use pim_sim::PimSimBackend;
+pub use pjrt::PjrtGpuBackend;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::fft::SoaVec;
+
+/// A compute substrate that can price and execute plan components.
+///
+/// The two halves mirror how the paper uses each substrate: `estimate` feeds
+/// the §5.1 planner's model-driven decisions (and every figure), `execute`
+/// produces real spectra for the serving path. Backends are free to support
+/// only the components their substrate implements (the PIM backend rejects
+/// GPU stages and vice versa); the [`FftEngine`] routes components to the
+/// right backend.
+pub trait ComputeBackend {
+    /// Short stable identifier (reports, logs).
+    fn name(&self) -> &'static str;
+
+    /// Modeled cost of `component` on this backend under `sys`.
+    fn estimate(&mut self, component: &PlanComponent, sys: &SystemConfig) -> Result<CostEstimate>;
+
+    /// Execute `component` over `inputs` (one signal per
+    /// [`PlanComponent::input_len`]-point buffer), returning one output per
+    /// input.
+    fn execute(&mut self, component: &PlanComponent, inputs: &[SoaVec]) -> Result<Vec<SoaVec>>;
+
+    /// GPU factors this backend can execute in a collaborative plan for
+    /// size-`n` FFTs. `None` means unconstrained (the host path can run any
+    /// factorization); `Some(vec![])` means collaboration is impossible and
+    /// plans fall back to GPU-only.
+    fn supported_m1s(&self, _n: usize) -> Option<Vec<usize>> {
+        None
+    }
+}

@@ -1,0 +1,135 @@
+//! Simulated-PIM backend: executes PIM-FFT-Tiles on the functional PIM unit
+//! simulator (the numbers really come from the simulated in-memory ALUs) and
+//! prices them with the offline tile table of §5.1.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::PimTileExecutor;
+use crate::fft::SoaVec;
+use crate::metrics::DataMovement;
+use crate::planner::TileModel;
+use crate::routines::OptLevel;
+
+use super::{ComputeBackend, CostEstimate, PlanComponent};
+
+/// PIM substrate backend: one [`PimTileExecutor`] per tile size (lazily
+/// built — constructing one validates and caches the broadcast command
+/// stream) plus the [`TileModel`] cost table for estimates.
+pub struct PimSimBackend {
+    sys: SystemConfig,
+    opt: OptLevel,
+    tiles: TileModel,
+    execs: HashMap<usize, PimTileExecutor>,
+}
+
+impl PimSimBackend {
+    /// Backend for one (system, opt level). The tile cost table and the
+    /// command streams are bound to this pair; `estimate`/`execute` reject
+    /// components generated at a different opt level.
+    pub fn new(sys: &SystemConfig, opt: OptLevel) -> Self {
+        Self { sys: sys.clone(), opt, tiles: TileModel::new(sys, opt), execs: HashMap::new() }
+    }
+
+    pub fn opt(&self) -> OptLevel {
+        self.opt
+    }
+
+    fn executor(&mut self, m2: usize) -> Result<&PimTileExecutor> {
+        if !self.execs.contains_key(&m2) {
+            let exec = PimTileExecutor::new(&self.sys, self.opt, m2)?;
+            self.execs.insert(m2, exec);
+        }
+        Ok(&self.execs[&m2])
+    }
+}
+
+impl ComputeBackend for PimSimBackend {
+    fn name(&self) -> &'static str {
+        "pim-sim"
+    }
+
+    fn estimate(&mut self, component: &PlanComponent, _sys: &SystemConfig) -> Result<CostEstimate> {
+        match *component {
+            PlanComponent::PimTile { m2, count, opt } => {
+                ensure!(
+                    opt == self.opt,
+                    "pim-sim backend built for {}, component requests {}",
+                    self.opt,
+                    opt
+                );
+                // pim_time_ns populates the per-round report cmd_bytes reads.
+                let time_ns = self.tiles.pim_time_ns(m2, count)?;
+                let cmd = self.tiles.cmd_bytes(m2, count)?;
+                Ok(CostEstimate {
+                    time_ns,
+                    movement: DataMovement { gpu_bytes: 0.0, pim_cmd_bytes: cmd },
+                })
+            }
+            _ => bail!("pim-sim backend only models PIM tiles, got {component}"),
+        }
+    }
+
+    fn execute(&mut self, component: &PlanComponent, inputs: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        match *component {
+            PlanComponent::PimTile { m2, opt, .. } => {
+                ensure!(
+                    opt == self.opt,
+                    "pim-sim backend built for {}, component requests {}",
+                    self.opt,
+                    opt
+                );
+                ensure!(
+                    inputs.iter().all(|s| s.len() == m2),
+                    "tile input length mismatch for {component}"
+                );
+                self.executor(m2)?.run(inputs)
+            }
+            _ => bail!("pim-sim backend only executes PIM tiles, got {component}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::fft_soa;
+
+    #[test]
+    fn tile_execution_matches_reference() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut b = PimSimBackend::new(&sys, OptLevel::SwHw);
+        let inputs: Vec<SoaVec> = (0..10).map(|i| SoaVec::random(32, 40 + i)).collect();
+        let c = PlanComponent::PimTile { m2: 32, count: inputs.len(), opt: OptLevel::SwHw };
+        let out = b.execute(&c, &inputs).unwrap();
+        assert_eq!(out.len(), inputs.len());
+        for (x, y) in inputs.iter().zip(&out) {
+            assert!(y.max_abs_diff(&fft_soa(x)) < 2e-3);
+        }
+    }
+
+    #[test]
+    fn estimate_matches_tile_model() {
+        let sys = SystemConfig::baseline();
+        let mut b = PimSimBackend::new(&sys, OptLevel::Base);
+        let count = sys.concurrent_ffts();
+        let c = PlanComponent::PimTile { m2: 32, count, opt: OptLevel::Base };
+        let est = b.estimate(&c, &sys).unwrap();
+        let mut tm = TileModel::new(&sys, OptLevel::Base);
+        assert_eq!(est.time_ns, tm.pim_time_ns(32, count).unwrap());
+        assert_eq!(est.movement.pim_cmd_bytes, tm.cmd_bytes(32, count).unwrap());
+        assert_eq!(est.movement.gpu_bytes, 0.0);
+    }
+
+    #[test]
+    fn rejects_foreign_components_and_opts() {
+        let sys = SystemConfig::baseline();
+        let mut b = PimSimBackend::new(&sys, OptLevel::Base);
+        assert!(b.estimate(&PlanComponent::FullFft { n: 64, batch: 1 }, &sys).is_err());
+        let wrong = PlanComponent::PimTile { m2: 32, count: 1, opt: OptLevel::Sw };
+        assert!(b.estimate(&wrong, &sys).is_err());
+        assert!(b.execute(&wrong, &[SoaVec::zeros(32)]).is_err());
+    }
+}

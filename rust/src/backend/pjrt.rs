@@ -1,0 +1,171 @@
+//! PJRT GPU backend: executes GPU components through the AOT artifact
+//! registry (HLO lowered from the L2 jax model + L1 Pallas kernel), falling
+//! back to the host reference for shapes with no artifact — exactly the
+//! fallback the coordinator applied before the backend API existed.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::SystemConfig;
+use crate::fft::{fft_soa, FourStep, SoaVec};
+use crate::runtime::Registry;
+
+use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
+
+/// GPU substrate backend over a loaded artifact [`Registry`].
+///
+/// Artifacts have fixed PJRT batch shapes; inputs are chunked and padded to
+/// the artifact batch, and the host performs the §7.2 staging gathers (the
+/// artifact uses the transpose-free column layout).
+///
+/// Built without the `pjrt` cargo feature, the XLA bindings are stubs, so
+/// this backend executes everything on the host reference path (the
+/// registry is still consulted for artifact metadata).
+pub struct PjrtGpuBackend {
+    registry: Registry,
+    cost: GpuCostModel,
+}
+
+/// Whether compiled HLO can actually execute in this build.
+const PJRT_AVAILABLE: bool = cfg!(feature = "pjrt");
+
+impl PjrtGpuBackend {
+    pub fn new(registry: Registry) -> Self {
+        Self { registry, cost: GpuCostModel::default() }
+    }
+
+    pub fn with_cost_model(registry: Registry, cost: GpuCostModel) -> Self {
+        Self { registry, cost }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Batched-FFT execution through the size-`n` artifact.
+    fn run_full_artifact(&mut self, n: usize, inputs: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        let exe_b = self.registry.fft_spec(n).map(|s| s.b).unwrap();
+        let mut outputs: Vec<SoaVec> = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(exe_b) {
+            let mut re = vec![0.0f32; exe_b * n];
+            let mut im = vec![0.0f32; exe_b * n];
+            for (i, s) in chunk.iter().enumerate() {
+                re[i * n..(i + 1) * n].copy_from_slice(&s.re);
+                im[i * n..(i + 1) * n].copy_from_slice(&s.im);
+            }
+            let exe = self.registry.fft(n)?;
+            let out = exe.run(&re, &im)?;
+            for i in 0..chunk.len() {
+                outputs.push(SoaVec::new(
+                    out.re[i * n..(i + 1) * n].to_vec(),
+                    out.im[i * n..(i + 1) * n].to_vec(),
+                ));
+            }
+        }
+        Ok(outputs)
+    }
+
+    /// GPU-component execution through the (n, m1) artifact. The artifact
+    /// uses the transpose-free column layout (rows = sig·m2 + n1, cols =
+    /// n2/k2); the gathers below are the host staging §7.2 describes (the
+    /// GPU writes the PIM-friendly layout at the end of its kernel).
+    fn run_stage_artifact(
+        &mut self,
+        n: usize,
+        m1: usize,
+        m2: usize,
+        inputs: &[SoaVec],
+    ) -> Result<Vec<SoaVec>> {
+        let exe_b = self.registry.gpu_part_spec(n, m1).map(|s| s.b).unwrap();
+        let rows_per_exec = exe_b * m2;
+        let mut out = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(exe_b) {
+            let mut re = vec![0.0f32; rows_per_exec * m1];
+            let mut im = vec![0.0f32; rows_per_exec * m1];
+            for (i, s) in chunk.iter().enumerate() {
+                // Column gather: row i·m2+n1, col n2 ← x[n2·m2 + n1].
+                for n1 in 0..m2 {
+                    let row = (i * m2 + n1) * m1;
+                    for n2 in 0..m1 {
+                        re[row + n2] = s.re[n2 * m2 + n1];
+                        im[row + n2] = s.im[n2 * m2 + n1];
+                    }
+                }
+            }
+            let exe = self.registry.gpu_part(n, m1)?;
+            let z = exe.run(&re, &im)?;
+            for i in 0..chunk.len() {
+                // Scatter back to the (k2, n1) row-major reference layout:
+                // Z[k2·m2+n1] = Z2[(i·m2+n1)·m1 + k2].
+                let mut zr = vec![0.0f32; n];
+                let mut zi = vec![0.0f32; n];
+                for n1 in 0..m2 {
+                    let row = (i * m2 + n1) * m1;
+                    for k2 in 0..m1 {
+                        zr[k2 * m2 + n1] = z.re[row + k2];
+                        zi[k2 * m2 + n1] = z.im[row + k2];
+                    }
+                }
+                out.push(SoaVec::new(zr, zi));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl ComputeBackend for PjrtGpuBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-gpu"
+    }
+
+    fn estimate(&mut self, component: &PlanComponent, sys: &SystemConfig) -> Result<CostEstimate> {
+        match *component {
+            PlanComponent::FullFft { n, batch } => Ok(self.cost.full_fft(n, batch, sys)),
+            PlanComponent::GpuStage { n, m1, m2, batch } => {
+                Ok(self.cost.gpu_stage(n, m1, m2, batch, sys))
+            }
+            PlanComponent::PimTile { .. } => {
+                bail!("GPU backend has no PIM cost model for {component}")
+            }
+        }
+    }
+
+    fn execute(&mut self, component: &PlanComponent, inputs: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        ensure!(
+            inputs.iter().all(|s| s.len() == component.input_len()),
+            "input length mismatch for {component}"
+        );
+        match *component {
+            PlanComponent::FullFft { n, .. } => {
+                if PJRT_AVAILABLE && self.registry.fft_spec(n).is_some() {
+                    self.run_full_artifact(n, inputs)
+                } else {
+                    // Sizes below the smallest artifact (or a pjrt-less
+                    // build): host reference.
+                    Ok(inputs.iter().map(fft_soa).collect())
+                }
+            }
+            PlanComponent::GpuStage { n, m1, m2, .. } => {
+                if PJRT_AVAILABLE && self.registry.gpu_part_spec(n, m1).is_some() {
+                    self.run_stage_artifact(n, m1, m2, inputs)
+                } else {
+                    let fs = FourStep::new(n, m1, m2);
+                    Ok(inputs.iter().map(|s| fs.gpu_component_ref(s)).collect())
+                }
+            }
+            PlanComponent::PimTile { .. } => {
+                bail!("GPU backend cannot execute PIM tiles ({component})")
+            }
+        }
+    }
+
+    /// Collaborative plans must use a GPU factor with a compiled artifact;
+    /// the engine clamps the planner's tile choice to this set. Without the
+    /// `pjrt` feature the host fallback runs any factorization, so no clamp.
+    fn supported_m1s(&self, n: usize) -> Option<Vec<usize>> {
+        if PJRT_AVAILABLE {
+            Some(self.registry.gpu_part_m1s(n))
+        } else {
+            None
+        }
+    }
+}

@@ -2,14 +2,19 @@
 //!
 //! The deployment shape mirrors the FFT-serving scenario the paper's
 //! collaborative decomposition targets: clients submit batched FFT requests;
-//! the router consults the §5.1 planner; the batcher packs requests into the
-//! fixed shapes of the AOT artifacts; the scheduler executes the GPU
-//! component on the PJRT runtime and the PIM-FFT-Tile on the functional PIM
-//! simulator; metrics report the modeled speedup and data-movement savings
-//! of every request against the GPU-only baseline.
+//! the batcher packs them into size-homogeneous batches; the scheduler hands
+//! each batch to the unified [`crate::backend::FftEngine`], which plans the
+//! split (§5.1, with a memoized plan cache for repeated shapes) and routes
+//! the GPU component and the PIM-FFT-Tile to their pluggable
+//! `ComputeBackend`s — PJRT artifacts or the host reference on the GPU side,
+//! the functional PIM unit simulator on the PIM side. Metrics report the
+//! modeled speedup and data-movement savings of every request against the
+//! GPU-only baseline.
 //!
-//! Python never appears on this path — the jax/Pallas model was lowered to
-//! HLO at build time (`make artifacts`).
+//! The scheduler/server layer never touches a substrate directly; all
+//! GPU/PIM access flows through the engine's backends. Python never appears
+//! on this path — the jax/Pallas model was lowered to HLO at build time
+//! (`make artifacts`).
 
 mod batcher;
 mod pim_exec;

@@ -87,7 +87,7 @@ mod tests {
 
     fn sample_responses() -> Vec<FftResponse> {
         let sys = SystemConfig::baseline().with_hw_opt();
-        let mut s = Scheduler::new(&sys, None);
+        let mut s = Scheduler::new(&sys);
         s.verify = true;
         let mut out = Vec::new();
         for (id, n) in [(1u64, 64usize), (2, 1 << 13)] {

@@ -1,50 +1,49 @@
-//! Plan execution: GPU components on the PJRT runtime (AOT artifacts), PIM
-//! components on the functional PIM simulator, stitched by the four-step
-//! algebra of `fft::FourStep` (paper Fig 11).
+//! Batch execution over the unified [`FftEngine`]: the scheduler validates
+//! and flattens size-homogeneous batches, hands them to the engine (which
+//! routes the GPU component to its GPU backend and the PIM-FFT-Tile to its
+//! PIM backend), then regroups spectra and attaches per-request metrics.
+//!
+//! The scheduler never touches a substrate directly — no PJRT registry, no
+//! PIM executor; all of that lives behind the engine's `ComputeBackend`s.
 
-use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::backend::FftEngine;
 use crate::config::SystemConfig;
-use crate::fft::{fft_soa, FourStep, SoaVec};
-use crate::planner::{PlanKind, Planner};
-use crate::runtime::Registry;
+use crate::fft::{fft_soa, SoaVec};
 
-use super::{Batch, FftResponse, PimTileExecutor, RequestMetrics};
+use super::{Batch, FftResponse, RequestMetrics};
 
-/// Executes batches against the runtime + PIM simulator.
+/// Executes batches through an [`FftEngine`].
 pub struct Scheduler {
-    sys: SystemConfig,
-    planner: Planner,
-    registry: Option<Registry>,
-    tile_execs: HashMap<usize, PimTileExecutor>,
+    engine: FftEngine,
     /// Compare every response against the host reference FFT and record the
     /// max error in the metrics (costs a host FFT per signal).
     pub verify: bool,
 }
 
 impl Scheduler {
-    /// `registry = None` runs the GPU components on the host reference
-    /// implementation (artifact-free mode for tests/figures); with a
-    /// registry, GPU components execute through PJRT.
-    pub fn new(sys: &SystemConfig, registry: Option<Registry>) -> Self {
-        Self {
-            sys: sys.clone(),
-            planner: Planner::new(sys),
-            registry,
-            tile_execs: HashMap::new(),
-            verify: false,
-        }
+    /// Scheduler over the default engine for `sys`: host-reference GPU
+    /// backend (artifact-free mode for tests/figures) + simulated PIM. For
+    /// PJRT execution build an engine with a `PjrtGpuBackend` and use
+    /// [`Scheduler::with_engine`].
+    pub fn new(sys: &SystemConfig) -> Self {
+        Self::with_engine(FftEngine::builder().system(sys).build())
     }
 
-    pub fn planner_mut(&mut self) -> &mut Planner {
-        &mut self.planner
+    /// Scheduler over a pre-configured engine.
+    pub fn with_engine(engine: FftEngine) -> Self {
+        Self { engine, verify: false }
     }
 
-    pub fn has_runtime(&self) -> bool {
-        self.registry.is_some()
+    pub fn engine(&self) -> &FftEngine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut FftEngine {
+        &mut self.engine
     }
 
     /// Serve one batch (all requests share `n`).
@@ -57,31 +56,14 @@ impl Scheduler {
         );
         let total: usize = batch.requests.iter().map(|r| r.batch()).sum();
         ensure!(total > 0, "empty batch");
-        let mut plan = self.planner.plan(n, total);
 
-        // Collaborative plans must use a GPU factor we can actually execute:
-        // restrict to artifact-backed (n, m1) pairs when a runtime is live.
-        if let (PlanKind::Collaborative { .. }, Some(reg)) = (plan.kind, self.registry.as_ref()) {
-            let avail = reg.gpu_part_m1s(n);
-            if avail.is_empty() {
-                plan.kind = PlanKind::GpuOnly; // no artifact → serve on GPU
-            } else if let PlanKind::Collaborative { m1, .. } = plan.kind {
-                if !avail.contains(&m1) {
-                    // Prefer the planner's tile ranking among available m1s.
-                    let m1_best = *avail.iter().min_by_key(|&&m| n / m).unwrap_or(&m1);
-                    plan.kind = PlanKind::Collaborative { m1: m1_best, m2: n / m1_best };
-                }
-            }
-        }
-        let eval = self.planner.evaluate(&plan)?;
-
+        let signals: Vec<SoaVec> =
+            batch.requests.iter().flat_map(|r| r.signals.iter().cloned()).collect();
         let t0 = Instant::now();
-        let spectra: Vec<Vec<SoaVec>> = match plan.kind {
-            PlanKind::GpuOnly => self.run_gpu_only(&batch)?,
-            PlanKind::Collaborative { m1, m2 } => self.run_collaborative(&batch, m1, m2)?,
-        };
+        let run = self.engine.run(n, &signals)?;
         let host_wall_ns = t0.elapsed().as_nanos() as u64 / batch.requests.len().max(1) as u64;
 
+        let spectra = regroup(&batch, run.outputs);
         let mut responses = Vec::with_capacity(batch.requests.len());
         for (req, spec) in batch.requests.into_iter().zip(spectra) {
             let max_error = if self.verify {
@@ -99,146 +81,17 @@ impl Scheduler {
                 id: req.id,
                 spectra: spec,
                 metrics: RequestMetrics {
-                    plan,
-                    modeled_gpu_only_ns: eval.gpu_only_ns * req.batch() as f64 / total as f64,
-                    modeled_plan_ns: eval.plan_ns * req.batch() as f64 / total as f64,
-                    movement_base: eval.movement_base,
-                    movement_plan: eval.movement_plan,
+                    plan: run.plan,
+                    modeled_gpu_only_ns: run.eval.gpu_only_ns * req.batch() as f64 / total as f64,
+                    modeled_plan_ns: run.eval.plan_ns * req.batch() as f64 / total as f64,
+                    movement_base: run.eval.movement_base,
+                    movement_plan: run.eval.movement_plan,
                     host_wall_ns,
                     max_error,
                 },
             });
         }
         Ok(responses)
-    }
-
-    /// GPU-only execution: PJRT artifact when available, host reference
-    /// otherwise (sizes below the smallest artifact).
-    fn run_gpu_only(&mut self, batch: &Batch) -> Result<Vec<Vec<SoaVec>>> {
-        let n = batch.n;
-        let use_artifact =
-            self.registry.as_ref().map(|r| r.fft_spec(n).is_some()).unwrap_or(false);
-        if !use_artifact {
-            return Ok(batch
-                .requests
-                .iter()
-                .map(|r| r.signals.iter().map(fft_soa).collect())
-                .collect());
-        }
-        let reg = self.registry.as_mut().unwrap();
-        let exe_b = reg.fft_spec(n).map(|s| s.b).unwrap();
-        // Flatten all signals, pad to multiples of the artifact batch.
-        let all: Vec<&SoaVec> = batch.requests.iter().flat_map(|r| r.signals.iter()).collect();
-        let mut outputs: Vec<SoaVec> = Vec::with_capacity(all.len());
-        for chunk in all.chunks(exe_b) {
-            let mut re = vec![0.0f32; exe_b * n];
-            let mut im = vec![0.0f32; exe_b * n];
-            for (i, s) in chunk.iter().enumerate() {
-                re[i * n..(i + 1) * n].copy_from_slice(&s.re);
-                im[i * n..(i + 1) * n].copy_from_slice(&s.im);
-            }
-            let exe = reg.fft(n)?;
-            let out = exe.run(&re, &im)?;
-            for i in 0..chunk.len() {
-                outputs.push(SoaVec::new(
-                    out.re[i * n..(i + 1) * n].to_vec(),
-                    out.im[i * n..(i + 1) * n].to_vec(),
-                ));
-            }
-        }
-        Ok(regroup(batch, outputs))
-    }
-
-    /// Collaborative execution: GPU component (PJRT or host reference) →
-    /// PIM-FFT-Tile (simulated units) → transpose gather.
-    fn run_collaborative(&mut self, batch: &Batch, m1: usize, m2: usize) -> Result<Vec<Vec<SoaVec>>> {
-        let n = batch.n;
-        let fs = FourStep::new(n, m1, m2);
-        let all: Vec<&SoaVec> = batch.requests.iter().flat_map(|r| r.signals.iter()).collect();
-
-        // 1) GPU component: Z[k2][n1] per signal. The AOT artifact uses the
-        // transpose-free column layout (rows = sig·m2 + n1, cols = n2/k2);
-        // the gathers below are the host staging the paper's §7.2 describes
-        // (the GPU writes PIM-friendly layout at the end of its kernel).
-        let zs: Vec<SoaVec> = if self
-            .registry
-            .as_ref()
-            .map(|r| r.gpu_part_spec(n, m1).is_some())
-            .unwrap_or(false)
-        {
-            let reg = self.registry.as_mut().unwrap();
-            let exe_b = reg.gpu_part_spec(n, m1).map(|s| s.b).unwrap();
-            let rows_per_exec = exe_b * m2;
-            let mut out = Vec::with_capacity(all.len());
-            for chunk in all.chunks(exe_b) {
-                let mut re = vec![0.0f32; rows_per_exec * m1];
-                let mut im = vec![0.0f32; rows_per_exec * m1];
-                for (i, s) in chunk.iter().enumerate() {
-                    // Column gather: row i·m2+n1, col n2 ← x[n2·m2 + n1].
-                    for n1 in 0..m2 {
-                        let row = (i * m2 + n1) * m1;
-                        for n2 in 0..m1 {
-                            re[row + n2] = s.re[n2 * m2 + n1];
-                            im[row + n2] = s.im[n2 * m2 + n1];
-                        }
-                    }
-                }
-                let exe = reg.gpu_part(n, m1)?;
-                let z = exe.run(&re, &im)?;
-                for i in 0..chunk.len() {
-                    // Scatter back to the (k2, n1) row-major reference
-                    // layout: Z[k2·m2+n1] = Z2[(i·m2+n1)·m1 + k2].
-                    let mut zr = vec![0.0f32; n];
-                    let mut zi = vec![0.0f32; n];
-                    for n1 in 0..m2 {
-                        let row = (i * m2 + n1) * m1;
-                        for k2 in 0..m1 {
-                            zr[k2 * m2 + n1] = z.re[row + k2];
-                            zi[k2 * m2 + n1] = z.im[row + k2];
-                        }
-                    }
-                    out.push(SoaVec::new(zr, zi));
-                }
-            }
-            out
-        } else {
-            all.iter().map(|s| fs.gpu_component_ref(s)).collect()
-        };
-
-        // 2) PIM component: every row of Z is one tile input.
-        let tile_exec = match self.tile_execs.entry(m2) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(v) => v.insert(PimTileExecutor::new(
-                &self.sys,
-                self.planner.opt(),
-                m2,
-            )?),
-        };
-        let mut rows: Vec<SoaVec> = Vec::with_capacity(zs.len() * m1);
-        for z in &zs {
-            for k2 in 0..m1 {
-                rows.push(SoaVec::new(
-                    z.re[k2 * m2..(k2 + 1) * m2].to_vec(),
-                    z.im[k2 * m2..(k2 + 1) * m2].to_vec(),
-                ));
-            }
-        }
-        let rows_out = tile_exec.run(&rows)?;
-
-        // 3) Gather X[k1·M1 + k2] = O[k2][k1].
-        let mut outputs = Vec::with_capacity(zs.len());
-        for (sig, chunk) in rows_out.chunks(m1).enumerate() {
-            let mut o = SoaVec::zeros(n);
-            for (k2, row) in chunk.iter().enumerate() {
-                for k1 in 0..m2 {
-                    let (r, i) = row.get(k1);
-                    o.set(k1 * m1 + k2, r, i);
-                }
-            }
-            let _ = sig;
-            outputs.push(o);
-        }
-        Ok(regroup(batch, outputs))
     }
 }
 
@@ -256,6 +109,7 @@ fn regroup(batch: &Batch, mut flat: Vec<SoaVec>) -> Vec<Vec<SoaVec>> {
 mod tests {
     use super::*;
     use crate::coordinator::FftRequest;
+    use crate::planner::PlanKind;
 
     fn batch(n: usize, reqs: &[(u64, usize)]) -> Batch {
         Batch {
@@ -267,7 +121,7 @@ mod tests {
     #[test]
     fn gpu_only_host_path_is_correct() {
         let sys = SystemConfig::baseline();
-        let mut s = Scheduler::new(&sys, None);
+        let mut s = Scheduler::new(&sys);
         s.verify = true;
         let rs = s.execute(batch(64, &[(1, 2), (2, 1)])).unwrap();
         assert_eq!(rs.len(), 2);
@@ -280,7 +134,7 @@ mod tests {
     #[test]
     fn collaborative_host_path_is_correct() {
         let sys = SystemConfig::baseline().with_hw_opt();
-        let mut s = Scheduler::new(&sys, None);
+        let mut s = Scheduler::new(&sys);
         s.verify = true;
         // 2^13 triggers collaboration; PIM tiles computed by simulated units.
         let rs = s.execute(batch(1 << 13, &[(1, 2)])).unwrap();
@@ -293,11 +147,22 @@ mod tests {
     #[test]
     fn responses_align_with_requests() {
         let sys = SystemConfig::baseline();
-        let mut s = Scheduler::new(&sys, None);
+        let mut s = Scheduler::new(&sys);
         let rs = s.execute(batch(32, &[(9, 1), (11, 3), (5, 2)])).unwrap();
         assert_eq!(rs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![9, 11, 5]);
         assert_eq!(rs[1].spectra.len(), 3);
         assert_eq!(rs[2].spectra.len(), 2);
+    }
+
+    #[test]
+    fn repeated_shapes_hit_the_engine_plan_cache() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut s = Scheduler::new(&sys);
+        for round in 0..3u64 {
+            s.execute(batch(1 << 13, &[(round, 2)])).unwrap();
+        }
+        let (hits, misses) = s.engine().cache_stats();
+        assert_eq!((hits, misses), (2, 1));
     }
 }
 
@@ -311,7 +176,7 @@ mod robustness_tests {
     #[test]
     fn rejects_non_pow2_batch() {
         let sys = SystemConfig::baseline();
-        let mut s = Scheduler::new(&sys, None);
+        let mut s = Scheduler::new(&sys);
         let req = FftRequest { id: 1, n: 12, signals: vec![SoaVec::zeros(12)] };
         assert!(s.execute(Batch { n: 12, requests: vec![req] }).is_err());
     }
@@ -319,7 +184,7 @@ mod robustness_tests {
     #[test]
     fn rejects_mismatched_sizes_in_batch() {
         let sys = SystemConfig::baseline();
-        let mut s = Scheduler::new(&sys, None);
+        let mut s = Scheduler::new(&sys);
         let req = FftRequest { id: 1, n: 32, signals: vec![SoaVec::zeros(64)] };
         assert!(s.execute(Batch { n: 32, requests: vec![req] }).is_err());
     }
@@ -327,7 +192,7 @@ mod robustness_tests {
     #[test]
     fn rejects_empty_batch() {
         let sys = SystemConfig::baseline();
-        let mut s = Scheduler::new(&sys, None);
+        let mut s = Scheduler::new(&sys);
         assert!(s.execute(Batch { n: 32, requests: vec![] }).is_err());
     }
 }

@@ -1,6 +1,7 @@
-//! The service loop: a worker thread owns the scheduler (PJRT executables
-//! are not shared across threads) and drains an mpsc request queue with
-//! windowed batching; clients get responses over per-request channels.
+//! The service loop: a worker thread owns the scheduler and its
+//! [`crate::backend::FftEngine`] (PJRT executables are not shared across
+//! threads) and drains an mpsc request queue with windowed batching; clients
+//! get responses over per-request channels.
 //!
 //! std-threads + channels rather than an async runtime: the environment is
 //! offline (no tokio) and the workload is a simulation — a dedicated
@@ -30,8 +31,9 @@ impl Server {
     /// Spawn the scheduler thread. `window` requests (or `max_wait`) per
     /// batching round; `queue_depth` bounds admission (backpressure).
     ///
-    /// Takes a *factory* because PJRT handles are not `Send`: the runtime is
-    /// created on the worker thread that owns it for its whole life.
+    /// Takes a *factory* because PJRT handles are not `Send`: the engine and
+    /// its backends are created on the worker thread that owns them for
+    /// their whole life.
     pub fn spawn<F>(make_scheduler: F, window: usize, max_wait: Duration, queue_depth: usize) -> Self
     where
         F: FnOnce() -> Scheduler + Send + 'static,
@@ -131,7 +133,7 @@ mod tests {
     fn serves_requests_end_to_end() {
         let sys = SystemConfig::baseline();
         let server = Server::spawn(
-            move || Scheduler::new(&sys, None),
+            move || Scheduler::new(&sys),
             8,
             Duration::from_millis(5),
             64,
@@ -148,7 +150,7 @@ mod tests {
     fn concurrent_clients_get_their_own_answers() {
         let sys = SystemConfig::baseline();
         let server = std::sync::Arc::new(Server::spawn(
-            move || Scheduler::new(&sys, None),
+            move || Scheduler::new(&sys),
             16,
             Duration::from_millis(2),
             64,

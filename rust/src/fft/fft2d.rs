@@ -121,7 +121,7 @@ mod tests {
     #[test]
     fn scheduler_2d_small_sizes() {
         let sys = SystemConfig::baseline().with_hw_opt();
-        let mut sched = Scheduler::new(&sys, None);
+        let mut sched = Scheduler::new(&sys);
         let img = Image2d::random(16, 64, 9);
         let got = fft2d_via_scheduler(&mut sched, &img).unwrap();
         let want = fft2d_ref(&img);
@@ -132,7 +132,7 @@ mod tests {
     fn scheduler_2d_collaborative_dimension() {
         // Columns of 2^13 trigger the collaborative plan inside each pass.
         let sys = SystemConfig::baseline().with_hw_opt();
-        let mut sched = Scheduler::new(&sys, None);
+        let mut sched = Scheduler::new(&sys);
         let img = Image2d::random(4, 1 << 13, 21);
         let got = fft2d_via_scheduler(&mut sched, &img).unwrap();
         let want = fft2d_ref(&img);

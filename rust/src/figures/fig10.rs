@@ -4,15 +4,15 @@
 
 use anyhow::Result;
 
+use crate::backend::FftEngine;
 use crate::config::SystemConfig;
-use crate::planner::Planner;
 use crate::routines::OptLevel;
 
 use super::Table;
 
 pub fn fig10_pimbase(quick: bool) -> Result<Table> {
     let sys = SystemConfig::baseline();
-    let mut p = Planner::with_opt(&sys, OptLevel::Base);
+    let mut engine = FftEngine::builder().system(&sys).opt(OptLevel::Base).build();
     let batch = sys.concurrent_ffts(); // full occupancy, as the paper sweeps
     let hi = if quick { 12 } else { 18 };
     let mut t = Table::new(
@@ -21,7 +21,7 @@ pub fn fig10_pimbase(quick: bool) -> Result<Table> {
         &["log2n", "speedup"],
     );
     for ls in 5..=hi {
-        let ev = p.whole_fft_eval(1usize << ls, batch)?;
+        let ev = engine.whole_fft_eval(1usize << ls, batch)?;
         t.row(vec![ls.to_string(), format!("{:.4}", ev.speedup())]);
     }
     Ok(t)

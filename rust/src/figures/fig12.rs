@@ -3,8 +3,9 @@
 
 use anyhow::Result;
 
+use crate::backend::FftEngine;
 use crate::config::SystemConfig;
-use crate::planner::{PlanKind, Planner};
+use crate::planner::PlanKind;
 use crate::routines::OptLevel;
 
 use super::Table;
@@ -15,13 +16,12 @@ pub fn colab_table(name: &str, title: &str, opt: OptLevel, quick: bool) -> Resul
     } else {
         SystemConfig::baseline()
     };
-    let mut p = Planner::with_opt(&sys, opt);
+    let mut engine = FftEngine::builder().system(&sys).opt(opt).build();
     let batch = 1usize << 12;
     let mut t = Table::new(name, title, &["log2n", "speedup", "dm_savings", "tile_log2", "offload_frac"]);
     let sizes: Vec<u32> = if quick { vec![13, 16, 20, 25] } else { (13..=30).collect() };
     for ls in sizes {
-        let plan = p.plan(1usize << ls, batch);
-        let ev = p.evaluate(&plan)?;
+        let (plan, ev) = engine.plan(1usize << ls, batch)?;
         let tile = match plan.kind {
             PlanKind::Collaborative { m2, .. } => (m2 as f64).log2() as u32,
             PlanKind::GpuOnly => 0,

@@ -3,8 +3,9 @@
 
 use anyhow::Result;
 
+use crate::backend::FftEngine;
 use crate::config::SystemConfig;
-use crate::planner::{Planner, TileModel};
+use crate::planner::TileModel;
 use crate::routines::OptLevel;
 
 use super::Table;
@@ -44,12 +45,12 @@ pub fn fig19_sensitivity(quick: bool) -> Result<Table> {
     }
     // Pimacolaba max per config (text of §6.6): appended as tile_log2 = 0.
     for sys in variants() {
-        let mut p = Planner::with_opt(&sys, OptLevel::SwHw);
+        let mut engine = FftEngine::builder().system(&sys).opt(OptLevel::SwHw).build();
         let mut max = 0.0f64;
         let sizes: Vec<u32> = if quick { vec![13, 16] } else { (13..=24).collect() };
         for ls in sizes {
-            let plan = p.plan(1usize << ls, 1 << 12);
-            max = max.max(p.evaluate(&plan)?.speedup());
+            let (_, ev) = engine.plan(1usize << ls, 1 << 12)?;
+            max = max.max(ev.speedup());
         }
         t.row(vec![sys.name.clone(), "0".into(), format!("{max:.4}"), "-".into()]);
     }

@@ -11,23 +11,42 @@
 //! factor with twiddle-aware software routines (`sw-opt`) and a MADD+SUB ALU
 //! augmentation (`hw-opt`).
 //!
-//! ## Crate layout (three-layer architecture)
+//! ## Crate layout (engine/backend architecture)
 //!
+//! Execution is organized around a unified engine with pluggable substrate
+//! backends:
+//!
+//! * [`backend`] — the heart of the crate. [`backend::FftEngine`]
+//!   (builder-configured, with a memoized plan cache keyed by
+//!   `(n, batch, opt)`) plans, costs and executes FFTs through the
+//!   [`backend::ComputeBackend`] trait: `estimate` models a plan component
+//!   (time + data movement), `execute` computes real spectra. Concrete
+//!   backends: [`backend::HostFftBackend`] (reference FFT),
+//!   [`backend::PjrtGpuBackend`] (AOT artifacts over PJRT),
+//!   [`backend::PimSimBackend`] (functional PIM unit simulator), with
+//!   [`backend::GpuCostModel`] selecting the analytical or measured GPU
+//!   cost provider.
 //! * [`coordinator`] — **L3**: the FFT service. Routing, batching, hybrid
-//!   plan execution, metrics. Python is never on this path.
+//!   plan execution through the engine, metrics. Python is never on this
+//!   path, and no substrate is touched except through a backend.
+//! * [`planner`] — collaborative decomposition (§5.1): plan selection via
+//!   the offline tile-efficiency table; its cost evaluation is built from
+//!   the same providers the backends use.
 //! * [`runtime`] — PJRT glue: loads `artifacts/*.hlo.txt` (AOT-lowered from
-//!   the L2 jax model, which calls the L1 Pallas butterfly kernel) and
-//!   executes them on the CPU client.
+//!   the L2 jax model, which calls the L1 Pallas butterfly kernel). The XLA
+//!   bindings are gated behind the `pjrt` cargo feature; without it the
+//!   registry still parses manifests but execution falls back to the host
+//!   backend.
 //! * Substrates the paper depends on, all built here:
 //!   [`dram`] (command-level HBM timing), [`pim`] (functional + timing PIM
 //!   unit simulator), [`mapping`] (strided/baseline data layouts),
 //!   [`routines`] (PIM FFT command-stream generators), [`gpu_model`]
 //!   (the paper's analytical GPU model and a "measured" GPU simulator),
-//!   [`planner`] (collaborative decomposition), [`fft`] (host reference
-//!   FFT + four-step algebra).
-//! * [`figures`] — one generator per paper figure/table; used by the
-//!   criterion benches and the `figures` CLI subcommand.
+//!   [`fft`] (host reference FFT + four-step algebra).
+//! * [`figures`] — one generator per paper figure/table, all driven through
+//!   the engine; used by the benches and the `figures` CLI subcommand.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod dram;

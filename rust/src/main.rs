@@ -13,17 +13,37 @@
 use std::path::Path;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{synthetic_trace, FftRequest, Scheduler, Server, ServiceReport};
 use pimacolaba::fft::SoaVec;
 use pimacolaba::figures;
-use pimacolaba::planner::{Planner, TileModel};
+use pimacolaba::planner::TileModel;
 use pimacolaba::routines::OptLevel;
 use pimacolaba::runtime::Registry;
 use pimacolaba::util::cli::Args;
 use pimacolaba::util::Rng;
+
+const USAGE: &str = "\
+usage: pimacolaba <subcommand> [options]
+
+subcommands:
+  figures   [--out DIR] [--quick]            regenerate every paper figure/table
+  plan      --n N [--batch B] [--opt L]      show + evaluate the chosen plan
+            [--variant NAME]
+  tile      --n N [--opt L] [--variant NAME] PIM-FFT-Tile cost breakdown
+  serve     [--requests R] [--sizes a,b,..]  run the service over a synthetic trace
+            [--opt L] [--variant NAME]
+            [--artifacts DIR] [--no-artifacts] [--verify] [--seed S]
+  trace     [--out FILE] [--requests R]      emit a reproducible workload trace
+            [--sizes a,b,..] [--gap-us G] [--seed S]
+  artifacts [--dir DIR]                      list the AOT artifact manifest
+  config    [--opt L] [--variant NAME]       dump a system configuration
+
+opt levels: base | sw | hw | swhw (aliases: pim-base, sw-opt, hw-opt, sw-hw-opt, pimacolaba)
+variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024";
 
 fn parse_opt(s: &str) -> Result<OptLevel> {
     Ok(match s {
@@ -57,9 +77,12 @@ fn main() -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("config") => cmd_config(&args),
-        _ => {
-            eprintln!("usage: pimacolaba <figures|plan|tile|serve|trace|artifacts|config> [options]");
-            eprintln!("{}", include_str!("main.rs").lines().skip(2).take(10).collect::<Vec<_>>().join("\n"));
+        Some(other) => {
+            eprintln!("{USAGE}");
+            bail!("unknown subcommand '{other}'")
+        }
+        None => {
+            println!("{USAGE}");
             Ok(())
         }
     }
@@ -77,11 +100,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 1 << 12)?;
     let opt = parse_opt(args.get_or("opt", "swhw"))?;
     let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
-    let mut p = Planner::with_opt(&sys, opt);
-    let plan = p.plan(n, batch);
-    let ev = p.evaluate(&plan)?;
+    let mut engine = FftEngine::builder().system(&sys).opt(opt).build();
+    let (plan, ev) = engine.plan(n, batch)?;
     println!("{plan}");
-    println!("  valid tiles: {:?}", p.valid_tiles(n));
+    println!("  valid tiles: {:?}", engine.valid_tiles(n));
     println!("  modeled GPU-only: {:>12.3} µs", ev.gpu_only_ns / 1e3);
     println!("  modeled plan:     {:>12.3} µs  (speedup {:.3}x)", ev.plan_ns / 1e3, ev.speedup());
     println!(
@@ -135,8 +157,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
     let verify = args.flag("verify");
     let artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
-    let use_artifacts =
-        !args.flag("no-artifacts") && Path::new(&artifacts_dir).join("manifest.json").exists();
+    // PJRT execution needs both the AOT artifacts on disk and the `pjrt`
+    // feature (XLA bindings) compiled in; otherwise the engine serves GPU
+    // components on the host reference backend.
+    let use_artifacts = !args.flag("no-artifacts")
+        && cfg!(feature = "pjrt")
+        && Path::new(&artifacts_dir).join("manifest.json").exists();
 
     let trace = synthetic_trace(requests, &sizes, 50.0, args.get_usize("seed", 7)? as u64);
     println!(
@@ -149,12 +175,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sys2 = sys.clone();
     let server = Server::spawn(
         move || {
-            let registry = if use_artifacts {
-                Some(Registry::load(Path::new(&artifacts_dir)).expect("loading artifacts"))
-            } else {
-                None
-            };
-            let mut s = Scheduler::new(&sys2, registry);
+            let mut builder = FftEngine::builder().system(&sys2).opt(opt);
+            if use_artifacts {
+                let registry =
+                    Registry::load(Path::new(&artifacts_dir)).expect("loading artifacts");
+                builder = builder.gpu_backend(Box::new(PjrtGpuBackend::new(registry)));
+            }
+            let mut s = Scheduler::with_engine(builder.build());
             s.verify = verify;
             s
         },
@@ -199,9 +226,13 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     println!("platform: {}", reg.platform());
     println!("{:<40} {:>6} {:>8} {:>6} {:>6}", "path", "kind", "n", "m1", "b");
     for s in reg.specs() {
+        let file = s
+            .path
+            .file_name()
+            .ok_or_else(|| anyhow!("artifact entry has no file name: '{}'", s.path.display()))?;
         println!(
             "{:<40} {:>6} {:>8} {:>6} {:>6}",
-            s.path.file_name().unwrap().to_string_lossy(),
+            file.to_string_lossy(),
             match s.kind {
                 pimacolaba::runtime::ArtifactKind::Fft => "fft",
                 pimacolaba::runtime::ArtifactKind::GpuPart => "gpart",

@@ -5,9 +5,10 @@ use std::fmt;
 
 use anyhow::Result;
 
+use crate::backend::GpuCostModel;
 use crate::config::SystemConfig;
 use crate::fft::{is_pow2, log2};
-use crate::gpu_model::{babelstream_bw_bytes_per_ns, gpu_bytes_moved, gpu_time_ns, kernel_count};
+use crate::gpu_model::kernel_count;
 use crate::metrics::DataMovement;
 use crate::routines::OptLevel;
 
@@ -75,17 +76,25 @@ impl PlanEval {
     }
 }
 
-/// The §5.1 planner: owns the offline tile table for one (system, opt).
+/// The §5.1 planner: owns the offline tile table for one (system, opt) and
+/// a pluggable GPU cost provider (`backend::GpuCostModel`).
 pub struct Planner {
     sys: SystemConfig,
     tiles: TileModel,
+    gpu_cost: GpuCostModel,
 }
 
 impl Planner {
+    /// Planner with an explicit GPU cost provider (the `FftEngine` builder
+    /// goes through here so planner and backends price GPU work identically).
+    pub fn with_models(sys: &SystemConfig, opt: OptLevel, gpu_cost: GpuCostModel) -> Self {
+        Self { sys: sys.clone(), tiles: TileModel::new(sys, opt), gpu_cost }
+    }
+
     /// Planner at a given optimization level (`OptLevel::SwHw` + a hw-opt
-    /// system = full Pimacolaba).
+    /// system = full Pimacolaba), with the paper's analytical GPU model.
     pub fn with_opt(sys: &SystemConfig, opt: OptLevel) -> Self {
-        Self { sys: sys.clone(), tiles: TileModel::new(sys, opt) }
+        Self::with_models(sys, opt, GpuCostModel::Analytical)
     }
 
     /// Pimacolaba defaults: sw-hw-opt when the system has the ALU
@@ -147,33 +156,38 @@ impl Planner {
     }
 
     /// Model-evaluate a plan (speedup + data movement vs GPU-only).
+    ///
+    /// Costs come from the same providers the backend API exposes: the
+    /// configured [`GpuCostModel`] prices the GPU side, the offline tile
+    /// table prices the PIM side — so `FftEngine` estimates and legacy
+    /// planner evaluations agree by construction.
     pub fn evaluate(&mut self, plan: &CollabPlan) -> Result<PlanEval> {
         let (n, batch) = (plan.n, plan.batch);
-        let gpu_only_ns = gpu_time_ns(n, batch, &self.sys);
-        let movement_base = DataMovement::gpu_only(gpu_bytes_moved(n, batch, &self.sys));
+        let base = self.gpu_cost.full_fft(n, batch, &self.sys);
         match plan.kind {
             PlanKind::GpuOnly => Ok(PlanEval {
-                gpu_only_ns,
-                plan_ns: gpu_only_ns,
-                movement_base,
-                movement_plan: movement_base,
+                gpu_only_ns: base.time_ns,
+                plan_ns: base.time_ns,
+                movement_base: base.movement,
+                movement_plan: base.movement,
                 offload_fraction: 0.0,
             }),
             PlanKind::Collaborative { m1, m2 } => {
                 // GPU component: k(m1) passes over the whole signal (column
                 // FFTs + fused twiddle multiply).
-                let k1 = kernel_count(m1, self.sys.gpu.lds_max_fft) as f64;
-                let gpu_bytes = 16.0 * n as f64 * batch as f64 * k1;
-                let gpu_part_ns = gpu_bytes / babelstream_bw_bytes_per_ns(&self.sys);
+                let stage = self.gpu_cost.gpu_stage(n, m1, m2, batch, &self.sys);
                 // PIM component: batch × m1 row FFTs of size m2.
                 let tile_ffts = batch * m1;
                 let pim_ns = self.tiles.pim_time_ns(m2, tile_ffts)?;
                 let cmd_bytes = self.tiles.cmd_bytes(m2, tile_ffts)?;
                 Ok(PlanEval {
-                    gpu_only_ns,
-                    plan_ns: gpu_part_ns + pim_ns,
-                    movement_base,
-                    movement_plan: DataMovement { gpu_bytes, pim_cmd_bytes: cmd_bytes },
+                    gpu_only_ns: base.time_ns,
+                    plan_ns: stage.time_ns + pim_ns,
+                    movement_base: base.movement,
+                    movement_plan: DataMovement {
+                        gpu_bytes: stage.movement.gpu_bytes,
+                        pim_cmd_bytes: cmd_bytes,
+                    },
                     offload_fraction: log2(m2) as f64 / log2(n) as f64,
                 })
             }
@@ -183,13 +197,13 @@ impl Planner {
     /// Fig 10's subject: offload the *entire* FFT to PIM (pim-base style)
     /// and compare against the GPU model.
     pub fn whole_fft_eval(&mut self, n: usize, batch: usize) -> Result<PlanEval> {
-        let gpu_only_ns = gpu_time_ns(n, batch, &self.sys);
+        let base = self.gpu_cost.full_fft(n, batch, &self.sys);
         let pim_ns = self.tiles.pim_time_ns(n, batch)?;
         let cmd_bytes = self.tiles.cmd_bytes(n, batch)?;
         Ok(PlanEval {
-            gpu_only_ns,
+            gpu_only_ns: base.time_ns,
             plan_ns: pim_ns,
-            movement_base: DataMovement::gpu_only(gpu_bytes_moved(n, batch, &self.sys)),
+            movement_base: base.movement,
             movement_plan: DataMovement { gpu_bytes: 0.0, pim_cmd_bytes: cmd_bytes },
             offload_fraction: 1.0,
         })

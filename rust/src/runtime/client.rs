@@ -1,64 +1,121 @@
 //! Thin PJRT wrapper: compile HLO text once, execute SoA complex batches.
+//!
+//! The real implementation binds the `xla` crate (xla_extension) and is only
+//! compiled with the `pjrt` cargo feature, because those bindings are not
+//! available in the offline build environment. Without the feature a stub
+//! [`Runtime`] still lets [`super::Registry`] parse manifests and list
+//! artifact specs, but refuses to compile or execute HLO — callers fall back
+//! to the host reference path (see `backend::PjrtGpuBackend`).
 
-use anyhow::{ensure, Context, Result};
+#[cfg(feature = "pjrt")]
+mod imp {
+    use anyhow::{ensure, Context, Result};
 
-use crate::fft::SoaVec;
+    use crate::fft::SoaVec;
 
-/// A compiled executable with its (batch, n) shape contract.
-pub struct CompiledFft {
-    exe: xla::PjRtLoadedExecutable,
-    pub batch: usize,
-    pub n: usize,
-}
+    /// A compiled executable with its (batch, n) shape contract.
+    pub struct CompiledFft {
+        exe: xla::PjRtLoadedExecutable,
+        pub batch: usize,
+        pub n: usize,
+    }
 
-impl CompiledFft {
-    /// Execute on a (batch, n) SoA pair; returns the output pair.
-    ///
-    /// All our artifacts take two f32[batch, n] parameters (re, im) and
-    /// return a 2-tuple of the same shapes (aot.py lowers with
-    /// `return_tuple=True`).
-    pub fn run(&self, re: &[f32], im: &[f32]) -> Result<SoaVec> {
-        let want = self.batch * self.n;
-        ensure!(re.len() == want && im.len() == want, "shape mismatch: {} vs {want}", re.len());
-        let dims = [self.batch as i64, self.n as i64];
-        let lre = xla::Literal::vec1(re).reshape(&dims)?;
-        let lim = xla::Literal::vec1(im).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lre, lim])?[0][0].to_literal_sync()?;
-        let (o_re, o_im) = result.to_tuple2()?;
-        Ok(SoaVec::new(o_re.to_vec::<f32>()?, o_im.to_vec::<f32>()?))
+    impl CompiledFft {
+        /// Execute on a (batch, n) SoA pair; returns the output pair.
+        ///
+        /// All our artifacts take two f32[batch, n] parameters (re, im) and
+        /// return a 2-tuple of the same shapes (aot.py lowers with
+        /// `return_tuple=True`).
+        pub fn run(&self, re: &[f32], im: &[f32]) -> Result<SoaVec> {
+            let want = self.batch * self.n;
+            ensure!(re.len() == want && im.len() == want, "shape mismatch: {} vs {want}", re.len());
+            let dims = [self.batch as i64, self.n as i64];
+            let lre = xla::Literal::vec1(re).reshape(&dims)?;
+            let lim = xla::Literal::vec1(im).reshape(&dims)?;
+            let result = self.exe.execute::<xla::Literal>(&[lre, lim])?[0][0].to_literal_sync()?;
+            let (o_re, o_im) = result.to_tuple2()?;
+            Ok(SoaVec::new(o_re.to_vec::<f32>()?, o_im.to_vec::<f32>()?))
+        }
+    }
+
+    /// Owns the PJRT client and compiles artifacts.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// CPU PJRT client (the only backend in this environment; real
+        /// deployments would select ROCm/CUDA/TPU plugins here).
+        pub fn cpu() -> Result<Self> {
+            Ok(Self { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile HLO text into an executable with a declared shape contract.
+        pub fn compile_hlo_file(
+            &self,
+            path: &std::path::Path,
+            batch: usize,
+            n: usize,
+        ) -> Result<CompiledFft> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(CompiledFft { exe, batch, n })
+        }
     }
 }
 
-/// Owns the PJRT client and compiles artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::{bail, Result};
+
+    use crate::fft::SoaVec;
+
+    /// Shape-contract stand-in compiled when the `pjrt` feature is off.
+    pub struct CompiledFft {
+        pub batch: usize,
+        pub n: usize,
+    }
+
+    impl CompiledFft {
+        pub fn run(&self, _re: &[f32], _im: &[f32]) -> Result<SoaVec> {
+            bail!(
+                "executing AOT artifacts ({}x{}) requires the `pjrt` feature (XLA bindings)",
+                self.batch,
+                self.n
+            )
+        }
+    }
+
+    /// Stub runtime: manifests load, HLO compilation is refused.
+    pub struct Runtime;
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Ok(Self)
+        }
+
+        pub fn platform(&self) -> String {
+            "cpu (pjrt feature disabled)".into()
+        }
+
+        pub fn compile_hlo_file(
+            &self,
+            path: &std::path::Path,
+            _batch: usize,
+            _n: usize,
+        ) -> Result<CompiledFft> {
+            bail!("cannot compile {}: built without the `pjrt` feature", path.display())
+        }
+    }
 }
 
-impl Runtime {
-    /// CPU PJRT client (the only backend in this environment; real
-    /// deployments would select ROCm/CUDA/TPU plugins here).
-    pub fn cpu() -> Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile HLO text into an executable with a declared shape contract.
-    pub fn compile_hlo_file(
-        &self,
-        path: &std::path::Path,
-        batch: usize,
-        n: usize,
-    ) -> Result<CompiledFft> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(CompiledFft { exe, batch, n })
-    }
-}
+pub use imp::{CompiledFft, Runtime};

@@ -1,0 +1,163 @@
+//! Backend conformance suite: the new `FftEngine`/`ComputeBackend` API must
+//! reproduce the legacy `Planner::evaluate` numbers (the source of every
+//! paper figure) and the reference FFT numerics, and its plan cache must
+//! actually memoize repeated shapes.
+
+use pimacolaba::backend::{
+    ComputeBackend, FftEngine, GpuCostModel, HostFftBackend, PimSimBackend, PlanComponent,
+};
+use pimacolaba::config::SystemConfig;
+use pimacolaba::fft::{fft_soa, SoaVec};
+use pimacolaba::planner::{PlanKind, Planner};
+use pimacolaba::routines::OptLevel;
+
+fn sys_for(opt: OptLevel) -> SystemConfig {
+    if opt.needs_hw() {
+        SystemConfig::baseline().with_hw_opt()
+    } else {
+        SystemConfig::baseline()
+    }
+}
+
+fn close(a: f64, b: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    assert!(
+        ((a - b) / denom).abs() < 1e-12,
+        "{what}: engine {b} != legacy {a}"
+    );
+}
+
+/// Engine estimates (composed from the backends' `estimate` halves) must
+/// match the legacy planner evaluation on the paper's Fig 17 size sweep
+/// (2^5–2^27) for every optimization level the figure plots.
+#[test]
+fn engine_estimates_match_legacy_planner_on_fig17_sizes() {
+    for opt in [OptLevel::Sw, OptLevel::Hw, OptLevel::SwHw] {
+        let sys = sys_for(opt);
+        let mut legacy = Planner::with_opt(&sys, opt);
+        let mut engine = FftEngine::builder().system(&sys).opt(opt).build();
+        let batch = 1usize << 12;
+        for logn in 5..=27u32 {
+            let n = 1usize << logn;
+            let plan_l = legacy.plan(n, batch);
+            let ev_l = legacy.evaluate(&plan_l).unwrap();
+            let (plan_e, ev_e) = engine.plan(n, batch).unwrap();
+            assert_eq!(plan_l.kind, plan_e.kind, "{opt} 2^{logn}");
+            close(ev_l.gpu_only_ns, ev_e.gpu_only_ns, "gpu_only_ns");
+            close(ev_l.plan_ns, ev_e.plan_ns, "plan_ns");
+            close(ev_l.speedup(), ev_e.speedup(), "speedup");
+            close(ev_l.movement_base.total(), ev_e.movement_base.total(), "movement_base");
+            close(ev_l.movement_plan.gpu_bytes, ev_e.movement_plan.gpu_bytes, "plan gpu_bytes");
+            close(
+                ev_l.movement_plan.pim_cmd_bytes,
+                ev_e.movement_plan.pim_cmd_bytes,
+                "plan cmd_bytes",
+            );
+            close(ev_l.offload_fraction, ev_e.offload_fraction, "offload_fraction");
+        }
+    }
+}
+
+/// Whole-FFT offload (Fig 10) through the engine equals the legacy path.
+#[test]
+fn engine_whole_fft_eval_matches_legacy() {
+    let sys = SystemConfig::baseline();
+    let mut legacy = Planner::with_opt(&sys, OptLevel::Base);
+    let mut engine = FftEngine::builder().system(&sys).opt(OptLevel::Base).build();
+    let batch = sys.concurrent_ffts();
+    for logn in [5u32, 10, 14, 18] {
+        let l = legacy.whole_fft_eval(1 << logn, batch).unwrap();
+        let e = engine.whole_fft_eval(1 << logn, batch).unwrap();
+        close(l.speedup(), e.speedup(), "whole-offload speedup");
+        close(l.movement_plan.total(), e.movement_plan.total(), "whole-offload movement");
+    }
+}
+
+/// `HostFftBackend` and `PimSimBackend` must agree (within simulator
+/// tolerance) on PIM-FFT-Tile execution, and both must match the reference
+/// FFT — the `execute` half of the conformance contract.
+#[test]
+fn tile_execution_conforms_across_backends() {
+    let opt = OptLevel::SwHw;
+    let sys = sys_for(opt);
+    let mut host = HostFftBackend::default();
+    let mut pim = PimSimBackend::new(&sys, opt);
+    for m2 in [32usize, 256] {
+        let inputs: Vec<SoaVec> =
+            (0..9).map(|i| SoaVec::random(m2, 1000 + m2 as u64 + i)).collect();
+        let c = PlanComponent::PimTile { m2, count: inputs.len(), opt };
+        let host_out = host.execute(&c, &inputs).unwrap();
+        let pim_out = pim.execute(&c, &inputs).unwrap();
+        assert_eq!(host_out.len(), inputs.len());
+        assert_eq!(pim_out.len(), inputs.len());
+        let tol = 3e-3 * (m2 as f32).sqrt();
+        for ((x, h), p) in inputs.iter().zip(&host_out).zip(&pim_out) {
+            assert!(h.max_abs_diff(&fft_soa(x)) < tol, "host m2={m2}");
+            assert!(p.max_abs_diff(&fft_soa(x)) < tol, "pim m2={m2}");
+            assert!(p.max_abs_diff(h) < 2.0 * tol, "host vs pim m2={m2}");
+        }
+    }
+}
+
+/// GPU-stage estimates agree between the two GPU-capable backends under the
+/// same cost model (they are interchangeable cost providers).
+#[test]
+fn gpu_backends_price_components_identically() {
+    let sys = SystemConfig::baseline();
+    let mut a = HostFftBackend::new(GpuCostModel::Analytical);
+    let mut m = HostFftBackend::new(GpuCostModel::Measured);
+    let full = PlanComponent::FullFft { n: 1 << 13, batch: 64 };
+    let stage = PlanComponent::GpuStage { n: 1 << 13, m1: 1 << 8, m2: 1 << 5, batch: 64 };
+    // Same movement accounting regardless of the time model.
+    let (fa, fm) = (a.estimate(&full, &sys).unwrap(), m.estimate(&full, &sys).unwrap());
+    assert_eq!(fa.movement, fm.movement);
+    let (sa, sm) = (a.estimate(&stage, &sys).unwrap(), m.estimate(&stage, &sys).unwrap());
+    assert_eq!(sa.movement, sm.movement);
+    // The measured model charges launch overhead: never faster.
+    assert!(fm.time_ns >= fa.time_ns);
+    assert!(sm.time_ns >= sa.time_ns);
+}
+
+/// End-to-end engine execution (collaborative split across both backends)
+/// must match the reference FFT.
+#[test]
+fn engine_run_matches_reference_fft() {
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let mut engine = FftEngine::builder().system(&sys).build();
+    // GPU-only regime.
+    let xs: Vec<SoaVec> = (0..4).map(|i| SoaVec::random(256, 70 + i)).collect();
+    let run = engine.run(256, &xs).unwrap();
+    assert_eq!(run.plan.kind, PlanKind::GpuOnly);
+    for (x, y) in xs.iter().zip(&run.outputs) {
+        assert!(y.max_abs_diff(&fft_soa(x)) < 1e-2);
+    }
+    // Collaborative regime.
+    let n = 1 << 13;
+    let xs: Vec<SoaVec> = (0..2).map(|i| SoaVec::random(n, 90 + i)).collect();
+    let run = engine.run(n, &xs).unwrap();
+    assert!(matches!(run.plan.kind, PlanKind::Collaborative { .. }));
+    for (x, y) in xs.iter().zip(&run.outputs) {
+        assert!(y.max_abs_diff(&fft_soa(x)) < 0.35);
+    }
+}
+
+/// Repeated `(n, batch)` requests must hit the memoized plan cache.
+#[test]
+fn plan_cache_memoizes_repeated_requests() {
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let mut engine = FftEngine::builder().system(&sys).build();
+    let shapes = [(1usize << 13, 64usize), (1 << 14, 32), (1 << 13, 64), (1 << 13, 64)];
+    for (n, b) in shapes {
+        engine.plan(n, b).unwrap();
+    }
+    let (hits, misses) = engine.cache_stats();
+    assert_eq!(misses, 2, "two unique shapes");
+    assert_eq!(hits, 2, "two repeats");
+    assert_eq!(engine.cache_len(), 2);
+    // The cached and fresh evaluations are identical.
+    let (p1, e1) = engine.plan(1 << 13, 64).unwrap();
+    let mut fresh = FftEngine::builder().system(&sys).build();
+    let (p2, e2) = fresh.plan(1 << 13, 64).unwrap();
+    assert_eq!(p1, p2);
+    close(e1.speedup(), e2.speedup(), "cached vs fresh speedup");
+}

@@ -55,7 +55,7 @@ fn manual_fourstep_with_pim_tiles_all_opts() {
 #[test]
 fn scheduler_matches_manual_composition() {
     let sys = SystemConfig::baseline().with_hw_opt();
-    let mut sched = Scheduler::new(&sys, None);
+    let mut sched = Scheduler::new(&sys);
     sched.verify = true;
     for n in [1 << 13, 1 << 14] {
         let batch = Batch { n, requests: vec![FftRequest::random(1, n, 2, n as u64)] };
@@ -97,7 +97,7 @@ fn impulse_and_tone_through_collaborative_path() {
 #[test]
 fn linearity_through_scheduler() {
     let sys = SystemConfig::baseline().with_hw_opt();
-    let mut sched = Scheduler::new(&sys, None);
+    let mut sched = Scheduler::new(&sys);
     let n = 1 << 13;
     let a = SoaVec::random(n, 1);
     let b = SoaVec::random(n, 2);

@@ -222,7 +222,7 @@ fn prop_batcher_preserves_requests() {
 #[test]
 fn prop_scheduler_host_path_always_correct() {
     let sys = SystemConfig::baseline().with_hw_opt();
-    let mut sched = Scheduler::new(&sys, None);
+    let mut sched = Scheduler::new(&sys);
     sched.verify = true;
     forall_cases("scheduler responses verify vs reference", 12, |rng| {
         let n = rng.pow2(4, 14);

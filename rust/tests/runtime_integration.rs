@@ -1,13 +1,15 @@
 //! Integration: AOT artifacts → PJRT runtime → coordinator, end to end.
 //!
-//! Requires `make artifacts` to have produced `artifacts/manifest.json`
-//! (the Makefile dependency chain guarantees it for `make test`); the tests
-//! are skipped with a notice when artifacts are absent so `cargo test` alone
-//! stays green in a fresh checkout.
+//! Requires `make artifacts` to have produced `artifacts/manifest.json` and
+//! the crate to be built with the `pjrt` feature (the XLA bindings are not
+//! available in the offline environment); the execution tests are skipped
+//! with a notice otherwise so `cargo test` alone stays green in a fresh
+//! checkout. Manifest parsing is exercised unconditionally.
 
 use std::path::Path;
 use std::time::Duration;
 
+use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{Batch, FftRequest, Scheduler, Server};
 use pimacolaba::fft::{fft_soa, SoaVec};
@@ -15,6 +17,10 @@ use pimacolaba::planner::PlanKind;
 use pimacolaba::runtime::Registry;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — artifact execution unavailable");
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)
@@ -22,6 +28,12 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
         eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
         None
     }
+}
+
+fn pjrt_scheduler(sys: &SystemConfig, registry: Registry) -> Scheduler {
+    Scheduler::with_engine(
+        FftEngine::builder().system(sys).gpu_backend(Box::new(PjrtGpuBackend::new(registry))).build(),
+    )
 }
 
 #[test]
@@ -32,7 +44,7 @@ fn manifest_loads_and_lists_variants() {
     assert!(reg.fft_spec(32).is_some());
     assert!(reg.fft_spec(4096).is_some());
     assert!(!reg.gpu_part_m1s(1 << 13).is_empty());
-    assert_eq!(reg.platform().to_lowercase(), "cpu");
+    assert!(reg.platform().to_lowercase().starts_with("cpu"), "{}", reg.platform());
 }
 
 #[test]
@@ -69,7 +81,7 @@ fn collaborative_with_pjrt_gpu_component_is_correct() {
     let Some(dir) = artifacts_dir() else { return };
     let reg = Registry::load(&dir).unwrap();
     let sys = SystemConfig::baseline().with_hw_opt();
-    let mut sched = Scheduler::new(&sys, Some(reg));
+    let mut sched = pjrt_scheduler(&sys, reg);
     sched.verify = true;
     let n = 1 << 13;
     let batch = Batch { n, requests: vec![FftRequest::random(1, n, 2, 99)] };
@@ -100,7 +112,7 @@ fn server_with_runtime_serves_mixed_trace() {
     let server = Server::spawn(
         move || {
             let reg = Registry::load(&dir).unwrap();
-            let mut s = Scheduler::new(&sys, Some(reg));
+            let mut s = pjrt_scheduler(&sys, reg);
             s.verify = true;
             s
         },
