@@ -1,0 +1,25 @@
+//! Cluster-simulator scaling bench: wall-clock cost of simulating a large
+//! open-loop trace, and the virtual-time serving numbers at each shard
+//! count (the latency-vs-capacity curve the planner walks).
+
+use pimacolaba::cluster::{run_cluster, ClusterConfig, RouterKind};
+use pimacolaba::coordinator::{Arrival, SizeMix, Workload};
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let sizes = [32usize, 256, 4096, 8192, 16384];
+    let workload =
+        Workload::new(Arrival::Poisson, 1_000_000.0, SizeMix::uniform(&sizes).unwrap()).unwrap();
+    let trace = workload.generate(200_000, 42);
+    let bench = Bench::quick();
+    for shards in [1usize, 4, 8, 16] {
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = shards;
+        cfg.router = RouterKind::SizeAffinity;
+        bench.run(&format!("cluster 200k-requests shards={shards}"), || {
+            run_cluster(&trace, &cfg).unwrap()
+        });
+        let report = run_cluster(&trace, &cfg).unwrap();
+        println!("  {}", report.summary());
+    }
+}

@@ -1,0 +1,215 @@
+//! SLO-aware capacity planning: the smallest shard count whose simulated
+//! p99 latency meets a target.
+//!
+//! The planner answers the ROADMAP question directly — "how many GPU+PIM
+//! shards hold p99 under the SLO at this request rate?" — by running the
+//! deterministic simulator at candidate shard counts: doubling until the
+//! SLO is met, then bisecting down to the boundary. The returned count
+//! meets the SLO and (when greater than one) the count below it does not;
+//! every probe is recorded so a report can show the latency-vs-capacity
+//! curve that justified the answer.
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::Trace;
+use crate::util::Json;
+
+use super::sim::{run_cluster, ClusterConfig, ClusterReport};
+
+/// One simulated capacity probe.
+#[derive(Debug, Clone, Copy)]
+pub struct CapacityProbe {
+    pub shards: usize,
+    pub p99_us: f64,
+    pub meets: bool,
+}
+
+/// The planner's answer.
+#[derive(Debug, Clone)]
+pub struct CapacityPlan {
+    /// Minimal shard count meeting the SLO.
+    pub shards: usize,
+    pub slo_us: f64,
+    /// p99 at the chosen count.
+    pub p99_us: f64,
+    /// Every (shards, p99) point the search evaluated, ascending.
+    pub probes: Vec<CapacityProbe>,
+    /// Full simulator report at the chosen count.
+    pub report: ClusterReport,
+}
+
+impl CapacityPlan {
+    pub fn summary(&self) -> String {
+        format!(
+            "capacity: {} shards meet p99 ≤ {:.0}µs (achieved p99 {:.1}µs, {} probes)",
+            self.shards,
+            self.slo_us,
+            self.p99_us,
+            self.probes.len()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slo_us", Json::num(self.slo_us)),
+            ("shards", Json::num(self.shards as f64)),
+            ("p99_us", Json::num(self.p99_us)),
+            (
+                "probes",
+                Json::arr(
+                    self.probes
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("shards", Json::num(p.shards as f64)),
+                                ("p99_us", Json::num(p.p99_us)),
+                                ("meets", Json::Bool(p.meets)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("report", self.report.to_json()),
+        ])
+    }
+}
+
+/// Find the minimal shard count whose simulated p99 is ≤ `slo_us` on
+/// `trace`, probing at most up to `max_shards`. `cfg.shards` is ignored;
+/// every other knob (router, window, system) is used as given.
+pub fn plan_capacity(
+    trace: &Trace,
+    cfg: &ClusterConfig,
+    slo_us: f64,
+    max_shards: usize,
+) -> Result<CapacityPlan> {
+    ensure!(slo_us.is_finite() && slo_us > 0.0, "SLO must be a positive latency in µs");
+    ensure!(max_shards >= 1, "max shard count must be at least 1");
+
+    let mut cache: BTreeMap<usize, ClusterReport> = BTreeMap::new();
+    let probe = |k: usize, cache: &mut BTreeMap<usize, ClusterReport>| -> Result<f64> {
+        if let Entry::Vacant(slot) = cache.entry(k) {
+            let mut c = cfg.clone();
+            c.shards = k;
+            slot.insert(run_cluster(trace, &c)?);
+        }
+        Ok(cache[&k].latency_p_us(99.0))
+    };
+
+    // Double until the SLO is met.
+    let mut lo = 0usize; // sentinel: "zero shards" trivially fails
+    let mut hi = 1usize;
+    loop {
+        let p99 = probe(hi, &mut cache)?;
+        if p99 <= slo_us {
+            break;
+        }
+        if hi >= max_shards {
+            bail!(
+                "p99 ≤ {slo_us} µs not achievable with up to {max_shards} shards \
+                 (p99 at {max_shards} shards: {p99:.1} µs)"
+            );
+        }
+        lo = hi;
+        hi = (hi * 2).min(max_shards);
+    }
+
+    // Bisect the boundary: `lo` fails (or is the zero-shard sentinel),
+    // `hi` meets.
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if probe(mid, &mut cache)? <= slo_us {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+
+    let probes: Vec<CapacityProbe> = cache
+        .iter()
+        .map(|(&shards, rep)| {
+            let p99_us = rep.latency_p_us(99.0);
+            CapacityProbe { shards, p99_us, meets: p99_us <= slo_us }
+        })
+        .collect();
+    let report = cache.remove(&hi).unwrap();
+    let p99_us = report.latency_p_us(99.0);
+    Ok(CapacityPlan { shards: hi, slo_us, p99_us, probes, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::RouterKind;
+    use crate::coordinator::{Arrival, SizeMix, Workload};
+
+    fn hot_trace() -> Trace {
+        // Large FFTs arriving fast enough to overload a single shard.
+        Workload::new(Arrival::Poisson, 4_000_000.0, SizeMix::uniform(&[16384]).unwrap())
+            .unwrap()
+            .generate(3000, 13)
+    }
+
+    /// Capacity planning needs a router that spreads a single-size workload
+    /// (size-affinity pins one size to one shard, so extra shards would
+    /// never help).
+    fn spreading_cfg() -> ClusterConfig {
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.router = RouterKind::RoundRobin;
+        cfg
+    }
+
+    #[test]
+    fn finds_minimal_count_meeting_slo() {
+        let trace = hot_trace();
+        let cfg = spreading_cfg();
+        let slo_us = 150.0;
+        let plan = plan_capacity(&trace, &cfg, slo_us, 64).unwrap();
+        assert!(plan.p99_us <= slo_us);
+        assert!(plan.shards >= 1);
+
+        // The returned count meets the SLO...
+        let mut c = cfg.clone();
+        c.shards = plan.shards;
+        let at = run_cluster(&trace, &c).unwrap();
+        assert!(at.latency_p_us(99.0) <= slo_us, "{} shards p99 {}", plan.shards, at.latency_p_us(99.0));
+
+        // ...and one fewer does not (the single shard is overloaded, so the
+        // boundary cannot sit at 1).
+        assert!(plan.shards > 1, "single shard should be overloaded in this workload");
+        let mut c = cfg.clone();
+        c.shards = plan.shards - 1;
+        let below = run_cluster(&trace, &c).unwrap();
+        assert!(
+            below.latency_p_us(99.0) > slo_us,
+            "{} shards p99 {} should miss the {slo_us}µs SLO",
+            plan.shards - 1,
+            below.latency_p_us(99.0)
+        );
+    }
+
+    #[test]
+    fn probes_cover_the_boundary() {
+        let trace = hot_trace();
+        let plan = plan_capacity(&trace, &spreading_cfg(), 150.0, 64).unwrap();
+        assert!(plan.probes.iter().any(|p| p.shards == plan.shards && p.meets));
+        assert!(plan.probes.iter().any(|p| p.shards == plan.shards - 1 && !p.meets));
+        // JSON artifact is well-formed and self-contained.
+        let j = plan.to_json().to_string();
+        assert!(j.contains("\"slo_us\""));
+        assert!(j.contains("\"probes\""));
+        assert!(j.contains("\"per_shard\""));
+    }
+
+    #[test]
+    fn unachievable_slo_is_a_contextful_error() {
+        let trace = hot_trace();
+        let err = plan_capacity(&trace, &spreading_cfg(), 0.001, 2).unwrap_err().to_string();
+        assert!(err.contains("not achievable"), "{err}");
+        assert!(plan_capacity(&trace, &spreading_cfg(), -5.0, 8).is_err());
+        assert!(plan_capacity(&trace, &spreading_cfg(), 100.0, 0).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! **L4 — the cluster**: a deterministic discrete-event simulator for
+//! sharded FFT serving, plus SLO-aware capacity planning.
+//!
+//! The coordinator (L3) serves one worker's worth of traffic for real; this
+//! layer answers the questions that come *before* buying hardware: how many
+//! GPU+PIM shards does p99 ≤ SLO need at a million requests per second, and
+//! which routing policy gets there cheapest? It simulates millions of trace
+//! requests in virtual time — wall-clock seconds — because shards never
+//! compute spectra: service time is the [`crate::backend::FftEngine`]'s own
+//! cost estimate for each padded batch shape, i.e. the same §4.4.1/§5.1
+//! models every paper figure is built from.
+//!
+//! Pieces:
+//!
+//! * [`event`](EventQueue) — virtual clock + deterministic event heap
+//!   (FIFO tie-break, so identical seeds give bit-identical reports);
+//! * [`Shard`] — an [`crate::backend::FftEngine`] behind a size-keyed queue
+//!   with windowed batching (dispatch at `window_signals`, or on the
+//!   `max_wait_us` deadline, or work-conservingly on completion) and padded
+//!   power-of-two batch shapes;
+//! * [`ShardRouter`] — pluggable routing: [`RouterKind::RoundRobin`]
+//!   (spread, cold caches), [`RouterKind::SizeAffinity`] (each FFT size has
+//!   a home shard, hot plan caches), [`RouterKind::LeastLoaded`] (chase
+//!   queue depth);
+//! * [`run_cluster`] — the simulation itself, producing a [`ClusterReport`]
+//!   with log-bucketed latency percentiles (p50/p95/p99/p999), per-shard
+//!   utilization, queue depth, batch occupancy, plan-cache hit rates, and
+//!   per-substrate data movement — emitted as a JSON artifact by the
+//!   `cluster` CLI subcommand;
+//! * [`plan_capacity`] — binary search over shard count for the smallest
+//!   cluster meeting a p99 SLO, with the full latency-vs-capacity probe
+//!   curve in the answer.
+//!
+//! Workloads come from [`crate::coordinator::Workload`]: open-loop
+//! Poisson/burst/diurnal arrivals over a size-mix profile.
+
+mod capacity;
+mod event;
+mod router;
+mod shard;
+mod sim;
+
+pub use capacity::{plan_capacity, CapacityPlan, CapacityProbe};
+pub use event::{Event, EventQueue};
+pub use router::{
+    LeastLoadedRouter, RoundRobinRouter, RouterKind, ShardRouter, SizeAffinityRouter,
+};
+pub use shard::{Shard, ShardStats, SimRequest};
+pub use sim::{run_cluster, ClusterConfig, ClusterReport, ShardSummary};

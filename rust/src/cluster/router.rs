@@ -1,0 +1,188 @@
+//! Request → shard routing policies.
+//!
+//! Every policy is deterministic. The interesting trade-off is cache
+//! affinity vs load balance: [`RoundRobinRouter`] spreads perfectly but
+//! makes every shard plan every FFT shape (cold plan caches everywhere),
+//! [`SizeAffinityRouter`] pins each size to one home shard so its engine's
+//! plan cache stays hot, [`LeastLoadedRouter`] chases instantaneous queue
+//! depth at the cost of shape locality.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::Shard;
+
+/// A routing policy: pick a shard for each arriving request.
+pub trait ShardRouter {
+    fn name(&self) -> &'static str;
+
+    /// Choose the destination shard for a request of FFT size `n` carrying
+    /// `signals` signals. `shards` is never empty.
+    fn route(&mut self, n: usize, signals: usize, shards: &[Shard]) -> usize;
+}
+
+/// Cycle through shards in order.
+#[derive(Debug, Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl ShardRouter for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _n: usize, _signals: usize, shards: &[Shard]) -> usize {
+        let s = self.next % shards.len();
+        self.next = self.next.wrapping_add(1);
+        s
+    }
+}
+
+/// Sticky size → shard assignment: the first time a size appears it is
+/// pinned to the shard with the fewest pinned sizes (ties to the lowest
+/// index), and every later request of that size follows it. Keeps each
+/// engine's plan cache hot on its home sizes.
+#[derive(Debug)]
+pub struct SizeAffinityRouter {
+    home: BTreeMap<usize, usize>,
+    sizes_per_shard: Vec<usize>,
+}
+
+impl SizeAffinityRouter {
+    pub fn new(shards: usize) -> Self {
+        Self { home: BTreeMap::new(), sizes_per_shard: vec![0; shards] }
+    }
+}
+
+impl ShardRouter for SizeAffinityRouter {
+    fn name(&self) -> &'static str {
+        "size-affinity"
+    }
+
+    fn route(&mut self, n: usize, _signals: usize, _shards: &[Shard]) -> usize {
+        if let Some(&s) = self.home.get(&n) {
+            return s;
+        }
+        let s = self
+            .sizes_per_shard
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &count)| (count, i))
+            .map(|(i, _)| i)
+            .unwrap();
+        self.sizes_per_shard[s] += 1;
+        self.home.insert(n, s);
+        s
+    }
+}
+
+/// Send each request to the shard with the fewest queued + in-flight
+/// signals (ties to the lowest index).
+#[derive(Debug, Default)]
+pub struct LeastLoadedRouter;
+
+impl ShardRouter for LeastLoadedRouter {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&mut self, _n: usize, _signals: usize, shards: &[Shard]) -> usize {
+        shards
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, s)| (s.load_signals(), i))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// CLI-facing router selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    RoundRobin,
+    SizeAffinity,
+    LeastLoaded,
+}
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "round-robin" | "rr" => RouterKind::RoundRobin,
+            "size-affinity" | "affinity" => RouterKind::SizeAffinity,
+            "least-loaded" | "ll" => RouterKind::LeastLoaded,
+            other => bail!("unknown router '{other}' (round-robin|size-affinity|least-loaded)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::SizeAffinity => "size-affinity",
+            RouterKind::LeastLoaded => "least-loaded",
+        }
+    }
+
+    pub fn build(self, shards: usize) -> Box<dyn ShardRouter> {
+        match self {
+            RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
+            RouterKind::SizeAffinity => Box::new(SizeAffinityRouter::new(shards)),
+            RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::FftEngine;
+    use crate::cluster::SimRequest;
+    use crate::config::SystemConfig;
+
+    fn shards(k: usize) -> Vec<Shard> {
+        let sys = SystemConfig::baseline();
+        (0..k).map(|_| Shard::new(FftEngine::builder().system(&sys).build())).collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let s = shards(3);
+        let mut r = RouterKind::RoundRobin.build(3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(64, 1, &s)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn affinity_is_sticky_and_balanced() {
+        let s = shards(2);
+        let mut r = RouterKind::SizeAffinity.build(2);
+        let a = r.route(32, 1, &s);
+        let b = r.route(64, 1, &s);
+        let c = r.route(128, 1, &s);
+        // Distinct sizes spread across shards before doubling up.
+        assert_ne!(a, b);
+        // Same size always lands on its home shard.
+        assert_eq!(r.route(32, 1, &s), a);
+        assert_eq!(r.route(64, 1, &s), b);
+        assert_eq!(r.route(128, 1, &s), c);
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_shards() {
+        let mut s = shards(2);
+        s[0].enqueue(SimRequest { id: 0, n: 64, signals: 5, arrive_ns: 0 });
+        let mut r = RouterKind::LeastLoaded.build(2);
+        assert_eq!(r.route(64, 1, &s), 1);
+        s[1].enqueue(SimRequest { id: 1, n: 64, signals: 9, arrive_ns: 0 });
+        assert_eq!(r.route(64, 1, &s), 0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(RouterKind::parse("rr").unwrap(), RouterKind::RoundRobin);
+        assert_eq!(RouterKind::parse("size-affinity").unwrap(), RouterKind::SizeAffinity);
+        assert_eq!(RouterKind::parse("least-loaded").unwrap().name(), "least-loaded");
+        assert!(RouterKind::parse("random").is_err());
+    }
+}

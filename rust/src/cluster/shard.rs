@@ -1,0 +1,206 @@
+//! One serving shard: an [`FftEngine`] behind a size-keyed queue with
+//! windowed batching.
+//!
+//! The simulator never computes spectra — a shard serves *virtual* requests
+//! whose service time is the engine's own cost estimate for the batch shape
+//! (`FftEngine::plan`), exactly the numbers the paper's figures are built
+//! from. Batches are padded to the next power-of-two signal count (the PJRT
+//! artifacts have fixed shapes), which both prices padding waste honestly
+//! and keeps the engine's plan cache keyed by a small set of shapes.
+
+use anyhow::Result;
+
+use crate::backend::FftEngine;
+use crate::coordinator::{Batchable, Batcher};
+use crate::metrics::{DataMovement, LogHistogram};
+
+/// A queued simulated request: no signal payload, just the shape and the
+/// arrival timestamp the latency accounting needs.
+#[derive(Debug, Clone, Copy)]
+pub struct SimRequest {
+    /// Trace entry index.
+    pub id: u64,
+    /// FFT size.
+    pub n: usize,
+    /// Signals in the request.
+    pub signals: usize,
+    /// Arrival time, virtual ns.
+    pub arrive_ns: u64,
+}
+
+impl Batchable for SimRequest {
+    fn fft_size(&self) -> usize {
+        self.n
+    }
+
+    fn signal_count(&self) -> usize {
+        self.signals
+    }
+}
+
+/// Counters one shard accumulates over a run.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Requests completed.
+    pub requests: u64,
+    /// Signals actually served (excluding padding).
+    pub signals: u64,
+    /// Signals after batch padding (what the substrate executes).
+    pub padded_signals: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Virtual time spent serving, ns.
+    pub busy_ns: u64,
+    /// Modeled data movement of every executed plan, split per substrate
+    /// (GPU signal bytes vs PIM command bytes).
+    pub movement: DataMovement,
+    /// Queue depth (requests) sampled at every arrival.
+    pub queue_depth: LogHistogram,
+    /// Batch occupancy, percent of the padded shape actually used.
+    pub occupancy_pct: LogHistogram,
+}
+
+/// A shard: engine + queue + the in-flight batch.
+pub struct Shard {
+    engine: FftEngine,
+    pub(crate) batcher: Batcher<SimRequest>,
+    pub(crate) busy: bool,
+    pub(crate) deadline_scheduled: bool,
+    in_flight: Vec<SimRequest>,
+    in_flight_signals: usize,
+    pub stats: ShardStats,
+}
+
+impl Shard {
+    pub fn new(engine: FftEngine) -> Self {
+        Self {
+            engine,
+            batcher: Batcher::new(),
+            busy: false,
+            deadline_scheduled: false,
+            in_flight: Vec::new(),
+            in_flight_signals: 0,
+            stats: ShardStats::default(),
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy
+    }
+
+    /// Requests waiting in the queue.
+    pub fn pending_requests(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Signals waiting in the queue.
+    pub fn pending_signals(&self) -> usize {
+        self.batcher.pending_signals()
+    }
+
+    /// Queued + in-flight signals (the least-loaded router's load metric).
+    pub fn load_signals(&self) -> usize {
+        self.batcher.pending_signals() + self.in_flight_signals
+    }
+
+    /// Plan-cache (hits, misses) of this shard's engine.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.engine.cache_stats()
+    }
+
+    /// Admit a request, sampling queue depth first.
+    pub(crate) fn enqueue(&mut self, req: SimRequest) {
+        self.stats.queue_depth.record(self.batcher.pending() as u64);
+        self.batcher.push(req);
+    }
+
+    /// Pop the next batch (round-robin across sizes) holding at least
+    /// `min_signals`, price it on the engine, and go busy. Returns the
+    /// modeled service time in ns, or `None` if nothing qualified.
+    pub(crate) fn start_batch(&mut self, min_signals: usize) -> Result<Option<u64>> {
+        let Some(batch) = self.batcher.pop_ready(min_signals) else {
+            return Ok(None);
+        };
+        let total = batch.total_signals();
+        let padded = batch.padded_signals();
+        let (_plan, eval) = self.engine.plan(batch.n, padded)?;
+        let service_ns = eval.plan_ns.max(1.0).round() as u64;
+        self.stats.batches += 1;
+        self.stats.signals += total as u64;
+        self.stats.padded_signals += padded as u64;
+        self.stats.busy_ns += service_ns;
+        self.stats.movement.add_assign(&eval.movement_plan);
+        self.stats.occupancy_pct.record((total * 100 / padded) as u64);
+        self.in_flight_signals = total;
+        self.in_flight = batch.requests;
+        self.busy = true;
+        Ok(Some(service_ns))
+    }
+
+    /// Finish the in-flight batch, returning its requests for latency
+    /// accounting.
+    pub(crate) fn finish_batch(&mut self) -> Vec<SimRequest> {
+        self.busy = false;
+        self.in_flight_signals = 0;
+        self.stats.requests += self.in_flight.len() as u64;
+        std::mem::take(&mut self.in_flight)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn shard() -> Shard {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        Shard::new(FftEngine::builder().system(&sys).build())
+    }
+
+    #[test]
+    fn batch_lifecycle_prices_and_pads() {
+        let mut s = shard();
+        for id in 0..3u64 {
+            s.enqueue(SimRequest { id, n: 8192, signals: 2, arrive_ns: id * 10 });
+        }
+        assert_eq!(s.pending_requests(), 3);
+        assert_eq!(s.pending_signals(), 6);
+        assert!(!s.is_busy());
+        let service = s.start_batch(1).unwrap().unwrap();
+        assert!(service >= 1);
+        assert!(s.is_busy());
+        assert_eq!(s.pending_requests(), 0);
+        assert_eq!(s.load_signals(), 6);
+        assert_eq!(s.stats.signals, 6);
+        assert_eq!(s.stats.padded_signals, 8); // 6 → padded to 8
+        assert_eq!(s.stats.batches, 1);
+        assert_eq!(s.stats.busy_ns, service);
+        assert!(s.stats.movement.total() > 0.0);
+        let done = s.finish_batch();
+        assert_eq!(done.len(), 3);
+        assert!(!s.is_busy());
+        assert_eq!(s.stats.requests, 3);
+        assert_eq!(s.load_signals(), 0);
+    }
+
+    #[test]
+    fn start_batch_respects_min_signals() {
+        let mut s = shard();
+        s.enqueue(SimRequest { id: 0, n: 64, signals: 2, arrive_ns: 0 });
+        assert!(s.start_batch(8).unwrap().is_none());
+        assert!(!s.is_busy());
+        assert!(s.start_batch(1).unwrap().is_some());
+    }
+
+    #[test]
+    fn repeated_shapes_hit_the_plan_cache() {
+        let mut s = shard();
+        for round in 0..4u64 {
+            s.enqueue(SimRequest { id: round, n: 8192, signals: 4, arrive_ns: 0 });
+            s.start_batch(1).unwrap().unwrap();
+            s.finish_batch();
+        }
+        let (hits, misses) = s.cache_stats();
+        assert_eq!((hits, misses), (3, 1));
+    }
+}

@@ -1,0 +1,454 @@
+//! The cluster simulator: N shards serving an open-loop trace in virtual
+//! time.
+//!
+//! Mechanics per shard (mirroring the live [`crate::coordinator::Server`]
+//! loop, but in virtual time): arrivals are routed by the configured
+//! [`RouterKind`] and queued size-homogeneously; an idle shard dispatches as
+//! soon as one size accumulates `window_signals`, or when the
+//! `max_wait_us` batching window expires; a busy shard drains whatever
+//! accumulated the moment its in-flight batch completes (work-conserving).
+//! Service time is the engine's modeled cost for the padded batch shape, so
+//! the simulation prices exactly what the paper's models price — and a run
+//! over millions of requests finishes in wall-clock seconds because no
+//! spectra are ever computed.
+
+use anyhow::{ensure, Result};
+
+use crate::backend::FftEngine;
+use crate::config::SystemConfig;
+use crate::coordinator::Trace;
+use crate::metrics::{DataMovement, LogHistogram};
+use crate::routines::OptLevel;
+use crate::util::Json;
+
+use super::event::{Event, EventQueue};
+use super::router::RouterKind;
+use super::shard::{Shard, SimRequest};
+
+/// Cluster shape and batching policy.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub shards: usize,
+    pub router: RouterKind,
+    /// Dispatch a batch as soon as one size queue holds this many signals.
+    pub window_signals: usize,
+    /// Longest a queued request waits before an idle shard serves a partial
+    /// batch, µs.
+    pub max_wait_us: f64,
+    pub sys: SystemConfig,
+    pub opt: OptLevel,
+}
+
+impl ClusterConfig {
+    pub fn new(sys: SystemConfig, opt: OptLevel) -> Self {
+        Self {
+            shards: 4,
+            router: RouterKind::SizeAffinity,
+            window_signals: 32,
+            max_wait_us: 50.0,
+            sys,
+            opt,
+        }
+    }
+
+    /// Paper-baseline system with the §6.2 hardware optimization (the full
+    /// Pimacolaba configuration).
+    pub fn default_hw() -> Self {
+        Self::new(SystemConfig::baseline().with_hw_opt(), OptLevel::SwHw)
+    }
+}
+
+/// Per-shard rollup in the final report.
+#[derive(Debug, Clone)]
+pub struct ShardSummary {
+    pub shard: usize,
+    pub requests: u64,
+    pub signals: u64,
+    pub batches: u64,
+    pub busy_ns: u64,
+    /// Fraction of the makespan this shard spent serving.
+    pub utilization: f64,
+    pub movement: DataMovement,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Everything a cluster run produces. `to_json` is the report artifact the
+/// `cluster` CLI subcommand writes; identical seeds/configs produce
+/// byte-identical JSON.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub shards: usize,
+    pub router: &'static str,
+    pub requests: u64,
+    pub signals: u64,
+    pub padded_signals: u64,
+    pub batches: u64,
+    /// Virtual time from trace start to the last completion, ns.
+    pub makespan_ns: u64,
+    /// End-to-end request latency (arrival → completion), ns.
+    pub latency_ns: LogHistogram,
+    /// Queue depth sampled at every arrival, merged across shards.
+    pub queue_depth: LogHistogram,
+    /// Batch occupancy (percent of the padded shape used).
+    pub occupancy_pct: LogHistogram,
+    /// Per-substrate data movement summed over every executed plan.
+    pub movement: DataMovement,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub per_shard: Vec<ShardSummary>,
+}
+
+impl ClusterReport {
+    /// Latency percentile in µs.
+    pub fn latency_p_us(&self, p: f64) -> f64 {
+        self.latency_ns.percentile(p) as f64 / 1e3
+    }
+
+    /// Served throughput over the makespan, requests/s.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            0.0
+        } else {
+            self.requests as f64 / (self.makespan_ns as f64 / 1e9)
+        }
+    }
+
+    /// Aggregate plan-cache hit rate across shard engines.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean batch occupancy (served signals / padded signals).
+    pub fn avg_occupancy(&self) -> f64 {
+        if self.padded_signals == 0 {
+            0.0
+        } else {
+            self.signals as f64 / self.padded_signals as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "shards={} router={} requests={} throughput={:.0}req/s p50={:.1}µs p95={:.1}µs \
+             p99={:.1}µs p999={:.1}µs occupancy={:.0}% cache-hit={:.1}% movement={:.1}MB",
+            self.shards,
+            self.router,
+            self.requests,
+            self.throughput_rps(),
+            self.latency_p_us(50.0),
+            self.latency_p_us(95.0),
+            self.latency_p_us(99.0),
+            self.latency_p_us(99.9),
+            self.avg_occupancy() * 100.0,
+            self.cache_hit_rate() * 100.0,
+            self.movement.total() / 1e6,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::num(self.shards as f64)),
+            ("router", Json::str(self.router)),
+            ("requests", Json::num(self.requests as f64)),
+            ("signals", Json::num(self.signals as f64)),
+            ("padded_signals", Json::num(self.padded_signals as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("makespan_us", Json::num(self.makespan_ns as f64 / 1e3)),
+            ("throughput_rps", Json::num(self.throughput_rps())),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("mean", Json::num(self.latency_ns.mean() / 1e3)),
+                    ("p50", Json::num(self.latency_p_us(50.0))),
+                    ("p95", Json::num(self.latency_p_us(95.0))),
+                    ("p99", Json::num(self.latency_p_us(99.0))),
+                    ("p999", Json::num(self.latency_p_us(99.9))),
+                    ("max", Json::num(self.latency_ns.max() as f64 / 1e3)),
+                ]),
+            ),
+            (
+                "queue_depth",
+                Json::obj(vec![
+                    ("p50", Json::num(self.queue_depth.percentile(50.0) as f64)),
+                    ("p99", Json::num(self.queue_depth.percentile(99.0) as f64)),
+                    ("max", Json::num(self.queue_depth.max() as f64)),
+                ]),
+            ),
+            (
+                "batch_occupancy_pct",
+                Json::obj(vec![
+                    ("avg", Json::num(self.avg_occupancy() * 100.0)),
+                    ("p50", Json::num(self.occupancy_pct.percentile(50.0) as f64)),
+                    ("p99", Json::num(self.occupancy_pct.percentile(99.0) as f64)),
+                ]),
+            ),
+            (
+                "movement",
+                Json::obj(vec![
+                    ("gpu_mb", Json::num(self.movement.gpu_bytes / 1e6)),
+                    ("pim_cmd_mb", Json::num(self.movement.pim_cmd_bytes / 1e6)),
+                ]),
+            ),
+            (
+                "plan_cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache_hits as f64)),
+                    ("misses", Json::num(self.cache_misses as f64)),
+                    ("hit_rate", Json::num(self.cache_hit_rate())),
+                ]),
+            ),
+            (
+                "per_shard",
+                Json::arr(
+                    self.per_shard
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("shard", Json::num(s.shard as f64)),
+                                ("requests", Json::num(s.requests as f64)),
+                                ("signals", Json::num(s.signals as f64)),
+                                ("batches", Json::num(s.batches as f64)),
+                                ("busy_us", Json::num(s.busy_ns as f64 / 1e3)),
+                                ("utilization", Json::num(s.utilization)),
+                                ("gpu_mb", Json::num(s.movement.gpu_bytes / 1e6)),
+                                ("pim_cmd_mb", Json::num(s.movement.pim_cmd_bytes / 1e6)),
+                                ("cache_hits", Json::num(s.cache_hits as f64)),
+                                ("cache_misses", Json::num(s.cache_misses as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+struct SimArrival {
+    at_ns: u64,
+    n: usize,
+    signals: usize,
+}
+
+/// Run the cluster simulation over `trace`. Deterministic: same trace +
+/// config ⇒ bit-identical report.
+pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> {
+    ensure!(cfg.shards > 0, "cluster needs at least one shard");
+    ensure!(cfg.window_signals >= 1, "batching window must be at least 1 signal");
+    ensure!(
+        cfg.max_wait_us.is_finite() && cfg.max_wait_us >= 0.0,
+        "max wait must be finite and non-negative, got {}",
+        cfg.max_wait_us
+    );
+    ensure!(!trace.entries.is_empty(), "cannot simulate an empty trace");
+
+    let arrivals: Vec<SimArrival> = trace
+        .entries
+        .iter()
+        .map(|e| SimArrival { at_ns: (e.at_us * 1e3).round() as u64, n: e.n, signals: e.batch })
+        .collect();
+    let wait_ns = (cfg.max_wait_us * 1e3).round() as u64;
+
+    let mut shards: Vec<Shard> = (0..cfg.shards)
+        .map(|_| Shard::new(FftEngine::builder().system(&cfg.sys).opt(cfg.opt).build()))
+        .collect();
+    let mut router = cfg.router.build(cfg.shards);
+    let mut latency = LogHistogram::new();
+    let mut evq = EventQueue::new();
+    evq.push(arrivals[0].at_ns, Event::Arrival { idx: 0 });
+
+    let mut end_ns = 0u64;
+    while let Some((now, ev)) = evq.pop() {
+        match ev {
+            Event::Arrival { idx } => {
+                if idx + 1 < arrivals.len() {
+                    // Clamp: validated traces are monotone, but never let
+                    // virtual time run backwards.
+                    evq.push(arrivals[idx + 1].at_ns.max(now), Event::Arrival { idx: idx + 1 });
+                }
+                let a = &arrivals[idx];
+                let s = router.route(a.n, a.signals, &shards);
+                let shard = &mut shards[s];
+                shard.enqueue(SimRequest {
+                    id: idx as u64,
+                    n: a.n,
+                    signals: a.signals,
+                    arrive_ns: now,
+                });
+                if !shard.busy {
+                    if let Some(service) = shard.start_batch(cfg.window_signals)? {
+                        evq.push(now + service, Event::Complete { shard: s });
+                    } else if !shard.deadline_scheduled {
+                        shard.deadline_scheduled = true;
+                        evq.push(now + wait_ns, Event::Deadline { shard: s });
+                    }
+                }
+            }
+            Event::Deadline { shard: s } => {
+                let shard = &mut shards[s];
+                shard.deadline_scheduled = false;
+                if !shard.busy {
+                    if let Some(service) = shard.start_batch(1)? {
+                        evq.push(now + service, Event::Complete { shard: s });
+                    }
+                }
+            }
+            Event::Complete { shard: s } => {
+                // Completions — not stale deadlines popping after the last
+                // batch — define the makespan (and thus utilization).
+                end_ns = end_ns.max(now);
+                let shard = &mut shards[s];
+                for req in shard.finish_batch() {
+                    latency.record(now.saturating_sub(req.arrive_ns));
+                }
+                // Work-conserving: serve whatever accumulated while busy.
+                if let Some(service) = shard.start_batch(1)? {
+                    evq.push(now + service, Event::Complete { shard: s });
+                }
+            }
+        }
+    }
+
+    let mut report = ClusterReport {
+        shards: cfg.shards,
+        router: cfg.router.name(),
+        requests: 0,
+        signals: 0,
+        padded_signals: 0,
+        batches: 0,
+        makespan_ns: end_ns,
+        latency_ns: latency,
+        queue_depth: LogHistogram::new(),
+        occupancy_pct: LogHistogram::new(),
+        movement: DataMovement::default(),
+        cache_hits: 0,
+        cache_misses: 0,
+        per_shard: Vec::with_capacity(cfg.shards),
+    };
+    for (i, shard) in shards.iter().enumerate() {
+        let st = &shard.stats;
+        let (hits, misses) = shard.cache_stats();
+        report.requests += st.requests;
+        report.signals += st.signals;
+        report.padded_signals += st.padded_signals;
+        report.batches += st.batches;
+        report.queue_depth.merge(&st.queue_depth);
+        report.occupancy_pct.merge(&st.occupancy_pct);
+        report.movement.add_assign(&st.movement);
+        report.cache_hits += hits;
+        report.cache_misses += misses;
+        report.per_shard.push(ShardSummary {
+            shard: i,
+            requests: st.requests,
+            signals: st.signals,
+            batches: st.batches,
+            busy_ns: st.busy_ns,
+            utilization: if end_ns == 0 { 0.0 } else { st.busy_ns as f64 / end_ns as f64 },
+            movement: st.movement,
+            cache_hits: hits,
+            cache_misses: misses,
+        });
+    }
+    ensure!(
+        report.requests == arrivals.len() as u64,
+        "simulator lost requests: served {} of {}",
+        report.requests,
+        arrivals.len()
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Arrival, SizeMix, Workload};
+
+    fn trace(requests: usize, rps: f64, sizes: &[usize], seed: u64) -> Trace {
+        Workload::new(Arrival::Poisson, rps, SizeMix::uniform(sizes).unwrap())
+            .unwrap()
+            .generate(requests, seed)
+    }
+
+    #[test]
+    fn serves_every_request() {
+        let t = trace(500, 200_000.0, &[32, 4096, 8192], 7);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 3;
+        let rep = run_cluster(&t, &cfg).unwrap();
+        assert_eq!(rep.requests, 500);
+        assert_eq!(rep.latency_ns.count(), 500);
+        assert!(rep.signals >= 500); // every request has ≥1 signal
+        assert!(rep.padded_signals >= rep.signals);
+        assert!(rep.batches > 0 && rep.batches <= 500);
+        assert!(rep.makespan_ns > 0);
+        assert!(rep.movement.total() > 0.0);
+        assert!(rep.latency_p_us(50.0) <= rep.latency_p_us(99.0));
+        let served: u64 = rep.per_shard.iter().map(|s| s.requests).sum();
+        assert_eq!(served, 500);
+        for s in &rep.per_shard {
+            assert!(s.utilization >= 0.0 && s.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn single_batch_latency_is_wait_plus_service() {
+        // One lone request: it waits out the full batching window on an
+        // idle shard, then serves alone.
+        let t = Trace {
+            entries: vec![crate::coordinator::TraceEntry {
+                at_us: 10.0,
+                n: 64,
+                batch: 1,
+                seed: 1,
+            }],
+        };
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 1;
+        cfg.max_wait_us = 50.0;
+        let rep = run_cluster(&t, &cfg).unwrap();
+        assert_eq!(rep.requests, 1);
+        let lat_us = rep.latency_ns.max() as f64 / 1e3;
+        assert!(lat_us >= 50.0, "latency {lat_us} must include the 50µs window");
+        assert!(lat_us < 60.0, "latency {lat_us} should be window + tiny service");
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let t = trace(10, 100_000.0, &[64], 1);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 0;
+        assert!(run_cluster(&t, &cfg).is_err());
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.window_signals = 0;
+        assert!(run_cluster(&t, &cfg).is_err());
+        let cfg = ClusterConfig::default_hw();
+        assert!(run_cluster(&Trace::default(), &cfg).is_err());
+    }
+
+    #[test]
+    fn more_shards_never_raise_served_latency_much() {
+        // Sanity, not a theorem: on an overloaded single shard the tail is
+        // far worse than on eight shards.
+        // Round-robin: a single-size trace must actually spread (affinity
+        // would pin everything to one shard no matter the count).
+        let t = trace(2000, 2_000_000.0, &[16384], 11);
+        let mut one = ClusterConfig::default_hw();
+        one.router = RouterKind::RoundRobin;
+        one.shards = 1;
+        let mut eight = one.clone();
+        eight.shards = 8;
+        let r1 = run_cluster(&t, &one).unwrap();
+        let r8 = run_cluster(&t, &eight).unwrap();
+        assert!(
+            r1.latency_p_us(99.0) > r8.latency_p_us(99.0),
+            "1-shard p99 {} should exceed 8-shard p99 {}",
+            r1.latency_p_us(99.0),
+            r8.latency_p_us(99.0)
+        );
+    }
+}

@@ -2,65 +2,176 @@
 //! execution serves several requests (the artifacts have fixed PJRT shapes;
 //! partial batches are padded — the serving analog of §4.2.3's "batching
 //! avoids memory wastage").
+//!
+//! The batcher is generic over the request type via [`Batchable`]: the live
+//! server batches [`FftRequest`]s carrying real signals, while the cluster
+//! simulator batches payload-free stand-ins by the millions. Signal counts
+//! are tracked incrementally, so admission-side queries (`pending`,
+//! `pending_signals`, `has_ready`) stay O(1)/O(#sizes) even when a queue is
+//! millions of requests deep.
+//!
+//! Drain order is round-robin across size queues: each drain starts at the
+//! size after the one served first last time, wrapping. A plain
+//! smallest-first order (the old `BTreeMap` pop) permanently starves large
+//! FFT sizes under sustained load, because small-size queues refill before
+//! the large ones ever reach the head.
 
 use std::collections::BTreeMap;
 
 use super::FftRequest;
 
+/// Anything the batcher can group: it has an FFT size (the grouping key) and
+/// contributes some number of signals to its batch.
+pub trait Batchable {
+    /// FFT size of the request (power of two; the batch grouping key).
+    fn fft_size(&self) -> usize;
+    /// Signals this request contributes to a batch.
+    fn signal_count(&self) -> usize;
+}
+
+impl Batchable for FftRequest {
+    fn fft_size(&self) -> usize {
+        self.n
+    }
+
+    fn signal_count(&self) -> usize {
+        self.batch()
+    }
+}
+
 /// Requests of one FFT size, ready for a shared execution.
 #[derive(Debug)]
-pub struct Batch {
+pub struct Batch<R = FftRequest> {
     pub n: usize,
-    pub requests: Vec<FftRequest>,
+    pub requests: Vec<R>,
 }
 
-impl Batch {
+impl<R: Batchable> Batch<R> {
     /// Total signals across the batch.
     pub fn total_signals(&self) -> usize {
-        self.requests.iter().map(|r| r.batch()).sum()
+        self.requests.iter().map(|r| r.signal_count()).sum()
+    }
+
+    /// Signals after padding up to the executable shape (artifacts have
+    /// fixed power-of-two batch dimensions; partial batches are padded).
+    pub fn padded_signals(&self) -> usize {
+        self.total_signals().next_power_of_two()
+    }
+
+    /// Padding slots wasted by this batch (`padded - actual`; always less
+    /// than the actual signal count for a non-empty batch).
+    pub fn padding_waste(&self) -> usize {
+        self.padded_signals() - self.total_signals()
     }
 }
 
-/// Size-keyed request accumulator.
-#[derive(Debug, Default)]
-pub struct Batcher {
-    queues: BTreeMap<usize, Vec<FftRequest>>,
+#[derive(Debug)]
+struct SizeQueue<R> {
+    requests: Vec<R>,
+    signals: usize,
 }
 
-impl Batcher {
+impl<R> Default for SizeQueue<R> {
+    fn default() -> Self {
+        Self { requests: Vec::new(), signals: 0 }
+    }
+}
+
+/// Size-keyed request accumulator with round-robin drain fairness.
+#[derive(Debug)]
+pub struct Batcher<R = FftRequest> {
+    queues: BTreeMap<usize, SizeQueue<R>>,
+    pending_requests: usize,
+    pending_signals: usize,
+    /// FFT size served first by the most recent drain; the next drain starts
+    /// strictly after it (wrapping), so every size periodically goes first.
+    last_first: Option<usize>,
+}
+
+impl<R> Batcher<R> {
     pub fn new() -> Self {
-        Self::default()
+        Self { queues: BTreeMap::new(), pending_requests: 0, pending_signals: 0, last_first: None }
     }
 
-    pub fn push(&mut self, req: FftRequest) {
-        self.queues.entry(req.n).or_default().push(req);
-    }
-
+    /// Queued request count.
     pub fn pending(&self) -> usize {
-        self.queues.values().map(|q| q.len()).sum()
+        self.pending_requests
     }
 
-    /// Drain everything into size-homogeneous batches (ascending n).
-    pub fn flush(&mut self) -> Vec<Batch> {
-        std::mem::take(&mut self.queues)
-            .into_iter()
-            .map(|(n, requests)| Batch { n, requests })
-            .collect()
+    /// Queued signal count (requests weighted by their batch size).
+    pub fn pending_signals(&self) -> usize {
+        self.pending_signals
+    }
+}
+
+impl<R> Default for Batcher<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R: Batchable> Batcher<R> {
+    pub fn push(&mut self, req: R) {
+        let signals = req.signal_count();
+        let q = self.queues.entry(req.fft_size()).or_default();
+        q.signals += signals;
+        q.requests.push(req);
+        self.pending_requests += 1;
+        self.pending_signals += signals;
+    }
+
+    /// Does any size queue hold at least `min` signals?
+    pub fn has_ready(&self, min: usize) -> bool {
+        self.queues.values().any(|q| q.signals >= min)
+    }
+
+    /// Queued sizes in round-robin order: ascending, rotated to start just
+    /// after the size that went first on the previous drain.
+    fn rotation(&self) -> Vec<usize> {
+        let keys: Vec<usize> = self.queues.keys().copied().collect();
+        match self.last_first {
+            None => keys,
+            Some(last) => {
+                let split = keys.iter().position(|&k| k > last).unwrap_or(0);
+                keys[split..].iter().chain(keys[..split].iter()).copied().collect()
+            }
+        }
+    }
+
+    /// Remove one whole size queue as a batch, maintaining counters.
+    fn take(&mut self, n: usize) -> Batch<R> {
+        let q = self.queues.remove(&n).unwrap();
+        self.pending_requests -= q.requests.len();
+        self.pending_signals -= q.signals;
+        Batch { n, requests: q.requests }
+    }
+
+    /// Drain everything into size-homogeneous batches, round-robin order.
+    pub fn flush(&mut self) -> Vec<Batch<R>> {
+        let order = self.rotation();
+        if let Some(&first) = order.first() {
+            self.last_first = Some(first);
+        }
+        order.into_iter().map(|n| self.take(n)).collect()
     }
 
     /// Drain only sizes with at least `min` queued signals (windowed
     /// batching policy; the server flushes the rest on its deadline tick).
-    pub fn flush_ready(&mut self, min: usize) -> Vec<Batch> {
-        let ready: Vec<usize> = self
-            .queues
-            .iter()
-            .filter(|(_, q)| q.iter().map(|r| r.batch()).sum::<usize>() >= min)
-            .map(|(n, _)| *n)
-            .collect();
-        ready
-            .into_iter()
-            .map(|n| Batch { n, requests: self.queues.remove(&n).unwrap() })
-            .collect()
+    pub fn flush_ready(&mut self, min: usize) -> Vec<Batch<R>> {
+        let order: Vec<usize> =
+            self.rotation().into_iter().filter(|n| self.queues[n].signals >= min).collect();
+        if let Some(&first) = order.first() {
+            self.last_first = Some(first);
+        }
+        order.into_iter().map(|n| self.take(n)).collect()
+    }
+
+    /// Pop the single next batch in round-robin order holding at least `min`
+    /// signals (the cluster shard's dispatch primitive).
+    pub fn pop_ready(&mut self, min: usize) -> Option<Batch<R>> {
+        let n = self.rotation().into_iter().find(|n| self.queues[n].signals >= min)?;
+        self.last_first = Some(n);
+        Some(self.take(n))
     }
 }
 
@@ -79,12 +190,14 @@ mod tests {
         b.push(req(2, 32, 1));
         b.push(req(3, 64, 1));
         assert_eq!(b.pending(), 3);
+        assert_eq!(b.pending_signals(), 4);
         let batches = b.flush();
         assert_eq!(batches.len(), 2);
         assert_eq!(batches[0].n, 32);
         assert_eq!(batches[1].n, 64);
         assert_eq!(batches[1].total_signals(), 3);
         assert_eq!(b.pending(), 0);
+        assert_eq!(b.pending_signals(), 0);
     }
 
     #[test]
@@ -92,9 +205,57 @@ mod tests {
         let mut b = Batcher::new();
         b.push(req(1, 64, 2));
         b.push(req(2, 32, 8));
+        assert!(b.has_ready(4));
+        assert!(!b.has_ready(9));
         let ready = b.flush_ready(4);
         assert_eq!(ready.len(), 1);
         assert_eq!(ready[0].n, 32);
         assert_eq!(b.pending(), 1); // the 64-point request still queued
+        assert_eq!(b.pending_signals(), 2);
+    }
+
+    #[test]
+    fn drain_order_rotates_across_sizes() {
+        // Regression: smallest-first drain starves large sizes under
+        // sustained load. With all three sizes always refilled, each size
+        // must take the head slot in turn.
+        let mut b = Batcher::new();
+        let sizes = [32usize, 64, 128];
+        let mut firsts = Vec::new();
+        for round in 0..6u64 {
+            for (i, &n) in sizes.iter().enumerate() {
+                b.push(req(round * 3 + i as u64, n, 1));
+            }
+            let batches = b.flush();
+            assert_eq!(batches.len(), 3);
+            firsts.push(batches[0].n);
+        }
+        assert_eq!(firsts, vec![32, 64, 128, 32, 64, 128]);
+    }
+
+    #[test]
+    fn pop_ready_walks_round_robin() {
+        let mut b = Batcher::new();
+        b.push(req(1, 32, 1));
+        b.push(req(2, 64, 1));
+        b.push(req(3, 128, 1));
+        assert_eq!(b.pop_ready(1).unwrap().n, 32);
+        assert_eq!(b.pop_ready(1).unwrap().n, 64);
+        // Refill 32: rotation resumes after 64, so 128 goes before 32.
+        b.push(req(4, 32, 1));
+        assert_eq!(b.pop_ready(1).unwrap().n, 128);
+        assert_eq!(b.pop_ready(1).unwrap().n, 32);
+        assert!(b.pop_ready(1).is_none());
+    }
+
+    #[test]
+    fn padding_accounting() {
+        let mut b = Batcher::new();
+        b.push(req(1, 64, 3));
+        b.push(req(2, 64, 2));
+        let batch = b.pop_ready(1).unwrap();
+        assert_eq!(batch.total_signals(), 5);
+        assert_eq!(batch.padded_signals(), 8);
+        assert_eq!(batch.padding_waste(), 3);
     }
 }

@@ -2,19 +2,25 @@
 //!
 //! The deployment shape mirrors the FFT-serving scenario the paper's
 //! collaborative decomposition targets: clients submit batched FFT requests;
-//! the batcher packs them into size-homogeneous batches; the scheduler hands
-//! each batch to the unified [`crate::backend::FftEngine`], which plans the
-//! split (§5.1, with a memoized plan cache for repeated shapes) and routes
-//! the GPU component and the PIM-FFT-Tile to their pluggable
-//! `ComputeBackend`s — PJRT artifacts or the host reference on the GPU side,
-//! the functional PIM unit simulator on the PIM side. Metrics report the
-//! modeled speedup and data-movement savings of every request against the
-//! GPU-only baseline.
+//! the batcher packs them into size-homogeneous batches (round-robin across
+//! sizes, so sustained small-FFT load cannot starve large requests); the
+//! scheduler hands each batch to the unified [`crate::backend::FftEngine`],
+//! which plans the split (§5.1, with a memoized plan cache for repeated
+//! shapes) and routes the GPU component and the PIM-FFT-Tile to their
+//! pluggable `ComputeBackend`s — PJRT artifacts or the host reference on the
+//! GPU side, the functional PIM unit simulator on the PIM side. Metrics
+//! report the modeled speedup and data-movement savings of every request
+//! against the GPU-only baseline.
 //!
 //! The scheduler/server layer never touches a substrate directly; all
 //! GPU/PIM access flows through the engine's backends. Python never appears
 //! on this path — the jax/Pallas model was lowered to HLO at build time
 //! (`make artifacts`).
+//!
+//! Workload generation also lives here: [`Workload`] couples an open-loop
+//! [`Arrival`] process with a [`SizeMix`] profile; the resulting [`Trace`]
+//! drives both the live [`Server`] and the [`crate::cluster`] discrete-event
+//! simulator.
 
 mod batcher;
 mod pim_exec;
@@ -24,10 +30,12 @@ mod scheduler;
 mod server;
 mod trace;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, Batchable, Batcher};
 pub use pim_exec::PimTileExecutor;
 pub use report::ServiceReport;
 pub use request::{FftRequest, FftResponse, RequestMetrics};
 pub use scheduler::Scheduler;
 pub use server::Server;
-pub use trace::{synthetic_trace, Trace, TraceEntry};
+pub use trace::{
+    synthetic_trace, Arrival, SizeMix, Trace, TraceEntry, Workload, TRACE_MAX_BATCH, TRACE_MAX_N,
+};

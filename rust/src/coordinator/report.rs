@@ -1,10 +1,14 @@
 //! Aggregated service metrics: the numbers `examples/serve_trace` and the
 //! e2e bench report (modeled speedup + data-movement savings over a whole
 //! trace, host latency percentiles).
+//!
+//! Host latency lives in a [`LogHistogram`] — the same log-bucketed
+//! histogram the cluster simulator uses — so percentiles are O(1) memory no
+//! matter how long the trace is.
 
 use std::collections::BTreeMap;
 
-use crate::metrics::DataMovement;
+use crate::metrics::{DataMovement, LogHistogram};
 use crate::planner::PlanKind;
 
 use super::FftResponse;
@@ -19,7 +23,8 @@ pub struct ServiceReport {
     pub modeled_plan_ns: f64,
     pub movement_base: DataMovement,
     pub movement_plan: DataMovement,
-    pub host_wall_ns: Vec<u64>,
+    /// Host wall-clock per request, ns.
+    pub host_latency: LogHistogram,
     pub max_error: f32,
     /// Per-size request counts.
     pub by_size: BTreeMap<usize, usize>,
@@ -36,7 +41,7 @@ impl ServiceReport {
         self.modeled_plan_ns += r.metrics.modeled_plan_ns;
         self.movement_base.add_assign(&r.metrics.movement_base);
         self.movement_plan.add_assign(&r.metrics.movement_plan);
-        self.host_wall_ns.push(r.metrics.host_wall_ns);
+        self.host_latency.record(r.metrics.host_wall_ns);
         if let Some(e) = r.metrics.max_error {
             self.max_error = self.max_error.max(e);
         }
@@ -54,25 +59,20 @@ impl ServiceReport {
     }
 
     pub fn host_latency_percentile_ns(&self, p: f64) -> u64 {
-        if self.host_wall_ns.is_empty() {
-            return 0;
-        }
-        let mut s = self.host_wall_ns.clone();
-        s.sort_unstable();
-        let rank = ((p / 100.0) * s.len() as f64).ceil() as usize;
-        s[rank.clamp(1, s.len()) - 1]
+        self.host_latency.percentile(p)
     }
 
     pub fn summary(&self) -> String {
         format!(
             "requests={} signals={} collaborative={} modeled-speedup={:.3}x \
-             movement-savings={:.3}x host-p50={}ns host-p99={}ns max-err={:.2e}",
+             movement-savings={:.3}x host-p50={}ns host-p95={}ns host-p99={}ns max-err={:.2e}",
             self.requests,
             self.signals,
             self.collaborative,
             self.modeled_speedup(),
             self.movement_savings(),
             self.host_latency_percentile_ns(50.0),
+            self.host_latency_percentile_ns(95.0),
             self.host_latency_percentile_ns(99.0),
             self.max_error,
         )
@@ -111,12 +111,15 @@ mod tests {
         assert!(r.movement_savings() >= 1.0);
         assert!(r.max_error < 0.5 && r.max_error > 0.0);
         assert!(r.summary().contains("requests=2"));
+        assert!(r.summary().contains("host-p95"));
     }
 
     #[test]
     fn latency_percentiles_ordered() {
         let mut r = ServiceReport::default();
-        r.host_wall_ns = vec![5, 1, 9, 3, 7];
+        for v in [5u64, 1, 9, 3, 7] {
+            r.host_latency.record(v);
+        }
         assert!(r.host_latency_percentile_ns(50.0) <= r.host_latency_percentile_ns(99.0));
         assert_eq!(r.host_latency_percentile_ns(99.0), 9);
         assert_eq!(ServiceReport::default().host_latency_percentile_ns(50.0), 0);

@@ -2,12 +2,26 @@
 //! benchmarked with. Since the paper's evaluation sweeps FFT size × batch,
 //! the synthetic generator draws from exactly that grid; traces round-trip
 //! through JSON so runs are reproducible artifacts.
+//!
+//! Beyond the original fixed-rate Poisson generator ([`synthetic_trace`]),
+//! this module hosts the **open-loop load generator** the cluster simulator
+//! consumes: a [`Workload`] couples an [`Arrival`] process (Poisson, on/off
+//! bursts, diurnal rate swings) with a [`SizeMix`] profile over FFT sizes.
+//! Open-loop means arrivals never wait for responses — exactly the regime
+//! where queueing delay, not service time, dominates tail latency.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::{Json, Rng};
+
+/// Largest FFT size a trace entry may carry (the planner's sweep tops out at
+/// 2^27; 2^30 leaves generous headroom while rejecting nonsense).
+pub const TRACE_MAX_N: usize = 1 << 30;
+
+/// Largest per-request signal count a trace entry may carry.
+pub const TRACE_MAX_BATCH: usize = 1 << 20;
 
 /// One trace record: a request arriving `at_us` after trace start.
 #[derive(Debug, Clone, PartialEq)]
@@ -48,15 +62,49 @@ impl Trace {
         ])
     }
 
+    /// Parse and validate a trace. Unknown versions and physically absurd
+    /// entries (non-power-of-two or out-of-range `n`, zero or huge `batch`,
+    /// negative/non-finite arrival times) are rejected with the offending
+    /// entry named, rather than silently accepted and crashing later inside
+    /// the planner.
     pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j.field("version")?.as_usize().context("trace 'version'")?;
+        ensure!(version == 1, "unsupported trace version {version} (this build reads version 1)");
         let mut entries = Vec::new();
-        for e in j.field("entries")?.as_arr()? {
-            entries.push(TraceEntry {
-                at_us: e.field("at_us")?.as_f64()?,
-                n: e.field("n")?.as_usize()?,
-                batch: e.field("batch")?.as_usize()?,
-                seed: u64::from_str_radix(e.field("seed")?.as_str()?, 16)?,
-            });
+        let mut prev_at_us = 0.0f64;
+        for (i, e) in j.field("entries")?.as_arr()?.iter().enumerate() {
+            let parse = || -> Result<TraceEntry> {
+                Ok(TraceEntry {
+                    at_us: e.field("at_us")?.as_f64()?,
+                    n: e.field("n")?.as_usize()?,
+                    batch: e.field("batch")?.as_usize()?,
+                    seed: u64::from_str_radix(e.field("seed")?.as_str()?, 16)?,
+                })
+            };
+            let entry = parse().with_context(|| format!("trace entry {i}"))?;
+            ensure!(
+                entry.at_us.is_finite() && entry.at_us >= 0.0,
+                "trace entry {i}: arrival time {} must be finite and non-negative",
+                entry.at_us
+            );
+            ensure!(
+                entry.n >= 2 && entry.n <= TRACE_MAX_N && entry.n.is_power_of_two(),
+                "trace entry {i}: FFT size n={} must be a power of two in [2, 2^30]",
+                entry.n
+            );
+            ensure!(
+                entry.batch >= 1 && entry.batch <= TRACE_MAX_BATCH,
+                "trace entry {i}: batch={} must be in [1, 2^20]",
+                entry.batch
+            );
+            ensure!(
+                entry.at_us >= prev_at_us,
+                "trace entry {i}: arrival time {} goes backwards (previous entry at {})",
+                entry.at_us,
+                prev_at_us
+            );
+            prev_at_us = entry.at_us;
+            entries.push(entry);
         }
         Ok(Self { entries })
     }
@@ -91,6 +139,214 @@ pub fn synthetic_trace(requests: usize, sizes: &[usize], mean_gap_us: f64, seed:
     Trace { entries }
 }
 
+/// Arrival process of an open-loop workload. Gaps are exponential with a
+/// (possibly time-varying) rate, so every process is Poisson locally but the
+/// rate envelope differs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Constant-rate Poisson arrivals.
+    Poisson,
+    /// On/off load: for the first `duty` fraction of every `period_us`
+    /// window the rate is `factor`× the base; the off phase is scaled down
+    /// so the long-run average stays at the base rate.
+    Burst { period_us: f64, duty: f64, factor: f64 },
+    /// Sinusoidal rate swing of amplitude `depth` (0 ≤ depth < 1) over
+    /// `period_us` — the day/night envelope of a user-facing service.
+    Diurnal { period_us: f64, depth: f64 },
+}
+
+impl Arrival {
+    /// Parse a CLI name. Parameterized variants use bundled defaults; code
+    /// callers construct the variants directly for custom envelopes.
+    pub fn parse(s: &str) -> Result<Arrival> {
+        Ok(match s {
+            "poisson" => Arrival::Poisson,
+            "burst" => Arrival::Burst { period_us: 10_000.0, duty: 0.1, factor: 5.0 },
+            "diurnal" => Arrival::Diurnal { period_us: 200_000.0, depth: 0.8 },
+            other => bail!("unknown arrival process '{other}' (poisson|burst|diurnal)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arrival::Poisson => "poisson",
+            Arrival::Burst { .. } => "burst",
+            Arrival::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Reject degenerate envelopes (zero periods, full-duty bursts,
+    /// over-unity diurnal depth) that would otherwise silently collapse to
+    /// the 5% rate floor or a NaN phase.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Arrival::Poisson => {}
+            Arrival::Burst { period_us, duty, factor } => {
+                ensure!(
+                    period_us.is_finite() && period_us > 0.0,
+                    "burst period {period_us} µs must be positive"
+                );
+                ensure!(duty > 0.0 && duty < 1.0, "burst duty {duty} must be in (0, 1)");
+                ensure!(factor.is_finite() && factor > 0.0, "burst factor {factor} must be positive");
+                ensure!(
+                    duty * factor < 1.0,
+                    "burst duty {duty} × factor {factor} must stay below 1 so the off-phase \
+                     can preserve the base rate"
+                );
+            }
+            Arrival::Diurnal { period_us, depth } => {
+                ensure!(
+                    period_us.is_finite() && period_us > 0.0,
+                    "diurnal period {period_us} µs must be positive"
+                );
+                ensure!((0.0..1.0).contains(&depth), "diurnal depth {depth} must be in [0, 1)");
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantaneous rate multiplier at time `t_us` (1.0 = the base rate),
+    /// floored at 5% so gaps stay finite.
+    pub fn rate_multiplier(&self, t_us: f64) -> f64 {
+        match *self {
+            Arrival::Poisson => 1.0,
+            Arrival::Burst { period_us, duty, factor } => {
+                let phase = (t_us / period_us).fract();
+                if phase < duty {
+                    factor
+                } else {
+                    ((1.0 - duty * factor) / (1.0 - duty)).max(0.05)
+                }
+            }
+            Arrival::Diurnal { period_us, depth } => {
+                (1.0 + depth * (std::f64::consts::TAU * t_us / period_us).sin()).max(0.05)
+            }
+        }
+    }
+}
+
+/// Probability weights over FFT sizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SizeMix {
+    weights: Vec<(usize, f64)>,
+}
+
+impl SizeMix {
+    /// Explicit weights (need not be normalized).
+    pub fn new(weights: Vec<(usize, f64)>) -> Result<Self> {
+        ensure!(!weights.is_empty(), "size mix needs at least one size");
+        for &(n, w) in &weights {
+            ensure!(
+                n >= 2 && n <= TRACE_MAX_N && n.is_power_of_two(),
+                "size mix: n={n} must be a power of two in [2, 2^30]"
+            );
+            ensure!(w.is_finite() && w > 0.0, "size mix: weight {w} for n={n} must be positive");
+        }
+        Ok(Self { weights })
+    }
+
+    /// Equal weight on every size.
+    pub fn uniform(sizes: &[usize]) -> Result<Self> {
+        Self::profile("uniform", sizes)
+    }
+
+    /// Named profile over `sizes` (sorted, deduplicated):
+    /// `uniform` | `small-heavy` (weight ∝ 1/rank from the small end) |
+    /// `large-heavy` (mirror) | `bimodal` (mass on the extremes).
+    pub fn profile(name: &str, sizes: &[usize]) -> Result<Self> {
+        ensure!(!sizes.is_empty(), "size mix needs at least one size");
+        let mut sorted = sizes.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let k = sorted.len();
+        let weights: Vec<(usize, f64)> = match name {
+            "uniform" => sorted.into_iter().map(|n| (n, 1.0)).collect(),
+            "small-heavy" => {
+                sorted.into_iter().enumerate().map(|(i, n)| (n, 1.0 / (i + 1) as f64)).collect()
+            }
+            "large-heavy" => {
+                sorted.into_iter().enumerate().map(|(i, n)| (n, 1.0 / (k - i) as f64)).collect()
+            }
+            "bimodal" => sorted
+                .into_iter()
+                .enumerate()
+                .map(|(i, n)| {
+                    let w = if k == 1 {
+                        1.0
+                    } else if i == 0 || i == k - 1 {
+                        0.45
+                    } else {
+                        0.1 / (k - 2) as f64
+                    };
+                    (n, w)
+                })
+                .collect(),
+            other => {
+                bail!("unknown size mix '{other}' (uniform|small-heavy|large-heavy|bimodal)")
+            }
+        };
+        Self::new(weights)
+    }
+
+    /// The sizes this mix can emit (ascending for profiles).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.weights.iter().map(|&(n, _)| n).collect()
+    }
+
+    /// Draw one size.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total: f64 = self.weights.iter().map(|&(_, w)| w).sum();
+        let mut r = rng.f64() * total;
+        for &(n, w) in &self.weights {
+            if r < w {
+                return n;
+            }
+            r -= w;
+        }
+        self.weights.last().unwrap().0
+    }
+}
+
+/// An open-loop workload: arrival process × base rate × size mix. Batch
+/// sizes are uniform in `1..=max_batch` (matching [`synthetic_trace`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub arrival: Arrival,
+    /// Base arrival rate, requests per second.
+    pub rps: f64,
+    pub mix: SizeMix,
+    pub max_batch: usize,
+}
+
+impl Workload {
+    pub fn new(arrival: Arrival, rps: f64, mix: SizeMix) -> Result<Self> {
+        arrival.validate()?;
+        ensure!(rps.is_finite() && rps > 0.0, "workload rate {rps} req/s must be positive");
+        Ok(Self { arrival, rps, mix, max_batch: 4 })
+    }
+
+    /// Generate a reproducible trace of `requests` arrivals. Same seed ⇒
+    /// bit-identical trace.
+    pub fn generate(&self, requests: usize, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut t_us = 0.0f64;
+        let mut entries = Vec::with_capacity(requests);
+        for i in 0..requests {
+            // rate_multiplier() floors every envelope at 5%, so the rate is
+            // always positive and gaps stay finite.
+            let rate_rps = self.rps * self.arrival.rate_multiplier(t_us);
+            t_us += rng.exp(1e6 / rate_rps);
+            entries.push(TraceEntry {
+                at_us: t_us,
+                n: self.mix.sample(&mut rng),
+                batch: rng.range(1, self.max_batch + 1),
+                seed: seed ^ (i as u64).wrapping_mul(0x2545F4914F6CDD1D),
+            });
+        }
+        Trace { entries }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +370,169 @@ mod tests {
         for w in t.entries.windows(2) {
             assert!(w[1].at_us >= w[0].at_us);
         }
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let mut t = synthetic_trace(2, &[32], 1.0, 1).to_json();
+        if let Json::Obj(m) = &mut t {
+            m.insert("version".into(), Json::num(2.0));
+        }
+        let err = Trace::from_json(&t).unwrap_err().to_string();
+        assert!(err.contains("unsupported trace version 2"), "{err}");
+        if let Json::Obj(m) = &mut t {
+            m.remove("version");
+        }
+        assert!(Trace::from_json(&t).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_entries() {
+        let base = |n: f64, batch: f64| {
+            Json::obj(vec![
+                (
+                    "entries",
+                    Json::arr(vec![Json::obj(vec![
+                        ("at_us", Json::num(1.0)),
+                        ("n", Json::num(n)),
+                        ("batch", Json::num(batch)),
+                        ("seed", Json::str("00000000000000ff")),
+                    ])]),
+                ),
+                ("version", Json::num(1.0)),
+            ])
+        };
+        for (n, batch, frag) in [
+            (0.0, 1.0, "power of two"),
+            (48.0, 1.0, "power of two"),
+            (2e9, 1.0, "power of two"), // not a power of two AND > 2^30
+            (32.0, 0.0, "batch=0"),
+            (32.0, 3e6, "batch=3000000"),
+        ] {
+            let err = Trace::from_json(&base(n, batch)).unwrap_err().to_string();
+            assert!(err.contains("entry 0"), "n={n} batch={batch}: {err}");
+            assert!(err.contains(frag), "n={n} batch={batch}: {err}");
+        }
+        // The valid shape parses.
+        assert!(Trace::from_json(&base(32.0, 1.0)).is_ok());
+    }
+
+    #[test]
+    fn rejects_backwards_arrival_times() {
+        let entry = |at: f64| {
+            Json::obj(vec![
+                ("at_us", Json::num(at)),
+                ("n", Json::num(32.0)),
+                ("batch", Json::num(1.0)),
+                ("seed", Json::str("0000000000000001")),
+            ])
+        };
+        let j = Json::obj(vec![
+            ("entries", Json::arr(vec![entry(100.0), entry(5.0)])),
+            ("version", Json::num(1.0)),
+        ]);
+        let err = Trace::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("entry 1") && err.contains("goes backwards"), "{err}");
+    }
+
+    #[test]
+    fn rejects_degenerate_arrival_envelopes() {
+        for bad in [
+            Arrival::Burst { period_us: 0.0, duty: 0.1, factor: 5.0 },
+            Arrival::Burst { period_us: 1000.0, duty: 1.0, factor: 5.0 },
+            Arrival::Burst { period_us: 1000.0, duty: 0.1, factor: 0.0 },
+            // duty × factor ≥ 1: the off-phase cannot preserve the mean rate.
+            Arrival::Burst { period_us: 1000.0, duty: 0.5, factor: 3.0 },
+            Arrival::Diurnal { period_us: 1000.0, depth: 1.5 },
+            Arrival::Diurnal { period_us: f64::NAN, depth: 0.5 },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+            let mix = SizeMix::uniform(&[64]).unwrap();
+            assert!(Workload::new(bad, 1_000_000.0, mix).is_err());
+        }
+        let mix = SizeMix::uniform(&[64]).unwrap();
+        assert!(Workload::new(Arrival::Poisson, 0.0, mix).is_err());
+        assert!(Arrival::parse("burst").unwrap().validate().is_ok());
+        assert!(Arrival::parse("diurnal").unwrap().validate().is_ok());
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_monotone() {
+        let mix = SizeMix::uniform(&[32, 4096]).unwrap();
+        let wl = Workload::new(Arrival::Poisson, 1_000_000.0, mix).unwrap();
+        let a = wl.generate(500, 7);
+        let b = wl.generate(500, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, wl.generate(500, 8));
+        for w in a.entries.windows(2) {
+            assert!(w[1].at_us >= w[0].at_us);
+        }
+        // Mean rate roughly matches the requested rps (gap 1 µs).
+        let span_us = a.entries.last().unwrap().at_us;
+        let rate = 500.0 / (span_us / 1e6);
+        assert!(rate > 0.5e6 && rate < 2.0e6, "observed rate {rate}");
+    }
+
+    #[test]
+    fn burst_and_diurnal_rates_average_out() {
+        for arrival in [
+            Arrival::Burst { period_us: 1000.0, duty: 0.1, factor: 5.0 },
+            Arrival::Diurnal { period_us: 2000.0, depth: 0.8 },
+        ] {
+            let mix = SizeMix::uniform(&[64]).unwrap();
+            let wl = Workload::new(arrival, 1_000_000.0, mix).unwrap();
+            let t = wl.generate(20_000, 11);
+            let span_us = t.entries.last().unwrap().at_us;
+            let rate = 20_000.0 / (span_us / 1e6);
+            assert!(rate > 0.5e6 && rate < 2.0e6, "{arrival:?}: observed rate {rate}");
+            for w in t.entries.windows(2) {
+                assert!(w[1].at_us >= w[0].at_us);
+            }
+        }
+    }
+
+    #[test]
+    fn burst_concentrates_arrivals_in_the_on_phase() {
+        let mix = SizeMix::uniform(&[64]).unwrap();
+        let wl = Workload::new(
+            Arrival::Burst { period_us: 1000.0, duty: 0.1, factor: 5.0 },
+            1_000_000.0,
+            mix,
+        )
+        .unwrap();
+        let t = wl.generate(20_000, 3);
+        let in_burst = t
+            .entries
+            .iter()
+            .filter(|e| (e.at_us / 1000.0).fract() < 0.1)
+            .count() as f64;
+        let frac = in_burst / t.entries.len() as f64;
+        // 10% of the time carries ~50% of the load (factor 5).
+        assert!(frac > 0.3, "burst fraction {frac}");
+    }
+
+    #[test]
+    fn size_mix_profiles() {
+        let sizes = [32usize, 256, 4096, 16384];
+        let mut rng = Rng::new(5);
+        let small = SizeMix::profile("small-heavy", &sizes).unwrap();
+        let large = SizeMix::profile("large-heavy", &sizes).unwrap();
+        let (mut small_hits, mut large_hits) = (0, 0);
+        for _ in 0..4000 {
+            if small.sample(&mut rng) == 32 {
+                small_hits += 1;
+            }
+            if large.sample(&mut rng) == 16384 {
+                large_hits += 1;
+            }
+        }
+        // 1/rank weights put ~48% of the mass on the heavy end of 4 sizes.
+        assert!(small_hits > 1400, "small-heavy hit 32 only {small_hits}/4000 times");
+        assert!(large_hits > 1400, "large-heavy hit 16384 only {large_hits}/4000 times");
+        assert!(SizeMix::profile("bimodal", &sizes).is_ok());
+        assert!(SizeMix::profile("nope", &sizes).is_err());
+        assert!(SizeMix::uniform(&[]).is_err());
+        assert!(SizeMix::new(vec![(48, 1.0)]).is_err());
+        assert!(SizeMix::new(vec![(32, 0.0)]).is_err());
     }
 }

@@ -26,9 +26,21 @@
 //!   [`backend::PimSimBackend`] (functional PIM unit simulator), with
 //!   [`backend::GpuCostModel`] selecting the analytical or measured GPU
 //!   cost provider.
-//! * [`coordinator`] — **L3**: the FFT service. Routing, batching, hybrid
-//!   plan execution through the engine, metrics. Python is never on this
-//!   path, and no substrate is touched except through a backend.
+//! * [`coordinator`] — **L3**: the FFT service. Routing, batching (round-
+//!   robin across FFT sizes, so large requests are never starved), hybrid
+//!   plan execution through the engine, metrics, and open-loop workload
+//!   generation ([`coordinator::Workload`]: Poisson/burst/diurnal arrivals
+//!   × size-mix profiles). Python is never on this path, and no substrate
+//!   is touched except through a backend.
+//! * [`cluster`] — **L4**: the deterministic discrete-event cluster
+//!   simulator. N shards, each owning its own engine, serve millions of
+//!   trace requests in virtual time with windowed batching and pluggable
+//!   routing (round-robin / size-affinity / least-loaded); the SLO-aware
+//!   capacity planner ([`cluster::plan_capacity`]) binary-searches the
+//!   minimal shard count meeting a p99 latency target. Reports carry
+//!   log-bucketed latency percentiles ([`metrics::LogHistogram`]),
+//!   per-shard utilization, and per-substrate data movement, and are
+//!   emitted as JSON artifacts by the `cluster` CLI subcommand.
 //! * [`planner`] — collaborative decomposition (§5.1): plan selection via
 //!   the offline tile-efficiency table; its cost evaluation is built from
 //!   the same providers the backends use.
@@ -47,6 +59,7 @@
 //!   the engine; used by the benches and the `figures` CLI subcommand.
 
 pub mod backend;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dram;

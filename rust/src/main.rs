@@ -6,6 +6,9 @@
 //! * `tile     --n N [--opt L]`             PIM-FFT-Tile cost breakdown
 //! * `serve    [--requests R] [--sizes a,b] [--artifacts DIR] [--verify]`
 //!                                          run the service over a synthetic trace
+//! * `cluster  [--shards K] [--rps R] [--slo-us T] ...`
+//!                                          discrete-event cluster simulation /
+//!                                          SLO-aware capacity planning
 //! * `trace    --out FILE [--requests R]`   emit a reproducible workload trace
 //! * `artifacts [--dir DIR]`                list the AOT artifact manifest
 //! * `config   [--variant NAME]`            dump a system configuration
@@ -16,8 +19,11 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
+use pimacolaba::cluster::{plan_capacity, run_cluster, ClusterConfig, RouterKind};
 use pimacolaba::config::SystemConfig;
-use pimacolaba::coordinator::{synthetic_trace, FftRequest, Scheduler, Server, ServiceReport};
+use pimacolaba::coordinator::{
+    synthetic_trace, Arrival, FftRequest, Scheduler, Server, ServiceReport, SizeMix, Workload,
+};
 use pimacolaba::fft::SoaVec;
 use pimacolaba::figures;
 use pimacolaba::planner::TileModel;
@@ -37,13 +43,23 @@ subcommands:
   serve     [--requests R] [--sizes a,b,..]  run the service over a synthetic trace
             [--opt L] [--variant NAME]
             [--artifacts DIR] [--no-artifacts] [--verify] [--seed S]
+  cluster   [--shards K] [--router NAME]     simulate K shards serving an open-loop
+            [--arrival A] [--rps R]          trace in virtual time; with --slo-us,
+            [--requests N] [--sizes a,b,..]  binary-search the minimal shard count
+            [--mix PROFILE] [--window S]     meeting the p99 target. Writes a JSON
+            [--wait-us W] [--slo-us T]       report artifact to --out.
+            [--max-shards M] [--seed S]
+            [--out FILE] [--opt L] [--variant NAME]
   trace     [--out FILE] [--requests R]      emit a reproducible workload trace
             [--sizes a,b,..] [--gap-us G] [--seed S]
   artifacts [--dir DIR]                      list the AOT artifact manifest
   config    [--opt L] [--variant NAME]       dump a system configuration
 
 opt levels: base | sw | hw | swhw (aliases: pim-base, sw-opt, hw-opt, sw-hw-opt, pimacolaba)
-variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024";
+variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024
+routers:    round-robin | size-affinity | least-loaded
+arrivals:   poisson | burst | diurnal
+mixes:      uniform | small-heavy | large-heavy | bimodal";
 
 fn parse_opt(s: &str) -> Result<OptLevel> {
     Ok(match s {
@@ -74,6 +90,7 @@ fn main() -> Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("tile") => cmd_tile(&args),
         Some("serve") => cmd_serve(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("trace") => cmd_trace(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("config") => cmd_config(&args),
@@ -203,6 +220,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.shutdown();
     println!("{}", report.summary());
     println!("per-size request counts: {:?}", report.by_size);
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let requests = args.get_usize("requests", 100_000)?;
+    let rps = args.get_f64("rps", 1_000_000.0)?;
+    let sizes: Vec<usize> = args
+        .get_or("sizes", "32,256,4096,8192,16384")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let mix = SizeMix::profile(args.get_or("mix", "uniform"), &sizes)?;
+    let arrival = Arrival::parse(args.get_or("arrival", "poisson"))?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let opt = parse_opt(args.get_or("opt", "swhw"))?;
+    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
+    let out = args.get_or("out", "cluster_report.json");
+
+    let workload = Workload::new(arrival, rps, mix)?;
+    let trace = workload.generate(requests, seed);
+    let mut cfg = ClusterConfig::new(sys, opt);
+    cfg.shards = args.get_usize("shards", 8)?;
+    // Capacity planning defaults to a load-spreading router: size-affinity
+    // pins each size to one home shard, so on a narrow size mix extra
+    // shards would never absorb load and no shard count could meet the SLO.
+    let router_default =
+        if args.get("slo-us").is_some() { "least-loaded" } else { "size-affinity" };
+    cfg.router = RouterKind::parse(args.get_or("router", router_default))?;
+    cfg.window_signals = args.get_usize("window", 32)?;
+    cfg.max_wait_us = args.get_f64("wait-us", 50.0)?;
+
+    println!(
+        "cluster: {} requests, {} arrivals at {:.0} req/s over sizes {:?} ({} mix), seed {}",
+        requests,
+        arrival.name(),
+        rps,
+        sizes,
+        args.get_or("mix", "uniform"),
+        seed
+    );
+
+    let json = if args.get("slo-us").is_some() {
+        let slo_us = args.get_f64("slo-us", 0.0)?;
+        let max_shards = args.get_usize("max-shards", 1024)?;
+        let plan = plan_capacity(&trace, &cfg, slo_us, max_shards)?;
+        for p in &plan.probes {
+            println!(
+                "  probe {:>5} shards: p99 {:>12.1} µs  {}",
+                p.shards,
+                p.p99_us,
+                if p.meets { "meets SLO" } else { "misses" }
+            );
+        }
+        println!("{}", plan.summary());
+        println!("{}", plan.report.summary());
+        plan.to_json()
+    } else {
+        let report = run_cluster(&trace, &cfg)?;
+        println!("{}", report.summary());
+        for s in &report.per_shard {
+            println!(
+                "  shard {:>3}: {:>8} requests {:>6} batches  utilization {:>5.1}%  \
+                 gpu {:>9.1} MB  pim-cmd {:>7.1} MB",
+                s.shard,
+                s.requests,
+                s.batches,
+                s.utilization * 100.0,
+                s.movement.gpu_bytes / 1e6,
+                s.movement.pim_cmd_bytes / 1e6,
+            );
+        }
+        report.to_json()
+    };
+    std::fs::write(out, json.to_string()).with_context(|| format!("writing report {out}"))?;
+    println!("wrote JSON report to {out}");
     Ok(())
 }
 

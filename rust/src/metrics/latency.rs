@@ -1,0 +1,246 @@
+//! Log-bucketed histograms for serving metrics (latency, queue depth,
+//! batch occupancy).
+//!
+//! The cluster simulator records one latency sample per request — millions
+//! per run — so percentiles cannot come from a sorted `Vec`. [`LogHistogram`]
+//! is an HDR-style fixed-size histogram: values below [`SUB_BUCKETS`] get
+//! exact unit buckets, larger values share [`SUB_BUCKETS`] linear sub-buckets
+//! per power of two, bounding the relative quantile error by
+//! `1/SUB_BUCKETS` (≈3%). Recording is O(1), percentile queries walk at most
+//! [`NUM_BUCKETS`] counters, and the whole structure is a few KiB regardless
+//! of sample count — merging per-shard histograms into a cluster-wide one is
+//! a counter add.
+
+/// Linear sub-buckets per power of two (relative error ≤ 1/32 ≈ 3.1%).
+pub const SUB_BUCKETS: usize = 32;
+const SUB_LOG: u32 = 5; // log2(SUB_BUCKETS)
+
+/// Total bucket count; covers the full `u64` range.
+/// Largest index is `(63 - SUB_LOG + 1) * SUB_BUCKETS + (SUB_BUCKETS - 1)`.
+pub const NUM_BUCKETS: usize = 60 * SUB_BUCKETS;
+
+/// Fixed-memory log-bucketed histogram over `u64` samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; NUM_BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Bucket index of a value: identity below [`SUB_BUCKETS`], then
+    /// `SUB_BUCKETS` linear sub-buckets per octave.
+    fn bucket(v: u64) -> usize {
+        if v < SUB_BUCKETS as u64 {
+            v as usize
+        } else {
+            let msb = 63 - v.leading_zeros(); // >= SUB_LOG
+            let shift = msb - SUB_LOG;
+            (shift as usize + 1) * SUB_BUCKETS + (((v >> shift) as usize) & (SUB_BUCKETS - 1))
+        }
+    }
+
+    /// Largest value mapping to bucket `idx` (percentiles report this upper
+    /// edge, so they never under-state a latency). Computed in u128: the top
+    /// bucket's edge is exactly `u64::MAX + 1`, which would wrap in u64.
+    fn bucket_high(idx: usize) -> u64 {
+        if idx < SUB_BUCKETS {
+            idx as u64
+        } else {
+            let shift = (idx / SUB_BUCKETS - 1) as u32;
+            let base = (SUB_BUCKETS + idx % SUB_BUCKETS) as u128;
+            let high = ((base + 1) << shift) - 1;
+            high.min(u64::MAX as u128) as u64
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `k` samples of value `v` (weighted recording).
+    pub fn record_n(&mut self, v: u64, k: u64) {
+        if k == 0 {
+            return;
+        }
+        self.counts[Self::bucket(v)] += k;
+        self.count += k;
+        self.sum += v as u128 * k as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile (`p` in [0, 100]), reported as the upper edge
+    /// of the hit bucket, clamped to the observed maximum. Exact for values
+    /// below [`SUB_BUCKETS`]; within `1/SUB_BUCKETS` relative error above.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (((p / 100.0) * self.count as f64).ceil().max(1.0) as u64).min(self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_high(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one (per-shard → cluster rollup).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_is_zeroed() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_bracketing() {
+        let mut prev = 0;
+        for v in 0..100_000u64 {
+            let b = LogHistogram::bucket(v);
+            assert!(b >= prev, "bucket index must not decrease (v={v})");
+            assert!(LogHistogram::bucket_high(b) >= v, "upper edge below value (v={v})");
+            prev = b;
+        }
+        // Extremes stay in range.
+        assert!(LogHistogram::bucket(u64::MAX) < NUM_BUCKETS);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [5u64, 1, 9, 3, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(50.0), 5);
+        assert_eq!(h.percentile(99.0), 9);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 9);
+        assert!((h.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_values_within_relative_error() {
+        let mut h = LogHistogram::new();
+        let mut rng = Rng::new(42);
+        let mut exact: Vec<u64> = (0..10_000).map(|_| rng.below(1_000_000_000)).collect();
+        for &v in &exact {
+            h.record(v);
+        }
+        exact.sort_unstable();
+        for p in [50.0, 95.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * exact.len() as f64).ceil() as usize;
+            let want = exact[rank.clamp(1, exact.len()) - 1] as f64;
+            let got = h.percentile(p) as f64;
+            // Upper-edge reporting: never below the true quantile, and at
+            // most one sub-bucket (1/32) above it.
+            assert!(got >= want, "p{p}: {got} < {want}");
+            assert!(got <= want * (1.0 + 1.0 / SUB_BUCKETS as f64) + 1.0, "p{p}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn weighted_recording_matches_repeats() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for _ in 0..7 {
+            a.record(1000);
+        }
+        b.record_n(1000, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_equals_recording_everything() {
+        let mut all = LogHistogram::new();
+        let mut parts = [LogHistogram::new(), LogHistogram::new()];
+        let mut rng = Rng::new(3);
+        for i in 0..1000 {
+            let v = rng.below(1 << 40);
+            all.record(v);
+            parts[i % 2].record(v);
+        }
+        let mut merged = LogHistogram::new();
+        merged.merge(&parts[0]);
+        merged.merge(&parts[1]);
+        assert_eq!(merged, all);
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let mut h = LogHistogram::new();
+        let mut rng = Rng::new(9);
+        for _ in 0..5000 {
+            h.record(rng.below(1 << 30));
+        }
+        assert!(h.percentile(50.0) <= h.percentile(95.0));
+        assert!(h.percentile(95.0) <= h.percentile(99.0));
+        assert!(h.percentile(99.0) <= h.percentile(99.9));
+        assert!(h.percentile(99.9) <= h.max());
+    }
+}

@@ -1,6 +1,9 @@
 //! Accounting shared by the models, planner and coordinator: data movement
-//! (the paper's Fig 18 currency) and simulated-time aggregation.
+//! (the paper's Fig 18 currency), simulated-time aggregation, and the
+//! log-bucketed histograms behind every latency/queue-depth percentile.
 
+pub mod latency;
 mod movement;
 
+pub use latency::LogHistogram;
 pub use movement::DataMovement;

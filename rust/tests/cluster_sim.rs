@@ -1,0 +1,117 @@
+//! Integration tests for the L4 cluster simulator: determinism of the JSON
+//! report artifact, router quality (plan-cache affinity), capacity-planner
+//! consistency with direct simulation, and workload envelope coverage.
+
+use pimacolaba::cluster::{plan_capacity, run_cluster, ClusterConfig, RouterKind};
+use pimacolaba::coordinator::{Arrival, SizeMix, Trace, Workload};
+
+fn mixed_trace(requests: usize, rps: f64, seed: u64) -> Trace {
+    let sizes = [32usize, 64, 256, 1024, 2048, 4096, 8192, 16384];
+    Workload::new(Arrival::Poisson, rps, SizeMix::uniform(&sizes).unwrap())
+        .unwrap()
+        .generate(requests, seed)
+}
+
+#[test]
+fn report_is_bit_identical_across_runs() {
+    let trace = mixed_trace(4000, 500_000.0, 42);
+    for router in [RouterKind::RoundRobin, RouterKind::SizeAffinity, RouterKind::LeastLoaded] {
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 4;
+        cfg.router = router;
+        let a = run_cluster(&trace, &cfg).unwrap().to_json().to_string();
+        let b = run_cluster(&trace, &cfg).unwrap().to_json().to_string();
+        assert_eq!(a, b, "router {:?} must be deterministic", router);
+    }
+    // And the trace itself is seed-deterministic end to end.
+    let again = mixed_trace(4000, 500_000.0, 42);
+    assert_eq!(trace, again);
+}
+
+#[test]
+fn size_affinity_beats_round_robin_on_plan_cache_hits() {
+    // Mixed-size trace over 4 shards: round-robin makes every shard plan
+    // every (size, padded-batch) shape; affinity pins each size to a home
+    // shard, so each engine plans only its own sizes.
+    let trace = mixed_trace(8000, 500_000.0, 7);
+    let mut rr = ClusterConfig::default_hw();
+    rr.shards = 4;
+    rr.router = RouterKind::RoundRobin;
+    let mut aff = rr.clone();
+    aff.router = RouterKind::SizeAffinity;
+
+    let rep_rr = run_cluster(&trace, &rr).unwrap();
+    let rep_aff = run_cluster(&trace, &aff).unwrap();
+    assert_eq!(rep_rr.requests, 8000);
+    assert_eq!(rep_aff.requests, 8000);
+    assert!(
+        rep_aff.cache_hit_rate() > rep_rr.cache_hit_rate(),
+        "affinity hit rate {:.4} should beat round-robin {:.4}",
+        rep_aff.cache_hit_rate(),
+        rep_rr.cache_hit_rate()
+    );
+    // Affinity needs strictly fewer cold plans for the same served load.
+    assert!(rep_aff.cache_misses < rep_rr.cache_misses);
+}
+
+#[test]
+fn capacity_plan_is_consistent_with_direct_runs() {
+    let trace =
+        Workload::new(Arrival::Poisson, 3_000_000.0, SizeMix::uniform(&[8192, 16384]).unwrap())
+            .unwrap()
+            .generate(2500, 5);
+    // A spreading router, so extra shards actually add capacity.
+    let mut cfg = ClusterConfig::default_hw();
+    cfg.router = RouterKind::LeastLoaded;
+    let slo_us = 200.0;
+    let plan = plan_capacity(&trace, &cfg, slo_us, 64).unwrap();
+    // The embedded report is the run at the chosen count.
+    assert_eq!(plan.report.shards, plan.shards);
+    assert!(plan.p99_us <= slo_us);
+    let mut direct = cfg.clone();
+    direct.shards = plan.shards;
+    let rep = run_cluster(&trace, &direct).unwrap();
+    assert_eq!(rep.latency_p_us(99.0), plan.p99_us, "planner report must match a direct run");
+}
+
+#[test]
+fn burst_and_diurnal_workloads_serve_cleanly() {
+    for arrival in [Arrival::parse("burst").unwrap(), Arrival::parse("diurnal").unwrap()] {
+        let trace =
+            Workload::new(arrival, 800_000.0, SizeMix::profile("bimodal", &[32, 4096, 16384]).unwrap())
+                .unwrap()
+                .generate(5000, 9);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 4;
+        cfg.router = RouterKind::LeastLoaded;
+        let rep = run_cluster(&trace, &cfg).unwrap();
+        assert_eq!(rep.requests, 5000);
+        // Bursty load must show a heavier tail than its median.
+        assert!(rep.latency_p_us(99.0) >= rep.latency_p_us(50.0));
+        assert!(rep.avg_occupancy() > 0.0 && rep.avg_occupancy() <= 1.0);
+    }
+}
+
+#[test]
+fn json_report_carries_the_acceptance_fields() {
+    let trace = mixed_trace(1000, 500_000.0, 3);
+    let mut cfg = ClusterConfig::default_hw();
+    cfg.shards = 2;
+    let rep = run_cluster(&trace, &cfg).unwrap();
+    let j = rep.to_json().to_string();
+    for field in [
+        "\"latency_us\"",
+        "\"p50\"",
+        "\"p95\"",
+        "\"p99\"",
+        "\"p999\"",
+        "\"utilization\"",
+        "\"gpu_mb\"",
+        "\"pim_cmd_mb\"",
+        "\"per_shard\"",
+        "\"plan_cache\"",
+        "\"queue_depth\"",
+    ] {
+        assert!(j.contains(field), "report JSON missing {field}: {j}");
+    }
+}

@@ -198,6 +198,72 @@ fn prop_planner_rules() {
 }
 
 #[test]
+fn prop_batcher_conservation_across_interleaved_push_drain() {
+    // Pending-count conservation at every step, and at the end every pushed
+    // request was drained exactly once (no drops, no duplicates), across an
+    // arbitrary interleaving of push / pop_ready / flush_ready / flush.
+    forall("batcher conserves requests under interleaving", |rng| {
+        let mut b = Batcher::new();
+        let mut pushed: Vec<u64> = Vec::new();
+        let mut drained: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..rng.range(1, 30) {
+            match rng.range(0, 4) {
+                0 | 1 => {
+                    for _ in 0..rng.range(1, 6) {
+                        let n = rng.pow2(4, 9);
+                        b.push(FftRequest::random(next_id, n, rng.range(1, 5), next_id));
+                        pushed.push(next_id);
+                        next_id += 1;
+                    }
+                }
+                2 => {
+                    if let Some(batch) = b.pop_ready(rng.range(1, 9)) {
+                        assert!(batch.requests.iter().all(|r| r.n == batch.n));
+                        drained.extend(batch.requests.iter().map(|r| r.id));
+                    }
+                }
+                _ => {
+                    for batch in b.flush_ready(rng.range(1, 9)) {
+                        drained.extend(batch.requests.iter().map(|r| r.id));
+                    }
+                }
+            }
+            assert_eq!(b.pending(), pushed.len() - drained.len());
+        }
+        for batch in b.flush() {
+            drained.extend(batch.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(b.pending(), 0);
+        let mut got = drained.clone();
+        got.sort_unstable();
+        assert_eq!(got, pushed, "every request drained exactly once");
+    });
+}
+
+#[test]
+fn prop_batcher_padding_waste_accounting() {
+    // Padded shape is the next power of two: a power-of-two capacity, at
+    // least the signal count, with waste < the signal count itself (padding
+    // never more than doubles the work).
+    forall("batch padding waste", |rng| {
+        let mut b = Batcher::new();
+        let n = rng.pow2(4, 10);
+        for id in 0..rng.range(1, 12) {
+            b.push(FftRequest::random(id as u64, n, rng.range(1, 5), id as u64));
+        }
+        let batch = b.pop_ready(1).unwrap();
+        let total = batch.total_signals();
+        let padded = batch.padded_signals();
+        assert!(padded.is_power_of_two());
+        assert!(padded >= total);
+        assert_eq!(batch.padding_waste(), padded - total);
+        assert!(batch.padding_waste() < total.max(1), "waste {} vs total {total}", batch.padding_waste());
+        assert_eq!(padded, total.next_power_of_two());
+    });
+}
+
+#[test]
 fn prop_batcher_preserves_requests() {
     forall("batcher loses nothing, groups by n", |rng| {
         let mut b = Batcher::new();
