@@ -1,0 +1,103 @@
+//! Pim stream pipeline bench: slots/butterfly per preset on the Fig 16
+//! tiles, IR→command lowering throughput, and a cluster-sim p99 — written to
+//! `BENCH_pim_streams.json` so future PRs have a perf baseline to diff
+//! against.
+
+use pimacolaba::cluster::{run_cluster, ClusterConfig};
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{Arrival, SizeMix, Workload};
+use pimacolaba::pim::{PimCommand, Sink, TimingSink};
+use pimacolaba::routines::{emit_strided, OptLevel};
+use pimacolaba::util::benchkit::Bench;
+use pimacolaba::util::Json;
+
+/// O(1)-memory sink that only counts commands (lowering-throughput probe).
+#[derive(Default)]
+struct CountSink(u64);
+
+impl Sink for CountSink {
+    fn accept(&mut self, _cmd: &PimCommand) -> pimacolaba::Result<()> {
+        self.0 += 1;
+        Ok(())
+    }
+}
+
+fn main() -> pimacolaba::Result<()> {
+    let bench = Bench::default();
+    let hw = SystemConfig::baseline().with_hw_opt();
+
+    // 1) Slots/butterfly per preset over the Fig 16 tiles — the numbers the
+    // pass pipeline must hold steady (cheap, not timed).
+    let mut streams = Vec::new();
+    for opt in OptLevel::ALL {
+        let sys = if opt.needs_hw() { hw.clone() } else { SystemConfig::baseline() };
+        for ls in [5u32, 8, 10] {
+            let n = 1usize << ls;
+            let mut sink = TimingSink::new(&sys).unchecked();
+            emit_strided(n, &sys, opt, &mut sink)?;
+            let rep = sink.finish();
+            let bflies = (n / 2) as f64 * ls as f64;
+            streams.push(Json::obj(vec![
+                ("preset", Json::str(opt.name())),
+                ("tile_log2", Json::num(ls as f64)),
+                ("slots_per_bfly", Json::num(rep.slots as f64 / bflies)),
+                ("commands", Json::num(rep.commands as f64)),
+            ]));
+        }
+    }
+
+    // 2) Lowering throughput: full sw-hw pipeline over a 2^16-point tile
+    // into a counting sink (no timing model in the loop).
+    let n = 1usize << 16;
+    let mut count = CountSink::default();
+    emit_strided(n, &hw, OptLevel::SwHw, &mut count)?;
+    let cmds = count.0;
+    let stats = bench.run("lower swhw 2^16 tile", || {
+        let mut sink = CountSink::default();
+        emit_strided(n, &hw, OptLevel::SwHw, &mut sink).unwrap();
+        sink.0
+    });
+    let lowering = Json::obj(vec![
+        ("tile_log2", Json::num(16.0)),
+        ("passes", Json::str(OptLevel::SwHw.name())),
+        ("commands", Json::num(cmds as f64)),
+        ("mean_ns", Json::num(stats.mean_ns())),
+        ("p99_ns", Json::num(stats.percentile_ns(99.0))),
+        ("cmds_per_sec", Json::num(cmds as f64 / (stats.mean_ns() / 1e9))),
+    ]);
+
+    // 3) Cluster-sim tail latency on engines built over the pipeline.
+    let sizes = [32usize, 256, 4096, 8192, 16384];
+    let trace = Workload::new(Arrival::Poisson, 500_000.0, SizeMix::uniform(&sizes)?)?
+        .generate(20_000, 7);
+    let cfg = ClusterConfig::default_hw();
+    let t0 = std::time::Instant::now();
+    let rep = run_cluster(&trace, &cfg)?;
+    let sim_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "cluster: {} requests p50={:.1}µs p99={:.1}µs ({}ms wall)",
+        rep.requests,
+        rep.latency_p_us(50.0),
+        rep.latency_p_us(99.0),
+        sim_wall_ms as u64
+    );
+    let cluster = Json::obj(vec![
+        ("requests", Json::num(rep.requests as f64)),
+        ("p50_us", Json::num(rep.latency_p_us(50.0))),
+        ("p99_us", Json::num(rep.latency_p_us(99.0))),
+        ("p999_us", Json::num(rep.latency_p_us(99.9))),
+        ("throughput_rps", Json::num(rep.throughput_rps())),
+        ("sim_wall_ms", Json::num(sim_wall_ms)),
+    ]);
+
+    let out = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("bench", Json::str("pim_streams")),
+        ("streams", Json::arr(streams)),
+        ("lowering", lowering),
+        ("cluster", cluster),
+    ]);
+    std::fs::write("BENCH_pim_streams.json", out.to_string())?;
+    println!("wrote BENCH_pim_streams.json");
+    Ok(())
+}

@@ -9,7 +9,7 @@
 
 use std::fmt;
 
-use crate::routines::OptLevel;
+use crate::pimc::PassConfig;
 
 /// One substrate's share of a plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,8 +21,8 @@ pub enum PlanComponent {
     /// Z matrix in (k2, n1) row-major layout (see [`crate::fft::FourStep`]).
     GpuStage { n: usize, m1: usize, m2: usize, batch: usize },
     /// `count` independent size-`m2` row FFTs (the PIM-FFT-Tile inputs),
-    /// generated/executed at optimization level `opt`.
-    PimTile { m2: usize, count: usize, opt: OptLevel },
+    /// lowered/executed under the pass set `passes`.
+    PimTile { m2: usize, count: usize, passes: PassConfig },
 }
 
 impl PlanComponent {
@@ -50,8 +50,8 @@ impl fmt::Display for PlanComponent {
             PlanComponent::GpuStage { n, m1, m2, batch } => {
                 write!(f, "gpu-stage(n={n}, m1={m1}, m2={m2}, batch={batch})")
             }
-            PlanComponent::PimTile { m2, count, opt } => {
-                write!(f, "pim-tile(m2={m2}, count={count}, {opt})")
+            PlanComponent::PimTile { m2, count, passes } => {
+                write!(f, "pim-tile(m2={m2}, count={count}, {passes})")
             }
         }
     }
@@ -67,7 +67,11 @@ mod tests {
         assert_eq!(c.input_len(), 64);
         assert_eq!(c.input_count(), 3);
         assert!(c.to_string().contains("gpu-stage"));
-        let t = PlanComponent::PimTile { m2: 32, count: 9, opt: OptLevel::Sw };
+        let t = PlanComponent::PimTile {
+            m2: 32,
+            count: 9,
+            passes: crate::routines::OptLevel::Sw.into(),
+        };
         assert_eq!(t.input_len(), 32);
         assert_eq!(t.input_count(), 9);
         assert!(t.to_string().contains("sw-opt"));

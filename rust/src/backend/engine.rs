@@ -4,8 +4,8 @@
 //! The engine owns the §5.1 planner plus two [`ComputeBackend`]s — a GPU
 //! backend (host reference or PJRT artifacts) and a PIM backend (simulated
 //! in-memory units) — and a memoized plan cache keyed by
-//! `(n, batch, opt)`, so serve traces with repeated shapes skip re-planning
-//! and re-costing entirely.
+//! `(n, batch, pass set)`, so serve traces with repeated shapes skip
+//! re-planning and re-costing entirely.
 //!
 //! Composition of a collaborative plan (paper Fig 11):
 //!
@@ -20,6 +20,7 @@ use anyhow::{ensure, Result};
 
 use crate::config::SystemConfig;
 use crate::fft::{is_pow2, log2, SoaVec};
+use crate::pimc::PassConfig;
 use crate::planner::{CollabPlan, PlanEval, PlanKind, Planner};
 use crate::routines::OptLevel;
 
@@ -47,7 +48,7 @@ pub struct EngineRun {
 #[derive(Default)]
 pub struct FftEngineBuilder {
     sys: Option<SystemConfig>,
-    opt: Option<OptLevel>,
+    passes: Option<PassConfig>,
     gpu_cost: GpuCostModel,
     gpu: Option<Box<dyn ComputeBackend>>,
     pim: Option<Box<dyn ComputeBackend>>,
@@ -60,11 +61,17 @@ impl FftEngineBuilder {
         self
     }
 
-    /// PIM optimization level (default: sw-hw-opt when the system has the
-    /// §6.2 ALU augmentation, sw-opt otherwise — the Pimacolaba default).
-    pub fn opt(mut self, opt: OptLevel) -> Self {
-        self.opt = Some(opt);
+    /// PIM lowering pass set — an [`OptLevel`] preset or any
+    /// [`PassConfig`] (default: sw-hw-opt when the system has the §6.2 ALU
+    /// augmentation, sw-opt otherwise — the Pimacolaba default).
+    pub fn opt(mut self, passes: impl Into<PassConfig>) -> Self {
+        self.passes = Some(passes.into());
         self
+    }
+
+    /// Alias of [`FftEngineBuilder::opt`] for explicit pass sets.
+    pub fn passes(self, passes: impl Into<PassConfig>) -> Self {
+        self.opt(passes)
     }
 
     /// GPU cost provider for the default backends and the planner
@@ -88,11 +95,14 @@ impl FftEngineBuilder {
 
     pub fn build(self) -> FftEngine {
         let sys = self.sys.unwrap_or_else(SystemConfig::baseline);
-        let opt = self.opt.unwrap_or(if sys.pim.hw_maddsub { OptLevel::SwHw } else { OptLevel::Sw });
+        let passes = self.passes.unwrap_or_else(|| {
+            let opt = if sys.pim.hw_maddsub { OptLevel::SwHw } else { OptLevel::Sw };
+            opt.passes()
+        });
         let gpu = self.gpu.unwrap_or_else(|| Box::new(HostFftBackend::new(self.gpu_cost)));
-        let pim = self.pim.unwrap_or_else(|| Box::new(PimSimBackend::new(&sys, opt)));
+        let pim = self.pim.unwrap_or_else(|| Box::new(PimSimBackend::new(&sys, passes)));
         FftEngine {
-            planner: Planner::with_models(&sys, opt, self.gpu_cost),
+            planner: Planner::with_models(&sys, passes, self.gpu_cost),
             sys,
             gpu,
             pim,
@@ -110,7 +120,7 @@ pub struct FftEngine {
     planner: Planner,
     gpu: Box<dyn ComputeBackend>,
     pim: Box<dyn ComputeBackend>,
-    plan_cache: HashMap<(usize, usize, OptLevel), (CollabPlan, PlanEval)>,
+    plan_cache: HashMap<(usize, usize, PassConfig), (CollabPlan, PlanEval)>,
     cache_hits: u64,
     cache_misses: u64,
 }
@@ -124,8 +134,9 @@ impl FftEngine {
         &self.sys
     }
 
-    pub fn opt(&self) -> OptLevel {
-        self.planner.opt()
+    /// The pass set the engine plans and lowers with.
+    pub fn passes(&self) -> PassConfig {
+        self.planner.passes()
     }
 
     pub fn gpu_backend_name(&self) -> &'static str {
@@ -156,7 +167,7 @@ impl FftEngine {
     pub fn plan(&mut self, n: usize, batch: usize) -> Result<(CollabPlan, PlanEval)> {
         ensure!(is_pow2(n) && n >= 2, "FFT size must be a power of two >= 2, got {n}");
         ensure!(batch > 0, "batch must be positive");
-        let key = (n, batch, self.planner.opt());
+        let key = (n, batch, self.planner.passes());
         if let Some(&hit) = self.plan_cache.get(&key) {
             self.cache_hits += 1;
             return Ok(hit);
@@ -202,7 +213,7 @@ impl FftEngine {
                 let stage =
                     self.gpu.estimate(&PlanComponent::GpuStage { n, m1, m2, batch }, &self.sys)?;
                 let tile = self.pim.estimate(
-                    &PlanComponent::PimTile { m2, count: batch * m1, opt: plan.opt },
+                    &PlanComponent::PimTile { m2, count: batch * m1, passes: plan.passes },
                     &self.sys,
                 )?;
                 let combined = stage.plus(&tile);
@@ -247,7 +258,7 @@ impl FftEngine {
                     }
                 }
                 let rows_out = self.pim.execute(
-                    &PlanComponent::PimTile { m2, count: rows.len(), opt: plan.opt },
+                    &PlanComponent::PimTile { m2, count: rows.len(), passes: plan.passes },
                     &rows,
                 )?;
                 ensure!(rows_out.len() == rows.len(), "PIM backend dropped tile outputs");
@@ -279,11 +290,11 @@ mod tests {
     #[test]
     fn builder_defaults_follow_system() {
         let e = FftEngine::builder().build();
-        assert_eq!(e.opt(), OptLevel::Sw);
+        assert_eq!(e.passes(), PassConfig::from(OptLevel::Sw));
         assert_eq!(e.gpu_backend_name(), "host-reference");
         assert_eq!(e.pim_backend_name(), "pim-sim");
         let hw = FftEngine::builder().system(&SystemConfig::baseline().with_hw_opt()).build();
-        assert_eq!(hw.opt(), OptLevel::SwHw);
+        assert_eq!(hw.passes(), PassConfig::from(OptLevel::SwHw));
     }
 
     #[test]

@@ -92,9 +92,8 @@ mod tests {
                 SoaVec::new(z.re[k2 * m2..(k2 + 1) * m2].to_vec(), z.im[k2 * m2..(k2 + 1) * m2].to_vec())
             })
             .collect();
-        let rows_out = b
-            .execute(&PlanComponent::PimTile { m2, count: m1, opt: OptLevel::Base }, &rows)
-            .unwrap();
+        let tile = PlanComponent::PimTile { m2, count: m1, passes: OptLevel::Base.into() };
+        let rows_out = b.execute(&tile, &rows).unwrap();
         let mut o = SoaVec::zeros(n);
         for (k2, row) in rows_out.iter().enumerate() {
             for k1 in 0..m2 {
@@ -111,7 +110,7 @@ mod tests {
         let mut b = HostFftBackend::default();
         let xs = vec![SoaVec::zeros(16)];
         assert!(b.execute(&PlanComponent::FullFft { n: 32, batch: 1 }, &xs).is_err());
-        let tile = PlanComponent::PimTile { m2: 32, count: 1, opt: OptLevel::Base };
+        let tile = PlanComponent::PimTile { m2: 32, count: 1, passes: OptLevel::Base.into() };
         assert!(b.estimate(&tile, &sys).is_err());
     }
 }

@@ -16,7 +16,7 @@
 //! * [`GpuCostModel`] — interchangeable GPU cost providers (the paper's
 //!   analytical model, or the measured-GPU simulator).
 //! * [`FftEngine`] — builder-configured front door owning the planner, both
-//!   backends, and a memoized plan cache keyed by `(n, batch, opt)`.
+//!   backends, and a memoized plan cache keyed by `(n, batch, pass set)`.
 //!
 //! Everything above this module (coordinator, figures, CLI, benches) talks
 //! to substrates exclusively through the engine; nothing else reaches into

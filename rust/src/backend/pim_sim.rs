@@ -10,8 +10,8 @@ use crate::config::SystemConfig;
 use crate::coordinator::PimTileExecutor;
 use crate::fft::SoaVec;
 use crate::metrics::DataMovement;
+use crate::pimc::PassConfig;
 use crate::planner::TileModel;
-use crate::routines::OptLevel;
 
 use super::{ComputeBackend, CostEstimate, PlanComponent};
 
@@ -20,26 +20,32 @@ use super::{ComputeBackend, CostEstimate, PlanComponent};
 /// stream) plus the [`TileModel`] cost table for estimates.
 pub struct PimSimBackend {
     sys: SystemConfig,
-    opt: OptLevel,
+    passes: PassConfig,
     tiles: TileModel,
     execs: HashMap<usize, PimTileExecutor>,
 }
 
 impl PimSimBackend {
-    /// Backend for one (system, opt level). The tile cost table and the
+    /// Backend for one (system, pass set). The tile cost table and the
     /// command streams are bound to this pair; `estimate`/`execute` reject
-    /// components generated at a different opt level.
-    pub fn new(sys: &SystemConfig, opt: OptLevel) -> Self {
-        Self { sys: sys.clone(), opt, tiles: TileModel::new(sys, opt), execs: HashMap::new() }
+    /// components lowered under a different pass set.
+    pub fn new(sys: &SystemConfig, passes: impl Into<PassConfig>) -> Self {
+        let passes = passes.into();
+        Self {
+            sys: sys.clone(),
+            passes,
+            tiles: TileModel::new(sys, passes),
+            execs: HashMap::new(),
+        }
     }
 
-    pub fn opt(&self) -> OptLevel {
-        self.opt
+    pub fn passes(&self) -> PassConfig {
+        self.passes
     }
 
     fn executor(&mut self, m2: usize) -> Result<&PimTileExecutor> {
         if !self.execs.contains_key(&m2) {
-            let exec = PimTileExecutor::new(&self.sys, self.opt, m2)?;
+            let exec = PimTileExecutor::new(&self.sys, self.passes, m2)?;
             self.execs.insert(m2, exec);
         }
         Ok(&self.execs[&m2])
@@ -53,12 +59,12 @@ impl ComputeBackend for PimSimBackend {
 
     fn estimate(&mut self, component: &PlanComponent, _sys: &SystemConfig) -> Result<CostEstimate> {
         match *component {
-            PlanComponent::PimTile { m2, count, opt } => {
+            PlanComponent::PimTile { m2, count, passes } => {
                 ensure!(
-                    opt == self.opt,
+                    passes == self.passes,
                     "pim-sim backend built for {}, component requests {}",
-                    self.opt,
-                    opt
+                    self.passes,
+                    passes
                 );
                 // pim_time_ns populates the per-round report cmd_bytes reads.
                 let time_ns = self.tiles.pim_time_ns(m2, count)?;
@@ -74,12 +80,12 @@ impl ComputeBackend for PimSimBackend {
 
     fn execute(&mut self, component: &PlanComponent, inputs: &[SoaVec]) -> Result<Vec<SoaVec>> {
         match *component {
-            PlanComponent::PimTile { m2, opt, .. } => {
+            PlanComponent::PimTile { m2, passes, .. } => {
                 ensure!(
-                    opt == self.opt,
+                    passes == self.passes,
                     "pim-sim backend built for {}, component requests {}",
-                    self.opt,
-                    opt
+                    self.passes,
+                    passes
                 );
                 ensure!(
                     inputs.iter().all(|s| s.len() == m2),
@@ -96,13 +102,18 @@ impl ComputeBackend for PimSimBackend {
 mod tests {
     use super::*;
     use crate::fft::fft_soa;
+    use crate::routines::OptLevel;
 
     #[test]
     fn tile_execution_matches_reference() {
         let sys = SystemConfig::baseline().with_hw_opt();
         let mut b = PimSimBackend::new(&sys, OptLevel::SwHw);
         let inputs: Vec<SoaVec> = (0..10).map(|i| SoaVec::random(32, 40 + i)).collect();
-        let c = PlanComponent::PimTile { m2: 32, count: inputs.len(), opt: OptLevel::SwHw };
+        let c = PlanComponent::PimTile {
+            m2: 32,
+            count: inputs.len(),
+            passes: OptLevel::SwHw.into(),
+        };
         let out = b.execute(&c, &inputs).unwrap();
         assert_eq!(out.len(), inputs.len());
         for (x, y) in inputs.iter().zip(&out) {
@@ -115,7 +126,7 @@ mod tests {
         let sys = SystemConfig::baseline();
         let mut b = PimSimBackend::new(&sys, OptLevel::Base);
         let count = sys.concurrent_ffts();
-        let c = PlanComponent::PimTile { m2: 32, count, opt: OptLevel::Base };
+        let c = PlanComponent::PimTile { m2: 32, count, passes: OptLevel::Base.into() };
         let est = b.estimate(&c, &sys).unwrap();
         let mut tm = TileModel::new(&sys, OptLevel::Base);
         assert_eq!(est.time_ns, tm.pim_time_ns(32, count).unwrap());
@@ -124,11 +135,12 @@ mod tests {
     }
 
     #[test]
-    fn rejects_foreign_components_and_opts() {
+    fn rejects_foreign_components_and_pass_sets() {
         let sys = SystemConfig::baseline();
         let mut b = PimSimBackend::new(&sys, OptLevel::Base);
         assert!(b.estimate(&PlanComponent::FullFft { n: 64, batch: 1 }, &sys).is_err());
-        let wrong = PlanComponent::PimTile { m2: 32, count: 1, opt: OptLevel::Sw };
+        let wrong =
+            PlanComponent::PimTile { m2: 32, count: 1, passes: OptLevel::Sw.into() };
         assert!(b.estimate(&wrong, &sys).is_err());
         assert!(b.execute(&wrong, &[SoaVec::zeros(32)]).is_err());
     }

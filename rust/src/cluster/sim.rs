@@ -18,6 +18,7 @@ use crate::backend::FftEngine;
 use crate::config::SystemConfig;
 use crate::coordinator::Trace;
 use crate::metrics::{DataMovement, LogHistogram};
+use crate::pimc::PassConfig;
 use crate::routines::OptLevel;
 use crate::util::Json;
 
@@ -36,18 +37,19 @@ pub struct ClusterConfig {
     /// batch, µs.
     pub max_wait_us: f64,
     pub sys: SystemConfig,
-    pub opt: OptLevel,
+    /// PIM lowering pass set every shard engine is built with.
+    pub passes: PassConfig,
 }
 
 impl ClusterConfig {
-    pub fn new(sys: SystemConfig, opt: OptLevel) -> Self {
+    pub fn new(sys: SystemConfig, passes: impl Into<PassConfig>) -> Self {
         Self {
             shards: 4,
             router: RouterKind::SizeAffinity,
             window_signals: 32,
             max_wait_us: 50.0,
             sys,
-            opt,
+            passes: passes.into(),
         }
     }
 
@@ -255,7 +257,7 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
     let wait_ns = (cfg.max_wait_us * 1e3).round() as u64;
 
     let mut shards: Vec<Shard> = (0..cfg.shards)
-        .map(|_| Shard::new(FftEngine::builder().system(&cfg.sys).opt(cfg.opt).build()))
+        .map(|_| Shard::new(FftEngine::builder().system(&cfg.sys).passes(cfg.passes).build()))
         .collect();
     let mut router = cfg.router.build(cfg.shards);
     let mut latency = LogHistogram::new();

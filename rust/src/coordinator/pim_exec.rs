@@ -10,34 +10,36 @@ use crate::dram::LANES;
 use crate::fft::SoaVec;
 use crate::mapping::StridedMapping;
 use crate::pim::{Executor, PimCommand, UnitState};
-use crate::routines::{strided_stream, OptLevel};
+use crate::pimc::PassConfig;
+use crate::routines::strided_stream;
 
 /// Executes batches of size-`m2` tile FFTs on simulated PIM units.
 pub struct PimTileExecutor {
     sys: SystemConfig,
-    opt: OptLevel,
+    passes: PassConfig,
     m2: usize,
     mapping: StridedMapping,
     stream: Vec<PimCommand>,
 }
 
 impl PimTileExecutor {
-    pub fn new(sys: &SystemConfig, opt: OptLevel, m2: usize) -> Result<Self> {
-        let stream = strided_stream(m2, sys, opt)?;
+    pub fn new(sys: &SystemConfig, passes: impl Into<PassConfig>, m2: usize) -> Result<Self> {
+        let passes = passes.into();
+        let stream = strided_stream(m2, sys, passes)?;
         // Validate the broadcast stream once up front; per-unit replay can
         // then skip the structural checks (EXPERIMENTS.md §Perf).
         for cmd in &stream {
             crate::pim::validate_cmd(sys, cmd)?;
         }
-        Ok(Self { sys: sys.clone(), opt, m2, mapping: StridedMapping::new(m2, sys)?, stream })
+        Ok(Self { sys: sys.clone(), passes, m2, mapping: StridedMapping::new(m2, sys)?, stream })
     }
 
     pub fn m2(&self) -> usize {
         self.m2
     }
 
-    pub fn opt(&self) -> OptLevel {
-        self.opt
+    pub fn passes(&self) -> PassConfig {
+        self.passes
     }
 
     /// Broadcast-stream length (for command-traffic accounting).
@@ -66,6 +68,7 @@ impl PimTileExecutor {
 mod tests {
     use super::*;
     use crate::fft::fft_soa;
+    use crate::routines::OptLevel;
 
     #[test]
     fn computes_real_ffts() {

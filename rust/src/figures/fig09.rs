@@ -23,7 +23,7 @@ pub fn fig09_mapping(quick: bool) -> Result<Table> {
         emit_strided(n, &sys, OptLevel::Base, &mut s1)?;
         let strided = s1.finish();
         let mut s2 = TimingSink::new(&sys);
-        emit_baseline(n, &sys, &mut s2)?;
+        emit_baseline(n, &sys, OptLevel::Base, &mut s2)?;
         let baseline = s2.finish();
         let base_t = strided.time.total_ns();
         for (name, rep) in [("strided", &strided), ("baseline", &baseline)] {

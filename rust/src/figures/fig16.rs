@@ -15,7 +15,7 @@ pub fn fig16_tiles(quick: bool) -> Result<Table> {
     let mut t = Table::new(
         "fig16_tiles",
         "Figure 16: optimized PIM-FFT-Tile speedup vs GPU",
-        &["tile_log2", "opt", "speedup_vs_gpu", "compute_ops_per_bfly"],
+        &["tile_log2", "opt", "speedup_vs_gpu", "compute_ops_per_bfly", "trivial_reduced_frac"],
     );
     for opt in OptLevel::ALL {
         let sys = if opt.needs_hw() {
@@ -30,7 +30,15 @@ pub fn fig16_tiles(quick: bool) -> Result<Table> {
             let rep = tm.round_report(n)?;
             let bflies = (n / 2) as f64 * ls as f64;
             let ops = rep.compute_ops() as f64 / bflies;
-            t.row(vec![ls.to_string(), opt.name().into(), format!("{eff:.4}"), format!("{ops:.3}")]);
+            // Pass provenance: which share of butterflies §6.1 reduced.
+            let reduced = rep.provenance.trivial_reduced as f64 / bflies;
+            t.row(vec![
+                ls.to_string(),
+                opt.name().into(),
+                format!("{eff:.4}"),
+                format!("{ops:.3}"),
+                format!("{reduced:.3}"),
+            ]);
         }
     }
     Ok(t)
@@ -67,6 +75,12 @@ mod tests {
         assert!((get("sw-hw-opt", 5, "compute_ops_per_bfly") - 2.675).abs() < 0.01);
         let shw10 = get("sw-hw-opt", 10, "compute_ops_per_bfly");
         assert!(shw10 > 3.0 && shw10 < 3.5, "{shw10} (paper range 2.67–3.46)");
+        // Provenance: only the sw presets strength-reduce butterflies; at
+        // 2^5 the trivial twiddle share is 46/80.
+        assert_eq!(get("pim-base", 5, "trivial_reduced_frac"), 0.0);
+        assert_eq!(get("hw-opt", 5, "trivial_reduced_frac"), 0.0);
+        assert!((get("sw-opt", 5, "trivial_reduced_frac") - 0.575).abs() < 1e-3);
+        assert!((get("sw-hw-opt", 5, "trivial_reduced_frac") - 0.575).abs() < 1e-3);
     }
 
     #[test]

@@ -1,13 +1,13 @@
 //! GPU performance models (paper §4.4.1):
 //!
-//! * [`analytical`] — the paper's model: FFT kernels are memory-bandwidth
+//! * `analytical` — the paper's model: FFT kernels are memory-bandwidth
 //!   bound, execution time = bytes moved / BabelStream-sustained bandwidth,
 //!   compute assumed free, transpose kernels subtracted out.
-//! * [`measured`] — a stand-in for the authors' MI210+rocFFT+Omniperf
+//! * `measured` — a stand-in for the authors' MI210+rocFFT+Omniperf
 //!   measurements: the same kernel decomposition with compute roofs, launch
 //!   overhead and an occupancy-based bandwidth derate, reproducing the
 //!   small-size divergence of Fig 8 and the utilization curves of Fig 4.
-//! * [`kernels`] — the rocFFT-style recursive LDS decomposition both share
+//! * `kernels` — the rocFFT-style recursive LDS decomposition both share
 //!   (paper Fig 2/Fig 11 kernel-count boundaries).
 
 mod analytical;

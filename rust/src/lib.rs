@@ -18,7 +18,7 @@
 //!
 //! * [`backend`] — the heart of the crate. [`backend::FftEngine`]
 //!   (builder-configured, with a memoized plan cache keyed by
-//!   `(n, batch, opt)`) plans, costs and executes FFTs through the
+//!   `(n, batch, pass set)`) plans, costs and executes FFTs through the
 //!   [`backend::ComputeBackend`] trait: `estimate` models a plan component
 //!   (time + data movement), `execute` computes real spectra. Concrete
 //!   backends: [`backend::HostFftBackend`] (reference FFT),
@@ -49,10 +49,14 @@
 //!   bindings are gated behind the `pjrt` cargo feature; without it the
 //!   registry still parses manifests but execution falls back to the host
 //!   backend.
+//! * [`pimc`] — the PIM stream compiler: routines emit a butterfly-level
+//!   IR; [`pimc::PassPipeline`] lowers it to command streams under a
+//!   [`pimc::PassConfig`] of composable optimization passes (the paper's
+//!   `sw-opt`/`hw-opt` plus new ones), with per-pass provenance counters.
 //! * Substrates the paper depends on, all built here:
 //!   [`dram`] (command-level HBM timing), [`pim`] (functional + timing PIM
 //!   unit simulator), [`mapping`] (strided/baseline data layouts),
-//!   [`routines`] (PIM FFT command-stream generators), [`gpu_model`]
+//!   [`routines`] (PIM FFT IR frontends), [`gpu_model`]
 //!   (the paper's analytical GPU model and a "measured" GPU simulator),
 //!   [`fft`] (host reference FFT + four-step algebra).
 //! * [`figures`] — one generator per paper figure/table, all driven through
@@ -69,6 +73,7 @@ pub mod gpu_model;
 pub mod mapping;
 pub mod metrics;
 pub mod pim;
+pub mod pimc;
 pub mod planner;
 pub mod routines;
 pub mod runtime;

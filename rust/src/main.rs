@@ -4,6 +4,7 @@
 //! * `figures  [--out DIR] [--quick]`      regenerate every paper figure/table
 //! * `plan     --n N [--batch B] [--opt L]` show + evaluate the chosen plan
 //! * `tile     --n N [--opt L]`             PIM-FFT-Tile cost breakdown
+//! * `passes   [--sizes a,b] [--out FILE]`  per-pass lowering ablation (JSON)
 //! * `serve    [--requests R] [--sizes a,b] [--artifacts DIR] [--verify]`
 //!                                          run the service over a synthetic trace
 //! * `cluster  [--shards K] [--rps R] [--slo-us T] ...`
@@ -12,6 +13,9 @@
 //! * `trace    --out FILE [--requests R]`   emit a reproducible workload trace
 //! * `artifacts [--dir DIR]`                list the AOT artifact manifest
 //! * `config   [--variant NAME]`            dump a system configuration
+//!
+//! Every `--opt L` site also accepts `--passes SPEC` (e.g.
+//! `--passes swhw,movelim,rowsched`) selecting an explicit pimc pass set.
 
 use std::path::Path;
 use std::time::Duration;
@@ -26,11 +30,13 @@ use pimacolaba::coordinator::{
 };
 use pimacolaba::fft::SoaVec;
 use pimacolaba::figures;
+use pimacolaba::pim::TimingSink;
+use pimacolaba::pimc::{Pass, PassConfig};
 use pimacolaba::planner::TileModel;
-use pimacolaba::routines::OptLevel;
+use pimacolaba::routines::{emit_strided, RoutineStats};
 use pimacolaba::runtime::Registry;
 use pimacolaba::util::cli::Args;
-use pimacolaba::util::Rng;
+use pimacolaba::util::{Json, Rng};
 
 const USAGE: &str = "\
 usage: pimacolaba <subcommand> [options]
@@ -40,6 +46,9 @@ subcommands:
   plan      --n N [--batch B] [--opt L]      show + evaluate the chosen plan
             [--variant NAME]
   tile      --n N [--opt L] [--variant NAME] PIM-FFT-Tile cost breakdown
+  passes    [--sizes 5,6,..] [--out FILE]    per-pass lowering ablation over the
+            [--variant NAME]                 Fig 16 tile sizes; writes a JSON
+                                             artifact with per-pass deltas
   serve     [--requests R] [--sizes a,b,..]  run the service over a synthetic trace
             [--opt L] [--variant NAME]
             [--artifacts DIR] [--no-artifacts] [--verify] [--seed S]
@@ -56,31 +65,38 @@ subcommands:
   config    [--opt L] [--variant NAME]       dump a system configuration
 
 opt levels: base | sw | hw | swhw (aliases: pim-base, sw-opt, hw-opt, sw-hw-opt, pimacolaba)
+            every --opt site also takes --passes SPEC for an explicit pimc pass
+            set, e.g. --passes swhw,movelim,rowsched or --passes none
+passes:     pairfuse | twiddle | maddsub | movelim | rowsched (and presets above)
 variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024
 routers:    round-robin | size-affinity | least-loaded
 arrivals:   poisson | burst | diurnal
 mixes:      uniform | small-heavy | large-heavy | bimodal";
 
-fn parse_opt(s: &str) -> Result<OptLevel> {
-    Ok(match s {
-        "base" | "pim-base" => OptLevel::Base,
-        "sw" | "sw-opt" => OptLevel::Sw,
-        "hw" | "hw-opt" => OptLevel::Hw,
-        "swhw" | "sw-hw-opt" | "pimacolaba" => OptLevel::SwHw,
-        other => bail!("unknown opt level '{other}' (base|sw|hw|swhw)"),
+/// The pass set a subcommand runs with: `--passes SPEC` wins, else the
+/// `--opt` preset (default sw-hw-opt). Both branches share
+/// `PassConfig::parse`, which accepts every preset alias.
+fn parse_passes(args: &Args) -> Result<PassConfig> {
+    PassConfig::parse(match args.get("passes") {
+        Some(spec) => spec,
+        None => args.get_or("opt", "swhw"),
     })
 }
 
-fn sys_for(opt: OptLevel, variant: &str) -> Result<SystemConfig> {
-    let base = match variant {
+fn variant_sys(variant: &str) -> Result<SystemConfig> {
+    Ok(match variant {
         "baseline" => SystemConfig::baseline(),
         "rf32" => SystemConfig::rf32(),
         "rb2k" => SystemConfig::rb2k(),
         "pim-per-bank" => SystemConfig::pim_per_bank(),
         "banks1024" => SystemConfig::banks1024(),
         other => bail!("unknown variant '{other}'"),
-    };
-    Ok(if opt.needs_hw() { base.with_hw_opt() } else { base })
+    })
+}
+
+fn sys_for(passes: PassConfig, variant: &str) -> Result<SystemConfig> {
+    let base = variant_sys(variant)?;
+    Ok(if passes.needs_hw() { base.with_hw_opt() } else { base })
 }
 
 fn main() -> Result<()> {
@@ -89,6 +105,7 @@ fn main() -> Result<()> {
         Some("figures") => cmd_figures(&args),
         Some("plan") => cmd_plan(&args),
         Some("tile") => cmd_tile(&args),
+        Some("passes") => cmd_passes(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("trace") => cmd_trace(&args),
@@ -115,9 +132,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1 << 13)?;
     let batch = args.get_usize("batch", 1 << 12)?;
-    let opt = parse_opt(args.get_or("opt", "swhw"))?;
-    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
-    let mut engine = FftEngine::builder().system(&sys).opt(opt).build();
+    let passes = parse_passes(args)?;
+    let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
+    let mut engine = FftEngine::builder().system(&sys).passes(passes).build();
     let (plan, ev) = engine.plan(n, batch)?;
     println!("{plan}");
     println!("  valid tiles: {:?}", engine.valid_tiles(n));
@@ -135,12 +152,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 fn cmd_tile(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 32)?;
-    let opt = parse_opt(args.get_or("opt", "swhw"))?;
-    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
-    let mut tm = TileModel::new(&sys, opt);
+    let passes = parse_passes(args)?;
+    let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
+    let mut tm = TileModel::new(&sys, passes);
     let rep = tm.round_report(n)?.clone();
     let bflies = (n / 2) as f64 * (n.trailing_zeros() as f64);
-    println!("PIM-FFT-Tile n={n} ({opt}, {} config)", sys.name);
+    println!("PIM-FFT-Tile n={n} ({passes}, {} config)", sys.name);
     println!("  butterflies/FFT:        {bflies}");
     println!("  broadcast commands:     {}", rep.commands);
     println!("  command slots:          {}", rep.slots);
@@ -159,7 +176,132 @@ fn cmd_tile(args: &Args) -> Result<()> {
         100.0 * rep.time.mov_ns / rep.time.total_ns(),
         100.0 * rep.time.rest_ns / rep.time.total_ns()
     );
+    let p = rep.provenance;
+    println!(
+        "  pass provenance: {} butterflies | {} strength-reduced | {} sqrt2-fused | \
+         {} dual-writes | {} movs elided | {} stages reversed | {} pairs split",
+        p.butterflies,
+        p.trivial_reduced,
+        p.sqrt2_fused,
+        p.dual_writes,
+        p.movs_eliminated,
+        p.stages_reversed,
+        p.pairs_split
+    );
     println!("  efficiency vs GPU:      {:.3}x", tm.efficiency(n)?);
+    Ok(())
+}
+
+/// Cumulative per-pass ablation over the Fig 16 tile sizes: start from the
+/// empty pipeline and enable one pass at a time, reporting the incremental
+/// slots/butterfly and round-time deltas. Writes a JSON artifact.
+fn cmd_passes(args: &Args) -> Result<()> {
+    let sizes: Vec<u32> = args
+        .get_or("sizes", "5,6,7,8,9,10")
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    for &ls in &sizes {
+        // Exponents, not sizes: 2^ls must stay within the strided limit.
+        if !(1..=20).contains(&ls) {
+            bail!("--sizes takes log2 tile sizes in 1..=20, got {ls}");
+        }
+    }
+    let out = args.get_or("out", "passes_ablation.json");
+    // The hw-capable system throughout: `hw_maddsub` only gates the
+    // dual-write ops (and widens validation), so pre-MaddSubFuse steps cost
+    // the same as on the baseline config.
+    let sys = variant_sys(args.get_or("variant", "baseline"))?.with_hw_opt();
+
+    let chain: &[(&str, Pass)] = &[
+        ("+pairfuse", Pass::BankPairFuse),
+        ("+twiddle", Pass::TwiddleStrengthReduce),
+        ("+maddsub", Pass::MaddSubFuse),
+        ("+movelim", Pass::RedundantMovElim),
+        ("+rowsched", Pass::RowSwitchSchedule),
+    ];
+    println!(
+        "{:<10} {:>10} {:>12} {:>12} {:>9} {:>12} {:>12}",
+        "tile", "passes", "slots/bfly", "ops/bfly", "rowacts", "round µs", "Δ µs"
+    );
+    let mut tiles = Vec::new();
+    for &ls in &sizes {
+        let n = 1usize << ls;
+        let mut cfg = PassConfig::NONE;
+        let mut steps = Vec::new();
+        let mut prev_us: Option<f64> = None;
+        let mut prev_spb: Option<f64> = None;
+        let steps_iter =
+            std::iter::once(("none", None)).chain(chain.iter().map(|&(nm, p)| (nm, Some(p))));
+        for (label, pass) in steps_iter {
+            if let Some(p) = pass {
+                cfg = cfg.with(p);
+            }
+            let mut sink = TimingSink::new(&sys);
+            let prov = emit_strided(n, &sys, cfg, &mut sink)?;
+            let mut rep = sink.finish();
+            rep.provenance = prov;
+            let st = RoutineStats::new(n, rep);
+            let spb = st.slots_per_butterfly();
+            let ops = st.compute_ops_per_butterfly();
+            let us = st.report.time.total_ns() / 1e3;
+            let d_us = prev_us.map(|p| us - p);
+            let d_spb = prev_spb.map(|p| spb - p);
+            println!(
+                "2^{:<8} {:>10} {:>12.3} {:>12.3} {:>9} {:>12.3} {:>12}",
+                ls,
+                label,
+                spb,
+                ops,
+                st.report.row_switches,
+                us,
+                d_us.map(|d| format!("{d:+.3}")).unwrap_or_else(|| "-".into()),
+            );
+            let p = st.report.provenance;
+            steps.push(Json::obj(vec![
+                ("step", Json::str(label)),
+                ("passes", Json::str(cfg.name())),
+                ("slots", Json::num(st.report.slots as f64)),
+                ("slots_per_bfly", Json::num(spb)),
+                ("compute_ops_per_bfly", Json::num(ops)),
+                ("mov_ops_per_bfly", Json::num(st.mov_ops_per_butterfly())),
+                ("row_switches", Json::num(st.report.row_switches as f64)),
+                ("round_us", Json::num(us)),
+                ("d_round_us", d_us.map(Json::num).unwrap_or(Json::Null)),
+                ("d_slots_per_bfly", d_spb.map(Json::num).unwrap_or(Json::Null)),
+                (
+                    "provenance",
+                    Json::obj(vec![
+                        ("butterflies", Json::num(p.butterflies as f64)),
+                        ("trivial_reduced", Json::num(p.trivial_reduced as f64)),
+                        ("sqrt2_fused", Json::num(p.sqrt2_fused as f64)),
+                        ("dual_writes", Json::num(p.dual_writes as f64)),
+                        ("movs_eliminated", Json::num(p.movs_eliminated as f64)),
+                        ("stages_reversed", Json::num(p.stages_reversed as f64)),
+                        ("pairs_split", Json::num(p.pairs_split as f64)),
+                    ]),
+                ),
+            ]));
+            prev_us = Some(us);
+            prev_spb = Some(spb);
+        }
+        tiles.push(Json::obj(vec![
+            ("tile_log2", Json::num(ls as f64)),
+            ("n", Json::num(n as f64)),
+            ("steps", Json::arr(steps)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("system", Json::str(sys.name.clone())),
+        (
+            "subject",
+            Json::str("pimc pass pipeline ablation (strided routine, one broadcast round)"),
+        ),
+        ("tiles", Json::arr(tiles)),
+    ]);
+    std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;
+    println!("wrote JSON report to {out}");
     Ok(())
 }
 
@@ -170,8 +312,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<usize>().context("parsing --sizes"))
         .collect::<Result<_>>()?;
-    let opt = parse_opt(args.get_or("opt", "swhw"))?;
-    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
+    let passes = parse_passes(args)?;
+    let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
     let verify = args.flag("verify");
     let artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     // PJRT execution needs both the AOT artifacts on disk and the `pjrt`
@@ -192,7 +334,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sys2 = sys.clone();
     let server = Server::spawn(
         move || {
-            let mut builder = FftEngine::builder().system(&sys2).opt(opt);
+            let mut builder = FftEngine::builder().system(&sys2).passes(passes);
             if use_artifacts {
                 let registry =
                     Registry::load(Path::new(&artifacts_dir)).expect("loading artifacts");
@@ -234,13 +376,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let mix = SizeMix::profile(args.get_or("mix", "uniform"), &sizes)?;
     let arrival = Arrival::parse(args.get_or("arrival", "poisson"))?;
     let seed = args.get_usize("seed", 7)? as u64;
-    let opt = parse_opt(args.get_or("opt", "swhw"))?;
-    let sys = sys_for(opt, args.get_or("variant", "baseline"))?;
+    let passes = parse_passes(args)?;
+    let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
     let out = args.get_or("out", "cluster_report.json");
 
     let workload = Workload::new(arrival, rps, mix)?;
     let trace = workload.generate(requests, seed);
-    let mut cfg = ClusterConfig::new(sys, opt);
+    let mut cfg = ClusterConfig::new(sys, passes);
     cfg.shards = args.get_usize("shards", 8)?;
     // Capacity planning defaults to a load-spreading router: size-affinity
     // pins each size to one home shard, so on a narrow size mix extra
@@ -338,10 +480,7 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 }
 
 fn cmd_config(args: &Args) -> Result<()> {
-    let sys = sys_for(
-        parse_opt(args.get_or("opt", "swhw"))?,
-        args.get_or("variant", "baseline"),
-    )?;
+    let sys = sys_for(parse_passes(args)?, args.get_or("variant", "baseline"))?;
     println!("{sys:#?}");
     println!("derived: pcs/stack={} units/pc={} lanes={} words/row={} concurrent_ffts={} pim_slot={}ns",
         sys.hbm.pcs_per_stack(), sys.units_per_pc(), sys.hbm.lanes(), sys.hbm.words_per_row(),

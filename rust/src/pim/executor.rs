@@ -25,6 +25,7 @@ use anyhow::{ensure, Result};
 
 use crate::config::SystemConfig;
 use crate::dram::{Half, RowTimer};
+use crate::pimc::PassProvenance;
 
 use super::{CmdKind, Operand, PimCommand, UnitState};
 
@@ -85,6 +86,11 @@ pub struct ExecReport {
     pub shift_ops: u64,
     /// Row activations.
     pub row_switches: u64,
+    /// What the [`crate::pimc::PassPipeline`] did while producing this
+    /// stream (zeroed for streams that did not come through the pipeline,
+    /// e.g. hand-built test commands). Filled in by the stream generator —
+    /// the timing sink only observes lowered commands.
+    pub provenance: PassProvenance,
 }
 
 impl ExecReport {

@@ -1,0 +1,95 @@
+//! The butterfly-level stream IR.
+//!
+//! Routines describe *what* a stage computes — butterflies with a twiddle
+//! class and an operand placement — and leave *how* it is encoded as PIM
+//! commands to the [`crate::pimc::PassPipeline`]. IR ops stream through an
+//! [`IrSink`] exactly like [`crate::pim::PimCommand`]s stream through a
+//! [`crate::pim::Sink`], so a 2^18-point tile lowers in O(1) memory.
+
+use anyhow::Result;
+
+use crate::fft::TwiddleClass;
+use crate::pim::PimCommand;
+
+/// Row-locality regime of a stage (butterfly span vs words-per-row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// `2^(stage+1) ≤ words_per_row`: each butterfly touches one open row
+    /// per bank.
+    SameRow,
+    /// Wider stages: x1 and x2 live in different rows, so x1/y1 stage
+    /// through the register file in chunks.
+    CrossRow,
+}
+
+/// Where a butterfly's x1 operand lives (y1 replaces it in place).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum X1Loc {
+    /// x1 is in the open row at word `w1` (same-row regime): y1 is written
+    /// back read-modify-write.
+    Row { w1: u32 },
+    /// x1 was staged into registers `(a, b)` = (re, im) by a preceding
+    /// [`IrOp::ChunkStage`] load (cross-row regime).
+    Regs { a: u8, b: u8 },
+}
+
+/// One radix-2 butterfly: y1 = x1 + ω·x2, y2 = x1 − ω·x2, with
+/// ω = (cos, sin) of class `class`, x2 = the open-row word `w2`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BflyOp {
+    /// FFT stage, `0..log2(n)`.
+    pub stage: u32,
+    /// §6.1 twiddle value class — what TwiddleStrengthReduce keys on.
+    pub class: TwiddleClass,
+    pub cos: f32,
+    pub sin: f32,
+    pub regime: Regime,
+    pub x1: X1Loc,
+    /// Word of x2 (and of y2) in the open row.
+    pub w2: u32,
+}
+
+/// Direction of a cross-row register-staging burst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkDir {
+    /// Rows → registers: stage `count` x1 word-pairs before the butterflies.
+    Load,
+    /// Registers → rows: drain the chunk's y1 results.
+    Drain,
+}
+
+/// One op of the stream IR.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IrOp {
+    /// A new stage begins. `reversed` marks RowSwitchSchedule's serpentine
+    /// block order (provenance only — the producer already ordered the
+    /// butterflies).
+    Stage { stage: u32, regime: Regime, reversed: bool },
+    /// Cross-row regime: the working set of rows for `block` opens.
+    RowOpen { block: u32 },
+    /// Cross-row regime: move `count` word-pairs between row words
+    /// `base..base+count` and register pairs `(reg0+2k, reg0+2k+1)`.
+    ChunkStage { base: u32, count: u32, reg0: u8, dir: ChunkDir },
+    /// One butterfly (the pipeline selects its command encoding).
+    Bfly(BflyOp),
+    /// A pre-encoded command passed through the pipeline untouched except
+    /// for slot packing — the escape hatch for streams whose structure the
+    /// butterfly IR does not model (the Fig 9 baseline mapping).
+    Raw(PimCommand),
+}
+
+/// Receives a generated IR stream.
+pub trait IrSink {
+    fn accept(&mut self, op: &IrOp) -> Result<()>;
+}
+
+/// Collects IR ops (tests / inspection of small tiles).
+#[derive(Default)]
+pub struct VecIrSink(pub Vec<IrOp>);
+
+impl IrSink for VecIrSink {
+    fn accept(&mut self, op: &IrOp) -> Result<()> {
+        self.0.push(op.clone());
+        Ok(())
+    }
+}

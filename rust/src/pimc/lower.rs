@@ -1,0 +1,373 @@
+//! IR → [`PimCommand`] lowering under a [`PassConfig`].
+//!
+//! [`PassPipeline`] is an [`IrSink`] that streams lowered commands into any
+//! [`Sink`] — timing, functional execution, or collection — preserving the
+//! O(1)-memory visitation property. Instruction selection per butterfly is
+//! exactly the paper's routines (see the pass table in the
+//! [module docs](crate::pimc)); the four [`crate::routines::OptLevel`]
+//! presets reproduce the pre-IR emitters' streams command for command.
+
+use anyhow::{ensure, Result};
+
+use crate::dram::Half;
+use crate::fft::TwiddleClass;
+use crate::pim::{CmdKind, MicroOp, Operand, PimCommand, Sink};
+
+use super::ir::{BflyOp, ChunkDir, IrOp, IrSink, X1Loc};
+use super::passes::{PassConfig, PassProvenance};
+
+/// The lowering pipeline: applies the configured passes to each IR op and
+/// emits the resulting command stream into `sink`.
+pub struct PassPipeline<'s> {
+    cfg: PassConfig,
+    prov: PassProvenance,
+    sink: &'s mut dyn Sink,
+}
+
+impl<'s> PassPipeline<'s> {
+    pub fn new(passes: impl Into<PassConfig>, sink: &'s mut dyn Sink) -> Self {
+        Self { cfg: passes.into(), prov: PassProvenance::default(), sink }
+    }
+
+    pub fn config(&self) -> PassConfig {
+        self.cfg
+    }
+
+    /// Per-pass provenance counters accumulated so far.
+    pub fn provenance(&self) -> PassProvenance {
+        self.prov
+    }
+
+    /// Emission point of every lowered command — where BankPairFuse acts.
+    /// With the pass disabled, a paired command is split into two singles
+    /// (each micro-op pays its own command slot, the pre-Fig-6 strawman).
+    fn push_cmd(&mut self, cmd: &PimCommand) -> Result<()> {
+        if !self.cfg.bank_pair_fuse {
+            if let (Some(even), Some(odd)) = (cmd.even, cmd.odd) {
+                self.prov.pairs_split += 1;
+                self.sink.accept(&PimCommand::single(cmd.kind, even))?;
+                return self.sink.accept(&PimCommand::single(cmd.kind, odd));
+            }
+        }
+        self.sink.accept(cmd)
+    }
+
+    fn push_pair(&mut self, kind: CmdKind, even: MicroOp, odd: MicroOp) -> Result<()> {
+        self.push_cmd(&PimCommand::pair(kind, even, odd))
+    }
+
+    fn push_single(&mut self, kind: CmdKind, op: MicroOp) -> Result<()> {
+        self.push_cmd(&PimCommand::single(kind, op))
+    }
+
+    /// Load x2 = (d, e) from the open row into (r4, r5).
+    fn load_x2(&mut self, w2: u32) -> Result<()> {
+        self.push_pair(
+            CmdKind::Mov,
+            MicroOp::Mov { dst: Operand::Reg(4), src: Operand::Row(Half::Even, w2) },
+            MicroOp::Mov { dst: Operand::Reg(5), src: Operand::Row(Half::Odd, w2) },
+        )
+    }
+
+    fn x1_ops(x1: X1Loc, w2: u32) -> (Operand, Operand, Operand, Operand, Operand, Operand) {
+        // (a_src, b_src, y1re_dst, y1im_dst, y2re_dst, y2im_dst)
+        match x1 {
+            X1Loc::Row { w1 } => (
+                Operand::Row(Half::Even, w1),
+                Operand::Row(Half::Odd, w1),
+                Operand::Row(Half::Even, w1),
+                Operand::Row(Half::Odd, w1),
+                Operand::Row(Half::Even, w2),
+                Operand::Row(Half::Odd, w2),
+            ),
+            X1Loc::Regs { a, b } => (
+                Operand::Reg(a),
+                Operand::Reg(b),
+                Operand::Reg(a),
+                Operand::Reg(b),
+                Operand::Row(Half::Even, w2),
+                Operand::Row(Half::Odd, w2),
+            ),
+        }
+    }
+
+    /// Select and emit the command encoding of one butterfly (§4.3/§6.x).
+    ///
+    /// Trivial (strength-reduced) butterflies first stage x2 into (r4, r5) —
+    /// their adds combine two words of the *same* bank, which one column
+    /// access cannot feed. All other classes read d and e straight from the
+    /// open rows: the even/odd words share a column address, so the
+    /// broadcast command's single column read per bank feeds both ALU sides
+    /// (the bank-pair shared-ALU wiring of Fig 6).
+    fn lower_bfly(&mut self, bf: &BflyOp) -> Result<()> {
+        self.prov.butterflies += 1;
+        let sw = self.cfg.twiddle_strength_reduce;
+        let hw = self.cfg.madd_sub_fuse;
+        let (a_src, b_src, y1re, y1im, y2re, y2im) = Self::x1_ops(bf.x1, bf.w2);
+
+        // Direct row-buffer operands for x2 = d + j·e.
+        let (d, e) = (Operand::Row(Half::Even, bf.w2), Operand::Row(Half::Odd, bf.w2));
+
+        if sw && bf.class.is_trivial() {
+            self.prov.trivial_reduced += 1;
+            // RedundantMovElim: when x1 sits in registers and the dual-write
+            // port computes y1/y2 from one read of (a, x2), the same-half
+            // classes (ω = ±1: re pairs with d, im with e) can read x2
+            // straight from the open row — the staging MOV pair is dead.
+            // ω = ∓j cross-reads the halves (re needs e, im needs d), so the
+            // first dual write would clobber the other side's input; those
+            // keep the staging.
+            let elide = self.cfg.redundant_mov_elim
+                && hw
+                && matches!(bf.x1, X1Loc::Regs { .. })
+                && matches!(bf.class, TwiddleClass::One | TwiddleClass::NegOne);
+            let (d, e) = if elide {
+                self.prov.movs_eliminated += 1;
+                (d, e)
+            } else {
+                // Stage x2 into registers: the trivial adds pair a (even, w1)
+                // with d (even, w2) — two words of one bank.
+                self.load_x2(bf.w2)?;
+                (Operand::Reg(4), Operand::Reg(5))
+            };
+            // ω ∈ {1, −1, −j, +j}: ω·x2 ∈ {±(d,e), ±(e,−d)} — adds only.
+            // (re_t ± , im_t ±): the value added to (a, b) for y1.
+            let (re_t, re_neg, im_t, im_neg) = match bf.class {
+                TwiddleClass::One => (d, false, e, false),
+                TwiddleClass::NegOne => (d, true, e, true),
+                TwiddleClass::NegJ => (e, false, d, true), // ω·x2 = e − j·d
+                TwiddleClass::PlusJ => (e, true, d, false),
+                _ => unreachable!(),
+            };
+            if hw {
+                // §6.3: one dual-write ADD±SUB pair — 2 compute ops.
+                self.prov.dual_writes += 2;
+                return self.push_pair(
+                    CmdKind::Add,
+                    MicroOp::MaddSub {
+                        dst_add: y1re,
+                        dst_sub: y2re,
+                        a: a_src,
+                        b: re_t,
+                        imm: if re_neg { -1.0 } else { 1.0 },
+                    },
+                    MicroOp::MaddSub {
+                        dst_add: y1im,
+                        dst_sub: y2im,
+                        a: b_src,
+                        b: im_t,
+                        imm: if im_neg { -1.0 } else { 1.0 },
+                    },
+                );
+            }
+            // §6.1: 4 pim-ADD (y2 first so the RMW of y1 can reuse a/b).
+            self.push_pair(
+                CmdKind::Add,
+                MicroOp::Madd { dst: y2re, a: a_src, b: re_t, imm: if re_neg { 1.0 } else { -1.0 } },
+                MicroOp::Madd { dst: y2im, a: b_src, b: im_t, imm: if im_neg { 1.0 } else { -1.0 } },
+            )?;
+            return self.push_pair(
+                CmdKind::Add,
+                MicroOp::Madd { dst: y1re, a: a_src, b: re_t, imm: if re_neg { -1.0 } else { 1.0 } },
+                MicroOp::Madd { dst: y1im, a: b_src, b: im_t, imm: if im_neg { -1.0 } else { 1.0 } },
+            );
+        }
+
+        if sw && hw && bf.class == TwiddleClass::Sqrt2 {
+            // §6.3 symmetric case: |c| = |s| = 1/√2 and δ = s/c = ±1:
+            // m1 = d − δe, m2 = e + δd. One dual-write AddSub yields
+            // (d+e, d−e); m1/m2 are ± those values.
+            self.prov.sqrt2_fused += 1;
+            self.prov.dual_writes += 3;
+            let delta = bf.sin / bf.cos; // ±1 up to rounding
+            self.push_single(
+                CmdKind::Add,
+                MicroOp::AddSub { dst_add: Operand::Reg(0), dst_sub: Operand::Reg(1), a: d, b: e },
+            )?;
+            // r0 = d+e, r1 = d−e.
+            // δ = −1: m1 = d+e = r0,  m2 = e−d = −r1.
+            // δ = +1: m1 = d−e = r1,  m2 = e+d = r0.
+            let (m1_reg, m2_reg, m2_neg) = if delta < 0.0 {
+                (Operand::Reg(0), Operand::Reg(1), true)
+            } else {
+                (Operand::Reg(1), Operand::Reg(0), false)
+            };
+            return self.push_pair(
+                CmdKind::Madd,
+                MicroOp::MaddSub { dst_add: y1re, dst_sub: y2re, a: a_src, b: m1_reg, imm: bf.cos },
+                MicroOp::MaddSub {
+                    dst_add: y1im,
+                    dst_sub: y2im,
+                    a: b_src,
+                    b: m2_reg,
+                    imm: if m2_neg { -bf.cos } else { bf.cos },
+                },
+            );
+        }
+
+        // General ω (and the non-reduced fallbacks): Fig 14 right.
+        // m1 = d − δ·e, m2 = e + δ·d with δ = s/c (c ≠ 0 away from ±j).
+        ensure!(bf.cos.abs() > 1e-30, "general butterfly routine requires cos(ω) != 0");
+        let delta = bf.sin / bf.cos;
+        self.push_pair(
+            CmdKind::Madd,
+            MicroOp::Madd { dst: Operand::Reg(0), a: d, b: e, imm: -delta },
+            MicroOp::Madd { dst: Operand::Reg(1), a: e, b: d, imm: delta },
+        )?;
+        if hw {
+            // §6.2: dual-write MADD+SUB finishes each component in one op.
+            self.prov.dual_writes += 2;
+            let c = bf.cos;
+            return self.push_pair(
+                CmdKind::Madd,
+                MicroOp::MaddSub { dst_add: y1re, dst_sub: y2re, a: a_src, b: Operand::Reg(0), imm: c },
+                MicroOp::MaddSub { dst_add: y1im, dst_sub: y2im, a: b_src, b: Operand::Reg(1), imm: c },
+            );
+        }
+        self.push_pair(
+            CmdKind::Madd,
+            MicroOp::Madd { dst: y2re, a: a_src, b: Operand::Reg(0), imm: -bf.cos },
+            MicroOp::Madd { dst: y2im, a: b_src, b: Operand::Reg(1), imm: -bf.cos },
+        )?;
+        self.push_pair(
+            CmdKind::Madd,
+            MicroOp::Madd { dst: y1re, a: a_src, b: Operand::Reg(0), imm: bf.cos },
+            MicroOp::Madd { dst: y1im, a: b_src, b: Operand::Reg(1), imm: bf.cos },
+        )
+    }
+
+    /// Lower a cross-row staging burst to pim-MOV pairs.
+    fn lower_chunk(&mut self, base: u32, count: u32, reg0: u8, dir: ChunkDir) -> Result<()> {
+        for k in 0..count {
+            let w = base + k;
+            let ra = reg0 + 2 * k as u8;
+            let rb = ra + 1;
+            match dir {
+                ChunkDir::Load => self.push_pair(
+                    CmdKind::Mov,
+                    MicroOp::Mov { dst: Operand::Reg(ra), src: Operand::Row(Half::Even, w) },
+                    MicroOp::Mov { dst: Operand::Reg(rb), src: Operand::Row(Half::Odd, w) },
+                )?,
+                ChunkDir::Drain => self.push_pair(
+                    CmdKind::Mov,
+                    MicroOp::Mov { dst: Operand::Row(Half::Even, w), src: Operand::Reg(ra) },
+                    MicroOp::Mov { dst: Operand::Row(Half::Odd, w), src: Operand::Reg(rb) },
+                )?,
+            }
+        }
+        Ok(())
+    }
+}
+
+impl IrSink for PassPipeline<'_> {
+    fn accept(&mut self, op: &IrOp) -> Result<()> {
+        match op {
+            IrOp::Stage { reversed, .. } => {
+                if *reversed {
+                    self.prov.stages_reversed += 1;
+                }
+                Ok(())
+            }
+            IrOp::RowOpen { .. } => Ok(()),
+            IrOp::ChunkStage { base, count, reg0, dir } => {
+                self.lower_chunk(*base, *count, *reg0, *dir)
+            }
+            IrOp::Bfly(bf) => self.lower_bfly(bf),
+            IrOp::Raw(cmd) => self.push_cmd(cmd),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::VecSink;
+    use crate::pimc::Regime;
+    use crate::routines::OptLevel;
+
+    fn bfly(class: TwiddleClass, cos: f32, sin: f32, x1: X1Loc, w2: u32) -> IrOp {
+        IrOp::Bfly(BflyOp { stage: 0, class, cos, sin, regime: Regime::CrossRow, x1, w2 })
+    }
+
+    #[test]
+    fn preset_encodings_have_paper_command_counts() {
+        // One general butterfly: 3 commands at base, 2 at hw.
+        let g = bfly(TwiddleClass::General, 0.9, -0.43, X1Loc::Row { w1: 0 }, 4);
+        for (opt, want) in [(OptLevel::Base, 3), (OptLevel::Hw, 2)] {
+            let mut v = VecSink::default();
+            let mut p = PassPipeline::new(opt, &mut v);
+            p.accept(&g).unwrap();
+            assert_eq!(v.0.len(), want, "{opt}");
+        }
+        // One trivial butterfly: mov + 2 adds at sw, mov + 1 dual-write at
+        // sw-hw.
+        let t = bfly(TwiddleClass::One, 1.0, 0.0, X1Loc::Row { w1: 0 }, 4);
+        for (opt, want) in [(OptLevel::Sw, 3), (OptLevel::SwHw, 2)] {
+            let mut v = VecSink::default();
+            let mut p = PassPipeline::new(opt, &mut v);
+            p.accept(&t).unwrap();
+            assert_eq!(v.0.len(), want, "{opt}");
+        }
+    }
+
+    #[test]
+    fn pair_split_without_bank_pair_fuse() {
+        let g = bfly(TwiddleClass::General, 0.9, -0.43, X1Loc::Row { w1: 0 }, 4);
+        let mut v = VecSink::default();
+        let mut p = PassPipeline::new(PassConfig::NONE, &mut v);
+        p.accept(&g).unwrap();
+        let prov = p.provenance();
+        // 3 pairs split into 6 singles.
+        assert_eq!(prov.pairs_split, 3);
+        assert_eq!(v.0.len(), 6);
+        assert!(v.0.iter().all(|c| c.op_count() == 1));
+    }
+
+    #[test]
+    fn movelim_elides_staging_for_same_half_trivials_only() {
+        let elim = PassConfig::preset(OptLevel::SwHw).with(crate::pimc::Pass::RedundantMovElim);
+        // ω = 1 with x1 in registers: staging MOV disappears.
+        let one = bfly(TwiddleClass::One, 1.0, 0.0, X1Loc::Regs { a: 6, b: 7 }, 4);
+        let mut v = VecSink::default();
+        let mut p = PassPipeline::new(elim, &mut v);
+        p.accept(&one).unwrap();
+        assert_eq!(p.provenance().movs_eliminated, 1);
+        assert_eq!(v.0.len(), 1);
+        // ω = −j cross-reads the halves: staging must stay.
+        let negj = bfly(TwiddleClass::NegJ, 0.0, -1.0, X1Loc::Regs { a: 6, b: 7 }, 4);
+        let mut v = VecSink::default();
+        let mut p = PassPipeline::new(elim, &mut v);
+        p.accept(&negj).unwrap();
+        assert_eq!(p.provenance().movs_eliminated, 0);
+        assert_eq!(v.0.len(), 2);
+        // Same-row x1 would need two column reads: staging must stay too.
+        let row = bfly(TwiddleClass::One, 1.0, 0.0, X1Loc::Row { w1: 0 }, 4);
+        let mut v = VecSink::default();
+        let mut p = PassPipeline::new(elim, &mut v);
+        p.accept(&row).unwrap();
+        assert_eq!(p.provenance().movs_eliminated, 0);
+        assert_eq!(v.0.len(), 2);
+    }
+
+    #[test]
+    fn provenance_counts_selections() {
+        let mut v = VecSink::default();
+        let mut p = PassPipeline::new(OptLevel::SwHw, &mut v);
+        p.accept(&bfly(TwiddleClass::One, 1.0, 0.0, X1Loc::Row { w1: 0 }, 4)).unwrap();
+        p.accept(&bfly(
+            TwiddleClass::Sqrt2,
+            std::f32::consts::FRAC_1_SQRT_2,
+            -std::f32::consts::FRAC_1_SQRT_2,
+            X1Loc::Row { w1: 0 },
+            4,
+        ))
+        .unwrap();
+        p.accept(&bfly(TwiddleClass::General, 0.9, -0.43, X1Loc::Row { w1: 0 }, 4)).unwrap();
+        let prov = p.provenance();
+        assert_eq!(prov.butterflies, 3);
+        assert_eq!(prov.trivial_reduced, 1);
+        assert_eq!(prov.sqrt2_fused, 1);
+        // 2 (trivial) + 3 (sqrt2: AddSub + MaddSub pair) + 2 (general).
+        assert_eq!(prov.dual_writes, 7);
+    }
+}

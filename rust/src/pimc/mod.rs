@@ -1,0 +1,66 @@
+//! Pimc — the PIM command-stream compiler: a butterfly-level stream IR plus
+//! an optimizing pass pipeline that lowers it to broadcast
+//! [`crate::pim::PimCommand`]s.
+//!
+//! The paper's §6 contributions are *ways to lower the PIM operations a
+//! butterfly needs*. Pre-IR, each combination lived as a hand-specialized
+//! code path keyed on a closed `OptLevel` enum; here they are independent
+//! passes over one IR, so the paper's four evaluation points become four
+//! presets in an open configuration space (and per-pass ablations the paper
+//! never ran — see the `passes` CLI subcommand).
+//!
+//! ## The IR
+//!
+//! Routines emit [`IrOp`]s into an [`IrSink`]: [`BflyOp`] butterflies
+//! carrying their stage, §6.1 twiddle class and operand placement, plus
+//! explicit `Stage` / `RowOpen` / `ChunkStage` markers describing row
+//! locality, and a `Raw` escape hatch for streams the butterfly model does
+//! not fit (the Fig 9 baseline mapping). [`PassPipeline`] — itself an
+//! `IrSink` — lowers each op into the configured [`crate::pim::Sink`], so
+//! generation stays O(1)-memory no matter the tile size.
+//!
+//! ## The passes
+//!
+//! | pass ([`Pass`])         | paper | effect |
+//! |-------------------------|-------|--------|
+//! | `BankPairFuse`          | §2.3 / Fig 6 | even/odd micro-ops of a butterfly retire in one command slot; disabled, every micro-op pays its own slot |
+//! | `TwiddleStrengthReduce` | §6.1 (`sw-opt`) | ω ∈ {±1, ±j} butterflies become 4 pim-ADD (2 with the dual-write port) |
+//! | `MaddSubFuse`           | §6.2 (`hw-opt`) | selects dual-write MADD+SUB / ADD±SUB ops — 4 compute ops per general butterfly; requires `PimConfig::hw_maddsub` |
+//! | `RedundantMovElim`      | — (new) | forwards open-row x2 reads into dual-write consumers, deleting dead staging pim-MOVs (same-half trivial classes, cross-row regime) |
+//! | `RowSwitchSchedule`     | — (new) | serpentine block order across stages, starting each stage on the rows the previous one left open (fewer tRP+tRAS charges) |
+//!
+//! [`PassConfig`] names the sets; `OptLevel::{Base, Sw, Hw, SwHw}` map to
+//! the presets `{pairfuse}`, `{pairfuse, twiddle}`, `{pairfuse, maddsub}`,
+//! `{pairfuse, twiddle, maddsub}` via [`PassConfig::preset`]. The pipeline
+//! records what it did in [`PassProvenance`] counters, which
+//! [`crate::pim::ExecReport`] carries alongside the timing buckets.
+//!
+//! ## Register conventions (strided routines)
+//!
+//! | reg   | role                                             |
+//! |-------|--------------------------------------------------|
+//! | r0,r1 | m1, m2 (Fig 14) / AddSub temporaries             |
+//! | r2,r3 | reserved                                         |
+//! | r4,r5 | d, e (x2 components) staged from the open row    |
+//! | r6..  | chunk staging for cross-row stages (x1/y1 re+im) |
+//!
+//! The register file size (Table 1: 16) bounds the cross-row chunk width —
+//! which is exactly why the Fig 19 RF×2 variant helps large tiles.
+//!
+//! ## Expressing a new routine
+//!
+//! A routine is any producer of `IrOp`s: walk your butterfly schedule, pick
+//! each butterfly's [`X1Loc`] placement (open-row word, or registers staged
+//! via `ChunkStage` bursts you emit around it), and hand every op to a
+//! `PassPipeline` — encoding, strength reduction, slot packing and
+//! provenance accounting are the pipeline's job, not the routine's. See
+//! `routines::emit_strided_ir` for the canonical frontend and
+//! `routines::emit_baseline` for a `Raw`-op frontend.
+
+mod ir;
+mod lower;
+mod passes;
+
+pub use ir::{BflyOp, ChunkDir, IrOp, IrSink, Regime, VecIrSink, X1Loc};
+pub use lower::PassPipeline;
+pub use passes::{Pass, PassConfig, PassProvenance};

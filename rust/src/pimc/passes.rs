@@ -1,0 +1,304 @@
+//! The optimization passes and their configuration.
+//!
+//! A [`PassConfig`] is a set of independent, composable lowering passes; the
+//! paper's four evaluation points ([`OptLevel`]) are just four named presets
+//! over this space (see the table in the [module docs](crate::pimc)). The
+//! config is `Copy + Eq + Hash` because it is carried by plans and used as a
+//! plan-cache key.
+
+use anyhow::{bail, Result};
+
+use crate::routines::OptLevel;
+
+/// One optimization pass of the pipeline. See the [`crate::pimc`] module
+/// docs for what each pass does and which paper section it reproduces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pass {
+    /// Retire the mirrored even/odd micro-ops of a butterfly in one
+    /// broadcast command slot (the Fig 6 bank-pair shared-command wiring).
+    BankPairFuse,
+    /// §6.1 `sw-opt`: strength-reduce ω ∈ {±1, ±j} butterflies to pim-ADD.
+    TwiddleStrengthReduce,
+    /// §6.2 `hw-opt`: select the dual-write MADD+SUB ALU ops.
+    MaddSubFuse,
+    /// Forward open-row reads into dual-write consumers, deleting dead
+    /// x2-staging pim-MOVs (same-half trivial classes, cross-row regime).
+    RedundantMovElim,
+    /// Serpentine block order across stages: start each stage on the rows
+    /// the previous one left open, saving tRP+tRAS charges.
+    RowSwitchSchedule,
+}
+
+impl Pass {
+    pub const ALL: [Pass; 5] = [
+        Pass::BankPairFuse,
+        Pass::TwiddleStrengthReduce,
+        Pass::MaddSubFuse,
+        Pass::RedundantMovElim,
+        Pass::RowSwitchSchedule,
+    ];
+
+    /// Short name, used by `--passes` specs and ablation reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::BankPairFuse => "pairfuse",
+            Pass::TwiddleStrengthReduce => "twiddle",
+            Pass::MaddSubFuse => "maddsub",
+            Pass::RedundantMovElim => "movelim",
+            Pass::RowSwitchSchedule => "rowsched",
+        }
+    }
+}
+
+impl std::fmt::Display for Pass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// An enabled-pass set. [`Default`] is the empty set (every butterfly takes
+/// the general Fig 14 routine and every micro-op pays its own command slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct PassConfig {
+    pub bank_pair_fuse: bool,
+    pub twiddle_strength_reduce: bool,
+    pub madd_sub_fuse: bool,
+    pub redundant_mov_elim: bool,
+    pub row_switch_schedule: bool,
+}
+
+impl PassConfig {
+    /// The empty pipeline: no strength reduction, no dual-write selection,
+    /// every micro-op in its own slot.
+    pub const NONE: PassConfig = PassConfig {
+        bank_pair_fuse: false,
+        twiddle_strength_reduce: false,
+        madd_sub_fuse: false,
+        redundant_mov_elim: false,
+        row_switch_schedule: false,
+    };
+
+    /// The paper preset for `opt` (same mapping as `From<OptLevel>`).
+    pub fn preset(opt: OptLevel) -> PassConfig {
+        let base = PassConfig { bank_pair_fuse: true, ..PassConfig::NONE };
+        match opt {
+            OptLevel::Base => base,
+            OptLevel::Sw => PassConfig { twiddle_strength_reduce: true, ..base },
+            OptLevel::Hw => PassConfig { madd_sub_fuse: true, ..base },
+            OptLevel::SwHw => {
+                PassConfig { twiddle_strength_reduce: true, madd_sub_fuse: true, ..base }
+            }
+        }
+    }
+
+    pub fn enabled(self, pass: Pass) -> bool {
+        match pass {
+            Pass::BankPairFuse => self.bank_pair_fuse,
+            Pass::TwiddleStrengthReduce => self.twiddle_strength_reduce,
+            Pass::MaddSubFuse => self.madd_sub_fuse,
+            Pass::RedundantMovElim => self.redundant_mov_elim,
+            Pass::RowSwitchSchedule => self.row_switch_schedule,
+        }
+    }
+
+    /// This config plus `pass`.
+    pub fn with(mut self, pass: Pass) -> PassConfig {
+        match pass {
+            Pass::BankPairFuse => self.bank_pair_fuse = true,
+            Pass::TwiddleStrengthReduce => self.twiddle_strength_reduce = true,
+            Pass::MaddSubFuse => self.madd_sub_fuse = true,
+            Pass::RedundantMovElim => self.redundant_mov_elim = true,
+            Pass::RowSwitchSchedule => self.row_switch_schedule = true,
+        }
+        self
+    }
+
+    /// This config minus `pass`.
+    pub fn without(mut self, pass: Pass) -> PassConfig {
+        match pass {
+            Pass::BankPairFuse => self.bank_pair_fuse = false,
+            Pass::TwiddleStrengthReduce => self.twiddle_strength_reduce = false,
+            Pass::MaddSubFuse => self.madd_sub_fuse = false,
+            Pass::RedundantMovElim => self.redundant_mov_elim = false,
+            Pass::RowSwitchSchedule => self.row_switch_schedule = false,
+        }
+        self
+    }
+
+    /// Enabled passes, in [`Pass::ALL`] order.
+    pub fn passes(self) -> Vec<Pass> {
+        Pass::ALL.into_iter().filter(|&p| self.enabled(p)).collect()
+    }
+
+    /// True when the set needs the §6.2 ALU augmentation
+    /// (`PimConfig::hw_maddsub`).
+    pub fn needs_hw(self) -> bool {
+        self.madd_sub_fuse
+    }
+
+    /// The paper preset this config equals exactly, if any.
+    pub fn opt_level(self) -> Option<OptLevel> {
+        OptLevel::ALL.into_iter().find(|&opt| self == PassConfig::preset(opt))
+    }
+
+    /// Stable human name: the paper preset name where one matches (possibly
+    /// with `+movelim`/`+rowsched` suffixes), else the enabled-pass list.
+    pub fn name(self) -> String {
+        let core = PassConfig {
+            redundant_mov_elim: false,
+            row_switch_schedule: false,
+            ..self
+        };
+        if let Some(opt) = core.opt_level() {
+            let mut s = opt.name().to_string();
+            if self.redundant_mov_elim {
+                s.push_str("+movelim");
+            }
+            if self.row_switch_schedule {
+                s.push_str("+rowsched");
+            }
+            return s;
+        }
+        let parts: Vec<&str> = self.passes().iter().map(|p| p.name()).collect();
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    /// Parse a `--passes` spec: tokens separated by `,` or `+`, each either
+    /// a preset (`base`/`sw`/`hw`/`swhw`/`all`/`none`) or a pass name
+    /// ([`Pass::name`]); the union of all tokens is returned.
+    pub fn parse(spec: &str) -> Result<PassConfig> {
+        let mut cfg = PassConfig::NONE;
+        // `union` keeps presets single-sourced in `PassConfig::preset`.
+        let union = |cfg: PassConfig, other: PassConfig| {
+            Pass::ALL
+                .into_iter()
+                .filter(|&p| other.enabled(p))
+                .fold(cfg, PassConfig::with)
+        };
+        let sep = |c: char| c == ',' || c == '+';
+        for token in spec.split(sep).map(str::trim).filter(|t| !t.is_empty()) {
+            cfg = match token {
+                "none" => cfg,
+                "all" => Pass::ALL.into_iter().fold(cfg, PassConfig::with),
+                "base" | "pim-base" => union(cfg, PassConfig::preset(OptLevel::Base)),
+                "sw" | "sw-opt" => union(cfg, PassConfig::preset(OptLevel::Sw)),
+                "hw" | "hw-opt" => union(cfg, PassConfig::preset(OptLevel::Hw)),
+                "swhw" | "sw-hw-opt" | "pimacolaba" => {
+                    union(cfg, PassConfig::preset(OptLevel::SwHw))
+                }
+                "pairfuse" => cfg.with(Pass::BankPairFuse),
+                "twiddle" => cfg.with(Pass::TwiddleStrengthReduce),
+                "maddsub" => cfg.with(Pass::MaddSubFuse),
+                "movelim" => cfg.with(Pass::RedundantMovElim),
+                "rowsched" => cfg.with(Pass::RowSwitchSchedule),
+                other => bail!(
+                    "unknown pass or preset '{other}' \
+                     (presets: none|base|sw|hw|swhw|all; \
+                     passes: pairfuse|twiddle|maddsub|movelim|rowsched)"
+                ),
+            };
+        }
+        Ok(cfg)
+    }
+}
+
+impl From<OptLevel> for PassConfig {
+    fn from(opt: OptLevel) -> PassConfig {
+        PassConfig::preset(opt)
+    }
+}
+
+impl std::fmt::Display for PassConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// What the pipeline did while lowering one stream — the per-pass
+/// provenance counters [`crate::pim::ExecReport`] carries, so every figure
+/// and ablation can attribute command/slot counts to the pass that shaped
+/// them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PassProvenance {
+    /// Butterfly IR ops lowered.
+    pub butterflies: u64,
+    /// Butterflies strength-reduced to pim-ADD (TwiddleStrengthReduce).
+    pub trivial_reduced: u64,
+    /// Butterflies taking the §6.3 symmetric ±1/√2 routine.
+    pub sqrt2_fused: u64,
+    /// Dual-write micro-ops emitted (MaddSubFuse).
+    pub dual_writes: u64,
+    /// x2-staging pim-MOV commands deleted (RedundantMovElim).
+    pub movs_eliminated: u64,
+    /// Stages emitted in reversed block order (RowSwitchSchedule).
+    pub stages_reversed: u64,
+    /// Paired commands split into two singles (BankPairFuse disabled).
+    pub pairs_split: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_levels() {
+        assert_eq!(PassConfig::preset(OptLevel::Base).name(), "pim-base");
+        assert_eq!(PassConfig::preset(OptLevel::Sw).name(), "sw-opt");
+        assert_eq!(PassConfig::preset(OptLevel::Hw).name(), "hw-opt");
+        assert_eq!(PassConfig::preset(OptLevel::SwHw).name(), "sw-hw-opt");
+        for opt in OptLevel::ALL {
+            let p = PassConfig::preset(opt);
+            assert!(p.bank_pair_fuse);
+            assert_eq!(p.needs_hw(), opt.needs_hw());
+            assert_eq!(p.opt_level(), Some(opt));
+            assert_eq!(PassConfig::from(opt), p);
+        }
+    }
+
+    #[test]
+    fn with_without_roundtrip() {
+        for pass in Pass::ALL {
+            let on = PassConfig::NONE.with(pass);
+            assert!(on.enabled(pass));
+            assert_eq!(on.without(pass), PassConfig::NONE);
+        }
+        assert_eq!(PassConfig::NONE.passes(), vec![]);
+        assert_eq!(
+            PassConfig::preset(OptLevel::SwHw).passes(),
+            vec![Pass::BankPairFuse, Pass::TwiddleStrengthReduce, Pass::MaddSubFuse]
+        );
+    }
+
+    #[test]
+    fn names_for_extended_sets() {
+        let p = PassConfig::preset(OptLevel::SwHw)
+            .with(Pass::RedundantMovElim)
+            .with(Pass::RowSwitchSchedule);
+        assert_eq!(p.name(), "sw-hw-opt+movelim+rowsched");
+        assert_eq!(p.opt_level(), None);
+        assert_eq!(PassConfig::NONE.name(), "none");
+        let odd = PassConfig::NONE.with(Pass::TwiddleStrengthReduce);
+        assert_eq!(odd.name(), "twiddle");
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(PassConfig::parse("swhw").unwrap(), PassConfig::preset(OptLevel::SwHw));
+        assert_eq!(
+            PassConfig::parse("sw-hw-opt,movelim").unwrap(),
+            PassConfig::preset(OptLevel::SwHw).with(Pass::RedundantMovElim)
+        );
+        assert_eq!(
+            PassConfig::parse("pairfuse+twiddle").unwrap(),
+            PassConfig::preset(OptLevel::Sw)
+        );
+        assert_eq!(PassConfig::parse("none").unwrap(), PassConfig::NONE);
+        let all = PassConfig::parse("all").unwrap();
+        assert!(Pass::ALL.into_iter().all(|p| all.enabled(p)));
+        assert!(PassConfig::parse("turbo").is_err());
+    }
+}

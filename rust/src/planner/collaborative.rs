@@ -10,6 +10,7 @@ use crate::config::SystemConfig;
 use crate::fft::{is_pow2, log2};
 use crate::gpu_model::kernel_count;
 use crate::metrics::DataMovement;
+use crate::pimc::PassConfig;
 use crate::routines::OptLevel;
 
 use super::TileModel;
@@ -31,13 +32,14 @@ pub enum PlanKind {
     Collaborative { m1: usize, m2: usize },
 }
 
-/// A chosen plan for (n, batch).
+/// A chosen plan for (n, batch). Carries the full PIM lowering pass set
+/// (an [`crate::routines::OptLevel`] preset or any custom combination).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CollabPlan {
     pub n: usize,
     pub batch: usize,
     pub kind: PlanKind,
-    pub opt: OptLevel,
+    pub passes: PassConfig,
 }
 
 impl fmt::Display for CollabPlan {
@@ -49,7 +51,7 @@ impl fmt::Display for CollabPlan {
             PlanKind::Collaborative { m1, m2 } => write!(
                 f,
                 "FFT n={} batch={}: GPU(m1={}) + PIM-FFT-Tile(m2={}, {})",
-                self.n, self.batch, m1, m2, self.opt
+                self.n, self.batch, m1, m2, self.passes
             ),
         }
     }
@@ -76,8 +78,8 @@ impl PlanEval {
     }
 }
 
-/// The §5.1 planner: owns the offline tile table for one (system, opt) and
-/// a pluggable GPU cost provider (`backend::GpuCostModel`).
+/// The §5.1 planner: owns the offline tile table for one (system, pass set)
+/// and a pluggable GPU cost provider (`backend::GpuCostModel`).
 pub struct Planner {
     sys: SystemConfig,
     tiles: TileModel,
@@ -87,14 +89,19 @@ pub struct Planner {
 impl Planner {
     /// Planner with an explicit GPU cost provider (the `FftEngine` builder
     /// goes through here so planner and backends price GPU work identically).
-    pub fn with_models(sys: &SystemConfig, opt: OptLevel, gpu_cost: GpuCostModel) -> Self {
-        Self { sys: sys.clone(), tiles: TileModel::new(sys, opt), gpu_cost }
+    pub fn with_models(
+        sys: &SystemConfig,
+        passes: impl Into<PassConfig>,
+        gpu_cost: GpuCostModel,
+    ) -> Self {
+        Self { sys: sys.clone(), tiles: TileModel::new(sys, passes), gpu_cost }
     }
 
-    /// Planner at a given optimization level (`OptLevel::SwHw` + a hw-opt
-    /// system = full Pimacolaba), with the paper's analytical GPU model.
-    pub fn with_opt(sys: &SystemConfig, opt: OptLevel) -> Self {
-        Self::with_models(sys, opt, GpuCostModel::Analytical)
+    /// Planner at a given pass set — an [`OptLevel`] preset
+    /// (`OptLevel::SwHw` + a hw-opt system = full Pimacolaba) or any
+    /// [`PassConfig`] — with the paper's analytical GPU model.
+    pub fn with_opt(sys: &SystemConfig, passes: impl Into<PassConfig>) -> Self {
+        Self::with_models(sys, passes, GpuCostModel::Analytical)
     }
 
     /// Pimacolaba defaults: sw-hw-opt when the system has the ALU
@@ -108,8 +115,8 @@ impl Planner {
         &self.sys
     }
 
-    pub fn opt(&self) -> OptLevel {
-        self.tiles.opt()
+    pub fn passes(&self) -> PassConfig {
+        self.tiles.passes()
     }
 
     /// Valid tile sizes for N under the §5.1 kernel-count rule.
@@ -131,10 +138,10 @@ impl Planner {
     /// decomposing (n > LDS), tiles ranked by offline efficiency.
     pub fn plan(&mut self, n: usize, batch: usize) -> CollabPlan {
         assert!(is_pow2(n) && n >= 2, "FFT size must be a power of two >= 2");
-        let opt = self.tiles.opt();
+        let passes = self.tiles.passes();
         if n <= self.sys.gpu.lds_max_fft {
             // §5.2.1: single-kernel GPU FFTs are already efficient.
-            return CollabPlan { n, batch, kind: PlanKind::GpuOnly, opt };
+            return CollabPlan { n, batch, kind: PlanKind::GpuOnly, passes };
         }
         let mut best: Option<(f64, usize)> = None;
         for m2 in self.valid_tiles(n) {
@@ -149,9 +156,9 @@ impl Planner {
                 n,
                 batch,
                 kind: PlanKind::Collaborative { m1: n / m2, m2 },
-                opt,
+                passes,
             },
-            None => CollabPlan { n, batch, kind: PlanKind::GpuOnly, opt },
+            None => CollabPlan { n, batch, kind: PlanKind::GpuOnly, passes },
         }
     }
 

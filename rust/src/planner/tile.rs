@@ -1,5 +1,5 @@
 //! Offline PIM-FFT-Tile cost model: times one broadcast round of the strided
-//! routine per (tile size, opt level) and scales by occupancy — the table
+//! routine per (tile size, pass set) and scales by occupancy — the table
 //! §5.1 consults when picking tiles, and the source of Figs 10/16/19 numbers.
 
 use std::collections::HashMap;
@@ -8,22 +8,25 @@ use anyhow::Result;
 
 use crate::config::SystemConfig;
 use crate::pim::{ExecReport, TimingSink};
-use crate::routines::{emit_strided, OptLevel};
+use crate::pimc::PassConfig;
+use crate::routines::emit_strided;
 
-/// Cached per-round reports for one (system, opt level).
+/// Cached per-round reports for one (system, pass set).
 pub struct TileModel {
     sys: SystemConfig,
-    opt: OptLevel,
+    passes: PassConfig,
     cache: HashMap<usize, ExecReport>,
 }
 
 impl TileModel {
-    pub fn new(sys: &SystemConfig, opt: OptLevel) -> Self {
-        Self { sys: sys.clone(), opt, cache: HashMap::new() }
+    /// Model for one pass set — an [`crate::routines::OptLevel`] preset or
+    /// any [`PassConfig`].
+    pub fn new(sys: &SystemConfig, passes: impl Into<PassConfig>) -> Self {
+        Self { sys: sys.clone(), passes: passes.into(), cache: HashMap::new() }
     }
 
-    pub fn opt(&self) -> OptLevel {
-        self.opt
+    pub fn passes(&self) -> PassConfig {
+        self.passes
     }
 
     pub fn sys(&self) -> &SystemConfig {
@@ -31,12 +34,15 @@ impl TileModel {
     }
 
     /// Per-round execution report for a size-`n` tile (one broadcast stream
-    /// advancing `concurrent_ffts()` FFTs). Cached.
+    /// advancing `concurrent_ffts()` FFTs), including the pipeline's
+    /// per-pass provenance counters. Cached.
     pub fn round_report(&mut self, n: usize) -> Result<&ExecReport> {
         if !self.cache.contains_key(&n) {
             let mut sink = TimingSink::new(&self.sys).unchecked();
-            emit_strided(n, &self.sys, self.opt, &mut sink)?;
-            self.cache.insert(n, sink.finish());
+            let prov = emit_strided(n, &self.sys, self.passes, &mut sink)?;
+            let mut rep = sink.finish();
+            rep.provenance = prov;
+            self.cache.insert(n, rep);
         }
         Ok(&self.cache[&n])
     }
@@ -74,6 +80,8 @@ impl TileModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pimc::Pass;
+    use crate::routines::OptLevel;
 
     #[test]
     fn rounds_scale_with_batch() {
@@ -104,6 +112,35 @@ mod tests {
         for n in [32usize, 64, 256, 1024] {
             assert!(swhw.efficiency(n).unwrap() > base.efficiency(n).unwrap(), "n={n}");
         }
+    }
+
+    #[test]
+    fn extra_passes_only_help() {
+        // The new passes never slow a tile down; movelim/rowsched strictly
+        // help cross-row tiles.
+        let hw_sys = SystemConfig::baseline().with_hw_opt();
+        let mut swhw = TileModel::new(&hw_sys, OptLevel::SwHw);
+        let all = OptLevel::SwHw
+            .passes()
+            .with(Pass::RedundantMovElim)
+            .with(Pass::RowSwitchSchedule);
+        let mut extra = TileModel::new(&hw_sys, all);
+        for n in [64usize, 256, 1024] {
+            let plain = swhw.pim_time_ns(n, 1).unwrap();
+            let tuned = extra.pim_time_ns(n, 1).unwrap();
+            assert!(tuned < plain, "n={n}: {tuned} !< {plain}");
+        }
+    }
+
+    #[test]
+    fn round_report_carries_provenance() {
+        let sys = SystemConfig::baseline();
+        let mut tm = TileModel::new(&sys, OptLevel::Sw);
+        let rep = tm.round_report(64).unwrap();
+        assert_eq!(rep.provenance.butterflies, 32 * 6);
+        assert!(rep.provenance.trivial_reduced > 0);
+        assert_eq!(rep.provenance.dual_writes, 0);
+        assert_eq!(rep.provenance.pairs_split, 0);
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //! ships the strided mapping. The stream is structurally valid (register
 //! and row constraints hold) and is costed by the same executor, but only
 //! the strided routines carry the functional (numeric) contract.
+//!
+//! The frontend emits [`crate::pimc::IrOp::Raw`] ops: the cross-lane scheme
+//! is exactly what §4.2.2 shows the butterfly optimizations cannot help
+//! (per-lane twiddles defeat scalar immediates, shifts dominate), so none
+//! of the encoding passes apply — only the pipeline's slot packing does.
 
 use anyhow::Result;
 
@@ -21,10 +26,12 @@ use crate::dram::{Half, LANES};
 use crate::fft::{is_pow2, log2};
 use crate::mapping::BaselineMapping;
 use crate::pim::{CmdKind, MicroOp, Operand, PimCommand, Sink, VecSink};
+use crate::pimc::{IrOp, IrSink, PassConfig, PassPipeline};
+use crate::routines::OptLevel;
 
-/// Emit the baseline-mapping stream advancing the unit's 8 resident FFTs of
-/// size `n` through all stages.
-pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Result<()> {
+/// Emit the baseline-mapping IR (all [`IrOp::Raw`]) for the unit's 8
+/// resident FFTs of size `n` through all stages.
+pub fn emit_baseline_ir(n: usize, sys: &SystemConfig, ir: &mut dyn IrSink) -> Result<()> {
     assert!(is_pow2(n) && n >= 2);
     let mapping = BaselineMapping::new(n, sys)?;
     let wpf = mapping.words_per_fft() as u32;
@@ -45,6 +52,7 @@ pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Resul
             MicroOp::Mov { dst: Operand::Row(Half::Odd, wo), src: Operand::Reg(src.1) },
         )
     };
+    let mut raw = |cmd: PimCommand| ir.accept(&IrOp::Raw(cmd));
 
     for s in 0..log2(n) {
         let half = 1u32 << s;
@@ -53,51 +61,51 @@ pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Resul
         if half < LANES as u32 {
             // Cross-lane stage: same twiddle/lane pattern for every word —
             // one vector load per stage, shifts around every word's compute.
-            sink.accept(&mov_pair((2, 3), tw_word, tw_word))?;
+            raw(mov_pair((2, 3), tw_word, tw_word))?;
             for slot in 0..LANES as u32 {
                 for w in 0..wpf {
                     let (we, wo) = (slot * wpf + w, slot * wpf + w);
-                    sink.accept(&mov_pair((0, 1), we, wo))?;
+                    raw(mov_pair((0, 1), we, wo))?;
                     // Align x2 lanes onto x1 lanes.
-                    sink.accept(&PimCommand::pair(
+                    raw(PimCommand::pair(
                         CmdKind::Shift,
                         MicroOp::Shift { dst: 4, src: 0, amt: -(half as i8) },
                         MicroOp::Shift { dst: 5, src: 1, amt: -(half as i8) },
                     ))?;
                     // t = ω·x2 (vector twiddle): tr = d·c − e·s, ti = d·s + e·c.
-                    sink.accept(&PimCommand::pair(
+                    raw(PimCommand::pair(
                         CmdKind::Madd,
                         MicroOp::Mul { dst: Operand::Reg(6), a: Operand::Reg(4), b: Operand::Reg(2) },
                         MicroOp::Mul { dst: Operand::Reg(7), a: Operand::Reg(4), b: Operand::Reg(3) },
                     ))?;
-                    sink.accept(&PimCommand::pair(
+                    raw(PimCommand::pair(
                         CmdKind::Madd,
                         MicroOp::Fma { dst: Operand::Reg(6), a: Operand::Reg(5), b: Operand::Reg(3), sub: true },
                         MicroOp::Fma { dst: Operand::Reg(7), a: Operand::Reg(5), b: Operand::Reg(2), sub: false },
                     ))?;
                     // y1/y2 in x1-aligned lanes, then restore alignment.
-                    sink.accept(&PimCommand::pair(
+                    raw(PimCommand::pair(
                         CmdKind::Add,
                         MicroOp::Add { dst: Operand::Reg(8), a: Operand::Reg(0), b: Operand::Reg(6), sub: true },
                         MicroOp::Add { dst: Operand::Reg(9), a: Operand::Reg(1), b: Operand::Reg(7), sub: true },
                     ))?;
-                    sink.accept(&PimCommand::pair(
+                    raw(PimCommand::pair(
                         CmdKind::Add,
                         MicroOp::Add { dst: Operand::Reg(0), a: Operand::Reg(0), b: Operand::Reg(6), sub: false },
                         MicroOp::Add { dst: Operand::Reg(1), a: Operand::Reg(1), b: Operand::Reg(7), sub: false },
                     ))?;
-                    sink.accept(&PimCommand::pair(
+                    raw(PimCommand::pair(
                         CmdKind::Shift,
                         MicroOp::Shift { dst: 10, src: 8, amt: half as i8 },
                         MicroOp::Shift { dst: 11, src: 9, amt: half as i8 },
                     ))?;
                     // Merge y1 (low lanes) and shifted y2 (high lanes).
-                    sink.accept(&PimCommand::pair(
+                    raw(PimCommand::pair(
                         CmdKind::Add,
                         MicroOp::Add { dst: Operand::Reg(0), a: Operand::Reg(0), b: Operand::Reg(10), sub: false },
                         MicroOp::Add { dst: Operand::Reg(1), a: Operand::Reg(1), b: Operand::Reg(11), sub: false },
                     ))?;
-                    sink.accept(&store_pair((0, 1), we, wo))?;
+                    raw(store_pair((0, 1), we, wo))?;
                 }
             }
         } else {
@@ -106,7 +114,7 @@ pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Resul
             let half_w = half / LANES as u32;
             let m_w = half_w * 2;
             for p in 0..half_w {
-                sink.accept(&mov_pair((2, 3), tw_word + p % wpf, tw_word + p % wpf))?;
+                raw(mov_pair((2, 3), tw_word + p % wpf, tw_word + p % wpf))?;
                 for slot in 0..LANES as u32 {
                     let base = slot * wpf;
                     let mut blk = 0u32;
@@ -117,7 +125,7 @@ pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Resul
                         if cross_row {
                             // Stage x1 into registers so no command touches
                             // two rows of one bank.
-                            sink.accept(&mov_pair((0, 1), w1, w1))?;
+                            raw(mov_pair((0, 1), w1, w1))?;
                         }
                         let (a, b) = if cross_row {
                             (Operand::Reg(0), Operand::Reg(1))
@@ -125,30 +133,30 @@ pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Resul
                             (Operand::Row(Half::Even, w1), Operand::Row(Half::Odd, w1))
                         };
                         // t = ω·x2 with vector twiddle.
-                        sink.accept(&PimCommand::pair(
+                        raw(PimCommand::pair(
                             CmdKind::Madd,
                             MicroOp::Mul { dst: Operand::Reg(6), a: Operand::Row(Half::Even, w2), b: Operand::Reg(2) },
                             MicroOp::Mul { dst: Operand::Reg(7), a: Operand::Row(Half::Even, w2), b: Operand::Reg(3) },
                         ))?;
-                        sink.accept(&PimCommand::pair(
+                        raw(PimCommand::pair(
                             CmdKind::Madd,
                             MicroOp::Fma { dst: Operand::Reg(6), a: Operand::Row(Half::Odd, w2), b: Operand::Reg(3), sub: true },
                             MicroOp::Fma { dst: Operand::Reg(7), a: Operand::Row(Half::Odd, w2), b: Operand::Reg(2), sub: false },
                         ))?;
-                        sink.accept(&PimCommand::pair(
+                        raw(PimCommand::pair(
                             CmdKind::Add,
                             MicroOp::Add { dst: Operand::Row(Half::Even, w2), a, b: Operand::Reg(6), sub: true },
                             MicroOp::Add { dst: Operand::Row(Half::Odd, w2), a: b, b: Operand::Reg(7), sub: true },
                         ))?;
                         if cross_row {
-                            sink.accept(&PimCommand::pair(
+                            raw(PimCommand::pair(
                                 CmdKind::Add,
                                 MicroOp::Add { dst: Operand::Reg(0), a, b: Operand::Reg(6), sub: false },
                                 MicroOp::Add { dst: Operand::Reg(1), a: b, b: Operand::Reg(7), sub: false },
                             ))?;
-                            sink.accept(&store_pair((0, 1), w1, w1))?;
+                            raw(store_pair((0, 1), w1, w1))?;
                         } else {
-                            sink.accept(&PimCommand::pair(
+                            raw(PimCommand::pair(
                                 CmdKind::Add,
                                 MicroOp::Add { dst: Operand::Row(Half::Even, w1), a, b: Operand::Reg(6), sub: false },
                                 MicroOp::Add { dst: Operand::Row(Half::Odd, w1), a: b, b: Operand::Reg(7), sub: false },
@@ -163,10 +171,23 @@ pub fn emit_baseline(n: usize, sys: &SystemConfig, sink: &mut dyn Sink) -> Resul
     Ok(())
 }
 
+/// Emit the baseline-mapping command stream into `sink`: the IR frontend
+/// lowered through a [`PassPipeline`] (only slot packing applies to `Raw`
+/// ops; `passes` exists for the BankPairFuse ablation).
+pub fn emit_baseline(
+    n: usize,
+    sys: &SystemConfig,
+    passes: impl Into<PassConfig>,
+    sink: &mut dyn Sink,
+) -> Result<()> {
+    let mut pipe = PassPipeline::new(passes, sink);
+    emit_baseline_ir(n, sys, &mut pipe)
+}
+
 /// Materialize the baseline stream (tests).
 pub fn baseline_stream(n: usize, sys: &SystemConfig) -> Result<Vec<PimCommand>> {
     let mut sink = VecSink::default();
-    emit_baseline(n, sys, &mut sink)?;
+    emit_baseline(n, sys, OptLevel::Base, &mut sink)?;
     Ok(sink.0)
 }
 

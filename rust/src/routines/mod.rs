@@ -1,6 +1,11 @@
-//! PIM FFT routine generators: translate a radix-2 butterfly schedule into
-//! broadcast PIM command streams for the strided mapping (§4.3 Fig 7), at
-//! the four optimization levels the paper evaluates:
+//! PIM FFT routine frontends: translate a radix-2 butterfly schedule into
+//! the [`crate::pimc`] stream IR, which the [`crate::pimc::PassPipeline`]
+//! lowers to broadcast PIM command streams.
+//!
+//! The strided-mapping frontend ([`emit_strided_ir`] / the [`emit_strided`]
+//! convenience) is what Pimacolaba ships; at the paper's four optimization
+//! presets ([`OptLevel`], now sugar for [`crate::pimc::PassConfig`] pass
+//! sets) the lowered streams are the paper's routines:
 //!
 //! * [`OptLevel::Base`]   — `pim-base`: 6 pim-MADD per butterfly (Fig 14
 //!   right), plus the register moves and row activations §4.4.1 accounts.
@@ -14,20 +19,25 @@
 //! Command-slot discipline (see DESIGN.md §5): per command, each bank
 //! performs at most one column *read* and (with the hw-opt dual write port
 //! feeding the open row) at most two column *writes*; the even/odd micro-ops
-//! of one broadcast command retire in one slot when `bank_pair_fused`.
+//! of one broadcast command retire in one slot under the `BankPairFuse`
+//! pass.
 //!
-//! A separate generator emits the Fig 9 *baseline-mapping* stream (cross-lane
-//! pim-SHIFTs + vector twiddle loads); it exists only for that comparison.
+//! A separate frontend emits the Fig 9 *baseline-mapping* stream (cross-lane
+//! pim-SHIFTs + vector twiddle loads) as raw IR ops; it exists only for that
+//! comparison.
 
 mod baseline_map;
 mod stats;
 mod strided_routine;
 
-pub use baseline_map::{baseline_stream, emit_baseline};
+pub use baseline_map::{baseline_stream, emit_baseline, emit_baseline_ir};
 pub use stats::RoutineStats;
-pub use strided_routine::{emit_strided, strided_stream};
+pub use strided_routine::{emit_strided, emit_strided_ir, strided_stream};
 
-/// The four optimization levels of the paper's evaluation (Figs 10/16/17).
+use crate::pimc::PassConfig;
+
+/// The four optimization levels of the paper's evaluation (Figs 10/16/17) —
+/// named presets over the [`crate::pimc::PassConfig`] pass space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OptLevel {
     /// pim-base (§4.3).
@@ -45,6 +55,11 @@ impl OptLevel {
 
     pub fn needs_hw(self) -> bool {
         matches!(self, OptLevel::Hw | OptLevel::SwHw)
+    }
+
+    /// The pass set this preset names (same as `PassConfig::from(self)`).
+    pub fn passes(self) -> PassConfig {
+        PassConfig::preset(self)
     }
 
     pub fn name(self) -> &'static str {

@@ -5,11 +5,24 @@ use crate::fft::StagePlan;
 use crate::pim::ExecReport;
 
 /// Normalized view of an [`ExecReport`] for one FFT routine.
+///
+/// All accessors are total: zero-butterfly or zero-time reports (empty or
+/// synthetic streams) yield 0 shares/ratios, never NaN, and `rest` is
+/// clamped non-negative so the three shares always form a partition.
 #[derive(Debug, Clone)]
 pub struct RoutineStats {
     pub n: usize,
     pub butterflies: usize,
     pub report: ExecReport,
+}
+
+/// `num / den`, 0 when the denominator is 0 (guards empty reports).
+fn ratio(num: f64, den: f64) -> f64 {
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
 }
 
 impl RoutineStats {
@@ -21,31 +34,35 @@ impl RoutineStats {
     /// "pim-MADD commands per butterfly" metric (6 base / 4.85–5.54 sw /
     /// 4 hw / 2.67–3.46 sw-hw).
     pub fn compute_ops_per_butterfly(&self) -> f64 {
-        self.report.compute_ops() as f64 / self.butterflies as f64
+        ratio(self.report.compute_ops() as f64, self.butterflies as f64)
     }
 
     pub fn mov_ops_per_butterfly(&self) -> f64 {
-        self.report.mov_ops as f64 / self.butterflies as f64
+        ratio(self.report.mov_ops as f64, self.butterflies as f64)
     }
 
     /// Command-bus slots per butterfly (what actually costs time).
     pub fn slots_per_butterfly(&self) -> f64 {
-        self.report.slots as f64 / self.butterflies as f64
+        ratio(self.report.slots as f64, self.butterflies as f64)
     }
 
     /// Time share of the pim-MADD bucket (Fig 13: ≈54% on colab tiles).
     pub fn madd_time_share(&self) -> f64 {
-        self.report.time.madd_ns / self.report.time.total_ns()
+        ratio(self.report.time.madd_ns, self.report.time.total_ns())
     }
 
     /// Time share of pim-MOV (Fig 13's second bucket).
     pub fn mov_time_share(&self) -> f64 {
-        self.report.time.mov_ns / self.report.time.total_ns()
+        ratio(self.report.time.mov_ns, self.report.time.total_ns())
     }
 
     /// Everything else (row activations + non-MADD compute) — "Rest".
+    /// Clamped at 0 against float cancellation in the share subtraction.
     pub fn rest_time_share(&self) -> f64 {
-        1.0 - self.madd_time_share() - self.mov_time_share()
+        if self.report.time.total_ns() == 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.madd_time_share() - self.mov_time_share()).max(0.0)
     }
 }
 
@@ -75,5 +92,47 @@ mod tests {
         assert!(st.mov_time_share() > 0.02);
         let total = st.madd_time_share() + st.mov_time_share() + st.rest_time_share();
         assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_reports_yield_finite_zero_stats() {
+        // Regression: an empty report (no commands timed) used to return
+        // NaN shares and NaN per-butterfly ratios; a stats view with zero
+        // butterflies used to divide by zero.
+        let empty = RoutineStats::new(2, ExecReport::default());
+        assert_eq!(empty.madd_time_share(), 0.0);
+        assert_eq!(empty.mov_time_share(), 0.0);
+        assert_eq!(empty.rest_time_share(), 0.0);
+        assert_eq!(empty.compute_ops_per_butterfly(), 0.0);
+        assert_eq!(empty.mov_ops_per_butterfly(), 0.0);
+        assert_eq!(empty.slots_per_butterfly(), 0.0);
+
+        let no_bflies =
+            RoutineStats { n: 0, butterflies: 0, report: ExecReport::default() };
+        for v in [
+            no_bflies.compute_ops_per_butterfly(),
+            no_bflies.mov_ops_per_butterfly(),
+            no_bflies.slots_per_butterfly(),
+            no_bflies.madd_time_share(),
+            no_bflies.mov_time_share(),
+            no_bflies.rest_time_share(),
+        ] {
+            assert!(v.is_finite());
+            assert_eq!(v, 0.0);
+        }
+    }
+
+    #[test]
+    fn rest_share_never_negative() {
+        // A synthetic report whose buckets exceed the (rounded) total must
+        // clamp rather than report a negative "Rest".
+        let time = crate::pim::TimeBreakdown {
+            madd_ns: 60.0,
+            mov_ns: 41.0,
+            rest_ns: -1.0, // adversarial: buckets sum past total
+            ..Default::default()
+        };
+        let st = RoutineStats::new(2, ExecReport { time, ..Default::default() });
+        assert!(st.rest_time_share() >= 0.0);
     }
 }

@@ -1,225 +1,46 @@
-//! Strided-mapping FFT command streams (the routines Pimacolaba ships).
+//! Strided-mapping FFT frontend (the routine Pimacolaba ships).
 //!
 //! One stream advances the 8 lane-resident FFTs of every PIM unit in the
-//! broadcast domain through all `log2 N` stages. Register conventions:
-//!
-//! | reg   | role                                             |
-//! |-------|--------------------------------------------------|
-//! | r0,r1 | m1, m2 (Fig 14) / AddSub temporaries             |
-//! | r2,r3 | reserved                                         |
-//! | r4,r5 | d, e (x2 components) loaded from the open row    |
-//! | r6..  | chunk staging for cross-row stages (x1/y1 re+im) |
+//! broadcast domain through all `log2 N` stages. The frontend walks the
+//! [`StagePlan`] and emits butterfly-level IR; command selection, strength
+//! reduction and slot packing are the [`PassPipeline`]'s job. Register
+//! conventions and the pass table live in the [`crate::pimc`] module docs.
 //!
 //! Stages with butterfly span `m = 2·half ≤ words_per_row` run entirely in
-//! one open row per bank ("same-row" regime, 4 command slots per butterfly at
-//! pim-base). Wider stages process butterflies in register-sized chunks:
-//! x1 words are staged into r6.. while row A is open, the butterfly core runs
-//! against row B, and y1 results return to row A in a final burst — the
-//! register file size (Table 1: 16) sets the chunk width, which is exactly
-//! why the Fig 19 RF×2 variant helps large tiles.
+//! one open row per bank ([`Regime::SameRow`], 4 command slots per butterfly
+//! at pim-base). Wider stages ([`Regime::CrossRow`]) process butterflies in
+//! register-sized chunks: x1 words are staged into r6.. while row A is open,
+//! the butterfly core runs against row B, and y1 results return to row A in
+//! a final burst — the register file size bounds the chunk width.
 //!
-//! Streams are emitted into a [`Sink`] so large tiles never materialize;
-//! [`strided_stream`] collects into a Vec for tests/functional runs.
+//! IR streams through an [`IrSink`] and commands through a [`Sink`], so
+//! large tiles never materialize; [`strided_stream`] collects into a Vec for
+//! tests/functional runs.
 
 use anyhow::{bail, ensure, Result};
 
 use crate::config::SystemConfig;
-use crate::dram::Half;
 use crate::fft::{twiddle, StagePlan, TwiddleClass};
-use crate::pim::{CmdKind, MicroOp, Operand, PimCommand, Sink, VecSink};
-
-use super::OptLevel;
+use crate::pim::{PimCommand, Sink, VecSink};
+use crate::pimc::{
+    BflyOp, ChunkDir, IrOp, IrSink, PassConfig, PassPipeline, PassProvenance, Regime, X1Loc,
+};
 
 /// Reserved temporaries before the chunk-staging region begins.
 const CHUNK_BASE: u8 = 6;
 
-/// Where the butterfly core finds x1 and leaves y1.
-#[derive(Clone, Copy)]
-enum X1 {
-    /// x1 lives in the open row (same-row regime): read w1, write y1 back
-    /// via read-modify-write, stage y2 to w2 directly.
-    Row { w1: u32, w2: u32 },
-    /// x1 was staged to registers (cross-row regime): y1 replaces it there,
-    /// y2 writes to w2 in the currently open row B.
-    Regs { a: u8, b: u8, w2: u32 },
-}
-
-struct Emitter<'s> {
-    opt: OptLevel,
-    sink: &'s mut dyn Sink,
-}
-
-impl<'s> Emitter<'s> {
-    fn push_pair(&mut self, kind: CmdKind, even: MicroOp, odd: MicroOp) -> Result<()> {
-        self.sink.accept(&PimCommand::pair(kind, even, odd))
-    }
-
-    fn push_single(&mut self, kind: CmdKind, op: MicroOp) -> Result<()> {
-        self.sink.accept(&PimCommand::single(kind, op))
-    }
-
-    /// Load x2 = (d, e) from the open row into (r4, r5).
-    fn load_x2(&mut self, w2: u32) -> Result<()> {
-        self.push_pair(
-            CmdKind::Mov,
-            MicroOp::Mov { dst: Operand::Reg(4), src: Operand::Row(Half::Even, w2) },
-            MicroOp::Mov { dst: Operand::Reg(5), src: Operand::Row(Half::Odd, w2) },
-        )
-    }
-
-    fn x1_ops(&self, x1: X1) -> (Operand, Operand, Operand, Operand, Operand, Operand) {
-        // (a_src, b_src, y1re_dst, y1im_dst, y2re_dst, y2im_dst)
-        match x1 {
-            X1::Row { w1, w2 } => (
-                Operand::Row(Half::Even, w1),
-                Operand::Row(Half::Odd, w1),
-                Operand::Row(Half::Even, w1),
-                Operand::Row(Half::Odd, w1),
-                Operand::Row(Half::Even, w2),
-                Operand::Row(Half::Odd, w2),
-            ),
-            X1::Regs { a, b, w2 } => (
-                Operand::Reg(a),
-                Operand::Reg(b),
-                Operand::Reg(a),
-                Operand::Reg(b),
-                Operand::Row(Half::Even, w2),
-                Operand::Row(Half::Odd, w2),
-            ),
-        }
-    }
-
-    /// One butterfly at words (w1-side given by `x1`, x2 at `w2`).
-    /// `m`, `j` select the twiddle. Emits the §4.3/§6.x compute commands.
-    ///
-    /// Trivial (sw-opt) butterflies first stage x2 into (r4, r5) — their
-    /// adds combine two words of the *same* bank, which one column access
-    /// cannot feed. All other classes read d and e straight from the open
-    /// rows: the even/odd words share a column address, so the broadcast
-    /// command's single column read per bank feeds both ALU sides (the
-    /// bank-pair shared-ALU wiring of Fig 6).
-    fn butterfly_core(&mut self, tw: (TwiddleClass, f32, f32), x1: X1, w2: u32) -> Result<()> {
-        let (class, c, s) = tw;
-        let (a_src, b_src, y1re, y1im, y2re, y2im) = self.x1_ops(x1);
-        let sw = matches!(self.opt, OptLevel::Sw | OptLevel::SwHw);
-        let hw = self.opt.needs_hw();
-
-        // Direct row-buffer operands for x2 = d + j·e.
-        let (d, e) = (Operand::Row(Half::Even, w2), Operand::Row(Half::Odd, w2));
-
-        if sw && class.is_trivial() {
-            // Stage x2 into registers: the trivial adds pair a (even, w1)
-            // with d (even, w2) — two words of one bank.
-            self.load_x2(w2)?;
-            let (d, e) = (Operand::Reg(4), Operand::Reg(5));
-            // ω ∈ {1, −1, −j, +j}: ω·x2 ∈ {±(d,e), ±(e,−d)} — adds only.
-            // (re_t ± , im_t ±): the value added to (a, b) for y1.
-            let (re_t, re_neg, im_t, im_neg) = match class {
-                TwiddleClass::One => (d, false, e, false),
-                TwiddleClass::NegOne => (d, true, e, true),
-                TwiddleClass::NegJ => (e, false, d, true), // ω·x2 = e − j·d
-                TwiddleClass::PlusJ => (e, true, d, false),
-                _ => unreachable!(),
-            };
-            if hw {
-                // §6.3: one dual-write ADD±SUB pair — 2 compute ops.
-                return self.push_pair(
-                    CmdKind::Add,
-                    MicroOp::MaddSub {
-                        dst_add: y1re,
-                        dst_sub: y2re,
-                        a: a_src,
-                        b: re_t,
-                        imm: if re_neg { -1.0 } else { 1.0 },
-                    },
-                    MicroOp::MaddSub {
-                        dst_add: y1im,
-                        dst_sub: y2im,
-                        a: b_src,
-                        b: im_t,
-                        imm: if im_neg { -1.0 } else { 1.0 },
-                    },
-                );
-            }
-            // §6.1: 4 pim-ADD (y2 first so the RMW of y1 can reuse a/b).
-            self.push_pair(
-                CmdKind::Add,
-                MicroOp::Madd { dst: y2re, a: a_src, b: re_t, imm: if re_neg { 1.0 } else { -1.0 } },
-                MicroOp::Madd { dst: y2im, a: b_src, b: im_t, imm: if im_neg { 1.0 } else { -1.0 } },
-            )?;
-            return self.push_pair(
-                CmdKind::Add,
-                MicroOp::Madd { dst: y1re, a: a_src, b: re_t, imm: if re_neg { -1.0 } else { 1.0 } },
-                MicroOp::Madd { dst: y1im, a: b_src, b: im_t, imm: if im_neg { -1.0 } else { 1.0 } },
-            );
-        }
-
-        if sw && hw && class == TwiddleClass::Sqrt2 {
-            // §6.3 symmetric case: |c| = |s| = 1/√2 and δ = s/c = ±1:
-            // m1 = d − δe, m2 = e + δd. One dual-write AddSub yields
-            // (d+e, d−e); m1/m2 are ± those values.
-            let delta = s / c; // ±1 up to rounding
-            self.push_single(
-                CmdKind::Add,
-                MicroOp::AddSub { dst_add: Operand::Reg(0), dst_sub: Operand::Reg(1), a: d, b: e },
-            )?;
-            // r0 = d+e, r1 = d−e.
-            // δ = −1: m1 = d+e = r0,  m2 = e−d = −r1.
-            // δ = +1: m1 = d−e = r1,  m2 = e+d = r0.
-            let (m1_reg, m2_reg, m2_neg) = if delta < 0.0 {
-                (Operand::Reg(0), Operand::Reg(1), true)
-            } else {
-                (Operand::Reg(1), Operand::Reg(0), false)
-            };
-            return self.push_pair(
-                CmdKind::Madd,
-                MicroOp::MaddSub { dst_add: y1re, dst_sub: y2re, a: a_src, b: m1_reg, imm: c },
-                MicroOp::MaddSub {
-                    dst_add: y1im,
-                    dst_sub: y2im,
-                    a: b_src,
-                    b: m2_reg,
-                    imm: if m2_neg { -c } else { c },
-                },
-            );
-        }
-
-        // General ω (and the non-combined fallbacks): Fig 14 right.
-        // m1 = d − δ·e, m2 = e + δ·d with δ = s/c (c ≠ 0 away from ±j).
-        ensure!(c.abs() > 1e-30, "general butterfly routine requires cos(ω) != 0");
-        let delta = s / c;
-        self.push_pair(
-            CmdKind::Madd,
-            MicroOp::Madd { dst: Operand::Reg(0), a: d, b: e, imm: -delta },
-            MicroOp::Madd { dst: Operand::Reg(1), a: e, b: d, imm: delta },
-        )?;
-        if hw {
-            // §6.2: dual-write MADD+SUB finishes each component in one op.
-            return self.push_pair(
-                CmdKind::Madd,
-                MicroOp::MaddSub { dst_add: y1re, dst_sub: y2re, a: a_src, b: Operand::Reg(0), imm: c },
-                MicroOp::MaddSub { dst_add: y1im, dst_sub: y2im, a: b_src, b: Operand::Reg(1), imm: c },
-            );
-        }
-        self.push_pair(
-            CmdKind::Madd,
-            MicroOp::Madd { dst: y2re, a: a_src, b: Operand::Reg(0), imm: -c },
-            MicroOp::Madd { dst: y2im, a: b_src, b: Operand::Reg(1), imm: -c },
-        )?;
-        self.push_pair(
-            CmdKind::Madd,
-            MicroOp::Madd { dst: y1re, a: a_src, b: Operand::Reg(0), imm: c },
-            MicroOp::Madd { dst: y1im, a: b_src, b: Operand::Reg(1), imm: c },
-        )
-    }
-}
-
-/// Emit the broadcast command stream computing size-`n` FFTs in every lane of
-/// every unit (strided mapping, bit-reversed input placement) into `sink`.
-pub fn emit_strided(n: usize, sys: &SystemConfig, opt: OptLevel, sink: &mut dyn Sink) -> Result<()> {
-    if opt.needs_hw() && !sys.pim.hw_maddsub {
-        bail!("{opt} requires the hw-opt PIM configuration (PimConfig::hw_maddsub)");
-    }
+/// Emit the strided-routine IR for size-`n` FFTs into `ir`.
+///
+/// `passes` only influences *scheduling* decisions the frontend owns (the
+/// `RowSwitchSchedule` serpentine block order); per-butterfly encoding is
+/// decided later by the pipeline, so the same IR can be lowered under any
+/// non-scheduling pass set.
+pub fn emit_strided_ir(
+    n: usize,
+    sys: &SystemConfig,
+    passes: PassConfig,
+    ir: &mut dyn IrSink,
+) -> Result<()> {
     let plan = StagePlan::new(n);
     let wpr = sys.hbm.words_per_row() as u32;
     let regs = sys.pim.regs_per_unit;
@@ -227,32 +48,49 @@ pub fn emit_strided(n: usize, sys: &SystemConfig, opt: OptLevel, sink: &mut dyn 
     // Two staging registers (re+im) per chunked butterfly.
     let chunk_cap = ((regs - CHUNK_BASE as usize) / 2) as u32;
 
-    let mut em = Emitter { opt, sink };
-
     for s in 0..plan.stages() {
         let half = 1u32 << s;
-        let m = (half * 2) as usize;
+        let m = half * 2;
         // Per-stage twiddle table: one trig evaluation per distinct j
         // instead of one per butterfly (blocks reuse the j range) — a
         // measurable win on 2^18-point sweeps (EXPERIMENTS.md §Perf).
         let tw: Vec<(TwiddleClass, f32, f32)> = (0..half as usize)
             .map(|j| {
-                let (c, si) = twiddle(m, j);
-                (TwiddleClass::of(m, j), c, si)
+                let (c, si) = twiddle(m as usize, j);
+                (TwiddleClass::of(m as usize, j), c, si)
             })
             .collect();
-        if half * 2 <= wpr {
-            // Same-row regime: each butterfly touches one row per bank.
-            for b in plan.stage(s) {
-                let (w1, w2) = (b.i1 as u32, b.i2 as u32);
-                em.butterfly_core(tw[b.j], X1::Row { w1, w2 }, w2)?;
-            }
-        } else {
-            // Cross-row regime: chunked processing (see module docs). Row-A
-            // visits are interleaved — one trip both drains the previous
-            // chunk's y1 results and stages the next chunk's x1 words — so
-            // each chunk costs two row round-trips per bank, not three.
-            for block in (0..n as u32).step_by(m) {
+        let regime = if m <= wpr { Regime::SameRow } else { Regime::CrossRow };
+        // RowSwitchSchedule: serpentine — odd stages walk blocks high-to-low
+        // so each stage starts on the rows the previous one left open.
+        // Butterflies of one stage touch disjoint word pairs, so any block
+        // order is valid.
+        let reversed = passes.row_switch_schedule && s % 2 == 1;
+        ir.accept(&IrOp::Stage { stage: s, regime, reversed })?;
+        let nblocks = n as u32 / m;
+        for bi in 0..nblocks {
+            let block = if reversed { (nblocks - 1 - bi) * m } else { bi * m };
+            if regime == Regime::SameRow {
+                // Same-row regime: each butterfly touches one row per bank.
+                for j in 0..half {
+                    let (class, c, si) = tw[j as usize];
+                    ir.accept(&IrOp::Bfly(BflyOp {
+                        stage: s,
+                        class,
+                        cos: c,
+                        sin: si,
+                        regime,
+                        x1: X1Loc::Row { w1: block + j },
+                        w2: block + j + half,
+                    }))?;
+                }
+            } else {
+                // Cross-row regime: chunked processing (see module docs).
+                // Row-A visits are interleaved — one trip both drains the
+                // previous chunk's y1 results and stages the next chunk's x1
+                // words — so each chunk costs two row round-trips per bank,
+                // not three.
+                ir.accept(&IrOp::RowOpen { block })?;
                 // Chunk boundaries: bounded by the RF staging capacity and
                 // by row boundaries of the w1 range (the w2 range is offset
                 // by `half`, a multiple of the row size, so it splits at the
@@ -265,41 +103,43 @@ pub fn emit_strided(n: usize, sys: &SystemConfig, opt: OptLevel, sink: &mut dyn 
                     chunks.push((j0, chunk));
                     j0 += chunk;
                 }
-                let regs_of = |k: u32| (CHUNK_BASE + 2 * k as u8, CHUNK_BASE + 2 * k as u8 + 1);
-                let load_x1 = |em: &mut Emitter<'_>, j0: u32, chunk: u32| -> Result<()> {
-                    for k in 0..chunk {
-                        let w1 = block + j0 + k;
-                        let (ra, rb) = regs_of(k);
-                        em.push_pair(
-                            CmdKind::Mov,
-                            MicroOp::Mov { dst: Operand::Reg(ra), src: Operand::Row(Half::Even, w1) },
-                            MicroOp::Mov { dst: Operand::Reg(rb), src: Operand::Row(Half::Odd, w1) },
-                        )?;
-                    }
-                    Ok(())
-                };
-                load_x1(&mut em, chunks[0].0, chunks[0].1)?;
+                ir.accept(&IrOp::ChunkStage {
+                    base: block + chunks[0].0,
+                    count: chunks[0].1,
+                    reg0: CHUNK_BASE,
+                    dir: ChunkDir::Load,
+                })?;
                 for (i, &(j0, chunk)) in chunks.iter().enumerate() {
                     // Phase B: butterflies against row B (y1 lands in the
                     // staging registers, y2 goes straight to the open row).
                     for k in 0..chunk {
                         let j = j0 + k;
-                        let w2 = block + j + half;
-                        let (ra, rb) = regs_of(k);
-                        em.butterfly_core(tw[j as usize], X1::Regs { a: ra, b: rb, w2 }, w2)?;
+                        let (class, c, si) = tw[j as usize];
+                        let ra = CHUNK_BASE + 2 * k as u8;
+                        ir.accept(&IrOp::Bfly(BflyOp {
+                            stage: s,
+                            class,
+                            cos: c,
+                            sin: si,
+                            regime,
+                            x1: X1Loc::Regs { a: ra, b: ra + 1 },
+                            w2: block + j + half,
+                        }))?;
                     }
                     // Row-A visit: drain y1, prefetch the next chunk's x1.
-                    for k in 0..chunk {
-                        let w1 = block + j0 + k;
-                        let (ra, rb) = regs_of(k);
-                        em.push_pair(
-                            CmdKind::Mov,
-                            MicroOp::Mov { dst: Operand::Row(Half::Even, w1), src: Operand::Reg(ra) },
-                            MicroOp::Mov { dst: Operand::Row(Half::Odd, w1), src: Operand::Reg(rb) },
-                        )?;
-                    }
+                    ir.accept(&IrOp::ChunkStage {
+                        base: block + j0,
+                        count: chunk,
+                        reg0: CHUNK_BASE,
+                        dir: ChunkDir::Drain,
+                    })?;
                     if let Some(&(nj0, nchunk)) = chunks.get(i + 1) {
-                        load_x1(&mut em, nj0, nchunk)?;
+                        ir.accept(&IrOp::ChunkStage {
+                            base: block + nj0,
+                            count: nchunk,
+                            reg0: CHUNK_BASE,
+                            dir: ChunkDir::Load,
+                        })?;
                     }
                 }
             }
@@ -308,10 +148,34 @@ pub fn emit_strided(n: usize, sys: &SystemConfig, opt: OptLevel, sink: &mut dyn 
     Ok(())
 }
 
+/// Emit the broadcast command stream computing size-`n` FFTs in every lane
+/// of every unit (strided mapping, bit-reversed input placement) into
+/// `sink`: the [`emit_strided_ir`] frontend lowered through a
+/// [`PassPipeline`] under `passes`. Returns the per-pass provenance
+/// counters.
+pub fn emit_strided(
+    n: usize,
+    sys: &SystemConfig,
+    passes: impl Into<PassConfig>,
+    sink: &mut dyn Sink,
+) -> Result<PassProvenance> {
+    let passes = passes.into();
+    if passes.needs_hw() && !sys.pim.hw_maddsub {
+        bail!("{passes} requires the hw-opt PIM configuration (PimConfig::hw_maddsub)");
+    }
+    let mut pipe = PassPipeline::new(passes, sink);
+    emit_strided_ir(n, sys, passes, &mut pipe)?;
+    Ok(pipe.provenance())
+}
+
 /// Materialize the stream (tests / functional runs on small tiles).
-pub fn strided_stream(n: usize, sys: &SystemConfig, opt: OptLevel) -> Result<Vec<PimCommand>> {
+pub fn strided_stream(
+    n: usize,
+    sys: &SystemConfig,
+    passes: impl Into<PassConfig>,
+) -> Result<Vec<PimCommand>> {
     let mut sink = VecSink::default();
-    emit_strided(n, sys, opt, &mut sink)?;
+    emit_strided(n, sys, passes, &mut sink)?;
     Ok(sink.0)
 }
 
@@ -321,10 +185,12 @@ mod tests {
     use crate::fft::{fft_soa, SoaVec};
     use crate::mapping::StridedMapping;
     use crate::pim::{Executor, TimingSink, UnitState};
+    use crate::pimc::{Pass, VecIrSink};
+    use crate::routines::OptLevel;
 
-    fn run_functional(n: usize, sys: &SystemConfig, opt: OptLevel) {
+    fn run_functional_passes(n: usize, sys: &SystemConfig, passes: PassConfig) {
         let mapping = StridedMapping::new(n, sys).unwrap();
-        let stream = strided_stream(n, sys, opt).unwrap();
+        let stream = strided_stream(n, sys, passes).unwrap();
         let exec = Executor::new(sys);
         let ffts: Vec<SoaVec> = (0..8).map(|l| SoaVec::random(n, 31 * n as u64 + l)).collect();
         let mut unit = UnitState::new(sys.pim.regs_per_unit, n);
@@ -334,8 +200,12 @@ mod tests {
             let got = mapping.read_out(&unit, lane);
             let want = fft_soa(f);
             let d = got.max_abs_diff(&want);
-            assert!(d < 2e-3 * (n as f32).sqrt(), "{opt} n={n} lane={lane}: max diff {d}");
+            assert!(d < 2e-3 * (n as f32).sqrt(), "{passes} n={n} lane={lane}: max diff {d}");
         }
+    }
+
+    fn run_functional(n: usize, sys: &SystemConfig, opt: OptLevel) {
+        run_functional_passes(n, sys, opt.passes());
     }
 
     #[test]
@@ -371,6 +241,94 @@ mod tests {
         run_functional(256, &sys, OptLevel::Sw);
         let hw = SystemConfig::baseline().with_hw_opt();
         run_functional(256, &hw, OptLevel::SwHw);
+    }
+
+    #[test]
+    fn extra_passes_preserve_numerics() {
+        // The new (non-preset) passes must not change results, only cost.
+        let hw = SystemConfig::baseline().with_hw_opt();
+        for n in [64usize, 256, 512] {
+            run_functional_passes(n, &hw, OptLevel::SwHw.passes().with(Pass::RedundantMovElim));
+            run_functional_passes(n, &hw, OptLevel::SwHw.passes().with(Pass::RowSwitchSchedule));
+            run_functional_passes(
+                n,
+                &hw,
+                OptLevel::SwHw
+                    .passes()
+                    .with(Pass::RedundantMovElim)
+                    .with(Pass::RowSwitchSchedule)
+                    .without(Pass::BankPairFuse),
+            );
+        }
+    }
+
+    #[test]
+    fn row_switch_schedule_saves_activations() {
+        let sys = SystemConfig::baseline();
+        let exec = Executor::new(&sys);
+        for n in [128usize, 512] {
+            let plain = exec.time_stream(&strided_stream(n, &sys, OptLevel::Base).unwrap()).unwrap();
+            let serp = exec
+                .time_stream(
+                    &strided_stream(n, &sys, OptLevel::Base.passes().with(Pass::RowSwitchSchedule))
+                        .unwrap(),
+                )
+                .unwrap();
+            assert!(
+                serp.row_switches < plain.row_switches,
+                "n={n}: serpentine {} vs plain {}",
+                serp.row_switches,
+                plain.row_switches
+            );
+            assert_eq!(serp.slots, plain.slots, "scheduling must not change slot counts");
+            assert_eq!(serp.commands, plain.commands);
+        }
+    }
+
+    #[test]
+    fn redundant_mov_elim_drops_staging_movs() {
+        let hw = SystemConfig::baseline().with_hw_opt();
+        let exec = Executor::new(&hw);
+        // n > wpr so cross-row stages (where the pass fires) exist.
+        let n = 256;
+        let plain = exec.time_stream(&strided_stream(n, &hw, OptLevel::SwHw).unwrap()).unwrap();
+        let elim = exec
+            .time_stream(
+                &strided_stream(n, &hw, OptLevel::SwHw.passes().with(Pass::RedundantMovElim))
+                    .unwrap(),
+            )
+            .unwrap();
+        assert!(elim.mov_ops < plain.mov_ops, "{} vs {}", elim.mov_ops, plain.mov_ops);
+        assert!(elim.slots < plain.slots);
+        assert_eq!(elim.compute_ops(), plain.compute_ops());
+        assert_eq!(elim.row_switches, plain.row_switches);
+    }
+
+    #[test]
+    fn ir_shape_matches_stage_plan() {
+        let sys = SystemConfig::baseline();
+        let n = 256;
+        let mut ir = VecIrSink::default();
+        emit_strided_ir(n, &sys, PassConfig::NONE, &mut ir).unwrap();
+        let bflys = ir.0.iter().filter(|op| matches!(op, IrOp::Bfly(_))).count();
+        assert_eq!(bflys, StagePlan::new(n).butterfly_count());
+        let stages = ir.0.iter().filter(|op| matches!(op, IrOp::Stage { .. })).count();
+        assert_eq!(stages, 8);
+        // Cross-row stages (m > 32) announce their blocks and stage chunks.
+        assert!(ir.0.iter().any(|op| matches!(op, IrOp::RowOpen { .. })));
+        assert!(ir
+            .0
+            .iter()
+            .any(|op| matches!(op, IrOp::ChunkStage { dir: ChunkDir::Drain, .. })));
+        // Same-row stages place x1 in the row, cross-row in registers.
+        for op in &ir.0 {
+            if let IrOp::Bfly(bf) = op {
+                match bf.regime {
+                    Regime::SameRow => assert!(matches!(bf.x1, X1Loc::Row { .. })),
+                    Regime::CrossRow => assert!(matches!(bf.x1, X1Loc::Regs { .. })),
+                }
+            }
+        }
     }
 
     #[test]

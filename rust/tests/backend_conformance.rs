@@ -85,7 +85,7 @@ fn tile_execution_conforms_across_backends() {
     for m2 in [32usize, 256] {
         let inputs: Vec<SoaVec> =
             (0..9).map(|i| SoaVec::random(m2, 1000 + m2 as u64 + i)).collect();
-        let c = PlanComponent::PimTile { m2, count: inputs.len(), opt };
+        let c = PlanComponent::PimTile { m2, count: inputs.len(), passes: opt.into() };
         let host_out = host.execute(&c, &inputs).unwrap();
         let pim_out = pim.execute(&c, &inputs).unwrap();
         assert_eq!(host_out.len(), inputs.len());

@@ -1,0 +1,188 @@
+//! Pimc conformance suite: each `OptLevel` preset, lowered through the pass
+//! pipeline, must reproduce the legacy emitters' paper metrics *exactly* —
+//! per-kind command/op/slot counts predicted by an independent analytic
+//! mirror of the §4.3/§6.x per-class costs, the `TimeBreakdown` implied by
+//! the §4.4.1 slot model, and the paper's ops/butterfly figures (6 base /
+//! 4 hw / 4.85–5.54 sw / 2.67–3.46 sw-hw) — on the Fig 10/16 tile sweep.
+//! Functional equality with the reference FFT closes the loop.
+
+use pimacolaba::config::SystemConfig;
+use pimacolaba::fft::{fft_soa, SoaVec, StagePlan, TwiddleClass};
+use pimacolaba::mapping::StridedMapping;
+use pimacolaba::pim::{ExecReport, Executor, UnitState};
+use pimacolaba::routines::{strided_stream, OptLevel};
+
+/// Per-kind command and micro-op counts the preset must produce.
+#[derive(Debug, Default, PartialEq, Eq)]
+struct Expect {
+    madd_cmds: u64,
+    add_cmds: u64,
+    mov_cmds: u64,
+    madd_ops: u64,
+    add_ops: u64,
+    mov_ops: u64,
+}
+
+impl Expect {
+    fn commands(&self) -> u64 {
+        self.madd_cmds + self.add_cmds + self.mov_cmds
+    }
+}
+
+/// Analytic mirror of the per-class routine costs — independent of the
+/// pipeline: walks the butterfly schedule and adds the §4.3/§6.x command
+/// counts per (twiddle class, regime) directly.
+fn expected(n: usize, sys: &SystemConfig, opt: OptLevel) -> Expect {
+    let wpr = sys.hbm.words_per_row();
+    let (sw, hw) = match opt {
+        OptLevel::Base => (false, false),
+        OptLevel::Sw => (true, false),
+        OptLevel::Hw => (false, true),
+        OptLevel::SwHw => (true, true),
+    };
+    let mut e = Expect::default();
+    for b in StagePlan::new(n).iter() {
+        if b.m > wpr {
+            // Cross-row regime: x1 load + y1 drain, one MOV pair each
+            // (amortized over the chunk protocol, exactly 2 per butterfly).
+            e.mov_cmds += 2;
+            e.mov_ops += 4;
+        }
+        let class = b.class();
+        if sw && class.is_trivial() {
+            // §6.1: stage x2 (1 MOV pair), then adds.
+            e.mov_cmds += 1;
+            e.mov_ops += 2;
+            if hw {
+                // §6.3: one dual-write ADD±SUB pair.
+                e.add_cmds += 1;
+                e.add_ops += 2;
+            } else {
+                e.add_cmds += 2;
+                e.add_ops += 4;
+            }
+        } else if sw && hw && class == TwiddleClass::Sqrt2 {
+            // §6.3 symmetric: single AddSub + one MADD±SUB pair.
+            e.add_cmds += 1;
+            e.add_ops += 1;
+            e.madd_cmds += 1;
+            e.madd_ops += 2;
+        } else {
+            // Fig 14 right: m1/m2 pair, then the y pairs.
+            e.madd_cmds += 1;
+            e.madd_ops += 2;
+            if hw {
+                e.madd_cmds += 1;
+                e.madd_ops += 2;
+            } else {
+                e.madd_cmds += 2;
+                e.madd_ops += 4;
+            }
+        }
+    }
+    e
+}
+
+fn sys_for(opt: OptLevel) -> SystemConfig {
+    if opt.needs_hw() {
+        SystemConfig::baseline().with_hw_opt()
+    } else {
+        SystemConfig::baseline()
+    }
+}
+
+fn close(a: f64, b: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    assert!(((a - b) / denom).abs() < 1e-9, "{what}: {b} != expected {a}");
+}
+
+fn report(n: usize, sys: &SystemConfig, opt: OptLevel) -> ExecReport {
+    let stream = strided_stream(n, sys, opt).unwrap();
+    Executor::new(sys).time_stream(&stream).unwrap()
+}
+
+/// The Fig 10/16 tile sweep (2^5–2^10 plus a deep 2^12 point).
+const SWEEP: [u32; 7] = [5, 6, 7, 8, 9, 10, 12];
+
+#[test]
+fn preset_streams_match_analytic_command_counts_exactly() {
+    for opt in OptLevel::ALL {
+        let sys = sys_for(opt);
+        for ls in SWEEP {
+            let n = 1usize << ls;
+            let want = expected(n, &sys, opt);
+            let rep = report(n, &sys, opt);
+            assert_eq!(rep.commands, want.commands(), "{opt} 2^{ls} commands");
+            // bank_pair_fused: every broadcast command is one slot.
+            assert_eq!(rep.slots, want.commands(), "{opt} 2^{ls} slots");
+            assert_eq!(rep.madd_ops, want.madd_ops, "{opt} 2^{ls} madd ops");
+            assert_eq!(rep.add_ops, want.add_ops, "{opt} 2^{ls} add ops");
+            assert_eq!(rep.mov_ops, want.mov_ops, "{opt} 2^{ls} mov ops");
+            assert_eq!(rep.shift_ops, 0, "{opt} 2^{ls} shifts");
+        }
+    }
+}
+
+#[test]
+fn preset_time_breakdowns_match_slot_model_exactly() {
+    for opt in OptLevel::ALL {
+        let sys = sys_for(opt);
+        let slot = sys.pim_slot_ns();
+        let mov_slot = sys.hbm.t_ccdl_ns; // mov_full_rate in every baseline
+        let row = sys.hbm.row_switch_ns();
+        for ls in SWEEP {
+            let n = 1usize << ls;
+            let want = expected(n, &sys, opt);
+            let rep = report(n, &sys, opt);
+            close(want.madd_cmds as f64 * slot, rep.time.madd_ns, "madd_ns");
+            close(want.add_cmds as f64 * slot, rep.time.add_ns, "add_ns");
+            close(want.mov_cmds as f64 * mov_slot, rep.time.mov_ns, "mov_ns");
+            assert_eq!(rep.time.shift_ns, 0.0, "{opt} 2^{ls}");
+            // Row activations are the only "Rest" contributor.
+            close(rep.row_switches as f64 * row, rep.time.rest_ns, "rest_ns");
+        }
+    }
+}
+
+#[test]
+fn preset_ops_per_butterfly_match_paper_figures() {
+    let per_bfly = |opt: OptLevel, ls: u32| {
+        let sys = sys_for(opt);
+        let n = 1usize << ls;
+        let rep = report(n, &sys, opt);
+        rep.compute_ops() as f64 / StagePlan::new(n).butterfly_count() as f64
+    };
+    for ls in SWEEP {
+        // §4.3 / §6.2: constants independent of tile size.
+        assert!((per_bfly(OptLevel::Base, ls) - 6.0).abs() < 1e-12, "base 2^{ls}");
+        assert!((per_bfly(OptLevel::Hw, ls) - 4.0).abs() < 1e-12, "hw 2^{ls}");
+        // §6.4.1 bands: 4.85–5.54 (sw), 2.67–3.46 (sw-hw) across the sweep.
+        let sw = per_bfly(OptLevel::Sw, ls);
+        assert!((4.84..=5.55).contains(&sw), "sw 2^{ls}: {sw}");
+        let shw = per_bfly(OptLevel::SwHw, ls);
+        assert!((2.66..=3.47).contains(&shw), "sw-hw 2^{ls}: {shw}");
+    }
+    // The exact endpoints the paper quotes at 2^5.
+    assert!((per_bfly(OptLevel::Sw, 5) - 4.85).abs() < 0.01);
+    assert!((per_bfly(OptLevel::SwHw, 5) - 2.675).abs() < 0.01);
+}
+
+#[test]
+fn preset_streams_compute_the_reference_fft() {
+    for opt in OptLevel::ALL {
+        let sys = sys_for(opt);
+        for n in [64usize, 256] {
+            let mapping = StridedMapping::new(n, &sys).unwrap();
+            let stream = strided_stream(n, &sys, opt).unwrap();
+            let ffts: Vec<SoaVec> =
+                (0..8).map(|l| SoaVec::random(n, 7 * n as u64 + l)).collect();
+            let mut unit = UnitState::new(sys.pim.regs_per_unit, n);
+            mapping.load(&ffts, &mut unit).unwrap();
+            Executor::new(&sys).run_stream(&stream, &mut unit).unwrap();
+            for (lane, f) in ffts.iter().enumerate() {
+                let d = mapping.read_out(&unit, lane).max_abs_diff(&fft_soa(f));
+                assert!(d < 3e-3 * (n as f32).sqrt(), "{opt} n={n} lane={lane}: {d}");
+            }
+        }
+    }
+}

@@ -8,6 +8,7 @@ use pimacolaba::fft::{bit_reverse_permutation, dft_naive, fft_soa, FourStep, Soa
 use pimacolaba::gpu_model::{gpu_bytes_moved, kernel_count, lds_decompose};
 use pimacolaba::mapping::StridedMapping;
 use pimacolaba::pim::{Executor, UnitState};
+use pimacolaba::pimc::{Pass, PassConfig};
 use pimacolaba::planner::{PlanKind, Planner};
 use pimacolaba::routines::{strided_stream, OptLevel};
 use pimacolaba::util::prop::{forall, forall_cases};
@@ -121,6 +122,49 @@ fn prop_routines_correct_across_configs_and_opts() {
         for (l, f) in ffts.iter().enumerate() {
             let d = mapping.read_out(&unit, l).max_abs_diff(&fft_soa(f));
             assert!(d < 3e-3 * (n as f32).sqrt(), "{opt} n={n} cfg={} lane={l}: {d}", sys.name);
+        }
+    });
+}
+
+#[test]
+fn prop_pass_pipeline_correct_for_every_pass_set() {
+    // Every preset, extended by random extra passes (and randomly stripped
+    // of BankPairFuse), must still lower to a stream whose functional
+    // execution equals the reference FFT on every lane.
+    forall_cases("pass pipeline == reference FFT", 32, |rng| {
+        let n = rng.pow2(1, 8);
+        let preset = *rng.choose(&OptLevel::ALL);
+        let mut passes: PassConfig = preset.into();
+        if rng.range(0, 2) == 1 {
+            passes = passes.with(Pass::RedundantMovElim);
+        }
+        if rng.range(0, 2) == 1 {
+            passes = passes.with(Pass::RowSwitchSchedule);
+        }
+        if rng.range(0, 4) == 0 {
+            passes = passes.without(Pass::BankPairFuse);
+        }
+        let mut sys = match rng.range(0, 3) {
+            0 => SystemConfig::baseline(),
+            1 => SystemConfig::rf32(),
+            _ => SystemConfig::rb2k(),
+        };
+        if passes.needs_hw() {
+            sys = sys.with_hw_opt();
+        }
+        let mapping = StridedMapping::new(n, &sys).unwrap();
+        let stream = strided_stream(n, &sys, passes).unwrap();
+        let ffts: Vec<SoaVec> = (0..8).map(|_| rand_soa(rng, n)).collect();
+        let mut unit = UnitState::new(sys.pim.regs_per_unit, n);
+        mapping.load(&ffts, &mut unit).unwrap();
+        Executor::new(&sys).run_stream(&stream, &mut unit).unwrap();
+        for (l, f) in ffts.iter().enumerate() {
+            let d = mapping.read_out(&unit, l).max_abs_diff(&fft_soa(f));
+            assert!(
+                d < 3e-3 * (n as f32).sqrt(),
+                "{passes} n={n} cfg={} lane={l}: {d}",
+                sys.name
+            );
         }
     });
 }
