@@ -19,10 +19,13 @@ use std::collections::HashMap;
 use anyhow::{ensure, Result};
 
 use crate::config::SystemConfig;
-use crate::fft::{is_pow2, log2, SoaVec};
+use crate::fft::{is_pow2, log2, pack_real, unpack_real_spectrum, SoaVec};
+use crate::gpu_model::babelstream_bw_bytes_per_ns;
+use crate::metrics::DataMovement;
 use crate::pimc::PassConfig;
 use crate::planner::{CollabPlan, PlanEval, PlanKind, Planner};
 use crate::routines::OptLevel;
+use crate::workload::{factors2d, factors3d, stft_shape, WorkloadKind};
 
 use super::{ComputeBackend, GpuCostModel, HostFftBackend, PimSimBackend, PlanComponent};
 
@@ -33,6 +36,76 @@ pub struct EngineRun {
     pub plan: CollabPlan,
     pub eval: PlanEval,
     /// One spectrum per input signal, natural frequency order.
+    pub outputs: Vec<SoaVec>,
+}
+
+/// Modeled evaluation of one batched-1D-FFT pass of a decomposed workload:
+/// the pass's collaborative plan plus the host/GPU shuffle traffic
+/// (transposes, pack/unpack, pointwise products) around it.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadPassEval {
+    pub label: &'static str,
+    /// 1D FFT size of this pass.
+    pub fft_n: usize,
+    /// Total FFTs of this pass across the batch.
+    pub ffts: usize,
+    /// The §5.1 plan chosen for this pass (records the substrate split).
+    pub plan: CollabPlan,
+    /// The pass's model evaluation vs its GPU-only baseline.
+    pub eval: PlanEval,
+    /// Shuffle traffic around this pass across the batch, bytes.
+    pub shuffle_bytes: f64,
+    /// Modeled time of the shuffle traffic at BabelStream bandwidth, ns.
+    pub shuffle_ns: f64,
+}
+
+/// Modeled evaluation of one `(kind, n, batch)` workload: the per-pass
+/// substrate splits plus the aggregate time/data-movement vs a GPU-only
+/// execution of the same decomposition.
+#[derive(Debug, Clone)]
+pub struct WorkloadEval {
+    pub kind: WorkloadKind,
+    pub n: usize,
+    pub batch: usize,
+    pub passes: Vec<WorkloadPassEval>,
+    /// Modeled time with every pass on the GPU baseline, ns.
+    pub gpu_only_ns: f64,
+    /// Modeled time with every pass on its chosen plan, ns.
+    pub plan_ns: f64,
+    pub movement_base: DataMovement,
+    pub movement_plan: DataMovement,
+}
+
+impl WorkloadEval {
+    pub fn speedup(&self) -> f64 {
+        self.gpu_only_ns / self.plan_ns
+    }
+
+    pub fn movement_savings(&self) -> f64 {
+        self.movement_plan.savings_vs(&self.movement_base)
+    }
+
+    /// The pass with the largest 1D FFT size — the one whose plan dominates
+    /// the workload (per-request metrics report its plan). Ties on size go
+    /// to the pass running more FFTs (e.g. convolution's forward pass, which
+    /// does twice the inverse pass's work at the same size).
+    pub fn dominant(&self) -> &WorkloadPassEval {
+        self.passes
+            .iter()
+            .max_by_key(|p| (p.fft_n, p.ffts))
+            .expect("workload has at least one pass")
+    }
+}
+
+/// Outcome of one [`FftEngine::run_workload`]: per-signal outputs plus the
+/// workload's model evaluation. Output shapes per kind: `batch1d`/`fft2d`/
+/// `fft3d` return one length-`n` spectrum per signal; `real` returns the
+/// `n/2 + 1` non-redundant bins; `convolution` returns one length-`n`
+/// circular convolution per signal *pair*; `stft` returns one
+/// `frames × window` spectrogram per signal (row-major frames).
+#[derive(Debug)]
+pub struct WorkloadRun {
+    pub eval: WorkloadEval,
     pub outputs: Vec<SoaVec>,
 }
 
@@ -280,6 +353,285 @@ impl FftEngine {
         ensure!(outputs.len() == signals.len(), "backend returned a wrong output count");
         Ok(EngineRun { plan, eval, outputs })
     }
+
+    /// Plan and model-evaluate a `(kind, n, batch)` workload by decomposing
+    /// it into batched 1D FFT passes (`workload::WorkloadKind::passes`) and
+    /// running each through the memoized [`FftEngine::plan`]. Shuffle
+    /// traffic between passes (transposes, pack/unpack, pointwise products)
+    /// is priced at BabelStream bandwidth and charged to both the plan and
+    /// its GPU-only baseline — a GPU-only execution shuffles just the same.
+    ///
+    /// For [`WorkloadKind::Batch1d`] this reduces exactly to
+    /// [`FftEngine::plan`], so the single-kind serving numbers (and the
+    /// cluster simulator's reports) are bit-identical to the pre-workload
+    /// engine.
+    pub fn plan_workload(
+        &mut self,
+        kind: WorkloadKind,
+        n: usize,
+        batch: usize,
+    ) -> Result<WorkloadEval> {
+        kind.validate_shape(n, batch)?;
+        let units = batch / kind.signal_multiple();
+        let bw = babelstream_bw_bytes_per_ns(&self.sys);
+        let mut passes = Vec::new();
+        let mut gpu_only_ns = 0.0;
+        let mut plan_ns = 0.0;
+        let mut movement_base = DataMovement::default();
+        let mut movement_plan = DataMovement::default();
+        for p in kind.passes(n)? {
+            let ffts = p.ffts_per_unit * units;
+            let (plan, eval) = self.plan(p.fft_n, ffts)?;
+            let shuffle_bytes = p.shuffle_bytes_per_unit * units as f64;
+            let shuffle_ns = shuffle_bytes / bw;
+            gpu_only_ns += eval.gpu_only_ns + shuffle_ns;
+            plan_ns += eval.plan_ns + shuffle_ns;
+            movement_base.add_assign(&eval.movement_base);
+            movement_base.add_assign(&DataMovement::gpu_only(shuffle_bytes));
+            movement_plan.add_assign(&eval.movement_plan);
+            movement_plan.add_assign(&DataMovement::gpu_only(shuffle_bytes));
+            passes.push(WorkloadPassEval {
+                label: p.label,
+                fft_n: p.fft_n,
+                ffts,
+                plan,
+                eval,
+                shuffle_bytes,
+                shuffle_ns,
+            });
+        }
+        Ok(WorkloadEval {
+            kind,
+            n,
+            batch,
+            passes,
+            gpu_only_ns,
+            plan_ns,
+            movement_base,
+            movement_plan,
+        })
+    }
+
+    /// Execute a `(kind, n)` workload over `signals`, routing every 1D FFT
+    /// pass through [`FftEngine::run`] (and thus through whichever substrate
+    /// split the planner chose for that pass shape). Input convention: every
+    /// signal has `n` complex points; `real` reads the `re` half;
+    /// `convolution` consumes consecutive `(x, h)` pairs. See
+    /// [`WorkloadRun`] for the per-kind output shapes.
+    pub fn run_workload(
+        &mut self,
+        kind: WorkloadKind,
+        n: usize,
+        signals: &[SoaVec],
+    ) -> Result<WorkloadRun> {
+        ensure!(!signals.is_empty(), "empty signal batch");
+        kind.validate_shape(n, signals.len())?;
+        ensure!(
+            signals.iter().all(|s| s.len() == n),
+            "{kind} workload signals must all have length {n}"
+        );
+        let eval = self.plan_workload(kind, n, signals.len())?;
+        let outputs = match kind {
+            WorkloadKind::Batch1d => self.run(n, signals)?.outputs,
+            WorkloadKind::Fft2d => self.run_fft2d(n, signals)?,
+            WorkloadKind::Fft3d => self.run_fft3d(n, signals)?,
+            WorkloadKind::Real => self.run_real(n, signals)?,
+            WorkloadKind::Convolution => self.run_convolution(n, signals)?,
+            WorkloadKind::Stft => self.run_stft(n, signals)?,
+        };
+        Ok(WorkloadRun { eval, outputs })
+    }
+
+    /// Row FFTs, transpose, column FFTs, transpose back (row-major output).
+    fn run_fft2d(&mut self, n: usize, signals: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        let (r, c) = factors2d(n);
+        let batch = signals.len();
+        let mut rows_in = Vec::with_capacity(batch * r);
+        for s in signals {
+            for row in 0..r {
+                rows_in.push(SoaVec::new(
+                    s.re[row * c..(row + 1) * c].to_vec(),
+                    s.im[row * c..(row + 1) * c].to_vec(),
+                ));
+            }
+        }
+        let rows_out = self.run(c, &rows_in)?.outputs;
+        let mut cols_in = Vec::with_capacity(batch * c);
+        for img in 0..batch {
+            for col in 0..c {
+                let mut v = SoaVec::zeros(r);
+                for row in 0..r {
+                    let (re, im) = rows_out[img * r + row].get(col);
+                    v.set(row, re, im);
+                }
+                cols_in.push(v);
+            }
+        }
+        let cols_out = self.run(r, &cols_in)?.outputs;
+        let mut out = Vec::with_capacity(batch);
+        for img in 0..batch {
+            let mut o = SoaVec::zeros(n);
+            for col in 0..c {
+                for row in 0..r {
+                    let (re, im) = cols_out[img * c + col].get(row);
+                    o.set(row * c + col, re, im);
+                }
+            }
+            out.push(o);
+        }
+        Ok(out)
+    }
+
+    /// One batched 1D pass per axis of the `d0 × d1 × d2` volume, with
+    /// gather/scatter between axes. Element `(i0, i1, i2)` lives at flat
+    /// index `(i0·d1 + i1)·d2 + i2`.
+    fn run_fft3d(&mut self, n: usize, signals: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        let (d0, d1, d2) = factors3d(n);
+        let batch = signals.len();
+        let mut data: Vec<SoaVec> = signals.to_vec();
+
+        // Axis 2: contiguous lines.
+        let mut lines = Vec::with_capacity(batch * d0 * d1);
+        for s in &data {
+            for l in 0..d0 * d1 {
+                lines.push(SoaVec::new(
+                    s.re[l * d2..(l + 1) * d2].to_vec(),
+                    s.im[l * d2..(l + 1) * d2].to_vec(),
+                ));
+            }
+        }
+        let done = self.run(d2, &lines)?.outputs;
+        for (b, s) in data.iter_mut().enumerate() {
+            for l in 0..d0 * d1 {
+                let line = &done[b * d0 * d1 + l];
+                s.re[l * d2..(l + 1) * d2].copy_from_slice(&line.re);
+                s.im[l * d2..(l + 1) * d2].copy_from_slice(&line.im);
+            }
+        }
+
+        // Axis 1: gather stride-d2 lines per (i0, i2).
+        let mut lines = Vec::with_capacity(batch * d0 * d2);
+        for s in &data {
+            for i0 in 0..d0 {
+                for i2 in 0..d2 {
+                    let mut v = SoaVec::zeros(d1);
+                    for i1 in 0..d1 {
+                        let (re, im) = s.get((i0 * d1 + i1) * d2 + i2);
+                        v.set(i1, re, im);
+                    }
+                    lines.push(v);
+                }
+            }
+        }
+        let done = self.run(d1, &lines)?.outputs;
+        for (b, s) in data.iter_mut().enumerate() {
+            for i0 in 0..d0 {
+                for i2 in 0..d2 {
+                    let line = &done[(b * d0 + i0) * d2 + i2];
+                    for i1 in 0..d1 {
+                        let (re, im) = line.get(i1);
+                        s.set((i0 * d1 + i1) * d2 + i2, re, im);
+                    }
+                }
+            }
+        }
+
+        // Axis 0: gather stride-(d1·d2) lines per (i1, i2).
+        let mut lines = Vec::with_capacity(batch * d1 * d2);
+        for s in &data {
+            for i1 in 0..d1 {
+                for i2 in 0..d2 {
+                    let mut v = SoaVec::zeros(d0);
+                    for i0 in 0..d0 {
+                        let (re, im) = s.get((i0 * d1 + i1) * d2 + i2);
+                        v.set(i0, re, im);
+                    }
+                    lines.push(v);
+                }
+            }
+        }
+        let done = self.run(d0, &lines)?.outputs;
+        for (b, s) in data.iter_mut().enumerate() {
+            for i1 in 0..d1 {
+                for i2 in 0..d2 {
+                    let line = &done[(b * d1 + i1) * d2 + i2];
+                    for i0 in 0..d0 {
+                        let (re, im) = line.get(i0);
+                        s.set((i0 * d1 + i1) * d2 + i2, re, im);
+                    }
+                }
+            }
+        }
+        Ok(data)
+    }
+
+    /// §7.1 packing trick: the `re` half packs into `n/2` complex points;
+    /// one FFT plus the O(n) Hermitian unpack yields bins `0..=n/2`.
+    fn run_real(&mut self, n: usize, signals: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        let mut packed = Vec::with_capacity(signals.len());
+        for s in signals {
+            packed.push(pack_real(&s.re)?);
+        }
+        let spectra = self.run(n / 2, &packed)?.outputs;
+        Ok(spectra.iter().map(unpack_real_spectrum).collect())
+    }
+
+    /// Convolution theorem: `y = ifft(fft(x) ∘ fft(h))`, with the inverse
+    /// computed on the forward path via `ifft(P) = conj(fft(conj(P))) / n`.
+    fn run_convolution(&mut self, n: usize, signals: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        let spectra = self.run(n, signals)?.outputs;
+        let pairs = signals.len() / 2;
+        let mut prods = Vec::with_capacity(pairs);
+        for p in 0..pairs {
+            let x = &spectra[2 * p];
+            let h = &spectra[2 * p + 1];
+            let mut v = SoaVec::zeros(n);
+            for k in 0..n {
+                let (xr, xi) = x.get(k);
+                let (hr, hi) = h.get(k);
+                // Conjugated product, so the next forward FFT acts as the
+                // inverse transform up to conjugation and 1/n.
+                v.set(k, xr * hr - xi * hi, -(xr * hi + xi * hr));
+            }
+            prods.push(v);
+        }
+        let inv = self.run(n, &prods)?.outputs;
+        let scale = 1.0 / n as f32;
+        Ok(inv
+            .into_iter()
+            .map(|y| {
+                SoaVec::new(
+                    y.re.iter().map(|v| v * scale).collect(),
+                    y.im.iter().map(|v| -v * scale).collect(),
+                )
+            })
+            .collect())
+    }
+
+    /// Hop-windowed frames, transformed as one batched FFT of the window
+    /// size; outputs concatenate the frame spectra row-major.
+    fn run_stft(&mut self, n: usize, signals: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        let (w, hop, frames) = stft_shape(n);
+        let mut frames_in = Vec::with_capacity(signals.len() * frames);
+        for s in signals {
+            for f in 0..frames {
+                let a = f * hop;
+                frames_in.push(SoaVec::new(s.re[a..a + w].to_vec(), s.im[a..a + w].to_vec()));
+            }
+        }
+        let done = self.run(w, &frames_in)?.outputs;
+        let mut out = Vec::with_capacity(signals.len());
+        for i in 0..signals.len() {
+            let mut spec = SoaVec::zeros(frames * w);
+            for f in 0..frames {
+                let fr = &done[i * frames + f];
+                spec.re[f * w..(f + 1) * w].copy_from_slice(&fr.re);
+                spec.im[f * w..(f + 1) * w].copy_from_slice(&fr.im);
+            }
+            out.push(spec);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -343,5 +695,75 @@ mod tests {
         assert!(e.plan(64, 0).is_err());
         assert!(e.run(64, &[]).is_err());
         assert!(e.run(64, &[SoaVec::zeros(32)]).is_err());
+    }
+
+    #[test]
+    fn batch1d_workload_plan_reduces_to_plain_plan() {
+        // The kind dimension must not perturb the paper's core numbers: a
+        // batch1d workload eval is exactly the plain (n, batch) eval.
+        let mut e = FftEngine::builder().system(&SystemConfig::baseline().with_hw_opt()).build();
+        let (n, batch) = (1 << 13, 64);
+        let wl = e.plan_workload(WorkloadKind::Batch1d, n, batch).unwrap();
+        let (plan, ev) = e.plan(n, batch).unwrap();
+        assert_eq!(wl.passes.len(), 1);
+        assert_eq!(wl.passes[0].plan, plan);
+        assert_eq!(wl.plan_ns, ev.plan_ns);
+        assert_eq!(wl.gpu_only_ns, ev.gpu_only_ns);
+        assert_eq!(wl.movement_plan, ev.movement_plan);
+        assert_eq!(wl.dominant().fft_n, n);
+    }
+
+    #[test]
+    fn every_kind_plans_and_runs_numerically() {
+        use crate::fft::dft_naive;
+        let mut e = FftEngine::builder().build();
+        for kind in crate::workload::ALL_KINDS {
+            let n = 64usize;
+            let mult = kind.signal_multiple();
+            let signals: Vec<SoaVec> =
+                (0..2 * mult).map(|i| SoaVec::random(n, 100 + i as u64)).collect();
+            let wl = e.plan_workload(kind, n, signals.len()).unwrap();
+            assert!(wl.plan_ns > 0.0 && wl.gpu_only_ns > 0.0, "{kind}");
+            assert!(!wl.passes.is_empty(), "{kind}");
+            let run = e.run_workload(kind, n, &signals).unwrap();
+            assert_eq!(run.outputs.len(), signals.len() / mult, "{kind}");
+            // Spot-check batch1d numerics against the O(n²) oracle; the
+            // per-kind oracles live in the metamorphic/golden suites.
+            if kind == WorkloadKind::Batch1d {
+                let d = run.outputs[0].max_abs_diff(&dft_naive(&signals[0]));
+                assert!(d < 1e-2, "{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn workload_output_shapes_per_kind() {
+        let mut e = FftEngine::builder().build();
+        let n = 512usize;
+        let xs: Vec<SoaVec> = (0..2).map(|i| SoaVec::random(n, 7 + i)).collect();
+        assert_eq!(e.run_workload(WorkloadKind::Fft2d, n, &xs).unwrap().outputs[0].len(), n);
+        assert_eq!(e.run_workload(WorkloadKind::Fft3d, n, &xs).unwrap().outputs[0].len(), n);
+        assert_eq!(
+            e.run_workload(WorkloadKind::Real, n, &xs).unwrap().outputs[0].len(),
+            n / 2 + 1
+        );
+        let conv = e.run_workload(WorkloadKind::Convolution, n, &xs).unwrap();
+        assert_eq!(conv.outputs.len(), 1);
+        assert_eq!(conv.outputs[0].len(), n);
+        let (w, _hop, frames) = crate::workload::stft_shape(n);
+        let stft = e.run_workload(WorkloadKind::Stft, n, &xs).unwrap();
+        assert_eq!(stft.outputs[0].len(), frames * w);
+    }
+
+    #[test]
+    fn workload_rejects_bad_shapes() {
+        let mut e = FftEngine::builder().build();
+        let xs = vec![SoaVec::zeros(4)];
+        // fft3d needs n >= 8.
+        assert!(e.run_workload(WorkloadKind::Fft3d, 4, &xs).is_err());
+        // convolution needs signal pairs.
+        assert!(e.run_workload(WorkloadKind::Convolution, 4, &xs).is_err());
+        assert!(e.plan_workload(WorkloadKind::Convolution, 64, 3).is_err());
+        assert!(e.plan_workload(WorkloadKind::Real, 2, 1).is_err());
     }
 }

@@ -31,7 +31,9 @@ mod pjrt;
 
 pub use component::PlanComponent;
 pub use cost::{CostEstimate, GpuCostModel};
-pub use engine::{EngineRun, FftEngine, FftEngineBuilder};
+pub use engine::{
+    EngineRun, FftEngine, FftEngineBuilder, WorkloadEval, WorkloadPassEval, WorkloadRun,
+};
 pub use host::HostFftBackend;
 pub use pim_sim::PimSimBackend;
 pub use pjrt::PjrtGpuBackend;

@@ -3,13 +3,15 @@
 //! Every policy is deterministic. The interesting trade-off is cache
 //! affinity vs load balance: [`RoundRobinRouter`] spreads perfectly but
 //! makes every shard plan every FFT shape (cold plan caches everywhere),
-//! [`SizeAffinityRouter`] pins each size to one home shard so its engine's
-//! plan cache stays hot, [`LeastLoadedRouter`] chases instantaneous queue
-//! depth at the cost of shape locality.
+//! [`SizeAffinityRouter`] pins each `(kind, size)` shape to one home shard
+//! so its engine's plan cache stays hot, [`LeastLoadedRouter`] chases
+//! instantaneous queue depth at the cost of shape locality.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
+
+use crate::workload::WorkloadKind;
 
 use super::Shard;
 
@@ -17,9 +19,10 @@ use super::Shard;
 pub trait ShardRouter {
     fn name(&self) -> &'static str;
 
-    /// Choose the destination shard for a request of FFT size `n` carrying
-    /// `signals` signals. `shards` is never empty.
-    fn route(&mut self, n: usize, signals: usize, shards: &[Shard]) -> usize;
+    /// Choose the destination shard for a `kind` request of FFT size `n`
+    /// carrying `signals` signals. `shards` is never empty.
+    fn route(&mut self, kind: WorkloadKind, n: usize, signals: usize, shards: &[Shard])
+        -> usize;
 }
 
 /// Cycle through shards in order.
@@ -33,26 +36,34 @@ impl ShardRouter for RoundRobinRouter {
         "round-robin"
     }
 
-    fn route(&mut self, _n: usize, _signals: usize, shards: &[Shard]) -> usize {
+    fn route(
+        &mut self,
+        _kind: WorkloadKind,
+        _n: usize,
+        _signals: usize,
+        shards: &[Shard],
+    ) -> usize {
         let s = self.next % shards.len();
         self.next = self.next.wrapping_add(1);
         s
     }
 }
 
-/// Sticky size → shard assignment: the first time a size appears it is
-/// pinned to the shard with the fewest pinned sizes (ties to the lowest
-/// index), and every later request of that size follows it. Keeps each
-/// engine's plan cache hot on its home sizes.
+/// Sticky `(kind, size)` → shard assignment: the first time a shape appears
+/// it is pinned to the shard with the fewest pinned shapes (ties to the
+/// lowest index), and every later request of that shape follows it. Keeps
+/// each engine's plan cache hot on its home shapes — a 2D FFT and a
+/// convolution of the same `n` decompose into different pass shapes, so
+/// they count as distinct homes.
 #[derive(Debug)]
 pub struct SizeAffinityRouter {
-    home: BTreeMap<usize, usize>,
-    sizes_per_shard: Vec<usize>,
+    home: BTreeMap<(WorkloadKind, usize), usize>,
+    shapes_per_shard: Vec<usize>,
 }
 
 impl SizeAffinityRouter {
     pub fn new(shards: usize) -> Self {
-        Self { home: BTreeMap::new(), sizes_per_shard: vec![0; shards] }
+        Self { home: BTreeMap::new(), shapes_per_shard: vec![0; shards] }
     }
 }
 
@@ -61,19 +72,25 @@ impl ShardRouter for SizeAffinityRouter {
         "size-affinity"
     }
 
-    fn route(&mut self, n: usize, _signals: usize, _shards: &[Shard]) -> usize {
-        if let Some(&s) = self.home.get(&n) {
+    fn route(
+        &mut self,
+        kind: WorkloadKind,
+        n: usize,
+        _signals: usize,
+        _shards: &[Shard],
+    ) -> usize {
+        if let Some(&s) = self.home.get(&(kind, n)) {
             return s;
         }
         let s = self
-            .sizes_per_shard
+            .shapes_per_shard
             .iter()
             .enumerate()
             .min_by_key(|&(i, &count)| (count, i))
             .map(|(i, _)| i)
             .unwrap();
-        self.sizes_per_shard[s] += 1;
-        self.home.insert(n, s);
+        self.shapes_per_shard[s] += 1;
+        self.home.insert((kind, n), s);
         s
     }
 }
@@ -88,7 +105,13 @@ impl ShardRouter for LeastLoadedRouter {
         "least-loaded"
     }
 
-    fn route(&mut self, _n: usize, _signals: usize, shards: &[Shard]) -> usize {
+    fn route(
+        &mut self,
+        _kind: WorkloadKind,
+        _n: usize,
+        _signals: usize,
+        shards: &[Shard],
+    ) -> usize {
         shards
             .iter()
             .enumerate()
@@ -140,6 +163,8 @@ mod tests {
     use crate::cluster::SimRequest;
     use crate::config::SystemConfig;
 
+    const K1D: WorkloadKind = WorkloadKind::Batch1d;
+
     fn shards(k: usize) -> Vec<Shard> {
         let sys = SystemConfig::baseline();
         (0..k).map(|_| Shard::new(FftEngine::builder().system(&sys).build())).collect()
@@ -149,7 +174,7 @@ mod tests {
     fn round_robin_cycles() {
         let s = shards(3);
         let mut r = RouterKind::RoundRobin.build(3);
-        let picks: Vec<usize> = (0..6).map(|_| r.route(64, 1, &s)).collect();
+        let picks: Vec<usize> = (0..6).map(|_| r.route(K1D, 64, 1, &s)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -157,25 +182,37 @@ mod tests {
     fn affinity_is_sticky_and_balanced() {
         let s = shards(2);
         let mut r = RouterKind::SizeAffinity.build(2);
-        let a = r.route(32, 1, &s);
-        let b = r.route(64, 1, &s);
-        let c = r.route(128, 1, &s);
+        let a = r.route(K1D, 32, 1, &s);
+        let b = r.route(K1D, 64, 1, &s);
+        let c = r.route(K1D, 128, 1, &s);
         // Distinct sizes spread across shards before doubling up.
         assert_ne!(a, b);
         // Same size always lands on its home shard.
-        assert_eq!(r.route(32, 1, &s), a);
-        assert_eq!(r.route(64, 1, &s), b);
-        assert_eq!(r.route(128, 1, &s), c);
+        assert_eq!(r.route(K1D, 32, 1, &s), a);
+        assert_eq!(r.route(K1D, 64, 1, &s), b);
+        assert_eq!(r.route(K1D, 128, 1, &s), c);
+    }
+
+    #[test]
+    fn affinity_distinguishes_kinds_of_the_same_size() {
+        let s = shards(2);
+        let mut r = RouterKind::SizeAffinity.build(2);
+        let a = r.route(WorkloadKind::Batch1d, 64, 1, &s);
+        let b = r.route(WorkloadKind::Stft, 64, 1, &s);
+        // Same n, different kinds: distinct shapes spread before doubling.
+        assert_ne!(a, b);
+        assert_eq!(r.route(WorkloadKind::Batch1d, 64, 1, &s), a);
+        assert_eq!(r.route(WorkloadKind::Stft, 64, 1, &s), b);
     }
 
     #[test]
     fn least_loaded_prefers_empty_shards() {
         let mut s = shards(2);
-        s[0].enqueue(SimRequest { id: 0, n: 64, signals: 5, arrive_ns: 0 });
+        s[0].enqueue(SimRequest { id: 0, kind: K1D, n: 64, signals: 5, arrive_ns: 0 });
         let mut r = RouterKind::LeastLoaded.build(2);
-        assert_eq!(r.route(64, 1, &s), 1);
-        s[1].enqueue(SimRequest { id: 1, n: 64, signals: 9, arrive_ns: 0 });
-        assert_eq!(r.route(64, 1, &s), 0);
+        assert_eq!(r.route(K1D, 64, 1, &s), 1);
+        s[1].enqueue(SimRequest { id: 1, kind: K1D, n: 64, signals: 9, arrive_ns: 0 });
+        assert_eq!(r.route(K1D, 64, 1, &s), 0);
     }
 
     #[test]

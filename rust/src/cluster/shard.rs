@@ -8,11 +8,14 @@
 //! artifacts have fixed shapes), which both prices padding waste honestly
 //! and keeps the engine's plan cache keyed by a small set of shapes.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::backend::FftEngine;
 use crate::coordinator::{Batchable, Batcher};
 use crate::metrics::{DataMovement, LogHistogram};
+use crate::workload::WorkloadKind;
 
 /// A queued simulated request: no signal payload, just the shape and the
 /// arrival timestamp the latency accounting needs.
@@ -20,6 +23,8 @@ use crate::metrics::{DataMovement, LogHistogram};
 pub struct SimRequest {
     /// Trace entry index.
     pub id: u64,
+    /// Workload kind.
+    pub kind: WorkloadKind,
     /// FFT size.
     pub n: usize,
     /// Signals in the request.
@@ -31,6 +36,10 @@ pub struct SimRequest {
 impl Batchable for SimRequest {
     fn fft_size(&self) -> usize {
         self.n
+    }
+
+    fn kind(&self) -> WorkloadKind {
+        self.kind
     }
 
     fn signal_count(&self) -> usize {
@@ -54,6 +63,8 @@ pub struct ShardStats {
     /// Modeled data movement of every executed plan, split per substrate
     /// (GPU signal bytes vs PIM command bytes).
     pub movement: DataMovement,
+    /// Requests completed, by workload kind.
+    pub kind_requests: BTreeMap<WorkloadKind, u64>,
     /// Queue depth (requests) sampled at every arrival.
     pub queue_depth: LogHistogram,
     /// Batch occupancy, percent of the padded shape actually used.
@@ -114,16 +125,17 @@ impl Shard {
         self.batcher.push(req);
     }
 
-    /// Pop the next batch (round-robin across sizes) holding at least
-    /// `min_signals`, price it on the engine, and go busy. Returns the
-    /// modeled service time in ns, or `None` if nothing qualified.
+    /// Pop the next batch (round-robin across `(size, kind)` queues)
+    /// holding at least `min_signals`, price it on the engine's workload
+    /// decomposition, and go busy. Returns the modeled service time in ns,
+    /// or `None` if nothing qualified.
     pub(crate) fn start_batch(&mut self, min_signals: usize) -> Result<Option<u64>> {
         let Some(batch) = self.batcher.pop_ready(min_signals) else {
             return Ok(None);
         };
         let total = batch.total_signals();
         let padded = batch.padded_signals();
-        let (_plan, eval) = self.engine.plan(batch.n, padded)?;
+        let eval = self.engine.plan_workload(batch.kind, batch.n, padded)?;
         let service_ns = eval.plan_ns.max(1.0).round() as u64;
         self.stats.batches += 1;
         self.stats.signals += total as u64;
@@ -143,6 +155,9 @@ impl Shard {
         self.busy = false;
         self.in_flight_signals = 0;
         self.stats.requests += self.in_flight.len() as u64;
+        for req in &self.in_flight {
+            *self.stats.kind_requests.entry(req.kind).or_insert(0) += 1;
+        }
         std::mem::take(&mut self.in_flight)
     }
 }
@@ -157,11 +172,15 @@ mod tests {
         Shard::new(FftEngine::builder().system(&sys).build())
     }
 
+    fn req1d(id: u64, n: usize, signals: usize, arrive_ns: u64) -> SimRequest {
+        SimRequest { id, kind: WorkloadKind::Batch1d, n, signals, arrive_ns }
+    }
+
     #[test]
     fn batch_lifecycle_prices_and_pads() {
         let mut s = shard();
         for id in 0..3u64 {
-            s.enqueue(SimRequest { id, n: 8192, signals: 2, arrive_ns: id * 10 });
+            s.enqueue(req1d(id, 8192, 2, id * 10));
         }
         assert_eq!(s.pending_requests(), 3);
         assert_eq!(s.pending_signals(), 6);
@@ -186,7 +205,7 @@ mod tests {
     #[test]
     fn start_batch_respects_min_signals() {
         let mut s = shard();
-        s.enqueue(SimRequest { id: 0, n: 64, signals: 2, arrive_ns: 0 });
+        s.enqueue(req1d(0, 64, 2, 0));
         assert!(s.start_batch(8).unwrap().is_none());
         assert!(!s.is_busy());
         assert!(s.start_batch(1).unwrap().is_some());
@@ -196,11 +215,32 @@ mod tests {
     fn repeated_shapes_hit_the_plan_cache() {
         let mut s = shard();
         for round in 0..4u64 {
-            s.enqueue(SimRequest { id: round, n: 8192, signals: 4, arrive_ns: 0 });
+            s.enqueue(req1d(round, 8192, 4, 0));
             s.start_batch(1).unwrap().unwrap();
             s.finish_batch();
         }
         let (hits, misses) = s.cache_stats();
         assert_eq!((hits, misses), (3, 1));
+    }
+
+    #[test]
+    fn kinds_are_priced_and_counted_separately() {
+        let mut s = shard();
+        s.enqueue(SimRequest { id: 0, kind: WorkloadKind::Batch1d, n: 8192, signals: 4, arrive_ns: 0 });
+        let t1d = s.start_batch(1).unwrap().unwrap();
+        s.finish_batch();
+        s.enqueue(SimRequest { id: 1, kind: WorkloadKind::Fft2d, n: 8192, signals: 4, arrive_ns: 0 });
+        let t2d = s.start_batch(1).unwrap().unwrap();
+        s.finish_batch();
+        // A 2D FFT of the same n runs two (smaller) passes plus transposes:
+        // its modeled service time must differ from the 1D pricing.
+        assert_ne!(t1d, t2d);
+        assert_eq!(s.stats.kind_requests[&WorkloadKind::Batch1d], 1);
+        assert_eq!(s.stats.kind_requests[&WorkloadKind::Fft2d], 1);
+        // STFT decomposes into many window-size FFTs and still prices.
+        s.enqueue(SimRequest { id: 2, kind: WorkloadKind::Stft, n: 8192, signals: 2, arrive_ns: 0 });
+        assert!(s.start_batch(1).unwrap().unwrap() >= 1);
+        s.finish_batch();
+        assert_eq!(s.stats.requests, 3);
     }
 }

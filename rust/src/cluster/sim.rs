@@ -12,6 +12,8 @@
 //! over millions of requests finishes in wall-clock seconds because no
 //! spectra are ever computed.
 
+use std::collections::BTreeMap;
+
 use anyhow::{ensure, Result};
 
 use crate::backend::FftEngine;
@@ -21,6 +23,7 @@ use crate::metrics::{DataMovement, LogHistogram};
 use crate::pimc::PassConfig;
 use crate::routines::OptLevel;
 use crate::util::Json;
+use crate::workload::WorkloadKind;
 
 use super::event::{Event, EventQueue};
 use super::router::RouterKind;
@@ -98,6 +101,8 @@ pub struct ClusterReport {
     pub movement: DataMovement,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Requests served per workload kind (mixed-workload traffic).
+    pub per_kind: BTreeMap<WorkloadKind, u64>,
     pub per_shard: Vec<ShardSummary>,
 }
 
@@ -206,6 +211,15 @@ impl ClusterReport {
                 ]),
             ),
             (
+                "per_kind",
+                Json::Obj(
+                    self.per_kind
+                        .iter()
+                        .map(|(k, &v)| (k.name().to_string(), Json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
                 "per_shard",
                 Json::arr(
                     self.per_shard
@@ -233,6 +247,7 @@ impl ClusterReport {
 
 struct SimArrival {
     at_ns: u64,
+    kind: WorkloadKind,
     n: usize,
     signals: usize,
 }
@@ -252,7 +267,12 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
     let arrivals: Vec<SimArrival> = trace
         .entries
         .iter()
-        .map(|e| SimArrival { at_ns: (e.at_us * 1e3).round() as u64, n: e.n, signals: e.batch })
+        .map(|e| SimArrival {
+            at_ns: (e.at_us * 1e3).round() as u64,
+            kind: e.kind,
+            n: e.n,
+            signals: e.batch,
+        })
         .collect();
     let wait_ns = (cfg.max_wait_us * 1e3).round() as u64;
 
@@ -274,10 +294,11 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
                     evq.push(arrivals[idx + 1].at_ns.max(now), Event::Arrival { idx: idx + 1 });
                 }
                 let a = &arrivals[idx];
-                let s = router.route(a.n, a.signals, &shards);
+                let s = router.route(a.kind, a.n, a.signals, &shards);
                 let shard = &mut shards[s];
                 shard.enqueue(SimRequest {
                     id: idx as u64,
+                    kind: a.kind,
                     n: a.n,
                     signals: a.signals,
                     arrive_ns: now,
@@ -330,11 +351,15 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
         movement: DataMovement::default(),
         cache_hits: 0,
         cache_misses: 0,
+        per_kind: BTreeMap::new(),
         per_shard: Vec::with_capacity(cfg.shards),
     };
     for (i, shard) in shards.iter().enumerate() {
         let st = &shard.stats;
         let (hits, misses) = shard.cache_stats();
+        for (&kind, &count) in &st.kind_requests {
+            *report.per_kind.entry(kind).or_insert(0) += count;
+        }
         report.requests += st.requests;
         report.signals += st.signals;
         report.padded_signals += st.padded_signals;
@@ -404,6 +429,7 @@ mod tests {
         let t = Trace {
             entries: vec![crate::coordinator::TraceEntry {
                 at_us: 10.0,
+                kind: WorkloadKind::Batch1d,
                 n: 64,
                 batch: 1,
                 seed: 1,

@@ -10,21 +10,30 @@
 //! `pending_signals`, `has_ready`) stay O(1)/O(#sizes) even when a queue is
 //! millions of requests deep.
 //!
-//! Drain order is round-robin across size queues: each drain starts at the
-//! size after the one served first last time, wrapping. A plain
-//! smallest-first order (the old `BTreeMap` pop) permanently starves large
-//! FFT sizes under sustained load, because small-size queues refill before
-//! the large ones ever reach the head.
+//! Drain order is round-robin across `(size, kind)` queues: each drain
+//! starts at the queue after the one served first last time, wrapping. A
+//! plain smallest-first order (the old `BTreeMap` pop) permanently starves
+//! large FFT sizes under sustained load, because small-size queues refill
+//! before the large ones ever reach the head.
+//!
+//! Batches are homogeneous in *both* FFT size and [`WorkloadKind`]: a 2D
+//! FFT and a convolution of the same `n` decompose into different pass
+//! structures, so they can never share an execution.
 
 use std::collections::BTreeMap;
 
+use crate::workload::WorkloadKind;
+
 use super::FftRequest;
 
-/// Anything the batcher can group: it has an FFT size (the grouping key) and
-/// contributes some number of signals to its batch.
+/// Anything the batcher can group: it has an FFT size and a workload kind
+/// (together the batch grouping key) and contributes some number of signals
+/// to its batch.
 pub trait Batchable {
-    /// FFT size of the request (power of two; the batch grouping key).
+    /// FFT size of the request (power of two).
     fn fft_size(&self) -> usize;
+    /// Workload kind of the request.
+    fn kind(&self) -> WorkloadKind;
     /// Signals this request contributes to a batch.
     fn signal_count(&self) -> usize;
 }
@@ -34,15 +43,24 @@ impl Batchable for FftRequest {
         self.n
     }
 
+    fn kind(&self) -> WorkloadKind {
+        self.kind
+    }
+
     fn signal_count(&self) -> usize {
         self.batch()
     }
 }
 
-/// Requests of one FFT size, ready for a shared execution.
+/// Batch grouping key: FFT size first (so round-robin rotation walks sizes
+/// in ascending order), then kind.
+type BatchKey = (usize, WorkloadKind);
+
+/// Requests of one FFT size and workload kind, ready for a shared execution.
 #[derive(Debug)]
 pub struct Batch<R = FftRequest> {
     pub n: usize,
+    pub kind: WorkloadKind,
     pub requests: Vec<R>,
 }
 
@@ -77,15 +95,16 @@ impl<R> Default for SizeQueue<R> {
     }
 }
 
-/// Size-keyed request accumulator with round-robin drain fairness.
+/// `(size, kind)`-keyed request accumulator with round-robin drain fairness.
 #[derive(Debug)]
 pub struct Batcher<R = FftRequest> {
-    queues: BTreeMap<usize, SizeQueue<R>>,
+    queues: BTreeMap<BatchKey, SizeQueue<R>>,
     pending_requests: usize,
     pending_signals: usize,
-    /// FFT size served first by the most recent drain; the next drain starts
-    /// strictly after it (wrapping), so every size periodically goes first.
-    last_first: Option<usize>,
+    /// Queue key served first by the most recent drain; the next drain
+    /// starts strictly after it (wrapping), so every queue periodically goes
+    /// first.
+    last_first: Option<BatchKey>,
 }
 
 impl<R> Batcher<R> {
@@ -113,22 +132,22 @@ impl<R> Default for Batcher<R> {
 impl<R: Batchable> Batcher<R> {
     pub fn push(&mut self, req: R) {
         let signals = req.signal_count();
-        let q = self.queues.entry(req.fft_size()).or_default();
+        let q = self.queues.entry((req.fft_size(), req.kind())).or_default();
         q.signals += signals;
         q.requests.push(req);
         self.pending_requests += 1;
         self.pending_signals += signals;
     }
 
-    /// Does any size queue hold at least `min` signals?
+    /// Does any queue hold at least `min` signals?
     pub fn has_ready(&self, min: usize) -> bool {
         self.queues.values().any(|q| q.signals >= min)
     }
 
-    /// Queued sizes in round-robin order: ascending, rotated to start just
-    /// after the size that went first on the previous drain.
-    fn rotation(&self) -> Vec<usize> {
-        let keys: Vec<usize> = self.queues.keys().copied().collect();
+    /// Queued `(size, kind)` keys in round-robin order: ascending, rotated
+    /// to start just after the key that went first on the previous drain.
+    fn rotation(&self) -> Vec<BatchKey> {
+        let keys: Vec<BatchKey> = self.queues.keys().copied().collect();
         match self.last_first {
             None => keys,
             Some(last) => {
@@ -138,40 +157,40 @@ impl<R: Batchable> Batcher<R> {
         }
     }
 
-    /// Remove one whole size queue as a batch, maintaining counters.
-    fn take(&mut self, n: usize) -> Batch<R> {
-        let q = self.queues.remove(&n).unwrap();
+    /// Remove one whole queue as a batch, maintaining counters.
+    fn take(&mut self, key: BatchKey) -> Batch<R> {
+        let q = self.queues.remove(&key).unwrap();
         self.pending_requests -= q.requests.len();
         self.pending_signals -= q.signals;
-        Batch { n, requests: q.requests }
+        Batch { n: key.0, kind: key.1, requests: q.requests }
     }
 
-    /// Drain everything into size-homogeneous batches, round-robin order.
+    /// Drain everything into homogeneous batches, round-robin order.
     pub fn flush(&mut self) -> Vec<Batch<R>> {
         let order = self.rotation();
         if let Some(&first) = order.first() {
             self.last_first = Some(first);
         }
-        order.into_iter().map(|n| self.take(n)).collect()
+        order.into_iter().map(|k| self.take(k)).collect()
     }
 
-    /// Drain only sizes with at least `min` queued signals (windowed
+    /// Drain only queues with at least `min` queued signals (windowed
     /// batching policy; the server flushes the rest on its deadline tick).
     pub fn flush_ready(&mut self, min: usize) -> Vec<Batch<R>> {
-        let order: Vec<usize> =
-            self.rotation().into_iter().filter(|n| self.queues[n].signals >= min).collect();
+        let order: Vec<BatchKey> =
+            self.rotation().into_iter().filter(|k| self.queues[k].signals >= min).collect();
         if let Some(&first) = order.first() {
             self.last_first = Some(first);
         }
-        order.into_iter().map(|n| self.take(n)).collect()
+        order.into_iter().map(|k| self.take(k)).collect()
     }
 
     /// Pop the single next batch in round-robin order holding at least `min`
     /// signals (the cluster shard's dispatch primitive).
     pub fn pop_ready(&mut self, min: usize) -> Option<Batch<R>> {
-        let n = self.rotation().into_iter().find(|n| self.queues[n].signals >= min)?;
-        self.last_first = Some(n);
-        Some(self.take(n))
+        let key = self.rotation().into_iter().find(|k| self.queues[k].signals >= min)?;
+        self.last_first = Some(key);
+        Some(self.take(key))
     }
 }
 
@@ -246,6 +265,22 @@ mod tests {
         assert_eq!(b.pop_ready(1).unwrap().n, 128);
         assert_eq!(b.pop_ready(1).unwrap().n, 32);
         assert!(b.pop_ready(1).is_none());
+    }
+
+    #[test]
+    fn kinds_never_share_a_batch() {
+        // Same FFT size, different kinds: the pass structures differ, so the
+        // batcher must keep them in separate queues.
+        let mut b = Batcher::new();
+        b.push(FftRequest::random_kind(1, WorkloadKind::Batch1d, 64, 1, 1));
+        b.push(FftRequest::random_kind(2, WorkloadKind::Fft2d, 64, 1, 2));
+        b.push(FftRequest::random_kind(3, WorkloadKind::Batch1d, 64, 1, 3));
+        let batches = b.flush();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].kind, WorkloadKind::Batch1d);
+        assert_eq!(batches[0].requests.len(), 2);
+        assert_eq!(batches[1].kind, WorkloadKind::Fft2d);
+        assert_eq!(batches[1].n, 64);
     }
 
     #[test]

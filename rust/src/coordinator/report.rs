@@ -91,7 +91,11 @@ mod tests {
         s.verify = true;
         let mut out = Vec::new();
         for (id, n) in [(1u64, 64usize), (2, 1 << 13)] {
-            let b = Batch { n, requests: vec![FftRequest::random(id, n, 2, id)] };
+            let b = Batch {
+                n,
+                kind: crate::workload::WorkloadKind::Batch1d,
+                requests: vec![FftRequest::random(id, n, 2, id)],
+            };
             out.extend(s.execute(b).unwrap());
         }
         out

@@ -3,11 +3,16 @@
 use crate::fft::SoaVec;
 use crate::metrics::DataMovement;
 use crate::planner::CollabPlan;
+use crate::workload::WorkloadKind;
 
-/// One client request: `batch` signals of `n` complex points each.
+/// One client request: `batch` signals of `n` complex points each, served as
+/// the given [`WorkloadKind`] (batched 1D complex FFT by default; see
+/// [`crate::backend::WorkloadRun`] for the per-kind input/output shapes).
 #[derive(Debug, Clone)]
 pub struct FftRequest {
     pub id: u64,
+    /// Workload kind the signals are transformed as.
+    pub kind: WorkloadKind,
     /// FFT size (power of two).
     pub n: usize,
     /// The signals (each of length `n`).
@@ -15,9 +20,15 @@ pub struct FftRequest {
 }
 
 impl FftRequest {
+    /// A batched-1D-complex-FFT request (the paper's core workload).
     pub fn new(id: u64, n: usize, signals: Vec<SoaVec>) -> Self {
+        Self::with_kind(id, WorkloadKind::Batch1d, n, signals)
+    }
+
+    /// A request of an explicit [`WorkloadKind`].
+    pub fn with_kind(id: u64, kind: WorkloadKind, n: usize, signals: Vec<SoaVec>) -> Self {
         debug_assert!(signals.iter().all(|s| s.len() == n));
-        Self { id, n, signals }
+        Self { id, kind, n, signals }
     }
 
     pub fn batch(&self) -> usize {
@@ -26,8 +37,13 @@ impl FftRequest {
 
     /// Deterministic random request (tests, traces).
     pub fn random(id: u64, n: usize, batch: usize, seed: u64) -> Self {
+        Self::random_kind(id, WorkloadKind::Batch1d, n, batch, seed)
+    }
+
+    /// Deterministic random request of an explicit kind.
+    pub fn random_kind(id: u64, kind: WorkloadKind, n: usize, batch: usize, seed: u64) -> Self {
         let signals = (0..batch).map(|i| SoaVec::random(n, seed ^ (i as u64) << 17)).collect();
-        Self { id, n, signals }
+        Self { id, kind, n, signals }
     }
 }
 

@@ -13,6 +13,7 @@ use anyhow::{ensure, Result};
 use crate::backend::FftEngine;
 use crate::config::SystemConfig;
 use crate::fft::{fft_soa, SoaVec};
+use crate::workload::WorkloadKind;
 
 use super::{Batch, FftResponse, RequestMetrics};
 
@@ -46,13 +47,22 @@ impl Scheduler {
         &mut self.engine
     }
 
-    /// Serve one batch (all requests share `n`).
+    /// Serve one batch (all requests share `n` and the workload kind).
     pub fn execute(&mut self, batch: Batch) -> Result<Vec<FftResponse>> {
         let n = batch.n;
+        let kind = batch.kind;
         ensure!(n.is_power_of_two() && n >= 2, "FFT size must be a power of two >= 2, got {n}");
         ensure!(
-            batch.requests.iter().all(|r| r.n == n && r.signals.iter().all(|s| s.len() == n)),
-            "batch contains requests that do not match its FFT size {n}"
+            batch
+                .requests
+                .iter()
+                .all(|r| r.n == n && r.kind == kind && r.signals.iter().all(|s| s.len() == n)),
+            "batch contains requests that do not match its shape (n={n}, kind={kind})"
+        );
+        let mult = kind.signal_multiple();
+        ensure!(
+            batch.requests.iter().all(|r| r.batch() % mult == 0),
+            "{kind} requests must carry signal counts divisible by {mult}"
         );
         let total: usize = batch.requests.iter().map(|r| r.batch()).sum();
         ensure!(total > 0, "empty batch");
@@ -60,13 +70,17 @@ impl Scheduler {
         let signals: Vec<SoaVec> =
             batch.requests.iter().flat_map(|r| r.signals.iter().cloned()).collect();
         let t0 = Instant::now();
-        let run = self.engine.run(n, &signals)?;
+        let run = self.engine.run_workload(kind, n, &signals)?;
         let host_wall_ns = t0.elapsed().as_nanos() as u64 / batch.requests.len().max(1) as u64;
 
-        let spectra = regroup(&batch, run.outputs);
+        let plan = run.eval.dominant().plan;
+        let spectra = regroup(&batch, mult, run.outputs);
         let mut responses = Vec::with_capacity(batch.requests.len());
         for (req, spec) in batch.requests.into_iter().zip(spectra) {
-            let max_error = if self.verify {
+            // Verification compares against the host reference; only the
+            // 1D-complex kind has outputs that are plain forward FFTs of its
+            // inputs (the per-kind oracles live in the test suites).
+            let max_error = if self.verify && kind == WorkloadKind::Batch1d {
                 Some(
                     req.signals
                         .iter()
@@ -81,7 +95,7 @@ impl Scheduler {
                 id: req.id,
                 spectra: spec,
                 metrics: RequestMetrics {
-                    plan: run.plan,
+                    plan,
                     modeled_gpu_only_ns: run.eval.gpu_only_ns * req.batch() as f64 / total as f64,
                     modeled_plan_ns: run.eval.plan_ns * req.batch() as f64 / total as f64,
                     movement_base: run.eval.movement_base,
@@ -95,11 +109,13 @@ impl Scheduler {
     }
 }
 
-/// Split a flat output list back into per-request groups.
-fn regroup(batch: &Batch, mut flat: Vec<SoaVec>) -> Vec<Vec<SoaVec>> {
+/// Split a flat output list back into per-request groups. Each request
+/// receives one output per `mult` input signals (convolution pairs collapse
+/// to a single result).
+fn regroup(batch: &Batch, mult: usize, mut flat: Vec<SoaVec>) -> Vec<Vec<SoaVec>> {
     let mut out = Vec::with_capacity(batch.requests.len());
     for req in &batch.requests {
-        let rest = flat.split_off(req.batch());
+        let rest = flat.split_off(req.batch() / mult);
         out.push(std::mem::replace(&mut flat, rest));
     }
     out
@@ -114,6 +130,7 @@ mod tests {
     fn batch(n: usize, reqs: &[(u64, usize)]) -> Batch {
         Batch {
             n,
+            kind: WorkloadKind::Batch1d,
             requests: reqs.iter().map(|&(id, b)| FftRequest::random(id, n, b, id * 7 + 1)).collect(),
         }
     }
@@ -177,22 +194,61 @@ mod robustness_tests {
     fn rejects_non_pow2_batch() {
         let sys = SystemConfig::baseline();
         let mut s = Scheduler::new(&sys);
-        let req = FftRequest { id: 1, n: 12, signals: vec![SoaVec::zeros(12)] };
-        assert!(s.execute(Batch { n: 12, requests: vec![req] }).is_err());
+        let req = FftRequest::new(1, 12, vec![SoaVec::zeros(12)]);
+        assert!(s
+            .execute(Batch { n: 12, kind: WorkloadKind::Batch1d, requests: vec![req] })
+            .is_err());
     }
 
     #[test]
     fn rejects_mismatched_sizes_in_batch() {
         let sys = SystemConfig::baseline();
         let mut s = Scheduler::new(&sys);
-        let req = FftRequest { id: 1, n: 32, signals: vec![SoaVec::zeros(64)] };
-        assert!(s.execute(Batch { n: 32, requests: vec![req] }).is_err());
+        let req = FftRequest { id: 1, kind: WorkloadKind::Batch1d, n: 32, signals: vec![SoaVec::zeros(64)] };
+        assert!(s
+            .execute(Batch { n: 32, kind: WorkloadKind::Batch1d, requests: vec![req] })
+            .is_err());
     }
 
     #[test]
     fn rejects_empty_batch() {
         let sys = SystemConfig::baseline();
         let mut s = Scheduler::new(&sys);
-        assert!(s.execute(Batch { n: 32, requests: vec![] }).is_err());
+        assert!(s
+            .execute(Batch { n: 32, kind: WorkloadKind::Batch1d, requests: vec![] })
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_mixed_kinds_and_odd_convolution_batches() {
+        let sys = SystemConfig::baseline();
+        let mut s = Scheduler::new(&sys);
+        // Kind mismatch between batch and request.
+        let req = FftRequest::random_kind(1, WorkloadKind::Fft2d, 64, 1, 3);
+        assert!(s
+            .execute(Batch { n: 64, kind: WorkloadKind::Batch1d, requests: vec![req] })
+            .is_err());
+        // Convolution request with an odd signal count (no (x, h) pair).
+        let req = FftRequest::random_kind(2, WorkloadKind::Convolution, 64, 3, 5);
+        assert!(s
+            .execute(Batch { n: 64, kind: WorkloadKind::Convolution, requests: vec![req] })
+            .is_err());
+    }
+
+    #[test]
+    fn serves_every_workload_kind_end_to_end() {
+        let sys = SystemConfig::baseline();
+        let mut s = Scheduler::new(&sys);
+        for kind in crate::workload::ALL_KINDS {
+            let n = 64usize;
+            let mult = kind.signal_multiple();
+            let req = FftRequest::random_kind(1, kind, n, 2 * mult, 11);
+            let rs = s
+                .execute(Batch { n, kind, requests: vec![req] })
+                .unwrap_or_else(|e| panic!("{kind}: {e}"));
+            assert_eq!(rs.len(), 1, "{kind}");
+            assert_eq!(rs[0].spectra.len(), 2, "{kind}");
+            assert!(rs[0].metrics.modeled_plan_ns > 0.0, "{kind}");
+        }
     }
 }

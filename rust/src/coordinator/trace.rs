@@ -15,6 +15,7 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::{Json, Rng};
+use crate::workload::{KindMix, WorkloadKind};
 
 /// Largest FFT size a trace entry may carry (the planner's sweep tops out at
 /// 2^27; 2^30 leaves generous headroom while rejecting nonsense).
@@ -23,10 +24,13 @@ pub const TRACE_MAX_N: usize = 1 << 30;
 /// Largest per-request signal count a trace entry may carry.
 pub const TRACE_MAX_BATCH: usize = 1 << 20;
 
-/// One trace record: a request arriving `at_us` after trace start.
+/// One trace record: a request arriving `at_us` after trace start, served
+/// as workload `kind` (batched 1D complex FFT unless the trace says
+/// otherwise — version-1 traces without a `kind` field stay readable).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEntry {
     pub at_us: f64,
+    pub kind: WorkloadKind,
     pub n: usize,
     pub batch: usize,
     pub seed: u64,
@@ -50,6 +54,7 @@ impl Trace {
                         .map(|e| {
                             Json::obj(vec![
                                 ("at_us", Json::num(e.at_us)),
+                                ("kind", Json::str(e.kind.name())),
                                 ("n", Json::num(e.n as f64)),
                                 ("batch", Json::num(e.batch as f64)),
                                 // u64 doesn't survive f64 JSON numbers — hex string.
@@ -76,6 +81,12 @@ impl Trace {
             let parse = || -> Result<TraceEntry> {
                 Ok(TraceEntry {
                     at_us: e.field("at_us")?.as_f64()?,
+                    // Absent in pre-workload traces: default to the paper's
+                    // core batched-1D kind.
+                    kind: match e.get("kind") {
+                        Some(k) => WorkloadKind::parse(k.as_str()?)?,
+                        None => WorkloadKind::Batch1d,
+                    },
                     n: e.field("n")?.as_usize()?,
                     batch: e.field("batch")?.as_usize()?,
                     seed: u64::from_str_radix(e.field("seed")?.as_str()?, 16)?,
@@ -97,6 +108,10 @@ impl Trace {
                 "trace entry {i}: batch={} must be in [1, 2^20]",
                 entry.batch
             );
+            entry
+                .kind
+                .validate_shape(entry.n, entry.batch)
+                .with_context(|| format!("trace entry {i}"))?;
             ensure!(
                 entry.at_us >= prev_at_us,
                 "trace entry {i}: arrival time {} goes backwards (previous entry at {})",
@@ -131,6 +146,7 @@ pub fn synthetic_trace(requests: usize, sizes: &[usize], mean_gap_us: f64, seed:
         t += rng.exp(mean_gap_us);
         entries.push(TraceEntry {
             at_us: t,
+            kind: WorkloadKind::Batch1d,
             n: *rng.choose(sizes),
             batch: rng.range(1, 5),
             seed: seed ^ (i as u64).wrapping_mul(0x2545F4914F6CDD1D),
@@ -307,14 +323,18 @@ impl SizeMix {
     }
 }
 
-/// An open-loop workload: arrival process × base rate × size mix. Batch
-/// sizes are uniform in `1..=max_batch` (matching [`synthetic_trace`]).
+/// An open-loop workload: arrival process × base rate × size mix × workload
+/// kind mix. Batch sizes are uniform in `1..=max_batch` request units
+/// (matching [`synthetic_trace`]); a unit is one signal, or one `(x, h)`
+/// pair for convolution.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
     pub arrival: Arrival,
     /// Base arrival rate, requests per second.
     pub rps: f64,
     pub mix: SizeMix,
+    /// Distribution over request kinds (all batched-1D by default).
+    pub kinds: KindMix,
     pub max_batch: usize,
 }
 
@@ -322,11 +342,18 @@ impl Workload {
     pub fn new(arrival: Arrival, rps: f64, mix: SizeMix) -> Result<Self> {
         arrival.validate()?;
         ensure!(rps.is_finite() && rps > 0.0, "workload rate {rps} req/s must be positive");
-        Ok(Self { arrival, rps, mix, max_batch: 4 })
+        Ok(Self { arrival, rps, mix, kinds: KindMix::single(WorkloadKind::Batch1d), max_batch: 4 })
+    }
+
+    /// Builder-style kind mix override (`cluster --workload-mix`).
+    pub fn with_kinds(mut self, kinds: KindMix) -> Self {
+        self.kinds = kinds;
+        self
     }
 
     /// Generate a reproducible trace of `requests` arrivals. Same seed ⇒
-    /// bit-identical trace.
+    /// bit-identical trace — and a single-kind mix draws nothing from the
+    /// RNG, so legacy batched-1D traces are unchanged by the kind dimension.
     pub fn generate(&self, requests: usize, seed: u64) -> Trace {
         let mut rng = Rng::new(seed);
         let mut t_us = 0.0f64;
@@ -336,10 +363,16 @@ impl Workload {
             // always positive and gaps stay finite.
             let rate_rps = self.rps * self.arrival.rate_multiplier(t_us);
             t_us += rng.exp(1e6 / rate_rps);
+            let kind = self.kinds.sample(&mut rng);
+            // The sampled size is clamped up to the kind's minimum (e.g. a
+            // 3D FFT needs at least 2×2×2 points).
+            let n = self.mix.sample(&mut rng).max(kind.min_n());
+            let batch = rng.range(1, self.max_batch + 1) * kind.signal_multiple();
             entries.push(TraceEntry {
                 at_us: t_us,
-                n: self.mix.sample(&mut rng),
-                batch: rng.range(1, self.max_batch + 1),
+                kind,
+                n,
+                batch,
                 seed: seed ^ (i as u64).wrapping_mul(0x2545F4914F6CDD1D),
             });
         }
@@ -509,6 +542,72 @@ mod tests {
         let frac = in_burst / t.entries.len() as f64;
         // 10% of the time carries ~50% of the load (factor 5).
         assert!(frac > 0.3, "burst fraction {frac}");
+    }
+
+    #[test]
+    fn kind_field_roundtrips_and_defaults() {
+        // Mixed-kind traces round-trip through JSON.
+        let mix = SizeMix::uniform(&[64, 4096]).unwrap();
+        let wl = Workload::new(Arrival::Poisson, 1_000_000.0, mix)
+            .unwrap()
+            .with_kinds(KindMix::uniform_all());
+        let t = wl.generate(200, 21);
+        assert_eq!(Trace::from_json(&t.to_json()).unwrap(), t);
+        let kinds: std::collections::BTreeSet<WorkloadKind> =
+            t.entries.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds.len(), 6, "uniform kind mix should emit every kind");
+        // Every entry respects its kind's shape rules.
+        for e in &t.entries {
+            e.kind.validate_shape(e.n, e.batch).unwrap();
+        }
+        // A version-1 trace without `kind` fields still parses as batch1d.
+        let legacy = Json::parse(
+            r#"{"version":1,"entries":[{"at_us":1.0,"n":32,"batch":2,"seed":"00000000000000aa"}]}"#,
+        )
+        .unwrap();
+        let parsed = Trace::from_json(&legacy).unwrap();
+        assert_eq!(parsed.entries[0].kind, WorkloadKind::Batch1d);
+    }
+
+    #[test]
+    fn single_kind_traces_unchanged_by_kind_dimension() {
+        // The default (batch1d-only) workload must generate the same trace
+        // whether or not the caller ever touches the kind mix.
+        let mix = SizeMix::uniform(&[32, 4096]).unwrap();
+        let a = Workload::new(Arrival::Poisson, 1_000_000.0, mix.clone())
+            .unwrap()
+            .generate(300, 7);
+        let b = Workload::new(Arrival::Poisson, 1_000_000.0, mix)
+            .unwrap()
+            .with_kinds(KindMix::single(WorkloadKind::Batch1d))
+            .generate(300, 7);
+        assert_eq!(a, b);
+        assert!(a.entries.iter().all(|e| e.kind == WorkloadKind::Batch1d));
+    }
+
+    #[test]
+    fn rejects_kind_shape_violations() {
+        let entry = |kind: &str, n: f64, batch: f64| {
+            Json::obj(vec![
+                ("entries", Json::arr(vec![Json::obj(vec![
+                    ("at_us", Json::num(1.0)),
+                    ("kind", Json::str(kind)),
+                    ("n", Json::num(n)),
+                    ("batch", Json::num(batch)),
+                    ("seed", Json::str("0000000000000001")),
+                ])])),
+                ("version", Json::num(1.0)),
+            ])
+        };
+        // 3D FFT of 4 points has no 2×2×2 grid.
+        let err = Trace::from_json(&entry("fft3d", 4.0, 1.0)).unwrap_err().to_string();
+        assert!(err.contains("entry 0"), "{err}");
+        // Convolution batches must come in pairs.
+        assert!(Trace::from_json(&entry("convolution", 64.0, 3.0)).is_err());
+        assert!(Trace::from_json(&entry("convolution", 64.0, 4.0)).is_ok());
+        // Unknown kinds are contextful errors.
+        let err = Trace::from_json(&entry("hologram", 64.0, 1.0)).unwrap_err().to_string();
+        assert!(err.contains("unknown workload kind"), "{err}");
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub fn fft2d_via_scheduler(sched: &mut Scheduler, img: &Image2d) -> Result<Image
         let signals: Vec<SoaVec> = (0..im.rows).map(|r| im.row(r)).collect();
         let batch = Batch {
             n: im.cols,
+            kind: crate::workload::WorkloadKind::Batch1d,
             requests: vec![FftRequest::new(id, im.cols, signals)],
         };
         let mut resp = sched.execute(batch)?;

@@ -49,7 +49,7 @@ mod tests {
             .iter()
             .enumerate()
             .filter(|(_, row)| row[0] == "10")
-            .map(|(i, _)| t.value(i, "bw_vs_babelstream"))
+            .map(|(i, _)| t.value(i, "bw_vs_babelstream").unwrap())
             .fold(0.0f64, f64::max);
         assert!(big_batch > 0.85, "2^10 large-batch utilization {big_batch}");
         let _ = r;
@@ -60,7 +60,7 @@ mod tests {
             .iter()
             .enumerate()
             .filter(|(_, row)| row[0] == "5" && row[1] == "25")
-            .map(|(i, _)| t.value(i, "bw_vs_babelstream"))
+            .map(|(i, _)| t.value(i, "bw_vs_babelstream").unwrap())
             .next()
             .unwrap();
         assert!(v55 > 0.6 && v55 <= 1.0, "2^5×2^25 utilization {v55}");

@@ -58,7 +58,7 @@ mod tests {
     fn boost_reaches_paper_peak() {
         // §3.2: up to ~12× for the 1024-bank exploration.
         let t = fig05_boost();
-        let max = t.column("boost").into_iter().fold(0.0f64, f64::max);
+        let max = t.column("boost").unwrap().into_iter().fold(0.0f64, f64::max);
         assert!(max >= 8.0 && max <= 17.0, "max boost {max}");
     }
 

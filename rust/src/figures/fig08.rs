@@ -40,10 +40,10 @@ mod tests {
         let mut small = f64::NAN;
         for (i, row) in t.rows.iter().enumerate() {
             if row[0] == "20" && row[1] == "8" {
-                large = t.value(i, "model_over_measured");
+                large = t.value(i, "model_over_measured").unwrap();
             }
             if row[0] == "5" && row[1] == "3" {
-                small = t.value(i, "model_over_measured");
+                small = t.value(i, "model_over_measured").unwrap();
             }
         }
         assert!(large > 0.8 && large <= 1.0, "{large}");

@@ -56,7 +56,7 @@ mod tests {
                 .iter()
                 .position(|r| r[0] == ls.to_string() && r[1] == "baseline")
                 .unwrap();
-            let g = t.value(i, "total_norm");
+            let g = t.value(i, "total_norm").unwrap();
             assert!(g > 1.0, "baseline must lose at 2^{ls}: {g}");
             gaps.push(g);
         }
@@ -67,7 +67,7 @@ mod tests {
     fn only_baseline_shifts() {
         let t = fig09_mapping(true).unwrap();
         for (i, row) in t.rows.iter().enumerate() {
-            let share = t.value(i, "shift_share");
+            let share = t.value(i, "shift_share").unwrap();
             if row[1] == "strided" {
                 assert_eq!(share, 0.0);
             }

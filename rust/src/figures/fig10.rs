@@ -34,7 +34,7 @@ mod tests {
     #[test]
     fn small_wins_large_loses_average_slowdown() {
         let t = fig10_pimbase(false).unwrap();
-        let s = t.column("speedup");
+        let s = t.column("speedup").unwrap();
         // 2^5 around parity (paper shows a small win there)…
         assert!(s[0] > 0.9, "2^5 speedup {}", s[0]);
         // …monotone-ish decline into clear slowdown…

@@ -53,13 +53,13 @@ mod tests {
     #[test]
     fn colab_recovers_parity_and_saves_movement() {
         let t = fig12_pimcolab(false).unwrap();
-        let speedups = t.column("speedup");
+        let speedups = t.column("speedup").unwrap();
         let max = speedups.iter().copied().fold(0.0f64, f64::max);
         // §5.2.1: max ≈ 1.07 in the paper; we land in the same band —
         // dramatically better than whole-offload's 0.2–0.5.
         assert!(max > 1.0 && max < 1.2, "pim-colab max {max}");
         for (i, _) in t.rows.iter().enumerate() {
-            assert!(t.value(i, "dm_savings") > 1.3, "row {i}");
+            assert!(t.value(i, "dm_savings").unwrap() > 1.3, "row {i}");
         }
     }
 }

@@ -44,13 +44,15 @@ mod tests {
         // §5.2.2: MADD commands are the majority of PIM execution time
         // (54% avg in the paper) and ~76% of commands.
         let t = fig13_breakdown(false).unwrap();
-        let madd = t.column("madd_share");
+        let madd = t.column("madd_share").unwrap();
         let avg = madd.iter().sum::<f64>() / madd.len() as f64;
         assert!(avg > 0.5, "avg MADD time share {avg}");
         for (i, _) in t.rows.iter().enumerate() {
-            let total = t.value(i, "madd_share") + t.value(i, "mov_share") + t.value(i, "rest_share");
+            let total = t.value(i, "madd_share").unwrap()
+                + t.value(i, "mov_share").unwrap()
+                + t.value(i, "rest_share").unwrap();
             assert!((total - 1.0).abs() < 3e-3); // cells are rounded to 3 decimals
-            assert!((t.value(i, "madd_ops_per_bfly") - 6.0).abs() < 1e-6);
+            assert!((t.value(i, "madd_ops_per_bfly").unwrap() - 6.0).abs() < 1e-6);
         }
     }
 }

@@ -57,7 +57,7 @@ mod tests {
                 .iter()
                 .position(|r| r[0] == ls.to_string() && r[1] == opt)
                 .unwrap();
-            t.value(i, col)
+            t.value(i, col).unwrap()
         };
         for ls in [5u32, 8, 10] {
             // §6.4.1 ordering: base < sw < hw < sw-hw (hw beats sw because
@@ -98,7 +98,7 @@ mod tests {
                 .iter()
                 .position(|r| r[0] == ls.to_string() && r[1] == "sw-opt")
                 .unwrap();
-            t.value(s, "speedup_vs_gpu") / t.value(b, "speedup_vs_gpu")
+            t.value(s, "speedup_vs_gpu").unwrap() / t.value(b, "speedup_vs_gpu").unwrap()
         };
         assert!(gain(5) > gain(10), "{} vs {}", gain(5), gain(10));
     }

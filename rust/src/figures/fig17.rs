@@ -20,7 +20,7 @@ pub fn fig17_pimacolaba(quick: bool) -> Result<Table> {
             t.row(vec![
                 row[0].clone(),
                 opt.name().into(),
-                format!("{:.4}", sub.value(i, "speedup")),
+                format!("{:.4}", sub.value(i, "speedup")?),
                 row[3].clone(),
             ]);
         }
@@ -42,7 +42,7 @@ mod tests {
                 .iter()
                 .enumerate()
                 .filter(|(_, r)| r[1] == opt)
-                .map(|(i, _)| t.value(i, "speedup"))
+                .map(|(i, _)| t.value(i, "speedup").unwrap())
                 .fold(0.0f64, f64::max)
         };
         let sw = max_of("sw-opt");

@@ -18,8 +18,8 @@ pub fn fig18_movement(quick: bool) -> Result<Table> {
     for (i, row) in sub.rows.iter().enumerate() {
         t.row(vec![
             row[0].clone(),
-            format!("{:.4}", sub.value(i, "dm_savings")),
-            format!("{:.3}", sub.value(i, "offload_frac")),
+            format!("{:.4}", sub.value(i, "dm_savings")?),
+            format!("{:.3}", sub.value(i, "offload_frac")?),
         ]);
     }
     Ok(t)
@@ -33,11 +33,11 @@ mod tests {
     fn savings_band_and_offload_average() {
         // §6.5: 1.48–2.76× savings (1.81 avg), ≈33% of butterflies on PIM.
         let t = fig18_movement(false).unwrap();
-        let savings = t.column("dm_savings");
+        let savings = t.column("dm_savings").unwrap();
         let avg = savings.iter().sum::<f64>() / savings.len() as f64;
         assert!(savings.iter().all(|&s| s > 1.3 && s < 3.0), "{savings:?}");
         assert!(avg > 1.4 && avg < 2.2, "avg savings {avg} (paper 1.81)");
-        let off = t.column("offload_frac");
+        let off = t.column("offload_frac").unwrap();
         let avg_off = off.iter().sum::<f64>() / off.len() as f64;
         assert!(avg_off > 0.2 && avg_off < 0.5, "avg offload {avg_off} (paper 0.33)");
     }

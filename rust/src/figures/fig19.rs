@@ -70,7 +70,7 @@ mod tests {
                 .iter()
                 .position(|r| r[0] == cfg && r[1] == ls.to_string())
                 .unwrap();
-            t.value(i, "vs_baseline_cfg")
+            t.value(i, "vs_baseline_cfg").unwrap()
         };
         // RF×2 helps the large (cross-row) tiles (paper: 6–22%).
         assert!(rel("rf32+hw", 10) > 1.02, "{}", rel("rf32+hw", 10));
@@ -90,7 +90,7 @@ mod tests {
         let t = fig19_sensitivity(false).unwrap();
         let max_of = |cfg: &str| {
             let i = t.rows.iter().position(|r| r[0] == cfg && r[1] == "0").unwrap();
-            t.value(i, "speedup_vs_gpu")
+            t.value(i, "speedup_vs_gpu").unwrap()
         };
         assert!(max_of("pim-per-bank+hw") > max_of("baseline+hw") * 1.1);
     }

@@ -32,15 +32,28 @@ impl Table {
     }
 
     /// Value of column `col` in row `r`, parsed as f64 (figure tests).
-    pub fn value(&self, r: usize, col: &str) -> f64 {
-        let c = self.headers.iter().position(|h| h == col).unwrap_or_else(|| {
-            panic!("no column '{col}' in {}", self.name)
-        });
-        self.rows[r][c].parse().unwrap_or(f64::NAN)
+    /// Unknown columns, out-of-range rows, and non-numeric cells are
+    /// contextful errors naming the table, not panics or silent NaNs.
+    pub fn value(&self, r: usize, col: &str) -> Result<f64> {
+        let c = self.headers.iter().position(|h| h == col).with_context(|| {
+            format!(
+                "no column '{col}' in table '{}' (headers: {})",
+                self.name,
+                self.headers.join(", ")
+            )
+        })?;
+        let row = self
+            .rows
+            .get(r)
+            .with_context(|| format!("row {r} out of range in table '{}' ({} rows)", self.name, self.rows.len()))?;
+        let cell = &row[c];
+        cell.parse().with_context(|| {
+            format!("cell ({r}, '{col}') in table '{}' is not a number: '{cell}'", self.name)
+        })
     }
 
     /// All values of a column.
-    pub fn column(&self, col: &str) -> Vec<f64> {
+    pub fn column(&self, col: &str) -> Result<Vec<f64>> {
         (0..self.rows.len()).map(|r| self.value(r, col)).collect()
     }
 
@@ -96,8 +109,31 @@ mod tests {
         let mut t = Table::new("t", "T", &["n", "x"]);
         t.row(vec!["32".into(), "1.5".into()]);
         t.row(vec!["64".into(), "2.5".into()]);
-        assert_eq!(t.value(1, "x"), 2.5);
+        assert_eq!(t.value(1, "x").unwrap(), 2.5);
         assert_eq!(t.lookup("n", "64"), Some(1));
-        assert_eq!(t.column("x"), vec![1.5, 2.5]);
+        assert_eq!(t.column("x").unwrap(), vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn missing_column_is_a_contextful_error_not_a_panic() {
+        // Regression: this used to be `panic!("no column ...")`, which tore
+        // down the whole figure run instead of reporting which table and
+        // which headers were in play.
+        let mut t = Table::new("fig99_missing", "T", &["n", "x"]);
+        t.row(vec!["32".into(), "1.5".into()]);
+        let err = t.value(0, "speedup").unwrap_err().to_string();
+        assert!(err.contains("no column 'speedup'"), "{err}");
+        assert!(err.contains("fig99_missing"), "{err}");
+        assert!(err.contains("n, x"), "{err}");
+        let err = t.column("speedup").unwrap_err().to_string();
+        assert!(err.contains("no column 'speedup'"), "{err}");
+        // Out-of-range rows are errors too.
+        let err = t.value(7, "x").unwrap_err().to_string();
+        assert!(err.contains("row 7 out of range"), "{err}");
+        // Non-numeric cells are contextful errors, not silent NaNs.
+        let mut t = Table::new("fig99_text", "T", &["n", "opt"]);
+        t.row(vec!["32".into(), "sw-opt".into()]);
+        let err = t.value(0, "opt").unwrap_err().to_string();
+        assert!(err.contains("not a number") && err.contains("sw-opt"), "{err}");
     }
 }

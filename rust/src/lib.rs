@@ -41,6 +41,15 @@
 //!   log-bucketed latency percentiles ([`metrics::LogHistogram`]),
 //!   per-shard utilization, and per-substrate data movement, and are
 //!   emitted as JSON artifacts by the `cluster` CLI subcommand.
+//! * [`workload`] — multi-workload serving (§7.1): [`workload::WorkloadKind`]
+//!   (batched 1D / 2D / 3D / real / circular convolution / STFT) decomposes
+//!   every request kind into the batched 1D FFT passes the engine plans and
+//!   executes ([`backend::FftEngine::plan_workload`] /
+//!   [`backend::FftEngine::run_workload`]), with transposes, pack/unpack,
+//!   and pointwise products priced as data movement;
+//!   [`workload::KindMix`] drives mixed-kind traffic through the trace
+//!   generator and the cluster simulator (`cluster --workload-mix`, and the
+//!   per-kind `workload` CLI report).
 //! * [`planner`] — collaborative decomposition (§5.1): plan selection via
 //!   the offline tile-efficiency table; its cost evaluation is built from
 //!   the same providers the backends use.
@@ -78,6 +87,7 @@ pub mod planner;
 pub mod routines;
 pub mod runtime;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide result type (anyhow-backed).
 pub type Result<T> = anyhow::Result<T>;

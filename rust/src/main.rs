@@ -32,11 +32,12 @@ use pimacolaba::fft::SoaVec;
 use pimacolaba::figures;
 use pimacolaba::pim::TimingSink;
 use pimacolaba::pimc::{Pass, PassConfig};
-use pimacolaba::planner::TileModel;
+use pimacolaba::planner::{PlanKind, TileModel};
 use pimacolaba::routines::{emit_strided, RoutineStats};
 use pimacolaba::runtime::Registry;
 use pimacolaba::util::cli::Args;
 use pimacolaba::util::{Json, Rng};
+use pimacolaba::workload::KindMix;
 
 const USAGE: &str = "\
 usage: pimacolaba <subcommand> [options]
@@ -57,8 +58,15 @@ subcommands:
             [--requests N] [--sizes a,b,..]  binary-search the minimal shard count
             [--mix PROFILE] [--window S]     meeting the p99 target. Writes a JSON
             [--wait-us W] [--slo-us T]       report artifact to --out.
-            [--max-shards M] [--seed S]
-            [--out FILE] [--opt L] [--variant NAME]
+            [--max-shards M] [--seed S]      --workload-mix routes mixed request
+            [--out FILE] [--opt L]           kinds through the shards.
+            [--variant NAME] [--workload-mix SPEC]
+  workload  [--n N] [--batch B] [--kinds SPEC] per-kind serving report: decompose
+            [--requests R] [--rps R]         each workload kind into its 1D FFT
+            [--shards K] [--seed S]          passes (substrate split per pass),
+            [--out FILE] [--opt L]           smoke-run it numerically, and measure
+            [--variant NAME]                 latency percentiles on a cluster sim.
+                                             Writes a JSON report artifact to --out.
   trace     [--out FILE] [--requests R]      emit a reproducible workload trace
             [--sizes a,b,..] [--gap-us G] [--seed S]
   artifacts [--dir DIR]                      list the AOT artifact manifest
@@ -71,7 +79,9 @@ passes:     pairfuse | twiddle | maddsub | movelim | rowsched (and presets above
 variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024
 routers:    round-robin | size-affinity | least-loaded
 arrivals:   poisson | burst | diurnal
-mixes:      uniform | small-heavy | large-heavy | bimodal";
+mixes:      uniform | small-heavy | large-heavy | bimodal
+kinds:      batch1d | fft2d | fft3d | real | convolution | stft — a workload-mix
+            SPEC is 'all', one kind, or a comma list of kind[:weight] terms";
 
 /// The pass set a subcommand runs with: `--passes SPEC` wins, else the
 /// `--opt` preset (default sw-hw-opt). Both branches share
@@ -108,6 +118,7 @@ fn main() -> Result<()> {
         Some("passes") => cmd_passes(&args),
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("workload") => cmd_workload(&args),
         Some("trace") => cmd_trace(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("config") => cmd_config(&args),
@@ -380,7 +391,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
     let out = args.get_or("out", "cluster_report.json");
 
-    let workload = Workload::new(arrival, rps, mix)?;
+    let kinds = KindMix::parse(args.get_or("workload-mix", "batch1d"))?;
+    let workload = Workload::new(arrival, rps, mix)?.with_kinds(kinds);
     let trace = workload.generate(requests, seed);
     let mut cfg = ClusterConfig::new(sys, passes);
     cfg.shards = args.get_usize("shards", 8)?;
@@ -394,12 +406,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     cfg.max_wait_us = args.get_f64("wait-us", 50.0)?;
 
     println!(
-        "cluster: {} requests, {} arrivals at {:.0} req/s over sizes {:?} ({} mix), seed {}",
+        "cluster: {} requests, {} arrivals at {:.0} req/s over sizes {:?} ({} mix, {} kinds), \
+         seed {}",
         requests,
         arrival.name(),
         rps,
         sizes,
         args.get_or("mix", "uniform"),
+        args.get_or("workload-mix", "batch1d"),
         seed
     );
 
@@ -436,6 +450,149 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         report.to_json()
     };
     std::fs::write(out, json.to_string()).with_context(|| format!("writing report {out}"))?;
+    println!("wrote JSON report to {out}");
+    Ok(())
+}
+
+/// Per-kind serving report: decompose every requested workload kind into
+/// its batched 1D FFT passes (with the substrate split the §5.1 planner
+/// chose per pass), smoke-run it numerically at a small shape, and measure
+/// end-to-end latency percentiles on a single-kind cluster simulation.
+/// Writes a JSON report artifact.
+fn cmd_workload(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 1 << 14)?;
+    let batch = args.get_usize("batch", 64)?;
+    let requests = args.get_usize("requests", 20_000)?;
+    let rps = args.get_f64("rps", 500_000.0)?;
+    let shards = args.get_usize("shards", 4)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let passes = parse_passes(args)?;
+    let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
+    let out = args.get_or("out", "workload_report.json");
+    let kinds = KindMix::parse(args.get_or("kinds", "all"))?;
+
+    let mut engine = FftEngine::builder().system(&sys).passes(passes).build();
+    let mut rng = Rng::new(seed);
+    let mut kinds_json = Vec::new();
+    println!(
+        "{:<12} {:>9} {:>6} {:>7} {:>12} {:>12} {:>8} {:>10} {:>10} {:>10}",
+        "kind", "n", "batch", "passes", "gpu-only µs", "plan µs", "speedup", "p50 µs", "p99 µs",
+        "thr req/s"
+    );
+    // The report covers each kind once: weights in the spec only matter for
+    // traffic mixing (`cluster --workload-mix`), and duplicates would just
+    // repeat entries.
+    let mut seen = std::collections::BTreeSet::new();
+    let kind_list: Vec<_> = kinds.kinds().into_iter().filter(|&k| seen.insert(k)).collect();
+    for kind in kind_list {
+        let mult = kind.signal_multiple();
+        let kn = n.max(kind.min_n());
+        let kb = (batch.max(1) + mult - 1) / mult * mult;
+        let ev = engine.plan_workload(kind, kn, kb)?;
+
+        // Numeric smoke run at a small shape: proves the end-to-end path,
+        // not just the cost model.
+        let small_n = kn.min(1 << 10).max(kind.min_n());
+        let signals: Vec<SoaVec> =
+            (0..2 * mult).map(|_| SoaVec::random(small_n, rng.next_u64())).collect();
+        let smoke = engine.run_workload(kind, small_n, &signals)?;
+
+        // Latency percentiles: a single-kind open-loop cluster simulation.
+        let workload = Workload::new(Arrival::Poisson, rps, SizeMix::uniform(&[kn])?)?
+            .with_kinds(KindMix::single(kind));
+        let trace = workload.generate(requests, seed);
+        let mut cfg = ClusterConfig::new(sys.clone(), passes);
+        cfg.shards = shards;
+        cfg.router = RouterKind::LeastLoaded; // single shape: spread the load
+        let rep = run_cluster(&trace, &cfg)?;
+
+        println!(
+            "{:<12} {:>9} {:>6} {:>7} {:>12.1} {:>12.1} {:>8.3} {:>10.1} {:>10.1} {:>10.0}",
+            kind.name(),
+            kn,
+            kb,
+            ev.passes.len(),
+            ev.gpu_only_ns / 1e3,
+            ev.plan_ns / 1e3,
+            ev.speedup(),
+            rep.latency_p_us(50.0),
+            rep.latency_p_us(99.0),
+            rep.throughput_rps(),
+        );
+        let passes_json: Vec<Json> = ev
+            .passes
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("label", Json::str(p.label)),
+                    ("fft_n", Json::num(p.fft_n as f64)),
+                    ("ffts", Json::num(p.ffts as f64)),
+                    (
+                        "plan",
+                        Json::str(match p.plan.kind {
+                            PlanKind::GpuOnly => "gpu-only".to_string(),
+                            PlanKind::Collaborative { m1, m2 } => {
+                                format!("gpu(m1={m1})+pim(m2={m2})")
+                            }
+                        }),
+                    ),
+                    ("offload_fraction", Json::num(p.eval.offload_fraction)),
+                    ("modeled_us", Json::num((p.eval.plan_ns + p.shuffle_ns) / 1e3)),
+                    ("gpu_mb", Json::num(p.eval.movement_plan.gpu_bytes / 1e6)),
+                    ("pim_cmd_mb", Json::num(p.eval.movement_plan.pim_cmd_bytes / 1e6)),
+                    ("shuffle_mb", Json::num(p.shuffle_bytes / 1e6)),
+                ])
+            })
+            .collect();
+        kinds_json.push(Json::obj(vec![
+            ("kind", Json::str(kind.name())),
+            ("n", Json::num(kn as f64)),
+            ("batch", Json::num(kb as f64)),
+            ("passes", Json::arr(passes_json)),
+            (
+                "modeled",
+                Json::obj(vec![
+                    ("gpu_only_us", Json::num(ev.gpu_only_ns / 1e3)),
+                    ("plan_us", Json::num(ev.plan_ns / 1e3)),
+                    ("speedup", Json::num(ev.speedup())),
+                    ("movement_savings", Json::num(ev.movement_savings())),
+                ]),
+            ),
+            (
+                "movement",
+                Json::obj(vec![
+                    ("gpu_mb", Json::num(ev.movement_plan.gpu_bytes / 1e6)),
+                    ("pim_cmd_mb", Json::num(ev.movement_plan.pim_cmd_bytes / 1e6)),
+                    ("base_gpu_mb", Json::num(ev.movement_base.gpu_bytes / 1e6)),
+                ]),
+            ),
+            (
+                "smoke",
+                Json::obj(vec![
+                    ("n", Json::num(small_n as f64)),
+                    ("signals", Json::num(signals.len() as f64)),
+                    ("outputs", Json::num(smoke.outputs.len() as f64)),
+                ]),
+            ),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", Json::num(rep.latency_p_us(50.0))),
+                    ("p95", Json::num(rep.latency_p_us(95.0))),
+                    ("p99", Json::num(rep.latency_p_us(99.0))),
+                    ("p999", Json::num(rep.latency_p_us(99.9))),
+                ]),
+            ),
+            ("throughput_rps", Json::num(rep.throughput_rps())),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("system", Json::str(sys.name.clone())),
+        ("subject", Json::str("per-kind multi-workload serving report")),
+        ("kinds", Json::arr(kinds_json)),
+    ]);
+    std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;
     println!("wrote JSON report to {out}");
     Ok(())
 }

@@ -1,0 +1,460 @@
+//! First-class multi-workload serving (paper §7.1 "Applicability of
+//! Pimacolaba"): every request names a [`WorkloadKind`], and every kind is
+//! decomposed into the batched 1D complex FFT passes the engine already
+//! plans, costs, and executes.
+//!
+//! The paper argues the collaborative GPU+PIM mapping extends beyond batched
+//! 1D complex FFTs — to higher-dimension FFTs ("multiple batched FFT
+//! computations" per dimension) and real FFTs ("packing real inputs into
+//! complex input with half the size"). This module is that argument made
+//! executable: [`WorkloadKind::passes`] emits the per-kind decomposition as
+//! a list of [`WorkloadPass`]es (a 1D FFT shape plus the host/GPU shuffle
+//! traffic — transposes, pack/unpack, pointwise products — priced as data
+//! movement), and `backend::FftEngine::plan_workload` runs each pass through
+//! the §5.1 planner so every dimension independently rides a collaborative
+//! GPU+PIM plan.
+//!
+//! Decompositions (per request signal; convolution works on signal *pairs*):
+//!
+//! | kind          | passes |
+//! |---------------|--------|
+//! | `batch1d`     | one size-`n` FFT |
+//! | `fft2d`       | `r` row FFTs of size `c`, transpose, `c` column FFTs of size `r` (`n = r·c`) |
+//! | `fft3d`       | one batched pass per axis of the balanced `d0·d1·d2 = n` grid, with gather/scatter between axes |
+//! | `real`        | pack into `n/2` complex points, one FFT, O(n) Hermitian unpack |
+//! | `convolution` | forward FFTs of the pair, pointwise product, inverse FFT (conjugation trick) |
+//! | `stft`        | hop-windowed frames of the signal as one batched FFT of the window size |
+//!
+//! [`KindMix`] is the workload-kind analog of `coordinator::SizeMix`: a
+//! weighted distribution over kinds the trace generator samples, so the
+//! cluster simulator's capacity answers hold for realistic mixed-workload
+//! traffic (`cluster --workload-mix`).
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::fft::{is_pow2, log2};
+use crate::util::Rng;
+
+/// Bytes of one complex SoA element (two `f32` components).
+const COMPLEX_BYTES: f64 = 8.0;
+
+/// The request kinds the engine serves end-to-end. Every kind reduces to
+/// batched 1D complex FFT passes (see the module docs for the table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum WorkloadKind {
+    /// Batched 1D complex FFTs — the paper's core workload.
+    Batch1d,
+    /// 2D FFT of a balanced `r × c` image (`n = r·c` total points).
+    Fft2d,
+    /// 3D FFT of a balanced `d0 × d1 × d2` volume (`n` total points).
+    Fft3d,
+    /// Real-input FFT of `n` samples via the §7.1 packing trick; the output
+    /// is the `n/2 + 1` non-redundant spectrum bins.
+    Real,
+    /// Circular convolution of signal pairs `(x, h)` by the convolution
+    /// theorem: forward FFTs, pointwise product, inverse FFT.
+    Convolution,
+    /// STFT spectrogram: hop-windowed frames of the signal, transformed as
+    /// one batched FFT of the window size.
+    Stft,
+}
+
+/// Every kind, in the canonical (CLI/report) order.
+pub const ALL_KINDS: [WorkloadKind; 6] = [
+    WorkloadKind::Batch1d,
+    WorkloadKind::Fft2d,
+    WorkloadKind::Fft3d,
+    WorkloadKind::Real,
+    WorkloadKind::Convolution,
+    WorkloadKind::Stft,
+];
+
+/// One batched-1D-FFT pass of a decomposed workload, per request unit (a
+/// signal, or a signal pair for convolution). The engine multiplies
+/// `ffts_per_unit` by the unit count of the batch it prices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadPass {
+    /// Stable pass label for reports ("rows", "axis1", "inverse", ...).
+    pub label: &'static str,
+    /// 1D FFT size of this pass (a power of two ≥ 2).
+    pub fft_n: usize,
+    /// Independent FFTs this pass runs per request unit.
+    pub ffts_per_unit: usize,
+    /// Bytes the host/GPU shuffles around this pass per request unit —
+    /// transposes, axis gathers, pack/unpack, pointwise products — priced at
+    /// BabelStream bandwidth and charged as GPU data movement.
+    pub shuffle_bytes_per_unit: f64,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Result<WorkloadKind> {
+        Ok(match s {
+            "batch1d" | "1d" => WorkloadKind::Batch1d,
+            "fft2d" | "2d" => WorkloadKind::Fft2d,
+            "fft3d" | "3d" => WorkloadKind::Fft3d,
+            "real" | "rfft" => WorkloadKind::Real,
+            "convolution" | "conv" => WorkloadKind::Convolution,
+            "stft" | "spectrogram" => WorkloadKind::Stft,
+            other => bail!(
+                "unknown workload kind '{other}' (batch1d|fft2d|fft3d|real|convolution|stft)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Batch1d => "batch1d",
+            WorkloadKind::Fft2d => "fft2d",
+            WorkloadKind::Fft3d => "fft3d",
+            WorkloadKind::Real => "real",
+            WorkloadKind::Convolution => "convolution",
+            WorkloadKind::Stft => "stft",
+        }
+    }
+
+    /// Smallest valid `n`: every factor of the decomposition must itself be
+    /// a power-of-two FFT size ≥ 2 (and the packed real signal ≥ 2 points).
+    pub fn min_n(self) -> usize {
+        match self {
+            WorkloadKind::Batch1d | WorkloadKind::Convolution | WorkloadKind::Stft => 2,
+            WorkloadKind::Fft2d | WorkloadKind::Real => 4,
+            WorkloadKind::Fft3d => 8,
+        }
+    }
+
+    /// Signals per request unit: convolution consumes `(x, h)` pairs, so its
+    /// batches must carry an even signal count. Every other kind is 1:1.
+    pub fn signal_multiple(self) -> usize {
+        match self {
+            WorkloadKind::Convolution => 2,
+            _ => 1,
+        }
+    }
+
+    /// Validate a `(n, batch)` shape for this kind, with contextful errors.
+    pub fn validate_shape(self, n: usize, batch: usize) -> Result<()> {
+        ensure!(
+            is_pow2(n) && n >= self.min_n(),
+            "{} workload size n={n} must be a power of two >= {}",
+            self.name(),
+            self.min_n()
+        );
+        ensure!(batch > 0, "{} workload batch must be positive", self.name());
+        let mult = self.signal_multiple();
+        ensure!(
+            batch % mult == 0,
+            "{} workload batch={batch} must be a multiple of {mult} (signals come in pairs)",
+            self.name()
+        );
+        Ok(())
+    }
+
+    /// Decompose a size-`n` workload of this kind into batched 1D FFT
+    /// passes. Fails on invalid `n` (see [`WorkloadKind::min_n`]).
+    pub fn passes(self, n: usize) -> Result<Vec<WorkloadPass>> {
+        self.validate_shape(n, self.signal_multiple())?;
+        let nf = n as f64;
+        Ok(match self {
+            WorkloadKind::Batch1d => vec![WorkloadPass {
+                label: "fft",
+                fft_n: n,
+                ffts_per_unit: 1,
+                shuffle_bytes_per_unit: 0.0,
+            }],
+            WorkloadKind::Fft2d => {
+                let (r, c) = factors2d(n);
+                vec![
+                    WorkloadPass {
+                        label: "rows",
+                        fft_n: c,
+                        ffts_per_unit: r,
+                        shuffle_bytes_per_unit: 0.0,
+                    },
+                    WorkloadPass {
+                        label: "cols",
+                        fft_n: r,
+                        ffts_per_unit: c,
+                        // Transpose in + transpose back out, each a full
+                        // read+write of the image.
+                        shuffle_bytes_per_unit: 4.0 * COMPLEX_BYTES * nf,
+                    },
+                ]
+            }
+            WorkloadKind::Fft3d => {
+                let (d0, d1, d2) = factors3d(n);
+                // Same convention as the fft2d cols pass: a strided axis
+                // costs a gather in plus a scatter out, each a full
+                // read+write of the volume; the contiguous axis2 pass (like
+                // the fft2d rows pass) shuffles nothing.
+                let gather_scatter = 4.0 * COMPLEX_BYTES * nf;
+                vec![
+                    WorkloadPass {
+                        label: "axis2",
+                        fft_n: d2,
+                        ffts_per_unit: d0 * d1,
+                        shuffle_bytes_per_unit: 0.0,
+                    },
+                    WorkloadPass {
+                        label: "axis1",
+                        fft_n: d1,
+                        ffts_per_unit: d0 * d2,
+                        shuffle_bytes_per_unit: gather_scatter,
+                    },
+                    WorkloadPass {
+                        label: "axis0",
+                        fft_n: d0,
+                        ffts_per_unit: d1 * d2,
+                        shuffle_bytes_per_unit: gather_scatter,
+                    },
+                ]
+            }
+            WorkloadKind::Real => vec![WorkloadPass {
+                label: "half-complex",
+                fft_n: n / 2,
+                ffts_per_unit: 1,
+                // Pack reads n real f32s and writes n/2 complex points; the
+                // Hermitian unpack reads the n/2-point spectrum back and
+                // writes n/2+1 bins.
+                shuffle_bytes_per_unit: 4.0 * nf
+                    + 2.0 * COMPLEX_BYTES * (n / 2) as f64
+                    + COMPLEX_BYTES * (n / 2 + 1) as f64,
+            }],
+            WorkloadKind::Convolution => vec![
+                WorkloadPass {
+                    label: "forward",
+                    fft_n: n,
+                    ffts_per_unit: 2,
+                    shuffle_bytes_per_unit: 0.0,
+                },
+                WorkloadPass {
+                    label: "inverse",
+                    fft_n: n,
+                    ffts_per_unit: 1,
+                    // Pointwise product: read both spectra, write one.
+                    shuffle_bytes_per_unit: 3.0 * COMPLEX_BYTES * nf,
+                },
+            ],
+            WorkloadKind::Stft => {
+                let (w, _hop, frames) = stft_shape(n);
+                vec![WorkloadPass {
+                    label: "frames",
+                    fft_n: w,
+                    ffts_per_unit: frames,
+                    // Frame gather: read + write every (overlapping) frame.
+                    shuffle_bytes_per_unit: 2.0 * COMPLEX_BYTES * (frames * w) as f64,
+                }]
+            }
+        })
+    }
+}
+
+impl fmt::Display for WorkloadKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Balanced 2D factorization of `n`: `(rows, cols)` with `rows ≤ cols` and
+/// `rows·cols = n`, both powers of two.
+pub fn factors2d(n: usize) -> (usize, usize) {
+    debug_assert!(is_pow2(n) && n >= 4);
+    let r = 1usize << (log2(n) / 2);
+    (r, n / r)
+}
+
+/// Balanced 3D factorization of `n`: `(d0, d1, d2)` ascending-ish powers of
+/// two multiplying to `n` (each ≥ 2 for `n ≥ 8`).
+pub fn factors3d(n: usize) -> (usize, usize, usize) {
+    debug_assert!(is_pow2(n) && n >= 8);
+    let lg = log2(n);
+    let a = lg / 3;
+    let b = (lg - a) / 2;
+    let c = lg - a - b;
+    (1usize << a, 1usize << b, 1usize << c)
+}
+
+/// STFT framing for a length-`n` signal: `(window, hop, frames)` with a
+/// power-of-two window of at most 256 points and 50% overlap.
+pub fn stft_shape(n: usize) -> (usize, usize, usize) {
+    debug_assert!(is_pow2(n) && n >= 2);
+    let w = 1usize << log2(n).min(8);
+    let hop = (w / 2).max(1);
+    (w, hop, (n - w) / hop + 1)
+}
+
+/// Probability weights over [`WorkloadKind`]s — the kind analog of
+/// `coordinator::SizeMix`. A single-kind mix never consumes randomness, so
+/// legacy single-kind traces stay bit-identical per seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindMix {
+    weights: Vec<(WorkloadKind, f64)>,
+}
+
+impl KindMix {
+    /// Explicit weights (need not be normalized).
+    pub fn new(weights: Vec<(WorkloadKind, f64)>) -> Result<Self> {
+        ensure!(!weights.is_empty(), "kind mix needs at least one workload kind");
+        for &(k, w) in &weights {
+            ensure!(w.is_finite() && w > 0.0, "kind mix: weight {w} for {k} must be positive");
+        }
+        Ok(Self { weights })
+    }
+
+    /// All probability mass on one kind.
+    pub fn single(kind: WorkloadKind) -> Self {
+        Self { weights: vec![(kind, 1.0)] }
+    }
+
+    /// Equal weight on all six kinds.
+    pub fn uniform_all() -> Self {
+        Self { weights: ALL_KINDS.iter().map(|&k| (k, 1.0)).collect() }
+    }
+
+    /// Parse a CLI mix spec: a single kind name, `all` (uniform over every
+    /// kind), or a comma list of `kind` / `kind:weight` terms, e.g.
+    /// `batch1d:3,fft2d,stft:0.5`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        if spec == "all" {
+            return Ok(Self::uniform_all());
+        }
+        let mut weights = Vec::new();
+        for term in spec.split(',') {
+            let term = term.trim();
+            let (name, w) = match term.split_once(':') {
+                Some((name, w)) => {
+                    let w: f64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad weight '{w}' in kind mix '{spec}'"))?;
+                    (name.trim(), w)
+                }
+                None => (term, 1.0),
+            };
+            weights.push((WorkloadKind::parse(name)?, w));
+        }
+        Self::new(weights)
+    }
+
+    /// The kinds this mix can emit, in spec order.
+    pub fn kinds(&self) -> Vec<WorkloadKind> {
+        self.weights.iter().map(|&(k, _)| k).collect()
+    }
+
+    /// Draw one kind. A single-entry mix returns it without touching the
+    /// RNG, so adding the kind dimension never perturbs legacy traces.
+    pub fn sample(&self, rng: &mut Rng) -> WorkloadKind {
+        if self.weights.len() == 1 {
+            return self.weights[0].0;
+        }
+        let total: f64 = self.weights.iter().map(|&(_, w)| w).sum();
+        let mut r = rng.f64() * total;
+        for &(k, w) in &self.weights {
+            if r < w {
+                return k;
+            }
+            r -= w;
+        }
+        self.weights.last().unwrap().0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for k in ALL_KINDS {
+            assert_eq!(WorkloadKind::parse(k.name()).unwrap(), k);
+            assert_eq!(k.to_string(), k.name());
+        }
+        assert_eq!(WorkloadKind::parse("conv").unwrap(), WorkloadKind::Convolution);
+        assert!(WorkloadKind::parse("hologram").is_err());
+    }
+
+    #[test]
+    fn factorizations_multiply_back() {
+        for lg in 2..=20 {
+            let n = 1usize << lg;
+            let (r, c) = factors2d(n);
+            assert_eq!(r * c, n);
+            assert!(r <= c && r >= 2, "n={n}: ({r}, {c})");
+            if lg >= 3 {
+                let (d0, d1, d2) = factors3d(n);
+                assert_eq!(d0 * d1 * d2, n);
+                assert!(d0 >= 2 && d1 >= 2 && d2 >= 2, "n={n}: ({d0}, {d1}, {d2})");
+            }
+        }
+    }
+
+    #[test]
+    fn stft_frames_tile_the_signal() {
+        for lg in 1..=16 {
+            let n = 1usize << lg;
+            let (w, hop, frames) = stft_shape(n);
+            assert!(is_pow2(w) && w <= 256 && w <= n);
+            // The last frame ends exactly at the signal end.
+            assert_eq!((frames - 1) * hop + w, n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn passes_cover_every_point() {
+        // Each pass transforms n points in total (fft_n × ffts) except the
+        // real pack (half size) and STFT (overlapping frames).
+        for k in [WorkloadKind::Batch1d, WorkloadKind::Fft2d, WorkloadKind::Fft3d] {
+            for lg in 3..=16 {
+                let n = 1usize << lg;
+                for p in k.passes(n).unwrap() {
+                    assert_eq!(p.fft_n * p.ffts_per_unit, n, "{k} n={n} pass {}", p.label);
+                }
+            }
+        }
+        let conv = WorkloadKind::Convolution.passes(64).unwrap();
+        assert_eq!(conv.len(), 2);
+        assert_eq!(conv[0].ffts_per_unit, 2); // the (x, h) pair
+        let real = WorkloadKind::Real.passes(64).unwrap();
+        assert_eq!(real[0].fft_n, 32);
+    }
+
+    #[test]
+    fn min_sizes_are_enforced() {
+        assert!(WorkloadKind::Fft3d.passes(4).is_err());
+        assert!(WorkloadKind::Real.passes(2).is_err());
+        assert!(WorkloadKind::Fft2d.passes(2).is_err());
+        assert!(WorkloadKind::Batch1d.passes(24).is_err());
+        assert!(WorkloadKind::Convolution.validate_shape(64, 3).is_err());
+        assert!(WorkloadKind::Convolution.validate_shape(64, 4).is_ok());
+        assert!(WorkloadKind::Stft.validate_shape(64, 0).is_err());
+    }
+
+    #[test]
+    fn kind_mix_parses_and_samples() {
+        let mut rng = Rng::new(3);
+        let all = KindMix::parse("all").unwrap();
+        assert_eq!(all.kinds().len(), 6);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..400 {
+            seen.insert(all.sample(&mut rng));
+        }
+        assert_eq!(seen.len(), 6, "uniform mix should hit every kind");
+
+        let weighted = KindMix::parse("batch1d:3,stft").unwrap();
+        assert_eq!(weighted.kinds(), vec![WorkloadKind::Batch1d, WorkloadKind::Stft]);
+        assert!(KindMix::parse("").is_err());
+        assert!(KindMix::parse("batch1d:-1").is_err());
+        assert!(KindMix::parse("batch1d:x").is_err());
+    }
+
+    #[test]
+    fn single_kind_mix_consumes_no_randomness() {
+        let single = KindMix::single(WorkloadKind::Stft);
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        assert_eq!(single.sample(&mut a), WorkloadKind::Stft);
+        // `a` was not advanced: both streams continue identically.
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}

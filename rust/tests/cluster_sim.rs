@@ -4,11 +4,21 @@
 
 use pimacolaba::cluster::{plan_capacity, run_cluster, ClusterConfig, RouterKind};
 use pimacolaba::coordinator::{Arrival, SizeMix, Trace, Workload};
+use pimacolaba::workload::{KindMix, ALL_KINDS};
 
 fn mixed_trace(requests: usize, rps: f64, seed: u64) -> Trace {
     let sizes = [32usize, 64, 256, 1024, 2048, 4096, 8192, 16384];
     Workload::new(Arrival::Poisson, rps, SizeMix::uniform(&sizes).unwrap())
         .unwrap()
+        .generate(requests, seed)
+}
+
+/// A trace mixing all six workload kinds over a mixed size profile.
+fn mixed_kind_trace(requests: usize, rps: f64, seed: u64) -> Trace {
+    let sizes = [64usize, 256, 1024, 4096, 16384];
+    Workload::new(Arrival::Poisson, rps, SizeMix::uniform(&sizes).unwrap())
+        .unwrap()
+        .with_kinds(KindMix::uniform_all())
         .generate(requests, seed)
 }
 
@@ -72,6 +82,69 @@ fn capacity_plan_is_consistent_with_direct_runs() {
     direct.shards = plan.shards;
     let rep = run_cluster(&trace, &direct).unwrap();
     assert_eq!(rep.latency_p_us(99.0), plan.p99_us, "planner report must match a direct run");
+}
+
+#[test]
+fn mixed_workload_report_is_bit_identical_per_seed() {
+    // Same seed + same workload mix ⇒ byte-identical cluster JSON report,
+    // for every router, with all six kinds in flight.
+    let trace = mixed_kind_trace(3000, 500_000.0, 17);
+    for router in [RouterKind::RoundRobin, RouterKind::SizeAffinity, RouterKind::LeastLoaded] {
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 4;
+        cfg.router = router;
+        let a = run_cluster(&trace, &cfg).unwrap().to_json().to_string();
+        let b = run_cluster(&trace, &cfg).unwrap().to_json().to_string();
+        assert_eq!(a, b, "router {:?} must be deterministic under mixed kinds", router);
+        // The report names every kind it served.
+        for kind in ALL_KINDS {
+            assert!(
+                a.contains(&format!("\"{}\"", kind.name())),
+                "report missing per-kind entry for {kind}: {a}"
+            );
+        }
+    }
+    // The generator itself is seed-deterministic.
+    assert_eq!(trace, mixed_kind_trace(3000, 500_000.0, 17));
+}
+
+#[test]
+fn every_kind_flows_through_the_cluster() {
+    let trace = mixed_kind_trace(4000, 500_000.0, 29);
+    let mut cfg = ClusterConfig::default_hw();
+    cfg.shards = 3;
+    let rep = run_cluster(&trace, &cfg).unwrap();
+    assert_eq!(rep.requests, 4000);
+    assert_eq!(rep.per_kind.len(), 6, "all six kinds must be served: {:?}", rep.per_kind);
+    let total: u64 = rep.per_kind.values().sum();
+    assert_eq!(total, 4000, "per-kind counts must partition the requests");
+    for (&kind, &count) in &rep.per_kind {
+        assert!(count > 100, "{kind} served only {count} of 4000 uniform-mix requests");
+    }
+}
+
+#[test]
+fn size_affinity_beats_round_robin_with_heterogeneous_kinds() {
+    // The affinity router homes (kind, size) shapes, so its per-shard plan
+    // caches stay hot even when six kinds share the traffic; round-robin
+    // makes every shard plan every shape.
+    let trace = mixed_kind_trace(8000, 500_000.0, 11);
+    let mut rr = ClusterConfig::default_hw();
+    rr.shards = 4;
+    rr.router = RouterKind::RoundRobin;
+    let mut aff = rr.clone();
+    aff.router = RouterKind::SizeAffinity;
+    let rep_rr = run_cluster(&trace, &rr).unwrap();
+    let rep_aff = run_cluster(&trace, &aff).unwrap();
+    assert_eq!(rep_rr.requests, 8000);
+    assert_eq!(rep_aff.requests, 8000);
+    assert!(
+        rep_aff.cache_hit_rate() > rep_rr.cache_hit_rate(),
+        "affinity hit rate {:.4} should beat round-robin {:.4} under mixed kinds",
+        rep_aff.cache_hit_rate(),
+        rep_rr.cache_hit_rate()
+    );
+    assert!(rep_aff.cache_misses < rep_rr.cache_misses);
 }
 
 #[test]

@@ -58,7 +58,11 @@ fn scheduler_matches_manual_composition() {
     let mut sched = Scheduler::new(&sys);
     sched.verify = true;
     for n in [1 << 13, 1 << 14] {
-        let batch = Batch { n, requests: vec![FftRequest::random(1, n, 2, n as u64)] };
+        let batch = Batch {
+            n,
+            kind: pimacolaba::workload::WorkloadKind::Batch1d,
+            requests: vec![FftRequest::random(1, n, 2, n as u64)],
+        };
         let responses = sched.execute(batch).unwrap();
         assert!(responses[0].metrics.max_error.unwrap() < 0.5, "n={n}");
     }
@@ -106,8 +110,12 @@ fn linearity_through_scheduler() {
         a.im.iter().zip(&b.im).map(|(x, y)| x + y).collect(),
     );
     let run = |s: &mut Scheduler, x: SoaVec| {
-        s.execute(Batch { n, requests: vec![FftRequest::new(0, n, vec![x])] })
-            .unwrap()
+        s.execute(Batch {
+            n,
+            kind: pimacolaba::workload::WorkloadKind::Batch1d,
+            requests: vec![FftRequest::new(0, n, vec![x])],
+        })
+        .unwrap()
             .remove(0)
             .spectra
             .remove(0)

@@ -1,0 +1,304 @@
+//! Golden-vector suite: checked-in JSON fixtures pin `fft::fft_soa` (the
+//! reference 1D FFT), `fft::rfft` (pack → FFT → `unpack_real_spectrum`),
+//! and `fft::fft2d_ref` to *analytic* spectra for impulse / constant /
+//! single-tone inputs at sizes 2^1–2^10. The expected spectra are exact
+//! mathematical forms (all-ones for an impulse, a single bin of magnitude
+//! `n` for a tone), stored sparsely, so a regression in any FFT path shows
+//! up as a named `(transform, n, input, bin)` violation.
+//!
+//! The fixture generator is the `#[ignore]`d test at the bottom — it
+//! rewrites the fixture file from the same analytic formulas:
+//! `cargo test --test golden_vectors -- --ignored`.
+
+use std::path::Path;
+
+use pimacolaba::fft::{fft2d_ref, fft_soa, rfft, Image2d, SoaVec};
+use pimacolaba::util::Json;
+use pimacolaba::workload::factors2d;
+
+const FIXTURE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/golden_vectors.json");
+
+/// Analytic expected spectrum: every bin equal, or a sparse list of
+/// `(bin, re, im)` with all unlisted bins zero.
+enum Expect {
+    Uniform { re: f64, im: f64 },
+    Sparse(Vec<(usize, f64, f64)>),
+}
+
+struct Case {
+    transform: &'static str,
+    n: usize,
+    input: &'static str,
+    expect: Expect,
+}
+
+/// Tone bin used by every tone case (strictly inside the spectrum).
+fn tone_bin(n: usize) -> usize {
+    (n / 4).max(1)
+}
+
+/// The full analytic case list — shared by the checker and the generator,
+/// so the fixture can never drift from what the tests cover.
+fn analytic_cases() -> Vec<Case> {
+    let mut cases = Vec::new();
+    for lg in 1..=10u32 {
+        let n = 1usize << lg;
+        let nf = n as f64;
+        // 1D complex FFT.
+        cases.push(Case {
+            transform: "fft1d",
+            n,
+            input: "impulse",
+            expect: Expect::Uniform { re: 1.0, im: 0.0 },
+        });
+        cases.push(Case {
+            transform: "fft1d",
+            n,
+            input: "constant",
+            expect: Expect::Sparse(vec![(0, nf, 0.0)]),
+        });
+        cases.push(Case {
+            transform: "fft1d",
+            n,
+            input: "tone",
+            expect: Expect::Sparse(vec![(tone_bin(n), nf, 0.0)]),
+        });
+        // Real FFT (bins 0..=n/2).
+        cases.push(Case {
+            transform: "real",
+            n,
+            input: "impulse",
+            expect: Expect::Uniform { re: 1.0, im: 0.0 },
+        });
+        cases.push(Case {
+            transform: "real",
+            n,
+            input: "constant",
+            expect: Expect::Sparse(vec![(0, nf, 0.0)]),
+        });
+        let k0 = tone_bin(n);
+        // A cosine at the Nyquist bin (n = 2) carries the full amplitude;
+        // interior bins split it with the conjugate mirror.
+        let amp = if k0 == n / 2 { nf } else { nf / 2.0 };
+        cases.push(Case {
+            transform: "real",
+            n,
+            input: "tone",
+            expect: Expect::Sparse(vec![(k0, amp, 0.0)]),
+        });
+        // 2D FFT over the balanced factorization (needs both factors ≥ 2).
+        if n >= 4 {
+            let (r, c) = factors2d(n);
+            cases.push(Case {
+                transform: "fft2d",
+                n,
+                input: "impulse",
+                expect: Expect::Uniform { re: 1.0, im: 0.0 },
+            });
+            cases.push(Case {
+                transform: "fft2d",
+                n,
+                input: "constant",
+                expect: Expect::Sparse(vec![(0, nf, 0.0)]),
+            });
+            let (kr, kc) = ((r / 4).max(1), (c / 4).max(1));
+            cases.push(Case {
+                transform: "fft2d",
+                n,
+                input: "tone",
+                expect: Expect::Sparse(vec![(kr * c + kc, nf, 0.0)]),
+            });
+        }
+    }
+    cases
+}
+
+fn case_tolerance(n: usize) -> f32 {
+    2e-3 * (n as f32).sqrt()
+}
+
+/// Build the input signal for a case and run it through the pinned path.
+fn compute(transform: &str, n: usize, input: &str) -> SoaVec {
+    let tau = std::f64::consts::TAU;
+    match transform {
+        "fft1d" => {
+            let mut x = SoaVec::zeros(n);
+            match input {
+                "impulse" => x.set(0, 1.0, 0.0),
+                "constant" => {
+                    for t in 0..n {
+                        x.set(t, 1.0, 0.0);
+                    }
+                }
+                "tone" => {
+                    let k0 = tone_bin(n);
+                    for t in 0..n {
+                        let ang = tau * (k0 * t % n) as f64 / n as f64;
+                        x.set(t, ang.cos() as f32, ang.sin() as f32);
+                    }
+                }
+                other => panic!("unknown input '{other}'"),
+            }
+            fft_soa(&x)
+        }
+        "real" => {
+            let mut x = vec![0.0f32; n];
+            match input {
+                "impulse" => x[0] = 1.0,
+                "constant" => x.iter_mut().for_each(|v| *v = 1.0),
+                "tone" => {
+                    let k0 = tone_bin(n);
+                    for (t, v) in x.iter_mut().enumerate() {
+                        *v = (tau * (k0 * t % n) as f64 / n as f64).cos() as f32;
+                    }
+                }
+                other => panic!("unknown input '{other}'"),
+            }
+            rfft(&x).unwrap()
+        }
+        "fft2d" => {
+            let (r, c) = factors2d(n);
+            let mut img = Image2d::zeros(r, c);
+            match input {
+                "impulse" => img.data.set(0, 1.0, 0.0),
+                "constant" => {
+                    for i in 0..n {
+                        img.data.set(i, 1.0, 0.0);
+                    }
+                }
+                "tone" => {
+                    let (kr, kc) = ((r / 4).max(1), (c / 4).max(1));
+                    for ri in 0..r {
+                        for ci in 0..c {
+                            let ang = tau
+                                * ((kr * ri) as f64 / r as f64 + (kc * ci) as f64 / c as f64);
+                            img.data.set(ri * c + ci, ang.cos() as f32, ang.sin() as f32);
+                        }
+                    }
+                }
+                other => panic!("unknown input '{other}'"),
+            }
+            fft2d_ref(&img).data
+        }
+        other => panic!("unknown transform '{other}'"),
+    }
+}
+
+fn case_to_json(case: &Case) -> Json {
+    let mut fields = vec![
+        ("transform", Json::str(case.transform)),
+        ("n", Json::num(case.n as f64)),
+        ("input", Json::str(case.input)),
+        ("tol", Json::num(case_tolerance(case.n) as f64)),
+    ];
+    match &case.expect {
+        Expect::Uniform { re, im } => {
+            fields.push(("expect", Json::str("uniform")));
+            fields.push(("re", Json::num(*re)));
+            fields.push(("im", Json::num(*im)));
+        }
+        Expect::Sparse(bins) => {
+            fields.push(("expect", Json::str("sparse")));
+            fields.push((
+                "bins",
+                Json::arr(
+                    bins.iter()
+                        .map(|&(k, re, im)| {
+                            Json::obj(vec![
+                                ("k", Json::num(k as f64)),
+                                ("re", Json::num(re)),
+                                ("im", Json::num(im)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn fixture_json() -> Json {
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        (
+            "subject",
+            Json::str("analytic golden spectra for fft_soa / rfft / fft2d_ref"),
+        ),
+        ("cases", Json::arr(analytic_cases().iter().map(case_to_json).collect())),
+    ])
+}
+
+#[test]
+fn golden_vectors_pin_reference_outputs() {
+    let text = std::fs::read_to_string(Path::new(FIXTURE))
+        .expect("missing golden fixture — run `cargo test --test golden_vectors -- --ignored`");
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.field("version").unwrap().as_usize().unwrap(), 1);
+    let cases = j.field("cases").unwrap().as_arr().unwrap();
+    assert_eq!(
+        cases.len(),
+        analytic_cases().len(),
+        "fixture is stale — regenerate with `cargo test --test golden_vectors -- --ignored`"
+    );
+    for case in cases {
+        let transform = case.field("transform").unwrap().as_str().unwrap();
+        let n = case.field("n").unwrap().as_usize().unwrap();
+        let input = case.field("input").unwrap().as_str().unwrap();
+        let tol = case.field("tol").unwrap().as_f64().unwrap() as f32;
+        let got = compute(transform, n, input);
+        let label = format!("{transform} n={n} {input}");
+        match case.field("expect").unwrap().as_str().unwrap() {
+            "uniform" => {
+                let re = case.field("re").unwrap().as_f64().unwrap() as f32;
+                let im = case.field("im").unwrap().as_f64().unwrap() as f32;
+                for k in 0..got.len() {
+                    let (gr, gi) = got.get(k);
+                    assert!(
+                        (gr - re).abs() < tol && (gi - im).abs() < tol,
+                        "{label} bin {k}: got ({gr}, {gi}), want ({re}, {im})"
+                    );
+                }
+            }
+            "sparse" => {
+                let bins = case.field("bins").unwrap().as_arr().unwrap();
+                let mut listed = vec![false; got.len()];
+                for b in bins {
+                    let k = b.field("k").unwrap().as_usize().unwrap();
+                    let re = b.field("re").unwrap().as_f64().unwrap() as f32;
+                    let im = b.field("im").unwrap().as_f64().unwrap() as f32;
+                    listed[k] = true;
+                    let (gr, gi) = got.get(k);
+                    assert!(
+                        (gr - re).abs() < tol && (gi - im).abs() < tol,
+                        "{label} bin {k}: got ({gr}, {gi}), want ({re}, {im})"
+                    );
+                }
+                for k in 0..got.len() {
+                    if !listed[k] {
+                        let (gr, gi) = got.get(k);
+                        let mag = (gr * gr + gi * gi).sqrt();
+                        assert!(mag < tol, "{label}: leakage {mag} at unlisted bin {k}");
+                    }
+                }
+            }
+            other => panic!("unknown expect kind '{other}'"),
+        }
+    }
+}
+
+/// Fixture generator — run explicitly with `-- --ignored` to rewrite the
+/// checked-in file from the analytic formulas above.
+#[test]
+#[ignore = "fixture generator: rewrites tests/fixtures/golden_vectors.json"]
+fn regenerate_golden_fixtures() {
+    std::fs::create_dir_all(Path::new(FIXTURE).parent().unwrap()).unwrap();
+    std::fs::write(FIXTURE, fixture_json().to_string()).unwrap();
+    // Sanity: the freshly-written fixture round-trips and covers all cases.
+    let j = Json::parse(&std::fs::read_to_string(FIXTURE).unwrap()).unwrap();
+    assert_eq!(
+        j.field("cases").unwrap().as_arr().unwrap().len(),
+        analytic_cases().len()
+    );
+}

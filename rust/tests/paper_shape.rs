@@ -13,14 +13,14 @@ use pimacolaba::routines::OptLevel;
 fn fig4_bandwidth_boundedness() {
     let t = fig04_bandwidth(false);
     // Utilization grows along both axes and approaches BabelStream.
-    let max = t.column("bw_vs_babelstream").into_iter().fold(0.0f64, f64::max);
+    let max = t.column("bw_vs_babelstream").unwrap().into_iter().fold(0.0f64, f64::max);
     assert!(max > 0.9 && max <= 1.1, "{max}");
 }
 
 #[test]
 fn fig5_boost_range() {
     let t = fig05_boost();
-    let boosts = t.column("boost");
+    let boosts = t.column("boost").unwrap();
     let max = boosts.iter().copied().fold(0.0f64, f64::max);
     let min = boosts.iter().copied().fold(f64::MAX, f64::min);
     // §3.2: "considerable memory bandwidth boost over GPU (up to 12x)".
@@ -34,13 +34,13 @@ fn fig5_boost_range() {
         .iter()
         .position(|r| r[0] == "512" && r[1] == "256" && r[2] == "half-rate")
         .unwrap();
-    assert!((t.value(i, "boost") - 4.0).abs() < 0.2);
+    assert!((t.value(i, "boost").unwrap() - 4.0).abs() < 0.2);
 }
 
 #[test]
 fn fig10_average_slowdown_near_half() {
     let t = fig10_pimbase(false).unwrap();
-    let s = t.column("speedup");
+    let s = t.column("speedup").unwrap();
     let avg = s.iter().sum::<f64>() / s.len() as f64;
     // Paper: "average slowdown of about 52%" ⇒ mean speedup ≈ 0.48; our
     // command model lands the same regime.
@@ -60,7 +60,7 @@ fn fig12_vs_fig10_collaboration_wins() {
         let iw = whole.lookup("log2n", &ls.to_string()).unwrap();
         let ic = colab.lookup("log2n", &ls.to_string()).unwrap();
         assert!(
-            colab.value(ic, "speedup") > whole.value(iw, "speedup"),
+            colab.value(ic, "speedup").unwrap() > whole.value(iw, "speedup").unwrap(),
             "2^{ls}: colab must beat whole-offload"
         );
     }
@@ -74,7 +74,7 @@ fn fig17_pimacolaba_band_and_ordering() {
             .iter()
             .enumerate()
             .filter(|(_, r)| r[1] == opt)
-            .map(|(i, _)| t.value(i, "speedup"))
+            .map(|(i, _)| t.value(i, "speedup").unwrap())
             .fold(0.0f64, f64::max)
     };
     let (sw, hw, shw) = (max_of("sw-opt"), max_of("hw-opt"), max_of("sw-hw-opt"));
@@ -86,7 +86,7 @@ fn fig17_pimacolaba_band_and_ordering() {
 #[test]
 fn fig18_savings_band() {
     let t = fig18_movement(false).unwrap();
-    let s = t.column("dm_savings");
+    let s = t.column("dm_savings").unwrap();
     let avg = s.iter().sum::<f64>() / s.len() as f64;
     // Paper: 1.48–2.76× (avg 1.81×), ≈33% butterflies offloaded.
     assert!(s.iter().all(|&x| (1.3..3.0).contains(&x)));
@@ -98,7 +98,7 @@ fn fig19_sensitivity_directions() {
     let t = fig19_sensitivity(false).unwrap();
     let max_cfg = |cfg: &str| {
         let i = t.rows.iter().position(|r| r[0] == cfg && r[1] == "0").unwrap();
-        t.value(i, "speedup_vs_gpu")
+        t.value(i, "speedup_vs_gpu").unwrap()
     };
     let base = max_cfg("baseline+hw");
     // §6.6: RF×2 → 1.41; RB×2 → 1.38 (ties baseline); unit/bank → 1.64.

@@ -339,7 +339,9 @@ fn prop_scheduler_host_path_always_correct() {
         let reqs: Vec<FftRequest> = (0..rng.range(1, 4))
             .map(|i| FftRequest::random(i as u64, n, rng.range(1, 3), rng.next_u64()))
             .collect();
-        let responses = sched.execute(Batch { n, requests: reqs }).unwrap();
+        let responses = sched
+            .execute(Batch { n, kind: pimacolaba::workload::WorkloadKind::Batch1d, requests: reqs })
+            .unwrap();
         for r in responses {
             let err = r.metrics.max_error.unwrap();
             assert!(err < 0.6, "n={n}: err {err}");

@@ -84,7 +84,11 @@ fn collaborative_with_pjrt_gpu_component_is_correct() {
     let mut sched = pjrt_scheduler(&sys, reg);
     sched.verify = true;
     let n = 1 << 13;
-    let batch = Batch { n, requests: vec![FftRequest::random(1, n, 2, 99)] };
+    let batch = Batch {
+        n,
+        kind: pimacolaba::workload::WorkloadKind::Batch1d,
+        requests: vec![FftRequest::random(1, n, 2, 99)],
+    };
     let responses = sched.execute(batch).unwrap();
     let m = &responses[0].metrics;
     assert!(

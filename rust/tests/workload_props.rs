@@ -1,0 +1,224 @@
+//! Metamorphic property tests for the multi-workload decompositions: every
+//! [`WorkloadKind`] is checked against an independent mathematical identity
+//! rather than against its own implementation — 2D axis-order commutativity,
+//! the real packing trick vs the full complex FFT, the convolution theorem
+//! vs the schoolbook O(n²) sum, and Parseval's identity for every kind.
+
+use pimacolaba::backend::FftEngine;
+use pimacolaba::fft::{fft2d_ref, fft_soa, rfft, Image2d, SoaVec};
+use pimacolaba::util::prop::{forall, forall_cases};
+use pimacolaba::util::Rng;
+use pimacolaba::workload::{stft_shape, WorkloadKind, ALL_KINDS};
+
+fn random_soa(rng: &mut Rng, n: usize) -> SoaVec {
+    SoaVec::random(n, rng.next_u64())
+}
+
+#[test]
+fn prop_fft2d_row_then_col_equals_col_then_row() {
+    // The 2D DFT is separable: transforming rows before columns must equal
+    // transforming columns before rows (modulo float reassociation).
+    forall("2D FFT axis-order commutes", |rng| {
+        let rows = rng.pow2(1, 5);
+        let cols = rng.pow2(1, 5);
+        let img = Image2d::random(rows, cols, rng.next_u64());
+        let row_col = fft2d_ref(&img);
+        // Column-first: transpose, row-col transform, transpose back.
+        let col_row = fft2d_ref(&img.transpose()).transpose();
+        let d = row_col.data.max_abs_diff(&col_row.data);
+        let n = (rows * cols) as f32;
+        assert!(d < 1e-3 * n.sqrt().max(1.0) * 4.0, "{rows}x{cols}: diff {d}");
+    });
+}
+
+#[test]
+fn prop_real_pack_unpack_equals_full_complex_fft() {
+    // The §7.1 packing trick (pack → half-size FFT → Hermitian unpack) must
+    // agree with embedding the real signal as complex and running the full
+    // FFT, on every non-redundant bin.
+    forall("real pack/unpack == full complex FFT", |rng| {
+        let n = rng.pow2(2, 12);
+        let x: Vec<f32> = (0..n).map(|_| rng.signed_f32()).collect();
+        let got = rfft(&x).unwrap();
+        let full = fft_soa(&SoaVec::new(x.clone(), vec![0.0; n]));
+        let m = n / 2;
+        let mut worst = 0.0f32;
+        for k in 0..=m {
+            worst = worst.max((got.re[k] - full.re[k]).abs());
+            worst = worst.max((got.im[k] - full.im[k]).abs());
+        }
+        assert!(worst < 2e-3 * (n as f32).sqrt().max(1.0), "n={n}: diff {worst}");
+    });
+}
+
+/// Schoolbook circular convolution in f64 — the independent oracle.
+fn schoolbook_circular(x: &SoaVec, h: &SoaVec) -> SoaVec {
+    let n = x.len();
+    let mut out = SoaVec::zeros(n);
+    for i in 0..n {
+        let (mut sr, mut si) = (0.0f64, 0.0f64);
+        for t in 0..n {
+            let j = (i + n - t) % n;
+            let (xr, xi) = (x.re[t] as f64, x.im[t] as f64);
+            let (hr, hi) = (h.re[j] as f64, h.im[j] as f64);
+            sr += xr * hr - xi * hi;
+            si += xr * hi + xi * hr;
+        }
+        out.set(i, sr as f32, si as f32);
+    }
+    out
+}
+
+#[test]
+fn prop_convolution_theorem_vs_schoolbook() {
+    // FFT-based circular convolution (forward · pointwise · inverse through
+    // the engine) must equal the O(n²) time-domain sum, 2^4 through 2^12.
+    let mut engine = FftEngine::builder().build();
+    let mut rng = Rng::new(0xC0);
+    for lg in [4u32, 6, 8, 10, 12] {
+        let n = 1usize << lg;
+        for case in 0..2 {
+            let x = random_soa(&mut rng, n);
+            let h = random_soa(&mut rng, n);
+            let want = schoolbook_circular(&x, &h);
+            let run = engine
+                .run_workload(WorkloadKind::Convolution, n, &[x, h])
+                .unwrap();
+            assert_eq!(run.outputs.len(), 1);
+            let got = &run.outputs[0];
+            let maxmag = want
+                .re
+                .iter()
+                .chain(&want.im)
+                .fold(0.0f32, |m, v| m.max(v.abs()));
+            let d = got.max_abs_diff(&want);
+            assert!(
+                d < 1e-2 * (1.0 + maxmag),
+                "n={n} case {case}: diff {d} (max magnitude {maxmag})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parseval_for_every_workload_kind() {
+    // Energy conservation per kind, each against the identity the kind's
+    // mathematics dictates (unnormalized FFTs scale energy by the transform
+    // length).
+    let mut engine = FftEngine::builder().build();
+    forall_cases("Parseval per workload kind", 48, |rng| {
+        for kind in ALL_KINDS {
+            let lg = rng.range(4, 10) as u32;
+            let n = (1usize << lg).max(kind.min_n());
+            let (x_in, energy_in): (Vec<SoaVec>, f64) = match kind {
+                // Real reads only the re half; keep im zero so the embedded
+                // signal's energy is well-defined.
+                WorkloadKind::Real => {
+                    let x: Vec<f32> = (0..n).map(|_| rng.signed_f32()).collect();
+                    let e = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                    (vec![SoaVec::new(x, vec![0.0; n])], e)
+                }
+                WorkloadKind::Convolution => {
+                    let x = random_soa(rng, n);
+                    let h = random_soa(rng, n);
+                    (vec![x, h], 0.0) // energy handled below via spectra
+                }
+                _ => {
+                    let x = random_soa(rng, n);
+                    let e = x.energy();
+                    (vec![x], e)
+                }
+            };
+            let run = engine.run_workload(kind, n, &x_in).unwrap();
+            let out = &run.outputs[0];
+            let (lhs, rhs, what) = match kind {
+                WorkloadKind::Batch1d | WorkloadKind::Fft2d | WorkloadKind::Fft3d => {
+                    // E(X) = n · E(x): each separable 1D pass multiplies the
+                    // energy by its length, and the lengths multiply to n.
+                    (out.energy(), n as f64 * energy_in, "E(X) = n·E(x)")
+                }
+                WorkloadKind::Real => {
+                    // Half-spectrum Parseval: interior bins count twice
+                    // (their conjugate mirrors carry the same energy).
+                    let m = n / 2;
+                    let bin = |k: usize| {
+                        let (r, i) = out.get(k);
+                        (r as f64) * (r as f64) + (i as f64) * (i as f64)
+                    };
+                    let mut full = bin(0) + bin(m);
+                    for k in 1..m {
+                        full += 2.0 * bin(k);
+                    }
+                    (full, n as f64 * energy_in, "half-spectrum Parseval")
+                }
+                WorkloadKind::Convolution => {
+                    // Parseval applied to y = ifft(X ∘ H):
+                    // n · E(y) = E(X ∘ H), with X, H from the reference FFT.
+                    let xs = fft_soa(&x_in[0]);
+                    let hs = fft_soa(&x_in[1]);
+                    let mut prod_energy = 0.0f64;
+                    for k in 0..n {
+                        let (xr, xi) = xs.get(k);
+                        let (hr, hi) = hs.get(k);
+                        let pr = (xr * hr - xi * hi) as f64;
+                        let pi = (xr * hi + xi * hr) as f64;
+                        prod_energy += pr * pr + pi * pi;
+                    }
+                    (n as f64 * out.energy(), prod_energy, "n·E(y) = E(X∘H)")
+                }
+                WorkloadKind::Stft => {
+                    // Per-frame Parseval summed over frames: the spectrogram
+                    // energy is w times the total framed signal energy.
+                    let (w, hop, frames) = stft_shape(n);
+                    let x = &x_in[0];
+                    let mut framed = 0.0f64;
+                    for f in 0..frames {
+                        for t in f * hop..f * hop + w {
+                            let (r, i) = x.get(t);
+                            framed += (r as f64) * (r as f64) + (i as f64) * (i as f64);
+                        }
+                    }
+                    (out.energy(), w as f64 * framed, "spectrogram Parseval")
+                }
+            };
+            let rel = (lhs - rhs).abs() / rhs.max(1e-9);
+            assert!(rel < 5e-3, "{kind} n={n}: {what} off by {rel} ({lhs} vs {rhs})");
+        }
+    });
+}
+
+#[test]
+fn prop_fft3d_impulse_and_linearity() {
+    // 3D-specific identities: a unit impulse transforms to the all-ones
+    // spectrum, and the transform is linear.
+    let mut engine = FftEngine::builder().build();
+    forall_cases("3D FFT impulse + linearity", 24, |rng| {
+        let n = 1usize << rng.range(3, 10);
+        let mut impulse = SoaVec::zeros(n);
+        impulse.set(0, 1.0, 0.0);
+        let y = engine
+            .run_workload(WorkloadKind::Fft3d, n, &[impulse])
+            .unwrap();
+        for k in 0..n {
+            let (r, i) = y.outputs[0].get(k);
+            assert!((r - 1.0).abs() < 1e-3 && i.abs() < 1e-3, "n={n} bin {k}");
+        }
+        let a = random_soa(rng, n);
+        let b = random_soa(rng, n);
+        let sum = SoaVec::new(
+            a.re.iter().zip(&b.re).map(|(x, y)| x + y).collect(),
+            a.im.iter().zip(&b.im).map(|(x, y)| x + y).collect(),
+        );
+        let outs = engine
+            .run_workload(WorkloadKind::Fft3d, n, &[a, b, sum])
+            .unwrap()
+            .outputs;
+        let tol = 2e-3 * (n as f32).sqrt().max(1.0);
+        for k in 0..n {
+            let (ar, ai) = outs[0].get(k);
+            let (br, bi) = outs[1].get(k);
+            let (sr, si) = outs[2].get(k);
+            assert!((sr - ar - br).abs() < tol && (si - ai - bi).abs() < tol, "n={n} bin {k}");
+        }
+    });
+}
