@@ -1,0 +1,52 @@
+//! Parallel runtime micro-benchmark: host-backend batched FFT execution and
+//! cluster-simulator stepping, sequential vs pooled.
+//!
+//! The recorded perf-trajectory artifact comes from the CLI instead
+//! (`pimacolaba bench` → `BENCH_runtime.json`, see docs/BENCHMARKING.md);
+//! this target is the quick `cargo bench --bench runtime_parallel` loop for
+//! working on the pool itself.
+
+use pimacolaba::backend::FftEngine;
+use pimacolaba::cluster::{run_cluster, ClusterConfig};
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{Arrival, SizeMix, Workload};
+use pimacolaba::fft::SoaVec;
+use pimacolaba::runtime::Parallelism;
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    let sys = SystemConfig::baseline().with_hw_opt();
+    let threads = [Parallelism::Sequential, Parallelism::Fixed(2), Parallelism::Fixed(8)];
+
+    // Batched 1D FFTs on the host backend — the acceptance shape (2^16).
+    let n = 1 << 16;
+    let signals: Vec<SoaVec> = (0..16).map(|i| SoaVec::random(n, 5 + i)).collect();
+    let mut baseline = None;
+    for par in threads {
+        let mut engine = FftEngine::builder().system(&sys).parallelism(par).build();
+        let stats = bench.run(&format!("batch1d/2^16x16/threads={par}"), || {
+            engine.run(n, &signals).expect("run").outputs.len()
+        });
+        let mean = stats.mean_ns();
+        match baseline {
+            None => baseline = Some(mean),
+            Some(b) => println!("  speedup vs 1 thread: {:.2}x", b / mean),
+        }
+    }
+
+    // Cluster stepping: wall-clock only — the report bytes are pinned
+    // identical by tests/parallel_runtime.rs.
+    let quick = Bench::quick();
+    let mix = SizeMix::uniform(&[4096, 16384, 65536]).expect("mix");
+    let trace =
+        Workload::new(Arrival::Poisson, 1_000_000.0, mix).expect("workload").generate(50_000, 7);
+    for par in threads {
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 8;
+        cfg.threads = par;
+        quick.run(&format!("cluster/50k/threads={par}"), || {
+            run_cluster(&trace, &cfg).expect("cluster").requests
+        });
+    }
+}

@@ -2,11 +2,19 @@
 //! oracle. It stands in for the GPU when no AOT artifacts are loaded (tests,
 //! figures, fresh checkouts) and doubles as the conformance reference for
 //! every other backend.
+//!
+//! With a [`ThreadPool`] attached ([`HostFftBackend::with_pool`], wired by
+//! the engine builder's `parallelism` knob) the batched 1D passes fan out
+//! per signal across the pool. Every signal's FFT is an independent pure
+//! function, so outputs are bit-identical for every thread count.
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::config::SystemConfig;
 use crate::fft::{fft_soa, FourStep, SoaVec};
+use crate::runtime::{ThreadPool, MIN_PAR_POINTS};
 
 use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
 
@@ -16,15 +24,39 @@ use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
 #[derive(Debug, Default)]
 pub struct HostFftBackend {
     cost: GpuCostModel,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl HostFftBackend {
     pub fn new(cost: GpuCostModel) -> Self {
-        Self { cost }
+        Self { cost, pool: None }
+    }
+
+    /// Batch-parallel execution over `pool` (see the module docs).
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     pub fn cost_model(&self) -> GpuCostModel {
         self.cost
+    }
+
+    /// Map `f` over the batch, fanning out when the batch carries enough
+    /// points to pay for the chunk overhead. `f` is pure per signal, so
+    /// index-ordered results are bit-identical to the sequential map.
+    fn par_map(
+        &self,
+        inputs: &[SoaVec],
+        points_each: usize,
+        f: impl Fn(&SoaVec) -> SoaVec + Sync,
+    ) -> Vec<SoaVec> {
+        let worth_it = inputs.len() > 1
+            && inputs.len().saturating_mul(points_each) >= MIN_PAR_POINTS;
+        match &self.pool {
+            Some(pool) if worth_it => pool.map_slice(inputs, f),
+            _ => inputs.iter().map(f).collect(),
+        }
     }
 }
 
@@ -51,14 +83,14 @@ impl ComputeBackend for HostFftBackend {
             "input length mismatch for {component}"
         );
         match *component {
-            PlanComponent::FullFft { .. } => Ok(inputs.iter().map(fft_soa).collect()),
+            PlanComponent::FullFft { n, .. } => Ok(self.par_map(inputs, n, fft_soa)),
             PlanComponent::GpuStage { n, m1, m2, .. } => {
                 let fs = FourStep::new(n, m1, m2);
-                Ok(inputs.iter().map(|s| fs.gpu_component_ref(s)).collect())
+                Ok(self.par_map(inputs, n, |s| fs.gpu_component_ref(s)))
             }
             // A PIM-FFT-Tile is just a batch of small row FFTs; the host
             // reference computes them exactly.
-            PlanComponent::PimTile { .. } => Ok(inputs.iter().map(fft_soa).collect()),
+            PlanComponent::PimTile { m2, .. } => Ok(self.par_map(inputs, m2, fft_soa)),
         }
     }
 }
@@ -102,6 +134,22 @@ mod tests {
             }
         }
         assert!(o.max_abs_diff(&fft_soa(&x)) < 2e-3 * (n as f32).sqrt());
+    }
+
+    #[test]
+    fn pooled_execution_is_bit_identical_to_sequential() {
+        let n = 256;
+        let xs: Vec<SoaVec> = (0..32).map(|i| SoaVec::random(n, 100 + i)).collect();
+        let mut seq = HostFftBackend::default();
+        let mut par = HostFftBackend::default().with_pool(Arc::new(ThreadPool::new(3)));
+        for component in [
+            PlanComponent::FullFft { n, batch: xs.len() },
+            PlanComponent::GpuStage { n, m1: 32, m2: 8, batch: xs.len() },
+        ] {
+            let a = seq.execute(&component, &xs).unwrap();
+            let b = par.execute(&component, &xs).unwrap();
+            assert_eq!(a, b, "{component} differs between sequential and pooled");
+        }
     }
 
     #[test]

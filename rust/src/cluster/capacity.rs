@@ -11,13 +11,15 @@
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::coordinator::Trace;
+use crate::runtime::Parallelism;
 use crate::util::Json;
 
-use super::sim::{run_cluster, ClusterConfig, ClusterReport};
+use super::sim::{run_cluster, warm_plans, ClusterConfig, ClusterReport};
 
 /// One simulated capacity probe.
 #[derive(Debug, Clone, Copy)]
@@ -88,6 +90,14 @@ pub fn plan_capacity(
 ) -> Result<CapacityPlan> {
     ensure!(slo_us.is_finite() && slo_us > 0.0, "SLO must be a positive latency in µs");
     ensure!(max_shards >= 1, "max shard count must be at least 1");
+
+    // The warm plan table depends only on the trace and engine config —
+    // never on the shard count — so compute it once and share it across
+    // every probe instead of re-sweeping the planner per candidate.
+    let mut cfg = cfg.clone();
+    if cfg.warm.is_none() && cfg.threads != Parallelism::Sequential {
+        cfg.warm = Some(Arc::new(warm_plans(trace, &cfg)?));
+    }
 
     let mut cache: BTreeMap<usize, ClusterReport> = BTreeMap::new();
     let probe = |k: usize, cache: &mut BTreeMap<usize, ClusterReport>| -> Result<f64> {

@@ -33,6 +33,30 @@
 //!
 //! Workloads come from [`crate::coordinator::Workload`]: open-loop
 //! Poisson/burst/diurnal arrivals over a size-mix profile.
+//!
+//! With [`ClusterConfig::threads`] set, plan evaluation fans out over the
+//! work-stealing [`crate::runtime::ThreadPool`] before virtual time starts
+//! (workers compute, the event core commits in FIFO order — see
+//! [`warm_plans`]), so reports stay **byte-identical per seed for every
+//! thread count**:
+//!
+//! ```
+//! use pimacolaba::cluster::{run_cluster, ClusterConfig};
+//! use pimacolaba::coordinator::{Arrival, SizeMix, Workload};
+//! use pimacolaba::runtime::Parallelism;
+//!
+//! let mix = SizeMix::uniform(&[64, 4096]).unwrap();
+//! let trace = Workload::new(Arrival::Poisson, 200_000.0, mix).unwrap().generate(200, 7);
+//!
+//! let mut cfg = ClusterConfig::default_hw();
+//! cfg.shards = 2;
+//! let sequential = run_cluster(&trace, &cfg).unwrap();
+//! cfg.threads = Parallelism::Fixed(2);
+//! let parallel = run_cluster(&trace, &cfg).unwrap();
+//!
+//! assert_eq!(sequential.requests, 200);
+//! assert_eq!(sequential.to_json().to_string(), parallel.to_json().to_string());
+//! ```
 
 mod capacity;
 mod event;
@@ -46,4 +70,4 @@ pub use router::{
     LeastLoadedRouter, RoundRobinRouter, RouterKind, ShardRouter, SizeAffinityRouter,
 };
 pub use shard::{Shard, ShardStats, SimRequest};
-pub use sim::{run_cluster, ClusterConfig, ClusterReport, ShardSummary};
+pub use sim::{run_cluster, warm_plans, ClusterConfig, ClusterReport, ShardSummary};

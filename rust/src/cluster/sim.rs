@@ -11,17 +11,34 @@
 //! the simulation prices exactly what the paper's models price — and a run
 //! over millions of requests finishes in wall-clock seconds because no
 //! spectra are ever computed.
+//!
+//! ## Parallel stepping ([`ClusterConfig::threads`])
+//!
+//! The expensive per-event work is plan evaluation (a cache miss runs the
+//! §5.1 planner and the PIM tile model); the event core itself is cheap
+//! bookkeeping. With `threads > 1` the run splits accordingly: **workers
+//! compute, the event core commits.** [`warm_plans`] enumerates every plan
+//! shape the trace can dispatch (each `(kind, n)` × the power-of-two padded
+//! batch ladder) and evaluates them across the pool before virtual time
+//! starts; the single-threaded event core then pops events in deterministic
+//! FIFO order and finds every plan pre-computed. Because each warm entry is
+//! exactly the value an unwarmed engine would compute (same planner, same
+//! deterministic float path — see `FftEngineBuilder::warm_plans`), reports
+//! stay **bit-identical per seed for every thread count**, which
+//! `rust/tests/parallel_runtime.rs` pins byte-for-byte.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
-use crate::backend::FftEngine;
+use crate::backend::{FftEngine, WarmPlans};
 use crate::config::SystemConfig;
 use crate::coordinator::Trace;
 use crate::metrics::{DataMovement, LogHistogram};
 use crate::pimc::PassConfig;
 use crate::routines::OptLevel;
+use crate::runtime::Parallelism;
 use crate::util::Json;
 use crate::workload::WorkloadKind;
 
@@ -42,6 +59,16 @@ pub struct ClusterConfig {
     pub sys: SystemConfig,
     /// PIM lowering pass set every shard engine is built with.
     pub passes: PassConfig,
+    /// Plan evaluation parallelism (see the module docs): workers
+    /// pre-compute the plan table, the event core commits sequentially.
+    /// Reports are bit-identical for every setting.
+    pub threads: Parallelism,
+    /// Pre-computed plan table shared across runs. The table depends only
+    /// on the trace and the engine config — never on the shard count — so
+    /// callers that simulate one trace many times (the capacity planner's
+    /// probes) compute it once with [`warm_plans`] and set it here; `None`
+    /// with `threads > 1` computes it per run.
+    pub warm: Option<Arc<WarmPlans>>,
 }
 
 impl ClusterConfig {
@@ -53,6 +80,8 @@ impl ClusterConfig {
             max_wait_us: 50.0,
             sys,
             passes: passes.into(),
+            threads: Parallelism::Sequential,
+            warm: None,
         }
     }
 
@@ -252,6 +281,59 @@ struct SimArrival {
     signals: usize,
 }
 
+/// Pre-compute, across `cfg.threads` workers, every plan-cache entry the
+/// simulation can demand: each distinct `(kind, n)` in the trace × the
+/// power-of-two padded batch ladder up to that shape's total signal count
+/// (batches are padded to the next power of two, so no other batch size can
+/// ever be dispatched). Entries are evaluated by scratch engines configured
+/// exactly like the shard engines, so each value is bit-identical to what a
+/// shard would compute on a cold miss — warming changes wall-clock time,
+/// never the report.
+pub fn warm_plans(trace: &Trace, cfg: &ClusterConfig) -> Result<WarmPlans> {
+    let mut totals: BTreeMap<(WorkloadKind, usize), u64> = BTreeMap::new();
+    for e in &trace.entries {
+        *totals.entry((e.kind, e.n)).or_insert(0) += e.batch as u64;
+    }
+    // Every `plan()` key a dispatch could touch, deduplicated.
+    let mut keys: std::collections::BTreeSet<(usize, usize)> = std::collections::BTreeSet::new();
+    for (&(kind, n), &total) in &totals {
+        let mult = kind.signal_multiple();
+        let mut padded = 1usize;
+        loop {
+            if padded % mult == 0 && padded / mult > 0 {
+                let units = padded / mult;
+                for p in kind.passes(n)? {
+                    keys.insert((p.fft_n, p.ffts_per_unit * units));
+                }
+            }
+            if padded as u64 >= total {
+                break;
+            }
+            padded *= 2;
+        }
+    }
+    let keys: Vec<(usize, usize)> = keys.into_iter().collect();
+    let scratch = |chunk: &[(usize, usize)]| {
+        let mut engine = FftEngine::builder().system(&cfg.sys).passes(cfg.passes).build();
+        let mut out = Vec::with_capacity(chunk.len());
+        for &(n, batch) in chunk {
+            if let Ok(hit) = engine.plan(n, batch) {
+                out.push(((n, batch, cfg.passes), hit));
+            }
+        }
+        out
+    };
+    let entries: Vec<_> = match cfg.threads.pool() {
+        Some(pool) if keys.len() > 1 => {
+            let chunk = keys.len().div_ceil(pool.threads() * 4).max(1);
+            let chunks: Vec<&[(usize, usize)]> = keys.chunks(chunk).collect();
+            pool.map_indexed(chunks.len(), |i| scratch(chunks[i])).into_iter().flatten().collect()
+        }
+        _ => scratch(&keys),
+    };
+    Ok(entries.into_iter().collect())
+}
+
 /// Run the cluster simulation over `trace`. Deterministic: same trace +
 /// config ⇒ bit-identical report.
 pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> {
@@ -276,8 +358,22 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
         .collect();
     let wait_ns = (cfg.max_wait_us * 1e3).round() as u64;
 
+    // Workers compute, the event core commits: with threads > 1 every plan
+    // shape is evaluated across the pool up front, so the deterministic
+    // FIFO event loop below never blocks on a planner run (see module docs).
+    let warm = match (&cfg.warm, cfg.threads) {
+        (Some(w), _) => Some(Arc::clone(w)),
+        (None, Parallelism::Sequential) => None,
+        (None, _) => Some(Arc::new(warm_plans(trace, cfg)?)),
+    };
     let mut shards: Vec<Shard> = (0..cfg.shards)
-        .map(|_| Shard::new(FftEngine::builder().system(&cfg.sys).passes(cfg.passes).build()))
+        .map(|_| {
+            let mut b = FftEngine::builder().system(&cfg.sys).passes(cfg.passes);
+            if let Some(w) = &warm {
+                b = b.warm_plans(Arc::clone(w));
+            }
+            Shard::new(b.build())
+        })
         .collect();
     let mut router = cfg.router.build(cfg.shards);
     let mut latency = LogHistogram::new();
@@ -443,6 +539,22 @@ mod tests {
         let lat_us = rep.latency_ns.max() as f64 / 1e3;
         assert!(lat_us >= 50.0, "latency {lat_us} must include the 50µs window");
         assert!(lat_us < 60.0, "latency {lat_us} should be window + tiny service");
+    }
+
+    #[test]
+    fn threaded_run_is_byte_identical_and_fully_warmed() {
+        let t = trace(400, 300_000.0, &[64, 4096, 16384], 5);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 3;
+        let want = run_cluster(&t, &cfg).unwrap().to_json().to_string();
+        cfg.threads = crate::runtime::Parallelism::Fixed(2);
+        let got = run_cluster(&t, &cfg).unwrap().to_json().to_string();
+        assert_eq!(got, want, "threads must not change the report");
+        // The warm table covers every shape the run dispatched: identical
+        // hit/miss counters prove no shard fell back to a cold planner run
+        // with different timing but also that stats stayed untouched.
+        let warm = warm_plans(&t, &cfg).unwrap();
+        assert!(!warm.is_empty());
     }
 
     #[test]

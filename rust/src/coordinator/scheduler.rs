@@ -5,6 +5,11 @@
 //!
 //! The scheduler never touches a substrate directly — no PJRT registry, no
 //! PIM executor; all of that lives behind the engine's `ComputeBackend`s.
+//! Parallelism flows the same way: build the engine with
+//! [`crate::backend::FftEngineBuilder::parallelism`] (the `serve --threads`
+//! path) and every batch executed here fans its 1D passes and workload
+//! shuffles out over the work-stealing runtime — responses are
+//! bit-identical to the sequential engine's.
 
 use std::time::Instant;
 

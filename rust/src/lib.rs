@@ -53,11 +53,17 @@
 //! * [`planner`] — collaborative decomposition (§5.1): plan selection via
 //!   the offline tile-efficiency table; its cost evaluation is built from
 //!   the same providers the backends use.
-//! * [`runtime`] — PJRT glue: loads `artifacts/*.hlo.txt` (AOT-lowered from
-//!   the L2 jax model, which calls the L1 Pallas butterfly kernel). The XLA
-//!   bindings are gated behind the `pjrt` cargo feature; without it the
-//!   registry still parses manifests but execution falls back to the host
-//!   backend.
+//! * [`runtime`] — the execution runtime: [`runtime::ThreadPool`], a
+//!   work-stealing pool (std threads only) behind every `--threads N`
+//!   surface — batch-parallel 1D passes in the host backend, fanned-out
+//!   workload transposes/gathers in the engine, and parallel plan
+//!   pre-warming in the cluster simulator — selected by a
+//!   [`runtime::Parallelism`] knob and bit-deterministic across thread
+//!   counts. Also the PJRT glue: loads `artifacts/*.hlo.txt` (AOT-lowered
+//!   from the L2 jax model, which calls the L1 Pallas butterfly kernel);
+//!   the XLA bindings are gated behind the `pjrt` cargo feature; without it
+//!   the registry still parses manifests but execution falls back to the
+//!   host backend.
 //! * [`pimc`] — the PIM stream compiler: routines emit a butterfly-level
 //!   IR; [`pimc::PassPipeline`] lowers it to command streams under a
 //!   [`pimc::PassConfig`] of composable optimization passes (the paper's

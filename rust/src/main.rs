@@ -1,26 +1,21 @@
 //! Pimacolaba CLI — the L3 leader entrypoint.
 //!
-//! Subcommands:
-//! * `figures  [--out DIR] [--quick]`      regenerate every paper figure/table
-//! * `plan     --n N [--batch B] [--opt L]` show + evaluate the chosen plan
-//! * `tile     --n N [--opt L]`             PIM-FFT-Tile cost breakdown
-//! * `passes   [--sizes a,b] [--out FILE]`  per-pass lowering ablation (JSON)
-//! * `serve    [--requests R] [--sizes a,b] [--artifacts DIR] [--verify]`
-//!                                          run the service over a synthetic trace
-//! * `cluster  [--shards K] [--rps R] [--slo-us T] ...`
-//!                                          discrete-event cluster simulation /
-//!                                          SLO-aware capacity planning
-//! * `trace    --out FILE [--requests R]`   emit a reproducible workload trace
-//! * `artifacts [--dir DIR]`                list the AOT artifact manifest
-//! * `config   [--variant NAME]`            dump a system configuration
+//! The usage text lives in [`pimacolaba::util::help`] (single source of
+//! truth, embedded verbatim in README.md and pinned by
+//! `rust/tests/cli_docs.rs`): `pimacolaba` with no arguments prints the
+//! full screen, `pimacolaba <sub> --help` (or `pimacolaba help <sub>`)
+//! prints one subcommand's block.
 //!
 //! Every `--opt L` site also accepts `--passes SPEC` (e.g.
-//! `--passes swhw,movelim,rowsched`) selecting an explicit pimc pass set.
+//! `--passes swhw,movelim,rowsched`) selecting an explicit pimc pass set,
+//! and every serving/simulation subcommand accepts `--threads N` to run on
+//! the work-stealing parallel runtime (outputs stay bit-identical to
+//! `--threads 1`).
 
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
 use pimacolaba::cluster::{plan_capacity, run_cluster, ClusterConfig, RouterKind};
@@ -34,54 +29,11 @@ use pimacolaba::pim::TimingSink;
 use pimacolaba::pimc::{Pass, PassConfig};
 use pimacolaba::planner::{PlanKind, TileModel};
 use pimacolaba::routines::{emit_strided, RoutineStats};
-use pimacolaba::runtime::Registry;
+use pimacolaba::runtime::{Parallelism, Registry};
+use pimacolaba::util::benchkit::Bench;
 use pimacolaba::util::cli::Args;
-use pimacolaba::util::{Json, Rng};
+use pimacolaba::util::{help, Json, Rng};
 use pimacolaba::workload::KindMix;
-
-const USAGE: &str = "\
-usage: pimacolaba <subcommand> [options]
-
-subcommands:
-  figures   [--out DIR] [--quick]            regenerate every paper figure/table
-  plan      --n N [--batch B] [--opt L]      show + evaluate the chosen plan
-            [--variant NAME]
-  tile      --n N [--opt L] [--variant NAME] PIM-FFT-Tile cost breakdown
-  passes    [--sizes 5,6,..] [--out FILE]    per-pass lowering ablation over the
-            [--variant NAME]                 Fig 16 tile sizes; writes a JSON
-                                             artifact with per-pass deltas
-  serve     [--requests R] [--sizes a,b,..]  run the service over a synthetic trace
-            [--opt L] [--variant NAME]
-            [--artifacts DIR] [--no-artifacts] [--verify] [--seed S]
-  cluster   [--shards K] [--router NAME]     simulate K shards serving an open-loop
-            [--arrival A] [--rps R]          trace in virtual time; with --slo-us,
-            [--requests N] [--sizes a,b,..]  binary-search the minimal shard count
-            [--mix PROFILE] [--window S]     meeting the p99 target. Writes a JSON
-            [--wait-us W] [--slo-us T]       report artifact to --out.
-            [--max-shards M] [--seed S]      --workload-mix routes mixed request
-            [--out FILE] [--opt L]           kinds through the shards.
-            [--variant NAME] [--workload-mix SPEC]
-  workload  [--n N] [--batch B] [--kinds SPEC] per-kind serving report: decompose
-            [--requests R] [--rps R]         each workload kind into its 1D FFT
-            [--shards K] [--seed S]          passes (substrate split per pass),
-            [--out FILE] [--opt L]           smoke-run it numerically, and measure
-            [--variant NAME]                 latency percentiles on a cluster sim.
-                                             Writes a JSON report artifact to --out.
-  trace     [--out FILE] [--requests R]      emit a reproducible workload trace
-            [--sizes a,b,..] [--gap-us G] [--seed S]
-  artifacts [--dir DIR]                      list the AOT artifact manifest
-  config    [--opt L] [--variant NAME]       dump a system configuration
-
-opt levels: base | sw | hw | swhw (aliases: pim-base, sw-opt, hw-opt, sw-hw-opt, pimacolaba)
-            every --opt site also takes --passes SPEC for an explicit pimc pass
-            set, e.g. --passes swhw,movelim,rowsched or --passes none
-passes:     pairfuse | twiddle | maddsub | movelim | rowsched (and presets above)
-variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024
-routers:    round-robin | size-affinity | least-loaded
-arrivals:   poisson | burst | diurnal
-mixes:      uniform | small-heavy | large-heavy | bimodal
-kinds:      batch1d | fft2d | fft3d | real | convolution | stft — a workload-mix
-            SPEC is 'all', one kind, or a comma list of kind[:weight] terms";
 
 /// The pass set a subcommand runs with: `--passes SPEC` wins, else the
 /// `--opt` preset (default sw-hw-opt). Both branches share
@@ -110,8 +62,13 @@ fn sys_for(passes: PassConfig, variant: &str) -> Result<SystemConfig> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["quick", "verify", "no-artifacts"])?;
-    match args.positional.first().map(|s| s.as_str()) {
+    let known_flags = ["quick", "verify", "no-artifacts", "help", "smoke"];
+    let args = Args::parse(std::env::args().skip(1), &known_flags)?;
+    let sub = args.positional.first().map(|s| s.as_str());
+    if args.flag("help") {
+        return cmd_help(sub);
+    }
+    match sub {
         Some("figures") => cmd_figures(&args),
         Some("plan") => cmd_plan(&args),
         Some("tile") => cmd_tile(&args),
@@ -119,18 +76,35 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("workload") => cmd_workload(&args),
+        Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("config") => cmd_config(&args),
+        Some("help") => cmd_help(args.positional.get(1).map(|s| s.as_str())),
         Some(other) => {
-            eprintln!("{USAGE}");
+            eprintln!("{}", help::usage());
             bail!("unknown subcommand '{other}'")
         }
-        None => {
-            println!("{USAGE}");
-            Ok(())
-        }
+        None => cmd_help(None),
     }
+}
+
+/// `pimacolaba help [sub]` / `pimacolaba [sub] --help`.
+fn cmd_help(sub: Option<&str>) -> Result<()> {
+    match sub.and_then(help::subcommand) {
+        Some(h) => {
+            println!("usage: pimacolaba {} [options]\n", h.name);
+            println!("{}", h.text);
+            println!("\n{}", help::FOOTER);
+        }
+        None => println!("{}", help::usage()),
+    }
+    Ok(())
+}
+
+/// The `--threads` knob shared by serve/cluster/workload/bench.
+fn parse_threads(args: &Args) -> Result<Parallelism> {
+    Parallelism::parse(args.get_or("threads", "1"))
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
@@ -325,6 +299,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect::<Result<_>>()?;
     let passes = parse_passes(args)?;
     let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
+    let threads = parse_threads(args)?;
     let verify = args.flag("verify");
     let artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     // PJRT execution needs both the AOT artifacts on disk and the `pjrt`
@@ -345,7 +320,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sys2 = sys.clone();
     let server = Server::spawn(
         move || {
-            let mut builder = FftEngine::builder().system(&sys2).passes(passes);
+            let mut builder =
+                FftEngine::builder().system(&sys2).passes(passes).parallelism(threads);
             if use_artifacts {
                 let registry =
                     Registry::load(Path::new(&artifacts_dir)).expect("loading artifacts");
@@ -395,6 +371,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let workload = Workload::new(arrival, rps, mix)?.with_kinds(kinds);
     let trace = workload.generate(requests, seed);
     let mut cfg = ClusterConfig::new(sys, passes);
+    cfg.threads = parse_threads(args)?;
     cfg.shards = args.get_usize("shards", 8)?;
     // Capacity planning defaults to a load-spreading router: size-affinity
     // pins each size to one home shard, so on a narrow size mix extra
@@ -470,8 +447,9 @@ fn cmd_workload(args: &Args) -> Result<()> {
     let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
     let out = args.get_or("out", "workload_report.json");
     let kinds = KindMix::parse(args.get_or("kinds", "all"))?;
+    let threads = parse_threads(args)?;
 
-    let mut engine = FftEngine::builder().system(&sys).passes(passes).build();
+    let mut engine = FftEngine::builder().system(&sys).passes(passes).parallelism(threads).build();
     let mut rng = Rng::new(seed);
     let mut kinds_json = Vec::new();
     println!(
@@ -504,6 +482,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
         let mut cfg = ClusterConfig::new(sys.clone(), passes);
         cfg.shards = shards;
         cfg.router = RouterKind::LeastLoaded; // single shape: spread the load
+        cfg.threads = threads;
         let rep = run_cluster(&trace, &cfg)?;
 
         println!(
@@ -591,6 +570,182 @@ fn cmd_workload(args: &Args) -> Result<()> {
         ("system", Json::str(sys.name.clone())),
         ("subject", Json::str("per-kind multi-workload serving report")),
         ("kinds", Json::arr(kinds_json)),
+    ]);
+    std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;
+    println!("wrote JSON report to {out}");
+    Ok(())
+}
+
+/// FNV-1a 64-bit digest — fingerprints a cluster report so thread counts
+/// can be proven byte-identical at a glance in `BENCH_runtime.json`.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Measure the parallel execution runtime and write the repo's perf
+/// trajectory artifact (`BENCH_runtime.json`; schema and comparison
+/// workflow in docs/BENCHMARKING.md).
+///
+/// Two sections:
+/// * `fft` — wall-clock of numeric `run_workload` execution on the host
+///   backend over log2-size × kind × thread-count, with throughput and
+///   speedup vs the 1-thread baseline;
+/// * `cluster` — wall-clock and latency percentiles of the discrete-event
+///   simulator per thread count, with an FNV-1a digest of each JSON report
+///   proving the reports stayed byte-identical while the wall-clock moved.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let out = args.get_or("out", "BENCH_runtime.json");
+    let passes = parse_passes(args)?;
+    let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
+
+    let sizes: Vec<u32> = args
+        .get_or("sizes", if smoke { "12,16" } else { "10,12,14,16,18,20,22,24" })
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().context("parsing --sizes (log2 FFT sizes)"))
+        .collect::<Result<_>>()?;
+    for &ls in &sizes {
+        ensure!((4..=24).contains(&ls), "--sizes takes log2 FFT sizes in 4..=24, got {ls}");
+    }
+    let threads_list: Vec<usize> = args
+        .get_or("threads-list", if smoke { "1,2,8" } else { "1,2,4,8" })
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("parsing --threads-list"))
+        .collect::<Result<_>>()?;
+    ensure!(
+        threads_list.first() == Some(&1),
+        "--threads-list must start with 1 (the speedup baseline)"
+    );
+    let kinds_spec = args.get_or("kinds", if smoke { "batch1d,fft2d" } else { "all" });
+    let kinds = KindMix::parse(kinds_spec)?;
+    let repeat = args.get_usize("repeat", if smoke { 3 } else { 4 })?;
+    ensure!(repeat >= 1, "--repeat must be at least 1");
+    let budget_log2 = args.get_usize("batch-points-log2", 21)?;
+    ensure!(
+        (12..=26).contains(&budget_log2),
+        "--batch-points-log2 must be in 12..=26, got {budget_log2}"
+    );
+    let budget = 1usize << budget_log2;
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "bench: log2 sizes {sizes:?}, kinds {kinds_spec}, threads {threads_list:?}, \
+         repeat {repeat}, ~2^{budget_log2} points/measurement, {host}-thread host"
+    );
+
+    let mut seen = std::collections::BTreeSet::new();
+    let kind_list: Vec<_> = kinds.kinds().into_iter().filter(|&k| seen.insert(k)).collect();
+    let bench = Bench { samples: repeat, warmup: 1 };
+
+    let mut fft_rows = Vec::new();
+    for &kind in &kind_list {
+        for &ls in &sizes {
+            let n = 1usize << ls;
+            if n < kind.min_n() {
+                continue;
+            }
+            let mult = kind.signal_multiple();
+            // Scale the batch to a roughly constant point budget so rows are
+            // comparable, but keep at least two signals so the batch
+            // dimension exists at every size.
+            let batch = ((budget / n).clamp(2, 64) / mult).max(1) * mult;
+            let signals: Vec<SoaVec> =
+                (0..batch).map(|i| SoaVec::random(n, 1000 + i as u64)).collect();
+            let mut base_ns: Option<f64> = None;
+            for &t in &threads_list {
+                let par = if t <= 1 { Parallelism::Sequential } else { Parallelism::Fixed(t) };
+                let mut engine =
+                    FftEngine::builder().system(&sys).passes(passes).parallelism(par).build();
+                let stats = bench.run(&format!("{}/2^{ls}/threads={t}", kind.name()), || {
+                    engine
+                        .run_workload(kind, n, &signals)
+                        .map(|r| r.outputs.len())
+                        .expect("bench workload run failed")
+                });
+                let best = stats.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+                if t == 1 {
+                    base_ns = Some(best);
+                }
+                let points = (n * batch) as f64;
+                fft_rows.push(Json::obj(vec![
+                    ("kind", Json::str(kind.name())),
+                    ("log2_n", Json::num(ls as f64)),
+                    ("n", Json::num(n as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("threads", Json::num(t as f64)),
+                    ("best_ns", Json::num(best)),
+                    ("mean_ns", Json::num(stats.mean_ns())),
+                    ("mpoints_per_s", Json::num(points * 1e3 / best)),
+                    (
+                        "speedup_vs_1t",
+                        base_ns.map(|b| Json::num(b / best)).unwrap_or(Json::Null),
+                    ),
+                ]));
+            }
+        }
+    }
+
+    // Cluster section: same trace per thread count; wall-clock moves,
+    // the report digest must not.
+    let requests = args.get_usize("requests", if smoke { 20_000 } else { 200_000 })?;
+    let cluster_sizes = vec![1usize << 12, 1 << 14, 1 << 16];
+    let workload = Workload::new(Arrival::Poisson, 1_000_000.0, SizeMix::uniform(&cluster_sizes)?)?
+        .with_kinds(kinds.clone());
+    let trace = workload.generate(requests, 7);
+    let mut cluster_rows = Vec::new();
+    let mut base_ms: Option<f64> = None;
+    let mut digest0: Option<String> = None;
+    for &t in &threads_list {
+        let mut cfg = ClusterConfig::new(sys.clone(), passes);
+        cfg.shards = 8;
+        cfg.router = RouterKind::LeastLoaded;
+        cfg.threads = if t <= 1 { Parallelism::Sequential } else { Parallelism::Fixed(t) };
+        let t0 = Instant::now();
+        let rep = run_cluster(&trace, &cfg)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let digest = format!("{:016x}", fnv1a64(rep.to_json().to_string().as_bytes()));
+        match &digest0 {
+            None => digest0 = Some(digest.clone()),
+            Some(d) => ensure!(
+                *d == digest,
+                "cluster report diverged at --threads {t}: determinism violated"
+            ),
+        }
+        if t == 1 {
+            base_ms = Some(wall_ms);
+        }
+        println!(
+            "bench cluster/threads={t}: {requests} requests in {wall_ms:.1} ms wall, \
+             p99 {:.1} µs, digest {digest}",
+            rep.latency_p_us(99.0)
+        );
+        cluster_rows.push(Json::obj(vec![
+            ("shards", Json::num(8.0)),
+            ("threads", Json::num(t as f64)),
+            ("requests", Json::num(requests as f64)),
+            ("wall_ms", Json::num(wall_ms)),
+            ("p50_us", Json::num(rep.latency_p_us(50.0))),
+            ("p99_us", Json::num(rep.latency_p_us(99.0))),
+            ("throughput_rps", Json::num(rep.throughput_rps())),
+            ("speedup_vs_1t", base_ms.map(|b| Json::num(b / wall_ms)).unwrap_or(Json::Null)),
+            ("report_fnv1a64", Json::str(digest)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("subject", Json::str("parallel execution runtime perf baseline")),
+        ("smoke", Json::Bool(smoke)),
+        ("system", Json::str(sys.name.clone())),
+        ("passes", Json::str(passes.name())),
+        ("host_parallelism", Json::num(host as f64)),
+        ("batch_points_log2", Json::num(budget_log2 as f64)),
+        ("fft", Json::arr(fft_rows)),
+        ("cluster", Json::arr(cluster_rows)),
     ]);
     std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;
     println!("wrote JSON report to {out}");

@@ -1,14 +1,47 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, lowered by
-//! `python/compile/aot.py` from the L2 jax model + L1 Pallas kernel) and
-//! executes them on the XLA CPU client from the rust request path.
+//! Execution runtime: the work-stealing thread pool behind every
+//! `--threads N` surface, plus the PJRT artifact glue.
 //!
-//! Python runs only at build time; after `make artifacts` the coordinator is
-//! a self-contained binary. Interchange is **HLO text** — see aot.py and
-//! /opt/xla-example/README.md for why serialized protos are rejected by
-//! xla_extension 0.5.1.
+//! Two halves live here:
+//!
+//! * [`pool`] — the parallel execution runtime. [`ThreadPool`] is a
+//!   work-stealing pool (std threads only: per-worker deques, round-robin
+//!   injection, caller participation, so nested regions can't deadlock) and
+//!   [`Parallelism`] is the knob that selects it: the `FftEngine` builder's
+//!   [`crate::backend::FftEngineBuilder::parallelism`], the cluster
+//!   simulator's [`crate::cluster::ClusterConfig::threads`], and the CLI's
+//!   `--threads N` all take one. Parallel maps are index-ordered and every
+//!   fanned-out unit is a pure function, so outputs stay **bit-identical**
+//!   across thread counts — see `rust/tests/parallel_runtime.rs`.
+//! * PJRT glue ([`Registry`], [`Runtime`]): loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`, lowered by `python/compile/aot.py` from the L2
+//!   jax model + L1 Pallas kernel) and executes them on the XLA CPU client
+//!   from the rust request path. Python runs only at build time; after
+//!   `make artifacts` the coordinator is a self-contained binary.
+//!   Interchange is **HLO text** — see aot.py for why serialized protos are
+//!   rejected by xla_extension 0.5.1. Without the `pjrt` cargo feature the
+//!   registry still parses manifests but execution falls back to the host
+//!   backend.
+//!
+//! End to end, parallelism reaches the engine like this:
+//!
+//! ```
+//! use pimacolaba::backend::FftEngine;
+//! use pimacolaba::fft::SoaVec;
+//! use pimacolaba::runtime::Parallelism;
+//!
+//! let mut engine = FftEngine::builder().parallelism(Parallelism::Fixed(2)).build();
+//! let signals: Vec<SoaVec> = (0..4).map(|i| SoaVec::random(512, i as u64)).collect();
+//! let run = engine.run(512, &signals).unwrap();
+//! assert_eq!(run.outputs.len(), 4);
+//! // Same inputs on a sequential engine: bit-identical spectra.
+//! let mut seq = FftEngine::builder().build();
+//! assert_eq!(seq.run(512, &signals).unwrap().outputs, run.outputs);
+//! ```
 
 mod artifact;
 mod client;
+pub mod pool;
 
 pub use artifact::{ArtifactKind, ArtifactSpec, Registry};
 pub use client::Runtime;
+pub use pool::{Parallelism, ThreadPool, MIN_PAR_POINTS};

@@ -1,0 +1,483 @@
+//! Work-stealing parallel execution runtime (std threads only).
+//!
+//! The paper's whole argument is throughput-driven, yet a single host thread
+//! cannot saturate even the modeled memory system — so every numeric hot
+//! path (batched 1D FFT passes, workload transposes/gathers, cluster
+//! pre-planning) fans out over this pool when an engine is built with a
+//! [`Parallelism`] other than [`Parallelism::Sequential`].
+//!
+//! Design:
+//!
+//! * **One deque per worker + work stealing.** [`ThreadPool::new`]`(t)`
+//!   spawns `t − 1` workers; the calling thread is the `t`-th participant.
+//!   Parallel regions split into ~4 chunks per thread, injected round-robin
+//!   across the worker deques; a worker pops its own deque front-first and
+//!   steals from its peers' backs when empty, so imbalanced chunks (e.g. a
+//!   mixed-size FFT batch) rebalance automatically.
+//! * **The caller helps.** [`ThreadPool::map_indexed`] blocks until its own
+//!   chunks finish, and while blocked it executes queued chunks itself.
+//!   Nested parallel regions therefore cannot deadlock: a worker whose chunk
+//!   opens an inner region simply works through the inner chunks too.
+//! * **Determinism.** Chunks write disjoint, index-ordered output slots and
+//!   every chunk is a pure function of its indices, so results are
+//!   bit-identical for every thread count — the property the cluster
+//!   simulator's byte-identical JSON reports and the `--threads 1/2/8`
+//!   determinism tests rely on.
+//! * **Panic safety.** A panicking chunk poisons the region's latch and the
+//!   panic resumes on the calling thread after the region drains; the pool
+//!   itself stays usable.
+//!
+//! ```
+//! use pimacolaba::runtime::ThreadPool;
+//!
+//! let pool = ThreadPool::new(2);
+//! let squares = pool.map_indexed(16, |i| i * i);
+//! assert_eq!(squares[5], 25);
+//! ```
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Smallest total work size (complex points) worth fanning out; below this
+/// the per-chunk queueing overhead beats the parallel win, so call sites
+/// stay inline.
+pub const MIN_PAR_POINTS: usize = 1 << 12;
+
+/// How many threads a runtime surface uses — the knob on
+/// `backend::FftEngine`'s builder, `cluster::ClusterConfig`, and every
+/// `--threads N` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Everything runs inline on the calling thread (the default; matches
+    /// the pre-runtime behavior exactly).
+    #[default]
+    Sequential,
+    /// A fixed thread count (callers + spawned workers).
+    Fixed(usize),
+    /// One thread per available hardware thread.
+    Auto,
+}
+
+impl Parallelism {
+    /// Parse a `--threads` value: a positive count, or `auto`.
+    pub fn parse(s: &str) -> Result<Parallelism> {
+        match s {
+            "auto" => Ok(Parallelism::Auto),
+            other => match other.parse::<usize>() {
+                Ok(0) => bail!("--threads must be at least 1"),
+                Ok(1) => Ok(Parallelism::Sequential),
+                Ok(n) => Ok(Parallelism::Fixed(n)),
+                Err(_) => bail!("--threads expects a positive count or 'auto', got '{other}'"),
+            },
+        }
+    }
+
+    /// The thread count this knob resolves to (1 = run inline).
+    pub fn threads(self) -> usize {
+        match self {
+            Parallelism::Sequential => 1,
+            Parallelism::Fixed(n) => n.max(1),
+            Parallelism::Auto => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+        }
+    }
+
+    /// Build the pool this knob asks for, or `None` for sequential
+    /// execution (callers then run inline and spawn nothing).
+    pub fn pool(self) -> Option<Arc<ThreadPool>> {
+        match self.threads() {
+            0 | 1 => None,
+            n => Some(Arc::new(ThreadPool::new(n))),
+        }
+    }
+}
+
+impl fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Parallelism::Sequential => f.write_str("1"),
+            Parallelism::Fixed(n) => write!(f, "{n}"),
+            Parallelism::Auto => f.write_str("auto"),
+        }
+    }
+}
+
+/// A queued unit of work. Lifetime-erased: the latch protocol guarantees
+/// every job finishes before the borrows it captures go out of scope.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one parallel region. The final `count_down` flips
+/// `done` **under the mutex**, so a waiter can only observe completion after
+/// the last worker is finished touching the latch — the latch may then drop.
+struct Latch {
+    remaining: AtomicUsize,
+    done: Mutex<bool>,
+    cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Self {
+            remaining: AtomicUsize::new(count),
+            done: Mutex::new(count == 0),
+            cv: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn count_down(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.done.lock().unwrap();
+            *done = true;
+            self.cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.done.lock().unwrap()
+    }
+
+    /// Wait briefly for completion; returns whether the region is done.
+    fn wait_timeout(&self, dur: Duration) -> bool {
+        let done = self.done.lock().unwrap();
+        if *done {
+            return true;
+        }
+        let (done, _) = self.cv.wait_timeout(done, dur).unwrap();
+        *done
+    }
+
+    fn poison(&self, payload: Box<dyn std::any::Any + Send>) {
+        let mut p = self.panic.lock().unwrap();
+        if p.is_none() {
+            *p = Some(payload);
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        self.panic.lock().unwrap().take()
+    }
+}
+
+struct Shared {
+    /// One deque per spawned worker; chunks are injected round-robin and
+    /// idle participants steal from the back.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Sleep/wake signalling for idle workers.
+    lock: Mutex<()>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// Round-robin injection cursor.
+    next: AtomicUsize,
+}
+
+impl Shared {
+    fn has_jobs(&self) -> bool {
+        self.queues.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+
+    /// Pop a job, preferring `me`'s own deque front (LIFO-ish locality),
+    /// then stealing from peers' backs.
+    fn find_job(&self, me: usize) -> Option<Job> {
+        let k = self.queues.len();
+        if let Some(job) = self.queues[me % k].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        for i in 1..k {
+            if let Some(job) = self.queues[(me + i) % k].lock().unwrap().pop_back() {
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+/// The work-stealing pool. Create one per `--threads N` surface, or share
+/// one `Arc<ThreadPool>` across engines (the cluster simulator's shards do).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total participants: `threads − 1` spawned
+    /// workers plus the calling thread of every parallel region.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let spawned = threads - 1;
+        let shared = Arc::new(Shared {
+            queues: (0..spawned.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next: AtomicUsize::new(0),
+        });
+        let workers = (0..spawned)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pimacolaba-pool-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, workers, threads }
+    }
+
+    /// Total participants (spawned workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Parallel indexed map: computes `f(0..len)` across the pool and
+    /// returns the results **in index order**, so output is bit-identical
+    /// to the sequential `(0..len).map(f)` whenever `f` is pure.
+    ///
+    /// The calling thread participates (and drains other queued chunks
+    /// while waiting), so nested maps are deadlock-free. A panic inside `f`
+    /// resumes on the calling thread after the region drains.
+    pub fn map_indexed<T, F>(&self, len: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if len == 0 {
+            return Vec::new();
+        }
+        if self.threads <= 1 || len == 1 {
+            return (0..len).map(f).collect();
+        }
+        let mut out: Vec<Option<T>> = Vec::with_capacity(len);
+        out.resize_with(len, || None);
+
+        // ~4 chunks per participant bounds stealing imbalance without
+        // drowning small maps in per-chunk overhead.
+        let chunk_len = len.div_ceil(self.threads * 4).max(1);
+        let chunks = len.div_ceil(chunk_len);
+
+        let latch = Latch::new(chunks);
+        {
+            let f_ref: &(dyn Fn(usize) -> T + Sync) = &f;
+            let latch_ref: &Latch = &latch;
+            let mut rest: &mut [Option<T>] = &mut out;
+            let mut base = 0usize;
+            while !rest.is_empty() {
+                let take = chunk_len.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let start = base;
+                base += take;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                        for (j, slot) in head.iter_mut().enumerate() {
+                            *slot = Some(f_ref(start + j));
+                        }
+                    }));
+                    if let Err(payload) = result {
+                        latch_ref.poison(payload);
+                    }
+                    latch_ref.count_down();
+                });
+                // SAFETY: the job borrows `f`, `out` slices and `latch`,
+                // all of which outlive it — `help_until` below returns only
+                // after the latch confirms every chunk has fully finished
+                // (the final count_down completes under the latch mutex).
+                let job: Job = unsafe { erase_job_lifetime(job) };
+                self.inject(job);
+            }
+            self.help_until(&latch);
+        }
+        if let Some(payload) = latch.take_panic() {
+            panic::resume_unwind(payload);
+        }
+        out.into_iter()
+            .map(|slot| slot.expect("pool chunk completed without filling its slots"))
+            .collect()
+    }
+
+    /// Parallel slice map in input order — convenience over
+    /// [`ThreadPool::map_indexed`].
+    pub fn map_slice<T, U, F>(&self, items: &[U], f: F) -> Vec<T>
+    where
+        T: Send,
+        U: Sync,
+        F: Fn(&U) -> T + Sync,
+    {
+        self.map_indexed(items.len(), |i| f(&items[i]))
+    }
+
+    fn inject(&self, job: Job) {
+        let i = self.shared.next.fetch_add(1, Ordering::Relaxed) % self.shared.queues.len();
+        self.shared.queues[i].lock().unwrap().push_back(job);
+        // Notify under the sleep lock so a worker between its empty-scan
+        // and its wait cannot miss this job.
+        let _guard = self.shared.lock.lock().unwrap();
+        self.shared.cv.notify_all();
+    }
+
+    /// Run queued jobs on the calling thread until `latch` completes.
+    fn help_until(&self, latch: &Latch) {
+        loop {
+            if latch.is_done() {
+                return;
+            }
+            // `threads` (not a real worker index): steals round-robin.
+            if let Some(job) = self.shared.find_job(self.threads) {
+                job();
+                continue;
+            }
+            if latch.wait_timeout(Duration::from_micros(200)) {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _guard = self.shared.lock.lock().unwrap();
+            self.shared.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    loop {
+        if let Some(job) = shared.find_job(me) {
+            job();
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let guard = shared.lock.lock().unwrap();
+        // Re-check under the lock (injection notifies under it), then take
+        // a timed wait as a belt-and-braces bound on any missed wakeup.
+        if shared.shutdown.load(Ordering::Acquire) || shared.has_jobs() {
+            continue;
+        }
+        let (_guard, _timeout) = shared.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+    }
+}
+
+/// Erase a scoped job's lifetime so it can sit in the `'static` queues.
+///
+/// # Safety
+///
+/// The caller must not let any borrow captured by `job` go out of scope
+/// until the job has fully finished running (enforced here by the latch
+/// protocol in [`ThreadPool::map_indexed`]).
+unsafe fn erase_job_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(job)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let got = pool.map_indexed(1000, |i| i * 3);
+        assert_eq!(got, (0..1000).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_matches_sequential_for_every_thread_count() {
+        let want: Vec<u64> = (0..257u64).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+        for threads in [1, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = pool.map_indexed(want.len(), |i| (i as u64).wrapping_mul(0x9E3779B9));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_maps_run_inline() {
+        let pool = ThreadPool::new(3);
+        assert!(pool.map_indexed(0, |i| i).is_empty());
+        assert_eq!(pool.map_indexed(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn map_slice_borrows_inputs() {
+        let pool = ThreadPool::new(2);
+        let items: Vec<String> = (0..100).map(|i| format!("x{i}")).collect();
+        let lens = pool.map_slice(&items, |s| s.len());
+        assert_eq!(lens[0], 2);
+        assert_eq!(lens[10], 3);
+    }
+
+    #[test]
+    fn nested_maps_do_not_deadlock() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let inner = Arc::clone(&pool);
+        let sum_row = move |i: usize| inner.map_indexed(8, |j| i * j).iter().sum::<usize>();
+        let got = pool.map_indexed(8, sum_row);
+        assert_eq!(got[3], 3 * (0..8).sum::<usize>());
+    }
+
+    #[test]
+    fn panics_propagate_to_the_caller() {
+        let pool = ThreadPool::new(2);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map_indexed(64, |i| {
+                if i == 13 {
+                    panic!("boom at 13");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "panic in a chunk must resume on the caller");
+        // The pool survives a poisoned region.
+        assert_eq!(pool.map_indexed(4, |i| i)[3], 3);
+    }
+
+    #[test]
+    fn parallelism_parses_and_resolves() {
+        assert_eq!(Parallelism::parse("1").unwrap(), Parallelism::Sequential);
+        assert_eq!(Parallelism::parse("8").unwrap(), Parallelism::Fixed(8));
+        assert_eq!(Parallelism::parse("auto").unwrap(), Parallelism::Auto);
+        assert!(Parallelism::parse("0").is_err());
+        assert!(Parallelism::parse("lots").is_err());
+        assert_eq!(Parallelism::Sequential.threads(), 1);
+        assert_eq!(Parallelism::Fixed(6).threads(), 6);
+        assert!(Parallelism::Auto.threads() >= 1);
+        assert!(Parallelism::Sequential.pool().is_none());
+        assert_eq!(Parallelism::Fixed(2).pool().unwrap().threads(), 2);
+        assert_eq!(Parallelism::Fixed(4).to_string(), "4");
+        assert_eq!(Parallelism::Sequential.to_string(), "1");
+    }
+
+    #[test]
+    fn results_flow_across_many_regions() {
+        // Reuse one pool for many regions back to back — queues must drain
+        // fully between regions.
+        let pool = ThreadPool::new(4);
+        for round in 0..50usize {
+            let got = pool.map_indexed(17, |i| i + round);
+            assert_eq!(got[16], 16 + round);
+        }
+    }
+}

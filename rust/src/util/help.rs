@@ -1,0 +1,165 @@
+//! CLI usage text, shared between the `pimacolaba` binary and the docs
+//! drift check.
+//!
+//! Every subcommand's help block lives here **once**: `main.rs` prints it
+//! (`pimacolaba <sub> --help`, `pimacolaba help [sub]`, and the no-argument
+//! usage screen all assemble from these constants), README.md embeds the
+//! same text verbatim in its CLI section, and `rust/tests/cli_docs.rs`
+//! fails the build when they drift apart. To change a flag: edit the block
+//! here, then paste the new [`usage`] output into README's CLI code fence.
+//!
+//! The multiline literals below intentionally start continuation lines at
+//! column zero — a `\` line-continuation would strip the indentation the
+//! usage columns depend on.
+
+/// One subcommand's help: the exact block the CLI prints for it.
+pub struct SubcommandHelp {
+    pub name: &'static str,
+    /// The verbatim help text (also embedded in README.md).
+    pub text: &'static str,
+}
+
+/// Every subcommand, in the canonical (usage screen) order.
+pub const SUBCOMMANDS: &[SubcommandHelp] = &[
+    SubcommandHelp {
+        name: "figures",
+        text: "  figures   [--out DIR] [--quick]            regenerate every paper figure/table",
+    },
+    SubcommandHelp {
+        name: "plan",
+        text: "  plan      --n N [--batch B] [--opt L]      show + evaluate the chosen plan
+            [--passes SPEC] [--variant NAME]",
+    },
+    SubcommandHelp {
+        name: "tile",
+        text: "  tile      --n N [--opt L] [--passes SPEC]  PIM-FFT-Tile cost breakdown
+            [--variant NAME]",
+    },
+    SubcommandHelp {
+        name: "passes",
+        text: "  passes    [--sizes 5,6,..] [--out FILE]    per-pass lowering ablation over the
+            [--variant NAME]                 Fig 16 tile sizes; writes a JSON
+                                             artifact with per-pass deltas",
+    },
+    SubcommandHelp {
+        name: "serve",
+        text: "  serve     [--requests R] [--sizes a,b,..]  run the live service over a
+            [--opt L] [--passes SPEC]        synthetic trace and print host
+            [--variant NAME] [--threads N]   latency percentiles
+            [--artifacts DIR] [--no-artifacts]
+            [--verify] [--seed S]",
+    },
+    SubcommandHelp {
+        name: "cluster",
+        text: "  cluster   [--shards K] [--router NAME]     simulate K shards serving an
+            [--arrival A] [--rps R]          open-loop trace in virtual time;
+            [--requests N] [--sizes a,b,..]  with --slo-us, binary-search the
+            [--mix PROFILE] [--window S]     minimal shard count meeting the
+            [--wait-us W] [--slo-us T]       p99 target. --workload-mix routes
+            [--max-shards M] [--seed S]      mixed request kinds; --threads
+            [--out FILE] [--opt L]           pre-plans in parallel (reports
+            [--passes SPEC] [--variant NAME] stay byte-identical). Writes a
+            [--workload-mix SPEC]            JSON report artifact to --out.
+            [--threads N]",
+    },
+    SubcommandHelp {
+        name: "workload",
+        text: "  workload  [--n N] [--batch B] [--kinds SPEC] per-kind serving report: decompose
+            [--requests R] [--rps R]         each workload kind into its 1D FFT
+            [--shards K] [--seed S]          passes (substrate split per pass),
+            [--out FILE] [--opt L]           smoke-run it numerically, and
+            [--passes SPEC] [--variant NAME] measure latency percentiles on a
+            [--threads N]                    cluster sim. Writes a JSON report
+                                             artifact to --out.",
+    },
+    SubcommandHelp {
+        name: "bench",
+        text: "  bench     [--smoke] [--out FILE]           measure the parallel runtime: sweep
+            [--sizes 10,12,..] [--kinds SPEC] log2 FFT sizes x workload kinds x
+            [--threads-list 1,2,8]           thread counts on the host backend,
+            [--batch-points-log2 P]          plus a cluster-sim wall-clock/p99
+            [--requests N] [--repeat R]      section, then write the
+            [--opt L] [--passes SPEC]        BENCH_runtime.json perf-trajectory
+            [--variant NAME]                 artifact (see docs/BENCHMARKING.md)",
+    },
+    SubcommandHelp {
+        name: "trace",
+        text: "  trace     [--out FILE] [--requests R]      emit a reproducible workload trace
+            [--sizes a,b,..] [--gap-us G] [--seed S]",
+    },
+    SubcommandHelp {
+        name: "artifacts",
+        text: "  artifacts [--dir DIR]                      list the AOT artifact manifest",
+    },
+    SubcommandHelp {
+        name: "config",
+        text: "  config    [--opt L] [--passes SPEC]        dump a system configuration
+            [--variant NAME]",
+    },
+];
+
+/// The legend shared by every help screen.
+pub const FOOTER: &str = "opt levels: base | sw | hw | swhw (aliases: pim-base, sw-opt, hw-opt, sw-hw-opt,
+            pimacolaba)
+passes:     every --opt site also takes --passes SPEC for an explicit pimc pass
+            set: a preset, 'none', or a comma list over pairfuse | twiddle |
+            maddsub | movelim | rowsched, e.g. --passes swhw,movelim,rowsched
+variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024
+routers:    round-robin | size-affinity | least-loaded
+arrivals:   poisson | burst | diurnal
+mixes:      uniform | small-heavy | large-heavy | bimodal
+kinds:      batch1d | fft2d | fft3d | real | convolution | stft — a kind SPEC
+            ('--kinds', '--workload-mix') is 'all', one kind, or a comma list
+            of kind[:weight] terms
+threads:    --threads N (or 'auto') fans work out over the work-stealing
+            parallel runtime; outputs are bit-identical to --threads 1";
+
+/// The full usage screen (`pimacolaba` with no arguments, `pimacolaba help`).
+pub fn usage() -> String {
+    let mut s = String::from("usage: pimacolaba <subcommand> [options]\n\nsubcommands:\n");
+    for sub in SUBCOMMANDS {
+        s.push_str(sub.text);
+        s.push('\n');
+    }
+    s.push('\n');
+    s.push_str(FOOTER);
+    s
+}
+
+/// Look up one subcommand's help (`pimacolaba <sub> --help`).
+pub fn subcommand(name: &str) -> Option<&'static SubcommandHelp> {
+    SUBCOMMANDS.iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_block_names_its_subcommand() {
+        for sub in SUBCOMMANDS {
+            assert!(
+                sub.text.trim_start().starts_with(sub.name),
+                "help block for '{}' must lead with its name",
+                sub.name
+            );
+            assert!(
+                sub.text.starts_with("  "),
+                "help block for '{}' lost its two-space indent (check for stray \\ \
+                 line-continuations)",
+                sub.name
+            );
+        }
+        assert!(subcommand("cluster").is_some());
+        assert!(subcommand("nope").is_none());
+    }
+
+    #[test]
+    fn usage_contains_every_block_and_the_footer() {
+        let u = usage();
+        for sub in SUBCOMMANDS {
+            assert!(u.contains(sub.text), "usage() lost the '{}' block", sub.name);
+        }
+        assert!(u.contains(FOOTER));
+    }
+}

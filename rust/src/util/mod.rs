@@ -1,10 +1,13 @@
 //! Small self-contained utilities standing in for crates unavailable in the
 //! offline build environment: a JSON parser/emitter (`serde_json`), a
 //! deterministic RNG (`rand`), a micro-benchmark harness (`criterion`), a
-//! property-test helper (`proptest`), and a CLI argument parser (`clap`).
+//! property-test helper (`proptest`), and a CLI argument parser (`clap`) —
+//! plus [`help`], the single source of truth for the CLI usage text (shared
+//! by `main.rs`, README.md, and the `cli_docs` drift test).
 
 pub mod benchkit;
 pub mod cli;
+pub mod help;
 pub mod json;
 pub mod prop;
 pub mod rng;

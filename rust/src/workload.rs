@@ -29,6 +29,20 @@
 //! weighted distribution over kinds the trace generator samples, so the
 //! cluster simulator's capacity answers hold for realistic mixed-workload
 //! traffic (`cluster --workload-mix`).
+//!
+//! End to end, a kind rides the engine like this (any kind, same call):
+//!
+//! ```
+//! use pimacolaba::backend::FftEngine;
+//! use pimacolaba::fft::SoaVec;
+//! use pimacolaba::workload::WorkloadKind;
+//!
+//! let mut engine = FftEngine::builder().build();
+//! let images: Vec<SoaVec> = (0..2).map(|i| SoaVec::random(64, i as u64)).collect();
+//! let run = engine.run_workload(WorkloadKind::Fft2d, 64, &images).unwrap();
+//! assert_eq!(run.outputs.len(), 2); // one 8×8 spectrum per image
+//! assert_eq!(run.eval.passes.len(), 2); // rows pass + cols pass, each planned
+//! ```
 
 use std::fmt;
 

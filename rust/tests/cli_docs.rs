@@ -1,0 +1,68 @@
+//! README ↔ CLI drift check.
+//!
+//! The CLI's help text lives once, in `util::help`; README.md embeds it
+//! verbatim in its CLI section. This test (which runs in CI) fails when
+//! they diverge — the fix is to edit `rust/src/util/help.rs` and paste the
+//! new `usage()` output into README's ```text fence.
+
+use pimacolaba::util::help;
+
+const README: &str = include_str!("../../README.md");
+
+#[test]
+fn readme_embeds_every_subcommand_help_verbatim() {
+    for sub in help::SUBCOMMANDS {
+        assert!(
+            README.contains(sub.text),
+            "README.md is missing the verbatim --help block for '{}'.\n\
+             Expected block:\n{}\n\
+             Regenerate the CLI section from util::help::usage().",
+            sub.name,
+            sub.text
+        );
+    }
+}
+
+#[test]
+fn readme_embeds_the_cli_legend() {
+    assert!(
+        README.contains(help::FOOTER),
+        "README.md is missing the CLI legend (util::help::FOOTER) verbatim"
+    );
+}
+
+#[test]
+fn readme_embeds_the_full_usage_screen() {
+    assert!(
+        README.contains(&help::usage()),
+        "README.md's CLI fence must contain the exact util::help::usage() output"
+    );
+}
+
+#[test]
+fn readme_links_the_docs_site() {
+    for link in ["docs/ARCHITECTURE.md", "docs/BENCHMARKING.md"] {
+        assert!(README.contains(link), "README.md must link {link}");
+    }
+}
+
+#[test]
+fn every_dispatched_subcommand_has_a_help_block() {
+    // The dispatcher in main.rs matches these names; keep the list in sync
+    // with `help::SUBCOMMANDS` so `--help` never 404s on a real subcommand.
+    for name in [
+        "figures",
+        "plan",
+        "tile",
+        "passes",
+        "serve",
+        "cluster",
+        "workload",
+        "bench",
+        "trace",
+        "artifacts",
+        "config",
+    ] {
+        assert!(help::subcommand(name).is_some(), "no help block for subcommand '{name}'");
+    }
+}

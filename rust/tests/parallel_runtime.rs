@@ -1,0 +1,132 @@
+//! Cross-thread determinism of the parallel execution runtime.
+//!
+//! The contract under test: `--threads N` changes wall-clock time and
+//! nothing else. Cluster JSON reports must be **byte-identical** across
+//! thread counts for a fixed seed, and parallel `run_workload` must match
+//! the single-threaded result **bit-for-bit** for every `WorkloadKind`.
+
+use pimacolaba::backend::FftEngine;
+use pimacolaba::cluster::{run_cluster, warm_plans, ClusterConfig};
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{Arrival, SizeMix, Workload};
+use pimacolaba::fft::SoaVec;
+use pimacolaba::runtime::Parallelism;
+use pimacolaba::util::prop::forall_cases;
+use pimacolaba::workload::{KindMix, WorkloadKind, ALL_KINDS};
+
+fn engine(par: Parallelism) -> FftEngine {
+    FftEngine::builder()
+        .system(&SystemConfig::baseline().with_hw_opt())
+        .parallelism(par)
+        .build()
+}
+
+/// The tentpole determinism guarantee: one mixed-kind, mixed-size trace,
+/// identical JSON bytes at `--threads 1`, `2` and `8`.
+#[test]
+fn cluster_reports_are_byte_identical_across_threads_1_2_8() {
+    let mix = SizeMix::uniform(&[64, 4096, 16384]).unwrap();
+    let trace = Workload::new(Arrival::Poisson, 400_000.0, mix)
+        .unwrap()
+        .with_kinds(KindMix::parse("all").unwrap())
+        .generate(3_000, 7);
+    let mut reference: Option<String> = None;
+    for par in [Parallelism::Sequential, Parallelism::Fixed(2), Parallelism::Fixed(8)] {
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 4;
+        cfg.threads = par;
+        let json = run_cluster(&trace, &cfg).unwrap().to_json().to_string();
+        match &reference {
+            None => reference = Some(json),
+            Some(want) => {
+                assert_eq!(&json, want, "cluster report changed bytes at --threads {par}")
+            }
+        }
+    }
+}
+
+/// Capacity planning rides the same engine path; the planner's answer (and
+/// its probe curve) must not depend on the thread count either.
+#[test]
+fn capacity_plans_are_identical_across_thread_counts() {
+    use pimacolaba::cluster::{plan_capacity, RouterKind};
+    // Same overload shape the capacity suite plans successfully: large FFTs
+    // at a rate one shard cannot hold, spread by a non-affinity router.
+    let mix = SizeMix::uniform(&[16384]).unwrap();
+    let trace = Workload::new(Arrival::Poisson, 4_000_000.0, mix).unwrap().generate(3_000, 13);
+    let mut cfg = ClusterConfig::default_hw();
+    cfg.router = RouterKind::RoundRobin;
+    let seq = plan_capacity(&trace, &cfg, 150.0, 64).unwrap();
+    cfg.threads = Parallelism::Fixed(4);
+    let par = plan_capacity(&trace, &cfg, 150.0, 64).unwrap();
+    assert_eq!(seq.to_json().to_string(), par.to_json().to_string());
+}
+
+/// The warm table pre-computes every plan shape the trace can dispatch;
+/// a warmed shard engine must report the same plan-cache stats as a cold
+/// one (warm hits still count as misses — wall-clock only).
+#[test]
+fn warm_plans_cover_the_trace_without_touching_stats() {
+    let mix = SizeMix::uniform(&[256, 8192]).unwrap();
+    let trace = Workload::new(Arrival::Poisson, 300_000.0, mix).unwrap().generate(500, 3);
+    let mut cfg = ClusterConfig::default_hw();
+    cfg.threads = Parallelism::Fixed(2);
+    let warm = warm_plans(&trace, &cfg).unwrap();
+    assert!(!warm.is_empty(), "a non-trivial trace must produce warm entries");
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.threads = Parallelism::Sequential;
+    let cold = run_cluster(&trace, &seq_cfg).unwrap();
+    let warmed = run_cluster(&trace, &cfg).unwrap();
+    assert_eq!(cold.cache_hits, warmed.cache_hits);
+    assert_eq!(cold.cache_misses, warmed.cache_misses);
+}
+
+/// Property: for every `WorkloadKind`, random shapes and signals, the
+/// parallel engine's outputs equal the sequential engine's **bitwise**
+/// (`SoaVec` equality is exact f32 equality — no tolerance).
+#[test]
+fn parallel_run_workload_matches_sequential_bit_for_bit() {
+    forall_cases("parallel workload parity", 24, |rng| {
+        let kind = ALL_KINDS[rng.range(0, ALL_KINDS.len())];
+        let lg = rng.range(10, 13); // 2^10..2^12: crosses the fan-out threshold
+        let n = (1usize << lg).max(kind.min_n());
+        let mult = kind.signal_multiple();
+        let units = rng.range(2, 7);
+        let signals: Vec<SoaVec> =
+            (0..units * mult).map(|_| SoaVec::random(n, rng.next_u64())).collect();
+        let seq = engine(Parallelism::Sequential).run_workload(kind, n, &signals).unwrap();
+        let par = engine(Parallelism::Fixed(3)).run_workload(kind, n, &signals).unwrap();
+        assert_eq!(seq.outputs.len(), par.outputs.len(), "{kind} n={n}");
+        for (i, (a, b)) in seq.outputs.iter().zip(&par.outputs).enumerate() {
+            assert!(a == b, "{kind} n={n}: output {i} differs between 1 and 3 threads");
+        }
+    });
+}
+
+/// The plain 1D serving path (`FftEngine::run`) through a collaborative
+/// GPU+PIM plan is also bit-stable, including the PIM tile row split and
+/// the four-step gather.
+#[test]
+fn collaborative_run_is_bit_stable_across_thread_counts() {
+    let n = 1 << 13;
+    let signals: Vec<SoaVec> = (0..4).map(|i| SoaVec::random(n, 21 + i)).collect();
+    let want = engine(Parallelism::Sequential).run(n, &signals).unwrap().outputs;
+    for t in [2, 8] {
+        let got = engine(Parallelism::Fixed(t)).run(n, &signals).unwrap().outputs;
+        assert_eq!(got, want, "threads={t}");
+    }
+}
+
+/// A kind whose decomposition exercises the tiled transpose (fft2d) at a
+/// size where bands are partial (c not a multiple of the tile width is
+/// impossible for powers of two, but c < tile is) — the flatten-back path.
+#[test]
+fn small_fft2d_bands_survive_parallel_flatten() {
+    for lg in [4usize, 6, 8, 12] {
+        let n = 1usize << lg;
+        let signals: Vec<SoaVec> = (0..3).map(|i| SoaVec::random(n, 77 + i)).collect();
+        let a = engine(Parallelism::Sequential).run_workload(WorkloadKind::Fft2d, n, &signals);
+        let b = engine(Parallelism::Fixed(4)).run_workload(WorkloadKind::Fft2d, n, &signals);
+        assert_eq!(a.unwrap().outputs, b.unwrap().outputs, "n={n}");
+    }
+}
