@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Cross-PR perf regression gate over BENCH_runtime.json artifacts.
+
+Compares a freshly measured bench report (the candidate) against a baseline
+report (the committed BENCH_runtime.json, or a downloaded CI artifact from
+the base branch) and fails when throughput regressed beyond the allowed
+drop. Schema: docs/BENCHMARKING.md.
+
+What is gated:
+  * ``fft`` rows — matched on (kind, log2_n, threads); the metric is
+    ``mpoints_per_s`` (higher is better).
+  * ``cluster`` rows — matched on (shards, threads); the metric is
+    ``throughput_rps`` (higher is better).
+
+A baseline with ``"pending": true`` (the pre-measurement stub) or with no
+matching rows gates nothing — the gate reports SKIP and exits 0, so the
+first measured run can land and become the baseline. Rows present only on
+one side are ignored (bench sweeps may grow), but a candidate that lost
+*every* baseline row is an error: that is a schema break, not progress.
+
+Usage:
+  python3 python/tools/bench_gate.py BASELINE.json CANDIDATE.json \
+      [--max-drop-pct 15]
+
+Exit codes: 0 pass/skip, 1 regression, 2 bad input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(doc, dict):
+        print(f"bench-gate: {path} is not a JSON object", file=sys.stderr)
+        sys.exit(2)
+    return doc
+
+
+def index_rows(doc: dict, section: str, key_fields: tuple, metric: str) -> dict:
+    """Map row-key tuple -> metric value for one report section."""
+    out = {}
+    for row in doc.get(section, []):
+        try:
+            key = tuple(row[k] for k in key_fields)
+            value = float(row[metric])
+        except (KeyError, TypeError, ValueError):
+            continue  # malformed row: not comparable, not fatal
+        if value > 0:
+            out[key] = value
+    return out
+
+
+def compare(
+    name: str, base: dict, cand: dict, max_drop_pct: float
+) -> tuple[list[str], int]:
+    """Return (regression messages, rows compared)."""
+    regressions = []
+    compared = 0
+    for key, base_v in sorted(base.items()):
+        cand_v = cand.get(key)
+        if cand_v is None:
+            continue  # sweep shape changed; only common rows gate
+        compared += 1
+        drop_pct = (base_v - cand_v) / base_v * 100.0
+        marker = "REGRESSION" if drop_pct > max_drop_pct else "ok"
+        print(
+            f"  {name} {key}: baseline {base_v:.1f} -> candidate {cand_v:.1f} "
+            f"({-drop_pct:+.1f}%) {marker}"
+        )
+        if drop_pct > max_drop_pct:
+            regressions.append(
+                f"{name} {key}: {base_v:.1f} -> {cand_v:.1f} "
+                f"(-{drop_pct:.1f}% > allowed {max_drop_pct:.0f}%)"
+            )
+    return regressions, compared
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="baseline BENCH_runtime.json")
+    ap.add_argument("candidate", help="freshly measured BENCH_runtime.json")
+    ap.add_argument(
+        "--max-drop-pct",
+        type=float,
+        default=15.0,
+        help="largest tolerated throughput drop, percent (default 15)",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cand = load(args.candidate)
+
+    if base.get("pending"):
+        print(
+            "bench-gate: SKIP — baseline is the pre-measurement stub "
+            '("pending": true); the candidate becomes the first baseline.'
+        )
+        return 0
+    if cand.get("pending"):
+        print("bench-gate: candidate is still a pending stub — nothing was measured", file=sys.stderr)
+        return 2
+
+    fft_base = index_rows(base, "fft", ("kind", "log2_n", "threads"), "mpoints_per_s")
+    fft_cand = index_rows(cand, "fft", ("kind", "log2_n", "threads"), "mpoints_per_s")
+    cl_base = index_rows(base, "cluster", ("shards", "threads"), "throughput_rps")
+    cl_cand = index_rows(cand, "cluster", ("shards", "threads"), "throughput_rps")
+
+    if not fft_base and not cl_base:
+        print("bench-gate: SKIP — baseline has no comparable rows")
+        return 0
+
+    regressions: list[str] = []
+    compared = 0
+    for name, b, c in (("fft", fft_base, fft_cand), ("cluster", cl_base, cl_cand)):
+        r, n = compare(name, b, c, args.max_drop_pct)
+        regressions.extend(r)
+        compared += n
+
+    if compared == 0:
+        print(
+            "bench-gate: baseline rows exist but the candidate matched none of "
+            "them — the bench sweep or schema broke",
+            file=sys.stderr,
+        )
+        return 2
+    if regressions:
+        print(f"bench-gate: FAIL — {len(regressions)} regression(s):", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print(f"bench-gate: PASS — {compared} row(s) within {args.max_drop_pct:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,12 +35,12 @@ use anyhow::{ensure, Result};
 use crate::backend::{FftEngine, WarmPlans};
 use crate::config::SystemConfig;
 use crate::coordinator::Trace;
-use crate::metrics::{DataMovement, LogHistogram};
+use crate::metrics::{depth_json, latency_us_json, plan_cache_json, DataMovement, LogHistogram};
 use crate::pimc::PassConfig;
 use crate::routines::OptLevel;
 use crate::runtime::Parallelism;
 use crate::util::Json;
-use crate::workload::WorkloadKind;
+use crate::workload::{per_kind_json, WorkloadKind};
 
 use super::event::{Event, EventQueue};
 use super::router::RouterKind;
@@ -197,25 +197,10 @@ impl ClusterReport {
             ("batches", Json::num(self.batches as f64)),
             ("makespan_us", Json::num(self.makespan_ns as f64 / 1e3)),
             ("throughput_rps", Json::num(self.throughput_rps())),
-            (
-                "latency_us",
-                Json::obj(vec![
-                    ("mean", Json::num(self.latency_ns.mean() / 1e3)),
-                    ("p50", Json::num(self.latency_p_us(50.0))),
-                    ("p95", Json::num(self.latency_p_us(95.0))),
-                    ("p99", Json::num(self.latency_p_us(99.0))),
-                    ("p999", Json::num(self.latency_p_us(99.9))),
-                    ("max", Json::num(self.latency_ns.max() as f64 / 1e3)),
-                ]),
-            ),
-            (
-                "queue_depth",
-                Json::obj(vec![
-                    ("p50", Json::num(self.queue_depth.percentile(50.0) as f64)),
-                    ("p99", Json::num(self.queue_depth.percentile(99.0) as f64)),
-                    ("max", Json::num(self.queue_depth.max() as f64)),
-                ]),
-            ),
+            // The shared metric blocks below are the schema contract with
+            // the live serving tier's report (`serve::LiveReport::to_json`).
+            ("latency_us", latency_us_json(&self.latency_ns)),
+            ("queue_depth", depth_json(&self.queue_depth)),
             (
                 "batch_occupancy_pct",
                 Json::obj(vec![
@@ -224,30 +209,9 @@ impl ClusterReport {
                     ("p99", Json::num(self.occupancy_pct.percentile(99.0) as f64)),
                 ]),
             ),
-            (
-                "movement",
-                Json::obj(vec![
-                    ("gpu_mb", Json::num(self.movement.gpu_bytes / 1e6)),
-                    ("pim_cmd_mb", Json::num(self.movement.pim_cmd_bytes / 1e6)),
-                ]),
-            ),
-            (
-                "plan_cache",
-                Json::obj(vec![
-                    ("hits", Json::num(self.cache_hits as f64)),
-                    ("misses", Json::num(self.cache_misses as f64)),
-                    ("hit_rate", Json::num(self.cache_hit_rate())),
-                ]),
-            ),
-            (
-                "per_kind",
-                Json::Obj(
-                    self.per_kind
-                        .iter()
-                        .map(|(k, &v)| (k.name().to_string(), Json::num(v as f64)))
-                        .collect(),
-                ),
-            ),
+            ("movement", self.movement.to_json_mb()),
+            ("plan_cache", plan_cache_json(self.cache_hits, self.cache_misses)),
+            ("per_kind", per_kind_json(&self.per_kind)),
             (
                 "per_shard",
                 Json::arr(
@@ -529,6 +493,7 @@ mod tests {
                 n: 64,
                 batch: 1,
                 seed: 1,
+                deadline_us: None,
             }],
         };
         let mut cfg = ClusterConfig::default_hw();

@@ -17,6 +17,11 @@ pub struct FftRequest {
     pub n: usize,
     /// The signals (each of length `n`).
     pub signals: Vec<SoaVec>,
+    /// SLO deadline relative to submission, µs. `None` means no deadline:
+    /// the request is served whenever capacity allows (every pre-deadline
+    /// caller and version-1/2 trace file without the field behaves exactly
+    /// as before).
+    pub deadline_us: Option<u64>,
 }
 
 impl FftRequest {
@@ -28,7 +33,13 @@ impl FftRequest {
     /// A request of an explicit [`WorkloadKind`].
     pub fn with_kind(id: u64, kind: WorkloadKind, n: usize, signals: Vec<SoaVec>) -> Self {
         debug_assert!(signals.iter().all(|s| s.len() == n));
-        Self { id, kind, n, signals }
+        Self { id, kind, n, signals, deadline_us: None }
+    }
+
+    /// Builder-style SLO deadline (µs after submission).
+    pub fn with_deadline(mut self, deadline_us: u64) -> Self {
+        self.deadline_us = Some(deadline_us);
+        self
     }
 
     pub fn batch(&self) -> usize {
@@ -43,7 +54,7 @@ impl FftRequest {
     /// Deterministic random request of an explicit kind.
     pub fn random_kind(id: u64, kind: WorkloadKind, n: usize, batch: usize, seed: u64) -> Self {
         let signals = (0..batch).map(|i| SoaVec::random(n, seed ^ (i as u64) << 17)).collect();
-        Self { id, kind, n, signals }
+        Self { id, kind, n, signals, deadline_us: None }
     }
 }
 
@@ -96,5 +107,7 @@ mod tests {
         assert!(r.signals.iter().all(|s| s.len() == 64));
         // Distinct signals per batch index.
         assert!(r.signals[0].max_abs_diff(&r.signals[1]) > 0.0);
+        assert_eq!(r.deadline_us, None);
+        assert_eq!(r.with_deadline(250).deadline_us, Some(250));
     }
 }

@@ -209,7 +209,13 @@ mod robustness_tests {
     fn rejects_mismatched_sizes_in_batch() {
         let sys = SystemConfig::baseline();
         let mut s = Scheduler::new(&sys);
-        let req = FftRequest { id: 1, kind: WorkloadKind::Batch1d, n: 32, signals: vec![SoaVec::zeros(64)] };
+        let req = FftRequest {
+            id: 1,
+            kind: WorkloadKind::Batch1d,
+            n: 32,
+            signals: vec![SoaVec::zeros(64)],
+            deadline_us: None,
+        };
         assert!(s
             .execute(Batch { n: 32, kind: WorkloadKind::Batch1d, requests: vec![req] })
             .is_err());

@@ -34,6 +34,11 @@ pub struct TraceEntry {
     pub n: usize,
     pub batch: usize,
     pub seed: u64,
+    /// SLO deadline relative to arrival, µs. Version-1/2 trace files
+    /// without the field parse as `None` (no deadline), and traces whose
+    /// entries all lack deadlines still emit as version 1 — existing
+    /// fixtures stay bit-identical.
+    pub deadline_us: Option<u64>,
 }
 
 /// A reproducible request trace.
@@ -44,22 +49,30 @@ pub struct Trace {
 
 impl Trace {
     pub fn to_json(&self) -> Json {
+        // Deadlines bumped the format to version 2; a trace that carries
+        // none still emits as version 1 so pre-deadline fixtures (and the
+        // artifacts older builds wrote) stay bit-identical.
+        let version = if self.entries.iter().any(|e| e.deadline_us.is_some()) { 2.0 } else { 1.0 };
         Json::obj(vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(version)),
             (
                 "entries",
                 Json::arr(
                     self.entries
                         .iter()
                         .map(|e| {
-                            Json::obj(vec![
+                            let mut fields = vec![
                                 ("at_us", Json::num(e.at_us)),
                                 ("kind", Json::str(e.kind.name())),
                                 ("n", Json::num(e.n as f64)),
                                 ("batch", Json::num(e.batch as f64)),
                                 // u64 doesn't survive f64 JSON numbers — hex string.
                                 ("seed", Json::str(format!("{:016x}", e.seed))),
-                            ])
+                            ];
+                            if let Some(d) = e.deadline_us {
+                                fields.push(("deadline_us", Json::num(d as f64)));
+                            }
+                            Json::obj(fields)
                         })
                         .collect(),
                 ),
@@ -74,7 +87,10 @@ impl Trace {
     /// the planner.
     pub fn from_json(j: &Json) -> Result<Self> {
         let version = j.field("version")?.as_usize().context("trace 'version'")?;
-        ensure!(version == 1, "unsupported trace version {version} (this build reads version 1)");
+        ensure!(
+            version == 1 || version == 2,
+            "unsupported trace version {version} (this build reads versions 1 and 2)"
+        );
         let mut entries = Vec::new();
         let mut prev_at_us = 0.0f64;
         for (i, e) in j.field("entries")?.as_arr()?.iter().enumerate() {
@@ -90,6 +106,12 @@ impl Trace {
                     n: e.field("n")?.as_usize()?,
                     batch: e.field("batch")?.as_usize()?,
                     seed: u64::from_str_radix(e.field("seed")?.as_str()?, 16)?,
+                    // Version-2 field; absent (any version) means no deadline.
+                    deadline_us: e
+                        .get("deadline_us")
+                        .map(|d| d.as_usize())
+                        .transpose()?
+                        .map(|d| d as u64),
                 })
             };
             let entry = parse().with_context(|| format!("trace entry {i}"))?;
@@ -112,6 +134,9 @@ impl Trace {
                 .kind
                 .validate_shape(entry.n, entry.batch)
                 .with_context(|| format!("trace entry {i}"))?;
+            if let Some(d) = entry.deadline_us {
+                ensure!(d >= 1, "trace entry {i}: deadline_us={d} must be at least 1µs");
+            }
             ensure!(
                 entry.at_us >= prev_at_us,
                 "trace entry {i}: arrival time {} goes backwards (previous entry at {})",
@@ -150,6 +175,7 @@ pub fn synthetic_trace(requests: usize, sizes: &[usize], mean_gap_us: f64, seed:
             n: *rng.choose(sizes),
             batch: rng.range(1, 5),
             seed: seed ^ (i as u64).wrapping_mul(0x2545F4914F6CDD1D),
+            deadline_us: None,
         });
     }
     Trace { entries }
@@ -336,18 +362,35 @@ pub struct Workload {
     /// Distribution over request kinds (all batched-1D by default).
     pub kinds: KindMix,
     pub max_batch: usize,
+    /// SLO deadline stamped on every generated entry, µs after arrival
+    /// (`None` = no deadlines; legacy traces are bit-identical because the
+    /// stamp draws nothing from the RNG).
+    pub deadline_us: Option<u64>,
 }
 
 impl Workload {
     pub fn new(arrival: Arrival, rps: f64, mix: SizeMix) -> Result<Self> {
         arrival.validate()?;
         ensure!(rps.is_finite() && rps > 0.0, "workload rate {rps} req/s must be positive");
-        Ok(Self { arrival, rps, mix, kinds: KindMix::single(WorkloadKind::Batch1d), max_batch: 4 })
+        Ok(Self {
+            arrival,
+            rps,
+            mix,
+            kinds: KindMix::single(WorkloadKind::Batch1d),
+            max_batch: 4,
+            deadline_us: None,
+        })
     }
 
     /// Builder-style kind mix override (`cluster --workload-mix`).
     pub fn with_kinds(mut self, kinds: KindMix) -> Self {
         self.kinds = kinds;
+        self
+    }
+
+    /// Builder-style per-request SLO deadline (`serve-live --deadline-us`).
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> Self {
+        self.deadline_us = Some(deadline_us);
         self
     }
 
@@ -374,6 +417,7 @@ impl Workload {
                 n,
                 batch,
                 seed: seed ^ (i as u64).wrapping_mul(0x2545F4914F6CDD1D),
+                deadline_us: self.deadline_us,
             });
         }
         Trace { entries }
@@ -409,14 +453,62 @@ mod tests {
     fn rejects_unknown_version() {
         let mut t = synthetic_trace(2, &[32], 1.0, 1).to_json();
         if let Json::Obj(m) = &mut t {
-            m.insert("version".into(), Json::num(2.0));
+            m.insert("version".into(), Json::num(3.0));
         }
         let err = Trace::from_json(&t).unwrap_err().to_string();
-        assert!(err.contains("unsupported trace version 2"), "{err}");
+        assert!(err.contains("unsupported trace version 3"), "{err}");
         if let Json::Obj(m) = &mut t {
             m.remove("version");
         }
         assert!(Trace::from_json(&t).is_err());
+    }
+
+    #[test]
+    fn deadline_field_roundtrips_and_stays_bit_identical() {
+        // No deadlines anywhere ⇒ version 1, no "deadline_us" key: the
+        // emission (and thus every existing fixture) is bit-identical to
+        // pre-deadline builds.
+        let legacy = synthetic_trace(20, &[32, 8192], 10.0, 3);
+        let legacy_json = legacy.to_json().to_string();
+        assert!(legacy_json.contains("\"version\":1"), "{legacy_json}");
+        assert!(!legacy_json.contains("deadline_us"), "{legacy_json}");
+        assert_eq!(Trace::from_json(&Json::parse(&legacy_json).unwrap()).unwrap(), legacy);
+
+        // Stamping deadlines draws nothing from the RNG: same seed ⇒ same
+        // arrivals/sizes/batches/seeds, only the deadline column differs.
+        let mix = SizeMix::uniform(&[32, 4096]).unwrap();
+        let plain = Workload::new(Arrival::Poisson, 1_000_000.0, mix.clone())
+            .unwrap()
+            .generate(100, 7);
+        let slo = Workload::new(Arrival::Poisson, 1_000_000.0, mix)
+            .unwrap()
+            .with_deadline_us(500)
+            .generate(100, 7);
+        for (a, b) in plain.entries.iter().zip(&slo.entries) {
+            assert_eq!(a.at_us, b.at_us);
+            assert_eq!((a.kind, a.n, a.batch, a.seed), (b.kind, b.n, b.batch, b.seed));
+            assert_eq!(a.deadline_us, None);
+            assert_eq!(b.deadline_us, Some(500));
+        }
+
+        // Deadline-carrying traces emit as version 2 and round-trip.
+        let j = slo.to_json();
+        assert_eq!(j.field("version").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(Trace::from_json(&j).unwrap(), slo);
+
+        // A version-2 file without the field parses as no-deadline, and a
+        // zero deadline is rejected with the entry named.
+        let v2 = Json::parse(
+            r#"{"version":2,"entries":[{"at_us":1.0,"n":32,"batch":2,"seed":"00000000000000aa"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(Trace::from_json(&v2).unwrap().entries[0].deadline_us, None);
+        let zero = Json::parse(
+            r#"{"version":2,"entries":[{"at_us":1.0,"n":32,"batch":2,"seed":"00000000000000aa","deadline_us":0}]}"#,
+        )
+        .unwrap();
+        let err = Trace::from_json(&zero).unwrap_err().to_string();
+        assert!(err.contains("deadline_us=0"), "{err}");
     }
 
     #[test]

@@ -50,6 +50,17 @@
 //!   [`workload::KindMix`] drives mixed-kind traffic through the trace
 //!   generator and the cluster simulator (`cluster --workload-mix`, and the
 //!   per-kind `workload` CLI report).
+//! * [`serve`] — **L5**: the online serving tier. A reactor thread plus
+//!   per-shard engine workers serve live requests (in-process
+//!   [`serve::LiveClient`] or the length-prefixed localhost socket in
+//!   [`serve::protocol`]) with token-bucket + max-inflight admission
+//!   control, bounded per-shard queues that reject with a retry-after
+//!   hint, deadline-aware EDF batch dispatch (drop or degrade infeasible
+//!   requests, accounted separately), and hedged retries across shards.
+//!   The closed-loop harness (`serve-live --harness`,
+//!   [`serve::run_harness`]) drives millions of requests through real
+//!   threads and sockets and emits a [`serve::LiveReport`] whose JSON is
+//!   a key-compatible superset of the cluster simulator's report.
 //! * [`planner`] — collaborative decomposition (§5.1): plan selection via
 //!   the offline tile-efficiency table; its cost evaluation is built from
 //!   the same providers the backends use.
@@ -92,6 +103,7 @@ pub mod pimc;
 pub mod planner;
 pub mod routines;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod workload;
 

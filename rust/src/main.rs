@@ -30,6 +30,7 @@ use pimacolaba::pimc::{Pass, PassConfig};
 use pimacolaba::planner::{PlanKind, TileModel};
 use pimacolaba::routines::{emit_strided, RoutineStats};
 use pimacolaba::runtime::{Parallelism, Registry};
+use pimacolaba::serve::{run_harness, DeadlinePolicy, HarnessConfig, LiveServer, ServeConfig};
 use pimacolaba::util::benchkit::Bench;
 use pimacolaba::util::cli::Args;
 use pimacolaba::util::{help, Json, Rng};
@@ -62,7 +63,8 @@ fn sys_for(passes: PassConfig, variant: &str) -> Result<SystemConfig> {
 }
 
 fn main() -> Result<()> {
-    let known_flags = ["quick", "verify", "no-artifacts", "help", "smoke"];
+    let known_flags =
+        ["quick", "verify", "no-artifacts", "help", "smoke", "harness", "numeric", "pace"];
     let args = Args::parse(std::env::args().skip(1), &known_flags)?;
     let sub = args.positional.first().map(|s| s.as_str());
     if args.flag("help") {
@@ -74,6 +76,7 @@ fn main() -> Result<()> {
         Some("tile") => cmd_tile(&args),
         Some("passes") => cmd_passes(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-live") => cmd_serve_live(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("workload") => cmd_workload(&args),
         Some("bench") => cmd_bench(&args),
@@ -349,6 +352,123 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.shutdown();
     println!("{}", report.summary());
     println!("per-size request counts: {:?}", report.by_size);
+    Ok(())
+}
+
+/// The online serving tier (`serve-live`). Two modes:
+///
+/// * `--harness`: spin up the server, drive it with a closed-loop load run
+///   generated by the same [`Workload`] machinery the cluster simulator
+///   replays, then write the live latency report (a key-compatible
+///   superset of the cluster report schema) to `--out`.
+/// * default: start the localhost socket listener (length-prefixed JSON
+///   frames, see `serve::protocol`) and serve until stdin closes.
+fn cmd_serve_live(args: &Args) -> Result<()> {
+    let passes = parse_passes(args)?;
+    let sys = sys_for(passes, args.get_or("variant", "baseline"))?;
+    let mut cfg = ServeConfig::new(sys, passes);
+    cfg.shards = args.get_usize("shards", 8)?;
+    cfg.window_signals = args.get_usize("window", 32)?;
+    cfg.max_wait_us = args.get_f64("wait-us", 200.0)?;
+    cfg.queue_requests = args.get_usize("queue-requests", 4096)?;
+    cfg.queue_signals = args.get_usize("queue-signals", 65_536)?;
+    cfg.admit_rps = args.get_f64("admit-rps", 0.0)?;
+    cfg.burst = args.get_usize("burst", 1024)? as u64;
+    cfg.max_inflight = args.get_usize("max-inflight", 1 << 20)?;
+    cfg.default_deadline_us = match args.get_usize("deadline-us", 0)? {
+        0 => None,
+        d => Some(d as u64),
+    };
+    cfg.deadline_policy = DeadlinePolicy::parse(args.get_or("deadline-policy", "drop"))?;
+    cfg.hedge_after_us = match args.get_f64("hedge-us", 0.0)? {
+        h if h > 0.0 => Some(h),
+        _ => None,
+    };
+    cfg.numeric = args.flag("numeric");
+    cfg.pace = args.flag("pace");
+    let out = args.get_or("out", "live_report.json").to_string();
+
+    if !args.flag("harness") {
+        let mut server = LiveServer::start(cfg)?;
+        let addr = server.listen()?;
+        println!(
+            "serve-live listening on {addr} (4-byte LE length-prefixed JSON frames; \
+             close stdin to drain and report)"
+        );
+        let mut line = String::new();
+        while std::io::stdin().read_line(&mut line)? > 0 {
+            line.clear();
+        }
+        let report = server.shutdown()?;
+        println!("{}", report.summary());
+        std::fs::write(&out, report.to_json().to_string())
+            .with_context(|| format!("writing report {out}"))?;
+        println!("wrote JSON report to {out}");
+        return Ok(());
+    }
+
+    let smoke = args.flag("smoke");
+    let requests = args.get_usize("requests", if smoke { 50_000 } else { 1_000_000 })?;
+    let clients = args.get_usize("clients", 32)?;
+    let rps = args.get_f64("rps", 1_000_000.0)?;
+    let sizes: Vec<usize> = args
+        .get_or("sizes", "32,256,4096,8192,16384")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("parsing --sizes"))
+        .collect::<Result<_>>()?;
+    let mix = SizeMix::profile(args.get_or("mix", "uniform"), &sizes)?;
+    let arrival = Arrival::parse(args.get_or("arrival", "poisson"))?;
+    let kinds = KindMix::parse(args.get_or("workload-mix", "batch1d"))?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let mut workload = Workload::new(arrival, rps, mix)?.with_kinds(kinds);
+    if let Some(d) = cfg.default_deadline_us {
+        // Stamp the deadline on the generated trace so it rides the same
+        // per-request plumbing a socket client would use.
+        workload = workload.with_deadline_us(d);
+    }
+    println!(
+        "serve-live harness: {} requests from {} closed-loop clients at {:.0} offered req/s, \
+         {} arrivals over sizes {:?} ({} kinds), {} shards, seed {}",
+        requests,
+        clients,
+        rps,
+        arrival.name(),
+        sizes,
+        args.get_or("workload-mix", "batch1d"),
+        cfg.shards,
+        seed
+    );
+    let server = LiveServer::start(cfg)?;
+    let hcfg = HarnessConfig::new(requests, clients, workload, seed);
+    let (report, stats) = run_harness(server, &hcfg)?;
+    println!("{}", report.summary());
+    println!(
+        "harness: issued={} (retries {}) served={} rejected-final={} dropped={} failed={} \
+         wall={:.2}s goodput={:.0} req/s",
+        stats.issued,
+        stats.retries,
+        stats.served,
+        stats.rejected_final,
+        stats.dropped,
+        stats.failed,
+        stats.wall_ns as f64 / 1e9,
+        stats.served as f64 / (stats.wall_ns as f64 / 1e9).max(1e-9),
+    );
+    for s in &report.per_shard {
+        println!(
+            "  shard {:>3}: {:>8} requests {:>6} batches  utilization {:>5.1}%  \
+             gpu {:>9.1} MB  pim-cmd {:>7.1} MB",
+            s.shard,
+            s.requests,
+            s.batches,
+            s.utilization * 100.0,
+            s.movement.gpu_bytes / 1e6,
+            s.movement.pim_cmd_bytes / 1e6,
+        );
+    }
+    std::fs::write(&out, report.to_json().to_string())
+        .with_context(|| format!("writing report {out}"))?;
+    println!("wrote JSON report to {out}");
     Ok(())
 }
 

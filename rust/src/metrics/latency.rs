@@ -11,6 +11,8 @@
 //! of sample count — merging per-shard histograms into a cluster-wide one is
 //! a counter add.
 
+use crate::util::Json;
+
 /// Linear sub-buckets per power of two (relative error ≤ 1/32 ≈ 3.1%).
 pub const SUB_BUCKETS: usize = 32;
 const SUB_LOG: u32 = 5; // log2(SUB_BUCKETS)
@@ -141,6 +143,31 @@ impl LogHistogram {
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
+}
+
+/// The canonical `"latency_us"` report block: a histogram recorded in
+/// nanoseconds rendered as microsecond percentiles. The cluster simulator
+/// and the live serving tier both emit this exact shape so their reports
+/// stay schema-compatible key for key.
+pub fn latency_us_json(h: &LogHistogram) -> Json {
+    Json::obj(vec![
+        ("mean", Json::num(h.mean() / 1e3)),
+        ("p50", Json::num(h.percentile(50.0) as f64 / 1e3)),
+        ("p95", Json::num(h.percentile(95.0) as f64 / 1e3)),
+        ("p99", Json::num(h.percentile(99.0) as f64 / 1e3)),
+        ("p999", Json::num(h.percentile(99.9) as f64 / 1e3)),
+        ("max", Json::num(h.max() as f64 / 1e3)),
+    ])
+}
+
+/// The canonical depth-count report block (queue depth and similar unitless
+/// counters): p50/p99/max as raw values.
+pub fn depth_json(h: &LogHistogram) -> Json {
+    Json::obj(vec![
+        ("p50", Json::num(h.percentile(50.0) as f64)),
+        ("p99", Json::num(h.percentile(99.0) as f64)),
+        ("max", Json::num(h.max() as f64)),
+    ])
 }
 
 #[cfg(test)]

@@ -5,5 +5,19 @@
 pub mod latency;
 mod movement;
 
-pub use latency::LogHistogram;
+pub use latency::{depth_json, latency_us_json, LogHistogram};
 pub use movement::DataMovement;
+
+use crate::util::Json;
+
+/// The canonical `"plan_cache"` report block shared by the cluster
+/// simulator and the live serving tier.
+pub fn plan_cache_json(hits: u64, misses: u64) -> Json {
+    let total = hits + misses;
+    let rate = if total == 0 { 0.0 } else { hits as f64 / total as f64 };
+    Json::obj(vec![
+        ("hits", Json::num(hits as f64)),
+        ("misses", Json::num(misses as f64)),
+        ("hit_rate", Json::num(rate)),
+    ])
+}

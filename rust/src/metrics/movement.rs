@@ -5,6 +5,8 @@
 //! commands/constants — those bytes are charged here exactly as the paper's
 //! footnote 3 prescribes.
 
+use crate::util::Json;
+
 /// Bytes moved for one FFT computation (or an aggregate of many).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct DataMovement {
@@ -31,6 +33,15 @@ impl DataMovement {
     pub fn add_assign(&mut self, other: &DataMovement) {
         self.gpu_bytes += other.gpu_bytes;
         self.pim_cmd_bytes += other.pim_cmd_bytes;
+    }
+
+    /// The canonical `"movement"` report block, in megabytes per substrate.
+    /// Shared by the cluster simulator and the live serving tier.
+    pub fn to_json_mb(&self) -> Json {
+        Json::obj(vec![
+            ("gpu_mb", Json::num(self.gpu_bytes / 1e6)),
+            ("pim_cmd_mb", Json::num(self.pim_cmd_bytes / 1e6)),
+        ])
     }
 }
 

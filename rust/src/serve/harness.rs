@@ -1,0 +1,228 @@
+//! The closed-loop load harness behind `serve-live --harness`.
+//!
+//! Closed-loop means every client thread has exactly one request
+//! outstanding: submit, block on the result, then issue the next — the
+//! canonical way to drive a serving tier to a sustainable operating point
+//! without open-loop overload artifacts. Offered load is shaped by the
+//! same [`Workload`] generators the cluster simulator replays (arrival
+//! envelope, size mix, kind mix, per-request deadlines), so a simulated
+//! capacity plan and a live measurement answer the same question about
+//! the same traffic.
+//!
+//! Backpressure contract: a rejected request is retried after the
+//! server's `retry_after` hint (clamped to a sane band), up to
+//! `max_retries`; a request still rejected after that is terminal. Every
+//! generated request therefore ends in exactly one harness bin, mirroring
+//! the server's own conservation law.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Workload;
+
+use super::reactor::{LiveRequest, LiveResult, LiveServer};
+use super::report::LiveReport;
+
+/// Load-generation knobs for one harness run.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    /// Total requests to generate (not counting retries).
+    pub requests: usize,
+    /// Concurrent closed-loop client threads.
+    pub clients: usize,
+    pub workload: Workload,
+    pub seed: u64,
+    /// Rejection retries per request before giving up.
+    pub max_retries: usize,
+}
+
+impl HarnessConfig {
+    pub fn new(requests: usize, clients: usize, workload: Workload, seed: u64) -> Self {
+        Self { requests, clients, workload, seed, max_retries: 3 }
+    }
+}
+
+/// What the clients saw, aggregated across threads. The server's
+/// [`LiveReport`] is the view from inside; this is the view from outside
+/// — the two must agree on totals.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HarnessStats {
+    /// Submissions sent, including retries.
+    pub issued: u64,
+    /// Requests that ended served.
+    pub served: u64,
+    /// Requests still rejected after exhausting retries.
+    pub rejected_final: u64,
+    /// Requests dropped by the deadline policy.
+    pub dropped: u64,
+    /// Requests whose batch failed.
+    pub failed: u64,
+    /// Rejection retries performed.
+    pub retries: u64,
+    /// Wall clock of the load phase (generation to last client done), ns.
+    pub wall_ns: u64,
+}
+
+impl HarnessStats {
+    /// Terminal outcomes must cover every generated request.
+    pub fn terminal(&self) -> u64 {
+        self.served + self.rejected_final + self.dropped + self.failed
+    }
+
+    fn absorb(&mut self, other: &HarnessStats) {
+        self.issued += other.issued;
+        self.served += other.served;
+        self.rejected_final += other.rejected_final;
+        self.dropped += other.dropped;
+        self.failed += other.failed;
+        self.retries += other.retries;
+    }
+}
+
+/// Drive `server` with `cfg.requests` closed-loop requests, then shut it
+/// down and return both sides of the accounting.
+pub fn run_harness(server: LiveServer, cfg: &HarnessConfig) -> Result<(LiveReport, HarnessStats)> {
+    ensure!(cfg.requests >= 1, "harness needs at least one request");
+    ensure!(cfg.clients >= 1, "harness needs at least one client");
+    let started = Instant::now();
+    let trace = cfg.workload.generate(cfg.requests, cfg.seed);
+    // Strided partition: every client sees the full time-range of the
+    // trace, so arrival bursts hit the server from all threads at once
+    // instead of being serialized per client.
+    let mut per_client: Vec<Vec<LiveRequest>> = vec![Vec::new(); cfg.clients];
+    for (idx, e) in trace.entries.iter().enumerate() {
+        let mut req = LiveRequest::new(idx as u64, e.kind, e.n, e.batch, e.seed);
+        if let Some(d) = e.deadline_us {
+            req = req.with_deadline(d);
+        }
+        per_client[idx % cfg.clients].push(req);
+    }
+    let max_retries = cfg.max_retries;
+    let mut handles = Vec::with_capacity(cfg.clients);
+    for (c, requests) in per_client.into_iter().enumerate() {
+        let client = server.client();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("harness-client-{c}"))
+                .spawn(move || {
+                    let mut stats = HarnessStats::default();
+                    for req in requests {
+                        let mut attempt = 0;
+                        loop {
+                            stats.issued += 1;
+                            match client.call(req) {
+                                LiveResult::Served { .. } => {
+                                    stats.served += 1;
+                                    break;
+                                }
+                                LiveResult::Rejected { retry_after_ns, .. }
+                                    if attempt < max_retries =>
+                                {
+                                    attempt += 1;
+                                    stats.retries += 1;
+                                    thread::sleep(Duration::from_nanos(
+                                        retry_after_ns.clamp(50_000, 5_000_000),
+                                    ));
+                                }
+                                LiveResult::Rejected { .. } => {
+                                    stats.rejected_final += 1;
+                                    break;
+                                }
+                                LiveResult::Dropped { .. } => {
+                                    stats.dropped += 1;
+                                    break;
+                                }
+                                LiveResult::Failed { .. } => {
+                                    stats.failed += 1;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    stats
+                })
+                .expect("spawning harness client"),
+        );
+    }
+    let mut stats = HarnessStats::default();
+    for h in handles {
+        match h.join() {
+            Ok(s) => stats.absorb(&s),
+            Err(_) => anyhow::bail!("a harness client panicked"),
+        }
+    }
+    stats.wall_ns = started.elapsed().as_nanos() as u64;
+    let report = server.shutdown()?;
+    ensure!(
+        stats.terminal() == cfg.requests as u64,
+        "harness lost requests: {} terminal outcomes for {} generated",
+        stats.terminal(),
+        cfg.requests
+    );
+    Ok((report, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Arrival, SizeMix};
+    use crate::serve::reactor::ServeConfig;
+    use crate::workload::KindMix;
+
+    #[test]
+    fn closed_loop_accounting_matches_the_server_report() {
+        let mut serve = ServeConfig::default_hw();
+        serve.shards = 2;
+        serve.window_signals = 16;
+        serve.max_wait_us = 100.0;
+        let server = LiveServer::start(serve).unwrap();
+        let workload = Workload::new(
+            Arrival::Poisson,
+            200_000.0,
+            SizeMix::uniform(&[64, 256]).unwrap(),
+        )
+        .unwrap()
+        .with_kinds(KindMix::uniform_all());
+        let cfg = HarnessConfig::new(400, 4, workload, 7);
+        let (report, stats) = run_harness(server, &cfg).unwrap();
+        assert_eq!(stats.terminal(), 400);
+        // Both sides of the accounting must reconcile exactly: the server
+        // saw every submission (including retries), and each reject the
+        // clients retried or gave up on is a server-side rejection.
+        assert_eq!(report.submitted, stats.issued);
+        assert_eq!(stats.served, report.requests);
+        assert_eq!(stats.dropped, report.dropped);
+        assert_eq!(stats.failed, report.failed);
+        assert_eq!(report.rejected.total(), stats.retries + stats.rejected_final);
+        assert_eq!(report.unaccounted(), 0);
+        assert!(stats.issued >= 400);
+        assert!(stats.wall_ns > 0);
+        assert!(report.per_kind.len() > 1, "uniform kind mix should serve several kinds");
+    }
+
+    #[test]
+    fn retries_eventually_land_under_queue_pressure() {
+        let mut serve = ServeConfig::default_hw();
+        serve.shards = 1;
+        serve.window_signals = 4;
+        serve.max_wait_us = 100.0;
+        serve.queue_requests = 8; // tiny queue: rejections guaranteed
+        serve.queue_signals = 64;
+        let server = LiveServer::start(serve).unwrap();
+        let workload =
+            Workload::new(Arrival::Poisson, 1e9, SizeMix::uniform(&[64]).unwrap()).unwrap();
+        let mut cfg = HarnessConfig::new(200, 8, workload, 11);
+        cfg.max_retries = 50;
+        let (report, stats) = run_harness(server, &cfg).unwrap();
+        assert_eq!(stats.terminal(), 200);
+        assert_eq!(report.unaccounted(), 0);
+        // The tiny queue must have pushed back at least once, and retries
+        // must have recovered some of those rejections.
+        if report.rejected.queue_full > 0 {
+            assert!(stats.retries > 0);
+        }
+        assert!(stats.served > 0, "some requests must land: {stats:?}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Hedged retries across local shards.
+//!
+//! The classic tail-taming trick: a batch still in flight after
+//! `after_ns` is re-dispatched to a *second* shard; whichever copy
+//! finishes first answers the clients, the straggler's result is
+//! discarded. The [`Hedger`] is pure bookkeeping over a caller-supplied
+//! clock — dispatches, due checks and completions are explicit calls — so
+//! the policy is deterministic and unit-testable without threads. The
+//! reactor owns the actual re-dispatch (cloning the payload-free batch is
+//! a few dozen bytes per request).
+
+use std::collections::BTreeMap;
+
+/// What a completion event meant for a tracked batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Completion {
+    /// First finisher: answer the clients. `hedge_won` is true when the
+    /// hedge copy beat the primary.
+    First { hedge_won: bool },
+    /// The straggler of an already-answered hedged pair: discard.
+    Duplicate,
+}
+
+struct Flight {
+    dispatched_ns: u64,
+    primary_shard: usize,
+    hedged: bool,
+    completed: bool,
+}
+
+/// Tracks in-flight batches and decides when to hedge.
+pub struct Hedger {
+    after_ns: u64,
+    flights: BTreeMap<u64, Flight>,
+    /// Hedge copies dispatched.
+    pub fired: u64,
+    /// Hedge copies that finished before their primary.
+    pub won: u64,
+    /// Straggler completions discarded (each fired hedge eventually
+    /// produces exactly one winner and one waste).
+    pub wasted: u64,
+}
+
+impl Hedger {
+    pub fn new(after_ns: u64) -> Self {
+        Self { after_ns: after_ns.max(1), flights: BTreeMap::new(), fired: 0, won: 0, wasted: 0 }
+    }
+
+    /// Start tracking a dispatched batch.
+    pub fn track(&mut self, seqno: u64, now_ns: u64, primary_shard: usize) {
+        self.flights.insert(
+            seqno,
+            Flight { dispatched_ns: now_ns, primary_shard, hedged: false, completed: false },
+        );
+    }
+
+    /// Batches overdue for a hedge at `now_ns`: marks them hedged and
+    /// returns `(seqno, primary_shard)` so the reactor can pick a
+    /// different shard for the copy. Each batch hedges at most once.
+    pub fn due(&mut self, now_ns: u64) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        for (&seqno, f) in self.flights.iter_mut() {
+            if !f.hedged && !f.completed && now_ns.saturating_sub(f.dispatched_ns) >= self.after_ns {
+                f.hedged = true;
+                self.fired += 1;
+                out.push((seqno, f.primary_shard));
+            }
+        }
+        out
+    }
+
+    /// Record a completion from `shard`. Untracked seqnos are a logic
+    /// error; hedged batches stay tracked until their straggler reports.
+    pub fn complete(&mut self, seqno: u64, shard: usize) -> Completion {
+        let f = self.flights.get_mut(&seqno).expect("completion for untracked batch");
+        if f.completed {
+            self.wasted += 1;
+            self.flights.remove(&seqno);
+            return Completion::Duplicate;
+        }
+        f.completed = true;
+        let hedge_won = f.hedged && shard != f.primary_shard;
+        if hedge_won {
+            self.won += 1;
+        }
+        if !f.hedged {
+            self.flights.remove(&seqno);
+        }
+        Completion::First { hedge_won }
+    }
+
+    /// Batches still awaiting any completion (stragglers of answered
+    /// hedges don't count — their clients already have results).
+    pub fn unanswered(&self) -> usize {
+        self.flights.values().filter(|f| !f.completed).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unhedged_batch_completes_and_forgets() {
+        let mut h = Hedger::new(1_000);
+        h.track(1, 0, 0);
+        assert!(h.due(500).is_empty());
+        assert_eq!(h.complete(1, 0), Completion::First { hedge_won: false });
+        assert_eq!(h.unanswered(), 0);
+        assert_eq!((h.fired, h.won, h.wasted), (0, 0, 0));
+    }
+
+    #[test]
+    fn overdue_batch_hedges_once_and_first_wins() {
+        let mut h = Hedger::new(1_000);
+        h.track(1, 0, 2);
+        let due = h.due(1_500);
+        assert_eq!(due, vec![(1, 2)]);
+        assert!(h.due(2_000).is_empty(), "a batch hedges at most once");
+        // The hedge copy (shard 0) beats the primary (shard 2).
+        assert_eq!(h.complete(1, 0), Completion::First { hedge_won: true });
+        assert_eq!(h.complete(1, 2), Completion::Duplicate);
+        assert_eq!((h.fired, h.won, h.wasted), (1, 1, 1));
+        assert_eq!(h.unanswered(), 0);
+    }
+
+    #[test]
+    fn primary_can_still_win_a_hedged_race() {
+        let mut h = Hedger::new(100);
+        h.track(7, 0, 1);
+        assert_eq!(h.due(200).len(), 1);
+        assert_eq!(h.complete(7, 1), Completion::First { hedge_won: false });
+        assert_eq!(h.complete(7, 3), Completion::Duplicate);
+        assert_eq!((h.fired, h.won, h.wasted), (1, 0, 1));
+    }
+}

@@ -1,0 +1,55 @@
+//! The online serving tier: a live front end over [`crate::backend::FftEngine`].
+//!
+//! Where [`crate::cluster`] answers capacity questions in *virtual* time,
+//! this module serves real requests on real threads and measures real
+//! wall-clock latency — the "heavy traffic from millions of users" leg of
+//! the paper's serving story made executable. The moving parts:
+//!
+//! - **Reactor** ([`reactor`]): one thread owns admission, the per-shard
+//!   queues and every counter; N shard workers each own a private
+//!   [`crate::backend::FftEngine`] (engines are not `Send` once a PJRT
+//!   backend is attached, so each worker builds its own from the config,
+//!   exactly like [`crate::coordinator::Server::spawn`]). Clients talk to
+//!   the reactor over channels; only the reactor ever replies.
+//! - **Admission control** ([`admission`]): a token bucket (sustained rate +
+//!   burst) in front of a max-inflight cap. Rejections carry a
+//!   `retry_after` hint so closed-loop clients can back off.
+//! - **Bounded queues with backpressure** ([`queue`]): per-shard,
+//!   size/kind-keyed queues with request and signal caps; a full queue
+//!   rejects rather than buffering unboundedly.
+//! - **Deadline scheduling** ([`reactor`]): requests carry an SLO deadline
+//!   (µs after submission); queues flush on age and dispatch
+//!   earliest-deadline-first, and requests that cannot meet their deadline
+//!   (per an EWMA service-time estimate) are dropped or degraded per
+//!   policy, accounted separately from successes.
+//! - **Hedged retries** ([`hedge`]): a batch still in flight after
+//!   `hedge_after_us` is re-dispatched to a second local shard; the first
+//!   completion wins, the duplicate is discarded and accounted.
+//! - **Socket protocol** ([`protocol`]): length-prefixed JSON frames over
+//!   localhost TCP, for out-of-process clients.
+//! - **Closed-loop harness** ([`harness`]): drives millions of requests
+//!   from the existing [`crate::coordinator::Workload`] generator through
+//!   real client threads and returns the live [`report::LiveReport`].
+//!
+//! The report ([`report`]) is schema-compatible with the cluster
+//! simulator's — every key the `cluster` artifact has (p50/p95/p99/p999
+//! latency, per-kind counts, per-substrate movement, plan-cache, per-shard
+//! rollups) appears here with the same shape, built from the same shared
+//! helpers in [`crate::metrics`], plus live-only sections (admission,
+//! deadlines, hedges). `rust/tests/serve_live.rs` pins live-vs-simulated
+//! per-kind counts on a shared seed and the schema subset relation.
+
+pub mod admission;
+pub mod harness;
+pub mod hedge;
+pub mod protocol;
+pub mod queue;
+pub mod reactor;
+pub mod report;
+
+pub use admission::{Admission, RejectReason, TokenBucket};
+pub use harness::{run_harness, HarnessConfig, HarnessStats};
+pub use hedge::{Completion, Hedger};
+pub use queue::{LiveBatch, ShardQueue};
+pub use reactor::{DeadlinePolicy, LiveClient, LiveRequest, LiveResult, LiveServer, ServeConfig};
+pub use report::{LiveReport, LiveShardSummary, RejectCounts};

@@ -1,0 +1,306 @@
+//! The localhost wire protocol: length-prefixed JSON frames over TCP.
+//!
+//! Framing is a 4-byte little-endian length followed by that many bytes of
+//! UTF-8 JSON — trivial to speak from any language, no dependency on HTTP
+//! stacks the workspace doesn't vendor. One connection carries a sequence
+//! of request/response pairs in order (the handler thread services them
+//! with blocking [`LiveClient::call`]s, so a client wanting pipelining
+//! opens more connections).
+//!
+//! Request frame:
+//! `{"id": 7, "kind": "batch1d", "n": 4096, "batch": 4,
+//!   "seed": "1d", "deadline_us": 250}`
+//! — `seed` is a hex *string* because JSON numbers are f64 and a 64-bit
+//! seed must round-trip exactly; `deadline_us` is optional.
+//!
+//! Response frame:
+//! `{"id": 7, "status": "served", "latency_us": 312.4, "deadline_met": true}`
+//! with `status` ∈ served|rejected|dropped|failed and the matching detail
+//! keys (`reason`/`retry_after_us`, `waited_us`, `error`).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+use crate::workload::WorkloadKind;
+
+use super::reactor::{LiveClient, LiveRequest, LiveResult};
+
+/// Largest accepted frame (16 MiB) — far above any real request, small
+/// enough that a corrupt length prefix can't trigger a giant allocation.
+pub const MAX_FRAME: usize = 1 << 24;
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> Result<()> {
+    let body = msg.to_string();
+    let bytes = body.as_bytes();
+    ensure_frame_len(bytes.len())?;
+    w.write_all(&(bytes.len() as u32).to_le_bytes()).context("writing frame length")?;
+    w.write_all(bytes).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF (peer closed between
+/// frames); EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        let k = r.read(&mut len[filled..]).context("reading frame length")?;
+        if k == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid-frame ({filled}/4 length bytes)");
+        }
+        filled += k;
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    ensure_frame_len(n)?;
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body).context("reading frame body")?;
+    let text = std::str::from_utf8(&body).context("frame is not UTF-8")?;
+    Ok(Some(Json::parse(text)?))
+}
+
+fn ensure_frame_len(n: usize) -> Result<()> {
+    if n > MAX_FRAME {
+        bail!("frame of {n} bytes exceeds the {MAX_FRAME}-byte limit");
+    }
+    Ok(())
+}
+
+/// Encode a request as its wire JSON.
+pub fn request_to_json(req: &LiveRequest) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(req.id as f64)),
+        ("kind", Json::str(req.kind.name())),
+        ("n", Json::num(req.n as f64)),
+        ("batch", Json::num(req.signals as f64)),
+        ("seed", Json::str(format!("{:x}", req.seed))),
+    ];
+    if let Some(d) = req.deadline_us {
+        fields.push(("deadline_us", Json::num(d as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Decode a wire request. Shape validation stays with the reactor (an
+/// invalid shape is *rejected*, not a protocol error).
+pub fn parse_request(msg: &Json) -> Result<LiveRequest> {
+    let id = msg.field("id")?.as_usize().context("request id")? as u64;
+    let kind = WorkloadKind::parse(msg.field("kind")?.as_str()?)?;
+    let n = msg.field("n")?.as_usize().context("request n")?;
+    let signals = msg.field("batch")?.as_usize().context("request batch")?;
+    let seed_hex = msg.field("seed")?.as_str().context("request seed")?;
+    let seed = u64::from_str_radix(seed_hex, 16)
+        .with_context(|| format!("seed '{seed_hex}' is not a hex u64"))?;
+    let deadline_us = msg
+        .get("deadline_us")
+        .map(|d| d.as_usize())
+        .transpose()
+        .context("request deadline_us")?
+        .map(|d| d as u64);
+    Ok(LiveRequest { id, kind, n, signals, seed, deadline_us, admitted_ns: 0 })
+}
+
+/// Encode a terminal result as its wire JSON.
+pub fn result_to_json(id: u64, result: &LiveResult) -> Json {
+    let mut fields = vec![("id", Json::num(id as f64))];
+    match result {
+        LiveResult::Served { latency_ns, deadline_met } => {
+            fields.push(("status", Json::str("served")));
+            fields.push(("latency_us", Json::num(*latency_ns as f64 / 1e3)));
+            if let Some(met) = deadline_met {
+                fields.push(("deadline_met", Json::Bool(*met)));
+            }
+        }
+        LiveResult::Rejected { reason, retry_after_ns } => {
+            fields.push(("status", Json::str("rejected")));
+            fields.push(("reason", Json::str(reason.name())));
+            fields.push(("retry_after_us", Json::num(*retry_after_ns as f64 / 1e3)));
+        }
+        LiveResult::Dropped { waited_ns } => {
+            fields.push(("status", Json::str("dropped")));
+            fields.push(("waited_us", Json::num(*waited_ns as f64 / 1e3)));
+        }
+        LiveResult::Failed { error } => {
+            fields.push(("status", Json::str("failed")));
+            fields.push(("error", Json::str(error.as_str())));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Handle to the accept-loop thread. [`stop`](Self::stop) is idempotent
+/// from the server's point of view: flag, nudge, join.
+pub struct ListenerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
+impl ListenerHandle {
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept call; the loop re-checks the flag first.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.handle.join();
+    }
+}
+
+/// Bind `127.0.0.1:0` and serve connections, each on its own handler
+/// thread speaking blocking request/response over `client`.
+pub(crate) fn spawn_listener(client: LiveClient) -> Result<ListenerHandle> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding the serve socket")?;
+    let addr = listener.local_addr().context("resolving the bound address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = thread::Builder::new()
+        .name("serve-listener".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let client = client.clone();
+                let _ = thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || handle_connection(stream, client));
+            }
+        })
+        .context("spawning the listener thread")?;
+    Ok(ListenerHandle { addr, stop, handle })
+}
+
+fn handle_connection(mut stream: TcpStream, client: LiveClient) {
+    loop {
+        let msg = match read_frame(&mut stream) {
+            Ok(Some(msg)) => msg,
+            Ok(None) => return,
+            Err(_) => return, // torn frame: nothing sane to answer
+        };
+        let response = match parse_request(&msg) {
+            Ok(req) => {
+                let result = client.call(req);
+                result_to_json(req.id, &result)
+            }
+            Err(e) => {
+                // Answer malformed requests instead of hanging the peer.
+                let id = msg.get("id").and_then(|v| v.as_usize().ok()).unwrap_or(0) as u64;
+                result_to_json(id, &LiveResult::Failed { error: format!("bad request: {e}") })
+            }
+        };
+        if write_frame(&mut stream, &response).is_err() {
+            return;
+        }
+    }
+}
+
+/// Minimal blocking socket client (tests and example tooling).
+pub struct SocketClient {
+    stream: TcpStream,
+}
+
+impl SocketClient {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to live server at {addr}"))?;
+        Ok(Self { stream })
+    }
+
+    /// Send one request and wait for its response frame.
+    pub fn call(&mut self, req: &LiveRequest) -> Result<Json> {
+        write_frame(&mut self.stream, &request_to_json(req))?;
+        read_frame(&mut self.stream)?.context("server closed without answering")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::admission::RejectReason;
+
+    #[test]
+    fn frames_round_trip() {
+        let msg = Json::obj(vec![("id", Json::num(7.0)), ("kind", Json::str("batch1d"))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        assert_eq!(&buf[..4], &(buf.len() as u32 - 4).to_le_bytes());
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), msg);
+        // The stream is exactly one frame: the next read is a clean EOF.
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_frames_and_oversize_lengths_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::num(1.0)).unwrap();
+        let mut torn = &buf[..buf.len() - 1];
+        assert!(read_frame(&mut torn).is_err());
+        let mut short = &buf[..2];
+        assert!(read_frame(&mut short).is_err());
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        let mut r = &huge[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn requests_round_trip_including_seed_precision() {
+        // A seed above 2^53 would corrupt through an f64 JSON number; the
+        // hex-string encoding must round-trip it exactly.
+        let req = LiveRequest::new(9, WorkloadKind::Stft, 1024, 4, u64::MAX - 12345)
+            .with_deadline(750);
+        let parsed = parse_request(&request_to_json(&req)).unwrap();
+        assert_eq!(parsed.seed, u64::MAX - 12345);
+        assert_eq!(parsed.id, 9);
+        assert_eq!(parsed.kind, WorkloadKind::Stft);
+        assert_eq!(parsed.n, 1024);
+        assert_eq!(parsed.signals, 4);
+        assert_eq!(parsed.deadline_us, Some(750));
+        // Without a deadline the key is absent and parses back to None.
+        let bare = LiveRequest::new(1, WorkloadKind::Batch1d, 64, 1, 3);
+        assert!(!request_to_json(&bare).to_string().contains("deadline_us"));
+        assert_eq!(parse_request(&request_to_json(&bare)).unwrap().deadline_us, None);
+    }
+
+    #[test]
+    fn responses_carry_status_specific_detail() {
+        let served = result_to_json(
+            3,
+            &LiveResult::Served { latency_ns: 1500, deadline_met: Some(true) },
+        );
+        assert_eq!(served.field("status").unwrap().as_str().unwrap(), "served");
+        assert!(served.field("latency_us").unwrap().as_f64().unwrap() > 1.0);
+        let rejected = result_to_json(
+            4,
+            &LiveResult::Rejected { reason: RejectReason::QueueFull, retry_after_ns: 50_000 },
+        );
+        assert_eq!(rejected.field("reason").unwrap().as_str().unwrap(), "queue_full");
+        assert_eq!(rejected.field("retry_after_us").unwrap().as_f64().unwrap(), 50.0);
+        let failed = result_to_json(5, &LiveResult::Failed { error: "boom".into() });
+        assert_eq!(failed.field("error").unwrap().as_str().unwrap(), "boom");
+    }
+
+    #[test]
+    fn malformed_requests_parse_to_errors() {
+        let missing = Json::obj(vec![("id", Json::num(1.0))]);
+        assert!(parse_request(&missing).is_err());
+        let bad_seed = Json::obj(vec![
+            ("id", Json::num(1.0)),
+            ("kind", Json::str("batch1d")),
+            ("n", Json::num(64.0)),
+            ("batch", Json::num(1.0)),
+            ("seed", Json::str("not-hex")),
+        ]);
+        assert!(parse_request(&bad_seed).is_err());
+    }
+}

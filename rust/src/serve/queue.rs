@@ -1,0 +1,236 @@
+//! Bounded per-shard queues with size/kind-homogeneous batching.
+//!
+//! Mirrors the cluster simulator's [`crate::coordinator::Batcher`]
+//! discipline — requests queue per `(kind, n)` key so every dispatched
+//! batch is shape-homogeneous — with two live-tier additions: hard bounds
+//! (a full queue *rejects*, it never buffers unboundedly) and
+//! deadline-aware selection (among the key queues ready to dispatch, the
+//! one whose most urgent request has the earliest deadline goes first).
+//! A key queue is "ready" when it holds `min_signals`, or when its oldest
+//! request has waited out the batching window (age-based flush).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::reactor::LiveRequest;
+use crate::workload::WorkloadKind;
+
+/// One shape-homogeneous batch handed to a shard worker. Entries are
+/// payload-free ([`LiveRequest`] carries a seed, not signals), so cloning a
+/// batch for a hedged retry costs a few dozen bytes per request.
+#[derive(Debug, Clone)]
+pub struct LiveBatch {
+    /// Reactor-assigned dispatch sequence number (the completion key).
+    pub seqno: u64,
+    pub kind: WorkloadKind,
+    pub n: usize,
+    pub entries: Vec<LiveRequest>,
+}
+
+impl LiveBatch {
+    /// Signals actually requested (excluding padding).
+    pub fn signals(&self) -> usize {
+        self.entries.iter().map(|e| e.signals).sum()
+    }
+
+    /// Signals after padding to the next power of two — the shape the
+    /// substrate executes, same rule as the cluster simulator's shards.
+    /// (Power-of-two counts are always multiples of every kind's
+    /// `signal_multiple`, so padded shapes stay kind-valid.)
+    pub fn padded_signals(&self) -> usize {
+        self.signals().next_power_of_two()
+    }
+}
+
+/// A popped-but-not-yet-dispatched batch: the requests plus their reply
+/// tickets, still aligned one-to-one.
+#[derive(Debug)]
+pub struct ReadyBatch<T> {
+    pub kind: WorkloadKind,
+    pub n: usize,
+    pub items: Vec<(LiveRequest, T)>,
+}
+
+struct KeyQueue<T> {
+    items: VecDeque<(LiveRequest, T)>,
+    signals: usize,
+    /// Admission stamp of the oldest queued request (age-flush clock).
+    oldest_ns: u64,
+    /// Earliest absolute deadline over the queued requests (EDF key);
+    /// `u64::MAX` when no request carries a deadline. Maintained as a
+    /// running min on push — exact because pops always drain the whole
+    /// key queue.
+    earliest_deadline_ns: u64,
+}
+
+/// One shard's bounded queue, keyed by `(kind, n)`.
+pub struct ShardQueue<T> {
+    max_requests: usize,
+    max_signals: usize,
+    requests: usize,
+    signals: usize,
+    keys: BTreeMap<(WorkloadKind, usize), KeyQueue<T>>,
+}
+
+impl<T> ShardQueue<T> {
+    pub fn new(max_requests: usize, max_signals: usize) -> Self {
+        Self { max_requests, max_signals, requests: 0, signals: 0, keys: BTreeMap::new() }
+    }
+
+    pub fn pending_requests(&self) -> usize {
+        self.requests
+    }
+
+    pub fn pending_signals(&self) -> usize {
+        self.signals
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests == 0
+    }
+
+    /// Whether a request of `signals` signals fits under both caps.
+    pub fn has_room(&self, signals: usize) -> bool {
+        self.requests < self.max_requests && self.signals + signals <= self.max_signals
+    }
+
+    /// Enqueue, or hand the request back if the queue is full
+    /// (backpressure: the caller turns this into a reject-with-retry).
+    pub fn push(&mut self, req: LiveRequest, ticket: T) -> Result<(), (LiveRequest, T)> {
+        if !self.has_room(req.signals) {
+            return Err((req, ticket));
+        }
+        let kq = self.keys.entry((req.kind, req.n)).or_insert_with(|| KeyQueue {
+            items: VecDeque::new(),
+            signals: 0,
+            oldest_ns: req.admitted_ns,
+            earliest_deadline_ns: u64::MAX,
+        });
+        if kq.items.is_empty() {
+            kq.oldest_ns = req.admitted_ns;
+            kq.earliest_deadline_ns = u64::MAX;
+        }
+        kq.earliest_deadline_ns = kq.earliest_deadline_ns.min(req.deadline_ns());
+        kq.signals += req.signals;
+        kq.items.push_back((req, ticket));
+        self.requests += 1;
+        self.signals += req.signals;
+        Ok(())
+    }
+
+    /// Pop the most urgent ready batch: a key queue qualifies once it holds
+    /// `min_signals` or its oldest request is `wait_ns` old; among
+    /// qualifiers the earliest deadline wins (ties: oldest request, then
+    /// key order). Pops the whole key queue — batches are as large as what
+    /// accumulated, exactly like the simulator's work-conserving drain.
+    pub fn pop_ready(&mut self, min_signals: usize, now_ns: u64, wait_ns: u64) -> Option<ReadyBatch<T>> {
+        let mut best: Option<((u64, u64, WorkloadKind, usize), (WorkloadKind, usize))> = None;
+        for (&(kind, n), kq) in &self.keys {
+            if kq.items.is_empty() {
+                continue;
+            }
+            let aged = now_ns.saturating_sub(kq.oldest_ns) >= wait_ns;
+            if kq.signals < min_signals && !aged {
+                continue;
+            }
+            let rank = (kq.earliest_deadline_ns, kq.oldest_ns, kind, n);
+            let better = match &best {
+                None => true,
+                Some((r, _)) => rank < *r,
+            };
+            if better {
+                best = Some((rank, (kind, n)));
+            }
+        }
+        let (_, key) = best?;
+        let kq = self.keys.get_mut(&key).expect("selected key exists");
+        let items: Vec<(LiveRequest, T)> = kq.items.drain(..).collect();
+        self.requests -= items.len();
+        self.signals -= kq.signals;
+        kq.signals = 0;
+        kq.earliest_deadline_ns = u64::MAX;
+        Some(ReadyBatch { kind: key.0, n: key.1, items })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, n: usize, signals: usize, admitted_ns: u64) -> LiveRequest {
+        LiveRequest {
+            id,
+            kind: WorkloadKind::Batch1d,
+            n,
+            signals,
+            seed: id,
+            deadline_us: None,
+            admitted_ns,
+        }
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let mut q: ShardQueue<()> = ShardQueue::new(2, 10);
+        assert!(q.push(req(0, 64, 4, 0), ()).is_ok());
+        assert!(q.push(req(1, 64, 4, 0), ()).is_ok());
+        // Request cap: a third request bounces even though signals fit.
+        let (bounced, ()) = q.push(req(2, 64, 1, 0), ()).unwrap_err();
+        assert_eq!(bounced.id, 2);
+        assert_eq!(q.pending_requests(), 2);
+        // Signal cap: after draining, an 11-signal request never fits.
+        let mut q: ShardQueue<()> = ShardQueue::new(100, 10);
+        assert!(q.push(req(0, 64, 8, 0), ()).is_ok());
+        assert!(!q.has_room(4));
+        assert!(q.push(req(1, 64, 4, 0), ()).is_err());
+        assert!(q.push(req(1, 64, 2, 0), ()).is_ok());
+        assert_eq!(q.pending_signals(), 10);
+    }
+
+    #[test]
+    fn age_flush_dispatches_partial_batches() {
+        let mut q: ShardQueue<()> = ShardQueue::new(100, 1000);
+        q.push(req(0, 64, 2, 1_000), ()).unwrap();
+        let wait_ns = 50_000;
+        // Under the window and under min_signals: not ready.
+        assert!(q.pop_ready(32, 10_000, wait_ns).is_none());
+        // Window expired: the partial batch flushes.
+        let b = q.pop_ready(32, 1_000 + wait_ns, wait_ns).unwrap();
+        assert_eq!(b.items.len(), 1);
+        assert!(q.is_empty());
+        // Accumulating min_signals dispatches without waiting.
+        for i in 0..16 {
+            q.push(req(i, 64, 2, 2_000), ()).unwrap();
+        }
+        let b = q.pop_ready(32, 2_001, wait_ns).unwrap();
+        assert_eq!(b.items.len(), 16);
+        assert_eq!(b.items.iter().map(|(r, _)| r.signals).sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn earliest_deadline_key_dispatches_first() {
+        let mut q: ShardQueue<()> = ShardQueue::new(100, 1000);
+        // Two ready key queues; the n=128 one is older but deadline-free,
+        // the n=64 one carries a deadline — EDF picks n=64 first.
+        q.push(req(0, 128, 4, 0), ()).unwrap();
+        let mut urgent = req(1, 64, 4, 100);
+        urgent.deadline_us = Some(500);
+        q.push(urgent, ()).unwrap();
+        let b = q.pop_ready(1, 200, 1_000_000).unwrap();
+        assert_eq!(b.n, 64);
+        let b = q.pop_ready(1, 200, 1_000_000).unwrap();
+        assert_eq!(b.n, 128);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn batch_padding_is_next_power_of_two() {
+        let b = LiveBatch {
+            seqno: 0,
+            kind: WorkloadKind::Batch1d,
+            n: 64,
+            entries: vec![req(0, 64, 3, 0), req(1, 64, 2, 0)],
+        };
+        assert_eq!(b.signals(), 5);
+        assert_eq!(b.padded_signals(), 8);
+    }
+}

@@ -1,0 +1,1050 @@
+//! The serving reactor: one control thread + N shard worker threads.
+//!
+//! Concurrency layout (the same factory pattern as
+//! [`crate::coordinator::Server::spawn`], because an [`FftEngine`] with a
+//! PJRT backend attached is not `Send`):
+//!
+//! - The **reactor thread** owns every piece of mutable policy state —
+//!   admission, the bounded per-shard queues, the hedger, all counters —
+//!   and is the only thread that ever answers a client. It loops on one
+//!   mpsc channel carrying client submissions, worker completions and the
+//!   shutdown request, with a short `recv_timeout` tick so age-based
+//!   batch flushes and hedge checks happen even when traffic pauses.
+//! - Each **shard worker** builds its own engine from the shared config
+//!   and executes one [`LiveBatch`] at a time. In the default *modeled*
+//!   mode it prices the padded batch exactly like the cluster simulator's
+//!   shards (`plan_workload`, plan-cache backed) — this is what lets a CI
+//!   run push millions of requests through real threads and queues while
+//!   the engine cost stays a cache lookup. `numeric` mode runs the real
+//!   spectra instead (signals regenerated from each request's seed, the
+//!   same derivation as [`crate::coordinator::FftRequest::random_kind`]);
+//!   `pace` spin-waits the modeled service time so wall-clock latencies
+//!   reflect the modeled substrate speed.
+//!
+//! Requests are payload-free ([`LiveRequest`] carries a seed, not
+//! signals): hedged re-dispatches clone a few dozen bytes, and a numeric
+//! worker regenerates the exact signals deterministically.
+//!
+//! Every submitted request terminates in exactly one accounting bin —
+//! served, rejected (by reason), dropped (deadline), or failed — and
+//! shutdown refuses to produce a report that violates that conservation
+//! law (`LiveReport::unaccounted` must be zero).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::backend::FftEngine;
+use crate::config::SystemConfig;
+use crate::coordinator::{TRACE_MAX_BATCH, TRACE_MAX_N};
+use crate::fft::SoaVec;
+use crate::metrics::{DataMovement, LogHistogram};
+use crate::pimc::PassConfig;
+use crate::routines::OptLevel;
+use crate::workload::WorkloadKind;
+
+use super::admission::{Admission, RejectReason};
+use super::hedge::{Completion, Hedger};
+use super::protocol::ListenerHandle;
+use super::queue::{LiveBatch, ReadyBatch, ShardQueue};
+use super::report::{LiveReport, LiveShardSummary, RejectCounts};
+
+/// What to do with a request that cannot meet its deadline at dispatch
+/// time (per the EWMA service-time estimate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlinePolicy {
+    /// Reject it at dispatch (`LiveResult::Dropped`) — don't burn capacity
+    /// on an answer nobody is waiting for.
+    Drop,
+    /// Serve it anyway, accounted as degraded.
+    Degrade,
+}
+
+impl DeadlinePolicy {
+    pub fn parse(s: &str) -> Result<DeadlinePolicy> {
+        Ok(match s {
+            "drop" => DeadlinePolicy::Drop,
+            "degrade" => DeadlinePolicy::Degrade,
+            other => bail!("unknown deadline policy '{other}' (drop|degrade)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeadlinePolicy::Drop => "drop",
+            DeadlinePolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// Live serving configuration (the `serve-live` CLI's knobs).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub sys: SystemConfig,
+    pub passes: PassConfig,
+    pub shards: usize,
+    /// Dispatch a batch as soon as one `(kind, n)` queue holds this many
+    /// signals.
+    pub window_signals: usize,
+    /// Age-based flush: longest a queued request waits before a partial
+    /// batch dispatches, µs.
+    pub max_wait_us: f64,
+    /// Per-shard queue bound, requests.
+    pub queue_requests: usize,
+    /// Per-shard queue bound, signals.
+    pub queue_signals: usize,
+    /// Token-bucket admission rate, requests/s (0 = no rate limit).
+    pub admit_rps: f64,
+    /// Token-bucket burst allowance.
+    pub burst: u64,
+    /// Max requests past admission at once.
+    pub max_inflight: usize,
+    /// Deadline stamped on requests that don't carry their own, µs.
+    pub default_deadline_us: Option<u64>,
+    pub deadline_policy: DeadlinePolicy,
+    /// Hedge a batch still in flight after this long, µs (None = off).
+    pub hedge_after_us: Option<f64>,
+    /// Compute real spectra instead of modeled pricing.
+    pub numeric: bool,
+    /// Spin-pace modeled service times into wall clock.
+    pub pace: bool,
+}
+
+impl ServeConfig {
+    pub fn new(sys: SystemConfig, passes: impl Into<PassConfig>) -> Self {
+        Self {
+            sys,
+            passes: passes.into(),
+            shards: 4,
+            window_signals: 32,
+            max_wait_us: 200.0,
+            queue_requests: 4096,
+            queue_signals: 65_536,
+            admit_rps: 0.0,
+            burst: 1024,
+            max_inflight: 1 << 20,
+            default_deadline_us: None,
+            deadline_policy: DeadlinePolicy::Drop,
+            hedge_after_us: None,
+            numeric: false,
+            pace: false,
+        }
+    }
+
+    /// Paper-baseline system with the §6.2 hardware optimization.
+    pub fn default_hw() -> Self {
+        Self::new(SystemConfig::baseline().with_hw_opt(), OptLevel::SwHw)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.shards > 0, "serving tier needs at least one shard");
+        ensure!(self.window_signals >= 1, "batching window must be at least 1 signal");
+        ensure!(
+            self.max_wait_us.is_finite() && self.max_wait_us >= 0.0,
+            "max wait must be finite and non-negative, got {}",
+            self.max_wait_us
+        );
+        ensure!(
+            self.queue_requests >= 1 && self.queue_signals >= 1,
+            "queue bounds must be at least 1 request / 1 signal"
+        );
+        ensure!(
+            self.admit_rps.is_finite() && self.admit_rps >= 0.0,
+            "admission rate {} req/s must be finite and non-negative",
+            self.admit_rps
+        );
+        ensure!(self.max_inflight >= 1, "max inflight must be at least 1");
+        if let Some(h) = self.hedge_after_us {
+            ensure!(h.is_finite() && h > 0.0, "hedge delay {h} µs must be positive");
+            ensure!(self.shards >= 2, "hedging needs at least 2 shards");
+        }
+        ensure!(!(self.pace && self.numeric), "--pace applies to modeled mode only");
+        Ok(())
+    }
+}
+
+/// One live request: shape + seed, no payload. Numeric workers regenerate
+/// signal `i` as `SoaVec::random(n, seed ^ (i << 17))`, the exact
+/// derivation of [`crate::coordinator::FftRequest::random_kind`], so a
+/// trace replayed live computes the same spectra the offline service
+/// would.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveRequest {
+    pub id: u64,
+    pub kind: WorkloadKind,
+    pub n: usize,
+    /// Signals in the request (a batch of `signals` size-`n` transforms).
+    pub signals: usize,
+    pub seed: u64,
+    /// SLO deadline, µs after submission.
+    pub deadline_us: Option<u64>,
+    /// Admission stamp (reactor monotonic clock, ns). Stamped by the
+    /// reactor; clients leave it 0.
+    pub admitted_ns: u64,
+}
+
+impl LiveRequest {
+    pub fn new(id: u64, kind: WorkloadKind, n: usize, signals: usize, seed: u64) -> Self {
+        Self { id, kind, n, signals, seed, deadline_us: None, admitted_ns: 0 }
+    }
+
+    pub fn with_deadline(mut self, deadline_us: u64) -> Self {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+
+    /// Absolute deadline on the reactor clock (`u64::MAX` = none).
+    pub fn deadline_ns(&self) -> u64 {
+        match self.deadline_us {
+            Some(d) => self.admitted_ns.saturating_add(d.saturating_mul(1000)),
+            None => u64::MAX,
+        }
+    }
+}
+
+/// The terminal outcome every submitted request receives exactly once.
+#[derive(Debug, Clone)]
+pub enum LiveResult {
+    Served {
+        /// Submission → completion, ns.
+        latency_ns: u64,
+        /// Whether the SLO held (None when no deadline was carried).
+        deadline_met: Option<bool>,
+    },
+    Rejected {
+        reason: RejectReason,
+        /// Back-off hint, ns (0 = no estimate).
+        retry_after_ns: u64,
+    },
+    /// Could not meet its deadline (policy `drop`).
+    Dropped { waited_ns: u64 },
+    Failed { error: String },
+}
+
+/// A finished (or failed) batch execution, reported by a shard worker.
+struct BatchOutcome {
+    seqno: u64,
+    shard: usize,
+    movement: DataMovement,
+    /// Wall-clock the worker spent on the batch, ns.
+    wall_ns: u64,
+}
+
+enum Msg {
+    Submit(LiveRequest, Sender<LiveResult>),
+    Done(Result<BatchOutcome, (u64, usize, String)>),
+    Shutdown(Sender<LiveReport>),
+}
+
+enum WorkerMsg {
+    Run(LiveBatch),
+    Quit(Sender<WorkerStats>),
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct WorkerStats {
+    busy_ns: u64,
+    batches: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+fn validate_request(req: &LiveRequest) -> Result<()> {
+    ensure!(
+        req.n >= 2 && req.n <= TRACE_MAX_N && req.n.is_power_of_two(),
+        "FFT size n={} must be a power of two in [2, 2^30]",
+        req.n
+    );
+    ensure!(
+        req.signals >= 1 && req.signals <= TRACE_MAX_BATCH,
+        "batch={} must be in [1, 2^20]",
+        req.signals
+    );
+    req.kind.validate_shape(req.n, req.signals)?;
+    if let Some(d) = req.deadline_us {
+        ensure!(d >= 1, "deadline_us={d} must be at least 1µs");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- workers
+
+fn run_batch(engine: &mut FftEngine, cfg: &ServeConfig, batch: &LiveBatch) -> Result<DataMovement> {
+    if cfg.numeric {
+        // Real spectra: regenerate each request's signals from its seed
+        // (outputs are computed then discarded — the serving tier measures
+        // latency/throughput, clients get status + metrics).
+        let mut signals = Vec::with_capacity(batch.signals());
+        for e in &batch.entries {
+            for i in 0..e.signals {
+                signals.push(SoaVec::random(e.n, e.seed ^ (i as u64) << 17));
+            }
+        }
+        let run = engine.run_workload(batch.kind, batch.n, &signals)?;
+        Ok(run.eval.movement_plan)
+    } else {
+        // Modeled pricing of the padded batch — the cluster simulator's
+        // exact service model, plan-cache backed.
+        let eval = engine.plan_workload(batch.kind, batch.n, batch.padded_signals())?;
+        Ok(eval.movement_plan)
+    }
+}
+
+fn worker_loop(shard: usize, cfg: Arc<ServeConfig>, rx: Receiver<WorkerMsg>, tx: Sender<Msg>) {
+    let mut engine = FftEngine::builder().system(&cfg.sys).passes(cfg.passes).build();
+    let mut stats = WorkerStats::default();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Run(batch) => {
+                let t0 = Instant::now();
+                let seqno = batch.seqno;
+                // Pacing: hold the modeled service time in wall clock so
+                // latency percentiles reflect the modeled substrate speed.
+                let pace_target = if cfg.pace {
+                    engine
+                        .plan_workload(batch.kind, batch.n, batch.padded_signals())
+                        .map(|e| Duration::from_nanos(e.plan_ns.max(0.0) as u64))
+                        .ok()
+                } else {
+                    None
+                };
+                let outcome = match run_batch(&mut engine, &cfg, &batch) {
+                    Ok(movement) => {
+                        if let Some(target) = pace_target {
+                            while t0.elapsed() < target {
+                                std::hint::spin_loop();
+                            }
+                        }
+                        let wall_ns = t0.elapsed().as_nanos() as u64;
+                        stats.busy_ns += wall_ns;
+                        stats.batches += 1;
+                        Ok(BatchOutcome { seqno, shard, movement, wall_ns })
+                    }
+                    Err(e) => {
+                        stats.busy_ns += t0.elapsed().as_nanos() as u64;
+                        Err((seqno, shard, format!("{e:#}")))
+                    }
+                };
+                if tx.send(Msg::Done(outcome)).is_err() {
+                    break;
+                }
+            }
+            WorkerMsg::Quit(reply) => {
+                let (hits, misses) = engine.cache_stats();
+                stats.cache_hits = hits;
+                stats.cache_misses = misses;
+                let _ = reply.send(stats);
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- reactor
+
+struct Pending {
+    batch: LiveBatch,
+    /// Reply channels, aligned one-to-one with `batch.entries`.
+    replies: Vec<Sender<LiveResult>>,
+}
+
+struct Reactor {
+    cfg: Arc<ServeConfig>,
+    epoch: Instant,
+    rx: Receiver<Msg>,
+    worker_tx: Vec<Sender<WorkerMsg>>,
+    queues: Vec<ShardQueue<Sender<LiveResult>>>,
+    admission: Admission,
+    rejects: RejectCounts,
+    hedger: Option<Hedger>,
+    /// Outstanding `Run` messages per shard (primaries + hedge copies).
+    shard_busy: Vec<usize>,
+    in_flight: BTreeMap<u64, Pending>,
+    next_seq: u64,
+    // ---- accounting ----
+    submitted: u64,
+    admitted: u64,
+    served: u64,
+    dropped: u64,
+    degraded: u64,
+    failed: u64,
+    deadline_carried: u64,
+    deadline_met: u64,
+    deadline_missed: u64,
+    latency: LogHistogram,
+    queue_depth: LogHistogram,
+    occupancy_pct: LogHistogram,
+    per_kind: BTreeMap<WorkloadKind, u64>,
+    movement: DataMovement,
+    signals: u64,
+    padded_signals: u64,
+    batches: u64,
+    /// Per-shard (requests, signals, movement) attributed to the shard
+    /// whose copy finished first.
+    shard_served: Vec<(u64, u64, DataMovement)>,
+    /// EWMA wall-clock service time per padded signal, keyed by batch
+    /// shape — the deadline-feasibility estimator.
+    est_ns_per_signal: BTreeMap<(WorkloadKind, usize), f64>,
+    first_admit_ns: Option<u64>,
+    last_done_ns: u64,
+    closing: Option<Sender<LiveReport>>,
+}
+
+impl Reactor {
+    fn new(
+        cfg: Arc<ServeConfig>,
+        epoch: Instant,
+        rx: Receiver<Msg>,
+        worker_tx: Vec<Sender<WorkerMsg>>,
+    ) -> Self {
+        let shards = cfg.shards;
+        Self {
+            queues: (0..shards)
+                .map(|_| ShardQueue::new(cfg.queue_requests, cfg.queue_signals))
+                .collect(),
+            admission: Admission::new(cfg.admit_rps, cfg.burst, cfg.max_inflight),
+            rejects: RejectCounts::default(),
+            hedger: cfg.hedge_after_us.map(|us| Hedger::new((us * 1e3).round() as u64)),
+            shard_busy: vec![0; shards],
+            in_flight: BTreeMap::new(),
+            next_seq: 0,
+            submitted: 0,
+            admitted: 0,
+            served: 0,
+            dropped: 0,
+            degraded: 0,
+            failed: 0,
+            deadline_carried: 0,
+            deadline_met: 0,
+            deadline_missed: 0,
+            latency: LogHistogram::new(),
+            queue_depth: LogHistogram::new(),
+            occupancy_pct: LogHistogram::new(),
+            per_kind: BTreeMap::new(),
+            movement: DataMovement::default(),
+            signals: 0,
+            padded_signals: 0,
+            batches: 0,
+            shard_served: vec![(0, 0, DataMovement::default()); shards],
+            est_ns_per_signal: BTreeMap::new(),
+            first_admit_ns: None,
+            last_done_ns: 0,
+            closing: None,
+            cfg,
+            epoch,
+            rx,
+            worker_tx,
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn run(mut self) {
+        let tick_ns = ((self.cfg.max_wait_us * 1e3 / 4.0) as u64).clamp(50_000, 2_000_000);
+        let tick = Duration::from_nanos(tick_ns);
+        loop {
+            match self.rx.recv_timeout(tick) {
+                Ok(msg) => self.handle(msg),
+                Err(RecvTimeoutError::Timeout) => {}
+                // Every client and worker sender gone without a shutdown:
+                // nothing can arrive or complete, just exit.
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+            // Drain opportunistically so one pump serves a burst.
+            while let Ok(msg) = self.rx.try_recv() {
+                self.handle(msg);
+            }
+            self.pump();
+            if self.closing.is_some() && self.drained() {
+                let report = self.finish();
+                if let Some(reply) = self.closing.take() {
+                    let _ = reply.send(report);
+                }
+                return;
+            }
+        }
+    }
+
+    fn handle(&mut self, msg: Msg) {
+        match msg {
+            Msg::Submit(req, reply) => self.on_submit(req, reply),
+            Msg::Done(res) => self.on_done(res),
+            Msg::Shutdown(reply) => self.closing = Some(reply),
+        }
+    }
+
+    fn on_submit(&mut self, mut req: LiveRequest, reply: Sender<LiveResult>) {
+        self.submitted += 1;
+        if self.closing.is_some() {
+            self.rejects.note(RejectReason::Closed);
+            let _ = reply
+                .send(LiveResult::Rejected { reason: RejectReason::Closed, retry_after_ns: 0 });
+            return;
+        }
+        if validate_request(&req).is_err() {
+            self.rejects.note(RejectReason::Invalid);
+            let _ = reply
+                .send(LiveResult::Rejected { reason: RejectReason::Invalid, retry_after_ns: 0 });
+            return;
+        }
+        let now = self.now_ns();
+        if let Err((reason, retry_after_ns)) = self.admission.try_admit(now) {
+            self.rejects.note(reason);
+            let _ = reply.send(LiveResult::Rejected { reason, retry_after_ns });
+            return;
+        }
+        req.admitted_ns = now;
+        if req.deadline_us.is_none() {
+            req.deadline_us = self.cfg.default_deadline_us;
+        }
+        // Affinity routing with least-loaded spill: a shape's home shard
+        // keeps its plan cache hot; a full home spills to the emptiest
+        // shard with room rather than rejecting early.
+        let shards = self.cfg.shards;
+        let home =
+            (req.kind as usize).wrapping_mul(7).wrapping_add(req.n.trailing_zeros() as usize)
+                % shards;
+        let shard = if self.queues[home].has_room(req.signals) {
+            Some(home)
+        } else {
+            (0..shards)
+                .filter(|&s| self.queues[s].has_room(req.signals))
+                .min_by_key(|&s| (self.queues[s].pending_signals(), s))
+        };
+        let Some(shard) = shard else {
+            // Backpressure: every eligible queue is full. The admission
+            // slot is given back (the bucket token is spent — queue-full
+            // spills still count against the arrival rate).
+            self.admission.release();
+            self.rejects.note(RejectReason::QueueFull);
+            let retry_after_ns = ((self.cfg.max_wait_us * 1e3) as u64).max(50_000);
+            let _ = reply
+                .send(LiveResult::Rejected { reason: RejectReason::QueueFull, retry_after_ns });
+            return;
+        };
+        if self.first_admit_ns.is_none() {
+            self.first_admit_ns = Some(now);
+        }
+        if req.deadline_us.is_some() {
+            self.deadline_carried += 1;
+        }
+        self.admitted += 1;
+        self.queue_depth.record(self.queues[shard].pending_requests() as u64);
+        if let Err((req, reply)) = self.queues[shard].push(req, reply) {
+            // Unreachable (has_room was just checked on this thread), but
+            // never silently lose a request.
+            self.admitted -= 1;
+            self.admission.release();
+            self.rejects.note(RejectReason::QueueFull);
+            let _ = reply.send(LiveResult::Rejected {
+                reason: RejectReason::QueueFull,
+                retry_after_ns: ((self.cfg.max_wait_us * 1e3) as u64).max(50_000),
+            });
+            if req.deadline_us.is_some() {
+                self.deadline_carried -= 1;
+            }
+        }
+    }
+
+    /// Dispatch ready batches to idle shards, then fire due hedges.
+    fn pump(&mut self) {
+        let now = self.now_ns();
+        let wait_ns = (self.cfg.max_wait_us * 1e3).round() as u64;
+        // Draining flushes partial batches immediately.
+        let min = if self.closing.is_some() { 1 } else { self.cfg.window_signals };
+        for s in 0..self.cfg.shards {
+            while self.shard_busy[s] == 0 {
+                let Some(ready) = self.queues[s].pop_ready(min, now, wait_ns) else {
+                    break;
+                };
+                self.dispatch(s, ready, now);
+            }
+        }
+        let due = match &mut self.hedger {
+            Some(h) => h.due(now),
+            None => Vec::new(),
+        };
+        for (seqno, primary) in due {
+            let alt = (0..self.cfg.shards)
+                .filter(|&s| s != primary)
+                .min_by_key(|&s| (self.shard_busy[s], self.queues[s].pending_requests(), s));
+            if let (Some(alt), Some(p)) = (alt, self.in_flight.get(&seqno)) {
+                if self.worker_tx[alt].send(WorkerMsg::Run(p.batch.clone())).is_ok() {
+                    self.shard_busy[alt] += 1;
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, s: usize, ready: ReadyBatch<Sender<LiveResult>>, now: u64) {
+        // Deadline triage against the EWMA service estimate for this shape.
+        let total: usize = ready.items.iter().map(|(r, _)| r.signals).sum();
+        let padded = total.next_power_of_two();
+        let per_sig =
+            self.est_ns_per_signal.get(&(ready.kind, ready.n)).copied().unwrap_or(0.0);
+        let est_ns = (per_sig * padded as f64).round() as u64;
+        let mut entries = Vec::with_capacity(ready.items.len());
+        let mut replies = Vec::with_capacity(ready.items.len());
+        for (req, reply) in ready.items {
+            let deadline = req.deadline_ns();
+            if deadline != u64::MAX && now.saturating_add(est_ns) > deadline {
+                match self.cfg.deadline_policy {
+                    DeadlinePolicy::Drop => {
+                        self.dropped += 1;
+                        self.admission.release();
+                        let _ = reply.send(LiveResult::Dropped {
+                            waited_ns: now.saturating_sub(req.admitted_ns),
+                        });
+                        continue;
+                    }
+                    DeadlinePolicy::Degrade => self.degraded += 1,
+                }
+            }
+            entries.push(req);
+            replies.push(reply);
+        }
+        if entries.is_empty() {
+            return;
+        }
+        let seqno = self.next_seq;
+        self.next_seq += 1;
+        let batch = LiveBatch { seqno, kind: ready.kind, n: ready.n, entries };
+        if self.worker_tx[s].send(WorkerMsg::Run(batch.clone())).is_err() {
+            // Worker gone (shutdown race): fail rather than lose requests.
+            for reply in replies {
+                self.failed += 1;
+                self.admission.release();
+                let _ = reply
+                    .send(LiveResult::Failed { error: format!("shard {s} worker exited") });
+            }
+            return;
+        }
+        self.shard_busy[s] += 1;
+        if let Some(h) = &mut self.hedger {
+            h.track(seqno, now, s);
+        }
+        self.in_flight.insert(seqno, Pending { batch, replies });
+    }
+
+    fn on_done(&mut self, res: Result<BatchOutcome, (u64, usize, String)>) {
+        let now = self.now_ns();
+        let (seqno, shard, outcome) = match res {
+            Ok(o) => (o.seqno, o.shard, Ok(o)),
+            Err((seqno, shard, e)) => (seqno, shard, Err(e)),
+        };
+        if self.shard_busy[shard] > 0 {
+            self.shard_busy[shard] -= 1;
+        }
+        let completion = match &mut self.hedger {
+            Some(h) => h.complete(seqno, shard),
+            None => Completion::First { hedge_won: false },
+        };
+        if completion == Completion::Duplicate {
+            return;
+        }
+        let Some(p) = self.in_flight.remove(&seqno) else {
+            return;
+        };
+        self.last_done_ns = self.last_done_ns.max(now);
+        match outcome {
+            Ok(o) => {
+                let total = p.batch.signals();
+                let padded = p.batch.padded_signals();
+                self.batches += 1;
+                self.signals += total as u64;
+                self.padded_signals += padded as u64;
+                self.movement.add_assign(&o.movement);
+                self.occupancy_pct.record((total * 100 / padded.max(1)) as u64);
+                // Wall clock is the live tier's real service time — the
+                // deadline estimator tracks it, whatever the engine mode.
+                let per_sig = o.wall_ns as f64 / padded.max(1) as f64;
+                let e = self
+                    .est_ns_per_signal
+                    .entry((p.batch.kind, p.batch.n))
+                    .or_insert(per_sig);
+                *e = *e * 0.75 + per_sig * 0.25;
+                let stats = &mut self.shard_served[shard];
+                stats.0 += p.batch.entries.len() as u64;
+                stats.1 += total as u64;
+                stats.2.add_assign(&o.movement);
+                for (req, reply) in p.batch.entries.iter().zip(p.replies) {
+                    let latency_ns = now.saturating_sub(req.admitted_ns);
+                    self.latency.record(latency_ns);
+                    *self.per_kind.entry(req.kind).or_insert(0) += 1;
+                    self.served += 1;
+                    let deadline_met =
+                        req.deadline_us.map(|d| latency_ns <= d.saturating_mul(1000));
+                    match deadline_met {
+                        Some(true) => self.deadline_met += 1,
+                        Some(false) => self.deadline_missed += 1,
+                        None => {}
+                    }
+                    self.admission.release();
+                    let _ = reply.send(LiveResult::Served { latency_ns, deadline_met });
+                }
+            }
+            Err(error) => {
+                for reply in p.replies {
+                    self.failed += 1;
+                    self.admission.release();
+                    let _ = reply.send(LiveResult::Failed { error: error.clone() });
+                }
+            }
+        }
+    }
+
+    fn drained(&self) -> bool {
+        self.in_flight.is_empty()
+            && self.queues.iter().all(|q| q.is_empty())
+            && self.shard_busy.iter().all(|&b| b == 0)
+    }
+
+    fn finish(&mut self) -> LiveReport {
+        let makespan_ns = self.last_done_ns.saturating_sub(self.first_admit_ns.unwrap_or(0));
+        let mut per_shard = Vec::with_capacity(self.cfg.shards);
+        let mut cache_hits = 0u64;
+        let mut cache_misses = 0u64;
+        for (s, tx) in self.worker_tx.iter().enumerate() {
+            let (stx, srx) = mpsc::channel();
+            let stats = if tx.send(WorkerMsg::Quit(stx)).is_ok() {
+                srx.recv().unwrap_or_default()
+            } else {
+                WorkerStats::default()
+            };
+            cache_hits += stats.cache_hits;
+            cache_misses += stats.cache_misses;
+            let (requests, signals, movement) = self.shard_served[s];
+            per_shard.push(LiveShardSummary {
+                shard: s,
+                requests,
+                signals,
+                batches: stats.batches,
+                busy_ns: stats.busy_ns,
+                utilization: if makespan_ns == 0 {
+                    0.0
+                } else {
+                    stats.busy_ns as f64 / makespan_ns as f64
+                },
+                movement,
+                cache_hits: stats.cache_hits,
+                cache_misses: stats.cache_misses,
+            });
+        }
+        LiveReport {
+            shards: self.cfg.shards,
+            router: "affinity-spill",
+            requests: self.served,
+            signals: self.signals,
+            padded_signals: self.padded_signals,
+            batches: self.batches,
+            makespan_ns,
+            latency_ns: std::mem::take(&mut self.latency),
+            queue_depth: std::mem::take(&mut self.queue_depth),
+            occupancy_pct: std::mem::take(&mut self.occupancy_pct),
+            movement: self.movement,
+            cache_hits,
+            cache_misses,
+            per_kind: std::mem::take(&mut self.per_kind),
+            per_shard,
+            submitted: self.submitted,
+            admitted: self.admitted,
+            rejected: self.rejects,
+            dropped: self.dropped,
+            degraded: self.degraded,
+            failed: self.failed,
+            deadline_carried: self.deadline_carried,
+            deadline_met: self.deadline_met,
+            deadline_missed: self.deadline_missed,
+            hedge_after_us: self.cfg.hedge_after_us,
+            hedges_fired: self.hedger.as_ref().map_or(0, |h| h.fired),
+            hedges_won: self.hedger.as_ref().map_or(0, |h| h.won),
+            hedges_wasted: self.hedger.as_ref().map_or(0, |h| h.wasted),
+            admit_rps: self.cfg.admit_rps,
+            burst: self.cfg.burst,
+            max_inflight: self.cfg.max_inflight,
+            deadline_policy: self.cfg.deadline_policy.name(),
+            mode: if self.cfg.numeric { "numeric" } else { "modeled" },
+            paced: self.cfg.pace,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- server
+
+/// Handle to a running live server. Dropping it without
+/// [`shutdown`](Self::shutdown) asks the reactor to drain and detaches.
+pub struct LiveServer {
+    tx: Sender<Msg>,
+    reactor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    listener: Option<ListenerHandle>,
+}
+
+impl LiveServer {
+    pub fn start(cfg: ServeConfig) -> Result<LiveServer> {
+        cfg.validate()?;
+        let cfg = Arc::new(cfg);
+        let epoch = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let mut worker_tx = Vec::with_capacity(cfg.shards);
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for s in 0..cfg.shards {
+            let (wtx, wrx) = mpsc::channel();
+            worker_tx.push(wtx);
+            let cfg = Arc::clone(&cfg);
+            let tx = tx.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("serve-shard-{s}"))
+                    .spawn(move || worker_loop(s, cfg, wrx, tx))
+                    .context("spawning shard worker")?,
+            );
+        }
+        let reactor = {
+            let cfg = Arc::clone(&cfg);
+            thread::Builder::new()
+                .name("serve-reactor".into())
+                .spawn(move || Reactor::new(cfg, epoch, rx, worker_tx).run())
+                .context("spawning reactor")?
+        };
+        Ok(LiveServer { tx, reactor: Some(reactor), workers, listener: None })
+    }
+
+    /// An in-process client handle (cheap to clone, safe across threads).
+    pub fn client(&self) -> LiveClient {
+        LiveClient { tx: self.tx.clone() }
+    }
+
+    /// Start the localhost socket listener (see [`super::protocol`]) and
+    /// return its bound address.
+    pub fn listen(&mut self) -> Result<std::net::SocketAddr> {
+        ensure!(self.listener.is_none(), "listener already running");
+        let handle = super::protocol::spawn_listener(self.client())?;
+        let addr = handle.addr;
+        self.listener = Some(handle);
+        Ok(addr)
+    }
+
+    /// Drain every queued request, stop the workers and return the final
+    /// report. Fails if any request went unaccounted (conservation check).
+    pub fn shutdown(mut self) -> Result<LiveReport> {
+        if let Some(l) = self.listener.take() {
+            l.stop();
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Shutdown(rtx))
+            .map_err(|_| anyhow!("reactor exited before shutdown"))?;
+        let report = rrx.recv().context("waiting for the final serving report")?;
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        ensure!(
+            report.unaccounted() == 0,
+            "serving tier lost requests: {} unaccounted (submitted {} served {} rejected {} \
+             dropped {} failed {})",
+            report.unaccounted(),
+            report.submitted,
+            report.requests,
+            report.rejected.total(),
+            report.dropped,
+            report.failed,
+        );
+        Ok(report)
+    }
+}
+
+impl Drop for LiveServer {
+    fn drop(&mut self) {
+        if self.reactor.is_some() {
+            if let Some(l) = self.listener.take() {
+                l.stop();
+            }
+            let (rtx, _rrx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(rtx));
+            // Threads detach; the drained reactor exits on its own.
+        }
+    }
+}
+
+/// In-process client: submit requests, get exactly one [`LiveResult`] per
+/// request.
+#[derive(Clone)]
+pub struct LiveClient {
+    tx: Sender<Msg>,
+}
+
+impl LiveClient {
+    /// Fire-and-collect submission: returns the channel the result will
+    /// arrive on (never blocks the caller).
+    pub fn submit(&self, req: LiveRequest) -> Receiver<LiveResult> {
+        let (rtx, rrx) = mpsc::channel();
+        if self.tx.send(Msg::Submit(req, rtx.clone())).is_err() {
+            let _ = rtx.send(LiveResult::Failed { error: "server is gone".into() });
+        }
+        rrx
+    }
+
+    /// Blocking call: submit and wait for the result.
+    pub fn call(&self, req: LiveRequest) -> LiveResult {
+        self.submit(req)
+            .recv()
+            .unwrap_or_else(|_| LiveResult::Failed { error: "server dropped the request".into() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ServeConfig {
+        let mut cfg = ServeConfig::default_hw();
+        cfg.shards = 2;
+        cfg.window_signals = 8;
+        cfg.max_wait_us = 100.0;
+        cfg
+    }
+
+    #[test]
+    fn serves_requests_and_accounts_everything() {
+        let server = LiveServer::start(small_cfg()).unwrap();
+        let client = server.client();
+        let rxs: Vec<_> = (0..100)
+            .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 64, 2, i)))
+            .collect();
+        let report = server.shutdown().unwrap();
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                LiveResult::Served { latency_ns, deadline_met } => {
+                    assert!(latency_ns > 0);
+                    assert_eq!(deadline_met, None);
+                }
+                other => panic!("expected Served, got {other:?}"),
+            }
+        }
+        assert_eq!(report.requests, 100);
+        assert_eq!(report.submitted, 100);
+        assert_eq!(report.unaccounted(), 0);
+        assert_eq!(report.per_kind[&WorkloadKind::Batch1d], 100);
+        assert_eq!(report.signals, 200);
+        assert!(report.batches > 0);
+        assert!(report.movement.total() > 0.0);
+        assert!(report.makespan_ns > 0);
+        let shard_requests: u64 = report.per_shard.iter().map(|s| s.requests).sum();
+        assert_eq!(shard_requests, 100);
+        assert!(report.latency_ns.count() == 100);
+        assert!(report.cache_hits + report.cache_misses > 0);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_backpressure() {
+        let mut cfg = small_cfg();
+        cfg.shards = 1;
+        cfg.queue_requests = 1;
+        cfg.window_signals = 1000;
+        cfg.max_wait_us = 10_000_000.0; // nothing flushes on age
+        let server = LiveServer::start(cfg).unwrap();
+        let client = server.client();
+        let rx_a = client.submit(LiveRequest::new(0, WorkloadKind::Batch1d, 64, 1, 0));
+        // Give the reactor time to queue A before B arrives.
+        std::thread::sleep(Duration::from_millis(20));
+        let rx_b = client.submit(LiveRequest::new(1, WorkloadKind::Batch1d, 64, 1, 1));
+        match rx_b.recv().unwrap() {
+            LiveResult::Rejected { reason, retry_after_ns } => {
+                assert_eq!(reason, RejectReason::QueueFull);
+                assert!(retry_after_ns > 0);
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // Shutdown drains A (flush min drops to 1).
+        let report = server.shutdown().unwrap();
+        assert!(matches!(rx_a.recv().unwrap(), LiveResult::Served { .. }));
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.rejected.queue_full, 1);
+        assert_eq!(report.unaccounted(), 0);
+    }
+
+    #[test]
+    fn invalid_shapes_are_rejected_not_lost() {
+        let server = LiveServer::start(small_cfg()).unwrap();
+        let client = server.client();
+        // Non-power-of-two size.
+        let r = client.call(LiveRequest::new(0, WorkloadKind::Batch1d, 48, 1, 0));
+        assert!(matches!(
+            r,
+            LiveResult::Rejected { reason: RejectReason::Invalid, .. }
+        ));
+        // Convolution needs signal pairs.
+        let r = client.call(LiveRequest::new(1, WorkloadKind::Convolution, 64, 3, 0));
+        assert!(matches!(
+            r,
+            LiveResult::Rejected { reason: RejectReason::Invalid, .. }
+        ));
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.rejected.invalid, 2);
+        assert_eq!(report.unaccounted(), 0);
+    }
+
+    #[test]
+    fn hopeless_deadlines_drop_or_degrade_per_policy() {
+        for (policy, expect_drop) in
+            [(DeadlinePolicy::Drop, true), (DeadlinePolicy::Degrade, false)]
+        {
+            let mut cfg = small_cfg();
+            cfg.deadline_policy = policy;
+            cfg.window_signals = 1000; // force the age-based flush path
+            cfg.max_wait_us = 5_000.0;
+            let server = LiveServer::start(cfg).unwrap();
+            let client = server.client();
+            // A 1µs deadline cannot survive a 5ms batching window.
+            let rx = client
+                .submit(LiveRequest::new(0, WorkloadKind::Batch1d, 64, 1, 0).with_deadline(1));
+            let result = rx.recv().unwrap();
+            let report = server.shutdown().unwrap();
+            assert_eq!(report.deadline_carried, 1);
+            assert_eq!(report.unaccounted(), 0);
+            if expect_drop {
+                assert!(matches!(result, LiveResult::Dropped { .. }), "{result:?}");
+                assert_eq!(report.dropped, 1);
+                assert_eq!(report.requests, 0);
+            } else {
+                match result {
+                    LiveResult::Served { deadline_met, .. } => {
+                        assert_eq!(deadline_met, Some(false));
+                    }
+                    other => panic!("expected degraded Served, got {other:?}"),
+                }
+                assert_eq!(report.degraded, 1);
+                assert_eq!(report.deadline_missed, 1);
+                assert_eq!(report.requests, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_configs() {
+        let mut cfg = ServeConfig::default_hw();
+        cfg.shards = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default_hw();
+        cfg.hedge_after_us = Some(50.0);
+        cfg.shards = 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default_hw();
+        cfg.numeric = true;
+        cfg.pace = true;
+        assert!(cfg.validate().is_err());
+        assert!(DeadlinePolicy::parse("drop").is_ok());
+        assert!(DeadlinePolicy::parse("degrade").is_ok());
+        assert!(DeadlinePolicy::parse("panic").is_err());
+    }
+}

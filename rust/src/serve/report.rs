@@ -1,0 +1,287 @@
+//! The live serving report: the cluster simulator's schema plus live-only
+//! accounting sections.
+//!
+//! Schema contract: every key the `cluster` artifact emits appears here
+//! with the same shape and units — same `latency_us` percentile block,
+//! same `per_kind` map, same per-substrate `movement`, same `per_shard`
+//! rollups — built from the same shared helpers in [`crate::metrics`], so
+//! a simulated capacity plan and a live run are directly comparable field
+//! by field. On top, the live tier reports what a simulator never has to:
+//! admission decisions, deadline outcomes, hedge races and failures —
+//! each accounted separately, with [`LiveReport::unaccounted`] as the
+//! conservation check (every submitted request ends in exactly one bin).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{depth_json, latency_us_json, plan_cache_json, DataMovement, LogHistogram};
+use crate::util::Json;
+use crate::workload::{per_kind_json, WorkloadKind};
+
+use super::admission::RejectReason;
+
+/// Rejections by reason (the `admission.rejected` report block).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RejectCounts {
+    pub rate_limited: u64,
+    pub saturated: u64,
+    pub queue_full: u64,
+    pub invalid: u64,
+    pub closed: u64,
+}
+
+impl RejectCounts {
+    pub fn note(&mut self, reason: RejectReason) {
+        match reason {
+            RejectReason::RateLimited => self.rate_limited += 1,
+            RejectReason::Saturated => self.saturated += 1,
+            RejectReason::QueueFull => self.queue_full += 1,
+            RejectReason::Invalid => self.invalid += 1,
+            RejectReason::Closed => self.closed += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.rate_limited + self.saturated + self.queue_full + self.invalid + self.closed
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rate_limited", Json::num(self.rate_limited as f64)),
+            ("saturated", Json::num(self.saturated as f64)),
+            ("queue_full", Json::num(self.queue_full as f64)),
+            ("invalid", Json::num(self.invalid as f64)),
+            ("closed", Json::num(self.closed as f64)),
+        ])
+    }
+}
+
+/// Per-shard rollup, mirroring [`crate::cluster::ShardSummary`] key for key.
+#[derive(Debug, Clone)]
+pub struct LiveShardSummary {
+    pub shard: usize,
+    pub requests: u64,
+    pub signals: u64,
+    pub batches: u64,
+    /// Wall-clock the worker spent inside the engine, ns.
+    pub busy_ns: u64,
+    /// busy_ns / makespan_ns.
+    pub utilization: f64,
+    pub movement: DataMovement,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Everything a live run produces. `to_json` is the `serve-live` report
+/// artifact; its key set is a superset of the cluster report's.
+#[derive(Debug, Clone)]
+pub struct LiveReport {
+    pub shards: usize,
+    /// Routing policy name (affinity home shard with least-loaded spill).
+    pub router: &'static str,
+    /// Requests served to completion.
+    pub requests: u64,
+    pub signals: u64,
+    pub padded_signals: u64,
+    pub batches: u64,
+    /// Wall clock from first admission to last completion, ns.
+    pub makespan_ns: u64,
+    /// End-to-end request latency (submission → completion), ns.
+    pub latency_ns: LogHistogram,
+    /// Queue depth of the routed shard, sampled at every admission.
+    pub queue_depth: LogHistogram,
+    /// Batch occupancy (percent of the padded shape used).
+    pub occupancy_pct: LogHistogram,
+    pub movement: DataMovement,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Requests *served* per workload kind (drops and rejects excluded).
+    pub per_kind: BTreeMap<WorkloadKind, u64>,
+    pub per_shard: Vec<LiveShardSummary>,
+
+    // ---- live-only accounting ----
+    /// Every request that reached the reactor.
+    pub submitted: u64,
+    /// Requests past admission control.
+    pub admitted: u64,
+    pub rejected: RejectCounts,
+    /// Requests dropped at dispatch because they could not meet their
+    /// deadline (policy `drop`).
+    pub dropped: u64,
+    /// Deadline-missing requests served anyway (policy `degrade`).
+    pub degraded: u64,
+    /// Requests whose batch failed inside the engine.
+    pub failed: u64,
+    /// Requests that carried a deadline.
+    pub deadline_carried: u64,
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+    pub hedge_after_us: Option<f64>,
+    pub hedges_fired: u64,
+    pub hedges_won: u64,
+    pub hedges_wasted: u64,
+    pub admit_rps: f64,
+    pub burst: u64,
+    pub max_inflight: usize,
+    pub deadline_policy: &'static str,
+    /// `"modeled"` (plan pricing, no spectra) or `"numeric"` (real FFTs).
+    pub mode: &'static str,
+    /// Whether modeled service times were spin-paced into wall clock.
+    pub paced: bool,
+}
+
+impl LiveReport {
+    /// Latency percentile in µs.
+    pub fn latency_p_us(&self, p: f64) -> f64 {
+        self.latency_ns.percentile(p) as f64 / 1e3
+    }
+
+    /// Served throughput over the makespan, requests/s.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            0.0
+        } else {
+            self.requests as f64 / (self.makespan_ns as f64 / 1e9)
+        }
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn avg_occupancy(&self) -> f64 {
+        if self.padded_signals == 0 {
+            0.0
+        } else {
+            self.signals as f64 / self.padded_signals as f64
+        }
+    }
+
+    /// Conservation check: submitted requests not accounted in any
+    /// terminal bin (served, rejected, dropped, failed). Zero on every
+    /// clean shutdown; the server refuses to report otherwise.
+    pub fn unaccounted(&self) -> i64 {
+        self.submitted as i64
+            - self.requests as i64
+            - self.rejected.total() as i64
+            - self.dropped as i64
+            - self.failed as i64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "shards={} served={}/{} throughput={:.0}req/s p50={:.1}µs p95={:.1}µs p99={:.1}µs \
+             p999={:.1}µs rejected={} dropped={} deadline-miss={}/{} hedges={}w{} cache-hit={:.1}%",
+            self.shards,
+            self.requests,
+            self.submitted,
+            self.throughput_rps(),
+            self.latency_p_us(50.0),
+            self.latency_p_us(95.0),
+            self.latency_p_us(99.0),
+            self.latency_p_us(99.9),
+            self.rejected.total(),
+            self.dropped,
+            self.deadline_missed,
+            self.deadline_carried,
+            self.hedges_fired,
+            self.hedges_won,
+            self.cache_hit_rate() * 100.0,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // ---- the cluster-report schema, key for key ----
+            ("shards", Json::num(self.shards as f64)),
+            ("router", Json::str(self.router)),
+            ("requests", Json::num(self.requests as f64)),
+            ("signals", Json::num(self.signals as f64)),
+            ("padded_signals", Json::num(self.padded_signals as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("makespan_us", Json::num(self.makespan_ns as f64 / 1e3)),
+            ("throughput_rps", Json::num(self.throughput_rps())),
+            ("latency_us", latency_us_json(&self.latency_ns)),
+            ("queue_depth", depth_json(&self.queue_depth)),
+            (
+                "batch_occupancy_pct",
+                Json::obj(vec![
+                    ("avg", Json::num(self.avg_occupancy() * 100.0)),
+                    ("p50", Json::num(self.occupancy_pct.percentile(50.0) as f64)),
+                    ("p99", Json::num(self.occupancy_pct.percentile(99.0) as f64)),
+                ]),
+            ),
+            ("movement", self.movement.to_json_mb()),
+            ("plan_cache", plan_cache_json(self.cache_hits, self.cache_misses)),
+            ("per_kind", per_kind_json(&self.per_kind)),
+            (
+                "per_shard",
+                Json::arr(
+                    self.per_shard
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("shard", Json::num(s.shard as f64)),
+                                ("requests", Json::num(s.requests as f64)),
+                                ("signals", Json::num(s.signals as f64)),
+                                ("batches", Json::num(s.batches as f64)),
+                                ("busy_us", Json::num(s.busy_ns as f64 / 1e3)),
+                                ("utilization", Json::num(s.utilization)),
+                                ("gpu_mb", Json::num(s.movement.gpu_bytes / 1e6)),
+                                ("pim_cmd_mb", Json::num(s.movement.pim_cmd_bytes / 1e6)),
+                                ("cache_hits", Json::num(s.cache_hits as f64)),
+                                ("cache_misses", Json::num(s.cache_misses as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            // ---- live-only sections ----
+            (
+                "admission",
+                Json::obj(vec![
+                    ("submitted", Json::num(self.submitted as f64)),
+                    ("admitted", Json::num(self.admitted as f64)),
+                    ("rejected", self.rejected.to_json()),
+                    ("rate_rps", Json::num(self.admit_rps)),
+                    ("burst", Json::num(self.burst as f64)),
+                    ("max_inflight", Json::num(self.max_inflight as f64)),
+                ]),
+            ),
+            (
+                "deadlines",
+                Json::obj(vec![
+                    ("carried", Json::num(self.deadline_carried as f64)),
+                    ("met", Json::num(self.deadline_met as f64)),
+                    ("missed", Json::num(self.deadline_missed as f64)),
+                    ("dropped", Json::num(self.dropped as f64)),
+                    ("degraded", Json::num(self.degraded as f64)),
+                    ("policy", Json::str(self.deadline_policy)),
+                ]),
+            ),
+            (
+                "hedges",
+                Json::obj(vec![
+                    (
+                        "after_us",
+                        match self.hedge_after_us {
+                            Some(us) => Json::num(us),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("fired", Json::num(self.hedges_fired as f64)),
+                    ("won", Json::num(self.hedges_won as f64)),
+                    ("wasted", Json::num(self.hedges_wasted as f64)),
+                ]),
+            ),
+            ("failed", Json::num(self.failed as f64)),
+            ("unaccounted", Json::num(self.unaccounted() as f64)),
+            ("mode", Json::str(self.mode)),
+            ("paced", Json::Bool(self.paced)),
+        ])
+    }
+}

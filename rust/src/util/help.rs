@@ -50,6 +50,25 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
             [--verify] [--seed S]",
     },
     SubcommandHelp {
+        name: "serve-live",
+        text: "  serve-live [--harness [--smoke]]           online serving tier: a reactor with
+            [--shards K] [--requests N]      admission control, bounded queues,
+            [--clients C] [--rps R]          deadline-aware batching and hedged
+            [--sizes a,b,..] [--mix PROFILE] retries over live engine threads.
+            [--arrival A] [--workload-mix SPEC] With --harness, drive a closed-
+            [--window S] [--wait-us W]       loop load run and write a cluster-
+            [--queue-requests Q]             schema JSON latency report to
+            [--queue-signals G]              --out; without it, speak the
+            [--admit-rps R] [--burst B]      length-prefixed JSON frame
+            [--max-inflight M]               protocol on a 127.0.0.1 socket
+            [--deadline-us D]                until stdin closes. --numeric
+            [--deadline-policy drop|degrade] computes real spectra; --pace
+            [--hedge-us H] [--numeric]       spin-paces modeled service times
+            [--pace] [--seed S] [--out FILE] into wall clock.
+            [--opt L] [--passes SPEC]
+            [--variant NAME]",
+    },
+    SubcommandHelp {
         name: "cluster",
         text: "  cluster   [--shards K] [--router NAME]     simulate K shards serving an
             [--arrival A] [--rps R]          open-loop trace in virtual time;

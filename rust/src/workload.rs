@@ -44,12 +44,13 @@
 //! assert_eq!(run.eval.passes.len(), 2); // rows pass + cols pass, each planned
 //! ```
 
+use std::collections::BTreeMap;
 use std::fmt;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::fft::{is_pow2, log2};
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Bytes of one complex SoA element (two `f32` components).
 const COMPLEX_BYTES: f64 = 8.0;
@@ -73,6 +74,13 @@ pub enum WorkloadKind {
     /// STFT spectrogram: hop-windowed frames of the signal, transformed as
     /// one batched FFT of the window size.
     Stft,
+}
+
+/// The canonical `"per_kind"` report block (kind name → request count).
+/// Shared by the cluster simulator and the live serving tier so per-kind
+/// counts from both report paths compare key for key.
+pub fn per_kind_json(per_kind: &BTreeMap<WorkloadKind, u64>) -> Json {
+    Json::Obj(per_kind.iter().map(|(k, &v)| (k.name().to_string(), Json::num(v as f64))).collect())
 }
 
 /// Every kind, in the canonical (CLI/report) order.

@@ -56,6 +56,7 @@ fn every_dispatched_subcommand_has_a_help_block() {
         "tile",
         "passes",
         "serve",
+        "serve-live",
         "cluster",
         "workload",
         "bench",

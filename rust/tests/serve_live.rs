@@ -1,0 +1,187 @@
+//! Loopback integration tests: the live serving tier against the cluster
+//! simulator, and the socket protocol end to end.
+//!
+//! The contract under test is the one ISSUE 6 states: a live run and a
+//! simulated run of the *same trace* must agree on what was served (exact
+//! per-kind counts), and the live JSON report must be schema-compatible
+//! with the cluster report (every cluster key path present, same shapes)
+//! so downstream tooling reads either interchangeably.
+
+use std::collections::BTreeSet;
+
+use pimacolaba::cluster::{run_cluster, ClusterConfig};
+use pimacolaba::config::SystemConfig;
+use pimacolaba::coordinator::{Arrival, SizeMix, Workload};
+use pimacolaba::pimc::PassConfig;
+use pimacolaba::routines::OptLevel;
+use pimacolaba::serve::protocol::SocketClient;
+use pimacolaba::serve::{LiveRequest, LiveServer, ServeConfig};
+use pimacolaba::util::Json;
+use pimacolaba::workload::{KindMix, WorkloadKind};
+
+fn hw_sys() -> (SystemConfig, PassConfig) {
+    (SystemConfig::baseline().with_hw_opt(), OptLevel::SwHw.into())
+}
+
+/// Collect every object key path in a JSON tree. Array elements descend
+/// through their first item (`[]` marks the hop), which is exactly what a
+/// schema comparison needs for homogeneous arrays like `per_shard`.
+fn key_paths(j: &Json, prefix: &str, out: &mut BTreeSet<String>) {
+    match j {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let p = format!("{prefix}/{k}");
+                out.insert(p.clone());
+                key_paths(v, &p, out);
+            }
+        }
+        Json::Arr(items) => {
+            if let Some(first) = items.first() {
+                key_paths(first, &format!("{prefix}[]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn live_and_simulated_runs_agree_on_served_traffic() {
+    let (sys, passes) = hw_sys();
+    let workload = Workload::new(
+        Arrival::Poisson,
+        500_000.0,
+        SizeMix::uniform(&[64, 256, 1024]).unwrap(),
+    )
+    .unwrap()
+    .with_kinds(KindMix::uniform_all());
+    let trace = workload.generate(1500, 42);
+
+    // Simulated side.
+    let mut ccfg = ClusterConfig::new(sys.clone(), passes);
+    ccfg.shards = 4;
+    let sim = run_cluster(&trace, &ccfg).unwrap();
+
+    // Live side: same trace, admission wide open so nothing is rejected.
+    let mut scfg = ServeConfig::new(sys, passes);
+    scfg.shards = 4;
+    scfg.queue_requests = 1 << 16;
+    scfg.queue_signals = 1 << 24;
+    let server = LiveServer::start(scfg).unwrap();
+    let client = server.client();
+    let rxs: Vec<_> = trace
+        .entries
+        .iter()
+        .enumerate()
+        .map(|(i, e)| client.submit(LiveRequest::new(i as u64, e.kind, e.n, e.batch, e.seed)))
+        .collect();
+    let live = server.shutdown().unwrap();
+    for rx in rxs {
+        assert!(
+            matches!(rx.recv().unwrap(), pimacolaba::serve::LiveResult::Served { .. }),
+            "with admission wide open every request must serve"
+        );
+    }
+
+    // Exact agreement on what was served.
+    assert_eq!(live.requests, sim.requests, "live vs sim request totals");
+    assert_eq!(live.signals, sim.signals, "live vs sim signal totals");
+    assert_eq!(live.per_kind, sim.per_kind, "live vs sim per-kind counts");
+    assert_eq!(live.unaccounted(), 0);
+    assert!(live.per_kind.len() >= 4, "uniform mix should exercise several kinds");
+
+    // Live percentiles are finite wall-clock numbers.
+    for p in [50.0, 95.0, 99.0, 99.9] {
+        let v = live.latency_p_us(p);
+        assert!(v.is_finite() && v > 0.0, "p{p} latency {v} must be finite and positive");
+    }
+
+    // Schema compatibility: every cluster key path appears in the live
+    // report (the live report is a superset).
+    let mut sim_paths = BTreeSet::new();
+    key_paths(&sim.to_json(), "", &mut sim_paths);
+    let mut live_paths = BTreeSet::new();
+    key_paths(&live.to_json(), "", &mut live_paths);
+    let missing: Vec<_> = sim_paths.difference(&live_paths).collect();
+    assert!(
+        missing.is_empty(),
+        "live report is missing cluster schema key paths: {missing:?}"
+    );
+    // And the live-only sections really are additions.
+    for extra in ["/admission", "/deadlines", "/hedges", "/unaccounted"] {
+        assert!(live_paths.contains(extra), "live report lost its {extra} section");
+    }
+}
+
+#[test]
+fn socket_protocol_serves_and_rejects_end_to_end() {
+    let (sys, passes) = hw_sys();
+    let mut cfg = ServeConfig::new(sys, passes);
+    cfg.shards = 2;
+    cfg.window_signals = 4;
+    cfg.max_wait_us = 100.0;
+    let mut server = LiveServer::start(cfg).unwrap();
+    let addr = server.listen().unwrap();
+
+    let mut a = SocketClient::connect(addr).unwrap();
+    let mut b = SocketClient::connect(addr).unwrap();
+
+    // Valid request round-trips with served status and a real latency.
+    let ok = a.call(&LiveRequest::new(1, WorkloadKind::Batch1d, 256, 2, 99)).unwrap();
+    assert_eq!(ok.field("status").unwrap().as_str().unwrap(), "served");
+    assert_eq!(ok.field("id").unwrap().as_usize().unwrap(), 1);
+    assert!(ok.field("latency_us").unwrap().as_f64().unwrap() > 0.0);
+
+    // A second connection works concurrently, and an invalid shape is a
+    // *rejection* (accounted), not a protocol error.
+    let bad = b.call(&LiveRequest::new(2, WorkloadKind::Batch1d, 48, 1, 0)).unwrap();
+    assert_eq!(bad.field("status").unwrap().as_str().unwrap(), "rejected");
+    assert_eq!(bad.field("reason").unwrap().as_str().unwrap(), "invalid");
+
+    // Deadline round-trips over the wire into the deadline accounting.
+    let dl = a
+        .call(&LiveRequest::new(3, WorkloadKind::Real, 512, 1, 5).with_deadline(10_000_000))
+        .unwrap();
+    assert_eq!(dl.field("status").unwrap().as_str().unwrap(), "served");
+    assert!(dl.field("deadline_met").unwrap() == &Json::Bool(true));
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.rejected.invalid, 1);
+    assert_eq!(report.deadline_carried, 1);
+    assert_eq!(report.deadline_met, 1);
+    assert_eq!(report.unaccounted(), 0);
+}
+
+#[test]
+fn admission_rate_limit_rejects_are_accounted_not_lost() {
+    let (sys, passes) = hw_sys();
+    let mut cfg = ServeConfig::new(sys, passes);
+    cfg.shards = 2;
+    cfg.admit_rps = 1.0; // one request per second
+    cfg.burst = 2;
+    let server = LiveServer::start(cfg).unwrap();
+    let client = server.client();
+    let rxs: Vec<_> = (0..10)
+        .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 64, 1, i)))
+        .collect();
+    let report = server.shutdown().unwrap();
+    let mut served = 0u64;
+    let mut rate_limited = 0u64;
+    for rx in rxs {
+        match rx.recv().unwrap() {
+            pimacolaba::serve::LiveResult::Served { .. } => served += 1,
+            pimacolaba::serve::LiveResult::Rejected { reason, retry_after_ns } => {
+                assert_eq!(reason, pimacolaba::serve::RejectReason::RateLimited);
+                assert!(retry_after_ns > 0, "rate rejects must hint a retry time");
+                rate_limited += 1;
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    // The burst admits exactly 2; the other 8 are rate-limited.
+    assert_eq!(served, 2);
+    assert_eq!(rate_limited, 8);
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.rejected.rate_limited, 8);
+    assert_eq!(report.unaccounted(), 0);
+}
