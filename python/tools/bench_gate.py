@@ -61,27 +61,53 @@ def index_rows(doc: dict, section: str, key_fields: tuple, metric: str) -> dict:
 
 def compare(
     name: str, base: dict, cand: dict, max_drop_pct: float
-) -> tuple[list[str], int]:
-    """Return (regression messages, rows compared)."""
+) -> tuple[list[str], list[tuple]]:
+    """Return (regression messages, delta-table rows)."""
     regressions = []
-    compared = 0
+    rows = []
     for key, base_v in sorted(base.items()):
         cand_v = cand.get(key)
         if cand_v is None:
             continue  # sweep shape changed; only common rows gate
-        compared += 1
         drop_pct = (base_v - cand_v) / base_v * 100.0
         marker = "REGRESSION" if drop_pct > max_drop_pct else "ok"
-        print(
-            f"  {name} {key}: baseline {base_v:.1f} -> candidate {cand_v:.1f} "
-            f"({-drop_pct:+.1f}%) {marker}"
-        )
+        rows.append((name, key, base_v, cand_v, -drop_pct, marker))
         if drop_pct > max_drop_pct:
             regressions.append(
                 f"{name} {key}: {base_v:.1f} -> {cand_v:.1f} "
                 f"(-{drop_pct:.1f}% > allowed {max_drop_pct:.0f}%)"
             )
-    return regressions, compared
+    return regressions, rows
+
+
+def print_delta_table(rows: list[tuple]) -> None:
+    """Aligned per-row delta table: every compared row, worst drop first."""
+    cells = [
+        (
+            name,
+            " ".join(str(k) for k in key),
+            f"{base_v:.1f}",
+            f"{cand_v:.1f}",
+            f"{delta:+.1f}%",
+            marker,
+        )
+        for name, key, base_v, cand_v, delta, marker in sorted(
+            rows, key=lambda r: r[4]
+        )
+    ]
+    header = ("section", "row", "baseline", "candidate", "delta", "")
+    widths = [
+        max(len(header[i]), *(len(c[i]) for c in cells)) for i in range(len(header))
+    ]
+    for line in (header, *cells):
+        print(
+            "  "
+            + "  ".join(
+                # numbers right-aligned, text left-aligned
+                line[i].rjust(widths[i]) if 2 <= i <= 4 else line[i].ljust(widths[i])
+                for i in range(len(widths))
+            ).rstrip()
+        )
 
 
 def main() -> int:
@@ -119,11 +145,14 @@ def main() -> int:
         return 0
 
     regressions: list[str] = []
-    compared = 0
+    rows: list[tuple] = []
     for name, b, c in (("fft", fft_base, fft_cand), ("cluster", cl_base, cl_cand)):
-        r, n = compare(name, b, c, args.max_drop_pct)
+        r, section_rows = compare(name, b, c, args.max_drop_pct)
         regressions.extend(r)
-        compared += n
+        rows.extend(section_rows)
+    if rows:
+        print_delta_table(rows)
+    compared = len(rows)
 
     if compared == 0:
         print(

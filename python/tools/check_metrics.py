@@ -1,0 +1,230 @@
+#!/usr/bin/env python3
+"""Scrape and validate a live serve-live metrics snapshot over the socket.
+
+Speaks the serving tier's wire protocol (4-byte little-endian length +
+UTF-8 JSON frames, see rust/src/serve/protocol.rs), sends a
+``{"type": "stats"}`` control frame, and validates the reply:
+
+  * ``digest`` is 16 hex chars and matches ``metrics.digest``;
+  * ``prometheus`` is well-formed text exposition 0.0.4 (every line is a
+    ``# TYPE`` comment or a ``series value`` sample);
+  * ``metrics.counters`` carries the serve counter families and respects
+    conservation (served + rejected + dropped + failed <= submitted);
+  * with ``--dump``, a ``{"type": "dump"}`` frame also answers and its
+    flight-recorder shape is sane.
+
+Intended for CI (scraping a ``serve-live --harness --addr-out`` run
+mid-flight) and as the reference out-of-process client for the protocol.
+
+Usage:
+  python3 python/tools/check_metrics.py --addr 127.0.0.1:PORT \
+      [--addr-file FILE] [--out SNAPSHOT.json] [--retries 50] [--dump]
+
+Exit codes: 0 ok, 1 validation failure, 2 cannot connect / bad input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import socket
+import struct
+import sys
+import time
+
+MAX_FRAME = 1 << 24
+NAME_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*")
+
+
+def send_frame(sock: socket.socket, msg: dict) -> None:
+    body = json.dumps(msg).encode("utf-8")
+    if len(body) > MAX_FRAME:
+        raise ValueError(f"frame of {len(body)} bytes exceeds the limit")
+    sock.sendall(struct.pack("<I", len(body)) + body)
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError(f"connection closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock: socket.socket) -> dict:
+    (length,) = struct.unpack("<I", recv_exact(sock, 4))
+    if length > MAX_FRAME:
+        raise ValueError(f"frame length {length} exceeds the limit")
+    return json.loads(recv_exact(sock, length).decode("utf-8"))
+
+
+def check_prometheus(text: str) -> list[str]:
+    """Return a list of line-format violations (empty = valid)."""
+    errors = []
+    if not text.strip():
+        return ["empty exposition"]
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line[len("# TYPE ") :].split()
+            if len(parts) != 2 or parts[1] not in ("counter", "gauge", "summary"):
+                errors.append(f"bad TYPE line: {line!r}")
+            elif not NAME_RE.fullmatch(parts[0]):
+                errors.append(f"bad metric name: {line!r}")
+            continue
+        if line.startswith("#"):
+            errors.append(f"unexpected comment: {line!r}")
+            continue
+        series, _, value = line.rpartition(" ")
+        if not series:
+            errors.append(f"sample line without a value: {line!r}")
+            continue
+        name = series.split("{", 1)[0]
+        if not NAME_RE.fullmatch(name):
+            errors.append(f"bad series name: {line!r}")
+        if "{" in series and not series.endswith("}"):
+            errors.append(f"unterminated label set: {line!r}")
+        if value != "NaN":
+            try:
+                float(value)
+            except ValueError:
+                errors.append(f"unparseable value: {line!r}")
+    return errors
+
+
+def validate_stats(reply: dict) -> list[str]:
+    errors = []
+    if reply.get("type") != "stats":
+        return [f"expected a stats reply, got {reply.get('type')!r}: {reply}"]
+    digest = reply.get("digest", "")
+    if not re.fullmatch(r"[0-9a-f]{16}", digest):
+        errors.append(f"digest is not 16 hex chars: {digest!r}")
+    metrics = reply.get("metrics", {})
+    if metrics.get("digest") != digest:
+        errors.append("metrics.digest disagrees with the frame digest")
+    errors.extend(check_prometheus(reply.get("prometheus", "")))
+    counters = metrics.get("counters", {})
+    submitted = counters.get("serve_submitted_total", 0)
+    if submitted <= 0:
+        errors.append("no submissions observed (serve_submitted_total == 0)")
+    served = counters.get("serve_served_total", 0)
+    terminal = served + sum(
+        v for k, v in counters.items()
+        if k.startswith(("serve_rejected_total", "serve_dropped", "serve_failed"))
+    )
+    if terminal > submitted:
+        errors.append(
+            f"conservation violated: {terminal} terminal outcomes > {submitted} submitted"
+        )
+    prom = reply.get("prometheus", "")
+    for family in ("serve_submitted_total", "serve_latency_ns"):
+        if family not in prom:
+            errors.append(f"exposition is missing the {family} family")
+    return errors
+
+
+def validate_dump(reply: dict) -> list[str]:
+    if reply.get("type") != "dump":
+        return [f"expected a dump reply, got {reply.get('type')!r}: {reply}"]
+    flight = reply.get("flight", {})
+    errors = []
+    for key in ("capacity", "retained", "offered", "evicted", "exemplars"):
+        if key not in flight:
+            errors.append(f"flight dump is missing {key!r}")
+    exemplars = flight.get("exemplars", [])
+    if isinstance(exemplars, list) and len(exemplars) != flight.get("retained"):
+        errors.append("flight.retained disagrees with len(flight.exemplars)")
+    return errors
+
+
+def connect(addr: str, retries: int) -> socket.socket:
+    host, _, port = addr.rpartition(":")
+    last: Exception | None = None
+    for _ in range(max(1, retries)):
+        try:
+            return socket.create_connection((host, int(port)), timeout=10.0)
+        except OSError as e:
+            last = e
+            time.sleep(0.1)
+    raise ConnectionError(f"cannot connect to {addr}: {last}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--addr", help="server address, host:port")
+    ap.add_argument(
+        "--addr-file",
+        help="file holding the address (written by serve-live --addr-out); "
+        "polled until it appears",
+    )
+    ap.add_argument("--out", help="write the stats frame's JSON metrics here")
+    ap.add_argument("--retries", type=int, default=50, help="connect retries, 100 ms apart")
+    ap.add_argument("--dump", action="store_true", help="also fetch + validate a dump frame")
+    args = ap.parse_args()
+
+    addr = args.addr
+    if not addr and args.addr_file:
+        for _ in range(max(1, args.retries)):
+            try:
+                with open(args.addr_file, encoding="utf-8") as f:
+                    addr = f.read().strip()
+                if addr:
+                    break
+            except OSError:
+                pass
+            time.sleep(0.1)
+    if not addr:
+        print("check-metrics: need --addr or a readable --addr-file", file=sys.stderr)
+        return 2
+
+    try:
+        sock = connect(addr, args.retries)
+    except (ConnectionError, ValueError) as e:
+        print(f"check-metrics: {e}", file=sys.stderr)
+        return 2
+
+    with sock:
+        # The scraper may connect before the load arrives; poll the stats
+        # frame until the tier has seen traffic (or retries run out).
+        for attempt in range(max(1, args.retries)):
+            send_frame(sock, {"type": "stats"})
+            stats = recv_frame(sock)
+            counters = stats.get("metrics", {}).get("counters", {})
+            if counters.get("serve_submitted_total", 0) > 0:
+                break
+            if attempt + 1 < args.retries:
+                time.sleep(0.1)
+        errors = validate_stats(stats)
+        if args.dump:
+            send_frame(sock, {"type": "dump"})
+            errors.extend(validate_dump(recv_frame(sock)))
+
+    if errors:
+        print(f"check-metrics: FAIL — {len(errors)} problem(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+
+    counters = stats["metrics"]["counters"]
+    print(
+        "check-metrics: OK — digest {} | submitted {} served {} | {} prometheus lines".format(
+            stats["digest"],
+            counters.get("serve_submitted_total", 0),
+            counters.get("serve_served_total", 0),
+            len(stats["prometheus"].splitlines()),
+        )
+    )
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            json.dump(stats["metrics"], f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"check-metrics: wrote metrics snapshot to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

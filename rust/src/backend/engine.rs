@@ -78,9 +78,63 @@ pub struct WorkloadEval {
     pub movement_plan: DataMovement,
 }
 
+/// Flattened per-pass attribution for observability spans: which substrate
+/// ran the pass, how long it was modeled to take relative to the workload,
+/// and the bytes it moved. Derived from a [`WorkloadEval`] by
+/// [`WorkloadEval::pass_attribution`]; carried through batch outcomes so
+/// the serve reactor and cluster sim can subdivide an `execute` span into
+/// `pass:*` children without holding the whole eval.
+#[derive(Debug, Clone)]
+pub struct PassAttribution {
+    pub label: &'static str,
+    /// `"gpu-model"` for GPU-only passes, `"gpu+pim-tile"` for
+    /// collaborative ones (host shuffles are folded into the pass).
+    pub substrate: &'static str,
+    /// 1D FFT size of the pass.
+    pub fft_n: usize,
+    /// FFT count across the batch.
+    pub ffts: usize,
+    /// This pass's share of the workload's modeled time (including its
+    /// shuffle traffic), in [0, 1]; shares sum to 1 across passes.
+    pub frac: f64,
+    /// Signal bytes read+written by GPU kernels for this pass (plan side).
+    pub gpu_bytes: f64,
+    /// PIM command/constant traffic for this pass, bytes.
+    pub pim_cmd_bytes: f64,
+    /// PIM row-FFT tile size `m2` (0 when the pass is GPU-only).
+    pub pim_tile: usize,
+}
+
 impl WorkloadEval {
     pub fn speedup(&self) -> f64 {
         self.gpu_only_ns / self.plan_ns
+    }
+
+    /// Per-pass time/byte attribution, shares normalized over the summed
+    /// modeled pass+shuffle time (so they always sum to 1 even though
+    /// `plan_ns` may fold shuffle overlap differently).
+    pub fn pass_attribution(&self) -> Vec<PassAttribution> {
+        let total: f64 =
+            self.passes.iter().map(|p| p.eval.plan_ns + p.shuffle_ns).sum::<f64>().max(1e-9);
+        self.passes
+            .iter()
+            .map(|p| {
+                let (substrate, pim_tile) = match p.plan.kind {
+                    PlanKind::GpuOnly => ("gpu-model", 0),
+                    PlanKind::Collaborative { m2, .. } => ("gpu+pim-tile", m2),
+                };
+                PassAttribution {
+                    label: p.label,
+                    substrate,
+                    fft_n: p.fft_n,
+                    ffts: p.ffts,
+                    frac: (p.eval.plan_ns + p.shuffle_ns) / total,
+                    gpu_bytes: p.eval.movement_plan.gpu_bytes + p.shuffle_bytes,
+                    pim_cmd_bytes: p.eval.movement_plan.pim_cmd_bytes,
+                    pim_tile,
+                }
+            })
+            .collect()
     }
 
     pub fn movement_savings(&self) -> f64 {
@@ -735,6 +789,37 @@ mod tests {
         assert_eq!(e.pim_backend_name(), "pim-sim");
         let hw = FftEngine::builder().system(&SystemConfig::baseline().with_hw_opt()).build();
         assert_eq!(hw.passes(), PassConfig::from(OptLevel::SwHw));
+    }
+
+    #[test]
+    fn pass_attribution_shares_sum_to_one() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut e = FftEngine::builder().system(&sys).build();
+        for kind in crate::workload::ALL_KINDS {
+            let mult = kind.signal_multiple();
+            let eval = e.plan_workload(kind, 1 << 13, 2 * mult).unwrap();
+            let attr = eval.pass_attribution();
+            assert_eq!(attr.len(), eval.passes.len(), "{kind}");
+            let total: f64 = attr.iter().map(|a| a.frac).sum();
+            assert!((total - 1.0).abs() < 1e-9, "{kind}: shares sum to {total}");
+            for a in &attr {
+                assert!(a.frac >= 0.0 && a.frac <= 1.0 + 1e-12, "{kind}/{}", a.label);
+                assert!(a.gpu_bytes >= 0.0 && a.pim_cmd_bytes >= 0.0);
+                match a.substrate {
+                    "gpu-model" => assert_eq!(a.pim_tile, 0, "{kind}/{}", a.label),
+                    "gpu+pim-tile" => assert!(a.pim_tile > 0, "{kind}/{}", a.label),
+                    other => panic!("unknown substrate {other}"),
+                }
+            }
+            // At 2^13 on the hw-opt system the 1D kind collaborates (2D/3D
+            // factor into smaller passes that may stay GPU-only).
+            if kind == WorkloadKind::Batch1d {
+                assert!(
+                    attr.iter().any(|a| a.substrate == "gpu+pim-tile"),
+                    "{kind}: expected a collaborative pass"
+                );
+            }
+        }
     }
 
     #[test]

@@ -32,7 +32,8 @@ mod pjrt;
 pub use component::PlanComponent;
 pub use cost::{CostEstimate, GpuCostModel};
 pub use engine::{
-    EngineRun, FftEngine, FftEngineBuilder, WarmPlans, WorkloadEval, WorkloadPassEval, WorkloadRun,
+    EngineRun, FftEngine, FftEngineBuilder, PassAttribution, WarmPlans, WorkloadEval,
+    WorkloadPassEval, WorkloadRun,
 };
 pub use host::HostFftBackend;
 pub use pim_sim::PimSimBackend;

@@ -70,4 +70,6 @@ pub use router::{
     LeastLoadedRouter, RoundRobinRouter, RouterKind, ShardRouter, SizeAffinityRouter,
 };
 pub use shard::{Shard, ShardStats, SimRequest};
-pub use sim::{run_cluster, warm_plans, ClusterConfig, ClusterReport, ShardSummary};
+pub use sim::{
+    run_cluster, run_cluster_traced, warm_plans, ClusterConfig, ClusterReport, ShardSummary,
+};

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::backend::FftEngine;
+use crate::backend::{FftEngine, PassAttribution};
 use crate::coordinator::{Batchable, Batcher};
 use crate::metrics::{DataMovement, LogHistogram};
 use crate::workload::WorkloadKind;
@@ -79,6 +79,15 @@ pub struct Shard {
     pub(crate) deadline_scheduled: bool,
     in_flight: Vec<SimRequest>,
     in_flight_signals: usize,
+    /// Virtual dispatch time of the in-flight batch (set by the sim loop).
+    pub(crate) in_flight_start_ns: u64,
+    /// Modeled service time of the in-flight batch, ns.
+    pub(crate) in_flight_service_ns: u64,
+    /// Occupancy (percent of the padded shape used) of the in-flight batch.
+    pub(crate) in_flight_occupancy: u64,
+    /// Per-pass substrate/byte attribution of the in-flight batch's plan —
+    /// what the simulator's span timelines subdivide execute spans with.
+    pub(crate) in_flight_attr: Vec<PassAttribution>,
     pub stats: ShardStats,
 }
 
@@ -91,6 +100,10 @@ impl Shard {
             deadline_scheduled: false,
             in_flight: Vec::new(),
             in_flight_signals: 0,
+            in_flight_start_ns: 0,
+            in_flight_service_ns: 0,
+            in_flight_occupancy: 0,
+            in_flight_attr: Vec::new(),
             stats: ShardStats::default(),
         }
     }
@@ -144,6 +157,9 @@ impl Shard {
         self.stats.movement.add_assign(&eval.movement_plan);
         self.stats.occupancy_pct.record((total * 100 / padded) as u64);
         self.in_flight_signals = total;
+        self.in_flight_service_ns = service_ns;
+        self.in_flight_occupancy = (total * 100 / padded) as u64;
+        self.in_flight_attr = eval.pass_attribution();
         self.in_flight = batch.requests;
         self.busy = true;
         Ok(Some(service_ns))

@@ -32,10 +32,11 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
-use crate::backend::{FftEngine, WarmPlans};
+use crate::backend::{FftEngine, PassAttribution, WarmPlans};
 use crate::config::SystemConfig;
 use crate::coordinator::Trace;
 use crate::metrics::{depth_json, latency_us_json, plan_cache_json, DataMovement, LogHistogram};
+use crate::obs::{reason, Exemplar, Obs, SpanRecord, VirtualClock};
 use crate::pimc::PassConfig;
 use crate::routines::OptLevel;
 use crate::runtime::Parallelism;
@@ -45,6 +46,13 @@ use crate::workload::{per_kind_json, WorkloadKind};
 use super::event::{Event, EventQueue};
 use super::router::RouterKind;
 use super::shard::{Shard, SimRequest};
+
+/// Fixed observability policy: every 64th trace-entry id gets a span
+/// timeline; the flight recorder retains the last 256. Constants (not
+/// knobs) so the registry/exemplar state — and therefore the report —
+/// stays bit-identical per seed whether or not tracing is on.
+const CLUSTER_TRACE_SAMPLE: u64 = 64;
+const CLUSTER_RECORDER_CAP: usize = 256;
 
 /// Cluster shape and batching policy.
 #[derive(Debug, Clone)]
@@ -69,6 +77,11 @@ pub struct ClusterConfig {
     /// probes) compute it once with [`warm_plans`] and set it here; `None`
     /// with `threads > 1` computes it per run.
     pub warm: Option<Arc<WarmPlans>>,
+    /// Collect Chrome-traceable span events for sampled requests (the
+    /// `cluster --trace-out` path). Gates ONLY the trace buffer: metrics
+    /// and exemplars are always maintained on the virtual clock, so the
+    /// report is bit-identical with this on or off.
+    pub trace: bool,
 }
 
 impl ClusterConfig {
@@ -82,6 +95,7 @@ impl ClusterConfig {
             passes: passes.into(),
             threads: Parallelism::Sequential,
             warm: None,
+            trace: false,
         }
     }
 
@@ -133,6 +147,11 @@ pub struct ClusterReport {
     /// Requests served per workload kind (mixed-workload traffic).
     pub per_kind: BTreeMap<WorkloadKind, u64>,
     pub per_shard: Vec<ShardSummary>,
+    /// 16-hex FNV digest of the run's metrics-registry exposition —
+    /// deterministic per seed, pinned to prove tracing doesn't perturb it.
+    pub obs_digest: String,
+    /// Exemplar timelines retained in the flight recorder.
+    pub obs_exemplars: u64,
 }
 
 impl ClusterReport {
@@ -234,6 +253,13 @@ impl ClusterReport {
                         .collect(),
                 ),
             ),
+            (
+                "obs",
+                Json::obj(vec![
+                    ("metrics_digest", Json::str(self.obs_digest.clone())),
+                    ("exemplars", Json::num(self.obs_exemplars as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -301,6 +327,14 @@ pub fn warm_plans(trace: &Trace, cfg: &ClusterConfig) -> Result<WarmPlans> {
 /// Run the cluster simulation over `trace`. Deterministic: same trace +
 /// config ⇒ bit-identical report.
 pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> {
+    run_cluster_traced(trace, cfg).map(|(report, _)| report)
+}
+
+/// [`run_cluster`] plus the observability pipeline it drove: the metrics
+/// registry, the flight recorder's exemplars, and — when `cfg.trace` is on
+/// — the Chrome-traceable span buffer (virtual-time timestamps), which the
+/// `cluster --trace-out` CLI writes out via [`crate::obs::chrome_trace`].
+pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(ClusterReport, Obs)> {
     ensure!(cfg.shards > 0, "cluster needs at least one shard");
     ensure!(cfg.window_signals >= 1, "batching window must be at least 1 signal");
     ensure!(
@@ -344,8 +378,23 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
     let mut evq = EventQueue::new();
     evq.push(arrivals[0].at_ns, Event::Arrival { idx: 0 });
 
+    // The simulator drives the shared observability pipeline from its own
+    // event queue: the injected VirtualClock reads whatever `now` the last
+    // popped event carried, so every span/exemplar timestamp is virtual
+    // time. Metrics and exemplars are always on (fixed policy, virtual
+    // timestamps only — fully deterministic); `cfg.trace` gates only
+    // whether Chrome-trace events accumulate.
+    let clock = Arc::new(VirtualClock::new());
+    let mut obs = Obs::with_clock(
+        Arc::clone(&clock) as Arc<dyn crate::obs::Clock>,
+        CLUSTER_TRACE_SAMPLE,
+        CLUSTER_RECORDER_CAP,
+        cfg.trace,
+    );
+
     let mut end_ns = 0u64;
     while let Some((now, ev)) = evq.pop() {
+        clock.set(now);
         match ev {
             Event::Arrival { idx } => {
                 if idx + 1 < arrivals.len() {
@@ -365,6 +414,7 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
                 });
                 if !shard.busy {
                     if let Some(service) = shard.start_batch(cfg.window_signals)? {
+                        shard.in_flight_start_ns = now;
                         evq.push(now + service, Event::Complete { shard: s });
                     } else if !shard.deadline_scheduled {
                         shard.deadline_scheduled = true;
@@ -377,6 +427,7 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
                 shard.deadline_scheduled = false;
                 if !shard.busy {
                     if let Some(service) = shard.start_batch(1)? {
+                        shard.in_flight_start_ns = now;
                         evq.push(now + service, Event::Complete { shard: s });
                     }
                 }
@@ -386,11 +437,37 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
                 // batch — define the makespan (and thus utilization).
                 end_ns = end_ns.max(now);
                 let shard = &mut shards[s];
+                let start_ns = shard.in_flight_start_ns;
+                let service_ns = shard.in_flight_service_ns;
+                let occupancy = shard.in_flight_occupancy;
+                let attr = std::mem::take(&mut shard.in_flight_attr);
+                obs.registry.inc("cluster_batches_total");
                 for req in shard.finish_batch() {
-                    latency.record(now.saturating_sub(req.arrive_ns));
+                    let latency_ns = now.saturating_sub(req.arrive_ns);
+                    latency.record(latency_ns);
+                    obs.registry.observe("cluster_latency_ns", latency_ns);
+                    obs.registry
+                        .inc_with("cluster_requests_total", &[("kind", req.kind.name())]);
+                    obs.registry.add("cluster_signals_total", req.signals as u64);
+                    if obs.sampled(req.id) {
+                        let spans =
+                            sim_spans(&req, s, now, start_ns, service_ns, occupancy, &attr);
+                        for sp in &spans {
+                            obs.trace.push(sp.clone());
+                        }
+                        obs.recorder.record(Exemplar {
+                            id: req.id,
+                            kind: req.kind.name(),
+                            n: req.n,
+                            latency_ns,
+                            reason: reason::SAMPLED,
+                            spans,
+                        });
+                    }
                 }
                 // Work-conserving: serve whatever accumulated while busy.
                 if let Some(service) = shard.start_batch(1)? {
+                    shard.in_flight_start_ns = now;
                     evq.push(now + service, Event::Complete { shard: s });
                 }
             }
@@ -413,6 +490,8 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
         cache_misses: 0,
         per_kind: BTreeMap::new(),
         per_shard: Vec::with_capacity(cfg.shards),
+        obs_digest: obs.registry.digest(),
+        obs_exemplars: obs.recorder.len() as u64,
     };
     for (i, shard) in shards.iter().enumerate() {
         let st = &shard.stats;
@@ -447,7 +526,89 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
         report.requests,
         arrivals.len()
     );
-    Ok(report)
+    ensure!(
+        obs.registry.counter("cluster_requests_total") == report.requests,
+        "observability drift: registry counted {} requests, report has {}",
+        obs.registry.counter("cluster_requests_total"),
+        report.requests
+    );
+    Ok((report, obs))
+}
+
+/// Span timeline for one sampled simulated request: request → queue →
+/// execute (subdivided per pass) → respond, all in virtual time. Pass
+/// durations are `floor(frac · execute)`, so their sum never exceeds the
+/// execute span.
+fn sim_spans(
+    req: &SimRequest,
+    shard: usize,
+    now: u64,
+    start_ns: u64,
+    service_ns: u64,
+    occupancy_pct: u64,
+    passes: &[PassAttribution],
+) -> Vec<SpanRecord> {
+    let tid = shard as u64;
+    let latency_ns = now.saturating_sub(req.arrive_ns);
+    let mut spans = Vec::with_capacity(4 + passes.len());
+    spans.push(SpanRecord {
+        name: format!("request {}", req.id),
+        cat: "request",
+        ts_ns: req.arrive_ns,
+        dur_ns: latency_ns,
+        tid,
+        args: vec![
+            ("kind", Json::str(req.kind.name())),
+            ("n", Json::num(req.n as f64)),
+            ("signals", Json::num(req.signals as f64)),
+        ],
+    });
+    spans.push(SpanRecord {
+        name: "queue".into(),
+        cat: "phase",
+        ts_ns: req.arrive_ns,
+        dur_ns: start_ns.saturating_sub(req.arrive_ns),
+        tid,
+        args: vec![],
+    });
+    let exec_ns = service_ns.min(now.saturating_sub(start_ns));
+    spans.push(SpanRecord {
+        name: "execute".into(),
+        cat: "phase",
+        ts_ns: start_ns,
+        dur_ns: exec_ns,
+        tid,
+        args: vec![("occupancy_pct", Json::num(occupancy_pct as f64))],
+    });
+    let mut t = start_ns;
+    for p in passes {
+        let dur = (p.frac * exec_ns as f64).floor() as u64;
+        spans.push(SpanRecord {
+            name: format!("pass:{}", p.label),
+            cat: "pass",
+            ts_ns: t,
+            dur_ns: dur,
+            tid,
+            args: vec![
+                ("substrate", Json::str(p.substrate)),
+                ("fft_n", Json::num(p.fft_n as f64)),
+                ("ffts", Json::num(p.ffts as f64)),
+                ("gpu_mb", Json::num(p.gpu_bytes / 1e6)),
+                ("pim_cmd_mb", Json::num(p.pim_cmd_bytes / 1e6)),
+                ("pim_tile", Json::num(p.pim_tile as f64)),
+            ],
+        });
+        t += dur;
+    }
+    spans.push(SpanRecord {
+        name: "respond".into(),
+        cat: "phase",
+        ts_ns: now,
+        dur_ns: 0,
+        tid,
+        args: vec![],
+    });
+    spans
 }
 
 #[cfg(test)]
@@ -520,6 +681,35 @@ mod tests {
         // with different timing but also that stats stayed untouched.
         let warm = warm_plans(&t, &cfg).unwrap();
         assert!(!warm.is_empty());
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_report() {
+        let t = trace(300, 250_000.0, &[64, 8192], 9);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 2;
+        let (plain, obs_off) = run_cluster_traced(&t, &cfg).unwrap();
+        cfg.trace = true;
+        let (traced, obs_on) = run_cluster_traced(&t, &cfg).unwrap();
+        // Bit-identical reports — tracing only fills the span buffer.
+        assert_eq!(plain.to_json().to_string(), traced.to_json().to_string());
+        assert!(obs_off.trace.is_empty());
+        assert!(!obs_on.trace.is_empty());
+        // The fixed 1-in-64 sampling policy retained exemplars either way.
+        assert_eq!(obs_off.recorder.len(), obs_on.recorder.len());
+        assert!(plain.obs_exemplars > 0);
+        assert_eq!(plain.obs_digest.len(), 16);
+        // Registry agrees with the report's own accounting.
+        assert_eq!(obs_on.registry.counter("cluster_requests_total"), plain.requests);
+        assert_eq!(obs_on.registry.counter("cluster_signals_total"), plain.signals);
+        // Virtual-time spans: every sampled request's pass spans fit inside
+        // its execute span.
+        for ex in obs_on.recorder.iter() {
+            let exec = ex.spans.iter().find(|s| s.name == "execute").unwrap();
+            let pass_sum: u64 =
+                ex.spans.iter().filter(|s| s.cat == "pass").map(|s| s.dur_ns).sum();
+            assert!(pass_sum <= exec.dur_ns, "pass sum {pass_sum} > exec {}", exec.dur_ns);
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@ use anyhow::{ensure, Result};
 use crate::backend::FftEngine;
 use crate::config::SystemConfig;
 use crate::fft::{fft_soa, SoaVec};
+use crate::obs::MetricsRegistry;
 use crate::workload::WorkloadKind;
 
 use super::{Batch, FftResponse, RequestMetrics};
@@ -28,6 +29,9 @@ pub struct Scheduler {
     /// Compare every response against the host reference FFT and record the
     /// max error in the metrics (costs a host FFT per signal).
     pub verify: bool,
+    /// Per-scheduler metrics: batches/requests/signals executed and host
+    /// wall time, mergeable into a process-wide registry by the caller.
+    metrics: MetricsRegistry,
 }
 
 impl Scheduler {
@@ -41,11 +45,20 @@ impl Scheduler {
 
     /// Scheduler over a pre-configured engine.
     pub fn with_engine(engine: FftEngine) -> Self {
-        Self { engine, verify: false }
+        Self { engine, verify: false, metrics: MetricsRegistry::new() }
     }
 
     pub fn engine(&self) -> &FftEngine {
         &self.engine
+    }
+
+    /// Live view of this scheduler's own metrics (counters
+    /// `coordinator_batches_total`, `coordinator_requests_total{kind}`,
+    /// `coordinator_signals_total` and the `coordinator_batch_wall_ns`
+    /// histogram). Merge into a shared registry with
+    /// [`MetricsRegistry::merge`] when aggregating across schedulers.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 
     pub fn engine_mut(&mut self) -> &mut FftEngine {
@@ -76,7 +89,17 @@ impl Scheduler {
             batch.requests.iter().flat_map(|r| r.signals.iter().cloned()).collect();
         let t0 = Instant::now();
         let run = self.engine.run_workload(kind, n, &signals)?;
-        let host_wall_ns = t0.elapsed().as_nanos() as u64 / batch.requests.len().max(1) as u64;
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        let host_wall_ns = wall_ns / batch.requests.len().max(1) as u64;
+
+        self.metrics.inc("coordinator_batches_total");
+        self.metrics.add_with(
+            "coordinator_requests_total",
+            &[("kind", kind.name())],
+            batch.requests.len() as u64,
+        );
+        self.metrics.add("coordinator_signals_total", total as u64);
+        self.metrics.observe("coordinator_batch_wall_ns", wall_ns);
 
         let plan = run.eval.dominant().plan;
         let spectra = regroup(&batch, mult, run.outputs);
@@ -174,6 +197,21 @@ mod tests {
         assert_eq!(rs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![9, 11, 5]);
         assert_eq!(rs[1].spectra.len(), 3);
         assert_eq!(rs[2].spectra.len(), 2);
+    }
+
+    #[test]
+    fn execute_populates_the_scheduler_registry() {
+        let sys = SystemConfig::baseline();
+        let mut s = Scheduler::new(&sys);
+        s.execute(batch(64, &[(1, 2), (2, 1)])).unwrap();
+        s.execute(batch(128, &[(3, 4)])).unwrap();
+        let m = s.metrics();
+        assert_eq!(m.counter("coordinator_batches_total"), 2);
+        assert_eq!(m.counter("coordinator_requests_total"), 3);
+        assert_eq!(m.counter_with("coordinator_requests_total", &[("kind", "batch1d")]), 3);
+        assert_eq!(m.counter("coordinator_signals_total"), 7);
+        assert_eq!(m.hist("coordinator_batch_wall_ns").map(|h| h.count()), Some(2));
+        assert!(m.to_prometheus().contains("coordinator_batches_total 2"));
     }
 
     #[test]

@@ -98,6 +98,7 @@ pub mod figures;
 pub mod gpu_model;
 pub mod mapping;
 pub mod metrics;
+pub mod obs;
 pub mod pim;
 pub mod pimc;
 pub mod planner;

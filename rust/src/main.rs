@@ -18,19 +18,24 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
-use pimacolaba::cluster::{plan_capacity, run_cluster, ClusterConfig, RouterKind};
+use pimacolaba::cluster::{
+    plan_capacity, run_cluster, run_cluster_traced, ClusterConfig, RouterKind,
+};
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{
     synthetic_trace, Arrival, FftRequest, Scheduler, Server, ServiceReport, SizeMix, Workload,
 };
 use pimacolaba::fft::SoaVec;
 use pimacolaba::figures;
+use pimacolaba::obs::{chrome_trace, fnv1a64};
 use pimacolaba::pim::TimingSink;
 use pimacolaba::pimc::{Pass, PassConfig};
 use pimacolaba::planner::{PlanKind, TileModel};
 use pimacolaba::routines::{emit_strided, RoutineStats};
 use pimacolaba::runtime::{Parallelism, Registry};
-use pimacolaba::serve::{run_harness, DeadlinePolicy, HarnessConfig, LiveServer, ServeConfig};
+use pimacolaba::serve::{
+    run_harness, DeadlinePolicy, HarnessConfig, LiveReport, LiveServer, ServeConfig,
+};
 use pimacolaba::util::benchkit::Bench;
 use pimacolaba::util::cli::Args;
 use pimacolaba::util::{help, Json, Rng};
@@ -386,11 +391,27 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
     };
     cfg.numeric = args.flag("numeric");
     cfg.pace = args.flag("pace");
+    cfg.threads = parse_threads(args)?;
+    cfg.trace_sample = args.get_usize("trace-sample", 0)? as u64;
+    cfg.recorder = args.get_usize("recorder", 256)?;
+    cfg.metrics_out = args.get("metrics-out").map(|s| s.to_string());
+    cfg.metrics_interval_ms = args.get_usize("metrics-interval-ms", 500)? as u64;
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
+    if trace_out.is_some() && cfg.trace_sample == 0 {
+        // Asking for a trace file implies tracing: sample every 64th
+        // request rather than silently writing an empty trace.
+        cfg.trace_sample = 64;
+    }
+    let addr_out = args.get("addr-out").map(|s| s.to_string());
     let out = args.get_or("out", "live_report.json").to_string();
 
     if !args.flag("harness") {
         let mut server = LiveServer::start(cfg)?;
         let addr = server.listen()?;
+        if let Some(path) = &addr_out {
+            std::fs::write(path, format!("{addr}\n"))
+                .with_context(|| format!("writing listener address {path}"))?;
+        }
         println!(
             "serve-live listening on {addr} (4-byte LE length-prefixed JSON frames; \
              close stdin to drain and report)"
@@ -401,9 +422,7 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
         }
         let report = server.shutdown()?;
         println!("{}", report.summary());
-        std::fs::write(&out, report.to_json().to_string())
-            .with_context(|| format!("writing report {out}"))?;
-        println!("wrote JSON report to {out}");
+        write_serve_artifacts(&report, &out, trace_out.as_deref())?;
         return Ok(());
     }
 
@@ -438,7 +457,16 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
         cfg.shards,
         seed
     );
-    let server = LiveServer::start(cfg)?;
+    let mut server = LiveServer::start(cfg)?;
+    if let Some(path) = &addr_out {
+        // Open the socket listener alongside the harness so out-of-process
+        // observers (CI's metrics scraper) can hit the `stats`/`dump`
+        // control frames mid-run.
+        let addr = server.listen()?;
+        std::fs::write(path, format!("{addr}\n"))
+            .with_context(|| format!("writing listener address {path}"))?;
+        println!("serve-live harness listener on {addr} (address in {path})");
+    }
     let hcfg = HarnessConfig::new(requests, clients, workload, seed);
     let (report, stats) = run_harness(server, &hcfg)?;
     println!("{}", report.summary());
@@ -466,9 +494,21 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
             s.movement.pim_cmd_bytes / 1e6,
         );
     }
-    std::fs::write(&out, report.to_json().to_string())
+    write_serve_artifacts(&report, &out, trace_out.as_deref())?;
+    Ok(())
+}
+
+/// Write the serve-live JSON report, plus the Chrome `trace_event` file
+/// when `--trace-out` asked for one (load it in Perfetto / chrome://tracing).
+fn write_serve_artifacts(report: &LiveReport, out: &str, trace_out: Option<&str>) -> Result<()> {
+    std::fs::write(out, report.to_json().to_string())
         .with_context(|| format!("writing report {out}"))?;
     println!("wrote JSON report to {out}");
+    if let Some(path) = trace_out {
+        std::fs::write(path, chrome_trace(&report.trace_events).to_string())
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("wrote Chrome trace ({} events) to {path}", report.trace_events.len());
+    }
     Ok(())
 }
 
@@ -530,7 +570,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!("{}", plan.report.summary());
         plan.to_json()
     } else {
-        let report = run_cluster(&trace, &cfg)?;
+        let trace_out = args.get("trace-out").map(|s| s.to_string());
+        cfg.trace = trace_out.is_some();
+        let (report, mut obs) = run_cluster_traced(&trace, &cfg)?;
+        if let Some(path) = &trace_out {
+            let events = obs.trace.take();
+            std::fs::write(path, chrome_trace(&events).to_string())
+                .with_context(|| format!("writing trace {path}"))?;
+            println!("wrote Chrome trace ({} events) to {path}", events.len());
+        }
         println!("{}", report.summary());
         for s in &report.per_shard {
             println!(
@@ -694,17 +742,6 @@ fn cmd_workload(args: &Args) -> Result<()> {
     std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;
     println!("wrote JSON report to {out}");
     Ok(())
-}
-
-/// FNV-1a 64-bit digest — fingerprints a cluster report so thread counts
-/// can be proven byte-identical at a glance in `BENCH_runtime.json`.
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 /// Measure the parallel execution runtime and write the repo's perf

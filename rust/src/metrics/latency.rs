@@ -112,22 +112,37 @@ impl LogHistogram {
         self.max
     }
 
+    /// Sum of all recorded samples (u128: `count * u64::MAX` cannot wrap).
+    /// Feeds the Prometheus summary `_sum` series.
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
     /// Nearest-rank percentile (`p` in [0, 100]), reported as the upper edge
     /// of the hit bucket, clamped to the observed maximum. Exact for values
     /// below [`SUB_BUCKETS`]; within `1/SUB_BUCKETS` relative error above.
+    /// Returns 0 when empty; use [`try_percentile`](Self::try_percentile)
+    /// to distinguish "no samples" from "all samples were zero".
     pub fn percentile(&self, p: f64) -> u64 {
+        self.try_percentile(p).unwrap_or(0)
+    }
+
+    /// [`percentile`](Self::percentile), except an empty histogram yields
+    /// `None` instead of a sentinel — so exporters can tell an unobserved
+    /// metric apart from one whose every sample was 0.
+    pub fn try_percentile(&self, p: f64) -> Option<u64> {
         if self.count == 0 {
-            return 0;
+            return None;
         }
         let rank = (((p / 100.0) * self.count as f64).ceil().max(1.0) as u64).min(self.count);
         let mut cum = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             cum += c;
             if cum >= rank {
-                return Self::bucket_high(i).min(self.max);
+                return Some(Self::bucket_high(i).min(self.max));
             }
         }
-        self.max
+        Some(self.max)
     }
 
     /// Fold another histogram into this one (per-shard → cluster rollup).
@@ -183,6 +198,54 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.min(), 0);
         assert_eq!(h.max(), 0);
+        assert_eq!(h.sum(), 0);
+    }
+
+    #[test]
+    fn empty_quantiles_are_none_not_bucket_garbage() {
+        let h = LogHistogram::new();
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(h.try_percentile(p), None, "p{p} of an empty histogram");
+        }
+        // The sentinel form still reports 0, never a bucket midpoint.
+        assert_eq!(h.percentile(99.9), 0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_all_hit_that_sample() {
+        let mut h = LogHistogram::new();
+        h.record(777);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            let q = h.try_percentile(p).unwrap();
+            // Upper-edge reporting clamps to the observed max: exactly 777.
+            assert_eq!(q, 777, "p{p}");
+        }
+        assert_eq!(h.sum(), 777);
+        // A zero-valued sample is distinguishable from emptiness only via
+        // the Option form.
+        let mut z = LogHistogram::new();
+        z.record(0);
+        assert_eq!(z.try_percentile(50.0), Some(0));
+        assert_eq!(z.percentile(50.0), 0);
+    }
+
+    #[test]
+    fn merge_of_empty_histograms_stays_empty() {
+        let mut a = LogHistogram::new();
+        let b = LogHistogram::new();
+        a.merge(&b);
+        assert!(a.is_empty());
+        assert_eq!(a.try_percentile(50.0), None);
+        // Empty-into-populated is a no-op on the populated side.
+        let mut p = LogHistogram::new();
+        p.record(42);
+        let snapshot = p.clone();
+        p.merge(&LogHistogram::new());
+        assert_eq!(p, snapshot);
+        // And populated-into-empty equals the populated one.
+        let mut e = LogHistogram::new();
+        e.merge(&snapshot);
+        assert_eq!(e, snapshot);
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Observability: spans, metrics, and the flight recorder.
+//!
+//! The paper's argument is about where time and bytes go — GPU vs
+//! PIM-tile splits, row activations, movement savings — and this layer
+//! makes the serving stack answer that live instead of only in post-run
+//! aggregates. Three pieces, all std-only:
+//!
+//! * [`span`] — per-request phase timelines (admit → queue → execute →
+//!   per-pass → respond) minted from an injected [`Clock`], exported as
+//!   Chrome `trace_event` JSON for Perfetto (`--trace-out`).
+//! * [`registry`] — the [`MetricsRegistry`] of named counters, gauges
+//!   and [`LogHistogram`](crate::metrics::LogHistogram)s with per-kind /
+//!   per-shard labels; exports Prometheus text and JSON, served over the
+//!   socket `stats` frame and the `--metrics-out` rolling file.
+//! * [`recorder`] — the [`FlightRecorder`] ring of exemplar timelines
+//!   (sampled, slow, SLO-breach), dumped via the `dump` frame and on
+//!   shutdown.
+//!
+//! The [`Clock`] trait is the seam that lets the wall-clock serve tier
+//! and the virtual-clock cluster simulator share all of it: the sim
+//! drives a [`VirtualClock`] from its event queue and gets bit-identical
+//! metrics/exemplars per seed, tracing on or off.
+//!
+//! Overhead discipline: with `sample == 0` no spans are built and no
+//! exemplars retained; the registry's counter increments are BTreeMap
+//! bumps on the reactor thread, far off the per-signal hot path.
+
+pub mod clock;
+pub mod recorder;
+pub mod registry;
+pub mod span;
+
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use recorder::{reason, Exemplar, FlightRecorder};
+pub use registry::{fnv1a64, MetricsRegistry};
+pub use span::{chrome_trace, SpanRecord, TraceBuffer};
+
+use std::sync::Arc;
+
+/// Everything a request path needs, bundled: clock + registry + trace
+/// buffer + flight recorder + the sampling policy.
+pub struct Obs {
+    clock: Arc<dyn Clock>,
+    pub registry: MetricsRegistry,
+    pub trace: TraceBuffer,
+    pub recorder: FlightRecorder,
+    sample: u64,
+}
+
+impl Obs {
+    /// Wall-clock pipeline (the serve tier). `sample == 0` turns span
+    /// tracing off entirely; `recorder_cap == 0` disables exemplars.
+    pub fn wall(sample: u64, recorder_cap: usize) -> Self {
+        Self::with_clock(Arc::new(WallClock::new()), sample, recorder_cap, sample > 0)
+    }
+
+    /// Pipeline over an injected clock (the cluster sim passes a shared
+    /// [`VirtualClock`]). `trace_enabled` gates only the Chrome-trace
+    /// buffer — metrics and exemplars are always maintained, which is how
+    /// the sim keeps its reports bit-identical with tracing on or off.
+    pub fn with_clock(
+        clock: Arc<dyn Clock>,
+        sample: u64,
+        recorder_cap: usize,
+        trace_enabled: bool,
+    ) -> Self {
+        Self {
+            clock,
+            registry: MetricsRegistry::new(),
+            trace: TraceBuffer::new(trace_enabled),
+            recorder: FlightRecorder::new(recorder_cap),
+            sample,
+        }
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Every `sample`-th request id gets a full span timeline (0 = none).
+    pub fn sampled(&self, id: u64) -> bool {
+        self.sample != 0 && id % self.sample == 0
+    }
+
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_policy() {
+        let obs = Obs::wall(0, 0);
+        assert!(!obs.sampled(0));
+        assert!(!obs.sampled(64));
+        let obs = Obs::wall(64, 16);
+        assert!(obs.sampled(0));
+        assert!(obs.sampled(128));
+        assert!(!obs.sampled(65));
+        assert!(obs.trace.enabled());
+        assert!(obs.recorder.enabled());
+    }
+
+    #[test]
+    fn virtual_clock_drives_now() {
+        let vc = Arc::new(VirtualClock::new());
+        let obs = Obs::with_clock(vc.clone(), 64, 8, false);
+        vc.set(42_000);
+        assert_eq!(obs.now_ns(), 42_000);
+        assert!(!obs.trace.enabled(), "trace gated independently of sampling");
+        assert!(obs.sampled(64), "sampling still on for exemplars");
+    }
+}

@@ -1,0 +1,179 @@
+//! Flight recorder: a fixed-size ring of exemplar request timelines.
+//!
+//! Aggregate histograms answer *how slow*; the recorder answers *why*.
+//! It keeps the full span timeline for a bounded set of interesting
+//! requests — every `--trace-sample`-th one, anything that breached its
+//! SLO, and anything at or beyond the live p99 — so a tail spike in the
+//! harness report can be explained after the fact. The ring evicts the
+//! oldest exemplar on overflow; memory is bounded by `capacity × spans
+//! per request`, independent of run length.
+//!
+//! Dump paths: the `dump` protocol frame (on demand, mid-run), the final
+//! report (`exemplars` count + digest in the `obs` section), and
+//! `LiveReport::flight` (the full JSON, written next to the report).
+
+use std::collections::VecDeque;
+
+use super::span::SpanRecord;
+use crate::util::Json;
+
+/// Why an exemplar was retained.
+pub mod reason {
+    pub const SAMPLED: &str = "sampled";
+    pub const SLOW: &str = "slow";
+    pub const SLO_BREACH: &str = "slo_breach";
+}
+
+/// One retained request timeline.
+#[derive(Debug, Clone)]
+pub struct Exemplar {
+    pub id: u64,
+    /// Workload kind name (static display string).
+    pub kind: &'static str,
+    pub n: usize,
+    pub latency_ns: u64,
+    /// One of [`reason`]'s constants.
+    pub reason: &'static str,
+    pub spans: Vec<SpanRecord>,
+}
+
+impl Exemplar {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("kind", Json::str(self.kind)),
+            ("n", Json::num(self.n as f64)),
+            ("latency_us", Json::num(self.latency_ns as f64 / 1e3)),
+            ("reason", Json::str(self.reason)),
+            ("spans", Json::arr(self.spans.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+}
+
+/// Bounded exemplar ring. `capacity == 0` disables recording entirely.
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    ring: VecDeque<Exemplar>,
+    cap: usize,
+    /// Exemplars offered over the run (retained + evicted + disabled).
+    offered: u64,
+    /// Exemplars evicted to honour the cap.
+    evicted: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        Self { ring: VecDeque::new(), cap, offered: 0, evicted: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub fn record(&mut self, ex: Exemplar) {
+        self.offered += 1;
+        if self.cap == 0 {
+            return;
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.evicted += 1;
+        }
+        self.ring.push_back(ex);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Exemplar> {
+        self.ring.iter()
+    }
+
+    /// Full dump: `{capacity, retained, offered, evicted, exemplars: [...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("capacity", Json::num(self.cap as f64)),
+            ("retained", Json::num(self.ring.len() as f64)),
+            ("offered", Json::num(self.offered as f64)),
+            ("evicted", Json::num(self.evicted as f64)),
+            ("exemplars", Json::arr(self.ring.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(id: u64, why: &'static str) -> Exemplar {
+        Exemplar {
+            id,
+            kind: "batch1d",
+            n: 64,
+            latency_ns: 1000 * id,
+            reason: why,
+            spans: vec![SpanRecord {
+                name: format!("request {id}"),
+                cat: "request",
+                ts_ns: 0,
+                dur_ns: 1000 * id,
+                tid: 0,
+                args: vec![],
+            }],
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts() {
+        let mut r = FlightRecorder::new(2);
+        for i in 1..=5 {
+            r.record(ex(i, reason::SAMPLED));
+        }
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.offered(), 5);
+        assert_eq!(r.evicted(), 3);
+        let ids: Vec<u64> = r.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![4, 5]);
+    }
+
+    #[test]
+    fn zero_capacity_disables_recording() {
+        let mut r = FlightRecorder::new(0);
+        assert!(!r.enabled());
+        r.record(ex(1, reason::SLO_BREACH));
+        assert!(r.is_empty());
+        assert_eq!(r.offered(), 1);
+        assert_eq!(r.evicted(), 0);
+    }
+
+    #[test]
+    fn dump_json_carries_spans_and_counts() {
+        let mut r = FlightRecorder::new(8);
+        r.record(ex(7, reason::SLOW));
+        let j = r.to_json();
+        assert_eq!(j.field("retained").unwrap().as_usize().unwrap(), 1);
+        let exs = j.field("exemplars").unwrap().as_arr().unwrap();
+        assert_eq!(exs[0].field("id").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(exs[0].field("reason").unwrap().as_str().unwrap(), "slow");
+        let spans = exs[0].field("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans[0].field("cat").unwrap().as_str().unwrap(), "request");
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

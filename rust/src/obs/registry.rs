@@ -1,0 +1,378 @@
+//! Mergeable registry of named counters, gauges and histograms.
+//!
+//! Replaces the ad-hoc counter scalars that used to live on the serve
+//! reactor: every count the serving tier reports now lives here under a
+//! stable metric name (see `docs/OBSERVABILITY.md` for the naming
+//! scheme), with optional `(label, value)` pairs for per-kind/per-shard
+//! breakdowns. Storage is `BTreeMap`-backed so both exports — Prometheus
+//! text exposition and JSON — are byte-deterministic for a given state,
+//! which is what lets the cluster simulator put a registry digest in its
+//! bit-identical reports.
+//!
+//! Counters are exact `u64`s (the conservation law is checked against
+//! them), gauges are `f64` point-in-time values, histograms are
+//! [`LogHistogram`]s exported as Prometheus summaries.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::LogHistogram;
+use crate::util::Json;
+
+/// Label set: small, sorted at construction by the caller's literal order
+/// (kept as given — name + labels form the identity of a series).
+pub type Labels = Vec<(&'static str, String)>;
+
+fn labels_of(pairs: &[(&'static str, &str)]) -> Labels {
+    pairs.iter().map(|&(k, v)| (k, v.to_string())).collect()
+}
+
+/// Render `name{k="v",...}` (or bare `name`), with `extra` appended after
+/// the caller's labels (used for the summary `quantile` label).
+fn series(name: &str, labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return name.to_string();
+    }
+    let mut out = String::with_capacity(name.len() + 16);
+    out.push_str(name);
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels.iter().map(|(k, v)| (*k, v.as_str())).chain(extra) {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(k);
+        out.push_str("=\"");
+        // Label values here are kind/shard/reason names — no quotes or
+        // backslashes — but escape anyway so the exposition stays valid.
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Format an f64 the way the rest of the repo's JSON does (shortest
+/// round-trip via the Json emitter would be overkill here; `{}` on f64 is
+/// deterministic and readable).
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// FNV-1a 64-bit hash, rendered by [`MetricsRegistry::digest`] as 16 hex
+/// chars. Also used by the bench subcommand for report digests.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Named counters / gauges / histograms with deterministic exports.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<(String, Labels), u64>,
+    gauges: BTreeMap<(String, Labels), f64>,
+    hists: BTreeMap<(String, Labels), LogHistogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- counters ----
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, by: u64) {
+        self.add_with(name, &[], by);
+    }
+
+    pub fn inc_with(&mut self, name: &str, labels: &[(&'static str, &str)]) {
+        self.add_with(name, labels, 1);
+    }
+
+    pub fn add_with(&mut self, name: &str, labels: &[(&'static str, &str)], by: u64) {
+        *self.counters.entry((name.to_string(), labels_of(labels))).or_insert(0) += by;
+    }
+
+    /// Saturating decrement — used only to unwind a provisional increment
+    /// on an unreachable fallback path, never to make a counter go
+    /// backwards in normal operation.
+    pub fn sub(&mut self, name: &str, by: u64) {
+        if let Some(c) = self.counters.get_mut(&(name.to_string(), Vec::new())) {
+            *c = c.saturating_sub(by);
+        }
+    }
+
+    /// Overwrite a counter with an absolute value — for mirroring counts
+    /// owned elsewhere (hedger, admission) into snapshots.
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        self.counters.insert((name.to_string(), Vec::new()), v);
+    }
+
+    /// Sum of a counter across every label set carrying `name`.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().filter(|((n, _), _)| n == name).map(|(_, v)| v).sum()
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&'static str, &str)]) -> u64 {
+        self.counters.get(&(name.to_string(), labels_of(labels))).copied().unwrap_or(0)
+    }
+
+    // ---- gauges ----
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.set_gauge_with(name, &[], v);
+    }
+
+    pub fn set_gauge_with(&mut self, name: &str, labels: &[(&'static str, &str)], v: f64) {
+        self.gauges.insert((name.to_string(), labels_of(labels)), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(&(name.to_string(), Vec::new())).copied()
+    }
+
+    // ---- histograms ----
+
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.observe_with(name, &[], v);
+    }
+
+    pub fn observe_with(&mut self, name: &str, labels: &[(&'static str, &str)], v: u64) {
+        self.hists.entry((name.to_string(), labels_of(labels))).or_default().record(v);
+    }
+
+    /// The unlabeled histogram under `name`, if any.
+    pub fn hist(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.get(&(name.to_string(), Vec::new()))
+    }
+
+    /// Clone of the unlabeled histogram under `name` (empty if absent) —
+    /// how the final report lifts histograms out of the registry.
+    pub fn hist_clone(&self, name: &str) -> LogHistogram {
+        self.hist(name).cloned().unwrap_or_default()
+    }
+
+    /// Fold `other` into `self`: counters add, histograms merge, gauges
+    /// take `other`'s value (last writer wins — gauges are point-in-time).
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for ((n, l), v) in &other.counters {
+            *self.counters.entry((n.clone(), l.clone())).or_insert(0) += v;
+        }
+        for ((n, l), v) in &other.gauges {
+            self.gauges.insert((n.clone(), l.clone()), *v);
+        }
+        for ((n, l), h) in &other.hists {
+            self.hists.entry((n.clone(), l.clone())).or_default().merge(h);
+        }
+    }
+
+    // ---- exports ----
+
+    /// Prometheus text exposition (format 0.0.4): counters and gauges as
+    /// typed series, histograms as summaries with `quantile` labels plus
+    /// `_sum`/`_count`. Deterministic: series are emitted in BTreeMap
+    /// order.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_type_line: Option<String> = None;
+        let mut type_line = |out: &mut String, name: &str, kind: &str| {
+            let line = format!("# TYPE {name} {kind}\n");
+            if last_type_line.as_deref() != Some(line.as_str()) {
+                out.push_str(&line);
+                last_type_line = Some(line);
+            }
+        };
+        for ((name, labels), v) in &self.counters {
+            type_line(&mut out, name, "counter");
+            out.push_str(&series(name, labels, None));
+            out.push(' ');
+            out.push_str(&v.to_string());
+            out.push('\n');
+        }
+        for ((name, labels), v) in &self.gauges {
+            type_line(&mut out, name, "gauge");
+            out.push_str(&series(name, labels, None));
+            out.push(' ');
+            out.push_str(&fmt_f64(*v));
+            out.push('\n');
+        }
+        for ((name, labels), h) in &self.hists {
+            type_line(&mut out, name, "summary");
+            for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0), ("0.999", 99.9)] {
+                out.push_str(&series(name, labels, Some(("quantile", q))));
+                out.push(' ');
+                match h.try_percentile(p) {
+                    Some(v) => out.push_str(&v.to_string()),
+                    None => out.push_str("NaN"),
+                }
+                out.push('\n');
+            }
+            out.push_str(&series(&format!("{name}_sum"), labels, None));
+            out.push(' ');
+            out.push_str(&h.sum().to_string());
+            out.push('\n');
+            out.push_str(&series(&format!("{name}_count"), labels, None));
+            out.push(' ');
+            out.push_str(&h.count().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON snapshot: `{digest, counters: {series: n}, gauges: {...},
+    /// histograms: {series: {count, mean, p50, p95, p99, p999, max}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|((n, l), v)| (series(n, l, None), Json::num(*v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|((n, l), v)| (series(n, l, None), Json::num(*v))).collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .map(|((n, l), h)| {
+                (
+                    series(n, l, None),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean", Json::num(h.mean())),
+                        ("p50", Json::num(h.percentile(50.0) as f64)),
+                        ("p95", Json::num(h.percentile(95.0) as f64)),
+                        ("p99", Json::num(h.percentile(99.0) as f64)),
+                        ("p999", Json::num(h.percentile(99.9) as f64)),
+                        ("max", Json::num(h.max() as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("digest", Json::str(self.digest())),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+
+    /// 16-hex-char FNV-1a digest of the Prometheus exposition — a compact
+    /// fingerprint of the whole registry state; the cluster report pins it
+    /// to prove tracing doesn't perturb metrics.
+    pub fn digest(&self) -> String {
+        format!("{:016x}", fnv1a64(self.to_prometheus().as_bytes()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_sum_over_labels() {
+        let mut r = MetricsRegistry::new();
+        r.inc("served_total");
+        r.add_with("served_total", &[("kind", "fft2d")], 3);
+        r.add_with("served_total", &[("kind", "stft")], 2);
+        assert_eq!(r.counter("served_total"), 6);
+        assert_eq!(r.counter_with("served_total", &[("kind", "fft2d")]), 3);
+        assert_eq!(r.counter_with("served_total", &[("kind", "missing")]), 0);
+        r.sub("served_total", 10); // saturates, only the unlabeled series
+        assert_eq!(r.counter_with("served_total", &[]), 0);
+        assert_eq!(r.counter("served_total"), 5);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_typed_and_deterministic() {
+        let mut r = MetricsRegistry::new();
+        r.add("b_total", 2);
+        r.add_with("a_total", &[("shard", "0")], 1);
+        r.set_gauge("depth", 3.5);
+        r.observe("lat_ns", 1000);
+        r.observe("lat_ns", 3000);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE a_total counter\na_total{shard=\"0\"} 1\n"));
+        assert!(text.contains("# TYPE b_total counter\nb_total 2\n"));
+        assert!(text.contains("# TYPE depth gauge\ndepth 3.5\n"));
+        assert!(text.contains("# TYPE lat_ns summary\n"));
+        assert!(text.contains("lat_ns{quantile=\"0.5\"} "));
+        assert!(text.contains("lat_ns_sum 4000\n"));
+        assert!(text.contains("lat_ns_count 2\n"));
+        // Byte-stable: same state, same text, same digest.
+        assert_eq!(text, r.to_prometheus());
+        assert_eq!(r.digest(), r.digest());
+        assert_eq!(r.digest().len(), 16);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_export_as_nan() {
+        let mut r = MetricsRegistry::new();
+        r.hists.insert(("lat".to_string(), Vec::new()), LogHistogram::new());
+        let text = r.to_prometheus();
+        assert!(text.contains("lat{quantile=\"0.5\"} NaN\n"));
+        assert!(text.contains("lat_count 0\n"));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_merges_hists() {
+        let mut a = MetricsRegistry::new();
+        a.add("c", 2);
+        a.observe("h", 10);
+        a.set_gauge("g", 1.0);
+        let mut b = MetricsRegistry::new();
+        b.add("c", 3);
+        b.add_with("c", &[("kind", "real")], 1);
+        b.observe("h", 20);
+        b.set_gauge("g", 9.0);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 6);
+        assert_eq!(a.hist("h").unwrap().count(), 2);
+        assert_eq!(a.gauge("g"), Some(9.0));
+    }
+
+    #[test]
+    fn json_snapshot_carries_digest_and_series() {
+        let mut r = MetricsRegistry::new();
+        r.add_with("served", &[("kind", "batch1d")], 4);
+        r.observe("lat", 100);
+        let j = r.to_json();
+        assert_eq!(j.field("digest").unwrap().as_str().unwrap(), r.digest());
+        let c = j.field("counters").unwrap();
+        assert_eq!(c.field("served{kind=\"batch1d\"}").unwrap().as_usize().unwrap(), 4);
+        let h = j.field("histograms").unwrap().field("lat").unwrap();
+        assert_eq!(h.field("count").unwrap().as_usize().unwrap(), 1);
+        // Round-trips through the parser.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut r = MetricsRegistry::new();
+        r.add_with("c", &[("k", "a\"b\\c")], 1);
+        assert!(r.to_prometheus().contains("c{k=\"a\\\"b\\\\c\"} 1"));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,194 @@
+//! Request-timeline spans and the Chrome `trace_event` exporter.
+//!
+//! A span is a named interval on a track (`tid`): the reactor emits one
+//! `request` span per sampled request plus `queue`/`execute`/`pass:*`
+//! sub-spans attributing where the time went (substrate, bytes moved,
+//! batch occupancy). Spans are plain data — no RAII guards, no thread
+//! locals — so the single-threaded reactor and the deterministic sim can
+//! both mint them from [`Clock`](super::Clock) timestamps and the export
+//! is byte-stable for a given set of records.
+//!
+//! Export target is the Chrome/Perfetto `trace_event` JSON format: each
+//! record becomes a `ph:"X"` (complete) event with microsecond `ts`/`dur`;
+//! load the file at `ui.perfetto.dev` (or `chrome://tracing`) to browse
+//! the run.
+
+use std::collections::VecDeque;
+
+use crate::util::Json;
+
+/// One completed interval. Durations of zero render as instant-like
+/// slivers in Perfetto, which is how `admit`/`respond` markers appear.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Display name, e.g. `request 42` or `pass:rows(fft2d)`.
+    pub name: String,
+    /// Category: `request`, `phase`, `pass`, `hedge` — filterable in the
+    /// Perfetto UI.
+    pub cat: &'static str,
+    /// Start, ns since the clock epoch.
+    pub ts_ns: u64,
+    /// Duration in ns (0 for instant markers).
+    pub dur_ns: u64,
+    /// Track id — the shard that did the work (requests land on the shard
+    /// that served them).
+    pub tid: u64,
+    /// Free-form attribution (`substrate`, `gpu_bytes`, `cache_hit`, ...).
+    pub args: Vec<(&'static str, Json)>,
+}
+
+impl SpanRecord {
+    /// The Chrome `trace_event` object for this span.
+    pub fn to_chrome(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("cat", Json::str(self.cat)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(self.ts_ns as f64 / 1e3)),
+            ("dur", Json::num(self.dur_ns as f64 / 1e3)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(self.tid as f64)),
+        ];
+        if !self.args.is_empty() {
+            pairs.push(("args", Json::obj(self.args.clone())));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Plain JSON form used by flight-recorder dumps (ns resolution, no
+    /// Chrome envelope).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("cat", Json::str(self.cat)),
+            ("ts_ns", Json::num(self.ts_ns as f64)),
+            ("dur_ns", Json::num(self.dur_ns as f64)),
+            ("tid", Json::num(self.tid as f64)),
+        ];
+        if !self.args.is_empty() {
+            pairs.push(("args", Json::obj(self.args.clone())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Wrap span records as a complete Chrome trace document.
+pub fn chrome_trace(events: &[SpanRecord]) -> Json {
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events.iter().map(|s| s.to_chrome()).collect())),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Bounded span sink. When disabled every push is a no-op, so the hot
+/// path pays one branch; when the cap is hit the oldest events are
+/// dropped (and counted) rather than growing without bound.
+#[derive(Debug)]
+pub struct TraceBuffer {
+    events: VecDeque<SpanRecord>,
+    cap: usize,
+    enabled: bool,
+    dropped: u64,
+}
+
+/// Default trace-buffer capacity (span records, not bytes).
+pub const TRACE_BUFFER_CAP: usize = 1 << 20;
+
+impl TraceBuffer {
+    pub fn new(enabled: bool) -> Self {
+        Self { events: VecDeque::new(), cap: TRACE_BUFFER_CAP, enabled, dropped: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn push(&mut self, span: SpanRecord) {
+        if !self.enabled {
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events dropped to honour the cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain every buffered span (oldest first).
+    pub fn take(&mut self) -> Vec<SpanRecord> {
+        self.events.drain(..).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SpanRecord> {
+        self.events.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, ts: u64, dur: u64) -> SpanRecord {
+        SpanRecord {
+            name: name.to_string(),
+            cat: "phase",
+            ts_ns: ts,
+            dur_ns: dur,
+            tid: 3,
+            args: vec![("bytes", Json::num(64.0))],
+        }
+    }
+
+    #[test]
+    fn chrome_export_has_complete_events_in_microseconds() {
+        let doc = chrome_trace(&[span("queue", 2_000, 1_500)]);
+        let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.field("ph").unwrap().as_str().unwrap(), "X");
+        assert!((e.field("ts").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert!((e.field("dur").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
+        assert_eq!(e.field("tid").unwrap().as_usize().unwrap(), 3);
+        assert!(e.field("args").unwrap().get("bytes").is_some());
+        assert_eq!(doc.field("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+        // The document round-trips through our own parser.
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn disabled_buffer_drops_everything_silently() {
+        let mut buf = TraceBuffer::new(false);
+        buf.push(span("a", 0, 1));
+        assert!(buf.is_empty());
+        assert_eq!(buf.dropped(), 0);
+    }
+
+    #[test]
+    fn buffer_caps_and_counts_drops() {
+        let mut buf = TraceBuffer::new(true);
+        buf.cap = 2;
+        for i in 0..5 {
+            buf.push(span("s", i, 1));
+        }
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.dropped(), 3);
+        let taken = buf.take();
+        assert_eq!(taken[0].ts_ns, 3);
+        assert_eq!(taken[1].ts_ns, 4);
+        assert!(buf.is_empty());
+    }
+}

@@ -44,4 +44,4 @@ pub mod pool;
 
 pub use artifact::{ArtifactKind, ArtifactSpec, Registry};
 pub use client::Runtime;
-pub use pool::{Parallelism, ThreadPool, MIN_PAR_POINTS};
+pub use pool::{Parallelism, PoolStats, ThreadPool, MIN_PAR_POINTS};

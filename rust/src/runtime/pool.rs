@@ -38,7 +38,7 @@
 use std::collections::VecDeque;
 use std::fmt;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -178,6 +178,12 @@ struct Shared {
     shutdown: AtomicBool,
     /// Round-robin injection cursor.
     next: AtomicUsize,
+    /// Self-profiling: jobs taken from a peer's deque rather than one's
+    /// own (load-imbalance signal).
+    steals: AtomicU64,
+    /// Self-profiling: idle waits on the condvar (wasted-wakeup /
+    /// starvation signal).
+    parks: AtomicU64,
 }
 
 impl Shared {
@@ -194,11 +200,23 @@ impl Shared {
         }
         for i in 1..k {
             if let Some(job) = self.queues[(me + i) % k].lock().unwrap().pop_back() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
                 return Some(job);
             }
         }
         None
     }
+}
+
+/// Cumulative self-profiling counters for one pool, read via
+/// [`ThreadPool::stats`] and fed into the observability registry as
+/// `runtime_pool_steals_total` / `runtime_pool_parks_total`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Jobs executed after being stolen from another participant's deque.
+    pub steals: u64,
+    /// Times a worker parked on the idle condvar (1 ms timed waits).
+    pub parks: u64,
 }
 
 /// The work-stealing pool. Create one per `--threads N` surface, or share
@@ -227,6 +245,8 @@ impl ThreadPool {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             next: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            parks: AtomicU64::new(0),
         });
         let workers = (0..spawned)
             .map(|i| {
@@ -243,6 +263,14 @@ impl ThreadPool {
     /// Total participants (spawned workers + the calling thread).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Point-in-time snapshot of the steal/park counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            parks: self.shared.parks.load(Ordering::Relaxed),
+        }
     }
 
     /// Parallel indexed map: computes `f(0..len)` across the pool and
@@ -377,6 +405,7 @@ fn worker_loop(shared: Arc<Shared>, me: usize) {
         if shared.shutdown.load(Ordering::Acquire) || shared.has_jobs() {
             continue;
         }
+        shared.parks.fetch_add(1, Ordering::Relaxed);
         let (_guard, _timeout) = shared.cv.wait_timeout(guard, Duration::from_millis(1)).unwrap();
     }
 }
@@ -479,5 +508,28 @@ mod tests {
             let got = pool.map_indexed(17, |i| i + round);
             assert_eq!(got[16], 16 + round);
         }
+    }
+
+    #[test]
+    fn self_profiling_counters_accumulate() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.stats(), PoolStats::default());
+        // Imbalanced chunks: one index is ~1000× the others, so idle
+        // participants must steal (the caller's help_until steals count
+        // too), and sleeping workers park on the 1 ms condvar timeout.
+        for _ in 0..20 {
+            pool.map_indexed(64, |i| {
+                let spins = if i == 0 { 200_000u64 } else { 200 };
+                (0..spins).fold(0u64, |a, x| a.wrapping_add(x.wrapping_mul(31)))
+            });
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        let s = pool.stats();
+        assert!(s.steals > 0, "imbalanced regions must trigger steals: {s:?}");
+        assert!(s.parks > 0, "idle workers must park between regions: {s:?}");
+        // Counters are cumulative and monotone.
+        pool.map_indexed(8, |i| i);
+        let s2 = pool.stats();
+        assert!(s2.steals >= s.steals && s2.parks >= s.parks);
     }
 }

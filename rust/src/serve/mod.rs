@@ -26,7 +26,13 @@
 //!   `hedge_after_us` is re-dispatched to a second local shard; the first
 //!   completion wins, the duplicate is discarded and accounted.
 //! - **Socket protocol** ([`protocol`]): length-prefixed JSON frames over
-//!   localhost TCP, for out-of-process clients.
+//!   localhost TCP, for out-of-process clients. Besides request frames it
+//!   serves `stats` (live metrics snapshot: Prometheus text + JSON +
+//!   digest) and `dump` (flight-recorder exemplars) control frames.
+//! - **Observability** ([`crate::obs`]): the reactor's counters live in a
+//!   [`crate::obs::MetricsRegistry`], sampled requests get span timelines
+//!   (`--trace-sample`), and a flight recorder retains exemplar timelines
+//!   for slow/SLO-breaching requests. See `docs/OBSERVABILITY.md`.
 //! - **Closed-loop harness** ([`harness`]): drives millions of requests
 //!   from the existing [`crate::coordinator::Workload`] generator through
 //!   real client threads and returns the live [`report::LiveReport`].
@@ -51,5 +57,7 @@ pub use admission::{Admission, RejectReason, TokenBucket};
 pub use harness::{run_harness, HarnessConfig, HarnessStats};
 pub use hedge::{Completion, Hedger};
 pub use queue::{LiveBatch, ShardQueue};
-pub use reactor::{DeadlinePolicy, LiveClient, LiveRequest, LiveResult, LiveServer, ServeConfig};
+pub use reactor::{
+    DeadlinePolicy, LiveClient, LiveRequest, LiveResult, LiveServer, ServeConfig, StatsSnapshot,
+};
 pub use report::{LiveReport, LiveShardSummary, RejectCounts};

@@ -17,6 +17,16 @@
 //! `{"id": 7, "status": "served", "latency_us": 312.4, "deadline_met": true}`
 //! with `status` ∈ served|rejected|dropped|failed and the matching detail
 //! keys (`reason`/`retry_after_us`, `waited_us`, `error`).
+//!
+//! Control frames carry a `"type"` key instead (a frame without one is a
+//! request, keeping old clients working):
+//! - `{"type": "stats"}` → `{"type": "stats", "digest": "…",
+//!   "prometheus": "…", "metrics": {…}}` — a live snapshot of the
+//!   reactor's metrics registry (Prometheus text exposition + JSON).
+//! - `{"type": "dump"}` → `{"type": "dump", "flight": {…}}` — the flight
+//!   recorder's retained exemplar span timelines.
+//! - Any other `type` answers `{"type": "error", "error": "…"}` rather
+//!   than dropping the connection.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -187,20 +197,48 @@ fn handle_connection(mut stream: TcpStream, client: LiveClient) {
             Ok(None) => return,
             Err(_) => return, // torn frame: nothing sane to answer
         };
-        let response = match parse_request(&msg) {
-            Ok(req) => {
-                let result = client.call(req);
-                result_to_json(req.id, &result)
-            }
-            Err(e) => {
-                // Answer malformed requests instead of hanging the peer.
-                let id = msg.get("id").and_then(|v| v.as_usize().ok()).unwrap_or(0) as u64;
-                result_to_json(id, &LiveResult::Failed { error: format!("bad request: {e}") })
-            }
+        let response = match msg.get("type") {
+            Some(t) => control_response(t, &client),
+            None => match parse_request(&msg) {
+                Ok(req) => {
+                    let result = client.call(req);
+                    result_to_json(req.id, &result)
+                }
+                Err(e) => {
+                    // Answer malformed requests instead of hanging the peer.
+                    let id = msg.get("id").and_then(|v| v.as_usize().ok()).unwrap_or(0) as u64;
+                    result_to_json(id, &LiveResult::Failed { error: format!("bad request: {e}") })
+                }
+            },
         };
         if write_frame(&mut stream, &response).is_err() {
             return;
         }
+    }
+}
+
+/// Answer a control frame (`{"type": …}`). Unknown or non-string types get
+/// an error reply, never a dropped connection.
+fn control_response(frame_type: &Json, client: &LiveClient) -> Json {
+    let error = |e: String| Json::obj(vec![("type", Json::str("error")), ("error", Json::str(e))]);
+    let Ok(t) = frame_type.as_str() else {
+        return error("frame 'type' must be a string".into());
+    };
+    match t {
+        "stats" => match client.stats() {
+            Ok(snap) => Json::obj(vec![
+                ("type", Json::str("stats")),
+                ("digest", Json::str(snap.digest)),
+                ("prometheus", Json::str(snap.prometheus)),
+                ("metrics", snap.json),
+            ]),
+            Err(e) => error(format!("stats unavailable: {e}")),
+        },
+        "dump" => match client.dump() {
+            Ok(flight) => Json::obj(vec![("type", Json::str("dump")), ("flight", flight)]),
+            Err(e) => error(format!("dump unavailable: {e}")),
+        },
+        other => error(format!("unknown frame type '{other}' (stats|dump)")),
     }
 }
 
@@ -220,6 +258,22 @@ impl SocketClient {
     pub fn call(&mut self, req: &LiveRequest) -> Result<Json> {
         write_frame(&mut self.stream, &request_to_json(req))?;
         read_frame(&mut self.stream)?.context("server closed without answering")
+    }
+
+    /// Send a control frame (`{"type": t}`) and wait for its reply.
+    fn control(&mut self, t: &str) -> Result<Json> {
+        write_frame(&mut self.stream, &Json::obj(vec![("type", Json::str(t))]))?;
+        read_frame(&mut self.stream)?.context("server closed without answering")
+    }
+
+    /// Fetch a live metrics snapshot (`stats` frame).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.control("stats")
+    }
+
+    /// Fetch the flight-recorder dump (`dump` frame).
+    pub fn dump(&mut self) -> Result<Json> {
+        self.control("dump")
     }
 }
 

@@ -29,8 +29,19 @@
 //! served, rejected (by reason), dropped (deadline), or failed — and
 //! shutdown refuses to produce a report that violates that conservation
 //! law (`LiveReport::unaccounted` must be zero).
+//!
+//! Observability: the reactor owns an [`Obs`] pipeline — every count it
+//! used to keep as an ad-hoc scalar lives in the
+//! [`MetricsRegistry`](crate::obs::MetricsRegistry) (the conservation law
+//! is checked against registry counters), sampled requests get full span
+//! timelines in the trace buffer and flight recorder, and two extra
+//! control messages serve live [`StatsSnapshot`]s (`stats` frame,
+//! `--metrics-out`) and flight-recorder dumps (`dump` frame). With
+//! `trace_sample == 0` no spans are ever built; counter bumps are the
+//! only overhead on the request path.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
@@ -38,13 +49,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::backend::FftEngine;
+use crate::backend::{FftEngine, PassAttribution};
 use crate::config::SystemConfig;
 use crate::coordinator::{TRACE_MAX_BATCH, TRACE_MAX_N};
 use crate::fft::SoaVec;
-use crate::metrics::{DataMovement, LogHistogram};
+use crate::metrics::DataMovement;
+use crate::obs::{reason, Exemplar, Obs, SpanRecord};
 use crate::pimc::PassConfig;
 use crate::routines::OptLevel;
+use crate::runtime::Parallelism;
+use crate::util::Json;
 use crate::workload::WorkloadKind;
 
 use super::admission::{Admission, RejectReason};
@@ -52,6 +66,36 @@ use super::hedge::{Completion, Hedger};
 use super::protocol::ListenerHandle;
 use super::queue::{LiveBatch, ReadyBatch, ShardQueue};
 use super::report::{LiveReport, LiveShardSummary, RejectCounts};
+
+// Registry metric names (naming scheme: docs/OBSERVABILITY.md).
+const M_SUBMITTED: &str = "serve_submitted_total";
+const M_ADMITTED: &str = "serve_admitted_total";
+const M_SERVED: &str = "serve_served_total";
+const M_REQUESTS_KIND: &str = "serve_requests_total";
+const M_REJECTED: &str = "serve_rejected_total";
+const M_DROPPED: &str = "serve_dropped_total";
+const M_DEGRADED: &str = "serve_degraded_total";
+const M_FAILED: &str = "serve_failed_total";
+const M_DEADLINE_CARRIED: &str = "serve_deadline_carried_total";
+const M_DEADLINE_MET: &str = "serve_deadline_met_total";
+const M_DEADLINE_MISSED: &str = "serve_deadline_missed_total";
+const M_BATCHES: &str = "serve_batches_total";
+const M_SIGNALS: &str = "serve_signals_total";
+const M_PADDED: &str = "serve_padded_signals_total";
+const M_CLOSE_FLUSHED: &str = "serve_close_flushed_total";
+const M_HEDGES_FIRED: &str = "serve_hedges_fired_total";
+const M_HEDGES_WON: &str = "serve_hedges_won_total";
+const M_HEDGES_WASTED: &str = "serve_hedges_wasted_total";
+const M_LATENCY: &str = "serve_latency_ns";
+const M_QUEUE_DEPTH: &str = "serve_queue_depth";
+const M_OCCUPANCY: &str = "serve_batch_occupancy_pct";
+const M_INFLIGHT: &str = "serve_inflight";
+const M_QDEPTH_NOW: &str = "serve_queue_depth_current";
+const M_EST: &str = "serve_est_ns_per_signal";
+const M_GPU_BYTES: &str = "serve_gpu_bytes";
+const M_PIM_CMD_BYTES: &str = "serve_pim_cmd_bytes";
+const M_POOL_STEALS: &str = "runtime_pool_steals_total";
+const M_POOL_PARKS: &str = "runtime_pool_parks_total";
 
 /// What to do with a request that cannot meet its deadline at dispatch
 /// time (per the EWMA service-time estimate).
@@ -112,6 +156,19 @@ pub struct ServeConfig {
     pub numeric: bool,
     /// Spin-pace modeled service times into wall clock.
     pub pace: bool,
+    /// Span-trace every `N`th request id (0 = tracing off). Sampled
+    /// requests get full admit→respond timelines in the Chrome trace
+    /// buffer and the flight recorder.
+    pub trace_sample: u64,
+    /// Flight-recorder capacity, exemplars (0 = off).
+    pub recorder: usize,
+    /// Worker engine parallelism; pool steal/park counters flow into the
+    /// metrics registry at shutdown.
+    pub threads: Parallelism,
+    /// Rolling metrics snapshot file (JSON, overwritten periodically).
+    pub metrics_out: Option<String>,
+    /// Snapshot period for `metrics_out`, ms.
+    pub metrics_interval_ms: u64,
 }
 
 impl ServeConfig {
@@ -132,6 +189,11 @@ impl ServeConfig {
             hedge_after_us: None,
             numeric: false,
             pace: false,
+            trace_sample: 0,
+            recorder: 256,
+            threads: Parallelism::Sequential,
+            metrics_out: None,
+            metrics_interval_ms: 500,
         }
     }
 
@@ -163,6 +225,9 @@ impl ServeConfig {
             ensure!(self.shards >= 2, "hedging needs at least 2 shards");
         }
         ensure!(!(self.pace && self.numeric), "--pace applies to modeled mode only");
+        if self.metrics_out.is_some() {
+            ensure!(self.metrics_interval_ms >= 1, "metrics interval must be at least 1 ms");
+        }
         Ok(())
     }
 }
@@ -232,11 +297,28 @@ struct BatchOutcome {
     movement: DataMovement,
     /// Wall-clock the worker spent on the batch, ns.
     wall_ns: u64,
+    /// Per-pass substrate/time/byte attribution — cheap (≤ 6 entries per
+    /// batch), always computed so span assembly stays reactor-side.
+    passes: Vec<PassAttribution>,
+    /// Whether the batch's plan came out of the engine's plan cache.
+    cache_hit: bool,
+}
+
+/// One registry snapshot, as served over the socket `stats` frame and
+/// written to `--metrics-out`: Prometheus text exposition + the JSON form
+/// + the 16-hex-char FNV digest of the exposition.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub prometheus: String,
+    pub json: Json,
+    pub digest: String,
 }
 
 enum Msg {
     Submit(LiveRequest, Sender<LiveResult>),
     Done(Result<BatchOutcome, (u64, usize, String)>),
+    Stats(Sender<StatsSnapshot>),
+    Dump(Sender<Json>),
     Shutdown(Sender<LiveReport>),
 }
 
@@ -251,6 +333,9 @@ struct WorkerStats {
     batches: u64,
     cache_hits: u64,
     cache_misses: u64,
+    /// Work-stealing runtime self-profiling (zero without `--threads`).
+    pool_steals: u64,
+    pool_parks: u64,
 }
 
 fn validate_request(req: &LiveRequest) -> Result<()> {
@@ -273,7 +358,11 @@ fn validate_request(req: &LiveRequest) -> Result<()> {
 
 // ---------------------------------------------------------------- workers
 
-fn run_batch(engine: &mut FftEngine, cfg: &ServeConfig, batch: &LiveBatch) -> Result<DataMovement> {
+fn run_batch(
+    engine: &mut FftEngine,
+    cfg: &ServeConfig,
+    batch: &LiveBatch,
+) -> Result<(DataMovement, Vec<PassAttribution>)> {
     if cfg.numeric {
         // Real spectra: regenerate each request's signals from its seed
         // (outputs are computed then discarded — the serving tier measures
@@ -285,23 +374,28 @@ fn run_batch(engine: &mut FftEngine, cfg: &ServeConfig, batch: &LiveBatch) -> Re
             }
         }
         let run = engine.run_workload(batch.kind, batch.n, &signals)?;
-        Ok(run.eval.movement_plan)
+        Ok((run.eval.movement_plan, run.eval.pass_attribution()))
     } else {
         // Modeled pricing of the padded batch — the cluster simulator's
         // exact service model, plan-cache backed.
         let eval = engine.plan_workload(batch.kind, batch.n, batch.padded_signals())?;
-        Ok(eval.movement_plan)
+        Ok((eval.movement_plan, eval.pass_attribution()))
     }
 }
 
 fn worker_loop(shard: usize, cfg: Arc<ServeConfig>, rx: Receiver<WorkerMsg>, tx: Sender<Msg>) {
-    let mut engine = FftEngine::builder().system(&cfg.sys).passes(cfg.passes).build();
+    let mut engine = FftEngine::builder()
+        .system(&cfg.sys)
+        .passes(cfg.passes)
+        .parallelism(cfg.threads)
+        .build();
     let mut stats = WorkerStats::default();
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Run(batch) => {
                 let t0 = Instant::now();
                 let seqno = batch.seqno;
+                let misses_before = engine.cache_stats().1;
                 // Pacing: hold the modeled service time in wall clock so
                 // latency percentiles reflect the modeled substrate speed.
                 let pace_target = if cfg.pace {
@@ -313,7 +407,7 @@ fn worker_loop(shard: usize, cfg: Arc<ServeConfig>, rx: Receiver<WorkerMsg>, tx:
                     None
                 };
                 let outcome = match run_batch(&mut engine, &cfg, &batch) {
-                    Ok(movement) => {
+                    Ok((movement, passes)) => {
                         if let Some(target) = pace_target {
                             while t0.elapsed() < target {
                                 std::hint::spin_loop();
@@ -322,7 +416,8 @@ fn worker_loop(shard: usize, cfg: Arc<ServeConfig>, rx: Receiver<WorkerMsg>, tx:
                         let wall_ns = t0.elapsed().as_nanos() as u64;
                         stats.busy_ns += wall_ns;
                         stats.batches += 1;
-                        Ok(BatchOutcome { seqno, shard, movement, wall_ns })
+                        let cache_hit = engine.cache_stats().1 == misses_before;
+                        Ok(BatchOutcome { seqno, shard, movement, wall_ns, passes, cache_hit })
                     }
                     Err(e) => {
                         stats.busy_ns += t0.elapsed().as_nanos() as u64;
@@ -337,6 +432,11 @@ fn worker_loop(shard: usize, cfg: Arc<ServeConfig>, rx: Receiver<WorkerMsg>, tx:
                 let (hits, misses) = engine.cache_stats();
                 stats.cache_hits = hits;
                 stats.cache_misses = misses;
+                if let Some(pool) = engine.thread_pool() {
+                    let p = pool.stats();
+                    stats.pool_steals = p.steals;
+                    stats.pool_parks = p.parks;
+                }
                 let _ = reply.send(stats);
                 break;
             }
@@ -350,39 +450,33 @@ struct Pending {
     batch: LiveBatch,
     /// Reply channels, aligned one-to-one with `batch.entries`.
     replies: Vec<Sender<LiveResult>>,
+    /// When the batch was handed to its primary shard, ns.
+    dispatched_ns: u64,
+    /// `(fired_at_ns, alt_shard)` once a hedge copy was sent.
+    hedge: Option<(u64, usize)>,
+    /// Whether any entry is trace-sampled (gates trace-buffer spans).
+    traced: bool,
 }
 
 struct Reactor {
     cfg: Arc<ServeConfig>,
-    epoch: Instant,
     rx: Receiver<Msg>,
     worker_tx: Vec<Sender<WorkerMsg>>,
     queues: Vec<ShardQueue<Sender<LiveResult>>>,
     admission: Admission,
-    rejects: RejectCounts,
     hedger: Option<Hedger>,
     /// Outstanding `Run` messages per shard (primaries + hedge copies).
     shard_busy: Vec<usize>,
     in_flight: BTreeMap<u64, Pending>,
     next_seq: u64,
     // ---- accounting ----
-    submitted: u64,
-    admitted: u64,
-    served: u64,
-    dropped: u64,
-    degraded: u64,
-    failed: u64,
-    deadline_carried: u64,
-    deadline_met: u64,
-    deadline_missed: u64,
-    latency: LogHistogram,
-    queue_depth: LogHistogram,
-    occupancy_pct: LogHistogram,
+    /// Clock + metrics registry + trace buffer + flight recorder. All
+    /// scalar counters and histograms live in `obs.registry` under the
+    /// `M_*` names; the final report and the conservation law read them
+    /// back from there.
+    obs: Obs,
     per_kind: BTreeMap<WorkloadKind, u64>,
     movement: DataMovement,
-    signals: u64,
-    padded_signals: u64,
-    batches: u64,
     /// Per-shard (requests, signals, movement) attributed to the shard
     /// whose copy finished first.
     shard_served: Vec<(u64, u64, DataMovement)>,
@@ -395,54 +489,39 @@ struct Reactor {
 }
 
 impl Reactor {
-    fn new(
-        cfg: Arc<ServeConfig>,
-        epoch: Instant,
-        rx: Receiver<Msg>,
-        worker_tx: Vec<Sender<WorkerMsg>>,
-    ) -> Self {
+    fn new(cfg: Arc<ServeConfig>, rx: Receiver<Msg>, worker_tx: Vec<Sender<WorkerMsg>>) -> Self {
         let shards = cfg.shards;
         Self {
             queues: (0..shards)
                 .map(|_| ShardQueue::new(cfg.queue_requests, cfg.queue_signals))
                 .collect(),
             admission: Admission::new(cfg.admit_rps, cfg.burst, cfg.max_inflight),
-            rejects: RejectCounts::default(),
             hedger: cfg.hedge_after_us.map(|us| Hedger::new((us * 1e3).round() as u64)),
             shard_busy: vec![0; shards],
             in_flight: BTreeMap::new(),
             next_seq: 0,
-            submitted: 0,
-            admitted: 0,
-            served: 0,
-            dropped: 0,
-            degraded: 0,
-            failed: 0,
-            deadline_carried: 0,
-            deadline_met: 0,
-            deadline_missed: 0,
-            latency: LogHistogram::new(),
-            queue_depth: LogHistogram::new(),
-            occupancy_pct: LogHistogram::new(),
+            obs: Obs::wall(cfg.trace_sample, cfg.recorder),
             per_kind: BTreeMap::new(),
             movement: DataMovement::default(),
-            signals: 0,
-            padded_signals: 0,
-            batches: 0,
             shard_served: vec![(0, 0, DataMovement::default()); shards],
             est_ns_per_signal: BTreeMap::new(),
             first_admit_ns: None,
             last_done_ns: 0,
             closing: None,
             cfg,
-            epoch,
             rx,
             worker_tx,
         }
     }
 
     fn now_ns(&self) -> u64 {
-        self.epoch.elapsed().as_nanos() as u64
+        self.obs.now_ns()
+    }
+
+    /// Count a rejection (registry + reply), one call site per reason.
+    fn reject(&mut self, re: RejectReason, reply: &Sender<LiveResult>, retry_after_ns: u64) {
+        self.obs.registry.inc_with(M_REJECTED, &[("reason", re.name())]);
+        let _ = reply.send(LiveResult::Rejected { reason: re, retry_after_ns });
     }
 
     fn run(mut self) {
@@ -475,28 +554,41 @@ impl Reactor {
         match msg {
             Msg::Submit(req, reply) => self.on_submit(req, reply),
             Msg::Done(res) => self.on_done(res),
-            Msg::Shutdown(reply) => self.closing = Some(reply),
+            Msg::Stats(reply) => {
+                let _ = reply.send(self.snapshot());
+            }
+            Msg::Dump(reply) => {
+                let _ = reply.send(self.obs.recorder.to_json());
+            }
+            Msg::Shutdown(reply) => {
+                self.closing = Some(reply);
+                // Flush partially-filled age-window batches *now*: count
+                // what is still queued, then pump with the drain minimum
+                // (1 signal) so nothing waits out a window that will never
+                // fill. The run loop's drained() check only passes once
+                // these flushed batches complete, so they are in the final
+                // report before the conservation-law check.
+                let queued: u64 =
+                    self.queues.iter().map(|q| q.pending_requests() as u64).sum();
+                self.obs.registry.add(M_CLOSE_FLUSHED, queued);
+                self.pump();
+            }
         }
     }
 
     fn on_submit(&mut self, mut req: LiveRequest, reply: Sender<LiveResult>) {
-        self.submitted += 1;
+        self.obs.registry.inc(M_SUBMITTED);
         if self.closing.is_some() {
-            self.rejects.note(RejectReason::Closed);
-            let _ = reply
-                .send(LiveResult::Rejected { reason: RejectReason::Closed, retry_after_ns: 0 });
+            self.reject(RejectReason::Closed, &reply, 0);
             return;
         }
         if validate_request(&req).is_err() {
-            self.rejects.note(RejectReason::Invalid);
-            let _ = reply
-                .send(LiveResult::Rejected { reason: RejectReason::Invalid, retry_after_ns: 0 });
+            self.reject(RejectReason::Invalid, &reply, 0);
             return;
         }
         let now = self.now_ns();
-        if let Err((reason, retry_after_ns)) = self.admission.try_admit(now) {
-            self.rejects.note(reason);
-            let _ = reply.send(LiveResult::Rejected { reason, retry_after_ns });
+        if let Err((re, retry_after_ns)) = self.admission.try_admit(now) {
+            self.reject(re, &reply, retry_after_ns);
             return;
         }
         req.admitted_ns = now;
@@ -522,32 +614,27 @@ impl Reactor {
             // slot is given back (the bucket token is spent — queue-full
             // spills still count against the arrival rate).
             self.admission.release();
-            self.rejects.note(RejectReason::QueueFull);
             let retry_after_ns = ((self.cfg.max_wait_us * 1e3) as u64).max(50_000);
-            let _ = reply
-                .send(LiveResult::Rejected { reason: RejectReason::QueueFull, retry_after_ns });
+            self.reject(RejectReason::QueueFull, &reply, retry_after_ns);
             return;
         };
         if self.first_admit_ns.is_none() {
             self.first_admit_ns = Some(now);
         }
         if req.deadline_us.is_some() {
-            self.deadline_carried += 1;
+            self.obs.registry.inc(M_DEADLINE_CARRIED);
         }
-        self.admitted += 1;
-        self.queue_depth.record(self.queues[shard].pending_requests() as u64);
+        self.obs.registry.inc(M_ADMITTED);
+        self.obs.registry.observe(M_QUEUE_DEPTH, self.queues[shard].pending_requests() as u64);
         if let Err((req, reply)) = self.queues[shard].push(req, reply) {
             // Unreachable (has_room was just checked on this thread), but
             // never silently lose a request.
-            self.admitted -= 1;
+            self.obs.registry.sub(M_ADMITTED, 1);
             self.admission.release();
-            self.rejects.note(RejectReason::QueueFull);
-            let _ = reply.send(LiveResult::Rejected {
-                reason: RejectReason::QueueFull,
-                retry_after_ns: ((self.cfg.max_wait_us * 1e3) as u64).max(50_000),
-            });
+            let retry_after_ns = ((self.cfg.max_wait_us * 1e3) as u64).max(50_000);
+            self.reject(RejectReason::QueueFull, &reply, retry_after_ns);
             if req.deadline_us.is_some() {
-                self.deadline_carried -= 1;
+                self.obs.registry.sub(M_DEADLINE_CARRIED, 1);
             }
         }
     }
@@ -574,8 +661,9 @@ impl Reactor {
             let alt = (0..self.cfg.shards)
                 .filter(|&s| s != primary)
                 .min_by_key(|&s| (self.shard_busy[s], self.queues[s].pending_requests(), s));
-            if let (Some(alt), Some(p)) = (alt, self.in_flight.get(&seqno)) {
+            if let (Some(alt), Some(p)) = (alt, self.in_flight.get_mut(&seqno)) {
                 if self.worker_tx[alt].send(WorkerMsg::Run(p.batch.clone())).is_ok() {
+                    p.hedge = Some((now, alt));
                     self.shard_busy[alt] += 1;
                 }
             }
@@ -596,14 +684,14 @@ impl Reactor {
             if deadline != u64::MAX && now.saturating_add(est_ns) > deadline {
                 match self.cfg.deadline_policy {
                     DeadlinePolicy::Drop => {
-                        self.dropped += 1;
+                        self.obs.registry.inc(M_DROPPED);
                         self.admission.release();
                         let _ = reply.send(LiveResult::Dropped {
                             waited_ns: now.saturating_sub(req.admitted_ns),
                         });
                         continue;
                     }
-                    DeadlinePolicy::Degrade => self.degraded += 1,
+                    DeadlinePolicy::Degrade => self.obs.registry.inc(M_DEGRADED),
                 }
             }
             entries.push(req);
@@ -614,11 +702,12 @@ impl Reactor {
         }
         let seqno = self.next_seq;
         self.next_seq += 1;
+        let traced = self.obs.sample() != 0 && entries.iter().any(|r| self.obs.sampled(r.id));
         let batch = LiveBatch { seqno, kind: ready.kind, n: ready.n, entries };
         if self.worker_tx[s].send(WorkerMsg::Run(batch.clone())).is_err() {
             // Worker gone (shutdown race): fail rather than lose requests.
             for reply in replies {
-                self.failed += 1;
+                self.obs.registry.inc(M_FAILED);
                 self.admission.release();
                 let _ = reply
                     .send(LiveResult::Failed { error: format!("shard {s} worker exited") });
@@ -629,7 +718,8 @@ impl Reactor {
         if let Some(h) = &mut self.hedger {
             h.track(seqno, now, s);
         }
-        self.in_flight.insert(seqno, Pending { batch, replies });
+        self.in_flight
+            .insert(seqno, Pending { batch, replies, dispatched_ns: now, hedge: None, traced });
     }
 
     fn on_done(&mut self, res: Result<BatchOutcome, (u64, usize, String)>) {
@@ -654,36 +744,93 @@ impl Reactor {
         self.last_done_ns = self.last_done_ns.max(now);
         match outcome {
             Ok(o) => {
-                let total = p.batch.signals();
-                let padded = p.batch.padded_signals();
-                self.batches += 1;
-                self.signals += total as u64;
-                self.padded_signals += padded as u64;
+                let Pending { batch, replies, dispatched_ns, hedge, traced } = p;
+                let total = batch.signals();
+                let padded = batch.padded_signals();
+                self.obs.registry.inc(M_BATCHES);
+                self.obs.registry.add(M_SIGNALS, total as u64);
+                self.obs.registry.add(M_PADDED, padded as u64);
                 self.movement.add_assign(&o.movement);
-                self.occupancy_pct.record((total * 100 / padded.max(1)) as u64);
+                let occupancy = (total * 100 / padded.max(1)) as u64;
+                self.obs.registry.observe(M_OCCUPANCY, occupancy);
                 // Wall clock is the live tier's real service time — the
                 // deadline estimator tracks it, whatever the engine mode.
                 let per_sig = o.wall_ns as f64 / padded.max(1) as f64;
-                let e = self
-                    .est_ns_per_signal
-                    .entry((p.batch.kind, p.batch.n))
-                    .or_insert(per_sig);
-                *e = *e * 0.75 + per_sig * 0.25;
+                let est = {
+                    let e = self
+                        .est_ns_per_signal
+                        .entry((batch.kind, batch.n))
+                        .or_insert(per_sig);
+                    *e = *e * 0.75 + per_sig * 0.25;
+                    *e
+                };
+                let n_label = batch.n.to_string();
+                self.obs.registry.set_gauge_with(
+                    M_EST,
+                    &[("kind", batch.kind.name()), ("n", &n_label)],
+                    est,
+                );
                 let stats = &mut self.shard_served[shard];
-                stats.0 += p.batch.entries.len() as u64;
+                stats.0 += batch.entries.len() as u64;
                 stats.1 += total as u64;
                 stats.2.add_assign(&o.movement);
-                for (req, reply) in p.batch.entries.iter().zip(p.replies) {
+                // Tail threshold for exemplar retention, computed before
+                // this batch's own samples move the percentile.
+                let slow_threshold = match self.obs.registry.hist(M_LATENCY) {
+                    Some(h) if h.count() >= 128 => h.percentile(99.0),
+                    _ => u64::MAX,
+                };
+                for (req, reply) in batch.entries.iter().zip(replies) {
                     let latency_ns = now.saturating_sub(req.admitted_ns);
-                    self.latency.record(latency_ns);
+                    self.obs.registry.observe(M_LATENCY, latency_ns);
                     *self.per_kind.entry(req.kind).or_insert(0) += 1;
-                    self.served += 1;
+                    self.obs.registry.inc(M_SERVED);
+                    self.obs.registry.inc_with(M_REQUESTS_KIND, &[("kind", req.kind.name())]);
                     let deadline_met =
                         req.deadline_us.map(|d| latency_ns <= d.saturating_mul(1000));
                     match deadline_met {
-                        Some(true) => self.deadline_met += 1,
-                        Some(false) => self.deadline_missed += 1,
+                        Some(true) => self.obs.registry.inc(M_DEADLINE_MET),
+                        Some(false) => self.obs.registry.inc(M_DEADLINE_MISSED),
                         None => {}
+                    }
+                    // Span timelines only for interesting requests: the
+                    // sampled every-Nth, SLO breaches, and the live tail.
+                    let sampled = self.obs.sampled(req.id);
+                    let breach = deadline_met == Some(false);
+                    let slow = latency_ns >= slow_threshold;
+                    if sampled || (self.obs.recorder.enabled() && (breach || slow)) {
+                        let spans = request_spans(
+                            req,
+                            shard,
+                            now,
+                            dispatched_ns,
+                            hedge,
+                            &o,
+                            latency_ns,
+                            occupancy,
+                        );
+                        if sampled && traced {
+                            for s in &spans {
+                                self.obs.trace.push(s.clone());
+                            }
+                        }
+                        if self.obs.recorder.enabled() {
+                            let why = if breach {
+                                reason::SLO_BREACH
+                            } else if slow {
+                                reason::SLOW
+                            } else {
+                                reason::SAMPLED
+                            };
+                            self.obs.recorder.record(Exemplar {
+                                id: req.id,
+                                kind: req.kind.name(),
+                                n: req.n,
+                                latency_ns,
+                                reason: why,
+                                spans,
+                            });
+                        }
                     }
                     self.admission.release();
                     let _ = reply.send(LiveResult::Served { latency_ns, deadline_met });
@@ -691,11 +838,35 @@ impl Reactor {
             }
             Err(error) => {
                 for reply in p.replies {
-                    self.failed += 1;
+                    self.obs.registry.inc(M_FAILED);
                     self.admission.release();
                     let _ = reply.send(LiveResult::Failed { error: error.clone() });
                 }
             }
+        }
+    }
+
+    /// Refresh point-in-time gauges and mirrored counters, then export the
+    /// registry as one [`StatsSnapshot`].
+    fn snapshot(&mut self) -> StatsSnapshot {
+        self.obs.registry.set_gauge(M_INFLIGHT, self.admission.inflight() as f64);
+        for s in 0..self.queues.len() {
+            let label = s.to_string();
+            let depth = self.queues[s].pending_requests() as f64;
+            self.obs.registry.set_gauge_with(M_QDEPTH_NOW, &[("shard", &label)], depth);
+        }
+        self.obs.registry.set_gauge(M_GPU_BYTES, self.movement.gpu_bytes);
+        self.obs.registry.set_gauge(M_PIM_CMD_BYTES, self.movement.pim_cmd_bytes);
+        if let Some(h) = &self.hedger {
+            self.obs.registry.set_counter(M_HEDGES_FIRED, h.fired);
+            self.obs.registry.set_counter(M_HEDGES_WON, h.won);
+            self.obs.registry.set_counter(M_HEDGES_WASTED, h.wasted);
+        }
+        let reg = &self.obs.registry;
+        StatsSnapshot {
+            prometheus: reg.to_prometheus(),
+            json: reg.to_json(),
+            digest: reg.digest(),
         }
     }
 
@@ -710,6 +881,8 @@ impl Reactor {
         let mut per_shard = Vec::with_capacity(self.cfg.shards);
         let mut cache_hits = 0u64;
         let mut cache_misses = 0u64;
+        let mut pool_steals = 0u64;
+        let mut pool_parks = 0u64;
         for (s, tx) in self.worker_tx.iter().enumerate() {
             let (stx, srx) = mpsc::channel();
             let stats = if tx.send(WorkerMsg::Quit(stx)).is_ok() {
@@ -719,6 +892,8 @@ impl Reactor {
             };
             cache_hits += stats.cache_hits;
             cache_misses += stats.cache_misses;
+            pool_steals += stats.pool_steals;
+            pool_parks += stats.pool_parks;
             let (requests, signals, movement) = self.shard_served[s];
             per_shard.push(LiveShardSummary {
                 shard: s,
@@ -736,31 +911,44 @@ impl Reactor {
                 cache_misses: stats.cache_misses,
             });
         }
+        self.obs.registry.add(M_POOL_STEALS, pool_steals);
+        self.obs.registry.add(M_POOL_PARKS, pool_parks);
+        // One last snapshot folds the final gauges and hedge mirrors in, so
+        // the digest in the report covers everything the stats frame saw.
+        let snap = self.snapshot();
+        let reg = &self.obs.registry;
+        let rejected = RejectCounts {
+            rate_limited: reg.counter_with(M_REJECTED, &[("reason", "rate_limited")]),
+            saturated: reg.counter_with(M_REJECTED, &[("reason", "saturated")]),
+            queue_full: reg.counter_with(M_REJECTED, &[("reason", "queue_full")]),
+            invalid: reg.counter_with(M_REJECTED, &[("reason", "invalid")]),
+            closed: reg.counter_with(M_REJECTED, &[("reason", "closed")]),
+        };
         LiveReport {
             shards: self.cfg.shards,
             router: "affinity-spill",
-            requests: self.served,
-            signals: self.signals,
-            padded_signals: self.padded_signals,
-            batches: self.batches,
+            requests: reg.counter(M_SERVED),
+            signals: reg.counter(M_SIGNALS),
+            padded_signals: reg.counter(M_PADDED),
+            batches: reg.counter(M_BATCHES),
             makespan_ns,
-            latency_ns: std::mem::take(&mut self.latency),
-            queue_depth: std::mem::take(&mut self.queue_depth),
-            occupancy_pct: std::mem::take(&mut self.occupancy_pct),
+            latency_ns: reg.hist_clone(M_LATENCY),
+            queue_depth: reg.hist_clone(M_QUEUE_DEPTH),
+            occupancy_pct: reg.hist_clone(M_OCCUPANCY),
             movement: self.movement,
             cache_hits,
             cache_misses,
             per_kind: std::mem::take(&mut self.per_kind),
             per_shard,
-            submitted: self.submitted,
-            admitted: self.admitted,
-            rejected: self.rejects,
-            dropped: self.dropped,
-            degraded: self.degraded,
-            failed: self.failed,
-            deadline_carried: self.deadline_carried,
-            deadline_met: self.deadline_met,
-            deadline_missed: self.deadline_missed,
+            submitted: reg.counter(M_SUBMITTED),
+            admitted: reg.counter(M_ADMITTED),
+            rejected,
+            dropped: reg.counter(M_DROPPED),
+            degraded: reg.counter(M_DEGRADED),
+            failed: reg.counter(M_FAILED),
+            deadline_carried: reg.counter(M_DEADLINE_CARRIED),
+            deadline_met: reg.counter(M_DEADLINE_MET),
+            deadline_missed: reg.counter(M_DEADLINE_MISSED),
             hedge_after_us: self.cfg.hedge_after_us,
             hedges_fired: self.hedger.as_ref().map_or(0, |h| h.fired),
             hedges_won: self.hedger.as_ref().map_or(0, |h| h.won),
@@ -771,8 +959,123 @@ impl Reactor {
             deadline_policy: self.cfg.deadline_policy.name(),
             mode: if self.cfg.numeric { "numeric" } else { "modeled" },
             paced: self.cfg.pace,
+            close_flushed: reg.counter(M_CLOSE_FLUSHED),
+            obs_digest: snap.digest,
+            obs_exemplars: self.obs.recorder.len() as u64,
+            flight: self.obs.recorder.to_json(),
+            trace_events: self.obs.trace.take(),
         }
     }
+}
+
+/// Build the span timeline for one served request: admit → queue →
+/// execute (subdivided into per-pass attribution spans) → hedge → respond.
+///
+/// Pass durations are `floor(frac · execute)`, so their sum never exceeds
+/// the execute span, which itself is clamped to the request span.
+#[allow(clippy::too_many_arguments)]
+fn request_spans(
+    req: &LiveRequest,
+    shard: usize,
+    now: u64,
+    dispatched_ns: u64,
+    hedge: Option<(u64, usize)>,
+    outcome: &BatchOutcome,
+    latency_ns: u64,
+    occupancy_pct: u64,
+) -> Vec<SpanRecord> {
+    let tid = shard as u64;
+    let deadline_met = req.deadline_us.map(|d| latency_ns <= d.saturating_mul(1000));
+    let mut spans = Vec::with_capacity(6 + outcome.passes.len());
+    spans.push(SpanRecord {
+        name: format!("request {}", req.id),
+        cat: "request",
+        ts_ns: req.admitted_ns,
+        dur_ns: latency_ns,
+        tid,
+        args: vec![
+            ("id", Json::num(req.id as f64)),
+            ("kind", Json::str(req.kind.name())),
+            ("n", Json::num(req.n as f64)),
+            ("signals", Json::num(req.signals as f64)),
+            ("batch", Json::num(outcome.seqno as f64)),
+            (
+                "deadline_met",
+                match deadline_met {
+                    Some(b) => Json::Bool(b),
+                    None => Json::Null,
+                },
+            ),
+        ],
+    });
+    spans.push(SpanRecord {
+        name: "admit".into(),
+        cat: "phase",
+        ts_ns: req.admitted_ns,
+        dur_ns: 0,
+        tid,
+        args: vec![],
+    });
+    spans.push(SpanRecord {
+        name: "queue".into(),
+        cat: "phase",
+        ts_ns: req.admitted_ns,
+        dur_ns: dispatched_ns.saturating_sub(req.admitted_ns),
+        tid,
+        args: vec![("batch", Json::num(outcome.seqno as f64))],
+    });
+    let exec_ns = outcome.wall_ns.min(now.saturating_sub(dispatched_ns));
+    spans.push(SpanRecord {
+        name: format!("execute b{}", outcome.seqno),
+        cat: "phase",
+        ts_ns: dispatched_ns,
+        dur_ns: exec_ns,
+        tid,
+        args: vec![
+            ("batch", Json::num(outcome.seqno as f64)),
+            ("occupancy_pct", Json::num(occupancy_pct as f64)),
+            ("cache_hit", Json::Bool(outcome.cache_hit)),
+        ],
+    });
+    let mut t = dispatched_ns;
+    for pass in &outcome.passes {
+        let dur = (pass.frac * exec_ns as f64).floor() as u64;
+        spans.push(SpanRecord {
+            name: format!("pass:{}", pass.label),
+            cat: "pass",
+            ts_ns: t,
+            dur_ns: dur,
+            tid,
+            args: vec![
+                ("substrate", Json::str(pass.substrate)),
+                ("fft_n", Json::num(pass.fft_n as f64)),
+                ("ffts", Json::num(pass.ffts as f64)),
+                ("gpu_mb", Json::num(pass.gpu_bytes / 1e6)),
+                ("pim_cmd_mb", Json::num(pass.pim_cmd_bytes / 1e6)),
+                ("pim_tile", Json::num(pass.pim_tile as f64)),
+            ],
+        });
+        t += dur;
+    }
+    if let Some((fired_ns, alt)) = hedge {
+        spans.push(SpanRecord {
+            name: format!("hedge b{}", outcome.seqno),
+            cat: "hedge",
+            ts_ns: fired_ns,
+            dur_ns: now.saturating_sub(fired_ns),
+            tid: alt as u64,
+            args: vec![("batch", Json::num(outcome.seqno as f64))],
+        });
+    }
+    spans.push(SpanRecord {
+        name: "respond".into(),
+        cat: "phase",
+        ts_ns: now,
+        dur_ns: 0,
+        tid,
+        args: vec![],
+    });
+    spans
 }
 
 // ---------------------------------------------------------------- server
@@ -784,13 +1087,13 @@ pub struct LiveServer {
     reactor: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     listener: Option<ListenerHandle>,
+    metrics: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 impl LiveServer {
     pub fn start(cfg: ServeConfig) -> Result<LiveServer> {
         cfg.validate()?;
         let cfg = Arc::new(cfg);
-        let epoch = Instant::now();
         let (tx, rx) = mpsc::channel();
         let mut worker_tx = Vec::with_capacity(cfg.shards);
         let mut workers = Vec::with_capacity(cfg.shards);
@@ -810,10 +1113,35 @@ impl LiveServer {
             let cfg = Arc::clone(&cfg);
             thread::Builder::new()
                 .name("serve-reactor".into())
-                .spawn(move || Reactor::new(cfg, epoch, rx, worker_tx).run())
+                .spawn(move || Reactor::new(cfg, rx, worker_tx).run())
                 .context("spawning reactor")?
         };
-        Ok(LiveServer { tx, reactor: Some(reactor), workers, listener: None })
+        // Periodic snapshot thread: asks the reactor for a stats frame and
+        // overwrites `metrics_out` with the JSON snapshot every interval.
+        let metrics = if let Some(path) = cfg.metrics_out.clone() {
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = Arc::clone(&stop);
+            let tick = Duration::from_millis(cfg.metrics_interval_ms.max(1));
+            let tx2 = tx.clone();
+            let handle = thread::Builder::new()
+                .name("serve-metrics".into())
+                .spawn(move || {
+                    while !flag.load(Ordering::Acquire) {
+                        thread::sleep(tick);
+                        let (stx, srx) = mpsc::channel();
+                        if tx2.send(Msg::Stats(stx)).is_err() {
+                            return;
+                        }
+                        let Ok(snap) = srx.recv() else { return };
+                        let _ = std::fs::write(&path, format!("{}\n", snap.json));
+                    }
+                })
+                .context("spawning metrics snapshot thread")?;
+            Some((stop, handle))
+        } else {
+            None
+        };
+        Ok(LiveServer { tx, reactor: Some(reactor), workers, listener: None, metrics })
     }
 
     /// An in-process client handle (cheap to clone, safe across threads).
@@ -837,6 +1165,9 @@ impl LiveServer {
         if let Some(l) = self.listener.take() {
             l.stop();
         }
+        if let Some((stop, _)) = &self.metrics {
+            stop.store(true, Ordering::Release);
+        }
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Shutdown(rtx))
@@ -846,6 +1177,9 @@ impl LiveServer {
             let _ = h.join();
         }
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some((_, h)) = self.metrics.take() {
             let _ = h.join();
         }
         ensure!(
@@ -868,6 +1202,9 @@ impl Drop for LiveServer {
         if self.reactor.is_some() {
             if let Some(l) = self.listener.take() {
                 l.stop();
+            }
+            if let Some((stop, _)) = &self.metrics {
+                stop.store(true, Ordering::Release);
             }
             let (rtx, _rrx) = mpsc::channel();
             let _ = self.tx.send(Msg::Shutdown(rtx));
@@ -899,6 +1236,20 @@ impl LiveClient {
         self.submit(req)
             .recv()
             .unwrap_or_else(|_| LiveResult::Failed { error: "server dropped the request".into() })
+    }
+
+    /// Live metrics snapshot: Prometheus text, JSON, and the registry digest.
+    pub fn stats(&self) -> Result<StatsSnapshot> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Stats(rtx)).map_err(|_| anyhow!("server is gone"))?;
+        rrx.recv().context("waiting for a stats snapshot")
+    }
+
+    /// Flight-recorder dump: the retained exemplar span timelines.
+    pub fn dump(&self) -> Result<Json> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Dump(rtx)).map_err(|_| anyhow!("server is gone"))?;
+        rrx.recv().context("waiting for a flight-recorder dump")
     }
 }
 
@@ -1028,6 +1379,99 @@ mod tests {
                 assert_eq!(report.requests, 1);
             }
         }
+    }
+
+    #[test]
+    fn shutdown_flushes_partial_age_window_batches() {
+        // Regression: a window that will never fill (window_signals huge,
+        // age flush effectively never) used to strand queued requests at
+        // shutdown. Close must flush them into the final report before the
+        // conservation-law check.
+        let mut cfg = small_cfg();
+        cfg.shards = 1;
+        cfg.window_signals = 1000;
+        cfg.max_wait_us = 10_000_000.0;
+        let server = LiveServer::start(cfg).unwrap();
+        let client = server.client();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 64, 1, i)))
+            .collect();
+        // Submit and Shutdown ride the same reactor channel in order, so
+        // all five are queued (not dispatched) when the close lands.
+        let report = server.shutdown().unwrap();
+        for rx in rxs {
+            assert!(matches!(rx.recv().unwrap(), LiveResult::Served { .. }));
+        }
+        assert_eq!(report.requests, 5);
+        assert_eq!(report.close_flushed, 5);
+        assert_eq!(report.unaccounted(), 0);
+    }
+
+    #[test]
+    fn stats_and_dump_frames_reflect_live_state() {
+        let mut cfg = small_cfg();
+        cfg.trace_sample = 1; // every request sampled
+        let server = LiveServer::start(cfg).unwrap();
+        let client = server.client();
+        for i in 0..10 {
+            match client.call(LiveRequest::new(i, WorkloadKind::Batch1d, 64, 1, i)) {
+                LiveResult::Served { .. } => {}
+                other => panic!("expected Served, got {other:?}"),
+            }
+        }
+        let snap = client.stats().unwrap();
+        assert!(snap.prometheus.contains("# TYPE serve_served_total counter"));
+        assert!(snap.prometheus.contains("serve_served_total 10"));
+        assert_eq!(snap.digest.len(), 16);
+        assert_eq!(snap.json.field("digest").unwrap().as_str().unwrap(), snap.digest);
+        let served = snap
+            .json
+            .field("counters")
+            .unwrap()
+            .field("serve_served_total")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(served as u64, 10);
+        let dump = client.dump().unwrap();
+        assert_eq!(dump.field("retained").unwrap().as_usize().unwrap(), 10);
+        let exemplars = dump.field("exemplars").unwrap().as_arr().unwrap();
+        assert_eq!(exemplars.len(), 10);
+        // Every exemplar timeline carries the admit→respond phases.
+        for e in exemplars {
+            let spans = e.field("spans").unwrap().as_arr().unwrap();
+            let names: Vec<&str> =
+                spans.iter().map(|s| s.field("name").unwrap().as_str().unwrap()).collect();
+            assert!(names.iter().any(|n| n.starts_with("request ")));
+            assert!(names.contains(&"admit"));
+            assert!(names.contains(&"queue"));
+            assert!(names.iter().any(|n| n.starts_with("execute ")));
+            assert!(names.contains(&"respond"));
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.requests, 10);
+        assert_eq!(report.obs_exemplars, 10);
+        assert!(!report.trace_events.is_empty());
+        assert_eq!(report.obs_digest.len(), 16);
+    }
+
+    #[test]
+    fn untraced_runs_build_no_spans() {
+        let server = LiveServer::start(small_cfg()).unwrap();
+        let client = server.client();
+        for i in 0..5 {
+            assert!(matches!(
+                client.call(LiveRequest::new(i, WorkloadKind::Batch1d, 64, 1, i)),
+                LiveResult::Served { .. }
+            ));
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.requests, 5);
+        assert!(report.trace_events.is_empty());
+        // The recorder may still capture tail exemplars, but with < 128
+        // latency samples and no deadlines there is nothing slow or
+        // breaching to keep.
+        assert_eq!(report.obs_exemplars, 0);
     }
 
     #[test]

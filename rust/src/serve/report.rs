@@ -14,6 +14,7 @@
 use std::collections::BTreeMap;
 
 use crate::metrics::{depth_json, latency_us_json, plan_cache_json, DataMovement, LogHistogram};
+use crate::obs::SpanRecord;
 use crate::util::Json;
 use crate::workload::{per_kind_json, WorkloadKind};
 
@@ -127,6 +128,21 @@ pub struct LiveReport {
     pub mode: &'static str,
     /// Whether modeled service times were spin-paced into wall clock.
     pub paced: bool,
+
+    // ---- observability ----
+    /// Requests still queued when shutdown arrived, flushed as partial
+    /// batches before the final report (they count as served above).
+    pub close_flushed: u64,
+    /// 16-hex FNV digest of the final metrics-registry exposition.
+    pub obs_digest: String,
+    /// Exemplar timelines retained in the flight recorder.
+    pub obs_exemplars: u64,
+    /// Flight-recorder dump (same JSON the `dump` socket frame returns).
+    /// Not serialized into `to_json` — written separately by the CLI.
+    pub flight: Json,
+    /// Chrome-traceable span events drained from the trace buffer (empty
+    /// unless `trace_sample > 0`). Not serialized into `to_json`.
+    pub trace_events: Vec<SpanRecord>,
 }
 
 impl LiveReport {
@@ -282,6 +298,15 @@ impl LiveReport {
             ("unaccounted", Json::num(self.unaccounted() as f64)),
             ("mode", Json::str(self.mode)),
             ("paced", Json::Bool(self.paced)),
+            (
+                "obs",
+                Json::obj(vec![
+                    ("metrics_digest", Json::str(self.obs_digest.clone())),
+                    ("exemplars", Json::num(self.obs_exemplars as f64)),
+                    ("close_flushed", Json::num(self.close_flushed as f64)),
+                    ("trace_events", Json::num(self.trace_events.len() as f64)),
+                ]),
+            ),
         ])
     }
 }

@@ -64,9 +64,14 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
             [--deadline-us D]                until stdin closes. --numeric
             [--deadline-policy drop|degrade] computes real spectra; --pace
             [--hedge-us H] [--numeric]       spin-paces modeled service times
-            [--pace] [--seed S] [--out FILE] into wall clock.
-            [--opt L] [--passes SPEC]
-            [--variant NAME]",
+            [--pace] [--seed S] [--out FILE] into wall clock. --trace-sample
+            [--opt L] [--passes SPEC]        spans every Nth request into a
+            [--variant NAME] [--threads N]   Chrome trace (--trace-out) and
+            [--trace-sample N]               the flight recorder (--recorder);
+            [--trace-out FILE]               --metrics-out rolls a JSON
+            [--recorder N] [--addr-out FILE] metrics snapshot every
+            [--metrics-out FILE]             --metrics-interval-ms; --addr-out
+            [--metrics-interval-ms T]        writes the listener address.",
     },
     SubcommandHelp {
         name: "cluster",
@@ -78,8 +83,9 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
             [--max-shards M] [--seed S]      mixed request kinds; --threads
             [--out FILE] [--opt L]           pre-plans in parallel (reports
             [--passes SPEC] [--variant NAME] stay byte-identical). Writes a
-            [--workload-mix SPEC]            JSON report artifact to --out.
-            [--threads N]",
+            [--workload-mix SPEC]            JSON report artifact to --out;
+            [--threads N] [--trace-out FILE] --trace-out adds a Chrome trace
+                                             of sampled request timelines.",
     },
     SubcommandHelp {
         name: "workload",

@@ -1,0 +1,218 @@
+//! Observability integration tests: the `stats`/`dump` control frames over
+//! a real socket, Prometheus exposition shape, the rolling metrics
+//! snapshot file, and trace ↔ report reconciliation with sampling on.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use pimacolaba::serve::protocol::{read_frame, write_frame, SocketClient};
+use pimacolaba::serve::{LiveRequest, LiveServer, ServeConfig};
+use pimacolaba::util::Json;
+use pimacolaba::workload::WorkloadKind;
+
+fn small_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::default_hw();
+    cfg.shards = 2;
+    cfg.window_signals = 8;
+    cfg.max_wait_us = 100.0;
+    cfg
+}
+
+/// Prometheus text exposition 0.0.4 line checker: every non-empty line is
+/// either `# TYPE <name> <counter|gauge|summary>` or `<series> <value>`
+/// where the series is `name` or `name{label="v",..}` and the value parses
+/// as a float (NaN included — empty-histogram quantiles).
+fn check_prometheus_lines(text: &str) {
+    fn valid_name(name: &str) -> bool {
+        !name.is_empty()
+            && !name.starts_with(|c: char| c.is_ascii_digit())
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    assert!(!text.trim().is_empty(), "empty exposition");
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line without a metric name");
+            let kind = it.next().expect("TYPE line without a kind");
+            assert!(valid_name(name), "bad metric name in TYPE line: {line}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "summary"),
+                "unknown metric kind in: {line}"
+            );
+            assert!(it.next().is_none(), "trailing tokens in TYPE line: {line}");
+            continue;
+        }
+        assert!(!line.starts_with('#'), "only TYPE comments are emitted, got: {line}");
+        let (series, value) = line.rsplit_once(' ').expect("sample line without a value");
+        assert!(
+            value == "NaN" || value.parse::<f64>().is_ok(),
+            "unparseable sample value in: {line}"
+        );
+        let name = series.split('{').next().unwrap();
+        assert!(valid_name(name), "bad series name in: {line}");
+        if series.contains('{') {
+            assert!(series.ends_with('}'), "unterminated label set in: {line}");
+        }
+    }
+}
+
+#[test]
+fn socket_stats_and_dump_frames_round_trip() {
+    let mut cfg = small_cfg();
+    cfg.trace_sample = 1;
+    let mut server = LiveServer::start(cfg).unwrap();
+    let addr = server.listen().unwrap();
+    let mut client = SocketClient::connect(addr).unwrap();
+    for i in 0..8u64 {
+        let resp = client.call(&LiveRequest::new(i, WorkloadKind::Batch1d, 64, 1, i)).unwrap();
+        assert_eq!(resp.field("status").unwrap().as_str().unwrap(), "served", "request {i}");
+    }
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.field("type").unwrap().as_str().unwrap(), "stats");
+    let digest = stats.field("digest").unwrap().as_str().unwrap();
+    assert_eq!(digest.len(), 16);
+    assert!(digest.chars().all(|c| c.is_ascii_hexdigit()));
+    let prom = stats.field("prometheus").unwrap().as_str().unwrap();
+    check_prometheus_lines(prom);
+    assert!(prom.contains("# TYPE serve_served_total counter"));
+    assert!(prom.lines().any(|l| l == "serve_served_total 8"), "served counter missing");
+    let metrics = stats.field("metrics").unwrap();
+    assert_eq!(metrics.field("digest").unwrap().as_str().unwrap(), digest);
+    let served =
+        metrics.field("counters").unwrap().field("serve_served_total").unwrap().as_f64().unwrap();
+    assert_eq!(served, 8.0);
+
+    let dump = client.dump().unwrap();
+    assert_eq!(dump.field("type").unwrap().as_str().unwrap(), "dump");
+    let flight = dump.field("flight").unwrap();
+    assert_eq!(flight.field("retained").unwrap().as_usize().unwrap(), 8);
+    assert!(flight.field("exemplars").unwrap().as_arr().unwrap().len() == 8);
+
+    drop(client);
+    let report = server.shutdown().unwrap();
+    // The mid-run stats frame and the final report agree on the served count.
+    assert_eq!(report.requests, served as u64);
+    assert_eq!(report.unaccounted(), 0);
+}
+
+#[test]
+fn unknown_frame_types_answer_errors_and_keep_the_connection() {
+    let mut server = LiveServer::start(small_cfg()).unwrap();
+    let addr = server.listen().unwrap();
+    let mut stream = TcpStream::connect(addr).unwrap();
+
+    write_frame(&mut stream, &Json::obj(vec![("type", Json::str("bogus"))])).unwrap();
+    let reply = read_frame(&mut stream).unwrap().unwrap();
+    assert_eq!(reply.field("type").unwrap().as_str().unwrap(), "error");
+    assert!(reply.field("error").unwrap().as_str().unwrap().contains("bogus"));
+
+    // A non-string `type` is an error reply too, not a dropped connection.
+    write_frame(&mut stream, &Json::obj(vec![("type", Json::num(3.0))])).unwrap();
+    let reply = read_frame(&mut stream).unwrap().unwrap();
+    assert_eq!(reply.field("type").unwrap().as_str().unwrap(), "error");
+
+    // The connection survives both errors: a stats frame still answers.
+    write_frame(&mut stream, &Json::obj(vec![("type", Json::str("stats"))])).unwrap();
+    let reply = read_frame(&mut stream).unwrap().unwrap();
+    assert_eq!(reply.field("type").unwrap().as_str().unwrap(), "stats");
+
+    drop(stream);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn rolling_metrics_snapshots_land_on_disk() {
+    let path = std::env::temp_dir().join(format!("pimacolaba_metrics_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = small_cfg();
+    cfg.metrics_out = Some(path.to_string_lossy().into_owned());
+    cfg.metrics_interval_ms = 10;
+    let server = LiveServer::start(cfg).unwrap();
+    let client = server.client();
+    let rxs: Vec<_> = (0..20u64)
+        .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 64, 1, i)))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    // The snapshot thread overwrites the file every interval; wait for a
+    // parseable snapshot that has seen the traffic.
+    let mut snapshot = None;
+    for _ in 0..200 {
+        std::thread::sleep(Duration::from_millis(10));
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(snap) = Json::parse(text.trim()) {
+                let served = snap
+                    .get("counters")
+                    .and_then(|c| c.get("serve_served_total"))
+                    .and_then(|v| v.as_f64().ok());
+                if served == Some(20.0) {
+                    snapshot = Some(snap);
+                    break;
+                }
+            }
+        }
+    }
+    let snap = snapshot.expect("no rolling metrics snapshot captured the 20 served requests");
+    assert_eq!(snap.field("digest").unwrap().as_str().unwrap().len(), 16);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sampled_traces_reconcile_with_the_report() {
+    let mut cfg = small_cfg();
+    cfg.trace_sample = 1;
+    let server = LiveServer::start(cfg).unwrap();
+    let client = server.client();
+    let rxs: Vec<_> = (0..40u64)
+        .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 256, 2, i)))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.requests, 40);
+
+    // The reactor pushes each sampled request's spans contiguously:
+    // request root, admit/queue/execute phases, its passes, respond. Walk
+    // the buffer grouping by root and check the duration containment the
+    // span builder guarantees: Σ pass ≤ execute ≤ request.
+    fn check_group(root: Option<u64>, exec: u64, pass_sum: u64) {
+        if let Some(dur) = root {
+            assert!(pass_sum <= exec, "pass durations {pass_sum} exceed execute {exec}");
+            assert!(exec <= dur, "execute {exec} exceeds request span {dur}");
+        }
+    }
+    let (mut roots, mut cur_root, mut cur_exec, mut cur_pass) = (0u64, None, 0u64, 0u64);
+    for ev in &report.trace_events {
+        if ev.cat == "request" {
+            check_group(cur_root, cur_exec, cur_pass);
+            cur_root = Some(ev.dur_ns);
+            cur_exec = 0;
+            cur_pass = 0;
+            roots += 1;
+        } else if ev.name.starts_with("execute ") {
+            cur_exec = ev.dur_ns;
+        } else if ev.cat == "pass" {
+            cur_pass += ev.dur_ns;
+        }
+    }
+    check_group(cur_root, cur_exec, cur_pass);
+    assert_eq!(roots, 40, "every served request must have a root span at --trace-sample 1");
+
+    // The Chrome export is valid trace_event JSON: complete events with
+    // microsecond timestamps, one per span.
+    let trace = Json::parse(&pimacolaba::obs::chrome_trace(&report.trace_events).to_string())
+        .unwrap();
+    let events = trace.field("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), report.trace_events.len());
+    for ev in events {
+        assert_eq!(ev.field("ph").unwrap().as_str().unwrap(), "X");
+        assert!(ev.field("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(ev.field("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(ev.field("name").unwrap().as_str().is_ok());
+        assert!(ev.field("pid").unwrap().as_usize().is_ok());
+    }
+}
