@@ -9,6 +9,10 @@ drop. Schema: docs/BENCHMARKING.md.
 What is gated:
   * ``fft`` rows — matched on (kind, log2_n, threads); the metric is
     ``mpoints_per_s`` (higher is better).
+  * ``kernels`` rows — matched on (kernel, log2_n); the metric is
+    ``mpoints_per_s`` (higher is better). These are the single-thread
+    per-transform rows (``radix2-legacy`` vs ``hostkernel``), so a kernel
+    regression cannot hide behind batch-level parallelism.
   * ``cluster`` rows — matched on (shards, threads); the metric is
     ``throughput_rps`` (higher is better).
 
@@ -137,16 +141,22 @@ def main() -> int:
 
     fft_base = index_rows(base, "fft", ("kind", "log2_n", "threads"), "mpoints_per_s")
     fft_cand = index_rows(cand, "fft", ("kind", "log2_n", "threads"), "mpoints_per_s")
+    kr_base = index_rows(base, "kernels", ("kernel", "log2_n"), "mpoints_per_s")
+    kr_cand = index_rows(cand, "kernels", ("kernel", "log2_n"), "mpoints_per_s")
     cl_base = index_rows(base, "cluster", ("shards", "threads"), "throughput_rps")
     cl_cand = index_rows(cand, "cluster", ("shards", "threads"), "throughput_rps")
 
-    if not fft_base and not cl_base:
+    if not fft_base and not kr_base and not cl_base:
         print("bench-gate: SKIP — baseline has no comparable rows")
         return 0
 
     regressions: list[str] = []
     rows: list[tuple] = []
-    for name, b, c in (("fft", fft_base, fft_cand), ("cluster", cl_base, cl_cand)):
+    for name, b, c in (
+        ("fft", fft_base, fft_cand),
+        ("kernels", kr_base, kr_cand),
+        ("cluster", cl_base, cl_cand),
+    ):
         r, section_rows = compare(name, b, c, args.max_drop_pct)
         regressions.extend(r)
         rows.extend(section_rows)

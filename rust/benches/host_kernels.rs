@@ -1,0 +1,51 @@
+//! Host kernel micro-benchmark: the tuned [`HostKernel`] plans (radix-4
+//! DIF/DIT, six-step above 2^16) against the radix-2 reference, single
+//! thread, one transform at a time.
+//!
+//! The recorded perf-trajectory artifact comes from the CLI instead
+//! (`pimacolaba bench` → `BENCH_runtime.json` `kernels` section, see
+//! docs/BENCHMARKING.md); this target is the quick
+//! `cargo bench --bench host_kernels` loop for working on the kernels
+//! themselves.
+
+use pimacolaba::fft::{fft_soa, BufferArena, HostKernel, SoaVec};
+use pimacolaba::util::benchkit::Bench;
+
+fn main() {
+    let bench = Bench::default();
+    let arena = BufferArena::new();
+    // Per-butterfly trig makes the legacy reference painful past 2^18;
+    // the CLI bench caps legacy rows the same way.
+    const LEGACY_MAX_LOG2: u32 = 18;
+    for ls in [8u32, 12, 16, 18, 20] {
+        let n = 1usize << ls;
+        let reps = (1usize << 21) / n;
+        let x = SoaVec::random(n, 42 + ls as u64);
+        let mut legacy = None;
+        if ls <= LEGACY_MAX_LOG2 {
+            let stats = bench.run(&format!("radix2-legacy/2^{ls}"), || {
+                (0..reps).map(|_| fft_soa(&x).len()).sum::<usize>()
+            });
+            legacy = Some(stats.mean_ns());
+        }
+        let kernel = HostKernel::plan(n).expect("plan");
+        let stats = bench.run(&format!("hostkernel/2^{ls}"), || {
+            (0..reps)
+                .map(|_| {
+                    let y = kernel.fft(&x, &arena);
+                    let len = y.len();
+                    arena.give_soa(y);
+                    len
+                })
+                .sum::<usize>()
+        });
+        if let Some(base) = legacy {
+            println!("  speedup vs radix2-legacy: {:.2}x", base / stats.mean_ns());
+        }
+    }
+    let stats = arena.stats();
+    println!(
+        "arena: {} checkouts, {} allocs ({} bytes), {} recycled",
+        stats.checkouts, stats.allocs, stats.alloc_bytes, stats.recycled
+    );
+}

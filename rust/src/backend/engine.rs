@@ -20,7 +20,7 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use crate::config::SystemConfig;
-use crate::fft::{is_pow2, log2, pack_real, unpack_real_spectrum, SoaVec};
+use crate::fft::{is_pow2, log2, pack_real, unpack_real_spectrum, ArenaStats, BufferArena, SoaVec};
 use crate::gpu_model::babelstream_bw_bytes_per_ns;
 use crate::metrics::DataMovement;
 use crate::pimc::PassConfig;
@@ -184,6 +184,7 @@ pub struct FftEngineBuilder {
     parallelism: Parallelism,
     pool: Option<Arc<ThreadPool>>,
     warm: Option<Arc<WarmPlans>>,
+    arena: Option<Arc<BufferArena>>,
 }
 
 impl FftEngineBuilder {
@@ -243,6 +244,16 @@ impl FftEngineBuilder {
         self
     }
 
+    /// Share a scratch/output [`BufferArena`] across the engine, its
+    /// default host backend, and the caller. The serve tier passes one
+    /// arena per server so shard workers recycle request payloads through
+    /// it and the steady-state FFT execute path stops allocating
+    /// (default: a fresh private arena per engine).
+    pub fn arena(mut self, arena: Arc<BufferArena>) -> Self {
+        self.arena = Some(arena);
+        self
+    }
+
     /// Pre-computed plan-cache warm table, consulted on cache misses
     /// instead of re-running the planner. The table must come from an
     /// engine configured identically (same system, passes and default
@@ -261,8 +272,9 @@ impl FftEngineBuilder {
             opt.passes()
         });
         let pool = self.pool.or_else(|| self.parallelism.pool());
+        let arena = self.arena.unwrap_or_default();
         let gpu = self.gpu.unwrap_or_else(|| {
-            let mut host = HostFftBackend::new(self.gpu_cost);
+            let mut host = HostFftBackend::new(self.gpu_cost).with_arena(Arc::clone(&arena));
             if let Some(p) = &pool {
                 host = host.with_pool(Arc::clone(p));
             }
@@ -275,6 +287,7 @@ impl FftEngineBuilder {
             gpu,
             pim,
             pool,
+            arena,
             warm: self.warm,
             plan_cache: HashMap::new(),
             cache_hits: 0,
@@ -297,6 +310,9 @@ pub struct FftEngine {
     pim: Box<dyn ComputeBackend>,
     /// Work-stealing pool for data shuffles between passes; `None` = inline.
     pool: Option<Arc<ThreadPool>>,
+    /// Scratch/output arena shared with the default host backend; workload
+    /// intermediates are returned here so repeated shapes recycle buffers.
+    arena: Arc<BufferArena>,
     /// Optional pre-computed plan table consulted on cache misses.
     warm: Option<Arc<WarmPlans>>,
     plan_cache: HashMap<(usize, usize, PassConfig), (CollabPlan, PlanEval)>,
@@ -439,20 +455,23 @@ impl FftEngine {
                 //    row split fans out per worker when a pool is present).
                 let rows = self.par_gather(zs.len() * m1, m2, |idx| {
                     let (z, k2) = (&zs[idx / m1], idx % m1);
-                    SoaVec::new(
-                        z.re[k2 * m2..(k2 + 1) * m2].to_vec(),
-                        z.im[k2 * m2..(k2 + 1) * m2].to_vec(),
-                    )
+                    let mut row = self.arena.take_soa(m2);
+                    row.re.copy_from_slice(&z.re[k2 * m2..(k2 + 1) * m2]);
+                    row.im.copy_from_slice(&z.im[k2 * m2..(k2 + 1) * m2]);
+                    row
                 });
+                let sigs = zs.len();
+                self.arena.give_soa_batch(zs);
                 let rows_out = self.pim.execute(
                     &PlanComponent::PimTile { m2, count: rows.len(), passes: plan.passes },
                     &rows,
                 )?;
                 ensure!(rows_out.len() == rows.len(), "PIM backend dropped tile outputs");
+                self.arena.give_soa_batch(rows);
                 // 3) Gather X[k1·m1 + k2] = O[k2][k1].
-                self.par_gather(zs.len(), n, |sig| {
+                let outputs = self.par_gather(sigs, n, |sig| {
                     let chunk = &rows_out[sig * m1..(sig + 1) * m1];
-                    let mut o = SoaVec::zeros(n);
+                    let mut o = self.arena.take_soa(n);
                     for (k2, row) in chunk.iter().enumerate() {
                         for k1 in 0..m2 {
                             let (r, i) = row.get(k1);
@@ -460,7 +479,9 @@ impl FftEngine {
                         }
                     }
                     o
-                })
+                });
+                self.arena.give_soa_batch(rows_out);
+                outputs
             }
         };
         ensure!(outputs.len() == signals.len(), "backend returned a wrong output count");
@@ -560,6 +581,18 @@ impl FftEngine {
         self.pool.as_ref()
     }
 
+    /// The engine's scratch/output arena. Callers that are done with
+    /// outputs can return them here ([`BufferArena::give_soa_batch`]) to
+    /// keep the steady state allocation-free.
+    pub fn arena(&self) -> &Arc<BufferArena> {
+        &self.arena
+    }
+
+    /// Lifetime counters of the shared arena.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
+    }
+
     /// Fan `len` independent index-ordered computations out on the pool
     /// when the shuffle moves enough points to pay for it; run inline
     /// otherwise. Either way results are index-ordered and each item is a
@@ -589,17 +622,18 @@ impl FftEngine {
         let rows_in = self.par_gather(batch * r, c, |idx| {
             let (img, row) = (idx / r, idx % r);
             let s = &signals[img];
-            SoaVec::new(
-                s.re[row * c..(row + 1) * c].to_vec(),
-                s.im[row * c..(row + 1) * c].to_vec(),
-            )
+            let mut v = self.arena.take_soa(c);
+            v.re.copy_from_slice(&s.re[row * c..(row + 1) * c]);
+            v.im.copy_from_slice(&s.im[row * c..(row + 1) * c]);
+            v
         });
         let rows_out = self.run(c, &rows_in)?.outputs;
+        self.arena.give_soa_batch(rows_in);
         let bands_per_img = c.div_ceil(TILE);
         let bands = self.par_gather(batch * bands_per_img, r * TILE, |idx| {
             let (img, band) = (idx / bands_per_img, idx % bands_per_img);
             let (c0, c1) = (band * TILE, (band * TILE + TILE).min(c));
-            let mut cols: Vec<SoaVec> = (c0..c1).map(|_| SoaVec::zeros(r)).collect();
+            let mut cols: Vec<SoaVec> = (c0..c1).map(|_| self.arena.take_soa(r)).collect();
             for row in 0..r {
                 let src = &rows_out[img * r + row];
                 for (bi, col) in (c0..c1).enumerate() {
@@ -612,9 +646,11 @@ impl FftEngine {
         // Bands flatten back to (img, col) order — the same order the
         // untiled gather produced.
         let cols_in: Vec<SoaVec> = bands.into_iter().flatten().collect();
+        self.arena.give_soa_batch(rows_out);
         let cols_out = self.run(r, &cols_in)?.outputs;
+        self.arena.give_soa_batch(cols_in);
         let out = self.par_gather(batch, n, |img| {
-            let mut o = SoaVec::zeros(n);
+            let mut o = self.arena.take_soa(n);
             for col in 0..c {
                 let src = &cols_out[img * c + col];
                 for row in 0..r {
@@ -624,6 +660,7 @@ impl FftEngine {
             }
             o
         });
+        self.arena.give_soa_batch(cols_out);
         Ok(out)
     }
 
@@ -640,11 +677,15 @@ impl FftEngine {
         let lines = self.par_gather(batch * d0 * d1, d2, |idx| {
             let (b, l) = (idx / (d0 * d1), idx % (d0 * d1));
             let s = &signals[b];
-            SoaVec::new(s.re[l * d2..(l + 1) * d2].to_vec(), s.im[l * d2..(l + 1) * d2].to_vec())
+            let mut v = self.arena.take_soa(d2);
+            v.re.copy_from_slice(&s.re[l * d2..(l + 1) * d2]);
+            v.im.copy_from_slice(&s.im[l * d2..(l + 1) * d2]);
+            v
         });
         let done = self.run(d2, &lines)?.outputs;
+        self.arena.give_soa_batch(lines);
         let data = self.par_gather(batch, n, |b| {
-            let mut s = SoaVec::zeros(n);
+            let mut s = self.arena.take_soa(n);
             for l in 0..d0 * d1 {
                 let line = &done[b * d0 * d1 + l];
                 s.re[l * d2..(l + 1) * d2].copy_from_slice(&line.re);
@@ -652,13 +693,14 @@ impl FftEngine {
             }
             s
         });
+        self.arena.give_soa_batch(done);
 
         // Axis 1: gather stride-d2 lines per (i0, i2).
         let lines = self.par_gather(batch * d0 * d2, d1, |idx| {
             let (b, rem) = (idx / (d0 * d2), idx % (d0 * d2));
             let (i0, i2) = (rem / d2, rem % d2);
             let s = &data[b];
-            let mut v = SoaVec::zeros(d1);
+            let mut v = self.arena.take_soa(d1);
             for i1 in 0..d1 {
                 let (re, im) = s.get((i0 * d1 + i1) * d2 + i2);
                 v.set(i1, re, im);
@@ -666,8 +708,10 @@ impl FftEngine {
             v
         });
         let done = self.run(d1, &lines)?.outputs;
+        self.arena.give_soa_batch(lines);
+        self.arena.give_soa_batch(data);
         let data = self.par_gather(batch, n, |b| {
-            let mut s = SoaVec::zeros(n);
+            let mut s = self.arena.take_soa(n);
             for i0 in 0..d0 {
                 for i2 in 0..d2 {
                     let line = &done[(b * d0 + i0) * d2 + i2];
@@ -679,13 +723,14 @@ impl FftEngine {
             }
             s
         });
+        self.arena.give_soa_batch(done);
 
         // Axis 0: gather stride-(d1·d2) lines per (i1, i2).
         let lines = self.par_gather(batch * d1 * d2, d0, |idx| {
             let (b, rem) = (idx / (d1 * d2), idx % (d1 * d2));
             let (i1, i2) = (rem / d2, rem % d2);
             let s = &data[b];
-            let mut v = SoaVec::zeros(d0);
+            let mut v = self.arena.take_soa(d0);
             for i0 in 0..d0 {
                 let (re, im) = s.get((i0 * d1 + i1) * d2 + i2);
                 v.set(i0, re, im);
@@ -693,8 +738,10 @@ impl FftEngine {
             v
         });
         let done = self.run(d0, &lines)?.outputs;
-        Ok(self.par_gather(batch, n, |b| {
-            let mut s = SoaVec::zeros(n);
+        self.arena.give_soa_batch(lines);
+        self.arena.give_soa_batch(data);
+        let out = self.par_gather(batch, n, |b| {
+            let mut s = self.arena.take_soa(n);
             for i1 in 0..d1 {
                 for i2 in 0..d2 {
                     let line = &done[(b * d1 + i1) * d2 + i2];
@@ -705,7 +752,9 @@ impl FftEngine {
                 }
             }
             s
-        }))
+        });
+        self.arena.give_soa_batch(done);
+        Ok(out)
     }
 
     /// §7.1 packing trick: the `re` half packs into `n/2` complex points;
@@ -718,7 +767,10 @@ impl FftEngine {
             .collect();
         let packed = packed?;
         let spectra = self.run(n / 2, &packed)?.outputs;
-        Ok(self.par_gather(spectra.len(), n / 2, |i| unpack_real_spectrum(&spectra[i])))
+        self.arena.give_soa_batch(packed);
+        let out = self.par_gather(spectra.len(), n / 2, |i| unpack_real_spectrum(&spectra[i]));
+        self.arena.give_soa_batch(spectra);
+        Ok(out)
     }
 
     /// Convolution theorem: `y = ifft(fft(x) ∘ fft(h))`, with the inverse
@@ -732,7 +784,7 @@ impl FftEngine {
         let prods = self.par_gather(pairs, n, |p| {
             let x = &spectra[2 * p];
             let h = &spectra[2 * p + 1];
-            let mut v = SoaVec::zeros(n);
+            let mut v = self.arena.take_soa(n);
             for k in 0..n {
                 let (xr, xi) = x.get(k);
                 let (hr, hi) = h.get(k);
@@ -742,15 +794,21 @@ impl FftEngine {
             }
             v
         });
+        self.arena.give_soa_batch(spectra);
         let inv = self.run(n, &prods)?.outputs;
+        self.arena.give_soa_batch(prods);
         let scale = 1.0 / n as f32;
-        Ok(self.par_gather(inv.len(), n, |i| {
+        let out = self.par_gather(inv.len(), n, |i| {
             let y = &inv[i];
-            SoaVec::new(
-                y.re.iter().map(|v| v * scale).collect(),
-                y.im.iter().map(|v| -v * scale).collect(),
-            )
-        }))
+            let mut v = self.arena.take_soa(n);
+            for k in 0..n {
+                v.re[k] = y.re[k] * scale;
+                v.im[k] = -y.im[k] * scale;
+            }
+            v
+        });
+        self.arena.give_soa_batch(inv);
+        Ok(out)
     }
 
     /// Hop-windowed frames, transformed as one batched FFT of the window
@@ -761,18 +819,24 @@ impl FftEngine {
         let frames_in = self.par_gather(signals.len() * frames, w, |idx| {
             let (i, f) = (idx / frames, idx % frames);
             let (s, a) = (&signals[i], f * hop);
-            SoaVec::new(s.re[a..a + w].to_vec(), s.im[a..a + w].to_vec())
+            let mut v = self.arena.take_soa(w);
+            v.re.copy_from_slice(&s.re[a..a + w]);
+            v.im.copy_from_slice(&s.im[a..a + w]);
+            v
         });
         let done = self.run(w, &frames_in)?.outputs;
-        Ok(self.par_gather(signals.len(), frames * w, |i| {
-            let mut spec = SoaVec::zeros(frames * w);
+        self.arena.give_soa_batch(frames_in);
+        let out = self.par_gather(signals.len(), frames * w, |i| {
+            let mut spec = self.arena.take_soa(frames * w);
             for f in 0..frames {
                 let fr = &done[i * frames + f];
                 spec.re[f * w..(f + 1) * w].copy_from_slice(&fr.re);
                 spec.im[f * w..(f + 1) * w].copy_from_slice(&fr.im);
             }
             spec
-        }))
+        });
+        self.arena.give_soa_batch(done);
+        Ok(out)
     }
 }
 

@@ -1,19 +1,27 @@
-//! Host reference backend: executes every component with the host FFT
-//! oracle. It stands in for the GPU when no AOT artifacts are loaded (tests,
+//! Host reference backend: executes every component on the tuned host
+//! kernel layer ([`HostKernel`] — radix-4/six-step with memoized twiddles).
+//! It stands in for the GPU when no AOT artifacts are loaded (tests,
 //! figures, fresh checkouts) and doubles as the conformance reference for
-//! every other backend.
+//! every other backend; the textbook radix-2 [`crate::fft::fft_soa`] stays
+//! the *oracle* the kernels themselves are validated against.
 //!
 //! With a [`ThreadPool`] attached ([`HostFftBackend::with_pool`], wired by
 //! the engine builder's `parallelism` knob) the batched 1D passes fan out
 //! per signal across the pool. Every signal's FFT is an independent pure
 //! function, so outputs are bit-identical for every thread count.
+//!
+//! All scratch and output buffers come from the backend's [`BufferArena`]
+//! (shareable via [`HostFftBackend::with_arena`]); callers that recycle
+//! outputs back into the same arena — the serve tier does — execute FFTs
+//! with zero steady-state heap allocation.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::config::SystemConfig;
-use crate::fft::{fft_soa, FourStep, SoaVec};
+use crate::fft::{gpu_stage_fast, BufferArena, FourStep, HostKernel, SoaVec};
 use crate::runtime::{ThreadPool, MIN_PAR_POINTS};
 
 use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
@@ -25,11 +33,15 @@ use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
 pub struct HostFftBackend {
     cost: GpuCostModel,
     pool: Option<Arc<ThreadPool>>,
+    arena: Arc<BufferArena>,
+    /// Local mirror of the process-wide kernel plan cache so the execute
+    /// hot path skips the global lock.
+    kernels: HashMap<usize, Arc<HostKernel>>,
 }
 
 impl HostFftBackend {
     pub fn new(cost: GpuCostModel) -> Self {
-        Self { cost, pool: None }
+        Self { cost, ..Self::default() }
     }
 
     /// Batch-parallel execution over `pool` (see the module docs).
@@ -38,8 +50,28 @@ impl HostFftBackend {
         self
     }
 
+    /// Share a scratch/output arena (the serve tier passes one arena to
+    /// every shard's backend and returns spent payload buffers to it).
+    pub fn with_arena(mut self, arena: Arc<BufferArena>) -> Self {
+        self.arena = arena;
+        self
+    }
+
+    pub fn arena(&self) -> &Arc<BufferArena> {
+        &self.arena
+    }
+
     pub fn cost_model(&self) -> GpuCostModel {
         self.cost
+    }
+
+    fn kernel(&mut self, n: usize) -> Result<Arc<HostKernel>> {
+        if let Some(k) = self.kernels.get(&n) {
+            return Ok(Arc::clone(k));
+        }
+        let k = HostKernel::plan(n)?;
+        self.kernels.insert(n, Arc::clone(&k));
+        Ok(k)
     }
 
     /// Map `f` over the batch, fanning out when the batch carries enough
@@ -82,15 +114,25 @@ impl ComputeBackend for HostFftBackend {
             inputs.iter().all(|s| s.len() == component.input_len()),
             "input length mismatch for {component}"
         );
+        let arena = Arc::clone(&self.arena);
         match *component {
-            PlanComponent::FullFft { n, .. } => Ok(self.par_map(inputs, n, fft_soa)),
+            PlanComponent::FullFft { n, .. } => {
+                let k = self.kernel(n)?;
+                Ok(self.par_map(inputs, n, |s| k.fft(s, &arena)))
+            }
             PlanComponent::GpuStage { n, m1, m2, .. } => {
                 let fs = FourStep::new(n, m1, m2);
-                Ok(self.par_map(inputs, n, |s| fs.gpu_component_ref(s)))
+                self.kernel(m1)?; // warm the column-kernel plan outside the fan-out
+                Ok(self.par_map(inputs, n, |s| {
+                    gpu_stage_fast(&fs, s, &arena).expect("sizes validated above")
+                }))
             }
             // A PIM-FFT-Tile is just a batch of small row FFTs; the host
             // reference computes them exactly.
-            PlanComponent::PimTile { m2, .. } => Ok(self.par_map(inputs, m2, fft_soa)),
+            PlanComponent::PimTile { m2, .. } => {
+                let k = self.kernel(m2)?;
+                Ok(self.par_map(inputs, m2, |s| k.fft(s, &arena)))
+            }
         }
     }
 }
@@ -98,6 +140,7 @@ impl ComputeBackend for HostFftBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::fft_soa;
     use crate::routines::OptLevel;
 
     #[test]
@@ -106,7 +149,24 @@ mod tests {
         let xs: Vec<SoaVec> = (0..3).map(|i| SoaVec::random(64, 9 + i)).collect();
         let ys = b.execute(&PlanComponent::FullFft { n: 64, batch: 3 }, &xs).unwrap();
         for (x, y) in xs.iter().zip(&ys) {
-            assert!(y.max_abs_diff(&fft_soa(x)) == 0.0);
+            // The radix-4 kernel rounds differently from the radix-2
+            // reference; both approximate the DFT to f32 precision.
+            let d = y.max_abs_diff(&fft_soa(x));
+            assert!(d < 1e-3 * 8.0, "diff {d}");
+        }
+    }
+
+    #[test]
+    fn gpu_stage_matches_reference_component() {
+        let (n, m1, m2) = (1024usize, 128, 8);
+        let mut b = HostFftBackend::default();
+        let xs: Vec<SoaVec> = (0..2).map(|i| SoaVec::random(n, 21 + i)).collect();
+        let zs =
+            b.execute(&PlanComponent::GpuStage { n, m1, m2, batch: xs.len() }, &xs).unwrap();
+        let fs = FourStep::new(n, m1, m2);
+        for (x, z) in xs.iter().zip(&zs) {
+            let d = z.max_abs_diff(&fs.gpu_component_ref(x));
+            assert!(d < 1e-3 * (n as f32).sqrt(), "diff {d}");
         }
     }
 
@@ -150,6 +210,24 @@ mod tests {
             let b = par.execute(&component, &xs).unwrap();
             assert_eq!(a, b, "{component} differs between sequential and pooled");
         }
+    }
+
+    #[test]
+    fn recycled_outputs_make_steady_state_allocation_free() {
+        let mut b = HostFftBackend::default();
+        let arena = Arc::clone(b.arena());
+        let xs: Vec<SoaVec> = (0..4).map(|i| SoaVec::random(128, 3 + i)).collect();
+        let component = PlanComponent::FullFft { n: 128, batch: xs.len() };
+        for _ in 0..2 {
+            arena.give_soa_batch(b.execute(&component, &xs).unwrap()); // warmup
+        }
+        let warm = arena.stats().alloc_bytes;
+        for _ in 0..10 {
+            arena.give_soa_batch(b.execute(&component, &xs).unwrap());
+        }
+        let steady = arena.stats();
+        assert_eq!(steady.alloc_bytes, warm, "steady-state execute must not allocate");
+        assert!(steady.recycled > 0);
     }
 
     #[test]

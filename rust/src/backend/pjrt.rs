@@ -6,7 +6,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::config::SystemConfig;
-use crate::fft::{fft_soa, FourStep, SoaVec};
+use crate::fft::{gpu_stage_fast, BufferArena, FourStep, HostKernel, SoaVec};
 use crate::runtime::Registry;
 
 use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
@@ -23,6 +23,8 @@ use super::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
 pub struct PjrtGpuBackend {
     registry: Registry,
     cost: GpuCostModel,
+    /// Scratch for the host-kernel fallback paths.
+    arena: BufferArena,
 }
 
 /// Whether compiled HLO can actually execute in this build.
@@ -30,11 +32,11 @@ const PJRT_AVAILABLE: bool = cfg!(feature = "pjrt");
 
 impl PjrtGpuBackend {
     pub fn new(registry: Registry) -> Self {
-        Self { registry, cost: GpuCostModel::default() }
+        Self::with_cost_model(registry, GpuCostModel::default())
     }
 
     pub fn with_cost_model(registry: Registry, cost: GpuCostModel) -> Self {
-        Self { registry, cost }
+        Self { registry, cost, arena: BufferArena::new() }
     }
 
     pub fn registry(&self) -> &Registry {
@@ -140,8 +142,9 @@ impl ComputeBackend for PjrtGpuBackend {
                     self.run_full_artifact(n, inputs)
                 } else {
                     // Sizes below the smallest artifact (or a pjrt-less
-                    // build): host reference.
-                    Ok(inputs.iter().map(fft_soa).collect())
+                    // build): tuned host kernel.
+                    let k = HostKernel::plan(n)?;
+                    Ok(inputs.iter().map(|s| k.fft(s, &self.arena)).collect())
                 }
             }
             PlanComponent::GpuStage { n, m1, m2, .. } => {
@@ -149,7 +152,7 @@ impl ComputeBackend for PjrtGpuBackend {
                     self.run_stage_artifact(n, m1, m2, inputs)
                 } else {
                     let fs = FourStep::new(n, m1, m2);
-                    Ok(inputs.iter().map(|s| fs.gpu_component_ref(s)).collect())
+                    inputs.iter().map(|s| gpu_stage_fast(&fs, s, &self.arena)).collect()
                 }
             }
             PlanComponent::PimTile { .. } => {

@@ -1,0 +1,261 @@
+//! Reusable scratch-buffer arena for the FFT hot path.
+//!
+//! Every layer of the execute path — kernel scratch, six-step transpose
+//! planes, engine intermediates, serve-tier signal/output payloads — checks
+//! `f32` buffers out of a shared [`BufferArena`] and returns them when done,
+//! so steady-state serving stops paying a heap allocation per request. The
+//! arena is a set of power-of-two size-class free lists behind one mutex:
+//! `take(len)` rounds `len` up to the next power of two and pops that
+//! bucket (or allocates with exactly that capacity on a miss), `give`
+//! buckets a spent buffer by the largest power of two its capacity can
+//! serve. The round-trip invariant — a recycled buffer's capacity always
+//! covers its bucket's class — means a hit never reallocates.
+//!
+//! The arena is observable: [`ArenaStats`] counts checkouts, fresh
+//! allocations (and their bytes), and recycles. The serve tier exports
+//! these through the metrics registry (`arena_checkout_total`,
+//! `arena_alloc_bytes_total`, `arena_recycled_total`) and the harness
+//! asserts `alloc_bytes` stops growing after warmup — the steady-state
+//! zero-alloc proof.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::SoaVec;
+
+/// Buckets cover 2^0 ..= 2^(NUM_CLASSES-1) elements: 2^31 f32s (8 GiB) is
+/// far beyond any FFT size this repo models.
+const NUM_CLASSES: usize = 32;
+
+/// Monotonic arena counters (all lifetime totals, never reset).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers handed out by [`BufferArena::take`].
+    pub checkouts: u64,
+    /// Checkouts that missed every free list and heap-allocated.
+    pub allocs: u64,
+    /// Bytes heap-allocated by those misses.
+    pub alloc_bytes: u64,
+    /// Checkouts satisfied from a free list (no allocation).
+    pub recycled: u64,
+    /// Buffers returned by [`BufferArena::give`].
+    pub returns: u64,
+}
+
+/// Power-of-two-bucketed free lists of `Vec<f32>` scratch buffers.
+///
+/// Thread-safe and cheap to share (`Arc<BufferArena>`); the mutex guards
+/// short list operations only, never FFT work.
+#[derive(Debug, Default)]
+pub struct BufferArena {
+    classes: Mutex<ClassLists>,
+    checkouts: AtomicU64,
+    allocs: AtomicU64,
+    alloc_bytes: AtomicU64,
+    recycled: AtomicU64,
+    returns: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct ClassLists {
+    /// `lists[c]` holds buffers whose capacity is >= 2^c elements.
+    lists: Vec<Vec<Vec<f32>>>,
+}
+
+impl ClassLists {
+    fn list(&mut self, class: usize) -> &mut Vec<Vec<f32>> {
+        if self.lists.len() <= class {
+            self.lists.resize_with(class + 1, Vec::new);
+        }
+        &mut self.lists[class]
+    }
+}
+
+/// Size class of a requested length: index of the covering power of two.
+fn class_of(len: usize) -> usize {
+    let c = len.max(1).next_power_of_two().trailing_zeros() as usize;
+    debug_assert!(c < NUM_CLASSES, "arena request of {len} f32s is out of range");
+    c
+}
+
+impl BufferArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements. Reuses a
+    /// recycled buffer of the covering size class when one is available;
+    /// otherwise allocates one with that class's full capacity so the next
+    /// recycle round-trips without reallocation.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let class = class_of(len);
+        let recycled = self.classes.lock().unwrap().list(class).pop();
+        match recycled {
+            Some(mut v) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                let cap = 1usize << class;
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                self.alloc_bytes
+                    .fetch_add((cap * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+                let mut v = Vec::with_capacity(cap);
+                v.resize(len, 0.0);
+                v
+            }
+        }
+    }
+
+    /// Return a spent buffer for reuse. Buffers too small to serve the
+    /// smallest class (capacity 0) are dropped.
+    pub fn give(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        // Largest class this capacity can fully serve: floor(log2(cap)).
+        let class =
+            (usize::BITS - 1 - v.capacity().leading_zeros()) as usize;
+        self.classes.lock().unwrap().list(class).push(v);
+    }
+
+    /// Check out an [`SoaVec`] (two planes of `len`).
+    pub fn take_soa(&self, len: usize) -> SoaVec {
+        SoaVec { re: self.take(len), im: self.take(len) }
+    }
+
+    /// Return an [`SoaVec`]'s planes for reuse.
+    pub fn give_soa(&self, v: SoaVec) {
+        self.give(v.re);
+        self.give(v.im);
+    }
+
+    /// Return a batch of [`SoaVec`]s.
+    pub fn give_soa_batch(&self, vs: Vec<SoaVec>) {
+        for v in vs {
+            self.give_soa(v);
+        }
+    }
+
+    /// Snapshot the lifetime counters.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+            allocs: self.allocs.load(Ordering::Relaxed),
+            alloc_bytes: self.alloc_bytes.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_sized() {
+        let a = BufferArena::new();
+        let v = a.take(100);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert_eq!(v.capacity(), 128);
+    }
+
+    #[test]
+    fn round_trip_reuses_without_allocating() {
+        let a = BufferArena::new();
+        let mut v = a.take(64);
+        v[0] = 3.5; // dirty it
+        let cap = v.capacity();
+        a.give(v);
+        let v2 = a.take(64);
+        assert_eq!(v2.capacity(), cap, "recycled buffer must not reallocate");
+        assert!(v2.iter().all(|&x| x == 0.0), "recycled buffer must be re-zeroed");
+        let s = a.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.allocs, 1);
+        assert_eq!(s.recycled, 1);
+        assert_eq!(s.returns, 1);
+        assert_eq!(s.alloc_bytes, 128 * 4);
+    }
+
+    #[test]
+    fn smaller_request_reuses_larger_class_buffer_only_if_same_class() {
+        let a = BufferArena::new();
+        a.give(vec![0.0f32; 256]); // lands in class 8
+        let v = a.take(200); // class 8 (next_pow2(200)=256)
+        assert_eq!(v.len(), 200);
+        assert_eq!(a.stats().recycled, 1);
+        // class-4 request cannot see class-8 leftovers
+        let w = a.take(16);
+        assert_eq!(w.len(), 16);
+        assert_eq!(a.stats().allocs, 1);
+    }
+
+    #[test]
+    fn odd_capacity_buckets_by_floor_pow2() {
+        let a = BufferArena::new();
+        let mut v = Vec::with_capacity(100); // floor class 6 (64)
+        v.resize(100, 0.0f32);
+        a.give(v);
+        // A class-6 request (<= 64 elements) can use it without realloc.
+        let got = a.take(64);
+        assert!(got.capacity() >= 64);
+        assert_eq!(a.stats().recycled, 1);
+    }
+
+    #[test]
+    fn soa_round_trip() {
+        let a = BufferArena::new();
+        let s = a.take_soa(32);
+        assert_eq!((s.re.len(), s.im.len()), (32, 32));
+        a.give_soa(s);
+        let _ = a.take_soa(32);
+        assert_eq!(a.stats().recycled, 2);
+    }
+
+    #[test]
+    fn steady_state_allocates_nothing() {
+        let a = BufferArena::new();
+        // Warmup: one request's worth of buffers.
+        for _ in 0..3 {
+            let bufs: Vec<SoaVec> = (0..4).map(|_| a.take_soa(128)).collect();
+            a.give_soa_batch(bufs);
+        }
+        let warm = a.stats();
+        for _ in 0..50 {
+            let bufs: Vec<SoaVec> = (0..4).map(|_| a.take_soa(128)).collect();
+            a.give_soa_batch(bufs);
+        }
+        let steady = a.stats();
+        assert_eq!(steady.alloc_bytes, warm.alloc_bytes, "steady state must not allocate");
+        assert_eq!(steady.allocs, warm.allocs);
+        assert!(steady.recycled > warm.recycled);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let a = Arc::new(BufferArena::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        let v = a.take(64);
+                        a.give(v);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.stats().checkouts, 80);
+    }
+}

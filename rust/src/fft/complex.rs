@@ -45,6 +45,16 @@ impl SoaVec {
     /// Deterministic pseudo-random test signal (xorshift; no rand dep here
     /// so the fft module stays self-contained for doctests).
     pub fn random(n: usize, seed: u64) -> Self {
+        let mut out = Self::zeros(n);
+        out.fill_random(seed);
+        out
+    }
+
+    /// Overwrite this buffer in place with the [`Self::random`] signal for
+    /// `seed` — bit-identical to a fresh `random(self.len(), seed)`, so a
+    /// recycled arena buffer reproduces a payload exactly without
+    /// allocating.
+    pub fn fill_random(&mut self, seed: u64) {
         let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
         let mut next = move || {
             state ^= state << 13;
@@ -53,9 +63,12 @@ impl SoaVec {
             // map to [-1, 1)
             (state >> 11) as f32 / (1u64 << 53) as f32 * 2.0 - 1.0
         };
-        let re = (0..n).map(|_| next()).collect();
-        let im = (0..n).map(|_| next()).collect();
-        Self { re, im }
+        for r in &mut self.re {
+            *r = next();
+        }
+        for i in &mut self.im {
+            *i = next();
+        }
     }
 
     /// Max absolute difference against another buffer (re and im pooled).

@@ -33,6 +33,16 @@ impl FourStep {
         Self { n, m1, m2 }
     }
 
+    /// The near-square factorization `m1 = 2^⌈log2(n)/2⌉` the six-step
+    /// host kernel uses: both factors are within 2× of √n, so each row
+    /// FFT's working set is ~√n points.
+    pub fn balanced(n: usize) -> Self {
+        assert!(is_pow2(n), "sizes must be powers of two");
+        let l = super::log2(n);
+        let m1 = 1usize << ((l + 1) / 2);
+        Self::new(n, m1, n / m1)
+    }
+
     /// Inter-factor twiddle `W_N^(k2·n1)` for matrix position (k2, n1).
     pub fn twiddle(&self, k2: usize, n1: usize) -> (f32, f32) {
         let ang = -2.0 * std::f64::consts::PI * ((k2 * n1) % self.n) as f64 / self.n as f64;
@@ -118,6 +128,13 @@ mod tests {
         let x = SoaVec::random(64, 5);
         let got = fs.fft_ref(&x);
         assert!(got.max_abs_diff(&fft_soa(&x)) < 1e-3);
+    }
+
+    #[test]
+    fn balanced_splits_near_square() {
+        assert_eq!(FourStep::balanced(1 << 16), FourStep::new(1 << 16, 256, 256));
+        assert_eq!(FourStep::balanced(1 << 17), FourStep::new(1 << 17, 512, 256));
+        assert_eq!(FourStep::balanced(4), FourStep::new(4, 2, 2));
     }
 
     #[test]

@@ -1,0 +1,691 @@
+//! Fast host FFT kernels: the tuned baseline the PIM comparison must beat.
+//!
+//! [`HostKernel`] is a per-size plan object, memoized process-wide, that
+//! replaces the textbook radix-2 [`super::fft_soa`] on every execute path
+//! (the reference stays as the numeric oracle). Three strategies, selected
+//! by size at plan time:
+//!
+//! * **direct** (n ≤ 2) — the butterfly written out, no tables;
+//! * **radix4** (4 ≤ n < 2^[`SIX_STEP_MIN_LOG2`]) — an in-place radix-4
+//!   DIF kernel (plus one radix-2 stage when `log2 n` is odd) with packed
+//!   per-stage twiddle tables built once from the process-wide
+//!   [`super::twiddle_table`]. Bit-reversal is avoided by pairing: the
+//!   DIF forward leaves digit-reversed order and the DIT inverse is its
+//!   exact mirror, so `inverse_scrambled ∘ forward_scrambled` is the
+//!   identity with no permutation at all; the explicit digit-reversal
+//!   permutation is applied only in [`HostKernel::forward`] /
+//!   [`HostKernel::inverse`], where callers need natural order.
+//! * **six-step** (n ≥ 2^[`SIX_STEP_MIN_LOG2`]) — the cache-friendly
+//!   n = m1·m2 decomposition on the [`FourStep`] algebra (same index math
+//!   as the collaborative GPU+PIM split): blocked transpose, m2 row FFTs
+//!   of size m1, inter-factor twiddle, transpose, m1 row FFTs of size m2,
+//!   final transpose. Row kernels are recursively planned `radix4`
+//!   kernels, so every butterfly pass touches a √n-sized working set.
+//!
+//! All scratch (permutation staging, transpose planes) is checked out of a
+//! caller-provided [`BufferArena`], so steady-state transforms perform no
+//! heap allocation.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{ensure, Result};
+
+use super::arena::BufferArena;
+use super::twiddle::twiddle_table;
+use super::{is_pow2, log2, FourStep, SoaVec};
+
+/// Sizes with `log2 n` at or above this threshold plan the six-step
+/// strategy; below it the flat radix-4 kernel wins (working set fits L2).
+pub const SIX_STEP_MIN_LOG2: u32 = 16;
+
+/// Transpose tile edge: 32×32 f32 tiles keep both the source rows and the
+/// destination columns resident while a tile streams through.
+const TRANSPOSE_TILE: usize = 32;
+
+/// Packed twiddles of one radix-4 stage at block length `l`:
+/// `[w1r, w1i, w2r, w2i, w3r, w3i]` per `j in 0..l/4`, `w_r = W_l^{r·j}`.
+struct StageTable {
+    l: usize,
+    w: Vec<f32>,
+}
+
+enum Strategy {
+    /// n ∈ {1, 2}: identity / single butterfly.
+    Direct,
+    /// Flat in-place radix-4 DIF (+ radix-2 tail for odd log2).
+    Radix4 {
+        tables: Vec<StageTable>,
+        /// `perm[s]` = natural-order frequency bin living in DIF slot `s`.
+        perm: Vec<u32>,
+    },
+    /// n = m1·m2 with recursively planned row kernels.
+    SixStep { m1: usize, m2: usize, col: Arc<HostKernel>, row: Arc<HostKernel> },
+}
+
+/// A memoized per-size FFT plan. Obtain via [`HostKernel::plan`]; cheap to
+/// share (`Arc`) and safe to use from any thread.
+pub struct HostKernel {
+    n: usize,
+    strategy: Strategy,
+}
+
+impl fmt::Debug for HostKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("HostKernel")
+            .field("n", &self.n)
+            .field("strategy", &self.strategy_name())
+            .finish()
+    }
+}
+
+/// Process-wide plan cache. Kernels are built *outside* the lock: six-step
+/// plans recursively plan their row kernels, and building under the lock
+/// would self-deadlock. A racing duplicate build is benign — the first
+/// insert wins and the loser's work is dropped.
+fn plan_cache() -> &'static Mutex<HashMap<usize, Arc<HostKernel>>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<HostKernel>>>> = OnceLock::new();
+    CACHE.get_or_init(Default::default)
+}
+
+impl HostKernel {
+    /// Plan (or fetch the memoized plan for) size `n`.
+    pub fn plan(n: usize) -> Result<Arc<HostKernel>> {
+        ensure!(
+            is_pow2(n),
+            "host kernel size must be a nonzero power of two, got {n}"
+        );
+        if let Some(k) = plan_cache().lock().unwrap().get(&n) {
+            return Ok(Arc::clone(k));
+        }
+        let built = Arc::new(Self::build(n)?);
+        let mut map = plan_cache().lock().unwrap();
+        Ok(Arc::clone(map.entry(n).or_insert(built)))
+    }
+
+    fn build(n: usize) -> Result<Self> {
+        let strategy = if n <= 2 {
+            Strategy::Direct
+        } else if log2(n) >= SIX_STEP_MIN_LOG2 {
+            let l = log2(n);
+            let m1 = 1usize << ((l + 1) / 2);
+            let m2 = n / m1;
+            Strategy::SixStep { m1, m2, col: Self::plan(m1)?, row: Self::plan(m2)? }
+        } else {
+            let tw = twiddle_table(n);
+            let mut tables = Vec::new();
+            let mut l = n;
+            while l >= 4 {
+                let q = l / 4;
+                let mut w = Vec::with_capacity(6 * q);
+                for j in 0..q {
+                    for r in 1..=3usize {
+                        // W_l^{r·j} = W_n^{r·j·(n/l)}; r·j ≤ 3(l/4 − 1) < l,
+                        // so the index stays below n without a modulo.
+                        let (c, s) = tw.get_index(r * j * (n / l));
+                        w.push(c);
+                        w.push(s);
+                    }
+                }
+                tables.push(StageTable { l, w });
+                l /= 4;
+            }
+            let mut radices: Vec<usize> = tables.iter().map(|_| 4).collect();
+            if l == 2 {
+                radices.push(2);
+            }
+            Strategy::Radix4 { tables, perm: build_perm(&radices) }
+        };
+        Ok(Self { n, strategy })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        match self.strategy {
+            Strategy::Direct => "direct",
+            Strategy::Radix4 { .. } => "radix4",
+            Strategy::SixStep { .. } => "six-step",
+        }
+    }
+
+    /// Forward FFT, natural order in and out.
+    pub fn forward(&self, re: &mut [f32], im: &mut [f32], arena: &BufferArena) {
+        debug_assert_eq!(re.len(), self.n);
+        debug_assert_eq!(im.len(), self.n);
+        match &self.strategy {
+            Strategy::Direct => direct_forward(re, im),
+            Strategy::Radix4 { tables, perm } => {
+                dif_forward(re, im, tables);
+                let n = self.n;
+                let mut sr = arena.take(n);
+                let mut si = arena.take(n);
+                sr.copy_from_slice(re);
+                si.copy_from_slice(im);
+                for s in 0..n {
+                    let p = perm[s] as usize;
+                    re[p] = sr[s];
+                    im[p] = si[s];
+                }
+                arena.give(sr);
+                arena.give(si);
+            }
+            Strategy::SixStep { m1, m2, col, row } => {
+                self.six_step_forward(re, im, *m1, *m2, col, row, arena)
+            }
+        }
+    }
+
+    /// Inverse FFT (scaled by 1/n), natural order in and out.
+    pub fn inverse(&self, re: &mut [f32], im: &mut [f32], arena: &BufferArena) {
+        debug_assert_eq!(re.len(), self.n);
+        debug_assert_eq!(im.len(), self.n);
+        match &self.strategy {
+            Strategy::Direct => {
+                direct_forward(re, im);
+                scale(re, im, 1.0 / self.n as f32);
+            }
+            Strategy::Radix4 { tables, perm } => {
+                let n = self.n;
+                let mut sr = arena.take(n);
+                let mut si = arena.take(n);
+                sr.copy_from_slice(re);
+                si.copy_from_slice(im);
+                for s in 0..n {
+                    let p = perm[s] as usize;
+                    re[s] = sr[p];
+                    im[s] = si[p];
+                }
+                arena.give(sr);
+                arena.give(si);
+                dit_inverse(re, im, tables);
+                scale(re, im, 1.0 / n as f32);
+            }
+            // Six-step inverse rides the forward path via conjugation:
+            // ifft(x) = conj(fft(conj(x))) / n.
+            Strategy::SixStep { .. } => {
+                conjugate(im);
+                self.forward(re, im, arena);
+                let s = 1.0 / self.n as f32;
+                for v in re.iter_mut() {
+                    *v *= s;
+                }
+                for v in im.iter_mut() {
+                    *v = -*v * s;
+                }
+            }
+        }
+    }
+
+    /// Forward FFT leaving the spectrum in the kernel's scrambled
+    /// (digit-reversed) order — no permutation, no scratch. Paired with
+    /// [`HostKernel::inverse_scrambled`] the permutation cancels entirely.
+    /// For the direct and six-step strategies the output is already
+    /// natural order (their "scrambled" order *is* natural order).
+    pub fn forward_scrambled(&self, re: &mut [f32], im: &mut [f32], arena: &BufferArena) {
+        match &self.strategy {
+            Strategy::Radix4 { tables, .. } => dif_forward(re, im, tables),
+            _ => self.forward(re, im, arena),
+        }
+    }
+
+    /// Inverse FFT (scaled by 1/n) consuming [`HostKernel::forward_scrambled`]'s
+    /// order: `inverse_scrambled(forward_scrambled(x)) == x` for every
+    /// strategy.
+    pub fn inverse_scrambled(&self, re: &mut [f32], im: &mut [f32], arena: &BufferArena) {
+        match &self.strategy {
+            Strategy::Radix4 { tables, .. } => {
+                dit_inverse(re, im, tables);
+                scale(re, im, 1.0 / self.n as f32);
+            }
+            _ => self.inverse(re, im, arena),
+        }
+    }
+
+    /// Copying convenience: forward FFT into an arena-backed buffer.
+    pub fn fft(&self, x: &SoaVec, arena: &BufferArena) -> SoaVec {
+        let mut out = arena.take_soa(self.n);
+        out.re.copy_from_slice(&x.re);
+        out.im.copy_from_slice(&x.im);
+        self.forward(&mut out.re, &mut out.im, arena);
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn six_step_forward(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        m1: usize,
+        m2: usize,
+        col: &HostKernel,
+        row: &HostKernel,
+        arena: &BufferArena,
+    ) {
+        let n = self.n;
+        let mut br = arena.take(n);
+        let mut bi = arena.take(n);
+        // Step 1: B[n1][n2] = x[n2·m2 + n1] — transpose (m1 × m2) → (m2 × m1).
+        transpose_plane(re, &mut br, m1, m2);
+        transpose_plane(im, &mut bi, m1, m2);
+        // Steps 2+3: size-m1 FFT per row, then the inter-factor twiddle
+        // W_n^{k2·n1} applied via an f64 recurrence (one trig pair per row —
+        // O(√n) trig per transform, amortized to nothing by the row FFTs).
+        for n1 in 0..m2 {
+            let r = n1 * m1..(n1 + 1) * m1;
+            col.forward(&mut br[r.clone()], &mut bi[r], arena);
+            let ang = -2.0 * std::f64::consts::PI * n1 as f64 / n as f64;
+            let (wsr, wsi) = (ang.cos(), ang.sin());
+            let (mut wr, mut wi) = (1.0f64, 0.0f64);
+            for k2 in 0..m1 {
+                let i = n1 * m1 + k2;
+                let (xr, xi) = (br[i] as f64, bi[i] as f64);
+                br[i] = (xr * wr - xi * wi) as f32;
+                bi[i] = (xr * wi + xi * wr) as f32;
+                let next = wr * wsr - wi * wsi;
+                wi = wr * wsi + wi * wsr;
+                wr = next;
+            }
+        }
+        // Step 4: C[k2][n1] = B[n1][k2] — transpose (m2 × m1) → (m1 × m2).
+        transpose_plane(&br, re, m2, m1);
+        transpose_plane(&bi, im, m2, m1);
+        // Step 5: size-m2 FFT per row of C.
+        for k2 in 0..m1 {
+            let r = k2 * m2..(k2 + 1) * m2;
+            row.forward(&mut re[r.clone()], &mut im[r], arena);
+        }
+        // Step 6: out[k1·m1 + k2] = C[k2][k1] — transpose (m1 × m2) → (m2 × m1).
+        transpose_plane(re, &mut br, m1, m2);
+        transpose_plane(im, &mut bi, m1, m2);
+        re.copy_from_slice(&br);
+        im.copy_from_slice(&bi);
+        arena.give(br);
+        arena.give(bi);
+    }
+}
+
+/// Steps 1–3 of the four-step split (the GPU component) on the fast
+/// kernels: column FFTs of size `m1` via a planned [`HostKernel`] plus the
+/// inter-factor twiddle from the process-wide [`super::twiddle_table`]
+/// (bitwise-identical values to [`FourStep::twiddle`]). Output Z is
+/// row-major (k2, n1), exactly like [`FourStep::gpu_component_ref`], which
+/// remains the oracle this is tested against.
+pub fn gpu_stage_fast(fs: &FourStep, x: &SoaVec, arena: &BufferArena) -> Result<SoaVec> {
+    let (n, m1, m2) = (fs.n, fs.m1, fs.m2);
+    ensure!(x.len() == n, "gpu stage input length {} != n {n}", x.len());
+    let col = HostKernel::plan(m1)?;
+    let tw = twiddle_table(n);
+    // B[n1][n2] = x[n2·m2 + n1].
+    let mut b = arena.take_soa(n);
+    transpose_plane(&x.re, &mut b.re, m1, m2);
+    transpose_plane(&x.im, &mut b.im, m1, m2);
+    for n1 in 0..m2 {
+        let r = n1 * m1..(n1 + 1) * m1;
+        col.forward(&mut b.re[r.clone()], &mut b.im[r], arena);
+        for k2 in 0..m1 {
+            let (tc, ts) = tw.get_index((k2 * n1) % n);
+            let i = n1 * m1 + k2;
+            let (xr, xi) = (b.re[i], b.im[i]);
+            b.re[i] = xr * tc - xi * ts;
+            b.im[i] = xr * ts + xi * tc;
+        }
+    }
+    // Z[k2][n1] = B[n1][k2].
+    let mut z = arena.take_soa(n);
+    transpose_plane(&b.re, &mut z.re, m2, m1);
+    transpose_plane(&b.im, &mut z.im, m2, m1);
+    arena.give_soa(b);
+    Ok(z)
+}
+
+/// Blocked out-of-place transpose of one f32 plane:
+/// `dst[c·rows + r] = src[r·cols + c]`.
+pub(crate) fn transpose_plane(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    let b = TRANSPOSE_TILE;
+    for r0 in (0..rows).step_by(b) {
+        let r1 = (r0 + b).min(rows);
+        for c0 in (0..cols).step_by(b) {
+            let c1 = (c0 + b).min(cols);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+        }
+    }
+}
+
+/// Digit-reversal of the mixed-radix DIF schedule: `perm[s]` is the
+/// natural-order bin found in DIF-output slot `s`. Built by the standard
+/// recursion: the first radix splits the output into `r0` interleaved
+/// sub-problems.
+fn build_perm(radices: &[usize]) -> Vec<u32> {
+    if radices.is_empty() {
+        return vec![0];
+    }
+    let r0 = radices[0];
+    let sub = build_perm(&radices[1..]);
+    let q = sub.len();
+    let mut perm = vec![0u32; r0 * q];
+    for b in 0..r0 {
+        for i in 0..q {
+            perm[b * q + i] = b as u32 + (r0 as u32) * sub[i];
+        }
+    }
+    perm
+}
+
+fn direct_forward(re: &mut [f32], im: &mut [f32]) {
+    if re.len() == 2 {
+        let (ar, ai) = (re[0], im[0]);
+        let (br, bi) = (re[1], im[1]);
+        re[0] = ar + br;
+        im[0] = ai + bi;
+        re[1] = ar - br;
+        im[1] = ai - bi;
+    }
+}
+
+fn scale(re: &mut [f32], im: &mut [f32], s: f32) {
+    for v in re.iter_mut() {
+        *v *= s;
+    }
+    for v in im.iter_mut() {
+        *v *= s;
+    }
+}
+
+fn conjugate(im: &mut [f32]) {
+    for v in im.iter_mut() {
+        *v = -*v;
+    }
+}
+
+/// In-place radix-4 DIF (+ radix-2 tail): natural in, digit-reversed out.
+fn dif_forward(re: &mut [f32], im: &mut [f32], tables: &[StageTable]) {
+    let n = re.len();
+    let mut l = n;
+    for st in tables {
+        debug_assert_eq!(st.l, l);
+        let q = l / 4;
+        for base in (0..n).step_by(l) {
+            for j in 0..q {
+                let i0 = base + j;
+                let (ar, ai) = (re[i0], im[i0]);
+                let (br, bi) = (re[i0 + q], im[i0 + q]);
+                let (cr, ci) = (re[i0 + 2 * q], im[i0 + 2 * q]);
+                let (dr, di) = (re[i0 + 3 * q], im[i0 + 3 * q]);
+                let (t0r, t0i) = (ar + cr, ai + ci);
+                let (t1r, t1i) = (ar - cr, ai - ci);
+                let (t2r, t2i) = (br + dr, bi + di);
+                // t3 = −i·(b − d).
+                let (t3r, t3i) = (bi - di, dr - br);
+                let w = &st.w[6 * j..6 * j + 6];
+                re[i0] = t0r + t2r;
+                im[i0] = t0i + t2i;
+                let (xr, xi) = (t1r + t3r, t1i + t3i);
+                re[i0 + q] = xr * w[0] - xi * w[1];
+                im[i0 + q] = xr * w[1] + xi * w[0];
+                let (yr, yi) = (t0r - t2r, t0i - t2i);
+                re[i0 + 2 * q] = yr * w[2] - yi * w[3];
+                im[i0 + 2 * q] = yr * w[3] + yi * w[2];
+                let (zr, zi) = (t1r - t3r, t1i - t3i);
+                re[i0 + 3 * q] = zr * w[4] - zi * w[5];
+                im[i0 + 3 * q] = zr * w[5] + zi * w[4];
+            }
+        }
+        l /= 4;
+    }
+    if l == 2 {
+        radix2_pass(re, im);
+    }
+}
+
+/// Exact mirror of [`dif_forward`]: digit-reversed in, natural out,
+/// *unscaled* inverse (computes n·ifft). Stages run in reverse order with
+/// conjugated twiddles applied before the inverse butterfly.
+fn dit_inverse(re: &mut [f32], im: &mut [f32], tables: &[StageTable]) {
+    let n = re.len();
+    // Forward order was l = n, n/4, …, then a radix-2 pass iff log2 n is
+    // odd (the last radix-4 stage then ran at l = 8). The mirror runs the
+    // radix-2 pass first, then the radix-4 stages in ascending l.
+    if tables.last().map(|st| st.l == 8).unwrap_or(false) {
+        radix2_pass(re, im);
+    }
+    for st in tables.iter().rev() {
+        let l = st.l;
+        let q = l / 4;
+        for base in (0..n).step_by(l) {
+            for j in 0..q {
+                let i0 = base + j;
+                let w = &st.w[6 * j..6 * j + 6];
+                let (z0r, z0i) = (re[i0], im[i0]);
+                // z_r = y_r · conj(w_r).
+                let (yr, yi) = (re[i0 + q], im[i0 + q]);
+                let (z1r, z1i) = (yr * w[0] + yi * w[1], yi * w[0] - yr * w[1]);
+                let (yr, yi) = (re[i0 + 2 * q], im[i0 + 2 * q]);
+                let (z2r, z2i) = (yr * w[2] + yi * w[3], yi * w[2] - yr * w[3]);
+                let (yr, yi) = (re[i0 + 3 * q], im[i0 + 3 * q]);
+                let (z3r, z3i) = (yr * w[4] + yi * w[5], yi * w[4] - yr * w[5]);
+                let (t0r, t0i) = (z0r + z2r, z0i + z2i);
+                let (t1r, t1i) = (z0r - z2r, z0i - z2i);
+                let (t2r, t2i) = (z1r + z3r, z1i + z3i);
+                // t3 = +i·(z1 − z3).
+                let (t3r, t3i) = (z3i - z1i, z1r - z3r);
+                re[i0] = t0r + t2r;
+                im[i0] = t0i + t2i;
+                re[i0 + q] = t1r + t3r;
+                im[i0 + q] = t1i + t3i;
+                re[i0 + 2 * q] = t0r - t2r;
+                im[i0 + 2 * q] = t0i - t2i;
+                re[i0 + 3 * q] = t1r - t3r;
+                im[i0 + 3 * q] = t1i - t3i;
+            }
+        }
+    }
+}
+
+/// One radix-2 butterfly pass over adjacent pairs (self-mirror: identical
+/// in the DIF forward and the DIT inverse).
+fn radix2_pass(re: &mut [f32], im: &mut [f32]) {
+    for i in (0..re.len()).step_by(2) {
+        let (ar, ai) = (re[i], im[i]);
+        let (br, bi) = (re[i + 1], im[i + 1]);
+        re[i] = ar + br;
+        im[i] = ai + bi;
+        re[i + 1] = ar - br;
+        im[i + 1] = ai - bi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_naive, fft_soa};
+
+    fn arena() -> BufferArena {
+        BufferArena::new()
+    }
+
+    #[test]
+    fn plan_is_memoized_and_strategy_follows_size() {
+        let a = HostKernel::plan(1 << 8).unwrap();
+        let b = HostKernel::plan(1 << 8).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same size must return the same plan");
+        assert_eq!(HostKernel::plan(1).unwrap().strategy_name(), "direct");
+        assert_eq!(HostKernel::plan(2).unwrap().strategy_name(), "direct");
+        assert_eq!(HostKernel::plan(4).unwrap().strategy_name(), "radix4");
+        assert_eq!(HostKernel::plan(1 << 15).unwrap().strategy_name(), "radix4");
+        assert_eq!(
+            HostKernel::plan(1 << SIX_STEP_MIN_LOG2).unwrap().strategy_name(),
+            "six-step"
+        );
+        assert!(HostKernel::plan(0).is_err());
+        assert!(HostKernel::plan(12).is_err());
+    }
+
+    #[test]
+    fn forward_matches_naive_dft() {
+        let ar = arena();
+        for lg in 0..=12u32 {
+            let n = 1usize << lg;
+            let x = SoaVec::random(n, 1000 + lg as u64);
+            let k = HostKernel::plan(n).unwrap();
+            let got = k.fft(&x, &ar);
+            let want = dft_naive(&x);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-3 * (n as f32).sqrt().max(1.0), "n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    fn forward_inverse_is_identity() {
+        let ar = arena();
+        for lg in [0u32, 1, 2, 3, 5, 8, 11] {
+            let n = 1usize << lg;
+            let x = SoaVec::random(n, 7 + lg as u64);
+            let k = HostKernel::plan(n).unwrap();
+            let mut y = x.clone();
+            k.forward(&mut y.re, &mut y.im, &ar);
+            k.inverse(&mut y.re, &mut y.im, &ar);
+            let d = y.max_abs_diff(&x);
+            assert!(d < 1e-4 * (n as f32).sqrt().max(1.0), "n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    fn scrambled_pairing_needs_no_permutation() {
+        let ar = arena();
+        for lg in [2u32, 3, 6, 9] {
+            let n = 1usize << lg;
+            let x = SoaVec::random(n, 40 + lg as u64);
+            let k = HostKernel::plan(n).unwrap();
+            let mut y = x.clone();
+            k.forward_scrambled(&mut y.re, &mut y.im, &ar);
+            k.inverse_scrambled(&mut y.re, &mut y.im, &ar);
+            let d = y.max_abs_diff(&x);
+            assert!(d < 1e-4 * (n as f32).sqrt(), "n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    fn scrambled_forward_is_a_permutation_of_natural() {
+        let ar = arena();
+        let n = 256usize;
+        let x = SoaVec::random(n, 3);
+        let k = HostKernel::plan(n).unwrap();
+        let mut nat = x.clone();
+        k.forward(&mut nat.re, &mut nat.im, &ar);
+        let mut scr = x.clone();
+        k.forward_scrambled(&mut scr.re, &mut scr.im, &ar);
+        let mut a: Vec<u32> = nat.re.iter().map(|f| f.to_bits()).collect();
+        let mut b: Vec<u32> = scr.re.iter().map(|f| f.to_bits()).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "scrambled output must be a permutation of natural output");
+        assert_ne!(nat, scr, "at n=256 the digit-reversal is not the identity");
+    }
+
+    #[test]
+    fn six_step_matches_reference_fft() {
+        let ar = arena();
+        for lg in [SIX_STEP_MIN_LOG2, SIX_STEP_MIN_LOG2 + 1] {
+            let n = 1usize << lg;
+            let x = SoaVec::random(n, 60 + lg as u64);
+            let k = HostKernel::plan(n).unwrap();
+            assert_eq!(k.strategy_name(), "six-step");
+            let got = k.fft(&x, &ar);
+            let want = fft_soa(&x);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 2e-3 * (n as f32).sqrt(), "n={n} diff={d}");
+        }
+    }
+
+    #[test]
+    fn six_step_round_trip() {
+        let ar = arena();
+        let n = 1usize << SIX_STEP_MIN_LOG2;
+        let x = SoaVec::random(n, 77);
+        let k = HostKernel::plan(n).unwrap();
+        let mut y = x.clone();
+        k.forward(&mut y.re, &mut y.im, &ar);
+        k.inverse(&mut y.re, &mut y.im, &ar);
+        let d = y.max_abs_diff(&x);
+        assert!(d < 1e-3, "round trip diff={d}");
+    }
+
+    #[test]
+    fn parseval_holds() {
+        let ar = arena();
+        for n in [64usize, 4096] {
+            let x = SoaVec::random(n, n as u64);
+            let k = HostKernel::plan(n).unwrap();
+            let y = k.fft(&x, &ar);
+            let lhs = y.energy() / n as f64;
+            assert!(
+                (lhs - x.energy()).abs() < 1e-3 * x.energy(),
+                "n={n}: {lhs} vs {}",
+                x.energy()
+            );
+        }
+    }
+
+    #[test]
+    fn steady_state_transforms_do_not_allocate() {
+        let ar = arena();
+        let k = HostKernel::plan(1 << 10).unwrap();
+        let x = SoaVec::random(1 << 10, 5);
+        for _ in 0..3 {
+            ar.give_soa(k.fft(&x, &ar)); // warmup
+        }
+        let warm = ar.stats().alloc_bytes;
+        for _ in 0..20 {
+            ar.give_soa(k.fft(&x, &ar));
+        }
+        assert_eq!(ar.stats().alloc_bytes, warm, "steady-state fft must not allocate");
+    }
+
+    #[test]
+    fn gpu_stage_fast_matches_reference() {
+        let ar = arena();
+        for (n, m1, m2) in [(256usize, 32, 8), (1024, 128, 8), (1 << 13, 32, 256), (64, 1, 64)] {
+            let fs = FourStep::new(n, m1, m2);
+            let x = SoaVec::random(n, 9 + n as u64);
+            let got = gpu_stage_fast(&fs, &x, &ar).unwrap();
+            let want = fs.gpu_component_ref(&x);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-3 * (n as f32).sqrt(), "n={n} m1={m1} diff={d}");
+        }
+    }
+
+    #[test]
+    fn transpose_plane_round_trips() {
+        let (rows, cols) = (48usize, 33);
+        let src: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+        let mut t = vec![0.0; rows * cols];
+        transpose_plane(&src, &mut t, rows, cols);
+        assert_eq!(t[1 * rows + 0], src[0 * cols + 1]);
+        let mut back = vec![0.0; rows * cols];
+        transpose_plane(&t, &mut back, cols, rows);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn digit_reversal_perm_is_consistent_with_radix2_for_pure_radix4() {
+        // For even log2 the mixed-radix digit reversal is base-4 reversal.
+        let perm = build_perm(&[4, 4]);
+        assert_eq!(perm.len(), 16);
+        let mut seen: Vec<u32> = perm.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..16).collect::<Vec<u32>>(), "perm must be a bijection");
+        // Slot s = a·4 + b (a = first stage digit) holds bin b·4 + a.
+        assert_eq!(perm[1], 4);
+        assert_eq!(perm[4], 1);
+    }
+}

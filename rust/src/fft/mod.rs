@@ -1,25 +1,36 @@
-//! Host-side FFT mathematics: SoA complex buffers, twiddle factors and their
-//! paper-§6.1 classification, bit reversal, a reference Cooley–Tukey FFT
-//! (the oracle every simulated routine is validated against), and the
-//! four-step decomposition algebra behind collaborative execution.
+//! Host-side FFT mathematics: SoA complex buffers, twiddle factors and
+//! their paper-§6.1 classification, bit reversal, a reference Cooley–Tukey
+//! FFT (the oracle every simulated routine is validated against), the
+//! four-step decomposition algebra behind collaborative execution, and the
+//! tuned kernel layer every execute path runs on:
+//!
+//! * [`HostKernel`] — per-size memoized plans (radix-4 DIF/DIT pairing,
+//!   six-step for large n) replacing the radix-2 reference on hot paths;
+//! * [`twiddle_table`] — process-wide memoized twiddle factors;
+//! * [`BufferArena`] — recycled scratch so steady-state transforms do not
+//!   touch the heap.
 
+mod arena;
 mod bitrev;
 mod complex;
 pub mod fft2d;
 mod fourstep;
+mod kernel;
 mod plan;
 pub mod real;
 mod reference;
 mod twiddle;
 
+pub use arena::{ArenaStats, BufferArena};
 pub use bitrev::{bit_reverse, bit_reverse_permutation};
 pub use complex::SoaVec;
 pub use fourstep::FourStep;
+pub use kernel::{gpu_stage_fast, HostKernel, SIX_STEP_MIN_LOG2};
 pub use plan::{Butterfly, StagePlan};
-pub use reference::{dft_naive, fft_inplace, fft_soa};
+pub use reference::{dft_naive, fft_inplace, fft_soa, try_fft_inplace, try_fft_soa};
 pub use fft2d::{fft2d_ref, fft2d_via_scheduler, Image2d};
 pub use real::{pack_real, rfft, unpack_real_spectrum};
-pub use twiddle::{twiddle, TwiddleClass};
+pub use twiddle::{twiddle, twiddle_table, TwiddleClass, TwiddleTable};
 
 /// True iff `n` is a power of two (and nonzero).
 pub fn is_pow2(n: usize) -> bool {

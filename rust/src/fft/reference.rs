@@ -1,5 +1,12 @@
 //! Reference FFT implementations — the numeric oracle for every simulated
 //! PIM routine and every PJRT-executed artifact.
+//!
+//! These stay the textbook radix-2 schedule with per-butterfly trig on
+//! purpose: the tuned [`crate::fft::HostKernel`] layer is validated against
+//! them (and benchmarked against them as the `radix2-legacy` rows), so they
+//! must remain simple enough to audit by eye.
+
+use anyhow::{ensure, Result};
 
 use super::{bit_reverse_permutation, is_pow2, log2, twiddle, SoaVec};
 
@@ -7,13 +14,18 @@ use super::{bit_reverse_permutation, is_pow2, log2, twiddle, SoaVec};
 ///
 /// Exactly the paper Fig 1 schedule: bit-reverse, then `log2 N` stages of
 /// `N/2` butterflies `y1 = x1 + ω·x2`, `y2 = x1 − ω·x2`.
+///
+/// Edge cases: length 0 and 1 are identity transforms (documented
+/// early-out, not an error); mismatched `re`/`im` lengths and
+/// non-power-of-two sizes panic. Fallible callers should use
+/// [`try_fft_inplace`], which reports those as contextful errors instead.
 pub fn fft_inplace(re: &mut [f32], im: &mut [f32]) {
     let n = re.len();
     assert_eq!(n, im.len());
-    assert!(is_pow2(n), "FFT size must be a power of two, got {n}");
-    if n == 1 {
-        return;
+    if n <= 1 {
+        return; // DFT of 0 or 1 points is the identity
     }
+    assert!(is_pow2(n), "FFT size must be a power of two, got {n}");
     let perm = bit_reverse_permutation(n);
     for i in 0..n {
         if perm[i] > i {
@@ -41,11 +53,41 @@ pub fn fft_inplace(re: &mut [f32], im: &mut [f32]) {
     }
 }
 
-/// Forward FFT of an [`SoaVec`] (copying convenience wrapper).
+/// Fallible [`fft_inplace`]: mismatched plane lengths and non-power-of-two
+/// sizes become contextful errors instead of panics. Lengths 0 and 1 are
+/// still the identity transform.
+pub fn try_fft_inplace(re: &mut [f32], im: &mut [f32]) -> Result<()> {
+    let n = re.len();
+    ensure!(
+        n == im.len(),
+        "FFT re/im plane lengths differ: {n} vs {} — both planes must describe the same signal",
+        im.len()
+    );
+    if n <= 1 {
+        return Ok(());
+    }
+    ensure!(
+        is_pow2(n),
+        "FFT size must be a power of two, got {n} — pad the signal or pick a power-of-two size"
+    );
+    fft_inplace(re, im);
+    Ok(())
+}
+
+/// Forward FFT of an [`SoaVec`] (copying convenience wrapper). Shares
+/// [`fft_inplace`]'s edge-case behavior; see [`try_fft_soa`] for the
+/// fallible variant.
 pub fn fft_soa(x: &SoaVec) -> SoaVec {
     let mut out = x.clone();
     fft_inplace(&mut out.re, &mut out.im);
     out
+}
+
+/// Fallible [`fft_soa`].
+pub fn try_fft_soa(x: &SoaVec) -> Result<SoaVec> {
+    let mut out = x.clone();
+    try_fft_inplace(&mut out.re, &mut out.im)?;
+    Ok(out)
 }
 
 /// O(N²) DFT — the independent ground truth `fft_inplace` is tested against.
@@ -145,5 +187,32 @@ mod tests {
         let mut re = vec![0.0; 3];
         let mut im = vec![0.0; 3];
         fft_inplace(&mut re, &mut im);
+    }
+
+    #[test]
+    fn length_zero_and_one_are_identity() {
+        // Documented early-outs: the 0- and 1-point DFTs are the identity.
+        let (mut re, mut im) = (Vec::<f32>::new(), Vec::<f32>::new());
+        fft_inplace(&mut re, &mut im); // must not panic
+        let (mut re, mut im) = (vec![2.5f32], vec![-1.0f32]);
+        fft_inplace(&mut re, &mut im);
+        assert_eq!((re[0], im[0]), (2.5, -1.0));
+        let empty = try_fft_soa(&SoaVec::zeros(0)).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn try_variants_report_contextful_errors() {
+        let mut re = vec![0.0f32; 12];
+        let mut im = vec![0.0f32; 12];
+        let err = try_fft_inplace(&mut re, &mut im).unwrap_err().to_string();
+        assert!(err.contains("power of two") && err.contains("12"), "got: {err}");
+        let err = try_fft_inplace(&mut re[..3], &mut im[..5]).unwrap_err().to_string();
+        assert!(err.contains("lengths differ"), "got: {err}");
+        let err = try_fft_soa(&SoaVec::zeros(6)).unwrap_err().to_string();
+        assert!(err.contains("power of two"), "got: {err}");
+        // Valid sizes round-trip through the fallible wrapper unchanged.
+        let x = SoaVec::random(64, 4);
+        assert_eq!(try_fft_soa(&x).unwrap(), fft_soa(&x));
     }
 }

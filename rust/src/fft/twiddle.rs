@@ -1,10 +1,79 @@
 //! Twiddle factors and the value classification driving the paper's §6.1
 //! twiddle-factor-aware orchestration (`sw-opt`).
+//!
+//! Hot paths (the [`crate::fft::HostKernel`] plan builder, the strided
+//! frontend's per-stage tables, the four-step inter-factor twiddle) fetch
+//! values from a process-wide memoized [`TwiddleTable`] instead of calling
+//! trig per butterfly; [`twiddle`] itself stays as the one definition of
+//! the rounding, and table entries are bitwise-identical to it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// `W_m^j = exp(-2πi·j/m)` computed in f64 and rounded once.
 pub fn twiddle(m: usize, j: usize) -> (f32, f32) {
     let ang = -2.0 * std::f64::consts::PI * j as f64 / m as f64;
     (ang.cos() as f32, ang.sin() as f32)
+}
+
+/// All n-th roots of unity `W_n^k` for `k in 0..n`, SoA layout.
+///
+/// For any `m` dividing `n`, `W_m^j = W_n^{j·(n/m)}` — and because both
+/// sizes are powers of two the f64 angle `−2π·j/m` computed either way is
+/// the *same float* (scaling numerator and denominator by a power of two
+/// is exact), so [`TwiddleTable::get`] is bitwise-identical to
+/// [`twiddle`]`(m, j)`.
+#[derive(Debug)]
+pub struct TwiddleTable {
+    n: usize,
+    re: Vec<f32>,
+    im: Vec<f32>,
+}
+
+impl TwiddleTable {
+    fn build(n: usize) -> Self {
+        let mut re = Vec::with_capacity(n);
+        let mut im = Vec::with_capacity(n);
+        for k in 0..n {
+            let (c, s) = twiddle(n, k);
+            re.push(c);
+            im.push(s);
+        }
+        Self { n, re, im }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `W_m^j` for any `m` dividing this table's `n` (bitwise-identical to
+    /// [`twiddle`]`(m, j)`).
+    pub fn get(&self, m: usize, j: usize) -> (f32, f32) {
+        debug_assert!(m > 0 && self.n % m == 0, "m={m} must divide n={}", self.n);
+        debug_assert!(j < m, "j={j} out of range for m={m}");
+        self.get_index(j * (self.n / m))
+    }
+
+    /// Raw entry `W_n^k`.
+    pub fn get_index(&self, k: usize) -> (f32, f32) {
+        (self.re[k], self.im[k])
+    }
+}
+
+/// Process-wide memoized [`TwiddleTable`] for power-of-two `n`: the trig
+/// for a size is computed once per process, ~8·n bytes cached per distinct
+/// size. Built outside the cache lock, so a racing duplicate build is
+/// benign (first insert wins).
+pub fn twiddle_table(n: usize) -> Arc<TwiddleTable> {
+    assert!(super::is_pow2(n), "twiddle table size must be a power of two, got {n}");
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<TwiddleTable>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(Default::default);
+    if let Some(t) = cache.lock().unwrap().get(&n) {
+        return Arc::clone(t);
+    }
+    let built = Arc::new(TwiddleTable::build(n));
+    let mut map = cache.lock().unwrap();
+    Arc::clone(map.entry(n).or_insert(built))
 }
 
 /// The value classes §6.1/§6.3 exploit. For forward radix-2 DIT with
@@ -59,6 +128,33 @@ impl TwiddleClass {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn table_is_bitwise_identical_to_per_call_trig() {
+        let t = twiddle_table(1024);
+        for m in [2usize, 4, 8, 64, 512, 1024] {
+            for j in 0..m {
+                let (tc, ts) = t.get(m, j);
+                let (c, s) = twiddle(m, j);
+                assert_eq!(tc.to_bits(), c.to_bits(), "m={m} j={j}");
+                assert_eq!(ts.to_bits(), s.to_bits(), "m={m} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_is_memoized() {
+        let a = twiddle_table(256);
+        let b = twiddle_table(256);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.n(), 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn table_rejects_non_pow2() {
+        twiddle_table(12);
+    }
 
     #[test]
     fn values_on_unit_circle() {

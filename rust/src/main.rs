@@ -25,7 +25,7 @@ use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{
     synthetic_trace, Arrival, FftRequest, Scheduler, Server, ServiceReport, SizeMix, Workload,
 };
-use pimacolaba::fft::SoaVec;
+use pimacolaba::fft::{fft_soa, BufferArena, HostKernel, SoaVec};
 use pimacolaba::figures;
 use pimacolaba::obs::{chrome_trace, fnv1a64};
 use pimacolaba::pim::TimingSink;
@@ -36,7 +36,7 @@ use pimacolaba::runtime::{Parallelism, Registry};
 use pimacolaba::serve::{
     run_harness, DeadlinePolicy, HarnessConfig, LiveReport, LiveServer, ServeConfig,
 };
-use pimacolaba::util::benchkit::Bench;
+use pimacolaba::util::benchkit::{Bench, Stats};
 use pimacolaba::util::cli::Args;
 use pimacolaba::util::{help, Json, Rng};
 use pimacolaba::workload::KindMix;
@@ -748,10 +748,13 @@ fn cmd_workload(args: &Args) -> Result<()> {
 /// trajectory artifact (`BENCH_runtime.json`; schema and comparison
 /// workflow in docs/BENCHMARKING.md).
 ///
-/// Two sections:
+/// Three sections:
 /// * `fft` — wall-clock of numeric `run_workload` execution on the host
 ///   backend over log2-size × kind × thread-count, with throughput and
 ///   speedup vs the 1-thread baseline;
+/// * `kernels` — single-thread per-transform throughput of the tuned
+///   [`HostKernel`] plans vs the radix-2 reference (`radix2-legacy`),
+///   one row per (kernel, log2 size);
 /// * `cluster` — wall-clock and latency percentiles of the discrete-event
 ///   simulator per thread count, with an FNV-1a digest of each JSON report
 ///   proving the reports stayed byte-identical while the wall-clock moved.
@@ -846,6 +849,59 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
 
+    // Kernel section: single-thread per-transform wall-clock of the tuned
+    // HostKernel plans against the radix-2 reference (`radix2-legacy`),
+    // one row per (kernel, log2 size). Legacy rows stop at 2^20 — the
+    // reference does per-butterfly trig on purpose and measuring it at
+    // larger sizes only slows the bench down.
+    const LEGACY_MAX_LOG2: u32 = 20;
+    let mut kernel_rows = Vec::new();
+    for &ls in &sizes {
+        let n = 1usize << ls;
+        // Repeat small transforms inside one sample so every row measures
+        // a comparable ~2^budget_log2 points of work.
+        let reps = (budget / n).max(1);
+        let x = SoaVec::random(n, 4242 + ls as u64);
+        let mut row = |kernel: &str, stats: &Stats, legacy: Option<f64>| {
+            let best = stats.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+                / reps as f64;
+            kernel_rows.push(Json::obj(vec![
+                ("kernel", Json::str(kernel)),
+                ("log2_n", Json::num(ls as f64)),
+                ("n", Json::num(n as f64)),
+                ("reps", Json::num(reps as f64)),
+                ("best_ns", Json::num(best)),
+                ("mean_ns", Json::num(stats.mean_ns() / reps as f64)),
+                ("mpoints_per_s", Json::num(n as f64 * 1e3 / best)),
+                (
+                    "speedup_vs_legacy",
+                    legacy.map(|b| Json::num(b / best)).unwrap_or(Json::Null),
+                ),
+            ]));
+            best
+        };
+        let mut legacy_best: Option<f64> = None;
+        if ls <= LEGACY_MAX_LOG2 {
+            let stats = bench.run(&format!("radix2-legacy/2^{ls}"), || {
+                (0..reps).map(|_| fft_soa(&x).len()).sum::<usize>()
+            });
+            legacy_best = Some(row("radix2-legacy", &stats, None));
+        }
+        let kernel = HostKernel::plan(n)?;
+        let arena = BufferArena::new();
+        let stats = bench.run(&format!("hostkernel/2^{ls}"), || {
+            (0..reps)
+                .map(|_| {
+                    let y = kernel.fft(&x, &arena);
+                    let len = y.len();
+                    arena.give_soa(y);
+                    len
+                })
+                .sum::<usize>()
+        });
+        row("hostkernel", &stats, legacy_best);
+    }
+
     // Cluster section: same trace per thread count; wall-clock moves,
     // the report digest must not.
     let requests = args.get_usize("requests", if smoke { 20_000 } else { 200_000 })?;
@@ -894,7 +950,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 
     let report = Json::obj(vec![
-        ("version", Json::num(1.0)),
+        ("version", Json::num(2.0)),
         ("subject", Json::str("parallel execution runtime perf baseline")),
         ("smoke", Json::Bool(smoke)),
         ("system", Json::str(sys.name.clone())),
@@ -902,6 +958,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("host_parallelism", Json::num(host as f64)),
         ("batch_points_log2", Json::num(budget_log2 as f64)),
         ("fft", Json::arr(fft_rows)),
+        ("kernels", Json::arr(kernel_rows)),
         ("cluster", Json::arr(cluster_rows)),
     ]);
     std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;

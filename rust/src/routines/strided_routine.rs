@@ -20,7 +20,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::config::SystemConfig;
-use crate::fft::{twiddle, StagePlan, TwiddleClass};
+use crate::fft::{twiddle_table, StagePlan, TwiddleClass};
 use crate::pim::{PimCommand, Sink, VecSink};
 use crate::pimc::{
     BflyOp, ChunkDir, IrOp, IrSink, PassConfig, PassPipeline, PassProvenance, Regime, X1Loc,
@@ -42,6 +42,9 @@ pub fn emit_strided_ir(
     ir: &mut dyn IrSink,
 ) -> Result<()> {
     let plan = StagePlan::new(n);
+    // Process-wide memoized twiddles: after the first size-n emission no
+    // trig runs at all (values are bitwise-identical to per-call trig).
+    let twiddles = twiddle_table(n);
     let wpr = sys.hbm.words_per_row() as u32;
     let regs = sys.pim.regs_per_unit;
     ensure!(regs > CHUNK_BASE as usize + 1, "register file too small: {regs}");
@@ -51,12 +54,13 @@ pub fn emit_strided_ir(
     for s in 0..plan.stages() {
         let half = 1u32 << s;
         let m = half * 2;
-        // Per-stage twiddle table: one trig evaluation per distinct j
-        // instead of one per butterfly (blocks reuse the j range) — a
-        // measurable win on 2^18-point sweeps (EXPERIMENTS.md §Perf).
+        // Per-stage twiddle slice out of the memoized table: one lookup
+        // per distinct j instead of one trig call per butterfly (blocks
+        // reuse the j range) — a measurable win on 2^18-point sweeps
+        // (EXPERIMENTS.md §Perf).
         let tw: Vec<(TwiddleClass, f32, f32)> = (0..half as usize)
             .map(|j| {
-                let (c, si) = twiddle(m as usize, j);
+                let (c, si) = twiddles.get(m as usize, j);
                 (TwiddleClass::of(m as usize, j), c, si)
             })
             .collect();

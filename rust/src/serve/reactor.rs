@@ -52,7 +52,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::backend::{FftEngine, PassAttribution};
 use crate::config::SystemConfig;
 use crate::coordinator::{TRACE_MAX_BATCH, TRACE_MAX_N};
-use crate::fft::SoaVec;
+use crate::fft::{ArenaStats, BufferArena};
 use crate::metrics::DataMovement;
 use crate::obs::{reason, Exemplar, Obs, SpanRecord};
 use crate::pimc::PassConfig;
@@ -96,6 +96,9 @@ const M_GPU_BYTES: &str = "serve_gpu_bytes";
 const M_PIM_CMD_BYTES: &str = "serve_pim_cmd_bytes";
 const M_POOL_STEALS: &str = "runtime_pool_steals_total";
 const M_POOL_PARKS: &str = "runtime_pool_parks_total";
+const M_ARENA_CHECKOUTS: &str = "arena_checkout_total";
+const M_ARENA_ALLOC_BYTES: &str = "arena_alloc_bytes_total";
+const M_ARENA_RECYCLED: &str = "arena_recycled_total";
 
 /// What to do with a request that cannot meet its deadline at dispatch
 /// time (per the EWMA service-time estimate).
@@ -366,14 +369,22 @@ fn run_batch(
     if cfg.numeric {
         // Real spectra: regenerate each request's signals from its seed
         // (outputs are computed then discarded — the serving tier measures
-        // latency/throughput, clients get status + metrics).
+        // latency/throughput, clients get status + metrics). Payload
+        // buffers come from the engine's arena and go back to it after the
+        // run; `fill_random` reproduces `SoaVec::random(n, seed)` bit for
+        // bit, so steady-state serving allocates no per-request heap.
+        let arena = Arc::clone(engine.arena());
         let mut signals = Vec::with_capacity(batch.signals());
         for e in &batch.entries {
             for i in 0..e.signals {
-                signals.push(SoaVec::random(e.n, e.seed ^ (i as u64) << 17));
+                let mut s = arena.take_soa(e.n);
+                s.fill_random(e.seed ^ (i as u64) << 17);
+                signals.push(s);
             }
         }
         let run = engine.run_workload(batch.kind, batch.n, &signals)?;
+        arena.give_soa_batch(signals);
+        arena.give_soa_batch(run.outputs);
         Ok((run.eval.movement_plan, run.eval.pass_attribution()))
     } else {
         // Modeled pricing of the padded batch — the cluster simulator's
@@ -383,11 +394,18 @@ fn run_batch(
     }
 }
 
-fn worker_loop(shard: usize, cfg: Arc<ServeConfig>, rx: Receiver<WorkerMsg>, tx: Sender<Msg>) {
+fn worker_loop(
+    shard: usize,
+    cfg: Arc<ServeConfig>,
+    arena: Arc<BufferArena>,
+    rx: Receiver<WorkerMsg>,
+    tx: Sender<Msg>,
+) {
     let mut engine = FftEngine::builder()
         .system(&cfg.sys)
         .passes(cfg.passes)
         .parallelism(cfg.threads)
+        .arena(arena)
         .build();
     let mut stats = WorkerStats::default();
     while let Ok(msg) = rx.recv() {
@@ -486,10 +504,18 @@ struct Reactor {
     first_admit_ns: Option<u64>,
     last_done_ns: u64,
     closing: Option<Sender<LiveReport>>,
+    /// The payload arena shared by every shard worker's engine; the
+    /// reactor only reads its counters into the registry.
+    arena: Arc<BufferArena>,
 }
 
 impl Reactor {
-    fn new(cfg: Arc<ServeConfig>, rx: Receiver<Msg>, worker_tx: Vec<Sender<WorkerMsg>>) -> Self {
+    fn new(
+        cfg: Arc<ServeConfig>,
+        rx: Receiver<Msg>,
+        worker_tx: Vec<Sender<WorkerMsg>>,
+        arena: Arc<BufferArena>,
+    ) -> Self {
         let shards = cfg.shards;
         Self {
             queues: (0..shards)
@@ -511,6 +537,7 @@ impl Reactor {
             cfg,
             rx,
             worker_tx,
+            arena,
         }
     }
 
@@ -862,6 +889,13 @@ impl Reactor {
             self.obs.registry.set_counter(M_HEDGES_WON, h.won);
             self.obs.registry.set_counter(M_HEDGES_WASTED, h.wasted);
         }
+        // Mirror the shared payload arena's lifetime counters: a flat
+        // `arena_alloc_bytes_total` across snapshots is the zero-alloc
+        // steady-state proof, observable from `--metrics-out`.
+        let a = self.arena.stats();
+        self.obs.registry.set_counter(M_ARENA_CHECKOUTS, a.checkouts);
+        self.obs.registry.set_counter(M_ARENA_ALLOC_BYTES, a.alloc_bytes);
+        self.obs.registry.set_counter(M_ARENA_RECYCLED, a.recycled);
         let reg = &self.obs.registry;
         StatsSnapshot {
             prometheus: reg.to_prometheus(),
@@ -1088,12 +1122,16 @@ pub struct LiveServer {
     workers: Vec<JoinHandle<()>>,
     listener: Option<ListenerHandle>,
     metrics: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
+    /// Payload arena shared by every shard worker (numeric mode draws and
+    /// returns all signal/spectrum buffers here).
+    arena: Arc<BufferArena>,
 }
 
 impl LiveServer {
     pub fn start(cfg: ServeConfig) -> Result<LiveServer> {
         cfg.validate()?;
         let cfg = Arc::new(cfg);
+        let arena = Arc::new(BufferArena::new());
         let (tx, rx) = mpsc::channel();
         let mut worker_tx = Vec::with_capacity(cfg.shards);
         let mut workers = Vec::with_capacity(cfg.shards);
@@ -1102,18 +1140,20 @@ impl LiveServer {
             worker_tx.push(wtx);
             let cfg = Arc::clone(&cfg);
             let tx = tx.clone();
+            let arena = Arc::clone(&arena);
             workers.push(
                 thread::Builder::new()
                     .name(format!("serve-shard-{s}"))
-                    .spawn(move || worker_loop(s, cfg, wrx, tx))
+                    .spawn(move || worker_loop(s, cfg, arena, wrx, tx))
                     .context("spawning shard worker")?,
             );
         }
         let reactor = {
             let cfg = Arc::clone(&cfg);
+            let arena = Arc::clone(&arena);
             thread::Builder::new()
                 .name("serve-reactor".into())
-                .spawn(move || Reactor::new(cfg, rx, worker_tx).run())
+                .spawn(move || Reactor::new(cfg, rx, worker_tx, arena).run())
                 .context("spawning reactor")?
         };
         // Periodic snapshot thread: asks the reactor for a stats frame and
@@ -1141,12 +1181,19 @@ impl LiveServer {
         } else {
             None
         };
-        Ok(LiveServer { tx, reactor: Some(reactor), workers, listener: None, metrics })
+        Ok(LiveServer { tx, reactor: Some(reactor), workers, listener: None, metrics, arena })
     }
 
     /// An in-process client handle (cheap to clone, safe across threads).
     pub fn client(&self) -> LiveClient {
         LiveClient { tx: self.tx.clone() }
+    }
+
+    /// Lifetime counters of the shared payload arena. After warmup,
+    /// `alloc_bytes` stays flat while `recycled` keeps climbing — the
+    /// steady-state zero-allocation invariant the serve tests pin.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
     }
 
     /// Start the localhost socket listener (see [`super::protocol`]) and

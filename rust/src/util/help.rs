@@ -102,10 +102,12 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
         text: "  bench     [--smoke] [--out FILE]           measure the parallel runtime: sweep
             [--sizes 10,12,..] [--kinds SPEC] log2 FFT sizes x workload kinds x
             [--threads-list 1,2,8]           thread counts on the host backend,
-            [--batch-points-log2 P]          plus a cluster-sim wall-clock/p99
-            [--requests N] [--repeat R]      section, then write the
-            [--opt L] [--passes SPEC]        BENCH_runtime.json perf-trajectory
-            [--variant NAME]                 artifact (see docs/BENCHMARKING.md)",
+            [--batch-points-log2 P]          plus per-kernel single-thread rows
+            [--requests N] [--repeat R]      (radix2-legacy vs hostkernel) and a
+            [--opt L] [--passes SPEC]        cluster-sim wall-clock/p99 section,
+            [--variant NAME]                 then write the BENCH_runtime.json
+                                             perf-trajectory artifact (see
+                                             docs/BENCHMARKING.md)",
     },
     SubcommandHelp {
         name: "trace",

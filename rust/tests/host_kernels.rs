@@ -1,0 +1,185 @@
+//! Integration property suite for the tuned host kernel layer
+//! ([`pimacolaba::fft::HostKernel`]): every plan strategy pinned against
+//! the O(N²) naive DFT and the checked-in golden vectors, forward∘inverse
+//! round trips, Parseval, and bit-identical engine outputs across
+//! `Parallelism` settings (the determinism contract the modeled cluster
+//! and serve reports rest on).
+
+use std::path::Path;
+
+use pimacolaba::backend::FftEngine;
+use pimacolaba::config::SystemConfig;
+use pimacolaba::fft::{dft_naive, BufferArena, HostKernel, SoaVec, SIX_STEP_MIN_LOG2};
+use pimacolaba::runtime::Parallelism;
+use pimacolaba::util::Json;
+use pimacolaba::workload::WorkloadKind;
+
+const FIXTURE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/golden_vectors.json");
+
+#[test]
+fn kernels_match_naive_dft() {
+    let arena = BufferArena::new();
+    for lg in 1..=12u32 {
+        let n = 1usize << lg;
+        let x = SoaVec::random(n, 7 + lg as u64);
+        let k = HostKernel::plan(n).unwrap();
+        let d = k.fft(&x, &arena).max_abs_diff(&dft_naive(&x));
+        assert!(d < 1e-3 * (n as f32).sqrt(), "n={n} ({}) diff={d}", k.strategy_name());
+    }
+}
+
+#[test]
+fn forward_then_inverse_is_identity() {
+    let arena = BufferArena::new();
+    // 2^16 exercises the six-step path end to end.
+    for lg in [0u32, 1, 2, 5, 9, 12, SIX_STEP_MIN_LOG2] {
+        let n = 1usize << lg;
+        let x = SoaVec::random(n, 31 + lg as u64);
+        let k = HostKernel::plan(n).unwrap();
+        let mut y = k.fft(&x, &arena);
+        k.inverse(&mut y.re, &mut y.im, &arena);
+        let d = y.max_abs_diff(&x);
+        assert!(d < 2e-4 * (n as f32).sqrt().max(1.0), "n={n} diff={d}");
+        arena.give_soa(y);
+    }
+}
+
+#[test]
+fn scrambled_pairing_round_trips() {
+    // DIF-forward/DIT-inverse with no explicit bit-reversal in between —
+    // the order-free pairing convolution-style pipelines use.
+    let arena = BufferArena::new();
+    for lg in [3u32, 6, 11] {
+        let n = 1usize << lg;
+        let x = SoaVec::random(n, 77 + lg as u64);
+        let k = HostKernel::plan(n).unwrap();
+        let mut y = x.clone();
+        k.forward_scrambled(&mut y.re, &mut y.im, &arena);
+        k.inverse_scrambled(&mut y.re, &mut y.im, &arena);
+        let d = y.max_abs_diff(&x);
+        assert!(d < 2e-4 * (n as f32).sqrt(), "n={n} diff={d}");
+    }
+}
+
+#[test]
+fn golden_vectors_pin_kernel_outputs() {
+    // The same checked-in analytic spectra that pin `fft_soa`
+    // (tests/golden_vectors.rs) must hold on the kernel path.
+    let text = std::fs::read_to_string(Path::new(FIXTURE))
+        .expect("missing golden fixture — run `cargo test --test golden_vectors -- --ignored`");
+    let j = Json::parse(&text).unwrap();
+    let arena = BufferArena::new();
+    let tau = std::f64::consts::TAU;
+    let mut checked = 0usize;
+    for case in j.field("cases").unwrap().as_arr().unwrap() {
+        if case.field("transform").unwrap().as_str().unwrap() != "fft1d" {
+            continue;
+        }
+        let n = case.field("n").unwrap().as_usize().unwrap();
+        let input = case.field("input").unwrap().as_str().unwrap();
+        let tol = case.field("tol").unwrap().as_f64().unwrap() as f32;
+        let mut x = SoaVec::zeros(n);
+        match input {
+            "impulse" => x.set(0, 1.0, 0.0),
+            "constant" => (0..n).for_each(|t| x.set(t, 1.0, 0.0)),
+            "tone" => {
+                let k0 = (n / 4).max(1);
+                for t in 0..n {
+                    let ang = tau * (k0 * t % n) as f64 / n as f64;
+                    x.set(t, ang.cos() as f32, ang.sin() as f32);
+                }
+            }
+            other => panic!("unknown input '{other}'"),
+        }
+        let got = HostKernel::plan(n).unwrap().fft(&x, &arena);
+        match case.field("expect").unwrap().as_str().unwrap() {
+            "uniform" => {
+                let re = case.field("re").unwrap().as_f64().unwrap() as f32;
+                let im = case.field("im").unwrap().as_f64().unwrap() as f32;
+                for k in 0..n {
+                    let (gr, gi) = got.get(k);
+                    assert!(
+                        (gr - re).abs() < tol && (gi - im).abs() < tol,
+                        "fft1d n={n} {input} bin {k}: got ({gr}, {gi})"
+                    );
+                }
+            }
+            "sparse" => {
+                let mut listed = vec![false; n];
+                for b in case.field("bins").unwrap().as_arr().unwrap() {
+                    let k = b.field("k").unwrap().as_usize().unwrap();
+                    let re = b.field("re").unwrap().as_f64().unwrap() as f32;
+                    let im = b.field("im").unwrap().as_f64().unwrap() as f32;
+                    listed[k] = true;
+                    let (gr, gi) = got.get(k);
+                    assert!(
+                        (gr - re).abs() < tol && (gi - im).abs() < tol,
+                        "fft1d n={n} {input} bin {k}: got ({gr}, {gi}), want ({re}, {im})"
+                    );
+                }
+                for k in 0..n {
+                    if !listed[k] {
+                        let (gr, gi) = got.get(k);
+                        let mag = (gr * gr + gi * gi).sqrt();
+                        assert!(mag < tol, "fft1d n={n} {input}: leakage {mag} at bin {k}");
+                    }
+                }
+            }
+            other => panic!("unknown expect kind '{other}'"),
+        }
+        checked += 1;
+    }
+    assert!(checked >= 30, "fixture lost its fft1d cases ({checked})");
+}
+
+#[test]
+fn parseval_holds_on_every_strategy() {
+    let arena = BufferArena::new();
+    for lg in [4u32, 10, SIX_STEP_MIN_LOG2] {
+        let n = 1usize << lg;
+        let x = SoaVec::random(n, 13 + lg as u64);
+        let y = HostKernel::plan(n).unwrap().fft(&x, &arena);
+        let lhs = y.energy() / n as f64;
+        assert!(
+            (lhs - x.energy()).abs() < 2e-3 * x.energy(),
+            "n={n}: {lhs} vs {}",
+            x.energy()
+        );
+        arena.give_soa(y);
+    }
+}
+
+#[test]
+fn engine_outputs_are_bit_identical_across_parallelism() {
+    // The determinism contract: modeled cluster/serve reports are built on
+    // run_workload outputs, so every thread count must produce the same
+    // bits. 2^9 signals keep the suite quick while crossing the pooled
+    // fan-out threshold.
+    let sys = SystemConfig::baseline();
+    let n = 1 << 9;
+    let signals: Vec<SoaVec> = (0..16).map(|i| SoaVec::random(n, 400 + i)).collect();
+    for kind in [WorkloadKind::Batch1d, WorkloadKind::Fft2d] {
+        let mut outs = Vec::new();
+        for par in [Parallelism::Sequential, Parallelism::Fixed(4)] {
+            let mut engine =
+                FftEngine::builder().system(&sys).parallelism(par).build();
+            outs.push(engine.run_workload(kind, n, &signals).unwrap().outputs);
+        }
+        assert_eq!(outs[0], outs[1], "{kind:?} outputs differ across Parallelism");
+    }
+}
+
+#[test]
+fn plan_selection_is_stable_and_memoized() {
+    let a = HostKernel::plan(1 << 8).unwrap();
+    let b = HostKernel::plan(1 << 8).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(a.strategy_name(), "radix4");
+    assert_eq!(HostKernel::plan(2).unwrap().strategy_name(), "direct");
+    assert_eq!(
+        HostKernel::plan(1 << SIX_STEP_MIN_LOG2).unwrap().strategy_name(),
+        "six-step"
+    );
+    assert!(HostKernel::plan(96).is_err());
+}

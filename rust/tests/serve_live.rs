@@ -153,6 +153,57 @@ fn socket_protocol_serves_and_rejects_end_to_end() {
 }
 
 #[test]
+fn numeric_steady_state_recycles_all_payload_buffers() {
+    let (sys, passes) = hw_sys();
+    let mut cfg = ServeConfig::new(sys, passes);
+    cfg.shards = 2;
+    cfg.numeric = true;
+    let server = LiveServer::start(cfg).unwrap();
+    let client = server.client();
+    let serve_one = |id: u64, seed: u64| {
+        let rx = client.submit(LiveRequest::new(id, WorkloadKind::Batch1d, 256, 2, seed));
+        assert!(
+            matches!(rx.recv().unwrap(), pimacolaba::serve::LiveResult::Served { .. }),
+            "numeric request {id} must serve"
+        );
+    };
+    // Warmup: one concurrent wave (the arena's high-water mark — batched
+    // dispatch, both shards busy) then a few serial requests to settle.
+    let rxs: Vec<_> = (0..8)
+        .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 256, 2, 11 + i)))
+        .collect();
+    for rx in rxs {
+        assert!(matches!(rx.recv().unwrap(), pimacolaba::serve::LiveResult::Served { .. }));
+    }
+    for i in 0..4 {
+        serve_one(100 + i, 50 + i);
+    }
+    let warm = server.arena_stats();
+    assert!(warm.alloc_bytes > 0, "numeric mode must route payloads through the arena");
+
+    // Steady state: same request shape, zero new payload allocation. Each
+    // serial request needs strictly fewer concurrent buffers than the
+    // warmup wave, so every checkout hits the free lists.
+    for i in 0..12 {
+        serve_one(1000 + i, 80 + i);
+    }
+    let steady = server.arena_stats();
+    assert_eq!(
+        steady.alloc_bytes, warm.alloc_bytes,
+        "steady-state serving must not allocate payload buffers"
+    );
+    assert!(steady.recycled > warm.recycled, "steady-state requests must recycle");
+
+    // The arena counters are part of the registry export.
+    let snap = client.stats().unwrap();
+    for m in ["arena_checkout_total", "arena_alloc_bytes_total", "arena_recycled_total"] {
+        assert!(snap.prometheus.contains(m), "metrics export missing {m}");
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.unaccounted(), 0);
+}
+
+#[test]
 fn admission_rate_limit_rejects_are_accounted_not_lost() {
     let (sys, passes) = hw_sys();
     let mut cfg = ServeConfig::new(sys, passes);
