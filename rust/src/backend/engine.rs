@@ -137,6 +137,27 @@ impl WorkloadEval {
             .collect()
     }
 
+    /// Per-pass attribution for a GPU-only execution of the same
+    /// decomposition: every pass on the GPU baseline, no PIM traffic.
+    /// Used by GPU-only fleet shards, which serve at `gpu_only_ns`.
+    pub fn pass_attribution_gpu_only(&self) -> Vec<PassAttribution> {
+        let total: f64 =
+            self.passes.iter().map(|p| p.eval.gpu_only_ns + p.shuffle_ns).sum::<f64>().max(1e-9);
+        self.passes
+            .iter()
+            .map(|p| PassAttribution {
+                label: p.label,
+                substrate: "gpu-model",
+                fft_n: p.fft_n,
+                ffts: p.ffts,
+                frac: (p.eval.gpu_only_ns + p.shuffle_ns) / total,
+                gpu_bytes: p.eval.movement_base.gpu_bytes + p.shuffle_bytes,
+                pim_cmd_bytes: 0.0,
+                pim_tile: 0,
+            })
+            .collect()
+    }
+
     pub fn movement_savings(&self) -> f64 {
         self.movement_plan.savings_vs(&self.movement_base)
     }

@@ -8,6 +8,13 @@
 //! meets the SLO and (when greater than one) the count below it does not;
 //! every probe is recorded so a report can show the latency-vs-capacity
 //! curve that justified the answer.
+//!
+//! [`plan_fleet`] generalizes the search to heterogeneous fleets: instead
+//! of one homogeneous count it searches a small set of fleet *shapes* (mix
+//! profiles of GPU-only / PIM-heavy / mixed shards), finds each profile's
+//! minimal count the same bounded way, and picks the cheapest fleet by
+//! [`ShardSpec::cost`] — answering "what's the cheapest rack mix that holds
+//! the SLO", not just "how many identical nodes".
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
@@ -19,6 +26,7 @@ use crate::coordinator::Trace;
 use crate::runtime::Parallelism;
 use crate::util::Json;
 
+use super::fleet::ShardSpec;
 use super::sim::{run_cluster, warm_plans, ClusterConfig, ClusterReport};
 
 /// One simulated capacity probe.
@@ -90,6 +98,11 @@ pub fn plan_capacity(
 ) -> Result<CapacityPlan> {
     ensure!(slo_us.is_finite() && slo_us > 0.0, "SLO must be a positive latency in µs");
     ensure!(max_shards >= 1, "max shard count must be at least 1");
+    ensure!(
+        cfg.fleet.is_empty(),
+        "plan_capacity searches a homogeneous shard count and would ignore the configured \
+         fleet; use plan_fleet for heterogeneous searches"
+    );
 
     // The warm plan table depends only on the trace and engine config —
     // never on the shard count — so compute it once and share it across
@@ -148,6 +161,191 @@ pub fn plan_capacity(
     let report = cache.remove(&hi).unwrap();
     let p99_us = report.latency_p_us(99.0);
     Ok(CapacityPlan { shards: hi, slo_us, p99_us, probes, report })
+}
+
+/// The fleet-shape profiles [`plan_fleet`] searches: homogeneous fleets of
+/// each device class, plus an alternating GPU/PIM split. A count k
+/// instantiates the profile's spec list.
+const FLEET_PROFILES: &[(&str, fn(usize) -> Vec<ShardSpec>)] = &[
+    ("mixed", |k| vec![ShardSpec::mixed(); k]),
+    ("gpu", |k| vec![ShardSpec::gpu_only(); k]),
+    ("pim", |k| vec![ShardSpec::pim_heavy(); k]),
+    ("gpu+pim", |k| {
+        (0..k)
+            .map(|i| if i % 2 == 0 { ShardSpec::gpu_only() } else { ShardSpec::pim_heavy() })
+            .collect()
+    }),
+];
+
+/// One simulated fleet probe.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetProbe {
+    pub profile: &'static str,
+    pub shards: usize,
+    pub p99_us: f64,
+    pub meets: bool,
+}
+
+/// The fleet planner's answer: the cheapest profile × count meeting the SLO.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub profile: &'static str,
+    /// The winning fleet, one spec per shard.
+    pub fleet: Vec<ShardSpec>,
+    pub slo_us: f64,
+    /// p99 of the winning fleet.
+    pub p99_us: f64,
+    /// Relative fleet price ([`ShardSpec::cost`] summed) — the ranking key.
+    pub cost: f64,
+    /// Every (profile, shards, p99) point the search evaluated.
+    pub probes: Vec<FleetProbe>,
+    /// Full simulator report for the winning fleet.
+    pub report: ClusterReport,
+}
+
+impl FleetPlan {
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet: {} × {} meets p99 ≤ {:.0}µs (achieved p99 {:.1}µs, cost {:.2}, {} probes)",
+            self.fleet.len(),
+            self.profile,
+            self.slo_us,
+            self.p99_us,
+            self.cost,
+            self.probes.len()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slo_us", Json::num(self.slo_us)),
+            ("profile", Json::str(self.profile)),
+            ("shards", Json::num(self.fleet.len() as f64)),
+            ("fleet", Json::arr(self.fleet.iter().map(|s| Json::str(s.label())).collect())),
+            ("p99_us", Json::num(self.p99_us)),
+            ("cost", Json::num(self.cost)),
+            (
+                "probes",
+                Json::arr(
+                    self.probes
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("profile", Json::str(p.profile)),
+                                ("shards", Json::num(p.shards as f64)),
+                                ("p99_us", Json::num(p.p99_us)),
+                                ("meets", Json::Bool(p.meets)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("report", self.report.to_json()),
+        ])
+    }
+}
+
+/// Search heterogeneous fleet shapes for the cheapest one whose simulated
+/// p99 is ≤ `slo_us`: for each mix profile (all-mixed, all-GPU, all-PIM,
+/// alternating GPU+PIM) find the minimal shard count by bounded doubling +
+/// bisection, then rank the per-profile winners by fleet cost (ties: fewer
+/// shards, then profile order). Profiles that cannot meet the SLO within
+/// `max_shards` are skipped; if none can, the error names the SLO and each
+/// profile's last probe.
+pub fn plan_fleet(
+    trace: &Trace,
+    cfg: &ClusterConfig,
+    slo_us: f64,
+    max_shards: usize,
+) -> Result<FleetPlan> {
+    ensure!(slo_us.is_finite() && slo_us > 0.0, "SLO must be a positive latency in µs");
+    ensure!(max_shards >= 1, "max shard count must be at least 1");
+
+    // Warm the baseline-system plan table once: mixed and GPU-only shards
+    // share `cfg.sys` (their specs leave it untouched), so every probe of
+    // those profiles reuses it. PIM-heavy systems differ and warm per run.
+    let mut cfg = cfg.clone();
+    cfg.fleet.clear();
+    if cfg.warm.is_none() && cfg.threads != Parallelism::Sequential {
+        cfg.warm = Some(Arc::new(warm_plans(trace, &cfg)?));
+    }
+
+    let mut cache: BTreeMap<(usize, usize), ClusterReport> = BTreeMap::new();
+    let probe = |pi: usize, k: usize, cache: &mut BTreeMap<(usize, usize), ClusterReport>| {
+        if let Entry::Vacant(slot) = cache.entry((pi, k)) {
+            let mut c = cfg.clone();
+            c.fleet = FLEET_PROFILES[pi].1(k);
+            slot.insert(run_cluster(trace, &c)?);
+        }
+        anyhow::Ok(cache[&(pi, k)].latency_p_us(99.0))
+    };
+
+    // (profile index, winning count) per profile that met the SLO, and the
+    // best p99 seen at max_shards among the ones that did not.
+    let mut winners: Vec<(usize, usize)> = Vec::new();
+    let mut misses: Vec<String> = Vec::new();
+    for (pi, (name, _)) in FLEET_PROFILES.iter().enumerate() {
+        let mut lo = 0usize;
+        let mut hi = 1usize;
+        let capped = loop {
+            let p99 = probe(pi, hi, &mut cache)?;
+            if p99 <= slo_us {
+                break None;
+            }
+            if hi >= max_shards {
+                break Some(p99);
+            }
+            lo = hi;
+            hi = (hi * 2).min(max_shards);
+        };
+        if let Some(p99) = capped {
+            misses.push(format!("{name}: p99 {p99:.1} µs at {hi} shards"));
+            continue;
+        }
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if probe(pi, mid, &mut cache)? <= slo_us {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        winners.push((pi, hi));
+    }
+
+    let fleet_cost =
+        |pi: usize, k: usize| FLEET_PROFILES[pi].1(k).iter().map(ShardSpec::cost).sum::<f64>();
+    let Some(&(pi, k)) = winners.iter().min_by(|&&(pa, ka), &&(pb, kb)| {
+        fleet_cost(pa, ka)
+            .total_cmp(&fleet_cost(pb, kb))
+            .then(ka.cmp(&kb))
+            .then(pa.cmp(&pb))
+    }) else {
+        bail!(
+            "no fleet profile reaches p99 ≤ {slo_us} µs within {max_shards} shards \
+             (last probes: {})",
+            misses.join("; ")
+        );
+    };
+
+    let probes: Vec<FleetProbe> = cache
+        .iter()
+        .map(|(&(pi, shards), rep)| {
+            let p99_us = rep.latency_p_us(99.0);
+            FleetProbe { profile: FLEET_PROFILES[pi].0, shards, p99_us, meets: p99_us <= slo_us }
+        })
+        .collect();
+    let report = cache.remove(&(pi, k)).unwrap();
+    let p99_us = report.latency_p_us(99.0);
+    Ok(FleetPlan {
+        profile: FLEET_PROFILES[pi].0,
+        fleet: FLEET_PROFILES[pi].1(k),
+        slo_us,
+        p99_us,
+        cost: fleet_cost(pi, k),
+        probes,
+        report,
+    })
 }
 
 #[cfg(test)]
@@ -219,7 +417,55 @@ mod tests {
         let trace = hot_trace();
         let err = plan_capacity(&trace, &spreading_cfg(), 0.001, 2).unwrap_err().to_string();
         assert!(err.contains("not achievable"), "{err}");
+        assert!(err.contains("2 shards"), "error must name the search bound: {err}");
         assert!(plan_capacity(&trace, &spreading_cfg(), -5.0, 8).is_err());
         assert!(plan_capacity(&trace, &spreading_cfg(), 100.0, 0).is_err());
+    }
+
+    #[test]
+    fn plan_capacity_refuses_a_heterogeneous_fleet() {
+        let trace = hot_trace();
+        let mut cfg = spreading_cfg();
+        cfg.fleet = vec![crate::cluster::ShardSpec::gpu_only()];
+        let err = plan_capacity(&trace, &cfg, 150.0, 8).unwrap_err().to_string();
+        assert!(err.contains("plan_fleet"), "{err}");
+    }
+
+    #[test]
+    fn fleet_search_finds_a_meeting_fleet() {
+        let trace = hot_trace();
+        let cfg = spreading_cfg();
+        let slo_us = 150.0;
+        let plan = plan_fleet(&trace, &cfg, slo_us, 64).unwrap();
+        assert!(plan.p99_us <= slo_us);
+        assert_eq!(plan.fleet.len(), plan.report.shards);
+        assert!(plan.cost > 0.0);
+        // The winner really meets the SLO when re-simulated.
+        let mut c = cfg.clone();
+        c.fleet = plan.fleet.clone();
+        let rerun = run_cluster(&trace, &c).unwrap();
+        assert!(rerun.latency_p_us(99.0) <= slo_us);
+        // Probes cover more than one profile (the search really compared
+        // shapes), and the JSON artifact is self-contained.
+        let profiles: std::collections::BTreeSet<&str> =
+            plan.probes.iter().map(|p| p.profile).collect();
+        assert!(profiles.len() > 1, "{profiles:?}");
+        let j = plan.to_json().to_string();
+        assert!(j.contains("\"profile\""));
+        assert!(j.contains("\"fleet\""));
+        assert!(j.contains("\"failures\""));
+    }
+
+    #[test]
+    fn fleet_search_unachievable_slo_names_every_profile() {
+        let trace = hot_trace();
+        let err = plan_fleet(&trace, &spreading_cfg(), 0.001, 2).unwrap_err().to_string();
+        assert!(err.contains("no fleet profile"), "{err}");
+        assert!(err.contains("0.001"), "error must name the SLO: {err}");
+        for profile in ["mixed", "gpu", "pim", "gpu+pim"] {
+            assert!(err.contains(profile), "error must name profile {profile}: {err}");
+        }
+        assert!(plan_fleet(&trace, &spreading_cfg(), -5.0, 8).is_err());
+        assert!(plan_fleet(&trace, &spreading_cfg(), 100.0, 0).is_err());
     }
 }

@@ -17,8 +17,16 @@ pub enum Event {
     Arrival { idx: usize },
     /// Shard `shard`'s batching window expired: serve a partial batch.
     Deadline { shard: usize },
-    /// Shard `shard` finishes its in-flight batch.
-    Complete { shard: usize },
+    /// Shard `shard` finishes the batch in slot `slot`. `epoch` is the
+    /// shard's crash epoch at dispatch time: a completion whose epoch no
+    /// longer matches raced a crash and is ignored (the batch was already
+    /// aborted and its requests requeued or failed).
+    Complete { shard: usize, slot: usize, epoch: u64 },
+    /// Fault injection: shard `shard` crashes, aborting its in-flight
+    /// batches (scheduled up front by `FaultPlan::crash_schedule`).
+    Crash { shard: usize },
+    /// Fault injection: shard `shard` comes back after its downtime.
+    Restart { shard: usize },
 }
 
 /// Min-heap of `(virtual time ns, seq, event)`.
@@ -59,15 +67,17 @@ mod tests {
     #[test]
     fn pops_in_time_order_fifo_on_ties() {
         let mut q = EventQueue::new();
-        q.push(30, Event::Complete { shard: 0 });
+        q.push(30, Event::Complete { shard: 0, slot: 0, epoch: 0 });
         q.push(10, Event::Arrival { idx: 1 });
         q.push(10, Event::Deadline { shard: 2 });
         q.push(20, Event::Arrival { idx: 0 });
-        assert_eq!(q.len(), 4);
+        q.push(10, Event::Crash { shard: 1 });
+        assert_eq!(q.len(), 5);
         assert_eq!(q.pop(), Some((10, Event::Arrival { idx: 1 })));
         assert_eq!(q.pop(), Some((10, Event::Deadline { shard: 2 })));
+        assert_eq!(q.pop(), Some((10, Event::Crash { shard: 1 })));
         assert_eq!(q.pop(), Some((20, Event::Arrival { idx: 0 })));
-        assert_eq!(q.pop(), Some((30, Event::Complete { shard: 0 })));
+        assert_eq!(q.pop(), Some((30, Event::Complete { shard: 0, slot: 0, epoch: 0 })));
         assert!(q.pop().is_none());
         assert!(q.is_empty());
     }

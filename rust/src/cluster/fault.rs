@@ -1,0 +1,314 @@
+//! Seeded fault injection for the cluster simulator: shard crash/restart
+//! schedules and slow-node (straggler) multipliers.
+//!
+//! Everything here is decided *before* virtual time starts, from a
+//! dedicated RNG stream over the fault seed and the trace horizon: the
+//! crash/restart timeline per shard and the straggler assignment are pure
+//! functions of `(plan, shard count, horizon)`. The event core then merely
+//! replays the schedule, so fault runs stay deterministic per seed and
+//! byte-identical across `--threads` — exactly like the fault-free path.
+//!
+//! Accounting contract (enforced by `run_cluster`'s conservation ensure):
+//! a crash aborts the victim shard's in-flight batches; each aborted
+//! request is either **requeued** (re-routed, keeping its original arrival
+//! time, so the wasted service shows up in its latency) or **failed**
+//! (leaves the system through the report's `failures.failed` bin). Either
+//! way `served + failed == submitted` holds.
+//!
+//! CLI grammar (`cluster --faults SPEC`): comma list of `key=value` over
+//! `mtbf` (mean µs between crashes per shard; 0 disables crashes), `down`
+//! (restart delay µs), `mode` (`requeue` | `fail`), `straggler` (`FRAC:MULT`
+//! — deterministic fraction of shards serving MULT× slower), and `seed`.
+//! Example: `--faults mtbf=20000,down=2000,straggler=0.25:3,mode=requeue,seed=5`.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::{Json, Rng};
+
+/// What happens to a crashed shard's in-flight requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashMode {
+    /// Re-route aborted requests through the router (original arrival time
+    /// kept, so the retry cost lands in their latency).
+    Requeue,
+    /// Aborted requests leave the system via the `failures.failed` bin.
+    Fail,
+}
+
+impl CrashMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            CrashMode::Requeue => "requeue",
+            CrashMode::Fail => "fail",
+        }
+    }
+}
+
+/// The seeded fault model for one cluster run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Mean virtual µs between crashes per shard (exponential gaps);
+    /// 0 disables crash injection.
+    pub crash_mtbf_us: f64,
+    /// Downtime between a crash and its restart, µs.
+    pub restart_after_us: f64,
+    pub mode: CrashMode,
+    /// Fraction of shards injected as stragglers (rounded down, but at
+    /// least one shard when the fraction is positive).
+    pub straggler_frac: f64,
+    /// Service-time multiplier on straggler shards.
+    pub straggler_mult: f64,
+    /// Fault-stream seed: independent of the workload seed, so the same
+    /// trace can replay under many fault timelines.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            crash_mtbf_us: 0.0,
+            restart_after_us: 1_000.0,
+            mode: CrashMode::Requeue,
+            straggler_frac: 0.0,
+            straggler_mult: 1.0,
+            seed: 1,
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.crash_mtbf_us.is_finite() && self.crash_mtbf_us >= 0.0,
+            "crash MTBF must be finite and non-negative, got {}",
+            self.crash_mtbf_us
+        );
+        ensure!(
+            self.restart_after_us.is_finite() && self.restart_after_us > 0.0,
+            "restart delay must be a positive duration in µs, got {}",
+            self.restart_after_us
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.straggler_frac),
+            "straggler fraction must be in [0, 1], got {}",
+            self.straggler_frac
+        );
+        ensure!(
+            self.straggler_mult.is_finite() && self.straggler_mult >= 1.0,
+            "straggler multiplier must be ≥ 1, got {}",
+            self.straggler_mult
+        );
+        Ok(())
+    }
+
+    /// Parse a `--faults SPEC` (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::default();
+        for term in spec.split(',') {
+            let term = term.trim();
+            ensure!(!term.is_empty(), "empty term in faults spec '{spec}'");
+            let Some((key, val)) = term.split_once('=') else {
+                bail!("fault term '{term}' is not key=value (mtbf|down|mode|straggler|seed)");
+            };
+            match key {
+                "mtbf" => {
+                    plan.crash_mtbf_us = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad µs value in '{term}'"))?;
+                }
+                "down" => {
+                    plan.restart_after_us = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad µs value in '{term}'"))?;
+                }
+                "seed" => {
+                    plan.seed =
+                        val.parse().map_err(|_| anyhow::anyhow!("bad seed in '{term}'"))?;
+                }
+                "mode" => {
+                    plan.mode = match val {
+                        "requeue" => CrashMode::Requeue,
+                        "fail" => CrashMode::Fail,
+                        other => bail!("unknown crash mode '{other}' (requeue|fail)"),
+                    };
+                }
+                "straggler" => {
+                    let Some((frac, mult)) = val.split_once(':') else {
+                        bail!("straggler term must be FRAC:MULT, got '{term}'");
+                    };
+                    plan.straggler_frac = frac
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad straggler fraction in '{term}'"))?;
+                    plan.straggler_mult = mult
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad straggler multiplier in '{term}'"))?;
+                }
+                other => bail!("unknown fault key '{other}' (mtbf|down|mode|straggler|seed)"),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Per-shard crash/restart timeline over `[0, horizon_ns]`, decided
+    /// entirely up front: alternating exponential up-gaps and fixed
+    /// downtimes, so intervals never overlap. Returns `(at_ns, shard,
+    /// is_restart)` triples in shard-major order; the event queue's FIFO
+    /// tie-break makes the replay order deterministic.
+    pub fn crash_schedule(&self, shards: usize, horizon_ns: u64) -> Vec<(u64, usize, bool)> {
+        if self.crash_mtbf_us <= 0.0 {
+            return Vec::new();
+        }
+        let mtbf_ns = self.crash_mtbf_us * 1e3;
+        let down_ns = (self.restart_after_us * 1e3).round().max(1.0) as u64;
+        let mut schedule = Vec::new();
+        for shard in 0..shards {
+            // One independent stream per shard: shard count changes never
+            // reshuffle another shard's timeline.
+            let stream = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(shard as u64 + 1);
+            let mut rng = Rng::new(self.seed ^ stream);
+            let mut t = 0u64;
+            loop {
+                let up = rng.exp(mtbf_ns).round().max(1.0) as u64;
+                t = t.saturating_add(up);
+                if t > horizon_ns {
+                    break;
+                }
+                schedule.push((t, shard, false));
+                t = t.saturating_add(down_ns);
+                schedule.push((t, shard, true));
+            }
+        }
+        schedule
+    }
+
+    /// Deterministic straggler pick: `floor(frac · shards)` shards (at
+    /// least one when the fraction is positive), chosen by a seeded
+    /// Fisher–Yates prefix so the same seed always slows the same shards.
+    pub fn straggler_multipliers(&self, shards: usize) -> Vec<f64> {
+        let mut mult = vec![1.0; shards];
+        if self.straggler_frac <= 0.0 || self.straggler_mult <= 1.0 {
+            return mult;
+        }
+        let count = ((self.straggler_frac * shards as f64).floor() as usize).clamp(1, shards);
+        let mut rng = Rng::new(self.seed.wrapping_mul(0xA24B_AED4_963E_E407).wrapping_add(1));
+        let mut idx: Vec<usize> = (0..shards).collect();
+        for i in 0..count {
+            let j = rng.range(i, shards);
+            idx.swap(i, j);
+        }
+        for &s in &idx[..count] {
+            mult[s] = self.straggler_mult;
+        }
+        mult
+    }
+}
+
+/// Failure accounting for one run: the report's `failures` section. The
+/// conservation law extends to `served + failed == submitted`; requeues and
+/// straggler exposure are informational (requeued requests still end in a
+/// terminal bin).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FailureSummary {
+    /// Crash events injected (each aborts the victim's in-flight batches).
+    pub crashes: u64,
+    /// Restart events that brought a shard back.
+    pub restarts: u64,
+    /// Requests re-routed after their shard crashed mid-batch.
+    pub requeued: u64,
+    /// Requests lost to crashes (`mode=fail`): the non-served terminal bin.
+    pub failed: u64,
+    /// Shards injected as stragglers.
+    pub straggler_shards: u64,
+    /// Virtual busy time accumulated on straggler shards, ns — the run's
+    /// straggler exposure.
+    pub straggler_busy_ns: u64,
+}
+
+impl FailureSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("crashes", Json::num(self.crashes as f64)),
+            ("restarts", Json::num(self.restarts as f64)),
+            ("requeued", Json::num(self.requeued as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("straggler_shards", Json::num(self.straggler_shards as f64)),
+            ("straggler_busy_us", Json::num(self.straggler_busy_ns as f64 / 1e3)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("mtbf=20000,down=2000,straggler=0.25:3,mode=fail,seed=5").unwrap();
+        assert_eq!(p.crash_mtbf_us, 20_000.0);
+        assert_eq!(p.restart_after_us, 2_000.0);
+        assert_eq!(p.mode, CrashMode::Fail);
+        assert_eq!(p.straggler_frac, 0.25);
+        assert_eq!(p.straggler_mult, 3.0);
+        assert_eq!(p.seed, 5);
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(FaultPlan::parse("mtbf").is_err());
+        assert!(FaultPlan::parse("mtbf=-3").is_err());
+        assert!(FaultPlan::parse("down=0").is_err());
+        assert!(FaultPlan::parse("mode=explode").is_err());
+        assert!(FaultPlan::parse("straggler=2:3").is_err());
+        assert!(FaultPlan::parse("straggler=0.5:0.5").is_err());
+        assert!(FaultPlan::parse("blast=9").is_err());
+        assert!(FaultPlan::parse("").is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_alternating() {
+        let p = FaultPlan::parse("mtbf=5000,down=500,seed=3").unwrap();
+        let a = p.crash_schedule(4, 200_000_000);
+        let b = p.crash_schedule(4, 200_000_000);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "200ms horizon at 5ms MTBF must crash");
+        for shard in 0..4 {
+            let mine: Vec<_> = a.iter().filter(|&&(_, s, _)| s == shard).collect();
+            for pair in mine.chunks(2) {
+                assert!(!pair[0].2, "crash first");
+                if let Some(r) = pair.get(1) {
+                    assert!(r.2, "then restart");
+                    assert_eq!(r.0 - pair[0].0, 500_000, "fixed downtime");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_is_stable_per_shard_across_fleet_sizes() {
+        let p = FaultPlan::parse("mtbf=5000,down=500,seed=3").unwrap();
+        let small = p.crash_schedule(2, 100_000_000);
+        let big = p.crash_schedule(6, 100_000_000);
+        let shard0 = |v: &[(u64, usize, bool)]| -> Vec<(u64, bool)> {
+            v.iter().filter(|&&(_, s, _)| s == 0).map(|&(t, _, r)| (t, r)).collect()
+        };
+        assert_eq!(shard0(&small), shard0(&big));
+    }
+
+    #[test]
+    fn no_mtbf_means_no_schedule() {
+        assert!(FaultPlan::default().crash_schedule(8, u64::MAX).is_empty());
+    }
+
+    #[test]
+    fn stragglers_are_seeded_and_bounded() {
+        let p = FaultPlan::parse("straggler=0.5:4,seed=9").unwrap();
+        let m = p.straggler_multipliers(8);
+        assert_eq!(m.iter().filter(|&&x| x == 4.0).count(), 4);
+        assert_eq!(m, p.straggler_multipliers(8));
+        // A positive fraction always slows at least one shard.
+        let tiny = FaultPlan::parse("straggler=0.01:2,seed=9").unwrap();
+        assert_eq!(tiny.straggler_multipliers(4).iter().filter(|&&x| x > 1.0).count(), 1);
+        assert!(FaultPlan::default().straggler_multipliers(4).iter().all(|&x| x == 1.0));
+    }
+}

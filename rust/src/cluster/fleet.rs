@@ -1,0 +1,224 @@
+//! Heterogeneous fleet description: per-shard device specs.
+//!
+//! A real deployment rarely fields N identical GPU+PIM nodes: some racks
+//! carry plain GPUs, some carry PIM-dense HBM stacks, and Inclusive-PIM-style
+//! tuning (PAPERS.md) says the right host/PIM split is per-device. A
+//! [`ShardSpec`] captures one shard's hardware shape — device class, HBM
+//! stack count, PIM units per stack, and concurrent batch slots — and the
+//! simulator prices every batch on an engine built from exactly that spec
+//! (`SystemConfig` mutation), so a mixed fleet's report reflects real
+//! per-class service-time differences, not a knob.
+//!
+//! The CLI grammar (`cluster --fleet SPEC`) is a comma list of
+//! `class[/sN][/uN][/tN][:count]` terms: `gpu:2,pim:4` is two GPU-only
+//! shards plus four PIM-heavy ones; `mixed/s8/t2:2` is two mixed shards
+//! with eight HBM stacks and two batch slots each. `--fleet auto` (with
+//! `--slo-us`) asks the capacity planner to search fleet shapes instead.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::SystemConfig;
+
+/// What compute a shard fields. Pricing per class:
+///
+/// * `GpuOnly` — no PIM provisioned: batches are priced at the engine's
+///   GPU-baseline time (`WorkloadEval::gpu_only_ns`, baseline movement);
+/// * `PimHeavy` — one PIM unit per bank (the paper's §6.6 `pim-per-bank`
+///   sensitivity point): collaborative plans with doubled PIM parallelism;
+/// * `Mixed` — the paper-baseline collaborative configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DeviceClass {
+    GpuOnly,
+    PimHeavy,
+    Mixed,
+}
+
+impl DeviceClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceClass::GpuOnly => "gpu-only",
+            DeviceClass::PimHeavy => "pim-heavy",
+            DeviceClass::Mixed => "mixed",
+        }
+    }
+}
+
+/// One shard's hardware shape. Defaults mirror the paper baseline (4 HBM
+/// stacks, 256 PIM units/stack, one batch slot), so an unspecified fleet is
+/// bit-identical to the historical homogeneous simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub class: DeviceClass,
+    /// HBM stacks on this shard (baseline: 4). Scales memory bandwidth and
+    /// PIM parallelism in every model the engine prices with.
+    pub stacks: usize,
+    /// PIM units per stack (baseline: 256; `pim-per-bank`: 512). Ignored at
+    /// pricing time by `GpuOnly` shards but kept valid so the `SystemConfig`
+    /// geometry stays well-formed.
+    pub pim_units: usize,
+    /// Concurrent batch slots (host dispatch width): how many priced
+    /// batches this shard serves at once in virtual time.
+    pub threads: usize,
+}
+
+impl ShardSpec {
+    pub fn mixed() -> Self {
+        Self { class: DeviceClass::Mixed, stacks: 4, pim_units: 256, threads: 1 }
+    }
+
+    pub fn gpu_only() -> Self {
+        Self { class: DeviceClass::GpuOnly, ..Self::mixed() }
+    }
+
+    pub fn pim_heavy() -> Self {
+        Self { class: DeviceClass::PimHeavy, pim_units: 512, ..Self::mixed() }
+    }
+
+    /// The engine configuration this spec prices with: `base` with the
+    /// spec's stack count and PIM density applied.
+    pub fn system(&self, base: &SystemConfig) -> SystemConfig {
+        let mut sys = base.clone();
+        sys.hbm.stacks = self.stacks;
+        sys.pim = sys.pim.with_units_per_stack(self.pim_units);
+        if sys != *base {
+            sys.name = format!("{}[{}]", base.name, self.label());
+        }
+        sys
+    }
+
+    /// Compact display label, also the per-shard `class` field in reports:
+    /// `"pim-heavy/s4/u512/t1"`.
+    pub fn label(&self) -> String {
+        format!("{}/s{}/u{}/t{}", self.class.name(), self.stacks, self.pim_units, self.threads)
+    }
+
+    /// Relative fleet price of one shard of this spec (the capacity
+    /// planner's ranking metric, not dollars): GPU board + HBM stacks +
+    /// provisioned PIM + host dispatch width.
+    pub fn cost(&self) -> f64 {
+        let pim = match self.class {
+            DeviceClass::GpuOnly => 0.0,
+            _ => (self.pim_units as f64 / 256.0) * 0.25,
+        };
+        (1.0 + 0.25 * self.stacks as f64 / 4.0 + pim) * (1.0 + 0.1 * (self.threads - 1) as f64)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.threads >= 1, "shard spec needs at least one batch slot");
+        ensure!(self.stacks >= 1, "shard spec needs at least one HBM stack");
+        ensure!(
+            self.pim_units >= 1 && self.pim_units.is_power_of_two(),
+            "PIM units per stack must be a positive power of two, got {}",
+            self.pim_units
+        );
+        Ok(())
+    }
+
+    /// Parse one spec term: `class[/sN][/uN][/tN]` with classes `gpu` |
+    /// `pim` | `mixed`.
+    pub fn parse(term: &str) -> Result<Self> {
+        let mut parts = term.split('/');
+        let mut spec = match parts.next().unwrap_or("") {
+            "gpu" | "gpu-only" => Self::gpu_only(),
+            "pim" | "pim-heavy" => Self::pim_heavy(),
+            "mixed" => Self::mixed(),
+            other => bail!("unknown shard class '{other}' (gpu|pim|mixed)"),
+        };
+        for p in parts {
+            let (key, val) = p.split_at(1.min(p.len()));
+            let parsed: usize = val
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad shard spec attribute '{p}' in '{term}'"))?;
+            match key {
+                "s" => spec.stacks = parsed,
+                "u" => spec.pim_units = parsed,
+                "t" => spec.threads = parsed,
+                _ => bail!("unknown shard spec attribute '{p}' in '{term}' (s|u|t + number)"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Parse a full `--fleet SPEC`: comma list of `term[:count]`. Returns one
+/// [`ShardSpec`] per shard, in CLI order.
+pub fn parse_fleet(spec: &str) -> Result<Vec<ShardSpec>> {
+    let mut fleet = Vec::new();
+    for term in spec.split(',') {
+        let term = term.trim();
+        ensure!(!term.is_empty(), "empty term in fleet spec '{spec}'");
+        let (body, count) = match term.rsplit_once(':') {
+            Some((body, c)) => {
+                let count: usize =
+                    c.parse().map_err(|_| anyhow::anyhow!("bad shard count '{c}' in '{term}'"))?;
+                ensure!(count >= 1, "shard count in '{term}' must be at least 1");
+                (body, count)
+            }
+            None => (term, 1),
+        };
+        let shard = ShardSpec::parse(body)?;
+        fleet.extend(std::iter::repeat(shard).take(count));
+    }
+    ensure!(!fleet.is_empty(), "fleet spec '{spec}' names no shards");
+    Ok(fleet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_and_labels() {
+        assert_eq!(ShardSpec::mixed().label(), "mixed/s4/u256/t1");
+        assert_eq!(ShardSpec::gpu_only().label(), "gpu-only/s4/u256/t1");
+        assert_eq!(ShardSpec::pim_heavy().label(), "pim-heavy/s4/u512/t1");
+    }
+
+    #[test]
+    fn default_spec_leaves_the_system_untouched() {
+        let base = SystemConfig::baseline().with_hw_opt();
+        let sys = ShardSpec::mixed().system(&base);
+        assert_eq!(sys, base, "baseline spec must not perturb the engine config");
+    }
+
+    #[test]
+    fn pim_heavy_doubles_units() {
+        let base = SystemConfig::baseline().with_hw_opt();
+        let sys = ShardSpec::pim_heavy().system(&base);
+        assert_eq!(sys.pim.units_per_stack, 512);
+        assert_eq!(sys.banks_per_unit(), 1);
+        assert_ne!(sys.name, base.name);
+    }
+
+    #[test]
+    fn parse_terms_and_counts() {
+        let fleet = parse_fleet("gpu:2,pim/u512:1,mixed/s8/t2").unwrap();
+        assert_eq!(fleet.len(), 4);
+        assert_eq!(fleet[0], ShardSpec::gpu_only());
+        assert_eq!(fleet[1], ShardSpec::gpu_only());
+        assert_eq!(fleet[2], ShardSpec::pim_heavy());
+        assert_eq!(fleet[3].stacks, 8);
+        assert_eq!(fleet[3].threads, 2);
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(parse_fleet("tpu:2").is_err());
+        assert!(parse_fleet("gpu:0").is_err());
+        assert!(parse_fleet("gpu/x9").is_err());
+        assert!(parse_fleet("gpu/u3").is_err(), "non-power-of-two PIM units");
+        assert!(parse_fleet("").is_err());
+        assert!(parse_fleet("gpu:two").is_err());
+    }
+
+    #[test]
+    fn costs_rank_classes_sensibly() {
+        let gpu = ShardSpec::gpu_only().cost();
+        let mixed = ShardSpec::mixed().cost();
+        let pim = ShardSpec::pim_heavy().cost();
+        assert!(gpu < mixed && mixed < pim, "{gpu} {mixed} {pim}");
+        let wide = ShardSpec { threads: 4, ..ShardSpec::mixed() };
+        assert!(wide.cost() > mixed);
+    }
+}

@@ -18,21 +18,29 @@
 //!   with windowed batching (dispatch at `window_signals`, or on the
 //!   `max_wait_us` deadline, or work-conservingly on completion) and padded
 //!   power-of-two batch shapes;
+//! * [`ShardSpec`] — per-shard hardware shape for heterogeneous fleets
+//!   (device class, HBM stacks, PIM density, batch slots), priced by an
+//!   engine built from exactly that spec;
 //! * [`ShardRouter`] — pluggable routing: [`RouterKind::RoundRobin`]
 //!   (spread, cold caches), [`RouterKind::SizeAffinity`] (each FFT size has
 //!   a home shard, hot plan caches), [`RouterKind::LeastLoaded`] (chase
-//!   queue depth);
+//!   queue depth), [`RouterKind::CostAware`] (learned per-class service
+//!   estimates — the policy heterogeneous fleets want);
+//! * [`FaultPlan`] — seeded fault injection: shard crash/restart timelines
+//!   and slow-node stragglers, decided before virtual time starts, with
+//!   requeue-or-fail accounting in the report's [`FailureSummary`];
 //! * [`run_cluster`] — the simulation itself, producing a [`ClusterReport`]
 //!   with log-bucketed latency percentiles (p50/p95/p99/p999), per-shard
-//!   utilization, queue depth, batch occupancy, plan-cache hit rates, and
-//!   per-substrate data movement — emitted as a JSON artifact by the
-//!   `cluster` CLI subcommand;
+//!   utilization, queue depth, batch occupancy, plan-cache hit rates,
+//!   per-substrate data movement, and failure accounting — emitted as a
+//!   JSON artifact by the `cluster` CLI subcommand;
 //! * [`plan_capacity`] — binary search over shard count for the smallest
 //!   cluster meeting a p99 SLO, with the full latency-vs-capacity probe
-//!   curve in the answer.
+//!   curve in the answer — and [`plan_fleet`], the heterogeneous variant
+//!   that searches fleet *shapes* (mix profiles × count) by fleet cost.
 //!
 //! Workloads come from [`crate::coordinator::Workload`]: open-loop
-//! Poisson/burst/diurnal arrivals over a size-mix profile.
+//! Poisson/burst/diurnal/flash-crowd arrivals over a size-mix profile.
 //!
 //! With [`ClusterConfig::threads`] set, plan evaluation fans out over the
 //! work-stealing [`crate::runtime::ThreadPool`] before virtual time starts
@@ -60,16 +68,22 @@
 
 mod capacity;
 mod event;
+mod fault;
+mod fleet;
 mod router;
 mod shard;
 mod sim;
 
-pub use capacity::{plan_capacity, CapacityPlan, CapacityProbe};
+pub use capacity::{plan_capacity, plan_fleet, CapacityPlan, CapacityProbe, FleetPlan, FleetProbe};
 pub use event::{Event, EventQueue};
+pub use fault::{CrashMode, FailureSummary, FaultPlan};
+pub use fleet::{parse_fleet, DeviceClass, ShardSpec};
 pub use router::{
-    LeastLoadedRouter, RoundRobinRouter, RouterKind, ShardRouter, SizeAffinityRouter,
+    CostAwareRouter, LeastLoadedRouter, RoundRobinRouter, RouterKind, ShardRouter,
+    SizeAffinityRouter,
 };
 pub use shard::{Shard, ShardStats, SimRequest};
 pub use sim::{
-    run_cluster, run_cluster_traced, warm_plans, ClusterConfig, ClusterReport, ShardSummary,
+    run_cluster, run_cluster_traced, warm_plans, warm_plans_for, ClusterConfig, ClusterReport,
+    ShardSummary,
 };

@@ -5,8 +5,17 @@
 //! makes every shard plan every FFT shape (cold plan caches everywhere),
 //! [`SizeAffinityRouter`] pins each `(kind, size)` shape to one home shard
 //! so its engine's plan cache stays hot, [`LeastLoadedRouter`] chases
-//! instantaneous queue depth at the cost of shape locality.
+//! instantaneous queue depth at the cost of shape locality, and
+//! [`CostAwareRouter`] learns per-`(kind, log2 n)` service estimates per
+//! shard *class* from observed completions — the policy a heterogeneous
+//! fleet needs, where a GPU-only shard may price the same batch several
+//! times slower than a PIM-heavy one.
+//!
+//! Fault awareness: every policy avoids crashed shards while at least one
+//! shard is up (requests routed during a total outage queue at the
+//! policy's normal pick and serve after restart).
 
+use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
@@ -23,9 +32,29 @@ pub trait ShardRouter {
     /// carrying `signals` signals. `shards` is never empty.
     fn route(&mut self, kind: WorkloadKind, n: usize, signals: usize, shards: &[Shard])
         -> usize;
+
+    /// Feedback from the simulator: a batch of shape `(kind, n)` completed
+    /// on a shard of class `class` at `service_ns_per_signal`. Default
+    /// no-op; learning policies ([`CostAwareRouter`]) fold it into their
+    /// estimates.
+    fn observe(&mut self, kind: WorkloadKind, n: usize, class: &'static str, ns_per_signal: f64) {
+        let _ = (kind, n, class, ns_per_signal);
+    }
 }
 
-/// Cycle through shards in order.
+/// Indices of shards currently up, or every index during a total outage
+/// (so the policy still returns something and work queues for restart).
+fn alive(shards: &[Shard]) -> Vec<usize> {
+    let up: Vec<usize> =
+        (0..shards.len()).filter(|&i| !shards[i].is_down()).collect();
+    if up.is_empty() {
+        (0..shards.len()).collect()
+    } else {
+        up
+    }
+}
+
+/// Cycle through shards in order, skipping crashed ones.
 #[derive(Debug, Default)]
 pub struct RoundRobinRouter {
     next: usize,
@@ -43,6 +72,14 @@ impl ShardRouter for RoundRobinRouter {
         _signals: usize,
         shards: &[Shard],
     ) -> usize {
+        for probe in 0..shards.len() {
+            let s = (self.next + probe) % shards.len();
+            if !shards[s].is_down() {
+                self.next = self.next.wrapping_add(probe + 1);
+                return s;
+            }
+        }
+        // Total outage: keep the historical cycle.
         let s = self.next % shards.len();
         self.next = self.next.wrapping_add(1);
         s
@@ -54,7 +91,8 @@ impl ShardRouter for RoundRobinRouter {
 /// lowest index), and every later request of that shape follows it. Keeps
 /// each engine's plan cache hot on its home shapes — a 2D FFT and a
 /// convolution of the same `n` decompose into different pass shapes, so
-/// they count as distinct homes.
+/// they count as distinct homes. A crashed home spills (without re-pinning)
+/// to the up shard with the fewest pinned shapes.
 #[derive(Debug)]
 pub struct SizeAffinityRouter {
     home: BTreeMap<(WorkloadKind, usize), usize>,
@@ -77,17 +115,21 @@ impl ShardRouter for SizeAffinityRouter {
         kind: WorkloadKind,
         n: usize,
         _signals: usize,
-        _shards: &[Shard],
+        shards: &[Shard],
     ) -> usize {
         if let Some(&s) = self.home.get(&(kind, n)) {
-            return s;
+            if !shards[s].is_down() {
+                return s;
+            }
+            // Temporary spill while the home shard is down.
+            return alive(shards)
+                .into_iter()
+                .min_by_key(|&i| (self.shapes_per_shard[i], i))
+                .unwrap();
         }
-        let s = self
-            .shapes_per_shard
-            .iter()
-            .enumerate()
-            .min_by_key(|&(i, &count)| (count, i))
-            .map(|(i, _)| i)
+        let s = alive(shards)
+            .into_iter()
+            .min_by_key(|&i| (self.shapes_per_shard[i], i))
             .unwrap();
         self.shapes_per_shard[s] += 1;
         self.home.insert((kind, n), s);
@@ -95,7 +137,7 @@ impl ShardRouter for SizeAffinityRouter {
     }
 }
 
-/// Send each request to the shard with the fewest queued + in-flight
+/// Send each request to the up shard with the fewest queued + in-flight
 /// signals (ties to the lowest index).
 #[derive(Debug, Default)]
 pub struct LeastLoadedRouter;
@@ -112,12 +154,85 @@ impl ShardRouter for LeastLoadedRouter {
         _signals: usize,
         shards: &[Shard],
     ) -> usize {
-        shards
-            .iter()
-            .enumerate()
-            .min_by_key(|&(i, s)| (s.load_signals(), i))
-            .map(|(i, _)| i)
+        alive(shards)
+            .into_iter()
+            .min_by_key(|&i| (shards[i].load_signals(), i))
             .unwrap()
+    }
+}
+
+/// Learned cost-aware routing for heterogeneous fleets.
+///
+/// Keeps an EWMA (α = 0.25) of observed service time per padded signal,
+/// keyed `(kind, log2 n, shard class)`, fed by [`ShardRouter::observe`]
+/// from every completed batch. Routing minimizes the *projected* service
+/// backlog `est(class) × (shard load + incoming signals)` over up shards —
+/// i.e. load balancing in units of estimated time, not raw signals, so a
+/// GPU-only shard absorbs proportionally less of a large-FFT mix than a
+/// PIM-heavy one. Classes with no estimate yet score zero (optimistic
+/// exploration: each class gets sampled before estimates dominate); until
+/// *any* estimate exists for a shape the policy degenerates to exactly
+/// least-loaded.
+#[derive(Debug, Default)]
+pub struct CostAwareRouter {
+    est: BTreeMap<(WorkloadKind, u32, &'static str), f64>,
+}
+
+impl CostAwareRouter {
+    const ALPHA: f64 = 0.25;
+
+    fn estimate(&self, kind: WorkloadKind, n: usize, class: &'static str) -> Option<f64> {
+        self.est.get(&(kind, n.trailing_zeros(), class)).copied()
+    }
+}
+
+impl ShardRouter for CostAwareRouter {
+    fn name(&self) -> &'static str {
+        "cost-aware"
+    }
+
+    fn route(
+        &mut self,
+        kind: WorkloadKind,
+        n: usize,
+        signals: usize,
+        shards: &[Shard],
+    ) -> usize {
+        let candidates = alive(shards);
+        let known = candidates
+            .iter()
+            .any(|&i| self.estimate(kind, n, shards[i].spec().class.name()).is_some());
+        if !known {
+            // Least-loaded fallback until the first completion teaches us
+            // anything about this shape.
+            return candidates
+                .into_iter()
+                .min_by_key(|&i| (shards[i].load_signals(), i))
+                .unwrap();
+        }
+        candidates
+            .into_iter()
+            .min_by(|&a, &b| {
+                let score = |i: usize| {
+                    let class = shards[i].spec().class.name();
+                    let est = self.estimate(kind, n, class).unwrap_or(0.0);
+                    est * (shards[i].load_signals() + signals) as f64
+                };
+                score(a).total_cmp(&score(b)).then(a.cmp(&b))
+            })
+            .unwrap()
+    }
+
+    fn observe(&mut self, kind: WorkloadKind, n: usize, class: &'static str, ns_per_signal: f64) {
+        match self.est.entry((kind, n.trailing_zeros(), class)) {
+            Entry::Vacant(v) => {
+                v.insert(ns_per_signal);
+            }
+            Entry::Occupied(mut o) => {
+                let e = o.get_mut();
+                *e = *e * (1.0 - Self::ALPHA) + ns_per_signal * Self::ALPHA;
+            }
+        }
     }
 }
 
@@ -127,6 +242,7 @@ pub enum RouterKind {
     RoundRobin,
     SizeAffinity,
     LeastLoaded,
+    CostAware,
 }
 
 impl RouterKind {
@@ -135,7 +251,10 @@ impl RouterKind {
             "round-robin" | "rr" => RouterKind::RoundRobin,
             "size-affinity" | "affinity" => RouterKind::SizeAffinity,
             "least-loaded" | "ll" => RouterKind::LeastLoaded,
-            other => bail!("unknown router '{other}' (round-robin|size-affinity|least-loaded)"),
+            "cost-aware" | "cost" => RouterKind::CostAware,
+            other => bail!(
+                "unknown router '{other}' (round-robin|size-affinity|least-loaded|cost-aware)"
+            ),
         })
     }
 
@@ -144,6 +263,7 @@ impl RouterKind {
             RouterKind::RoundRobin => "round-robin",
             RouterKind::SizeAffinity => "size-affinity",
             RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::CostAware => "cost-aware",
         }
     }
 
@@ -152,6 +272,7 @@ impl RouterKind {
             RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
             RouterKind::SizeAffinity => Box::new(SizeAffinityRouter::new(shards)),
             RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
+            RouterKind::CostAware => Box::new(CostAwareRouter::default()),
         }
     }
 }
@@ -160,7 +281,7 @@ impl RouterKind {
 mod tests {
     use super::*;
     use crate::backend::FftEngine;
-    use crate::cluster::SimRequest;
+    use crate::cluster::{ShardSpec, SimRequest};
     use crate::config::SystemConfig;
 
     const K1D: WorkloadKind = WorkloadKind::Batch1d;
@@ -170,12 +291,43 @@ mod tests {
         (0..k).map(|_| Shard::new(FftEngine::builder().system(&sys).build())).collect()
     }
 
+    fn hetero(gpu: usize, pim: usize) -> Vec<Shard> {
+        let sys = SystemConfig::baseline();
+        let mut v = Vec::new();
+        for _ in 0..gpu {
+            let spec = ShardSpec::gpu_only();
+            v.push(Shard::with_spec(
+                FftEngine::builder().system(&spec.system(&sys)).build(),
+                spec,
+                1.0,
+            ));
+        }
+        for _ in 0..pim {
+            let spec = ShardSpec::pim_heavy();
+            v.push(Shard::with_spec(
+                FftEngine::builder().system(&spec.system(&sys)).build(),
+                spec,
+                1.0,
+            ));
+        }
+        v
+    }
+
     #[test]
     fn round_robin_cycles() {
         let s = shards(3);
         let mut r = RouterKind::RoundRobin.build(3);
         let picks: Vec<usize> = (0..6).map(|_| r.route(K1D, 64, 1, &s)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_down_shards() {
+        let mut s = shards(3);
+        s[1].down = true;
+        let mut r = RouterKind::RoundRobin.build(3);
+        let picks: Vec<usize> = (0..4).map(|_| r.route(K1D, 64, 1, &s)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
     }
 
     #[test]
@@ -191,6 +343,18 @@ mod tests {
         assert_eq!(r.route(K1D, 32, 1, &s), a);
         assert_eq!(r.route(K1D, 64, 1, &s), b);
         assert_eq!(r.route(K1D, 128, 1, &s), c);
+    }
+
+    #[test]
+    fn affinity_spills_while_home_is_down_then_returns() {
+        let mut s = shards(2);
+        let mut r = RouterKind::SizeAffinity.build(2);
+        let home = r.route(K1D, 32, 1, &s);
+        s[home].down = true;
+        let spill = r.route(K1D, 32, 1, &s);
+        assert_ne!(spill, home);
+        s[home].down = false;
+        assert_eq!(r.route(K1D, 32, 1, &s), home, "pin survives the outage");
     }
 
     #[test]
@@ -216,10 +380,58 @@ mod tests {
     }
 
     #[test]
+    fn least_loaded_avoids_down_shards() {
+        let mut s = shards(2);
+        s[1].down = true;
+        s[0].enqueue(SimRequest { id: 0, kind: K1D, n: 64, signals: 50, arrive_ns: 0 });
+        let mut r = RouterKind::LeastLoaded.build(2);
+        assert_eq!(r.route(K1D, 64, 1, &s), 0, "loaded but up beats empty but down");
+    }
+
+    #[test]
+    fn cost_aware_starts_least_loaded_then_follows_estimates() {
+        let s = hetero(1, 1); // shard 0 gpu-only, shard 1 pim-heavy
+        let mut r = CostAwareRouter::default();
+        // No estimates yet: exact least-loaded behavior (ties → index 0).
+        assert_eq!(r.route(K1D, 16384, 1, &s), 0);
+        // Completions teach it the gpu-only class is 4× slower.
+        r.observe(K1D, 16384, "gpu-only", 4000.0);
+        r.observe(K1D, 16384, "pim-heavy", 1000.0);
+        assert_eq!(r.route(K1D, 16384, 1, &s), 1, "routes to the faster class");
+        // The estimate is per (kind, log2 n): other shapes still explore.
+        assert_eq!(r.route(K1D, 64, 1, &s), 0);
+    }
+
+    #[test]
+    fn cost_aware_still_balances_within_a_class() {
+        let mut s = hetero(1, 1);
+        let mut r = CostAwareRouter::default();
+        r.observe(K1D, 16384, "gpu-only", 1500.0);
+        r.observe(K1D, 16384, "pim-heavy", 1000.0);
+        // Pile enough load on the fast shard that the slow one's projected
+        // backlog wins: 1000 × (21+1) > 1500 × (0+1).
+        s[1].enqueue(SimRequest { id: 0, kind: K1D, n: 16384, signals: 21, arrive_ns: 0 });
+        assert_eq!(r.route(K1D, 16384, 1, &s), 0);
+    }
+
+    #[test]
+    fn cost_aware_ewma_converges() {
+        let mut r = CostAwareRouter::default();
+        r.observe(K1D, 64, "mixed", 1000.0);
+        for _ in 0..50 {
+            r.observe(K1D, 64, "mixed", 2000.0);
+        }
+        let e = r.estimate(K1D, 64, "mixed").unwrap();
+        assert!((e - 2000.0).abs() < 1.0, "EWMA {e} should have converged to 2000");
+    }
+
+    #[test]
     fn parse_names() {
         assert_eq!(RouterKind::parse("rr").unwrap(), RouterKind::RoundRobin);
         assert_eq!(RouterKind::parse("size-affinity").unwrap(), RouterKind::SizeAffinity);
         assert_eq!(RouterKind::parse("least-loaded").unwrap().name(), "least-loaded");
+        assert_eq!(RouterKind::parse("cost-aware").unwrap(), RouterKind::CostAware);
+        assert_eq!(RouterKind::parse("cost").unwrap().name(), "cost-aware");
         assert!(RouterKind::parse("random").is_err());
     }
 }

@@ -1,5 +1,5 @@
 //! One serving shard: an [`FftEngine`] behind a size-keyed queue with
-//! windowed batching.
+//! windowed batching, concurrent batch slots, and crash/straggler hooks.
 //!
 //! The simulator never computes spectra — a shard serves *virtual* requests
 //! whose service time is the engine's own cost estimate for the batch shape
@@ -7,6 +7,15 @@
 //! from. Batches are padded to the next power-of-two signal count (the PJRT
 //! artifacts have fixed shapes), which both prices padding waste honestly
 //! and keeps the engine's plan cache keyed by a small set of shapes.
+//!
+//! Heterogeneity enters through the shard's [`ShardSpec`]: the engine is
+//! built from the spec's mutated `SystemConfig`, `GpuOnly` shards price at
+//! the GPU-baseline time instead of the collaborative plan, the spec's
+//! `threads` sets how many batches serve concurrently, and a fault plan may
+//! scale service times (stragglers) or abort in-flight batches (crashes).
+//! Stats are committed at *completion*, so a crashed batch contributes
+//! nothing to served counters — its requests are requeued or failed by the
+//! simulator with separate accounting.
 
 use std::collections::BTreeMap;
 
@@ -16,6 +25,8 @@ use crate::backend::{FftEngine, PassAttribution};
 use crate::coordinator::{Batchable, Batcher};
 use crate::metrics::{DataMovement, LogHistogram};
 use crate::workload::WorkloadKind;
+
+use super::fleet::{DeviceClass, ShardSpec};
 
 /// A queued simulated request: no signal payload, just the shape and the
 /// arrival timestamp the latency accounting needs.
@@ -71,45 +82,84 @@ pub struct ShardStats {
     pub occupancy_pct: LogHistogram,
 }
 
-/// A shard: engine + queue + the in-flight batch.
+/// One dispatched batch occupying a slot until its `Complete` event.
+#[derive(Debug)]
+pub(crate) struct InFlight {
+    pub(crate) requests: Vec<SimRequest>,
+    pub(crate) kind: WorkloadKind,
+    pub(crate) n: usize,
+    pub(crate) signals: usize,
+    pub(crate) padded: usize,
+    /// Virtual dispatch time.
+    pub(crate) start_ns: u64,
+    /// Modeled service time (straggler-scaled), ns.
+    pub(crate) service_ns: u64,
+    /// Occupancy (percent of the padded shape used).
+    pub(crate) occupancy: u64,
+    pub(crate) movement: DataMovement,
+    /// Per-pass substrate/byte attribution of the batch's plan — what the
+    /// simulator's span timelines subdivide execute spans with.
+    pub(crate) attr: Vec<PassAttribution>,
+}
+
+/// A shard: engine + queue + the in-flight batch slots.
 pub struct Shard {
     engine: FftEngine,
+    spec: ShardSpec,
+    /// Straggler service-time multiplier (1.0 = healthy node).
+    service_mult: f64,
     pub(crate) batcher: Batcher<SimRequest>,
-    pub(crate) busy: bool,
     pub(crate) deadline_scheduled: bool,
-    in_flight: Vec<SimRequest>,
-    in_flight_signals: usize,
-    /// Virtual dispatch time of the in-flight batch (set by the sim loop).
-    pub(crate) in_flight_start_ns: u64,
-    /// Modeled service time of the in-flight batch, ns.
-    pub(crate) in_flight_service_ns: u64,
-    /// Occupancy (percent of the padded shape used) of the in-flight batch.
-    pub(crate) in_flight_occupancy: u64,
-    /// Per-pass substrate/byte attribution of the in-flight batch's plan —
-    /// what the simulator's span timelines subdivide execute spans with.
-    pub(crate) in_flight_attr: Vec<PassAttribution>,
+    /// Crashed and not yet restarted: accepts queued work, dispatches none.
+    pub(crate) down: bool,
+    /// Bumped on every crash, carried by `Complete` events: a completion
+    /// whose epoch mismatches raced a crash and must be ignored.
+    pub(crate) epoch: u64,
+    slots: Vec<Option<InFlight>>,
     pub stats: ShardStats,
 }
 
 impl Shard {
+    /// A paper-baseline shard (mixed class, one slot, healthy).
     pub fn new(engine: FftEngine) -> Self {
+        Self::with_spec(engine, ShardSpec::mixed(), 1.0)
+    }
+
+    pub fn with_spec(engine: FftEngine, spec: ShardSpec, service_mult: f64) -> Self {
         Self {
             engine,
+            spec,
+            service_mult,
             batcher: Batcher::new(),
-            busy: false,
             deadline_scheduled: false,
-            in_flight: Vec::new(),
-            in_flight_signals: 0,
-            in_flight_start_ns: 0,
-            in_flight_service_ns: 0,
-            in_flight_occupancy: 0,
-            in_flight_attr: Vec::new(),
+            down: false,
+            epoch: 0,
+            slots: (0..spec.threads.max(1)).map(|_| None).collect(),
             stats: ShardStats::default(),
         }
     }
 
+    pub fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    /// Injected straggler multiplier (1.0 for healthy shards).
+    pub fn service_mult(&self) -> f64 {
+        self.service_mult
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down
+    }
+
+    /// Every batch slot occupied (or the shard is down): nothing more can
+    /// dispatch right now.
     pub fn is_busy(&self) -> bool {
-        self.busy
+        self.down || self.slots.iter().all(|s| s.is_some())
+    }
+
+    pub(crate) fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
     }
 
     /// Requests waiting in the queue.
@@ -122,9 +172,10 @@ impl Shard {
         self.batcher.pending_signals()
     }
 
-    /// Queued + in-flight signals (the least-loaded router's load metric).
+    /// Queued + in-flight signals (the load metric routers balance on).
     pub fn load_signals(&self) -> usize {
-        self.batcher.pending_signals() + self.in_flight_signals
+        self.batcher.pending_signals()
+            + self.slots.iter().flatten().map(|f| f.signals).sum::<usize>()
     }
 
     /// Plan-cache (hits, misses) of this shard's engine.
@@ -140,41 +191,88 @@ impl Shard {
 
     /// Pop the next batch (round-robin across `(size, kind)` queues)
     /// holding at least `min_signals`, price it on the engine's workload
-    /// decomposition, and go busy. Returns the modeled service time in ns,
-    /// or `None` if nothing qualified.
-    pub(crate) fn start_batch(&mut self, min_signals: usize) -> Result<Option<u64>> {
+    /// decomposition per the shard's device class, and occupy a slot.
+    /// Returns `(slot, modeled service ns)`, or `None` if nothing
+    /// qualified or no slot (or the shard) is free.
+    pub(crate) fn start_batch(
+        &mut self,
+        now_ns: u64,
+        min_signals: usize,
+    ) -> Result<Option<(usize, u64)>> {
+        if self.down {
+            return Ok(None);
+        }
+        let Some(slot) = self.free_slot() else {
+            return Ok(None);
+        };
         let Some(batch) = self.batcher.pop_ready(min_signals) else {
             return Ok(None);
         };
         let total = batch.total_signals();
         let padded = batch.padded_signals();
         let eval = self.engine.plan_workload(batch.kind, batch.n, padded)?;
-        let service_ns = eval.plan_ns.max(1.0).round() as u64;
-        self.stats.batches += 1;
-        self.stats.signals += total as u64;
-        self.stats.padded_signals += padded as u64;
-        self.stats.busy_ns += service_ns;
-        self.stats.movement.add_assign(&eval.movement_plan);
-        self.stats.occupancy_pct.record((total * 100 / padded) as u64);
-        self.in_flight_signals = total;
-        self.in_flight_service_ns = service_ns;
-        self.in_flight_occupancy = (total * 100 / padded) as u64;
-        self.in_flight_attr = eval.pass_attribution();
-        self.in_flight = batch.requests;
-        self.busy = true;
-        Ok(Some(service_ns))
+        // Device class decides the price: a GPU-only shard executes the
+        // same decomposition entirely on its GPU baseline; collaborative
+        // classes serve at the planned split (whose cost already reflects
+        // the spec's stack count and PIM density via the mutated system).
+        let (base_ns, movement, attr) = match self.spec.class {
+            DeviceClass::GpuOnly => {
+                (eval.gpu_only_ns, eval.movement_base, eval.pass_attribution_gpu_only())
+            }
+            _ => (eval.plan_ns, eval.movement_plan, eval.pass_attribution()),
+        };
+        let service_ns = (base_ns.max(1.0) * self.service_mult).round() as u64;
+        self.slots[slot] = Some(InFlight {
+            kind: batch.kind,
+            n: batch.n,
+            signals: total,
+            padded,
+            start_ns: now_ns,
+            service_ns,
+            occupancy: (total * 100 / padded) as u64,
+            movement,
+            attr,
+            requests: batch.requests,
+        });
+        Ok(Some((slot, service_ns)))
     }
 
-    /// Finish the in-flight batch, returning its requests for latency
-    /// accounting.
-    pub(crate) fn finish_batch(&mut self) -> Vec<SimRequest> {
-        self.busy = false;
-        self.in_flight_signals = 0;
-        self.stats.requests += self.in_flight.len() as u64;
-        for req in &self.in_flight {
+    /// Finish the batch in `slot`, committing its stats and returning it
+    /// for latency accounting. Stats commit here — not at dispatch — so an
+    /// aborted (crashed) batch never pollutes served counters.
+    pub(crate) fn finish_batch(&mut self, slot: usize) -> InFlight {
+        let f = self.slots[slot].take().expect("finish_batch on an empty slot");
+        self.stats.batches += 1;
+        self.stats.signals += f.signals as u64;
+        self.stats.padded_signals += f.padded as u64;
+        self.stats.busy_ns += f.service_ns;
+        self.stats.movement.add_assign(&f.movement);
+        self.stats.occupancy_pct.record(f.occupancy);
+        self.stats.requests += f.requests.len() as u64;
+        for req in &f.requests {
             *self.stats.kind_requests.entry(req.kind).or_insert(0) += 1;
         }
-        std::mem::take(&mut self.in_flight)
+        f
+    }
+
+    /// Crash path: drop every in-flight batch without committing stats and
+    /// return the victims (slot order) for requeue/fail accounting. Bumps
+    /// the epoch so already-scheduled `Complete` events turn stale.
+    pub(crate) fn abort_in_flight(&mut self) -> Vec<SimRequest> {
+        self.epoch += 1;
+        let mut victims = Vec::new();
+        for slot in &mut self.slots {
+            if let Some(f) = slot.take() {
+                victims.extend(f.requests);
+            }
+        }
+        victims
+    }
+
+    /// True iff `slot` still holds the batch a `Complete { epoch }` event
+    /// was scheduled for.
+    pub(crate) fn completes(&self, slot: usize, epoch: u64) -> bool {
+        epoch == self.epoch && self.slots[slot].is_some()
     }
 }
 
@@ -201,20 +299,23 @@ mod tests {
         assert_eq!(s.pending_requests(), 3);
         assert_eq!(s.pending_signals(), 6);
         assert!(!s.is_busy());
-        let service = s.start_batch(1).unwrap().unwrap();
+        let (slot, service) = s.start_batch(0, 1).unwrap().unwrap();
         assert!(service >= 1);
-        assert!(s.is_busy());
+        assert!(s.is_busy(), "single-slot shard is busy while a batch is in flight");
         assert_eq!(s.pending_requests(), 0);
         assert_eq!(s.load_signals(), 6);
+        // Stats commit at completion, not dispatch (a crash must be able to
+        // abort without un-recording).
+        assert_eq!(s.stats.batches, 0);
+        let done = s.finish_batch(slot);
+        assert_eq!(done.requests.len(), 3);
+        assert!(!s.is_busy());
+        assert_eq!(s.stats.requests, 3);
         assert_eq!(s.stats.signals, 6);
         assert_eq!(s.stats.padded_signals, 8); // 6 → padded to 8
         assert_eq!(s.stats.batches, 1);
         assert_eq!(s.stats.busy_ns, service);
         assert!(s.stats.movement.total() > 0.0);
-        let done = s.finish_batch();
-        assert_eq!(done.len(), 3);
-        assert!(!s.is_busy());
-        assert_eq!(s.stats.requests, 3);
         assert_eq!(s.load_signals(), 0);
     }
 
@@ -222,9 +323,9 @@ mod tests {
     fn start_batch_respects_min_signals() {
         let mut s = shard();
         s.enqueue(req1d(0, 64, 2, 0));
-        assert!(s.start_batch(8).unwrap().is_none());
+        assert!(s.start_batch(0, 8).unwrap().is_none());
         assert!(!s.is_busy());
-        assert!(s.start_batch(1).unwrap().is_some());
+        assert!(s.start_batch(0, 1).unwrap().is_some());
     }
 
     #[test]
@@ -232,8 +333,8 @@ mod tests {
         let mut s = shard();
         for round in 0..4u64 {
             s.enqueue(req1d(round, 8192, 4, 0));
-            s.start_batch(1).unwrap().unwrap();
-            s.finish_batch();
+            let (slot, _) = s.start_batch(0, 1).unwrap().unwrap();
+            s.finish_batch(slot);
         }
         let (hits, misses) = s.cache_stats();
         assert_eq!((hits, misses), (3, 1));
@@ -243,11 +344,11 @@ mod tests {
     fn kinds_are_priced_and_counted_separately() {
         let mut s = shard();
         s.enqueue(SimRequest { id: 0, kind: WorkloadKind::Batch1d, n: 8192, signals: 4, arrive_ns: 0 });
-        let t1d = s.start_batch(1).unwrap().unwrap();
-        s.finish_batch();
+        let (slot, t1d) = s.start_batch(0, 1).unwrap().unwrap();
+        s.finish_batch(slot);
         s.enqueue(SimRequest { id: 1, kind: WorkloadKind::Fft2d, n: 8192, signals: 4, arrive_ns: 0 });
-        let t2d = s.start_batch(1).unwrap().unwrap();
-        s.finish_batch();
+        let (slot, t2d) = s.start_batch(0, 1).unwrap().unwrap();
+        s.finish_batch(slot);
         // A 2D FFT of the same n runs two (smaller) passes plus transposes:
         // its modeled service time must differ from the 1D pricing.
         assert_ne!(t1d, t2d);
@@ -255,8 +356,91 @@ mod tests {
         assert_eq!(s.stats.kind_requests[&WorkloadKind::Fft2d], 1);
         // STFT decomposes into many window-size FFTs and still prices.
         s.enqueue(SimRequest { id: 2, kind: WorkloadKind::Stft, n: 8192, signals: 2, arrive_ns: 0 });
-        assert!(s.start_batch(1).unwrap().unwrap() >= 1);
-        s.finish_batch();
+        let (slot, tstft) = s.start_batch(0, 1).unwrap().unwrap();
+        assert!(tstft >= 1);
+        s.finish_batch(slot);
         assert_eq!(s.stats.requests, 3);
+    }
+
+    #[test]
+    fn gpu_only_spec_prices_the_baseline() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut mixed = shard();
+        let mut gpu = Shard::with_spec(
+            FftEngine::builder().system(&sys).build(),
+            ShardSpec::gpu_only(),
+            1.0,
+        );
+        for s in [&mut mixed, &mut gpu] {
+            s.enqueue(req1d(0, 16384, 8, 0));
+        }
+        let (_, plan_ns) = mixed.start_batch(0, 1).unwrap().unwrap();
+        let (slot, gpu_ns) = gpu.start_batch(0, 1).unwrap().unwrap();
+        // Collaborative plans beat the GPU baseline on large FFTs (the
+        // paper's headline), so the GPU-only shard must price slower.
+        assert!(gpu_ns > plan_ns, "gpu-only {gpu_ns} ≤ collaborative {plan_ns}");
+        let f = gpu.finish_batch(slot);
+        assert!(f.attr.iter().all(|a| a.substrate == "gpu-model" && a.pim_tile == 0));
+        assert_eq!(f.movement.pim_cmd_bytes, 0.0);
+    }
+
+    #[test]
+    fn straggler_multiplier_scales_service() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let mut slow =
+            Shard::with_spec(FftEngine::builder().system(&sys).build(), ShardSpec::mixed(), 4.0);
+        let mut healthy = shard();
+        for s in [&mut slow, &mut healthy] {
+            s.enqueue(req1d(0, 8192, 4, 0));
+        }
+        let (_, fast_ns) = healthy.start_batch(0, 1).unwrap().unwrap();
+        let (_, slow_ns) = slow.start_batch(0, 1).unwrap().unwrap();
+        assert_eq!(slow_ns, (fast_ns as f64 * 4.0).round() as u64);
+    }
+
+    #[test]
+    fn multi_slot_shard_serves_concurrently() {
+        let sys = SystemConfig::baseline().with_hw_opt();
+        let spec = ShardSpec { threads: 2, ..ShardSpec::mixed() };
+        let mut s = Shard::with_spec(FftEngine::builder().system(&sys).build(), spec, 1.0);
+        s.enqueue(req1d(0, 64, 1, 0));
+        s.enqueue(req1d(1, 8192, 1, 0));
+        let (slot_a, _) = s.start_batch(0, 1).unwrap().unwrap();
+        assert!(!s.is_busy(), "second slot still free");
+        let (slot_b, _) = s.start_batch(0, 1).unwrap().unwrap();
+        assert_ne!(slot_a, slot_b);
+        assert!(s.is_busy());
+        s.finish_batch(slot_a);
+        assert!(!s.is_busy());
+        s.finish_batch(slot_b);
+        assert_eq!(s.stats.batches, 2);
+    }
+
+    #[test]
+    fn abort_returns_victims_without_stats() {
+        let mut s = shard();
+        for id in 0..3u64 {
+            s.enqueue(req1d(id, 8192, 2, 0));
+        }
+        let (slot, _) = s.start_batch(0, 1).unwrap().unwrap();
+        let epoch_before = s.epoch;
+        assert!(s.completes(slot, epoch_before));
+        let victims = s.abort_in_flight();
+        assert_eq!(victims.len(), 3);
+        assert_eq!(s.stats.batches, 0, "aborted batches never commit stats");
+        assert_eq!(s.stats.requests, 0);
+        assert!(!s.completes(slot, epoch_before), "stale completions must not fire");
+        assert!(!s.is_busy());
+    }
+
+    #[test]
+    fn down_shard_queues_but_does_not_dispatch() {
+        let mut s = shard();
+        s.down = true;
+        s.enqueue(req1d(0, 64, 1, 0));
+        assert!(s.start_batch(0, 1).unwrap().is_none());
+        assert!(s.is_busy(), "a down shard reports busy to the dispatch loop");
+        s.down = false;
+        assert!(s.start_batch(0, 1).unwrap().is_some());
     }
 }

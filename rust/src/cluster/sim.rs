@@ -1,16 +1,34 @@
-//! The cluster simulator: N shards serving an open-loop trace in virtual
-//! time.
+//! The cluster simulator: a heterogeneous, failure-prone fleet serving an
+//! open-loop trace in virtual time.
 //!
 //! Mechanics per shard (mirroring the live [`crate::coordinator::Server`]
 //! loop, but in virtual time): arrivals are routed by the configured
-//! [`RouterKind`] and queued size-homogeneously; an idle shard dispatches as
-//! soon as one size accumulates `window_signals`, or when the
-//! `max_wait_us` batching window expires; a busy shard drains whatever
-//! accumulated the moment its in-flight batch completes (work-conserving).
+//! [`RouterKind`] and queued size-homogeneously; a shard with a free batch
+//! slot dispatches as soon as one size accumulates `window_signals`, or
+//! when the `max_wait_us` batching window expires; completions drain
+//! whatever accumulated while the slot was occupied (work-conserving).
 //! Service time is the engine's modeled cost for the padded batch shape, so
 //! the simulation prices exactly what the paper's models price — and a run
 //! over millions of requests finishes in wall-clock seconds because no
 //! spectra are ever computed.
+//!
+//! ## Heterogeneous fleets ([`ClusterConfig::fleet`])
+//!
+//! Each shard is built from a [`ShardSpec`]: its engine prices on the
+//! spec's mutated `SystemConfig` (stack count, PIM density), `GpuOnly`
+//! shards serve at the GPU-baseline time instead of the collaborative
+//! plan, and `threads` batch slots serve concurrently. An empty fleet is
+//! `shards` copies of the paper baseline — bit-identical to the historical
+//! homogeneous simulator.
+//!
+//! ## Fault injection ([`ClusterConfig::faults`])
+//!
+//! A [`FaultPlan`] decides — entirely up front, from its own seed — a
+//! crash/restart timeline per shard and a straggler multiplier per shard.
+//! Crashes abort in-flight batches (requeue or fail per the plan's mode),
+//! downed shards keep queueing but dispatch nothing until their restart,
+//! and the report grows a `failures` section under the extended
+//! conservation law `served + failed == submitted`.
 //!
 //! ## Parallel stepping ([`ClusterConfig::threads`])
 //!
@@ -20,11 +38,13 @@
 //! compute, the event core commits.** [`warm_plans`] enumerates every plan
 //! shape the trace can dispatch (each `(kind, n)` × the power-of-two padded
 //! batch ladder) and evaluates them across the pool before virtual time
-//! starts; the single-threaded event core then pops events in deterministic
-//! FIFO order and finds every plan pre-computed. Because each warm entry is
-//! exactly the value an unwarmed engine would compute (same planner, same
+//! starts — once per *distinct* shard system in the fleet; the
+//! single-threaded event core then pops events in deterministic FIFO order
+//! and finds every plan pre-computed. Because each warm entry is exactly
+//! the value an unwarmed engine would compute (same planner, same
 //! deterministic float path — see `FftEngineBuilder::warm_plans`), reports
-//! stay **bit-identical per seed for every thread count**, which
+//! stay **bit-identical per seed for every thread count** — fault
+//! timelines included, since they never depend on evaluation order — which
 //! `rust/tests/parallel_runtime.rs` pins byte-for-byte.
 
 use std::collections::BTreeMap;
@@ -44,6 +64,8 @@ use crate::util::Json;
 use crate::workload::{per_kind_json, WorkloadKind};
 
 use super::event::{Event, EventQueue};
+use super::fault::{CrashMode, FailureSummary, FaultPlan};
+use super::fleet::ShardSpec;
 use super::router::RouterKind;
 use super::shard::{Shard, SimRequest};
 
@@ -57,8 +79,16 @@ const CLUSTER_RECORDER_CAP: usize = 256;
 /// Cluster shape and batching policy.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// Homogeneous shard count, used only when `fleet` is empty.
     pub shards: usize,
     pub router: RouterKind,
+    /// Heterogeneous fleet: one [`ShardSpec`] per shard, in order. Empty
+    /// means `shards` copies of [`ShardSpec::mixed`] (the paper baseline),
+    /// which reproduces the historical homogeneous simulator bit for bit.
+    pub fleet: Vec<ShardSpec>,
+    /// Seeded fault injection (crashes/restarts, stragglers). `None` runs
+    /// the fault-free simulator unchanged.
+    pub faults: Option<FaultPlan>,
     /// Dispatch a batch as soon as one size queue holds this many signals.
     pub window_signals: usize,
     /// Longest a queued request waits before an idle shard serves a partial
@@ -71,11 +101,12 @@ pub struct ClusterConfig {
     /// pre-compute the plan table, the event core commits sequentially.
     /// Reports are bit-identical for every setting.
     pub threads: Parallelism,
-    /// Pre-computed plan table shared across runs. The table depends only
-    /// on the trace and the engine config — never on the shard count — so
-    /// callers that simulate one trace many times (the capacity planner's
-    /// probes) compute it once with [`warm_plans`] and set it here; `None`
-    /// with `threads > 1` computes it per run.
+    /// Pre-computed plan table shared across runs, for shards whose spec
+    /// leaves `sys` untouched. The table depends only on the trace and the
+    /// engine config — never on the shard count — so callers that simulate
+    /// one trace many times (the capacity planner's probes) compute it once
+    /// with [`warm_plans`] and set it here; `None` with `threads > 1`
+    /// computes it per run (and per distinct fleet system).
     pub warm: Option<Arc<WarmPlans>>,
     /// Collect Chrome-traceable span events for sampled requests (the
     /// `cluster --trace-out` path). Gates ONLY the trace buffer: metrics
@@ -89,6 +120,8 @@ impl ClusterConfig {
         Self {
             shards: 4,
             router: RouterKind::SizeAffinity,
+            fleet: Vec::new(),
+            faults: None,
             window_signals: 32,
             max_wait_us: 50.0,
             sys,
@@ -104,12 +137,24 @@ impl ClusterConfig {
     pub fn default_hw() -> Self {
         Self::new(SystemConfig::baseline().with_hw_opt(), OptLevel::SwHw)
     }
+
+    /// The per-shard specs this config actually simulates: `fleet` as
+    /// given, or `shards` paper-baseline shards when no fleet is set.
+    pub fn effective_fleet(&self) -> Vec<ShardSpec> {
+        if self.fleet.is_empty() {
+            vec![ShardSpec::mixed(); self.shards]
+        } else {
+            self.fleet.clone()
+        }
+    }
 }
 
 /// Per-shard rollup in the final report.
 #[derive(Debug, Clone)]
 pub struct ShardSummary {
     pub shard: usize,
+    /// Device class name from the shard's [`ShardSpec`].
+    pub class: &'static str,
     pub requests: u64,
     pub signals: u64,
     pub batches: u64,
@@ -147,6 +192,9 @@ pub struct ClusterReport {
     /// Requests served per workload kind (mixed-workload traffic).
     pub per_kind: BTreeMap<WorkloadKind, u64>,
     pub per_shard: Vec<ShardSummary>,
+    /// Fault accounting: crashes, restarts, requeues, failed requests, and
+    /// straggler exposure. All zeros on a fault-free run.
+    pub failures: FailureSummary,
     /// 16-hex FNV digest of the run's metrics-registry exposition —
     /// deterministic per seed, pinned to prove tracing doesn't perturb it.
     pub obs_digest: String,
@@ -239,6 +287,7 @@ impl ClusterReport {
                         .map(|s| {
                             Json::obj(vec![
                                 ("shard", Json::num(s.shard as f64)),
+                                ("class", Json::str(s.class)),
                                 ("requests", Json::num(s.requests as f64)),
                                 ("signals", Json::num(s.signals as f64)),
                                 ("batches", Json::num(s.batches as f64)),
@@ -253,6 +302,7 @@ impl ClusterReport {
                         .collect(),
                 ),
             ),
+            ("failures", self.failures.to_json()),
             (
                 "obs",
                 Json::obj(vec![
@@ -272,14 +322,22 @@ struct SimArrival {
 }
 
 /// Pre-compute, across `cfg.threads` workers, every plan-cache entry the
-/// simulation can demand: each distinct `(kind, n)` in the trace × the
-/// power-of-two padded batch ladder up to that shape's total signal count
-/// (batches are padded to the next power of two, so no other batch size can
-/// ever be dispatched). Entries are evaluated by scratch engines configured
-/// exactly like the shard engines, so each value is bit-identical to what a
-/// shard would compute on a cold miss — warming changes wall-clock time,
-/// never the report.
+/// simulation can demand of an engine configured with `cfg.sys`: each
+/// distinct `(kind, n)` in the trace × the power-of-two padded batch ladder
+/// up to that shape's total signal count (batches are padded to the next
+/// power of two, so no other batch size can ever be dispatched). Entries
+/// are evaluated by scratch engines configured exactly like the shard
+/// engines, so each value is bit-identical to what a shard would compute on
+/// a cold miss — warming changes wall-clock time, never the report.
 pub fn warm_plans(trace: &Trace, cfg: &ClusterConfig) -> Result<WarmPlans> {
+    warm_plans_for(trace, cfg, &cfg.sys)
+}
+
+/// [`warm_plans`] against an explicit engine system — what a heterogeneous
+/// fleet needs: one warm table per *distinct* shard [`SystemConfig`], since
+/// the same plan key prices differently under different stack counts or
+/// PIM densities.
+pub fn warm_plans_for(trace: &Trace, cfg: &ClusterConfig, sys: &SystemConfig) -> Result<WarmPlans> {
     let mut totals: BTreeMap<(WorkloadKind, usize), u64> = BTreeMap::new();
     for e in &trace.entries {
         *totals.entry((e.kind, e.n)).or_insert(0) += e.batch as u64;
@@ -304,7 +362,7 @@ pub fn warm_plans(trace: &Trace, cfg: &ClusterConfig) -> Result<WarmPlans> {
     }
     let keys: Vec<(usize, usize)> = keys.into_iter().collect();
     let scratch = |chunk: &[(usize, usize)]| {
-        let mut engine = FftEngine::builder().system(&cfg.sys).passes(cfg.passes).build();
+        let mut engine = FftEngine::builder().system(sys).passes(cfg.passes).build();
         let mut out = Vec::with_capacity(chunk.len());
         for &(n, batch) in chunk {
             if let Ok(hit) = engine.plan(n, batch) {
@@ -330,12 +388,38 @@ pub fn run_cluster(trace: &Trace, cfg: &ClusterConfig) -> Result<ClusterReport> 
     run_cluster_traced(trace, cfg).map(|(report, _)| report)
 }
 
+/// Start batches on shard `s` until its slots are full or nothing ready
+/// holds `min_signals`, scheduling a `Complete` (stamped with the shard's
+/// crash epoch) for each. Returns whether anything dispatched.
+fn fill_slots(
+    shards: &mut [Shard],
+    s: usize,
+    now: u64,
+    min_signals: usize,
+    evq: &mut EventQueue,
+) -> Result<bool> {
+    let mut started = false;
+    while let Some((slot, service)) = shards[s].start_batch(now, min_signals)? {
+        let epoch = shards[s].epoch;
+        evq.push(now + service, Event::Complete { shard: s, slot, epoch });
+        started = true;
+    }
+    Ok(started)
+}
+
 /// [`run_cluster`] plus the observability pipeline it drove: the metrics
 /// registry, the flight recorder's exemplars, and — when `cfg.trace` is on
 /// — the Chrome-traceable span buffer (virtual-time timestamps), which the
 /// `cluster --trace-out` CLI writes out via [`crate::obs::chrome_trace`].
 pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(ClusterReport, Obs)> {
-    ensure!(cfg.shards > 0, "cluster needs at least one shard");
+    let fleet = cfg.effective_fleet();
+    ensure!(!fleet.is_empty(), "cluster needs at least one shard");
+    for spec in &fleet {
+        spec.validate()?;
+    }
+    if let Some(f) = &cfg.faults {
+        f.validate()?;
+    }
     ensure!(cfg.window_signals >= 1, "batching window must be at least 1 signal");
     ensure!(
         cfg.max_wait_us.is_finite() && cfg.max_wait_us >= 0.0,
@@ -357,33 +441,73 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
     let wait_ns = (cfg.max_wait_us * 1e3).round() as u64;
 
     // Workers compute, the event core commits: with threads > 1 every plan
-    // shape is evaluated across the pool up front, so the deterministic
-    // FIFO event loop below never blocks on a planner run (see module docs).
-    let warm = match (&cfg.warm, cfg.threads) {
-        (Some(w), _) => Some(Arc::clone(w)),
-        (None, Parallelism::Sequential) => None,
-        (None, _) => Some(Arc::new(warm_plans(trace, cfg)?)),
+    // shape is evaluated across the pool up front — once per distinct shard
+    // system — so the deterministic FIFO event loop below never blocks on a
+    // planner run (see module docs).
+    let systems: Vec<SystemConfig> = fleet.iter().map(|spec| spec.system(&cfg.sys)).collect();
+    let threaded = !matches!(cfg.threads, Parallelism::Sequential);
+    let mut warm_tables: Vec<Option<Arc<WarmPlans>>> = Vec::with_capacity(fleet.len());
+    {
+        let mut cache: Vec<(&SystemConfig, Option<Arc<WarmPlans>>)> = Vec::new();
+        for sys in &systems {
+            if let Some((_, w)) = cache.iter().find(|(cached, _)| *cached == sys) {
+                warm_tables.push(w.clone());
+                continue;
+            }
+            let w = if *sys == cfg.sys && cfg.warm.is_some() {
+                cfg.warm.clone()
+            } else if threaded {
+                Some(Arc::new(warm_plans_for(trace, cfg, sys)?))
+            } else {
+                None
+            };
+            cache.push((sys, w.clone()));
+            warm_tables.push(w);
+        }
+    }
+
+    // Fault decisions are pure functions of the plan + fleet size, fixed
+    // before virtual time starts (determinism across `--threads`).
+    let stragglers: Vec<f64> = match &cfg.faults {
+        Some(f) => f.straggler_multipliers(fleet.len()),
+        None => vec![1.0; fleet.len()],
     };
-    let mut shards: Vec<Shard> = (0..cfg.shards)
-        .map(|_| {
-            let mut b = FftEngine::builder().system(&cfg.sys).passes(cfg.passes);
-            if let Some(w) = &warm {
+    let crash_mode = cfg.faults.as_ref().map(|f| f.mode).unwrap_or(CrashMode::Requeue);
+
+    let mut shards: Vec<Shard> = fleet
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let mut b = FftEngine::builder().system(&systems[i]).passes(cfg.passes);
+            if let Some(w) = &warm_tables[i] {
                 b = b.warm_plans(Arc::clone(w));
             }
-            Shard::new(b.build())
+            Shard::with_spec(b.build(), *spec, stragglers[i])
         })
         .collect();
-    let mut router = cfg.router.build(cfg.shards);
+    let mut router = cfg.router.build(fleet.len());
     let mut latency = LogHistogram::new();
+    let mut failures = FailureSummary::default();
     let mut evq = EventQueue::new();
     evq.push(arrivals[0].at_ns, Event::Arrival { idx: 0 });
+    if let Some(f) = &cfg.faults {
+        // Horizon = last arrival: crashes during the final drain would only
+        // delay completions the schedule can no longer observe anyway.
+        let horizon_ns = arrivals.last().map(|a| a.at_ns).unwrap_or(0);
+        for (at_ns, shard, is_restart) in f.crash_schedule(fleet.len(), horizon_ns) {
+            let ev =
+                if is_restart { Event::Restart { shard } } else { Event::Crash { shard } };
+            evq.push(at_ns, ev);
+        }
+    }
 
     // The simulator drives the shared observability pipeline from its own
     // event queue: the injected VirtualClock reads whatever `now` the last
     // popped event carried, so every span/exemplar timestamp is virtual
     // time. Metrics and exemplars are always on (fixed policy, virtual
     // timestamps only — fully deterministic); `cfg.trace` gates only
-    // whether Chrome-trace events accumulate.
+    // whether Chrome-trace events accumulate. Fault counters are created
+    // lazily on the first fault event, so fault-free digests are unchanged.
     let clock = Arc::new(VirtualClock::new());
     let mut obs = Obs::with_clock(
         Arc::clone(&clock) as Arc<dyn crate::obs::Clock>,
@@ -404,45 +528,47 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
                 }
                 let a = &arrivals[idx];
                 let s = router.route(a.kind, a.n, a.signals, &shards);
-                let shard = &mut shards[s];
-                shard.enqueue(SimRequest {
+                shards[s].enqueue(SimRequest {
                     id: idx as u64,
                     kind: a.kind,
                     n: a.n,
                     signals: a.signals,
                     arrive_ns: now,
                 });
-                if !shard.busy {
-                    if let Some(service) = shard.start_batch(cfg.window_signals)? {
-                        shard.in_flight_start_ns = now;
-                        evq.push(now + service, Event::Complete { shard: s });
-                    } else if !shard.deadline_scheduled {
-                        shard.deadline_scheduled = true;
+                if !shards[s].is_busy() {
+                    let started = fill_slots(&mut shards, s, now, cfg.window_signals, &mut evq)?;
+                    if !started && !shards[s].deadline_scheduled {
+                        shards[s].deadline_scheduled = true;
                         evq.push(now + wait_ns, Event::Deadline { shard: s });
                     }
                 }
             }
             Event::Deadline { shard: s } => {
-                let shard = &mut shards[s];
-                shard.deadline_scheduled = false;
-                if !shard.busy {
-                    if let Some(service) = shard.start_batch(1)? {
-                        shard.in_flight_start_ns = now;
-                        evq.push(now + service, Event::Complete { shard: s });
-                    }
+                shards[s].deadline_scheduled = false;
+                if !shards[s].is_busy() {
+                    fill_slots(&mut shards, s, now, 1, &mut evq)?;
                 }
             }
-            Event::Complete { shard: s } => {
+            Event::Complete { shard: s, slot, epoch } => {
+                if !shards[s].completes(slot, epoch) {
+                    // Raced a crash: the batch was aborted and its requests
+                    // already requeued or failed.
+                    continue;
+                }
                 // Completions — not stale deadlines popping after the last
                 // batch — define the makespan (and thus utilization).
                 end_ns = end_ns.max(now);
-                let shard = &mut shards[s];
-                let start_ns = shard.in_flight_start_ns;
-                let service_ns = shard.in_flight_service_ns;
-                let occupancy = shard.in_flight_occupancy;
-                let attr = std::mem::take(&mut shard.in_flight_attr);
+                let f = shards[s].finish_batch(slot);
                 obs.registry.inc("cluster_batches_total");
-                for req in shard.finish_batch() {
+                // Feedback for learning routers: straggler-scaled observed
+                // time per padded signal on this shard's device class.
+                router.observe(
+                    f.kind,
+                    f.n,
+                    shards[s].spec().class.name(),
+                    f.service_ns as f64 / f.padded.max(1) as f64,
+                );
+                for req in &f.requests {
                     let latency_ns = now.saturating_sub(req.arrive_ns);
                     latency.record(latency_ns);
                     obs.registry.observe("cluster_latency_ns", latency_ns);
@@ -450,8 +576,15 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
                         .inc_with("cluster_requests_total", &[("kind", req.kind.name())]);
                     obs.registry.add("cluster_signals_total", req.signals as u64);
                     if obs.sampled(req.id) {
-                        let spans =
-                            sim_spans(&req, s, now, start_ns, service_ns, occupancy, &attr);
+                        let spans = sim_spans(
+                            req,
+                            s,
+                            now,
+                            f.start_ns,
+                            f.service_ns,
+                            f.occupancy,
+                            &f.attr,
+                        );
                         for sp in &spans {
                             obs.trace.push(sp.clone());
                         }
@@ -466,16 +599,58 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
                     }
                 }
                 // Work-conserving: serve whatever accumulated while busy.
-                if let Some(service) = shard.start_batch(1)? {
-                    shard.in_flight_start_ns = now;
-                    evq.push(now + service, Event::Complete { shard: s });
+                fill_slots(&mut shards, s, now, 1, &mut evq)?;
+            }
+            Event::Crash { shard: s } => {
+                failures.crashes += 1;
+                obs.registry.inc("cluster_crashes_total");
+                shards[s].down = true;
+                // Abort in-flight batches (bumping the epoch turns their
+                // scheduled `Complete`s stale); queued-but-undispatched
+                // requests stay on the shard's durable queue for restart.
+                for req in shards[s].abort_in_flight() {
+                    match crash_mode {
+                        CrashMode::Requeue => {
+                            failures.requeued += 1;
+                            obs.registry.inc("cluster_requeued_total");
+                            // Original arrive_ns kept: the wasted service
+                            // lands in the request's end-to-end latency.
+                            let t = router.route(req.kind, req.n, req.signals, &shards);
+                            shards[t].enqueue(req);
+                            if !shards[t].is_busy() {
+                                let started = fill_slots(
+                                    &mut shards,
+                                    t,
+                                    now,
+                                    cfg.window_signals,
+                                    &mut evq,
+                                )?;
+                                if !started && !shards[t].deadline_scheduled {
+                                    shards[t].deadline_scheduled = true;
+                                    evq.push(now + wait_ns, Event::Deadline { shard: t });
+                                }
+                            }
+                        }
+                        CrashMode::Fail => {
+                            failures.failed += 1;
+                            obs.registry.inc("cluster_failed_total");
+                        }
+                    }
                 }
+            }
+            Event::Restart { shard: s } => {
+                failures.restarts += 1;
+                obs.registry.inc("cluster_restarts_total");
+                shards[s].down = false;
+                // Anything queued while down has waited past any window:
+                // drain immediately (work-conserving, partial batches OK).
+                fill_slots(&mut shards, s, now, 1, &mut evq)?;
             }
         }
     }
 
     let mut report = ClusterReport {
-        shards: cfg.shards,
+        shards: fleet.len(),
         router: cfg.router.name(),
         requests: 0,
         signals: 0,
@@ -489,7 +664,8 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
         cache_hits: 0,
         cache_misses: 0,
         per_kind: BTreeMap::new(),
-        per_shard: Vec::with_capacity(cfg.shards),
+        per_shard: Vec::with_capacity(fleet.len()),
+        failures,
         obs_digest: obs.registry.digest(),
         obs_exemplars: obs.recorder.len() as u64,
     };
@@ -508,8 +684,13 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
         report.movement.add_assign(&st.movement);
         report.cache_hits += hits;
         report.cache_misses += misses;
+        if shard.service_mult() > 1.0 {
+            report.failures.straggler_shards += 1;
+            report.failures.straggler_busy_ns += st.busy_ns;
+        }
         report.per_shard.push(ShardSummary {
             shard: i,
+            class: shard.spec().class.name(),
             requests: st.requests,
             signals: st.signals,
             batches: st.batches,
@@ -520,10 +701,13 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
             cache_misses: misses,
         });
     }
+    // The conservation law, extended for fault injection: every submitted
+    // request ends in exactly one terminal bin (served or failed).
     ensure!(
-        report.requests == arrivals.len() as u64,
-        "simulator lost requests: served {} of {}",
+        report.requests + report.failures.failed == arrivals.len() as u64,
+        "simulator lost requests: served {} + failed {} of {}",
         report.requests,
+        report.failures.failed,
         arrivals.len()
     );
     ensure!(
@@ -614,6 +798,7 @@ fn sim_spans(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::parse_fleet;
     use crate::coordinator::{Arrival, SizeMix, Workload};
 
     fn trace(requests: usize, rps: f64, sizes: &[usize], seed: u64) -> Trace {
@@ -640,7 +825,9 @@ mod tests {
         assert_eq!(served, 500);
         for s in &rep.per_shard {
             assert!(s.utilization >= 0.0 && s.utilization <= 1.0);
+            assert_eq!(s.class, "mixed");
         }
+        assert_eq!(rep.failures, FailureSummary::default());
     }
 
     #[test]
@@ -721,6 +908,12 @@ mod tests {
         let mut cfg = ClusterConfig::default_hw();
         cfg.window_signals = 0;
         assert!(run_cluster(&t, &cfg).is_err());
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.fleet = vec![ShardSpec { threads: 0, ..ShardSpec::mixed() }];
+        assert!(run_cluster(&t, &cfg).is_err());
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.faults = Some(FaultPlan { restart_after_us: 0.0, ..FaultPlan::default() });
+        assert!(run_cluster(&t, &cfg).is_err());
         let cfg = ClusterConfig::default_hw();
         assert!(run_cluster(&Trace::default(), &cfg).is_err());
     }
@@ -744,6 +937,97 @@ mod tests {
             "1-shard p99 {} should exceed 8-shard p99 {}",
             r1.latency_p_us(99.0),
             r8.latency_p_us(99.0)
+        );
+    }
+
+    #[test]
+    fn empty_fleet_matches_homogeneous_shards() {
+        // The tentpole's compatibility contract: an explicit all-baseline
+        // fleet is bit-identical to the historical `shards = N` config.
+        let t = trace(300, 250_000.0, &[64, 8192], 3);
+        let mut legacy = ClusterConfig::default_hw();
+        legacy.shards = 3;
+        let mut fleet = ClusterConfig::default_hw();
+        fleet.fleet = vec![ShardSpec::mixed(); 3];
+        fleet.shards = 999; // must be ignored when a fleet is set
+        let a = run_cluster(&t, &legacy).unwrap().to_json().to_string();
+        let b = run_cluster(&t, &fleet).unwrap().to_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_serves_and_labels_classes() {
+        let t = trace(400, 300_000.0, &[4096, 16384], 13);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.fleet = parse_fleet("gpu:1,pim:1,mixed:1").unwrap();
+        cfg.router = RouterKind::CostAware;
+        let rep = run_cluster(&t, &cfg).unwrap();
+        assert_eq!(rep.requests, 400);
+        assert_eq!(rep.shards, 3);
+        let classes: Vec<&str> = rep.per_shard.iter().map(|s| s.class).collect();
+        assert_eq!(classes, vec!["gpu-only", "pim-heavy", "mixed"]);
+        // The GPU-only shard moves no PIM command traffic.
+        assert_eq!(rep.per_shard[0].movement.pim_cmd_bytes, 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_threaded_run_is_byte_identical() {
+        let t = trace(400, 400_000.0, &[4096, 16384], 21);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.fleet = parse_fleet("gpu:2,pim:2").unwrap();
+        cfg.router = RouterKind::CostAware;
+        cfg.faults = Some(FaultPlan::parse("mtbf=3000,down=500,straggler=0.5:3,seed=9").unwrap());
+        let want = run_cluster(&t, &cfg).unwrap().to_json().to_string();
+        cfg.threads = crate::runtime::Parallelism::Fixed(2);
+        let got = run_cluster(&t, &cfg).unwrap().to_json().to_string();
+        assert_eq!(got, want, "fleet + faults must stay thread-count invariant");
+    }
+
+    #[test]
+    fn crashes_requeue_and_conserve() {
+        let t = trace(600, 500_000.0, &[4096, 8192], 17);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 3;
+        cfg.faults = Some(FaultPlan::parse("mtbf=500,down=200,mode=requeue,seed=4").unwrap());
+        let rep = run_cluster(&t, &cfg).unwrap();
+        // Requeue mode: nothing is lost, every submitted request serves.
+        assert_eq!(rep.requests, 600);
+        assert_eq!(rep.failures.failed, 0);
+        assert!(rep.failures.crashes > 0, "500µs MTBF must crash: {:?}", rep.failures);
+        assert!(rep.failures.restarts > 0);
+        assert!(rep.failures.requeued > 0, "crashes must catch batches mid-flight");
+    }
+
+    #[test]
+    fn crashes_fail_mode_accounts_losses() {
+        let t = trace(600, 500_000.0, &[4096, 8192], 17);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 3;
+        cfg.faults = Some(FaultPlan::parse("mtbf=500,down=200,mode=fail,seed=4").unwrap());
+        let rep = run_cluster(&t, &cfg).unwrap();
+        assert!(rep.failures.failed > 0, "fail mode must lose in-flight requests");
+        assert_eq!(rep.requests + rep.failures.failed, 600, "conservation with losses");
+        assert_eq!(rep.failures.requeued, 0);
+        assert_eq!(rep.latency_ns.count(), rep.requests);
+    }
+
+    #[test]
+    fn stragglers_slow_the_tail_and_are_reported() {
+        let t = trace(500, 400_000.0, &[8192], 19);
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.shards = 4;
+        cfg.router = RouterKind::RoundRobin;
+        let clean = run_cluster(&t, &cfg).unwrap();
+        cfg.faults = Some(FaultPlan::parse("straggler=0.5:8,seed=2").unwrap());
+        let slow = run_cluster(&t, &cfg).unwrap();
+        assert_eq!(slow.failures.straggler_shards, 2);
+        assert!(slow.failures.straggler_busy_ns > 0);
+        assert_eq!(slow.requests, 500);
+        assert!(
+            slow.latency_p_us(99.0) > clean.latency_p_us(99.0),
+            "8× stragglers must hurt p99: {} vs {}",
+            slow.latency_p_us(99.0),
+            clean.latency_p_us(99.0)
         );
     }
 }

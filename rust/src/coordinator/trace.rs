@@ -195,6 +195,11 @@ pub enum Arrival {
     /// Sinusoidal rate swing of amplitude `depth` (0 ≤ depth < 1) over
     /// `period_us` — the day/night envelope of a user-facing service.
     Diurnal { period_us: f64, depth: f64 },
+    /// One-shot spike: `factor`× the base rate for `duration_us` starting
+    /// at `at_us`, base rate elsewhere — the "everyone hit refresh at once"
+    /// overload a capacity plan should survive. Unlike `Burst` this is not
+    /// mean-preserving: the crowd is extra load, which is the point.
+    FlashCrowd { at_us: f64, duration_us: f64, factor: f64 },
 }
 
 impl Arrival {
@@ -205,7 +210,12 @@ impl Arrival {
             "poisson" => Arrival::Poisson,
             "burst" => Arrival::Burst { period_us: 10_000.0, duty: 0.1, factor: 5.0 },
             "diurnal" => Arrival::Diurnal { period_us: 200_000.0, depth: 0.8 },
-            other => bail!("unknown arrival process '{other}' (poisson|burst|diurnal)"),
+            "flash-crowd" | "flash" => {
+                Arrival::FlashCrowd { at_us: 20_000.0, duration_us: 10_000.0, factor: 8.0 }
+            }
+            other => {
+                bail!("unknown arrival process '{other}' (poisson|burst|diurnal|flash-crowd)")
+            }
         })
     }
 
@@ -214,6 +224,7 @@ impl Arrival {
             Arrival::Poisson => "poisson",
             Arrival::Burst { .. } => "burst",
             Arrival::Diurnal { .. } => "diurnal",
+            Arrival::FlashCrowd { .. } => "flash-crowd",
         }
     }
 
@@ -243,6 +254,20 @@ impl Arrival {
                 );
                 ensure!((0.0..1.0).contains(&depth), "diurnal depth {depth} must be in [0, 1)");
             }
+            Arrival::FlashCrowd { at_us, duration_us, factor } => {
+                ensure!(
+                    at_us.is_finite() && at_us >= 0.0,
+                    "flash-crowd start {at_us} µs must be finite and non-negative"
+                );
+                ensure!(
+                    duration_us.is_finite() && duration_us > 0.0,
+                    "flash-crowd duration {duration_us} µs must be positive"
+                );
+                ensure!(
+                    factor.is_finite() && factor >= 1.0,
+                    "flash-crowd factor {factor} must be at least 1"
+                );
+            }
         }
         Ok(())
     }
@@ -262,6 +287,13 @@ impl Arrival {
             }
             Arrival::Diurnal { period_us, depth } => {
                 (1.0 + depth * (std::f64::consts::TAU * t_us / period_us).sin()).max(0.05)
+            }
+            Arrival::FlashCrowd { at_us, duration_us, factor } => {
+                if t_us >= at_us && t_us < at_us + duration_us {
+                    factor
+                } else {
+                    1.0
+                }
             }
         }
     }
@@ -570,6 +602,9 @@ mod tests {
             Arrival::Burst { period_us: 1000.0, duty: 0.5, factor: 3.0 },
             Arrival::Diurnal { period_us: 1000.0, depth: 1.5 },
             Arrival::Diurnal { period_us: f64::NAN, depth: 0.5 },
+            Arrival::FlashCrowd { at_us: -1.0, duration_us: 100.0, factor: 8.0 },
+            Arrival::FlashCrowd { at_us: 0.0, duration_us: 0.0, factor: 8.0 },
+            Arrival::FlashCrowd { at_us: 0.0, duration_us: 100.0, factor: 0.5 },
         ] {
             assert!(bad.validate().is_err(), "{bad:?} should be rejected");
             let mix = SizeMix::uniform(&[64]).unwrap();
@@ -579,6 +614,34 @@ mod tests {
         assert!(Workload::new(Arrival::Poisson, 0.0, mix).is_err());
         assert!(Arrival::parse("burst").unwrap().validate().is_ok());
         assert!(Arrival::parse("diurnal").unwrap().validate().is_ok());
+        assert!(Arrival::parse("flash-crowd").unwrap().validate().is_ok());
+        assert_eq!(Arrival::parse("flash").unwrap().name(), "flash-crowd");
+    }
+
+    #[test]
+    fn flash_crowd_spikes_inside_its_window_only() {
+        let fc = Arrival::FlashCrowd { at_us: 5_000.0, duration_us: 2_000.0, factor: 8.0 };
+        assert_eq!(fc.rate_multiplier(0.0), 1.0);
+        assert_eq!(fc.rate_multiplier(5_000.0), 8.0);
+        assert_eq!(fc.rate_multiplier(6_999.0), 8.0);
+        assert_eq!(fc.rate_multiplier(7_000.0), 1.0);
+        // Arrivals concentrate inside the crowd window: the window holds
+        // far more than its share of the trace.
+        let mix = SizeMix::uniform(&[64]).unwrap();
+        let wl = Workload::new(fc, 1_000_000.0, mix).unwrap();
+        let t = wl.generate(20_000, 5);
+        let span_us = t.entries.last().unwrap().at_us;
+        let in_crowd =
+            t.entries.iter().filter(|e| e.at_us >= 5_000.0 && e.at_us < 7_000.0).count() as f64;
+        let frac = in_crowd / t.entries.len() as f64;
+        let window_share = 2_000.0 / span_us;
+        assert!(
+            frac > 3.0 * window_share,
+            "crowd window holds {frac:.3} of arrivals vs {window_share:.3} time share"
+        );
+        for w in t.entries.windows(2) {
+            assert!(w[1].at_us >= w[0].at_us);
+        }
     }
 
     #[test]

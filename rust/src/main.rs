@@ -19,7 +19,8 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
 use pimacolaba::cluster::{
-    plan_capacity, run_cluster, run_cluster_traced, ClusterConfig, RouterKind,
+    parse_fleet, plan_capacity, plan_fleet, run_cluster, run_cluster_traced, ClusterConfig,
+    FaultPlan, RouterKind,
 };
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{
@@ -533,11 +534,33 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let mut cfg = ClusterConfig::new(sys, passes);
     cfg.threads = parse_threads(args)?;
     cfg.shards = args.get_usize("shards", 8)?;
+    // `--fleet auto` asks the planner to search fleet shapes (needs
+    // --slo-us); any other spec pins an explicit heterogeneous fleet.
+    let fleet_auto = args.get("fleet") == Some("auto");
+    if let Some(spec) = args.get("fleet").filter(|&s| s != "auto") {
+        cfg.fleet = parse_fleet(spec)?;
+    }
+    if fleet_auto {
+        ensure!(
+            args.get("slo-us").is_some(),
+            "--fleet auto searches fleet shapes against a latency target; add --slo-us"
+        );
+    }
+    if let Some(spec) = args.get("faults") {
+        cfg.faults = Some(FaultPlan::parse(spec)?);
+    }
     // Capacity planning defaults to a load-spreading router: size-affinity
     // pins each size to one home shard, so on a narrow size mix extra
     // shards would never absorb load and no shard count could meet the SLO.
-    let router_default =
-        if args.get("slo-us").is_some() { "least-loaded" } else { "size-affinity" };
+    // Heterogeneous fleets default to the router that learns per-class
+    // costs — on a uniform fleet it degenerates to least-loaded anyway.
+    let router_default = if args.get("slo-us").is_some() {
+        "least-loaded"
+    } else if !cfg.fleet.is_empty() {
+        "cost-aware"
+    } else {
+        "size-affinity"
+    };
     cfg.router = RouterKind::parse(args.get_or("router", router_default))?;
     cfg.window_signals = args.get_usize("window", 32)?;
     cfg.max_wait_us = args.get_f64("wait-us", 50.0)?;
@@ -557,18 +580,34 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let json = if args.get("slo-us").is_some() {
         let slo_us = args.get_f64("slo-us", 0.0)?;
         let max_shards = args.get_usize("max-shards", 1024)?;
-        let plan = plan_capacity(&trace, &cfg, slo_us, max_shards)?;
-        for p in &plan.probes {
-            println!(
-                "  probe {:>5} shards: p99 {:>12.1} µs  {}",
-                p.shards,
-                p.p99_us,
-                if p.meets { "meets SLO" } else { "misses" }
-            );
+        if fleet_auto {
+            let plan = plan_fleet(&trace, &cfg, slo_us, max_shards)?;
+            for p in &plan.probes {
+                println!(
+                    "  probe {:>8} × {:>4} shards: p99 {:>12.1} µs  {}",
+                    p.profile,
+                    p.shards,
+                    p.p99_us,
+                    if p.meets { "meets SLO" } else { "misses" }
+                );
+            }
+            println!("{}", plan.summary());
+            println!("{}", plan.report.summary());
+            plan.to_json()
+        } else {
+            let plan = plan_capacity(&trace, &cfg, slo_us, max_shards)?;
+            for p in &plan.probes {
+                println!(
+                    "  probe {:>5} shards: p99 {:>12.1} µs  {}",
+                    p.shards,
+                    p.p99_us,
+                    if p.meets { "meets SLO" } else { "misses" }
+                );
+            }
+            println!("{}", plan.summary());
+            println!("{}", plan.report.summary());
+            plan.to_json()
         }
-        println!("{}", plan.summary());
-        println!("{}", plan.report.summary());
-        plan.to_json()
     } else {
         let trace_out = args.get("trace-out").map(|s| s.to_string());
         cfg.trace = trace_out.is_some();
@@ -582,14 +621,28 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!("{}", report.summary());
         for s in &report.per_shard {
             println!(
-                "  shard {:>3}: {:>8} requests {:>6} batches  utilization {:>5.1}%  \
+                "  shard {:>3} ({:>9}): {:>8} requests {:>6} batches  utilization {:>5.1}%  \
                  gpu {:>9.1} MB  pim-cmd {:>7.1} MB",
                 s.shard,
+                s.class,
                 s.requests,
                 s.batches,
                 s.utilization * 100.0,
                 s.movement.gpu_bytes / 1e6,
                 s.movement.pim_cmd_bytes / 1e6,
+            );
+        }
+        if cfg.faults.is_some() {
+            let f = &report.failures;
+            println!(
+                "  failures: {} crashes, {} restarts, {} requeued, {} failed; \
+                 {} straggler shards ({:.1} ms slow busy)",
+                f.crashes,
+                f.restarts,
+                f.requeued,
+                f.failed,
+                f.straggler_shards,
+                f.straggler_busy_ns as f64 / 1e6,
             );
         }
         report.to_json()

@@ -81,18 +81,58 @@ pub struct Admission {
     bucket: Option<TokenBucket>,
     max_inflight: usize,
     inflight: usize,
+    /// EWMA of observed per-request service time, ns (0 = no observation
+    /// yet). Fed by the reactor on every completed batch; drives the
+    /// saturation retry hint.
+    service_est_ns: f64,
+    /// Releases that arrived with no matching admit. Never panics the
+    /// data path — the reactor exports this so a pairing bug shows up as
+    /// a nonzero counter instead of a silent inflight underflow.
+    release_underflow: u64,
 }
 
-/// Retry hint for saturation rejects: the bottleneck is service capacity,
-/// not token accrual, so there is no exact time to quote — 100µs is a
-/// round trip through a typical batch.
-const SATURATED_RETRY_NS: u64 = 100_000;
+/// Saturation retry hint when no service time has been observed yet:
+/// 100µs is a round trip through a typical batch.
+const SATURATED_RETRY_DEFAULT_NS: u64 = 100_000;
+/// Bounds on the load-derived saturation hint. The floor keeps a client
+/// from hammering a tier whose batches finish in nanoseconds; the cap
+/// keeps one pathological observation from parking clients for seconds.
+const SATURATED_RETRY_FLOOR_NS: u64 = 1_000;
+const SATURATED_RETRY_CAP_NS: u64 = 100_000_000;
+/// EWMA weight for new service-time observations.
+const SERVICE_EST_ALPHA: f64 = 0.25;
 
 impl Admission {
     /// `admit_rps == 0` disables the token bucket (inflight cap only).
     pub fn new(admit_rps: f64, burst: u64, max_inflight: usize) -> Self {
         let bucket = if admit_rps > 0.0 { Some(TokenBucket::new(admit_rps, burst)) } else { None };
-        Self { bucket, max_inflight, inflight: 0 }
+        Self { bucket, max_inflight, inflight: 0, service_est_ns: 0.0, release_underflow: 0 }
+    }
+
+    /// Fold one observed per-request service time (ns) into the EWMA that
+    /// backs [`saturated_retry_ns`](Self::saturated_retry_ns).
+    pub fn note_service_ns(&mut self, ns: f64) {
+        if !ns.is_finite() || ns <= 0.0 {
+            return;
+        }
+        self.service_est_ns = if self.service_est_ns == 0.0 {
+            ns
+        } else {
+            self.service_est_ns * (1.0 - SERVICE_EST_ALPHA) + ns * SERVICE_EST_ALPHA
+        };
+    }
+
+    /// Retry hint for saturation rejects, ns. The bottleneck is service
+    /// capacity, so the honest answer is "roughly how long until the
+    /// inflight set drains": the EWMA per-request service time times the
+    /// current inflight depth, clamped. Falls back to a fixed 100µs until
+    /// the first completion is observed.
+    pub fn saturated_retry_ns(&self) -> u64 {
+        if self.service_est_ns <= 0.0 {
+            return SATURATED_RETRY_DEFAULT_NS;
+        }
+        let hint = (self.service_est_ns * self.inflight as f64).round() as u64;
+        hint.clamp(SATURATED_RETRY_FLOOR_NS, SATURATED_RETRY_CAP_NS)
     }
 
     /// Admit one request at `now_ns`, claiming an inflight slot, or reject
@@ -101,7 +141,7 @@ impl Admission {
     /// request (on completion, drop, failure, or queue-full spill).
     pub fn try_admit(&mut self, now_ns: u64) -> Result<(), (RejectReason, u64)> {
         if self.inflight >= self.max_inflight {
-            return Err((RejectReason::Saturated, SATURATED_RETRY_NS));
+            return Err((RejectReason::Saturated, self.saturated_retry_ns()));
         }
         if let Some(bucket) = &mut self.bucket {
             bucket.try_take(now_ns).map_err(|retry| (RejectReason::RateLimited, retry))?;
@@ -110,10 +150,21 @@ impl Admission {
         Ok(())
     }
 
-    /// Give back an inflight slot.
+    /// Give back an inflight slot. An unmatched release is counted (see
+    /// [`release_underflows`](Self::release_underflows)), never panicked
+    /// on: hedged completions and shutdown races make this a path worth
+    /// surviving, and the counter makes it a path worth noticing.
     pub fn release(&mut self) {
-        debug_assert!(self.inflight > 0, "release without a matching admit");
-        self.inflight = self.inflight.saturating_sub(1);
+        if self.inflight == 0 {
+            self.release_underflow += 1;
+            return;
+        }
+        self.inflight -= 1;
+    }
+
+    /// Releases that had no matching admit (0 on every correct pairing).
+    pub fn release_underflows(&self) -> u64 {
+        self.release_underflow
     }
 
     pub fn inflight(&self) -> usize {
@@ -176,6 +227,67 @@ mod tests {
         a.release();
         assert!(a.try_admit(0).is_ok());
         assert_eq!(a.inflight(), 2);
+    }
+
+    #[test]
+    fn saturation_hint_derives_from_observed_load() {
+        // No observation yet: the fixed fallback.
+        let mut a = Admission::new(0.0, 1, 4);
+        for _ in 0..4 {
+            assert!(a.try_admit(0).is_ok());
+        }
+        let (_, cold_hint) = a.try_admit(0).unwrap_err();
+        assert_eq!(cold_hint, 100_000, "cold saturation falls back to the 100µs hint");
+
+        // First observation: hint = est × inflight depth.
+        a.note_service_ns(10_000.0);
+        let (_, hint) = a.try_admit(0).unwrap_err();
+        assert_eq!(hint, 40_000, "10µs est × 4 inflight");
+
+        // Heavier observed service times grow the hint (the EWMA climbs).
+        for _ in 0..64 {
+            a.note_service_ns(80_000.0);
+        }
+        let (_, slow_hint) = a.try_admit(0).unwrap_err();
+        assert!(
+            slow_hint > hint,
+            "hint must grow with observed service time ({slow_hint} !> {hint})"
+        );
+
+        // Deeper inflight also grows the hint, same estimate.
+        let mut deep = Admission::new(0.0, 1, 16);
+        deep.note_service_ns(10_000.0);
+        for _ in 0..16 {
+            assert!(deep.try_admit(0).is_ok());
+        }
+        let (_, deep_hint) = deep.try_admit(0).unwrap_err();
+        assert_eq!(deep_hint, 160_000, "10µs est × 16 inflight");
+        assert!(deep_hint > hint, "deeper inflight means a longer drain");
+
+        // The cap bounds a pathological estimate.
+        let mut wild = Admission::new(0.0, 1, 1);
+        wild.note_service_ns(1e12);
+        assert!(wild.try_admit(0).is_ok());
+        let (_, capped) = wild.try_admit(0).unwrap_err();
+        assert_eq!(capped, 100_000_000, "hint clamps at 100ms");
+    }
+
+    #[test]
+    fn unmatched_release_is_counted_not_underflowed() {
+        let mut a = Admission::new(0.0, 1, 2);
+        assert!(a.try_admit(0).is_ok());
+        a.release();
+        assert_eq!(a.inflight(), 0);
+        assert_eq!(a.release_underflows(), 0);
+        // A stray release (e.g. a double-completion bug) must not wrap
+        // inflight to usize::MAX — it is counted and ignored.
+        a.release();
+        assert_eq!(a.inflight(), 0);
+        assert_eq!(a.release_underflows(), 1);
+        // The gate still works afterwards.
+        assert!(a.try_admit(0).is_ok());
+        assert!(a.try_admit(0).is_ok());
+        assert!(a.try_admit(0).is_err());
     }
 
     #[test]

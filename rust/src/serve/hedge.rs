@@ -54,19 +54,36 @@ impl Hedger {
         );
     }
 
-    /// Batches overdue for a hedge at `now_ns`: marks them hedged and
-    /// returns `(seqno, primary_shard)` so the reactor can pick a
-    /// different shard for the copy. Each batch hedges at most once.
-    pub fn due(&mut self, now_ns: u64) -> Vec<(u64, usize)> {
-        let mut out = Vec::new();
-        for (&seqno, f) in self.flights.iter_mut() {
-            if !f.hedged && !f.completed && now_ns.saturating_sub(f.dispatched_ns) >= self.after_ns {
+    /// Batches overdue for a hedge at `now_ns`, as `(seqno,
+    /// primary_shard)` pairs so the reactor can pick a different shard for
+    /// the copy. Read-only: a candidate only becomes hedged once the
+    /// reactor confirms the copy was actually dispatched via
+    /// [`mark_hedged`](Self::mark_hedged) — a failed worker send leaves
+    /// the flight eligible for the next due check instead of leaking a
+    /// phantom `fired` count (whose straggler accounting would then never
+    /// balance).
+    pub fn due(&self, now_ns: u64) -> Vec<(u64, usize)> {
+        self.flights
+            .iter()
+            .filter(|(_, f)| {
+                !f.hedged
+                    && !f.completed
+                    && now_ns.saturating_sub(f.dispatched_ns) >= self.after_ns
+            })
+            .map(|(&seqno, f)| (seqno, f.primary_shard))
+            .collect()
+    }
+
+    /// Confirm a hedge copy of `seqno` was dispatched. Each batch hedges
+    /// at most once; confirming an unknown or already-hedged flight is a
+    /// no-op (the completion may have raced the send).
+    pub fn mark_hedged(&mut self, seqno: u64) {
+        if let Some(f) = self.flights.get_mut(&seqno) {
+            if !f.hedged {
                 f.hedged = true;
                 self.fired += 1;
-                out.push((seqno, f.primary_shard));
             }
         }
-        out
     }
 
     /// Record a completion from `shard`. Untracked seqnos are a logic
@@ -116,6 +133,7 @@ mod tests {
         h.track(1, 0, 2);
         let due = h.due(1_500);
         assert_eq!(due, vec![(1, 2)]);
+        h.mark_hedged(1);
         assert!(h.due(2_000).is_empty(), "a batch hedges at most once");
         // The hedge copy (shard 0) beats the primary (shard 2).
         assert_eq!(h.complete(1, 0), Completion::First { hedge_won: true });
@@ -129,8 +147,31 @@ mod tests {
         let mut h = Hedger::new(100);
         h.track(7, 0, 1);
         assert_eq!(h.due(200).len(), 1);
+        h.mark_hedged(7);
         assert_eq!(h.complete(7, 1), Completion::First { hedge_won: false });
         assert_eq!(h.complete(7, 3), Completion::Duplicate);
         assert_eq!((h.fired, h.won, h.wasted), (1, 0, 1));
+    }
+
+    #[test]
+    fn unconfirmed_hedge_candidates_stay_due_and_fire_nothing() {
+        // Regression: `due` used to mark flights hedged and bump `fired`
+        // before the reactor knew whether the worker send succeeded — a
+        // failed send leaked a phantom hedge whose straggler never came.
+        let mut h = Hedger::new(1_000);
+        h.track(3, 0, 0);
+        assert_eq!(h.due(2_000), vec![(3, 0)]);
+        // The send failed: nothing was confirmed, so the candidate comes
+        // back on the next check and no hedge is accounted.
+        assert_eq!(h.due(3_000), vec![(3, 0)]);
+        assert_eq!(h.fired, 0);
+        // An unhedged completion forgets the flight entirely — no waste,
+        // no straggler owed.
+        assert_eq!(h.complete(3, 0), Completion::First { hedge_won: false });
+        assert_eq!((h.fired, h.won, h.wasted), (0, 0, 0));
+        assert_eq!(h.unanswered(), 0);
+        // Confirming after completion (send raced the finish) is a no-op.
+        h.mark_hedged(3);
+        assert_eq!(h.fired, 0);
     }
 }

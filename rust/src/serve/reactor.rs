@@ -86,6 +86,7 @@ const M_CLOSE_FLUSHED: &str = "serve_close_flushed_total";
 const M_HEDGES_FIRED: &str = "serve_hedges_fired_total";
 const M_HEDGES_WON: &str = "serve_hedges_won_total";
 const M_HEDGES_WASTED: &str = "serve_hedges_wasted_total";
+const M_RELEASE_UNDERFLOW: &str = "serve_release_underflow_total";
 const M_LATENCY: &str = "serve_latency_ns";
 const M_QUEUE_DEPTH: &str = "serve_queue_depth";
 const M_OCCUPANCY: &str = "serve_batch_occupancy_pct";
@@ -499,8 +500,14 @@ struct Reactor {
     /// whose copy finished first.
     shard_served: Vec<(u64, u64, DataMovement)>,
     /// EWMA wall-clock service time per padded signal, keyed by batch
-    /// shape — the deadline-feasibility estimator.
+    /// shape — the deadline-feasibility estimator. Shapes the tier has
+    /// never served are seeded from `pricer`'s plan-cost model so the
+    /// very first request of a shape still gets honest deadline triage.
     est_ns_per_signal: BTreeMap<(WorkloadKind, usize), f64>,
+    /// Reactor-owned pricing engine (never runs spectra): seeds cold
+    /// `est_ns_per_signal` entries from the same §4.4.1/§5.1 cost model
+    /// the cluster simulator prices batches with.
+    pricer: FftEngine,
     first_admit_ns: Option<u64>,
     last_done_ns: u64,
     closing: Option<Sender<LiveReport>>,
@@ -531,6 +538,7 @@ impl Reactor {
             movement: DataMovement::default(),
             shard_served: vec![(0, 0, DataMovement::default()); shards],
             est_ns_per_signal: BTreeMap::new(),
+            pricer: FftEngine::builder().system(&cfg.sys).passes(cfg.passes).build(),
             first_admit_ns: None,
             last_done_ns: 0,
             closing: None,
@@ -680,7 +688,7 @@ impl Reactor {
                 self.dispatch(s, ready, now);
             }
         }
-        let due = match &mut self.hedger {
+        let due = match &self.hedger {
             Some(h) => h.due(now),
             None => Vec::new(),
         };
@@ -689,9 +697,15 @@ impl Reactor {
                 .filter(|&s| s != primary)
                 .min_by_key(|&s| (self.shard_busy[s], self.queues[s].pending_requests(), s));
             if let (Some(alt), Some(p)) = (alt, self.in_flight.get_mut(&seqno)) {
+                // Only a confirmed dispatch becomes a hedge: a failed send
+                // leaves the flight due again next pump rather than
+                // accounting a copy that never ran.
                 if self.worker_tx[alt].send(WorkerMsg::Run(p.batch.clone())).is_ok() {
                     p.hedge = Some((now, alt));
                     self.shard_busy[alt] += 1;
+                    if let Some(h) = &mut self.hedger {
+                        h.mark_hedged(seqno);
+                    }
                 }
             }
         }
@@ -699,10 +713,24 @@ impl Reactor {
 
     fn dispatch(&mut self, s: usize, ready: ReadyBatch<Sender<LiveResult>>, now: u64) {
         // Deadline triage against the EWMA service estimate for this shape.
+        // A shape the tier has never served has no EWMA — treating that as
+        // "free" used to wave hopeless first requests through triage, so
+        // cold entries are seeded from the plan-cost model instead (the
+        // first real completion starts blending wall clock in).
         let total: usize = ready.items.iter().map(|(r, _)| r.signals).sum();
         let padded = total.next_power_of_two();
-        let per_sig =
-            self.est_ns_per_signal.get(&(ready.kind, ready.n)).copied().unwrap_or(0.0);
+        let per_sig = match self.est_ns_per_signal.get(&(ready.kind, ready.n)) {
+            Some(&e) => e,
+            None => {
+                let seed = self
+                    .pricer
+                    .plan_workload(ready.kind, ready.n, padded)
+                    .map(|e| e.plan_ns.max(0.0) / padded.max(1) as f64)
+                    .unwrap_or(0.0);
+                self.est_ns_per_signal.insert((ready.kind, ready.n), seed);
+                seed
+            }
+        };
         let est_ns = (per_sig * padded as f64).round() as u64;
         let mut entries = Vec::with_capacity(ready.items.len());
         let mut replies = Vec::with_capacity(ready.items.len());
@@ -782,6 +810,10 @@ impl Reactor {
                 self.obs.registry.observe(M_OCCUPANCY, occupancy);
                 // Wall clock is the live tier's real service time — the
                 // deadline estimator tracks it, whatever the engine mode.
+                // The admission gate sees the per-request share so its
+                // saturation retry hint scales with observed load.
+                self.admission
+                    .note_service_ns(o.wall_ns as f64 / batch.entries.len().max(1) as f64);
                 let per_sig = o.wall_ns as f64 / padded.max(1) as f64;
                 let est = {
                     let e = self
@@ -877,6 +909,11 @@ impl Reactor {
     /// registry as one [`StatsSnapshot`].
     fn snapshot(&mut self) -> StatsSnapshot {
         self.obs.registry.set_gauge(M_INFLIGHT, self.admission.inflight() as f64);
+        // Always exported (0 on every correct run): an admit/release
+        // pairing bug shows up here instead of as a silent underflow.
+        self.obs
+            .registry
+            .set_counter(M_RELEASE_UNDERFLOW, self.admission.release_underflows());
         for s in 0..self.queues.len() {
             let label = s.to_string();
             let depth = self.queues[s].pending_requests() as f64;
@@ -1519,6 +1556,72 @@ mod tests {
         // latency samples and no deadlines there is nothing slow or
         // breaching to keep.
         assert_eq!(report.obs_exemplars, 0);
+    }
+
+    #[test]
+    fn cold_shapes_get_plan_cost_deadline_triage() {
+        // Regression: the deadline estimator used to treat a never-seen
+        // (kind, n) as free (EWMA 0), so the very first request of an
+        // expensive shape sailed through triage no matter how hopeless its
+        // deadline. The estimate is now seeded from the plan-cost model: a
+        // 1µs deadline on a 2^20-point FFT drops deterministically even
+        // when it is the first request the tier has ever seen.
+        let mut cfg = small_cfg();
+        cfg.shards = 1;
+        cfg.window_signals = 1;
+        cfg.deadline_policy = DeadlinePolicy::Drop;
+        let server = LiveServer::start(cfg).unwrap();
+        let client = server.client();
+        let rx = client
+            .submit(LiveRequest::new(0, WorkloadKind::Batch1d, 1 << 20, 1, 0).with_deadline(1));
+        let result = rx.recv().unwrap();
+        let report = server.shutdown().unwrap();
+        assert!(matches!(result, LiveResult::Dropped { .. }), "{result:?}");
+        assert_eq!(report.dropped, 1);
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.unaccounted(), 0);
+    }
+
+    #[test]
+    fn hedged_losers_release_exactly_once() {
+        // Satellite audit: the straggler of a won hedge race must not
+        // release admission slots a second time. Paced batches run long
+        // enough for hedges to fire; every fired hedge eventually produces
+        // one winner and one discarded straggler, and the release-pairing
+        // counter stays zero throughout.
+        let mut cfg = small_cfg();
+        cfg.shards = 2;
+        cfg.window_signals = 1;
+        cfg.pace = true;
+        cfg.hedge_after_us = Some(1.0);
+        let server = LiveServer::start(cfg).unwrap();
+        let client = server.client();
+        let rxs: Vec<_> = (0..40)
+            .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 65_536, 4, i)))
+            .collect();
+        for rx in rxs {
+            assert!(matches!(rx.recv().unwrap(), LiveResult::Served { .. }));
+        }
+        let snap = client.stats().unwrap();
+        let counters = snap.json.field("counters").unwrap();
+        let underflows = counters
+            .field("serve_release_underflow_total")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(underflows, 0.0, "stray admission releases detected");
+        let inflight =
+            snap.json.field("gauges").unwrap().field("serve_inflight").unwrap().as_f64().unwrap();
+        assert_eq!(inflight, 0.0, "all served: inflight must be back to zero, never negative");
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.requests, 40);
+        assert_eq!(report.unaccounted(), 0);
+        assert!(report.hedges_fired > 0, "paced 1µs-hedge run must fire hedges");
+        assert_eq!(
+            report.hedges_wasted, report.hedges_fired,
+            "every fired hedge has exactly one discarded straggler"
+        );
+        assert!(report.hedges_won <= report.hedges_fired);
     }
 
     #[test]

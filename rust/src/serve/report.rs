@@ -13,6 +13,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::cluster::FailureSummary;
 use crate::metrics::{depth_json, latency_us_json, plan_cache_json, DataMovement, LogHistogram};
 use crate::obs::SpanRecord;
 use crate::util::Json;
@@ -242,6 +243,11 @@ impl LiveReport {
                         .map(|s| {
                             Json::obj(vec![
                                 ("shard", Json::num(s.shard as f64)),
+                                // Live shard workers are homogeneous (all
+                                // built from the one ServeConfig system);
+                                // the key mirrors the cluster report's
+                                // heterogeneous-fleet class label.
+                                ("class", Json::str("mixed")),
                                 ("requests", Json::num(s.requests as f64)),
                                 ("signals", Json::num(s.signals as f64)),
                                 ("batches", Json::num(s.batches as f64)),
@@ -255,6 +261,13 @@ impl LiveReport {
                         })
                         .collect(),
                 ),
+            ),
+            // Cluster-schema failures section: the live tier injects no
+            // crashes or stragglers, so only the engine-failure bin is
+            // ever nonzero here.
+            (
+                "failures",
+                FailureSummary { failed: self.failed, ..Default::default() }.to_json(),
             ),
             // ---- live-only sections ----
             (

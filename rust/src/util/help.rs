@@ -76,16 +76,19 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
     SubcommandHelp {
         name: "cluster",
         text: "  cluster   [--shards K] [--router NAME]     simulate K shards serving an
-            [--arrival A] [--rps R]          open-loop trace in virtual time;
-            [--requests N] [--sizes a,b,..]  with --slo-us, binary-search the
-            [--mix PROFILE] [--window S]     minimal shard count meeting the
-            [--wait-us W] [--slo-us T]       p99 target. --workload-mix routes
-            [--max-shards M] [--seed S]      mixed request kinds; --threads
-            [--out FILE] [--opt L]           pre-plans in parallel (reports
-            [--passes SPEC] [--variant NAME] stay byte-identical). Writes a
-            [--workload-mix SPEC]            JSON report artifact to --out;
-            [--threads N] [--trace-out FILE] --trace-out adds a Chrome trace
-                                             of sampled request timelines.",
+            [--fleet SPEC] [--faults SPEC]   open-loop trace in virtual time;
+            [--arrival A] [--rps R]          with --slo-us, search the minimal
+            [--requests N] [--sizes a,b,..]  shard count meeting the p99
+            [--mix PROFILE] [--window S]     target (--fleet auto compares
+            [--wait-us W] [--slo-us T]       heterogeneous fleet shapes by
+            [--max-shards M] [--seed S]      cost). --fleet pins per-shard
+            [--out FILE] [--opt L]           hardware classes; --faults
+            [--passes SPEC] [--variant NAME] injects seeded crashes and
+            [--workload-mix SPEC]            stragglers (requeue-or-fail
+            [--threads N] [--trace-out FILE] accounting); reports stay byte-
+                                             identical across --threads.
+                                             Writes a JSON report to --out;
+                                             --trace-out adds a Chrome trace.",
     },
     SubcommandHelp {
         name: "workload",
@@ -132,9 +135,15 @@ passes:     every --opt site also takes --passes SPEC for an explicit pimc pass
             set: a preset, 'none', or a comma list over pairfuse | twiddle |
             maddsub | movelim | rowsched, e.g. --passes swhw,movelim,rowsched
 variants:   baseline | rf32 | rb2k | pim-per-bank | banks1024
-routers:    round-robin | size-affinity | least-loaded
-arrivals:   poisson | burst | diurnal
+routers:    round-robin | size-affinity | least-loaded | cost-aware
+arrivals:   poisson | burst | diurnal | flash-crowd
 mixes:      uniform | small-heavy | large-heavy | bimodal
+fleets:     --fleet is 'auto' (with --slo-us) or a comma list of
+            class[/sN][/uN][/tN][:count] terms over gpu | pim | mixed
+            (stacks / PIM units / batch slots), e.g. gpu:2,pim/u512:2,mixed
+faults:     --faults is a comma list over mtbf=US | down=US |
+            mode=requeue|fail | straggler=FRAC:MULT | seed=N,
+            e.g. mtbf=20000,down=2000,straggler=0.25:3
 kinds:      batch1d | fft2d | fft3d | real | convolution | stft — a kind SPEC
             ('--kinds', '--workload-mix') is 'all', one kind, or a comma list
             of kind[:weight] terms

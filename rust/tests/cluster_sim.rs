@@ -1,9 +1,13 @@
 //! Integration tests for the L4 cluster simulator: determinism of the JSON
-//! report artifact, router quality (plan-cache affinity), capacity-planner
-//! consistency with direct simulation, and workload envelope coverage.
+//! report artifact, router quality (plan-cache affinity, heterogeneous
+//! cost-awareness), capacity-planner consistency with direct simulation,
+//! fault-injection accounting, and workload envelope coverage.
 
-use pimacolaba::cluster::{plan_capacity, run_cluster, ClusterConfig, RouterKind};
+use pimacolaba::cluster::{
+    parse_fleet, plan_capacity, plan_fleet, run_cluster, ClusterConfig, FaultPlan, RouterKind,
+};
 use pimacolaba::coordinator::{Arrival, SizeMix, Trace, Workload};
+use pimacolaba::runtime::Parallelism;
 use pimacolaba::workload::{KindMix, ALL_KINDS};
 
 fn mixed_trace(requests: usize, rps: f64, seed: u64) -> Trace {
@@ -163,6 +167,109 @@ fn burst_and_diurnal_workloads_serve_cleanly() {
         assert!(rep.latency_p_us(99.0) >= rep.latency_p_us(50.0));
         assert!(rep.avg_occupancy() > 0.0 && rep.avg_occupancy() <= 1.0);
     }
+}
+
+#[test]
+fn fault_injected_fleet_reports_are_byte_identical_across_threads() {
+    // The hard determinism contract extended to the tentpole features:
+    // heterogeneous fleet + seeded crashes/stragglers + the learning
+    // router, identical JSON bytes at --threads 1, 2 and 8.
+    let trace = mixed_kind_trace(2000, 600_000.0, 23);
+    let mut reference: Option<String> = None;
+    for par in [Parallelism::Sequential, Parallelism::Fixed(2), Parallelism::Fixed(8)] {
+        let mut cfg = ClusterConfig::default_hw();
+        cfg.fleet = parse_fleet("gpu:1,pim/u512:1,mixed:2").unwrap();
+        cfg.router = RouterKind::CostAware;
+        cfg.faults = Some(
+            FaultPlan::parse("mtbf=1500,down=400,mode=requeue,straggler=0.25:3,seed=6").unwrap(),
+        );
+        cfg.threads = par;
+        let json = run_cluster(&trace, &cfg).unwrap().to_json().to_string();
+        match &reference {
+            None => reference = Some(json),
+            Some(want) => {
+                assert_eq!(&json, want, "fault run changed bytes at --threads {par}")
+            }
+        }
+    }
+}
+
+#[test]
+fn requeue_and_fail_modes_balance_the_conservation_law() {
+    // External check of the extended conservation law, straight off the
+    // report the CLI would write: served + failures.failed == submitted,
+    // in both crash modes, on a heterogeneous fleet.
+    let trace = mixed_trace(3000, 800_000.0, 31);
+    let mut cfg = ClusterConfig::default_hw();
+    cfg.fleet = parse_fleet("gpu:2,mixed:2").unwrap();
+    cfg.faults = Some(FaultPlan::parse("mtbf=300,down=150,mode=requeue,seed=8").unwrap());
+    let requeue = run_cluster(&trace, &cfg).unwrap();
+    assert_eq!(requeue.requests, 3000, "requeue mode must serve everything");
+    assert_eq!(requeue.failures.failed, 0);
+    assert!(requeue.failures.crashes > 0, "300µs MTBF must crash: {:?}", requeue.failures);
+    assert!(requeue.failures.restarts > 0);
+    assert!(requeue.failures.requeued > 0, "crashes must catch batches mid-flight");
+
+    cfg.faults = Some(FaultPlan::parse("mtbf=300,down=150,mode=fail,seed=8").unwrap());
+    let fail = run_cluster(&trace, &cfg).unwrap();
+    assert!(fail.failures.failed > 0, "fail mode must lose in-flight work");
+    assert_eq!(fail.requests + fail.failures.failed, 3000, "conservation with losses");
+    assert_eq!(fail.failures.requeued, 0);
+    assert_eq!(fail.latency_ns.count(), fail.requests, "only served requests have latencies");
+}
+
+#[test]
+fn cost_aware_beats_least_loaded_on_a_heterogeneous_fleet() {
+    // Two GPU-only shards price a 16k-point batch well above the two
+    // collaborative shards. Least-loaded equalizes queue depth in
+    // *signals*, so the slow class holds as much backlog as the fast one
+    // when measured in time; cost-aware learns per-class ns/signal from
+    // completions and balances *projected* time instead.
+    let trace = Workload::new(Arrival::Poisson, 4_000_000.0, SizeMix::uniform(&[16384]).unwrap())
+        .unwrap()
+        .generate(3000, 13);
+    let mut ll = ClusterConfig::default_hw();
+    ll.fleet = parse_fleet("gpu:2,mixed:2").unwrap();
+    ll.router = RouterKind::LeastLoaded;
+    let mut cost = ll.clone();
+    cost.router = RouterKind::CostAware;
+    let rep_ll = run_cluster(&trace, &ll).unwrap();
+    let rep_cost = run_cluster(&trace, &cost).unwrap();
+    assert_eq!(rep_ll.requests, 3000);
+    assert_eq!(rep_cost.requests, 3000);
+    assert!(
+        rep_cost.latency_p_us(99.0) < rep_ll.latency_p_us(99.0)
+            || rep_cost.cache_hit_rate() > rep_ll.cache_hit_rate(),
+        "cost-aware (p99 {:.1}µs, cache-hit {:.4}) should beat least-loaded \
+         (p99 {:.1}µs, cache-hit {:.4}) on a gpu:2,mixed:2 fleet",
+        rep_cost.latency_p_us(99.0),
+        rep_cost.cache_hit_rate(),
+        rep_ll.latency_p_us(99.0),
+        rep_ll.cache_hit_rate()
+    );
+}
+
+#[test]
+fn fleet_search_winner_is_consistent_with_a_direct_run() {
+    // The fleet planner's embedded report must be exactly what simulating
+    // its winning fleet produces — same determinism contract the capacity
+    // planner already keeps.
+    let trace = Workload::new(Arrival::Poisson, 4_000_000.0, SizeMix::uniform(&[16384]).unwrap())
+        .unwrap()
+        .generate(3000, 13);
+    let mut cfg = ClusterConfig::default_hw();
+    cfg.router = RouterKind::LeastLoaded;
+    let slo_us = 150.0;
+    let plan = plan_fleet(&trace, &cfg, slo_us, 64).unwrap();
+    assert!(plan.p99_us <= slo_us);
+    let mut direct = cfg.clone();
+    direct.fleet = plan.fleet.clone();
+    let rep = run_cluster(&trace, &direct).unwrap();
+    assert_eq!(
+        rep.to_json().to_string(),
+        plan.report.to_json().to_string(),
+        "fleet planner report must match a direct run of its winner"
+    );
 }
 
 #[test]
