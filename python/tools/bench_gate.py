@@ -13,6 +13,11 @@ What is gated:
     ``mpoints_per_s`` (higher is better). These are the single-thread
     per-transform rows (``radix2-legacy`` vs ``hostkernel``), so a kernel
     regression cannot hide behind batch-level parallelism.
+  * ``device`` rows — matched on (backend, log2_n); the metric is
+    ``mpoints_per_s`` (higher is better). These compare
+    ``ComputeBackend::execute`` on the host reference kernels against the
+    stage-dispatch device queue, so the audited device path's overhead is
+    gated alongside raw kernel speed.
   * ``cluster`` rows — matched on (shards, threads); the metric is
     ``throughput_rps`` (higher is better).
 
@@ -143,10 +148,12 @@ def main() -> int:
     fft_cand = index_rows(cand, "fft", ("kind", "log2_n", "threads"), "mpoints_per_s")
     kr_base = index_rows(base, "kernels", ("kernel", "log2_n"), "mpoints_per_s")
     kr_cand = index_rows(cand, "kernels", ("kernel", "log2_n"), "mpoints_per_s")
+    dv_base = index_rows(base, "device", ("backend", "log2_n"), "mpoints_per_s")
+    dv_cand = index_rows(cand, "device", ("backend", "log2_n"), "mpoints_per_s")
     cl_base = index_rows(base, "cluster", ("shards", "threads"), "throughput_rps")
     cl_cand = index_rows(cand, "cluster", ("shards", "threads"), "throughput_rps")
 
-    if not fft_base and not kr_base and not cl_base:
+    if not fft_base and not kr_base and not dv_base and not cl_base:
         print("bench-gate: SKIP — baseline has no comparable rows")
         return 0
 
@@ -155,6 +162,7 @@ def main() -> int:
     for name, b, c in (
         ("fft", fft_base, fft_cand),
         ("kernels", kr_base, kr_cand),
+        ("device", dv_base, dv_cand),
         ("cluster", cl_base, cl_cand),
     ):
         r, section_rows = compare(name, b, c, args.max_drop_pct)

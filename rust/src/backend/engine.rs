@@ -20,6 +20,7 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use crate::config::SystemConfig;
+use crate::device::DeviceBackend;
 use crate::fft::{is_pow2, log2, pack_real, unpack_real_spectrum, ArenaStats, BufferArena, SoaVec};
 use crate::gpu_model::babelstream_bw_bytes_per_ns;
 use crate::metrics::DataMovement;
@@ -30,6 +31,39 @@ use crate::runtime::{Parallelism, ThreadPool, MIN_PAR_POINTS};
 use crate::workload::{factors2d, factors3d, stft_shape, WorkloadKind};
 
 use super::{ComputeBackend, GpuCostModel, HostFftBackend, PimSimBackend, PlanComponent};
+
+/// Which GPU-side execution substrate an engine runs on — the enum behind
+/// the serving/cluster configs' `backend` field and the CLI's
+/// `--backend host|device` flag. `Host` executes with the fast host FFT
+/// kernels; `Device` lowers plans to stage-dispatch programs and executes
+/// them on the audited device queue ([`crate::device::DeviceBackend`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineBackend {
+    #[default]
+    Host,
+    Device,
+}
+
+impl EngineBackend {
+    /// Parse a CLI `--backend` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "host" => Ok(Self::Host),
+            "device" => Ok(Self::Device),
+            other => anyhow::bail!(
+                "unknown backend '{other}' — expected one of: host, device"
+            ),
+        }
+    }
+
+    /// Stable name used in report JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Host => "host",
+            Self::Device => "device",
+        }
+    }
+}
 
 /// Outcome of one [`FftEngine::run`]: spectra plus the plan and its model
 /// evaluation (the numbers every paper figure is built from).
@@ -206,6 +240,7 @@ pub struct FftEngineBuilder {
     pool: Option<Arc<ThreadPool>>,
     warm: Option<Arc<WarmPlans>>,
     arena: Option<Arc<BufferArena>>,
+    device: bool,
 }
 
 impl FftEngineBuilder {
@@ -244,6 +279,27 @@ impl FftEngineBuilder {
     /// PIM substrate backend (default: [`PimSimBackend`]).
     pub fn pim_backend(mut self, backend: Box<dyn ComputeBackend>) -> Self {
         self.pim = Some(backend);
+        self
+    }
+
+    /// Execute GPU components on the stage-dispatch device backend
+    /// ([`crate::device::DeviceBackend`]) instead of the host FFT kernels:
+    /// plans are lowered to explicit dispatch programs, run as a device
+    /// queue over arena-backed ping-pong buffers, and every byte moved is
+    /// audited against the analytical model. Ignored when an explicit
+    /// [`FftEngineBuilder::gpu_backend`] is supplied. The device backend
+    /// shares this engine's arena and pool, and adopts the system's
+    /// `gpu.lds_max_fft` as its dispatch-fusion budget.
+    pub fn device(mut self) -> Self {
+        self.device = true;
+        self
+    }
+
+    /// Select the GPU execution substrate by [`EngineBackend`] — the enum
+    /// form of [`FftEngineBuilder::device`] that configs and the CLI's
+    /// `--backend host|device` flag carry.
+    pub fn backend(mut self, backend: EngineBackend) -> Self {
+        self.device = backend == EngineBackend::Device;
         self
     }
 
@@ -294,7 +350,16 @@ impl FftEngineBuilder {
         });
         let pool = self.pool.or_else(|| self.parallelism.pool());
         let arena = self.arena.unwrap_or_default();
-        let gpu = self.gpu.unwrap_or_else(|| {
+        let gpu = self.gpu.unwrap_or_else(|| -> Box<dyn ComputeBackend> {
+            if self.device {
+                let mut dev = DeviceBackend::new(self.gpu_cost)
+                    .with_system(&sys)
+                    .with_arena(Arc::clone(&arena));
+                if let Some(p) = &pool {
+                    dev = dev.with_pool(Arc::clone(p));
+                }
+                return Box::new(dev);
+            }
             let mut host = HostFftBackend::new(self.gpu_cost).with_arena(Arc::clone(&arena));
             if let Some(p) = &pool {
                 host = host.with_pool(Arc::clone(p));

@@ -13,6 +13,9 @@
 //!   (PJRT), with host fallback for shapes lacking artifacts.
 //! * [`PimSimBackend`] — PIM-FFT-Tiles on the functional in-memory unit
 //!   simulator, priced by the §5.1 offline tile table.
+//! * [`crate::device::DeviceBackend`] — GPU components lowered to explicit
+//!   stage-dispatch programs and executed as an audited device queue
+//!   (selected by [`FftEngineBuilder::device`] / [`EngineBackend`]).
 //! * [`GpuCostModel`] — interchangeable GPU cost providers (the paper's
 //!   analytical model, or the measured-GPU simulator).
 //! * [`FftEngine`] — builder-configured front door owning the planner, both
@@ -32,8 +35,8 @@ mod pjrt;
 pub use component::PlanComponent;
 pub use cost::{CostEstimate, GpuCostModel};
 pub use engine::{
-    EngineRun, FftEngine, FftEngineBuilder, PassAttribution, WarmPlans, WorkloadEval,
-    WorkloadPassEval, WorkloadRun,
+    EngineBackend, EngineRun, FftEngine, FftEngineBuilder, PassAttribution, WarmPlans,
+    WorkloadEval, WorkloadPassEval, WorkloadRun,
 };
 pub use host::HostFftBackend;
 pub use pim_sim::PimSimBackend;

@@ -52,7 +52,7 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
-use crate::backend::{FftEngine, PassAttribution, WarmPlans};
+use crate::backend::{EngineBackend, FftEngine, PassAttribution, WarmPlans};
 use crate::config::SystemConfig;
 use crate::coordinator::Trace;
 use crate::metrics::{depth_json, latency_us_json, plan_cache_json, DataMovement, LogHistogram};
@@ -97,6 +97,12 @@ pub struct ClusterConfig {
     pub sys: SystemConfig,
     /// PIM lowering pass set every shard engine is built with.
     pub passes: PassConfig,
+    /// GPU execution substrate every shard engine runs on: the fast host
+    /// kernels (default) or the audited stage-dispatch device queue.
+    /// Reports are identical under both — execution here only prices plans
+    /// — but numeric smoke paths and the plan table go through the
+    /// selected backend.
+    pub backend: EngineBackend,
     /// Plan evaluation parallelism (see the module docs): workers
     /// pre-compute the plan table, the event core commits sequentially.
     /// Reports are bit-identical for every setting.
@@ -126,6 +132,7 @@ impl ClusterConfig {
             max_wait_us: 50.0,
             sys,
             passes: passes.into(),
+            backend: EngineBackend::default(),
             threads: Parallelism::Sequential,
             warm: None,
             trace: false,
@@ -173,6 +180,8 @@ pub struct ShardSummary {
 pub struct ClusterReport {
     pub shards: usize,
     pub router: &'static str,
+    /// GPU execution substrate the shard engines were built on.
+    pub backend: &'static str,
     pub requests: u64,
     pub signals: u64,
     pub padded_signals: u64,
@@ -258,6 +267,7 @@ impl ClusterReport {
         Json::obj(vec![
             ("shards", Json::num(self.shards as f64)),
             ("router", Json::str(self.router)),
+            ("backend", Json::str(self.backend)),
             ("requests", Json::num(self.requests as f64)),
             ("signals", Json::num(self.signals as f64)),
             ("padded_signals", Json::num(self.padded_signals as f64)),
@@ -362,7 +372,11 @@ pub fn warm_plans_for(trace: &Trace, cfg: &ClusterConfig, sys: &SystemConfig) ->
     }
     let keys: Vec<(usize, usize)> = keys.into_iter().collect();
     let scratch = |chunk: &[(usize, usize)]| {
-        let mut engine = FftEngine::builder().system(sys).passes(cfg.passes).build();
+        let mut engine = FftEngine::builder()
+            .system(sys)
+            .passes(cfg.passes)
+            .backend(cfg.backend)
+            .build();
         let mut out = Vec::with_capacity(chunk.len());
         for &(n, batch) in chunk {
             if let Ok(hit) = engine.plan(n, batch) {
@@ -478,7 +492,10 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
         .iter()
         .enumerate()
         .map(|(i, spec)| {
-            let mut b = FftEngine::builder().system(&systems[i]).passes(cfg.passes);
+            let mut b = FftEngine::builder()
+                .system(&systems[i])
+                .passes(cfg.passes)
+                .backend(cfg.backend);
             if let Some(w) = &warm_tables[i] {
                 b = b.warm_plans(Arc::clone(w));
             }
@@ -652,6 +669,7 @@ pub fn run_cluster_traced(trace: &Trace, cfg: &ClusterConfig) -> Result<(Cluster
     let mut report = ClusterReport {
         shards: fleet.len(),
         router: cfg.router.name(),
+        backend: cfg.backend.name(),
         requests: 0,
         signals: 0,
         padded_signals: 0,

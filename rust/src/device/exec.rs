@@ -1,0 +1,261 @@
+//! The device queue: executes a lowered [`DeviceProgram`] dispatch by
+//! dispatch on the host thread pool, with a barrier between dispatches and
+//! per-signal fan-out inside each one — the same schedule a real queue
+//! would run, minus the PCIe.
+//!
+//! Numerics are pinned to the reference path: every butterfly replays
+//! `fft_inplace`'s exact arithmetic with twiddles fetched from the shared
+//! process-wide [`twiddle_table`], and the four-step inter-factor multiply
+//! replays `FourStep::gpu_component_ref`'s expression, so device outputs
+//! are bit-identical to the radix-2 reference regardless of thread count.
+//!
+//! Movement accounting is execution-derived: the gather and scatter loops
+//! increment element counters as they touch global buffers, and those
+//! counters — not the plan shape — become the ledger's [`DispatchRecord`]s.
+//! Intra-dispatch butterfly traffic stays in a workgroup-local tile and is
+//! deliberately uncounted, matching what the analytical model prices.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::ledger::{DispatchRecord, MovementLedger};
+use super::program::{DeviceProgram, StageUniforms, INPUT_BUFFER};
+use crate::fft::{bit_reverse, log2, twiddle_table, BufferArena, SoaVec, TwiddleTable};
+use crate::runtime::{ThreadPool, MIN_PAR_POINTS};
+
+/// Execute a lowered program over `inputs`, recording one ledger entry per
+/// dispatch. Returns one output signal per input; intermediate ping-pong
+/// buffers come from (and return to) `arena`, and the returned outputs are
+/// arena checkouts the caller may recycle with `give_soa_batch`.
+pub fn execute_program(
+    prog: &DeviceProgram,
+    inputs: &[SoaVec],
+    arena: &Arc<BufferArena>,
+    pool: Option<&Arc<ThreadPool>>,
+    ledger: &mut MovementLedger,
+) -> Result<Vec<SoaVec>> {
+    let points = prog.points();
+    ensure!(
+        inputs.len() == prog.batch,
+        "device program {} was lowered for batch {} but got {} input signals",
+        prog.label,
+        prog.batch,
+        inputs.len()
+    );
+    ensure!(
+        inputs.iter().all(|s| s.len() == points),
+        "input length mismatch for device program {} — every signal must carry {} points",
+        prog.label,
+        points
+    );
+
+    ledger.begin(&prog.label);
+    let tw_rows = twiddle_table(prog.rows);
+    let tw_fuse = (prog.fuse_n != 0).then(|| twiddle_table(prog.fuse_n));
+
+    // Current per-signal buffers; `None` means the sources are still the
+    // caller's inputs (dispatch 0 binds INPUT_BUFFER).
+    let mut current: Option<Vec<SoaVec>> = None;
+    for d in &prog.dispatches {
+        let u = &d.uniforms;
+        debug_assert_eq!(d.binds.src == INPUT_BUFFER, current.is_none());
+        let run_one = |i: usize| -> (SoaVec, u64, u64) {
+            let src = match &current {
+                Some(bufs) => &bufs[i],
+                None => &inputs[i],
+            };
+            dispatch_one(prog, u, src, arena, &tw_rows, tw_fuse.as_deref())
+        };
+        // Fan the batch out across the pool exactly like the host backend:
+        // only when the work clears the parallelism floor. map_indexed
+        // preserves order and each signal's kernel is pure, so results are
+        // bit-identical to the sequential schedule.
+        let worth_it =
+            inputs.len() > 1 && inputs.len().saturating_mul(points) >= MIN_PAR_POINTS;
+        let results: Vec<(SoaVec, u64, u64)> = match pool {
+            Some(p) if worth_it => p.map_indexed(inputs.len(), run_one),
+            _ => (0..inputs.len()).map(run_one).collect(),
+        };
+        if let Some(prev) = current.take() {
+            arena.give_soa_batch(prev);
+        }
+        let mut outs = Vec::with_capacity(results.len());
+        let (mut elems_read, mut elems_written) = (0u64, 0u64);
+        for (out, r, w) in results {
+            elems_read += r;
+            elems_written += w;
+            outs.push(out);
+        }
+        ledger.record(DispatchRecord {
+            dispatch: u.dispatch as usize,
+            elems_read,
+            elems_written,
+        });
+        current = Some(outs);
+    }
+    // lower() guarantees at least one dispatch for any accepted component.
+    Ok(current.expect("device program must contain at least one dispatch"))
+}
+
+/// Run one dispatch over one signal: gather each workgroup's tile from the
+/// source buffer, run the fused radix-2 stages in-tile, scatter to the
+/// destination. Returns the destination buffer plus the element counts the
+/// loops actually touched in global memory.
+fn dispatch_one(
+    prog: &DeviceProgram,
+    u: &StageUniforms,
+    src: &SoaVec,
+    arena: &Arc<BufferArena>,
+    tw_rows: &TwiddleTable,
+    tw_fuse: Option<&TwiddleTable>,
+) -> (SoaVec, u64, u64) {
+    let points = prog.points();
+    let rows = prog.rows;
+    let stride = u.stride as usize;
+    let s0 = u.first_stage as usize;
+    let bits = u.stage_count as usize;
+    let tile_len = 1usize << bits;
+    let rbits = log2(rows);
+    let fuse_n = prog.fuse_n;
+
+    let mut dst = arena.take_soa(points);
+    // Workgroup-local tile ("LDS"): reused across every workgroup of this
+    // dispatch, so butterfly traffic inside the fused stage run never
+    // touches the counted global buffers.
+    let mut tile = arena.take_soa(tile_len);
+    let (mut reads, mut writes) = (0u64, 0u64);
+
+    for col in 0..prog.cols {
+        for hi in 0..(rows >> (s0 + bits)) {
+            let hi_base = hi << (s0 + bits);
+            for lo in 0..(1usize << s0) {
+                // Gather the workgroup's elements: in-column index
+                // v = hi·2^(s0+bits) + t·2^s0 + lo, bit-reversed on the
+                // first dispatch so no separate permute pass is needed.
+                for t in 0..tile_len {
+                    let v = hi_base + (t << s0) + lo;
+                    let g = if u.bitrev_gather { bit_reverse(v, rbits) } else { v };
+                    let idx = g * stride + col;
+                    tile.re[t] = src.re[idx];
+                    tile.im[t] = src.im[idx];
+                }
+                reads += tile_len as u64;
+
+                // The fused radix-2 stages, in-tile. Stage s pairs tile
+                // indices (t, t + 2^(s-s0)); its global twiddle index is
+                // j = (t mod 2^(s-s0))·2^s0 + lo because the hi term is
+                // ≡ 0 mod 2^(s+1). Arithmetic matches fft_inplace exactly.
+                for su in 0..bits {
+                    let s = s0 + su;
+                    let m = 1usize << (s + 1);
+                    let half = 1usize << su;
+                    for block in (0..tile_len).step_by(half * 2) {
+                        for jt in 0..half {
+                            let (wc, ws) = tw_rows.get(m, (jt << s0) + lo);
+                            let t1 = block + jt;
+                            let t2 = t1 + half;
+                            let (ar, ai) = (tile.re[t1], tile.im[t1]);
+                            let (br, bi) = (tile.re[t2], tile.im[t2]);
+                            let tr = br * wc - bi * ws;
+                            let ti = br * ws + bi * wc;
+                            tile.re[t1] = ar + tr;
+                            tile.im[t1] = ai + ti;
+                            tile.re[t2] = ar - tr;
+                            tile.im[t2] = ai - ti;
+                        }
+                    }
+                }
+
+                // Scatter, optionally fusing the four-step inter-factor
+                // twiddle W_n^{(v·col) % n} (gpu_component_ref's exact
+                // expression) into the final dispatch for free.
+                for t in 0..tile_len {
+                    let v = hi_base + (t << s0) + lo;
+                    let idx = v * stride + col;
+                    if u.fused_twiddle {
+                        let table = tw_fuse.expect("fused dispatch lowered without fuse_n");
+                        let (tc, ts) = table.get_index((v * col) % fuse_n);
+                        let (zr, zi) = (tile.re[t], tile.im[t]);
+                        dst.re[idx] = zr * tc - zi * ts;
+                        dst.im[idx] = zr * ts + zi * tc;
+                    } else {
+                        dst.re[idx] = tile.re[t];
+                        dst.im[idx] = tile.im[t];
+                    }
+                }
+                writes += tile_len as u64;
+            }
+        }
+    }
+
+    arena.give_soa(tile);
+    (dst, reads, writes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::PlanComponent;
+    use crate::device::lower;
+    use crate::fft::{fft_soa, FourStep};
+
+    fn run(
+        component: &PlanComponent,
+        lds: usize,
+        inputs: &[SoaVec],
+    ) -> (Vec<SoaVec>, MovementLedger) {
+        let prog = lower(component, lds).unwrap();
+        let arena = Arc::new(BufferArena::default());
+        let mut ledger = MovementLedger::new();
+        let outs = execute_program(&prog, inputs, &arena, None, &mut ledger).unwrap();
+        (outs, ledger)
+    }
+
+    #[test]
+    fn multi_dispatch_full_fft_is_bitwise_the_radix2_reference() {
+        // LDS 2^3 forces n=2^8 into three dispatches (3+3+2 stages); the
+        // grouped schedule must still reproduce fft_soa bit for bit.
+        let n = 1 << 8;
+        let x = SoaVec::random(n, 07_08_2026);
+        let (outs, ledger) = run(&PlanComponent::FullFft { n, batch: 1 }, 1 << 3, &[x.clone()]);
+        let want = fft_soa(&x);
+        assert_eq!(outs[0].re, want.re);
+        assert_eq!(outs[0].im, want.im);
+        assert_eq!(ledger.records().len(), 3);
+        // Each pass reads and writes every element exactly once.
+        for rec in ledger.records() {
+            assert_eq!(rec.elems_read, n as u64);
+            assert_eq!(rec.elems_written, n as u64);
+        }
+    }
+
+    #[test]
+    fn gpu_stage_is_bitwise_the_four_step_reference_component() {
+        let (n, m1, m2) = (1 << 10, 1 << 6, 1 << 4);
+        let fs = FourStep::new(n, m1, m2);
+        let x = SoaVec::random(n, 9);
+        let (outs, _) =
+            run(&PlanComponent::GpuStage { n, m1, m2, batch: 1 }, 1 << 12, &[x.clone()]);
+        let want = fs.gpu_component_ref(&x);
+        assert_eq!(outs[0].re, want.re);
+        assert_eq!(outs[0].im, want.im);
+    }
+
+    #[test]
+    fn batch_length_mismatches_are_rejected() {
+        let prog = lower(&PlanComponent::FullFft { n: 8, batch: 2 }, 1 << 12).unwrap();
+        let arena = Arc::new(BufferArena::default());
+        let mut ledger = MovementLedger::new();
+        let one = vec![SoaVec::random(8, 1)];
+        let e = execute_program(&prog, &one, &arena, None, &mut ledger)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("batch 2") && e.contains("1 input signals"), "got: {e}");
+        let short = vec![SoaVec::random(8, 1), SoaVec::random(4, 2)];
+        let e = execute_program(&prog, &short, &arena, None, &mut ledger)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("input length mismatch"), "got: {e}");
+    }
+}

@@ -1,0 +1,180 @@
+//! The movement audit: every dispatch's executed byte traffic, counted by
+//! the executor's actual loops and reconciled against the analytical GPU
+//! model's per-pass prediction.
+//!
+//! The ledger is the point of the device backend: `gpu_model::analytical`
+//! *predicts* `BYTES_PER_ELEM_PASS · n · batch` per kernel pass, and the
+//! [`MovementLedger`] *counts* what the stage-dispatch executor really
+//! gathered and scattered. [`MovementLedger::reconcile`] demands exact
+//! per-dispatch equality — a skipped workgroup, a duplicated dispatch, or a
+//! mispriced pass all trip it.
+
+use anyhow::{ensure, Result};
+
+/// Bytes one complex f32 element costs per direction (re + im planes).
+pub const BYTES_PER_ELEM: f64 = 8.0;
+
+/// Executed traffic of one `dispatch()`: element counts accumulated by the
+/// executor's gather/scatter loops (not derived from the plan shape, so a
+/// control-flow bug shows up as a count mismatch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchRecord {
+    /// Dispatch index within the program.
+    pub dispatch: usize,
+    /// Complex elements gathered from the bound source buffer.
+    pub elems_read: u64,
+    /// Complex elements scattered to the bound destination buffer.
+    pub elems_written: u64,
+}
+
+impl DispatchRecord {
+    pub fn bytes_read(&self) -> f64 {
+        self.elems_read as f64 * BYTES_PER_ELEM
+    }
+
+    pub fn bytes_written(&self) -> f64 {
+        self.elems_written as f64 * BYTES_PER_ELEM
+    }
+
+    /// Total global-memory traffic of this dispatch (read + written).
+    pub fn bytes_moved(&self) -> f64 {
+        self.bytes_read() + self.bytes_written()
+    }
+}
+
+/// Per-dispatch movement audit of the most recent program execution, plus
+/// lifetime totals. `begin` recycles the record buffer, so steady-state
+/// serving does not grow the ledger.
+#[derive(Debug, Default)]
+pub struct MovementLedger {
+    /// Label of the program the current records belong to.
+    label: String,
+    records: Vec<DispatchRecord>,
+    lifetime_dispatches: u64,
+    lifetime_bytes: f64,
+}
+
+impl MovementLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start auditing a new program execution; prior per-dispatch records
+    /// are dropped (capacity retained), lifetime totals are kept.
+    pub fn begin(&mut self, label: &str) {
+        self.label.clear();
+        self.label.push_str(label);
+        self.records.clear();
+    }
+
+    /// Record one executed dispatch.
+    pub fn record(&mut self, rec: DispatchRecord) {
+        self.lifetime_dispatches += 1;
+        self.lifetime_bytes += rec.bytes_moved();
+        self.records.push(rec);
+    }
+
+    /// The label passed to the last [`MovementLedger::begin`].
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Per-dispatch records of the most recent execution.
+    pub fn records(&self) -> &[DispatchRecord] {
+        &self.records
+    }
+
+    /// Audited bytes moved by the most recent execution.
+    pub fn bytes_moved(&self) -> f64 {
+        self.records.iter().map(|r| r.bytes_moved()).sum()
+    }
+
+    /// Dispatches recorded since construction.
+    pub fn lifetime_dispatches(&self) -> u64 {
+        self.lifetime_dispatches
+    }
+
+    /// Bytes recorded since construction.
+    pub fn lifetime_bytes(&self) -> f64 {
+        self.lifetime_bytes
+    }
+
+    /// Reconcile the most recent execution against the analytical model's
+    /// per-pass byte predictions (`gpu_model::gpu_pass_bytes`). Equality is
+    /// exact — both sides are integer byte counts represented in f64 — and
+    /// per-dispatch, not just summed, so an extra, missing, or misrouted
+    /// dispatch fails even when totals happen to agree.
+    pub fn reconcile(&self, predicted: &[f64]) -> Result<()> {
+        ensure!(
+            self.records.len() == predicted.len(),
+            "movement reconciliation failed for {}: executed {} dispatches but the analytical \
+             model prices {} kernel passes",
+            self.label,
+            self.records.len(),
+            predicted.len()
+        );
+        for (rec, &want) in self.records.iter().zip(predicted) {
+            ensure!(
+                rec.bytes_moved() == want,
+                "movement reconciliation failed for {} dispatch {}: executed {} bytes \
+                 ({} read + {} written) but the analytical model predicts {} bytes per pass",
+                self.label,
+                rec.dispatch,
+                rec.bytes_moved(),
+                rec.bytes_read(),
+                rec.bytes_written(),
+                want
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(dispatch: usize, elems: u64) -> DispatchRecord {
+        DispatchRecord { dispatch, elems_read: elems, elems_written: elems }
+    }
+
+    #[test]
+    fn records_and_totals_accumulate() {
+        let mut l = MovementLedger::new();
+        l.begin("a");
+        l.record(rec(0, 64));
+        l.record(rec(1, 64));
+        assert_eq!(l.records().len(), 2);
+        assert_eq!(l.bytes_moved(), 2.0 * 64.0 * 16.0);
+        l.begin("b");
+        assert!(l.records().is_empty(), "begin must reset per-run records");
+        assert_eq!(l.lifetime_dispatches(), 2, "lifetime totals survive begin");
+        assert_eq!(l.lifetime_bytes(), 2.0 * 64.0 * 16.0);
+    }
+
+    #[test]
+    fn reconcile_demands_exact_per_dispatch_equality() {
+        let mut l = MovementLedger::new();
+        l.begin("full-fft(n=64, batch=1)");
+        l.record(rec(0, 64));
+        l.reconcile(&[64.0 * 16.0]).unwrap();
+        // Wrong byte count on the one dispatch.
+        let err = l.reconcile(&[64.0 * 16.0 + 16.0]).unwrap_err().to_string();
+        assert!(err.contains("dispatch 0") && err.contains("full-fft"), "got: {err}");
+    }
+
+    #[test]
+    fn extra_dispatch_trips_reconciliation() {
+        let mut l = MovementLedger::new();
+        l.begin("full-fft(n=64, batch=1)");
+        l.record(rec(0, 64));
+        // A deliberately duplicated dispatch: totals no longer line up with
+        // the single predicted pass.
+        l.record(rec(1, 64));
+        let err = l.reconcile(&[64.0 * 16.0]).unwrap_err().to_string();
+        assert!(
+            err.contains("executed 2 dispatches") && err.contains("1 kernel passes"),
+            "got: {err}"
+        );
+    }
+}

@@ -1,0 +1,212 @@
+//! Lowering: turn a GPU-side [`PlanComponent`] into an explicit
+//! [`DeviceProgram`] whose dispatch list mirrors the analytical model's LDS
+//! kernel passes (`gpu_model::lds_decompose`).
+//!
+//! Rejections are contextful `anyhow` errors in the same voice as the
+//! `try_fft_soa` hardening: they name the bad value and say what a caller
+//! should do about it, because these surface verbatim through the serving
+//! tier's failure accounting.
+
+use anyhow::{bail, ensure, Result};
+
+use super::program::{
+    BindList, BufferDecl, BufferRole, DeviceProgram, Dispatch, StageUniforms, INPUT_BUFFER,
+    PING_BUFFER, PONG_BUFFER,
+};
+use crate::backend::PlanComponent;
+use crate::fft::{is_pow2, log2};
+use crate::gpu_model::lds_decompose;
+
+/// Lower one plan component into a stage-dispatch program. `lds_max_fft` is
+/// the workgroup-local memory budget (largest FFT one dispatch can keep in
+/// its tile) and must match the system config the analytical model prices
+/// with, or reconciliation will rightly fail.
+pub fn lower(component: &PlanComponent, lds_max_fft: usize) -> Result<DeviceProgram> {
+    ensure!(
+        is_pow2(lds_max_fft) && lds_max_fft >= 2,
+        "device lowering needs a power-of-two LDS budget >= 2, got {lds_max_fft} — \
+         check sys.gpu.lds_max_fft"
+    );
+    let (rows, cols, batch, fuse_n) = match *component {
+        PlanComponent::FullFft { n, batch } => {
+            ensure!(
+                n != 0,
+                "device lowering rejected a zero-length FFT stage in {component} — \
+                 the plan must carry at least 2 points"
+            );
+            ensure!(
+                is_pow2(n) && n >= 2,
+                "device lowering: FFT size must be a power of two >= 2, got {n} — \
+                 pad the signal or pick a power-of-two size"
+            );
+            (n, 1, batch, 0)
+        }
+        PlanComponent::GpuStage { n, m1, m2, batch } => {
+            ensure!(
+                m1 != 0 && m2 != 0,
+                "device lowering rejected a zero-length four-step factor in {component} \
+                 (M1={m1}, M2={m2}) — both factors must carry points"
+            );
+            ensure!(
+                is_pow2(m1) && m1 >= 2,
+                "device lowering: four-step GPU factor M1 must be a power of two >= 2, \
+                 got {m1} — re-plan with a power-of-two tile split"
+            );
+            ensure!(
+                is_pow2(m2),
+                "device lowering: four-step GPU factor M2 must be a power of two, \
+                 got {m2} — re-plan with a power-of-two tile split"
+            );
+            ensure!(
+                m1 * m2 == n,
+                "device lowering: four-step factors must multiply back to N \
+                 ({m1}·{m2} != {n}) — the plan is internally inconsistent"
+            );
+            (m1, m2, batch, n)
+        }
+        PlanComponent::PimTile { .. } => bail!(
+            "device backend cannot lower {component} — PIM tiles execute on the PIM \
+             backend, not the stage-dispatch device queue"
+        ),
+    };
+    ensure!(
+        batch > 0,
+        "device lowering rejected an empty batch for {component} — nothing to dispatch"
+    );
+
+    let factors = lds_decompose(rows, lds_max_fft.min(rows));
+    let rbits = log2(rows);
+    let mut dispatches = Vec::with_capacity(factors.len());
+    let mut first_stage = 0u32;
+    for (i, &factor) in factors.iter().enumerate() {
+        let last = i + 1 == factors.len();
+        let src = if i == 0 {
+            INPUT_BUFFER
+        } else if i % 2 == 1 {
+            PING_BUFFER
+        } else {
+            PONG_BUFFER
+        };
+        let dst = if i % 2 == 0 { PING_BUFFER } else { PONG_BUFFER };
+        let stage_count = log2(factor);
+        dispatches.push(Dispatch {
+            binds: BindList { src, dst },
+            uniforms: StageUniforms {
+                dispatch: i as u32,
+                first_stage,
+                stage_count,
+                stride: cols as u32,
+                twiddle_base: (rows >> (first_stage + 1)) as u32,
+                bitrev_gather: i == 0,
+                fused_twiddle: last && fuse_n != 0,
+                ping_to_pong: i % 2 == 1,
+            },
+        });
+        first_stage += stage_count;
+    }
+    debug_assert_eq!(first_stage, rbits, "LDS factors must cover every butterfly stage");
+
+    let points = rows * cols;
+    let mut buffers = vec![
+        BufferDecl { id: INPUT_BUFFER, role: BufferRole::Input, len: points },
+        BufferDecl { id: PING_BUFFER, role: BufferRole::Ping, len: points },
+    ];
+    if dispatches.len() > 1 {
+        buffers.push(BufferDecl { id: PONG_BUFFER, role: BufferRole::Pong, len: points });
+    }
+
+    Ok(DeviceProgram {
+        label: component.to_string(),
+        rows,
+        cols,
+        batch,
+        fuse_n,
+        buffers,
+        dispatches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn err(component: &PlanComponent) -> String {
+        lower(component, 1 << 12).unwrap_err().to_string()
+    }
+
+    #[test]
+    fn rejects_zero_length_fft() {
+        let e = err(&PlanComponent::FullFft { n: 0, batch: 1 });
+        assert!(e.contains("zero-length FFT stage"), "got: {e}");
+    }
+
+    #[test]
+    fn rejects_non_pow2_fft() {
+        let e = err(&PlanComponent::FullFft { n: 768, batch: 1 });
+        assert!(e.contains("power of two") && e.contains("768"), "got: {e}");
+        let e = err(&PlanComponent::FullFft { n: 1, batch: 1 });
+        assert!(e.contains("power of two >= 2"), "got: {e}");
+    }
+
+    #[test]
+    fn rejects_empty_batch() {
+        let e = err(&PlanComponent::FullFft { n: 64, batch: 0 });
+        assert!(e.contains("empty batch"), "got: {e}");
+    }
+
+    #[test]
+    fn rejects_zero_length_four_step_factor() {
+        let e = err(&PlanComponent::GpuStage { n: 1024, m1: 0, m2: 8, batch: 1 });
+        assert!(e.contains("zero-length four-step factor"), "got: {e}");
+    }
+
+    #[test]
+    fn rejects_non_pow2_four_step_factors() {
+        let e = err(&PlanComponent::GpuStage { n: 1024, m1: 96, m2: 8, batch: 1 });
+        assert!(e.contains("M1 must be a power of two") && e.contains("96"), "got: {e}");
+        let e = err(&PlanComponent::GpuStage { n: 1024, m1: 128, m2: 12, batch: 1 });
+        assert!(e.contains("M2 must be a power of two") && e.contains("12"), "got: {e}");
+    }
+
+    #[test]
+    fn rejects_inconsistent_four_step_split() {
+        let e = err(&PlanComponent::GpuStage { n: 1024, m1: 128, m2: 16, batch: 1 });
+        assert!(e.contains("128·16 != 1024"), "got: {e}");
+    }
+
+    #[test]
+    fn rejects_pim_tiles() {
+        let e = err(&PlanComponent::PimTile { m2: 8, count: 128, passes: 1 });
+        assert!(e.contains("PIM tiles execute on the PIM backend"), "got: {e}");
+    }
+
+    #[test]
+    fn rejects_bad_lds_budget() {
+        let e = lower(&PlanComponent::FullFft { n: 64, batch: 1 }, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("LDS budget"), "got: {e}");
+    }
+
+    #[test]
+    fn dispatch_count_matches_the_analytical_kernel_count() {
+        use crate::gpu_model::kernel_count;
+        for logn in 1..=20u32 {
+            let n = 1usize << logn;
+            if n < 2 {
+                continue;
+            }
+            let p = lower(&PlanComponent::FullFft { n, batch: 1 }, 1 << 12).unwrap();
+            assert_eq!(p.dispatches.len(), kernel_count(n, 1 << 12), "n=2^{logn}");
+        }
+    }
+
+    #[test]
+    fn lds_budget_larger_than_the_fft_is_clamped() {
+        // rows=4 with a 2^12 budget must still lower (lds_decompose would
+        // otherwise be asked for a factor larger than the FFT itself).
+        let p = lower(&PlanComponent::FullFft { n: 4, batch: 1 }, 1 << 12).unwrap();
+        assert_eq!(p.dispatches.len(), 1);
+        assert_eq!(p.total_stages(), 2);
+    }
+}

@@ -1,0 +1,231 @@
+//! Stage-dispatch device backend: the third execution substrate.
+//!
+//! The host backend computes FFTs with fast CPU kernels; the PIM backend
+//! simulates command streams; this module *lowers* GPU plan components into
+//! an explicit stage-dispatch program ([`DeviceProgram`]: numbered buffers,
+//! per-dispatch bind lists, per-dispatch uniform blocks) and *executes* it
+//! on the runtime thread pool as if it were a device queue — one
+//! `dispatch()` per LDS kernel pass over ping-pong buffer pairs checked out
+//! of the shared [`BufferArena`], with a [`MovementLedger`] counting every
+//! byte each dispatch reads and writes.
+//!
+//! The ledger is the point: [`DeviceBackend::reconcile`] pins the executed
+//! per-dispatch traffic to `gpu_model::gpu_pass_bytes` exactly, making the
+//! analytical cost model falsifiable instead of merely asserted. Outputs
+//! reuse the host path's process-wide twiddle tables and replay the
+//! radix-2 reference arithmetic, so they stay bit-comparable to
+//! `fft_soa` / `FourStep::gpu_component_ref`.
+//!
+//! This is also the seam where a real GPU queue plugs in later: a
+//! wgpu/PJRT implementation behind the `pjrt` feature gate would consume
+//! the same [`DeviceProgram`] — the lowering, uniform blocks, and
+//! reconciliation contract are queue-agnostic.
+
+mod exec;
+mod ledger;
+mod lower;
+mod program;
+
+pub use exec::execute_program;
+pub use ledger::{DispatchRecord, MovementLedger, BYTES_PER_ELEM};
+pub use lower::lower;
+pub use program::{
+    BindList, BufferDecl, BufferRole, DeviceProgram, Dispatch, StageUniforms, INPUT_BUFFER,
+    PING_BUFFER, PONG_BUFFER,
+};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::backend::{ComputeBackend, CostEstimate, GpuCostModel, PlanComponent};
+use crate::config::SystemConfig;
+use crate::fft::{BufferArena, SoaVec};
+use crate::gpu_model::gpu_pass_bytes;
+use crate::runtime::ThreadPool;
+
+/// Per-pass predicted bytes for a GPU-side component, from the analytical
+/// model: what [`MovementLedger::reconcile`] checks executed traffic
+/// against. The strided four-step stage prices as `m2·batch` independent
+/// FFTs of length `m1` — the same LDS passes the lowering emits.
+pub fn predicted_pass_bytes(component: &PlanComponent, sys: &SystemConfig) -> Result<Vec<f64>> {
+    match *component {
+        PlanComponent::FullFft { n, batch } => Ok(gpu_pass_bytes(n, batch, sys)),
+        PlanComponent::GpuStage { m1, m2, batch, .. } => Ok(gpu_pass_bytes(m1, batch * m2, sys)),
+        PlanComponent::PimTile { .. } => anyhow::bail!(
+            "the analytical GPU model does not price {component} — PIM tiles move bytes \
+             on the PIM command path"
+        ),
+    }
+}
+
+/// `ComputeBackend` that executes plans as stage-dispatch programs with an
+/// audited movement ledger. Plug-compatible with `HostFftBackend` in the
+/// engine (same cost estimates, same input/output contract); select it with
+/// `FftEngine::builder().device()` or `--backend device` on the CLI.
+#[derive(Debug)]
+pub struct DeviceBackend {
+    cost: GpuCostModel,
+    /// Workgroup-local memory budget dispatches are fused under; must match
+    /// the priced system's `gpu.lds_max_fft` for reconciliation to hold.
+    lds_max_fft: usize,
+    pool: Option<Arc<ThreadPool>>,
+    arena: Arc<BufferArena>,
+    ledger: MovementLedger,
+}
+
+impl Default for DeviceBackend {
+    fn default() -> Self {
+        Self::new(GpuCostModel::default())
+    }
+}
+
+impl DeviceBackend {
+    pub fn new(cost: GpuCostModel) -> Self {
+        Self {
+            cost,
+            lds_max_fft: SystemConfig::baseline().gpu.lds_max_fft,
+            pool: None,
+            arena: Arc::default(),
+            ledger: MovementLedger::new(),
+        }
+    }
+
+    /// Fan dispatch batches out across `pool` (bit-identical to sequential).
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Check ping-pong and tile buffers out of a shared arena.
+    pub fn with_arena(mut self, arena: Arc<BufferArena>) -> Self {
+        self.arena = arena;
+        self
+    }
+
+    /// Adopt `sys.gpu.lds_max_fft` as the dispatch-fusion budget so lowered
+    /// programs match the passes `gpu_model` prices for that system.
+    pub fn with_system(mut self, sys: &SystemConfig) -> Self {
+        self.lds_max_fft = sys.gpu.lds_max_fft;
+        self
+    }
+
+    pub fn arena(&self) -> &Arc<BufferArena> {
+        &self.arena
+    }
+
+    /// Movement audit of the most recent `execute` (and lifetime totals).
+    pub fn ledger(&self) -> &MovementLedger {
+        &self.ledger
+    }
+
+    /// Lower a component with this backend's LDS budget.
+    pub fn lower(&self, component: &PlanComponent) -> Result<DeviceProgram> {
+        lower(component, self.lds_max_fft)
+    }
+
+    /// Execute and return the outputs together with the audited bytes the
+    /// program moved (sum of the per-dispatch ledger records).
+    pub fn execute_audited(
+        &mut self,
+        component: &PlanComponent,
+        inputs: &[SoaVec],
+    ) -> Result<(Vec<SoaVec>, f64)> {
+        let outs = self.execute(component, inputs)?;
+        Ok((outs, self.ledger.bytes_moved()))
+    }
+
+    /// Reconcile the most recent execution against the analytical model's
+    /// per-pass prediction for `component` under `sys`. Exact per-dispatch
+    /// equality; `sys.gpu.lds_max_fft` must match this backend's budget.
+    pub fn reconcile(&self, component: &PlanComponent, sys: &SystemConfig) -> Result<()> {
+        self.ledger.reconcile(&predicted_pass_bytes(component, sys)?)
+    }
+}
+
+impl ComputeBackend for DeviceBackend {
+    fn name(&self) -> &'static str {
+        "device-queue"
+    }
+
+    fn estimate(&mut self, component: &PlanComponent, sys: &SystemConfig) -> Result<CostEstimate> {
+        match *component {
+            PlanComponent::FullFft { n, batch } => Ok(self.cost.full_fft(n, batch, sys)),
+            PlanComponent::GpuStage { n, m1, m2, batch } => {
+                Ok(self.cost.gpu_stage(n, m1, m2, batch, sys))
+            }
+            PlanComponent::PimTile { .. } => {
+                anyhow::bail!("device backend has no PIM cost model for {component}")
+            }
+        }
+    }
+
+    fn execute(&mut self, component: &PlanComponent, inputs: &[SoaVec]) -> Result<Vec<SoaVec>> {
+        let prog = lower(component, self.lds_max_fft)?;
+        execute_program(&prog, inputs, &self.arena, self.pool.as_ref(), &mut self.ledger)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_naive, fft_soa};
+    use crate::gpu_model::gpu_bytes_moved;
+
+    #[test]
+    fn full_fft_matches_the_radix2_reference_bitwise() {
+        let mut dev = DeviceBackend::default();
+        for logn in 1..=12u32 {
+            let n = 1usize << logn;
+            let x = SoaVec::random(n, logn as u64);
+            let outs = dev.execute(&PlanComponent::FullFft { n, batch: 1 }, &[x.clone()]).unwrap();
+            let want = fft_soa(&x);
+            assert_eq!(outs[0].re, want.re, "n=2^{logn}");
+            assert_eq!(outs[0].im, want.im, "n=2^{logn}");
+        }
+    }
+
+    #[test]
+    fn full_fft_matches_the_naive_dft() {
+        let mut dev = DeviceBackend::default();
+        let n = 256;
+        let x = SoaVec::random(n, 42);
+        let outs = dev.execute(&PlanComponent::FullFft { n, batch: 1 }, &[x.clone()]).unwrap();
+        let want = dft_naive(&x);
+        let diff = outs[0].max_abs_diff(&want);
+        assert!(diff < 1e-3, "device vs dft_naive diff {diff}");
+    }
+
+    #[test]
+    fn audited_bytes_equal_the_analytical_prediction() {
+        let sys = SystemConfig::baseline();
+        let mut dev = DeviceBackend::default().with_system(&sys);
+        for (n, batch) in [(64usize, 4usize), (1 << 13, 2), (1 << 14, 1)] {
+            let comp = PlanComponent::FullFft { n, batch };
+            let inputs: Vec<_> =
+                (0..batch).map(|i| SoaVec::random(n, i as u64 + 1)).collect();
+            let (_, bytes) = dev.execute_audited(&comp, &inputs).unwrap();
+            assert_eq!(bytes, gpu_bytes_moved(n, batch, &sys), "n={n} batch={batch}");
+            dev.reconcile(&comp, &sys).unwrap();
+        }
+    }
+
+    #[test]
+    fn estimates_agree_with_the_host_backend() {
+        use crate::backend::HostFftBackend;
+        let sys = SystemConfig::baseline();
+        let mut dev = DeviceBackend::default();
+        let mut host = HostFftBackend::new(GpuCostModel::default());
+        for comp in [
+            PlanComponent::FullFft { n: 1 << 12, batch: 8 },
+            PlanComponent::GpuStage { n: 1 << 16, m1: 1 << 9, m2: 1 << 7, batch: 2 },
+        ] {
+            let d = dev.estimate(&comp, &sys).unwrap();
+            let h = host.estimate(&comp, &sys).unwrap();
+            assert_eq!(d.time_ns, h.time_ns, "{comp}");
+        }
+        assert!(dev
+            .estimate(&PlanComponent::PimTile { m2: 8, count: 64, passes: 1 }, &sys)
+            .is_err());
+    }
+}

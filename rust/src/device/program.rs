@@ -1,0 +1,162 @@
+//! The lowered form of a GPU plan component: an explicit stage-dispatch
+//! program of numbered buffers, per-dispatch bind lists, and a small
+//! per-dispatch uniform block — the shape a wgpu/PJRT queue would consume,
+//! executed today by `device::exec` on the host thread pool.
+//!
+//! One [`Dispatch`] corresponds to one LDS kernel pass of the analytical GPU
+//! model (`gpu_model::kernel_count`): it covers the run of radix-2 butterfly
+//! stages belonging to one `lds_decompose` factor, keeping intra-run traffic
+//! in a workgroup-local tile so each pass reads and writes every element of
+//! every signal exactly once from the bound global buffers. That one-to-one
+//! dispatch/pass correspondence is what makes the movement ledger
+//! reconcilable against `gpu_bytes_moved` per dispatch, not just in total.
+
+/// Numbered buffer id of the caller's input signal (read-only bind).
+pub const INPUT_BUFFER: usize = 0;
+/// Numbered buffer id of the first ping-pong buffer.
+pub const PING_BUFFER: usize = 1;
+/// Numbered buffer id of the second ping-pong buffer.
+pub const PONG_BUFFER: usize = 2;
+
+/// What a numbered buffer holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferRole {
+    /// Caller-owned input signal; only ever bound as a dispatch source.
+    Input,
+    /// Arena-backed ping-pong buffer.
+    Ping,
+    /// Arena-backed ping-pong buffer (other half of the pair).
+    Pong,
+}
+
+/// Declaration of one numbered buffer the program binds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufferDecl {
+    pub id: usize,
+    pub role: BufferRole,
+    /// Complex elements per signal.
+    pub len: usize,
+}
+
+/// The bind list of one dispatch: which numbered buffers it reads and
+/// writes. Radix-2 runs never alias, so one src and one dst suffice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BindList {
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// Per-dispatch uniform block — the constants a real device kernel would
+/// receive alongside its bind group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageUniforms {
+    /// Dispatch index within the program (also the kernel-pass index the
+    /// analytical model prices).
+    pub dispatch: u32,
+    /// First radix-2 butterfly stage this dispatch covers.
+    pub first_stage: u32,
+    /// Radix-2 stages fused into this dispatch (bits of one LDS factor).
+    pub stage_count: u32,
+    /// Element stride between consecutive entries of one butterfly column
+    /// (1 for a full FFT; `m2` for the strided four-step GPU stage).
+    pub stride: u32,
+    /// Twiddle-table index stride of `first_stage`: `rows >> (first_stage+1)`,
+    /// i.e. the base the kernel scales per-butterfly indices by.
+    pub twiddle_base: u32,
+    /// First dispatch folds the bit-reversal permutation into its gather
+    /// instead of spending a separate (and separately priced) permute pass.
+    pub bitrev_gather: bool,
+    /// Final dispatch of a four-step GPU stage fuses the inter-factor
+    /// twiddle multiply `W_n^{(row·col) % n}` into its scatter.
+    pub fused_twiddle: bool,
+    /// Ping-pong direction: `true` when the dispatch writes [`PONG_BUFFER`].
+    pub ping_to_pong: bool,
+}
+
+/// One `dispatch()` of the program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch {
+    pub binds: BindList,
+    pub uniforms: StageUniforms,
+}
+
+/// A fully lowered stage-dispatch program for one plan component.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceProgram {
+    /// Display label of the component this was lowered from.
+    pub label: String,
+    /// Butterfly FFT length per column (`n` for a full FFT, `m1` for the
+    /// GPU stage of a four-step plan).
+    pub rows: usize,
+    /// Independent butterfly columns per signal (1, or `m2`).
+    pub cols: usize,
+    /// Signals per execution.
+    pub batch: usize,
+    /// When nonzero, the final dispatch multiplies element `(row, col)` by
+    /// `W_fuse_n^{(row·col) % fuse_n}` at scatter (four-step inter-factor
+    /// twiddle, fused so it costs no extra pass).
+    pub fuse_n: usize,
+    pub buffers: Vec<BufferDecl>,
+    pub dispatches: Vec<Dispatch>,
+}
+
+impl DeviceProgram {
+    /// Complex elements per signal.
+    pub fn points(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Total radix-2 butterfly stages across all dispatches.
+    pub fn total_stages(&self) -> u32 {
+        self.dispatches.iter().map(|d| d.uniforms.stage_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::PlanComponent;
+    use crate::device::lower;
+
+    #[test]
+    fn program_shape_matches_the_lds_decomposition() {
+        // n = 2^13 with a 2^7 LDS budget splits largest-first into
+        // [2^7, 2^6]: two dispatches, 7 + 6 fused stages.
+        let p = lower(&PlanComponent::FullFft { n: 1 << 13, batch: 2 }, 1 << 7).unwrap();
+        assert_eq!(p.dispatches.len(), 2);
+        assert_eq!(p.total_stages(), 13);
+        assert_eq!(
+            (p.dispatches[0].uniforms.stage_count, p.dispatches[1].uniforms.stage_count),
+            (7, 6)
+        );
+        assert_eq!(p.dispatches[0].uniforms.first_stage, 0);
+        assert_eq!(p.dispatches[1].uniforms.first_stage, 7);
+        // Bind chain: input -> ping -> pong.
+        assert_eq!(p.dispatches[0].binds, BindList { src: INPUT_BUFFER, dst: PING_BUFFER });
+        assert_eq!(p.dispatches[1].binds, BindList { src: PING_BUFFER, dst: PONG_BUFFER });
+        assert!(p.dispatches[0].uniforms.bitrev_gather);
+        assert!(!p.dispatches[1].uniforms.bitrev_gather);
+        assert!(!p.dispatches[0].uniforms.ping_to_pong);
+        assert!(p.dispatches[1].uniforms.ping_to_pong);
+        // Twiddle base halves per fused stage: stage 0 strides by rows/2.
+        assert_eq!(p.dispatches[0].uniforms.twiddle_base, (1 << 13) >> 1);
+        assert_eq!(p.dispatches[1].uniforms.twiddle_base, (1 << 13) >> 8);
+        assert_eq!(p.fuse_n, 0, "full FFT has no inter-factor twiddle");
+    }
+
+    #[test]
+    fn gpu_stage_program_strides_and_fuses_the_four_step_twiddle() {
+        let p = lower(
+            &PlanComponent::GpuStage { n: 1 << 10, m1: 1 << 7, m2: 1 << 3, batch: 1 },
+            1 << 12,
+        )
+        .unwrap();
+        assert_eq!((p.rows, p.cols), (1 << 7, 1 << 3));
+        assert_eq!(p.points(), 1 << 10);
+        assert_eq!(p.dispatches.len(), 1, "m1 fits one LDS pass");
+        let u = p.dispatches[0].uniforms;
+        assert_eq!(u.stride, 1 << 3);
+        assert!(u.bitrev_gather && u.fused_twiddle);
+        assert_eq!(p.fuse_n, 1 << 10);
+    }
+}

@@ -18,6 +18,16 @@ pub fn gpu_bytes_moved(n: usize, batch: usize, sys: &SystemConfig) -> f64 {
     BYTES_PER_ELEM_PASS * n as f64 * batch as f64 * k
 }
 
+/// Per-pass breakdown of [`gpu_bytes_moved`]: one entry per LDS kernel
+/// pass, each reading and writing every element of every signal once. This
+/// is what the device backend's movement ledger reconciles its executed
+/// per-dispatch traffic against — exactly, since every entry is an integer
+/// byte count represented in f64.
+pub fn gpu_pass_bytes(n: usize, batch: usize, sys: &SystemConfig) -> Vec<f64> {
+    let k = kernel_count(n, sys.gpu.lds_max_fft);
+    vec![BYTES_PER_ELEM_PASS * n as f64 * batch as f64; k]
+}
+
 /// Modeled GPU execution time in ns.
 pub fn gpu_time_ns(n: usize, batch: usize, sys: &SystemConfig) -> f64 {
     gpu_bytes_moved(n, batch, sys) / babelstream_bw_bytes_per_ns(sys)
@@ -35,6 +45,20 @@ mod tests {
         // 2^13 needs two kernels: 2× the per-element traffic of one pass.
         let two = gpu_bytes_moved(1 << 13, 1, &sys);
         assert_eq!(two, 16.0 * 8192.0 * 2.0);
+    }
+
+    #[test]
+    fn pass_bytes_sum_to_the_end_to_end_prediction() {
+        let sys = SystemConfig::baseline();
+        for (n, batch) in [(1usize << 5, 7usize), (1 << 13, 3), (1 << 27, 1)] {
+            let passes = gpu_pass_bytes(n, batch, &sys);
+            assert_eq!(passes.len(), kernel_count(n, sys.gpu.lds_max_fft));
+            assert_eq!(passes.iter().sum::<f64>(), gpu_bytes_moved(n, batch, &sys));
+            // Every pass moves the whole working set once each way.
+            for &p in &passes {
+                assert_eq!(p, 16.0 * n as f64 * batch as f64);
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ mod bandwidth;
 mod kernels;
 mod measured;
 
-pub use analytical::{gpu_bytes_moved, gpu_time_ns, BYTES_PER_ELEM_PASS};
+pub use analytical::{gpu_bytes_moved, gpu_pass_bytes, gpu_time_ns, BYTES_PER_ELEM_PASS};
 pub use bandwidth::babelstream_bw_bytes_per_ns;
 pub use kernels::{kernel_count, lds_decompose};
 pub use measured::{measured_bw_utilization, measured_time_ns};

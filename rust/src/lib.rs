@@ -23,9 +23,19 @@
 //!   (time + data movement), `execute` computes real spectra. Concrete
 //!   backends: [`backend::HostFftBackend`] (reference FFT),
 //!   [`backend::PjrtGpuBackend`] (AOT artifacts over PJRT),
-//!   [`backend::PimSimBackend`] (functional PIM unit simulator), with
+//!   [`backend::PimSimBackend`] (functional PIM unit simulator), and
+//!   [`device::DeviceBackend`] (stage-dispatch device queue), with
 //!   [`backend::GpuCostModel`] selecting the analytical or measured GPU
 //!   cost provider.
+//! * [`device`] — the stage-dispatch device backend: lowers GPU plan
+//!   components into explicit [`device::DeviceProgram`]s (numbered buffers,
+//!   per-dispatch bind lists + uniform blocks, one dispatch per LDS kernel
+//!   pass) and executes them on the thread pool as a device queue, with a
+//!   [`device::MovementLedger`] whose executed per-dispatch byte counts
+//!   reconcile **exactly** against [`gpu_model::gpu_pass_bytes`] — the seam
+//!   where a real wgpu/PJRT queue plugs in later. Select it with
+//!   `FftEngine::builder().device()` or `--backend device`; audit it with
+//!   the `device-audit` CLI subcommand.
 //! * [`coordinator`] — **L3**: the FFT service. Routing, batching (round-
 //!   robin across FFT sizes, so large requests are never starved), hybrid
 //!   plan execution through the engine, metrics, and open-loop workload
@@ -92,6 +102,7 @@ pub mod backend;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod device;
 pub mod dram;
 pub mod fft;
 pub mod figures;

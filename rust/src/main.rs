@@ -13,11 +13,15 @@
 //! `--threads 1`).
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use pimacolaba::backend::{FftEngine, PjrtGpuBackend};
+use pimacolaba::backend::{
+    ComputeBackend, EngineBackend, FftEngine, GpuCostModel, HostFftBackend, PjrtGpuBackend,
+    PlanComponent,
+};
 use pimacolaba::cluster::{
     parse_fleet, plan_capacity, plan_fleet, run_cluster, run_cluster_traced, ClusterConfig,
     FaultPlan, RouterKind,
@@ -26,6 +30,7 @@ use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{
     synthetic_trace, Arrival, FftRequest, Scheduler, Server, ServiceReport, SizeMix, Workload,
 };
+use pimacolaba::device::{predicted_pass_bytes, DeviceBackend};
 use pimacolaba::fft::{fft_soa, BufferArena, HostKernel, SoaVec};
 use pimacolaba::figures;
 use pimacolaba::obs::{chrome_trace, fnv1a64};
@@ -86,6 +91,7 @@ fn main() -> Result<()> {
         Some("cluster") => cmd_cluster(&args),
         Some("workload") => cmd_workload(&args),
         Some("bench") => cmd_bench(&args),
+        Some("device-audit") => cmd_device_audit(&args),
         Some("trace") => cmd_trace(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("config") => cmd_config(&args),
@@ -391,6 +397,7 @@ fn cmd_serve_live(args: &Args) -> Result<()> {
         _ => None,
     };
     cfg.numeric = args.flag("numeric");
+    cfg.backend = EngineBackend::parse(args.get_or("backend", "host"))?;
     cfg.pace = args.flag("pace");
     cfg.threads = parse_threads(args)?;
     cfg.trace_sample = args.get_usize("trace-sample", 0)? as u64;
@@ -533,6 +540,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let trace = workload.generate(requests, seed);
     let mut cfg = ClusterConfig::new(sys, passes);
     cfg.threads = parse_threads(args)?;
+    cfg.backend = EngineBackend::parse(args.get_or("backend", "host"))?;
     cfg.shards = args.get_usize("shards", 8)?;
     // `--fleet auto` asks the planner to search fleet shapes (needs
     // --slo-us); any other spec pins an explicit heterogeneous fleet.
@@ -955,6 +963,57 @@ fn cmd_bench(args: &Args) -> Result<()> {
         row("hostkernel", &stats, legacy_best);
     }
 
+    // Device section: ComputeBackend::execute throughput of the host
+    // reference kernels vs the stage-dispatch device queue on the same
+    // full-FFT components, one row per (backend, log2 size). After every
+    // device measurement the ledger is reconciled against the analytical
+    // model, so throughput numbers and movement audit come from one run.
+    let mut device_rows = Vec::new();
+    {
+        let arena = Arc::new(BufferArena::new());
+        let mut host_backend =
+            HostFftBackend::new(GpuCostModel::Analytical).with_arena(Arc::clone(&arena));
+        let mut dev_backend = DeviceBackend::new(GpuCostModel::Analytical)
+            .with_system(&sys)
+            .with_arena(Arc::clone(&arena));
+        for &ls in &sizes {
+            let n = 1usize << ls;
+            let batch = (budget / n).clamp(1, 64);
+            let signals: Vec<SoaVec> =
+                (0..batch).map(|i| SoaVec::random(n, 7000 + i as u64)).collect();
+            let component = PlanComponent::FullFft { n, batch };
+            let mut row = |backend: &'static str, stats: &Stats| {
+                let best = stats.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+                device_rows.push(Json::obj(vec![
+                    ("backend", Json::str(backend)),
+                    ("log2_n", Json::num(ls as f64)),
+                    ("n", Json::num(n as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("best_ns", Json::num(best)),
+                    ("mean_ns", Json::num(stats.mean_ns())),
+                    ("mpoints_per_s", Json::num((n * batch) as f64 * 1e3 / best)),
+                ]));
+            };
+            let stats = bench.run(&format!("backend=host/2^{ls}"), || {
+                let outs =
+                    host_backend.execute(&component, &signals).expect("host execute failed");
+                let len = outs.len();
+                arena.give_soa_batch(outs);
+                len
+            });
+            row("host", &stats);
+            let stats = bench.run(&format!("backend=device/2^{ls}"), || {
+                let outs =
+                    dev_backend.execute(&component, &signals).expect("device execute failed");
+                let len = outs.len();
+                arena.give_soa_batch(outs);
+                len
+            });
+            row("device", &stats);
+            dev_backend.reconcile(&component, &sys)?;
+        }
+    }
+
     // Cluster section: same trace per thread count; wall-clock moves,
     // the report digest must not.
     let requests = args.get_usize("requests", if smoke { 20_000 } else { 200_000 })?;
@@ -1003,7 +1062,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 
     let report = Json::obj(vec![
-        ("version", Json::num(2.0)),
+        ("version", Json::num(3.0)),
         ("subject", Json::str("parallel execution runtime perf baseline")),
         ("smoke", Json::Bool(smoke)),
         ("system", Json::str(sys.name.clone())),
@@ -1012,10 +1071,106 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("batch_points_log2", Json::num(budget_log2 as f64)),
         ("fft", Json::arr(fft_rows)),
         ("kernels", Json::arr(kernel_rows)),
+        ("device", Json::arr(device_rows)),
         ("cluster", Json::arr(cluster_rows)),
     ]);
     std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;
     println!("wrote JSON report to {out}");
+    Ok(())
+}
+
+/// Differential movement audit (`device-audit`): lower every GPU-side plan
+/// in the Fig 17 size sweep to a stage-dispatch program, execute it on the
+/// device backend, and reconcile the ledger's executed per-dispatch bytes
+/// against [`pimacolaba::gpu_model::gpu_pass_bytes`] — the same per-pass
+/// prices whose sum is the analytical `gpu_bytes_moved`. Equality is exact
+/// (both sides are integer byte counts held in f64). Writes a JSON
+/// reconciliation report and fails if any plan mismatches.
+fn cmd_device_audit(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let out = args.get_or("out", "device_audit.json");
+    let max_log2 = args.get_usize("max-log2", if smoke { 14 } else { 27 })? as u32;
+    ensure!((5..=27).contains(&max_log2), "--max-log2 must be in 5..=27, got {max_log2}");
+    let opts: Vec<&str> =
+        args.get_or("opts", "sw,hw,swhw").split(',').map(|s| s.trim()).collect();
+    let variant = args.get_or("variant", "baseline");
+
+    let arena = Arc::new(BufferArena::new());
+    let mut rows = Vec::new();
+    let mut mismatches = 0usize;
+    for opt in &opts {
+        let passes = PassConfig::parse(opt)?;
+        let sys = sys_for(passes, variant)?;
+        let mut engine = FftEngine::builder().system(&sys).passes(passes).build();
+        let mut dev = DeviceBackend::new(GpuCostModel::Analytical)
+            .with_system(&sys)
+            .with_arena(Arc::clone(&arena));
+        println!("device-audit opt={}: sizes 2^5..=2^{max_log2}", passes.name());
+        for logn in 5..=max_log2 {
+            let n = 1usize << logn;
+            // Scale the execution batch down with n so the audit stays
+            // tractable at Fig 17's largest sizes; per-dispatch byte
+            // equality is exact at any batch.
+            let batch = ((1usize << 22) / n).clamp(1, 4096);
+            let (plan, _) = engine.plan(n, batch)?;
+            let component = match plan.kind {
+                PlanKind::GpuOnly => PlanComponent::FullFft { n, batch },
+                PlanKind::Collaborative { m1, m2 } => {
+                    PlanComponent::GpuStage { n, m1, m2, batch }
+                }
+            };
+            let inputs: Vec<SoaVec> = (0..batch)
+                .map(|i| SoaVec::random(n, logn as u64 * 1000 + i as u64))
+                .collect();
+            let (outputs, audited_bytes) = dev.execute_audited(&component, &inputs)?;
+            arena.give_soa_batch(outputs);
+            arena.give_soa_batch(inputs);
+            let predicted = predicted_pass_bytes(&component, &sys)?;
+            let executed: Vec<f64> =
+                dev.ledger().records().iter().map(|r| r.bytes_moved()).collect();
+            let ok = dev.ledger().reconcile(&predicted).is_ok();
+            if !ok {
+                mismatches += 1;
+            }
+            println!(
+                "  2^{logn:<2} batch {batch:>5}: {} dispatches, {:>9.3} MB audited, {}",
+                executed.len(),
+                audited_bytes / 1e6,
+                if ok { "reconciled" } else { "MISMATCH" },
+            );
+            rows.push(Json::obj(vec![
+                ("opt", Json::str(passes.name())),
+                ("log2_n", Json::num(logn as f64)),
+                ("n", Json::num(n as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("component", Json::str(component.to_string())),
+                ("dispatches", Json::num(executed.len() as f64)),
+                ("executed_bytes", Json::arr(executed.iter().map(|&b| Json::num(b)).collect())),
+                (
+                    "predicted_bytes",
+                    Json::arr(predicted.iter().map(|&b| Json::num(b)).collect()),
+                ),
+                ("match", Json::Bool(ok)),
+            ]));
+        }
+    }
+
+    let report = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("subject", Json::str("device backend movement reconciliation (Fig 17 sweep)")),
+        ("smoke", Json::Bool(smoke)),
+        ("variant", Json::str(variant.to_string())),
+        ("rows", Json::num(rows.len() as f64)),
+        ("mismatches", Json::num(mismatches as f64)),
+        ("plans", Json::arr(rows)),
+    ]);
+    std::fs::write(out, report.to_string()).with_context(|| format!("writing report {out}"))?;
+    println!("wrote JSON report to {out}");
+    ensure!(
+        mismatches == 0,
+        "{mismatches} plans failed movement reconciliation — see {out} for the rows"
+    );
+    println!("device-audit: executed bytes matched the analytical model on every plan");
     Ok(())
 }
 

@@ -49,7 +49,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::backend::{FftEngine, PassAttribution};
+use crate::backend::{EngineBackend, FftEngine, PassAttribution};
 use crate::config::SystemConfig;
 use crate::coordinator::{TRACE_MAX_BATCH, TRACE_MAX_N};
 use crate::fft::{ArenaStats, BufferArena};
@@ -158,6 +158,9 @@ pub struct ServeConfig {
     pub hedge_after_us: Option<f64>,
     /// Compute real spectra instead of modeled pricing.
     pub numeric: bool,
+    /// GPU execution substrate for the shard worker engines: the fast host
+    /// kernels (default) or the audited stage-dispatch device queue.
+    pub backend: EngineBackend,
     /// Spin-pace modeled service times into wall clock.
     pub pace: bool,
     /// Span-trace every `N`th request id (0 = tracing off). Sampled
@@ -192,6 +195,7 @@ impl ServeConfig {
             deadline_policy: DeadlinePolicy::Drop,
             hedge_after_us: None,
             numeric: false,
+            backend: EngineBackend::default(),
             pace: false,
             trace_sample: 0,
             recorder: 256,
@@ -407,6 +411,7 @@ fn worker_loop(
         .passes(cfg.passes)
         .parallelism(cfg.threads)
         .arena(arena)
+        .backend(cfg.backend)
         .build();
     let mut stats = WorkerStats::default();
     while let Ok(msg) = rx.recv() {
@@ -1029,6 +1034,7 @@ impl Reactor {
             max_inflight: self.cfg.max_inflight,
             deadline_policy: self.cfg.deadline_policy.name(),
             mode: if self.cfg.numeric { "numeric" } else { "modeled" },
+            backend: self.cfg.backend.name(),
             paced: self.cfg.pace,
             close_flushed: reg.counter(M_CLOSE_FLUSHED),
             obs_digest: snap.digest,

@@ -127,6 +127,9 @@ pub struct LiveReport {
     pub deadline_policy: &'static str,
     /// `"modeled"` (plan pricing, no spectra) or `"numeric"` (real FFTs).
     pub mode: &'static str,
+    /// GPU execution substrate the shard workers ran on (`"host"` fast
+    /// kernels or the `"device"` stage-dispatch queue).
+    pub backend: &'static str,
     /// Whether modeled service times were spin-paced into wall clock.
     pub paced: bool,
 
@@ -216,6 +219,7 @@ impl LiveReport {
             // ---- the cluster-report schema, key for key ----
             ("shards", Json::num(self.shards as f64)),
             ("router", Json::str(self.router)),
+            ("backend", Json::str(self.backend)),
             ("requests", Json::num(self.requests as f64)),
             ("signals", Json::num(self.signals as f64)),
             ("padded_signals", Json::num(self.padded_signals as f64)),

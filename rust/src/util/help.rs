@@ -71,7 +71,10 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
             [--trace-out FILE]               --metrics-out rolls a JSON
             [--recorder N] [--addr-out FILE] metrics snapshot every
             [--metrics-out FILE]             --metrics-interval-ms; --addr-out
-            [--metrics-interval-ms T]        writes the listener address.",
+            [--metrics-interval-ms T]        writes the listener address.
+            [--backend host|device]          --backend device runs the shard
+                                             workers on the stage-dispatch
+                                             device queue (audited movement).",
     },
     SubcommandHelp {
         name: "cluster",
@@ -86,7 +89,7 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
             [--passes SPEC] [--variant NAME] injects seeded crashes and
             [--workload-mix SPEC]            stragglers (requeue-or-fail
             [--threads N] [--trace-out FILE] accounting); reports stay byte-
-                                             identical across --threads.
+            [--backend host|device]          identical across --threads.
                                              Writes a JSON report to --out;
                                              --trace-out adds a Chrome trace.",
     },
@@ -111,6 +114,16 @@ pub const SUBCOMMANDS: &[SubcommandHelp] = &[
             [--variant NAME]                 then write the BENCH_runtime.json
                                              perf-trajectory artifact (see
                                              docs/BENCHMARKING.md)",
+    },
+    SubcommandHelp {
+        name: "device-audit",
+        text: "  device-audit [--smoke] [--out FILE]        execute every Fig 17 GPU plan on
+            [--max-log2 P] [--opts a,b,..]   the stage-dispatch device backend
+            [--variant NAME]                 and reconcile the movement
+                                             ledger's executed per-dispatch
+                                             bytes against the analytical
+                                             model (exact equality); writes a
+                                             JSON reconciliation report",
     },
     SubcommandHelp {
         name: "trace",

@@ -25,6 +25,13 @@
 //! | `convolution` | forward FFTs of the pair, pointwise product, inverse FFT (conjugation trick) |
 //! | `stft`        | hop-windowed frames of the signal as one batched FFT of the window size |
 //!
+//! Because every kind reduces to batched 1D passes, all of them execute on
+//! whichever GPU substrate the engine was built with: the tuned host
+//! kernels by default, or the stage-dispatch device queue
+//! (`FftEngine::builder().device()`, `--backend device`) — where each
+//! pass's data movement is additionally audited by `device::MovementLedger`
+//! against the analytical cost model.
+//!
 //! [`KindMix`] is the workload-kind analog of `coordinator::SizeMix`: a
 //! weighted distribution over kinds the trace generator samples, so the
 //! cluster simulator's capacity answers hold for realistic mixed-workload

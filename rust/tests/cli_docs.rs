@@ -60,6 +60,7 @@ fn every_dispatched_subcommand_has_a_help_block() {
         "cluster",
         "workload",
         "bench",
+        "device-audit",
         "trace",
         "artifacts",
         "config",

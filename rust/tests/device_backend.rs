@@ -1,0 +1,344 @@
+//! Differential validation of the stage-dispatch device backend.
+//!
+//! Three contracts, each pinned against an independent oracle:
+//!
+//! 1. **Numerics** — device outputs are *bitwise* the radix-2 reference
+//!    (`fft_soa`, `FourStep::gpu_component_ref`) at every size and thread
+//!    count, within tolerance of the naive DFT, the tuned host engine, and
+//!    the checked-in golden-vector fixtures.
+//! 2. **Movement** — the ledger's executed per-dispatch bytes equal the
+//!    analytical model's per-pass `gpu_bytes_moved` prices exactly for
+//!    every plan the Fig 17 sweep produces.
+//! 3. **Allocation** — steady-state execution over recycled arena buffers
+//!    allocates nothing.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use pimacolaba::backend::{
+    ComputeBackend, FftEngine, GpuCostModel, HostFftBackend, PlanComponent,
+};
+use pimacolaba::config::SystemConfig;
+use pimacolaba::device::{predicted_pass_bytes, DeviceBackend};
+use pimacolaba::fft::{dft_naive, fft_soa, BufferArena, FourStep, SoaVec};
+use pimacolaba::gpu_model::{gpu_bytes_moved, kernel_count};
+use pimacolaba::pimc::PassConfig;
+use pimacolaba::planner::PlanKind;
+use pimacolaba::routines::OptLevel;
+use pimacolaba::runtime::ThreadPool;
+use pimacolaba::util::{Json, Rng};
+use pimacolaba::workload::ALL_KINDS;
+
+fn hw_sys() -> (SystemConfig, PassConfig) {
+    (SystemConfig::baseline().with_hw_opt(), OptLevel::SwHw.into())
+}
+
+/// Largest absolute component in a signal — the scale factor for relative
+/// tolerances (workload outputs grow with both n and the kind's algebra).
+fn max_abs(x: &SoaVec) -> f32 {
+    x.re.iter().chain(x.im.iter()).fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// The golden suite's tolerance curve, scaled by the reference magnitude.
+fn tol_for(n: usize, want: &SoaVec) -> f32 {
+    2e-3 * (n as f32).sqrt() * (1.0 + max_abs(want))
+}
+
+#[test]
+fn device_full_fft_is_bitwise_the_radix2_reference_up_to_2_16() {
+    let mut dev = DeviceBackend::new(GpuCostModel::Analytical);
+    for logn in 1..=16u32 {
+        let n = 1usize << logn;
+        let batch = if n <= 1 << 10 { 3 } else { 1 };
+        let inputs: Vec<SoaVec> =
+            (0..batch).map(|i| SoaVec::random(n, logn as u64 * 31 + i as u64)).collect();
+        let outs = dev.execute(&PlanComponent::FullFft { n, batch }, &inputs).unwrap();
+        for (i, x) in inputs.iter().enumerate() {
+            let want = fft_soa(x);
+            assert_eq!(outs[i].re, want.re, "re mismatch n=2^{logn} signal {i}");
+            assert_eq!(outs[i].im, want.im, "im mismatch n=2^{logn} signal {i}");
+        }
+    }
+}
+
+#[test]
+fn device_full_fft_matches_the_naive_dft() {
+    let mut dev = DeviceBackend::new(GpuCostModel::Analytical);
+    for n in [8usize, 64, 512] {
+        let x = SoaVec::random(n, n as u64);
+        let outs = dev.execute(&PlanComponent::FullFft { n, batch: 1 }, &[x.clone()]).unwrap();
+        let want = dft_naive(&x);
+        let diff = outs[0].max_abs_diff(&want);
+        assert!(diff < tol_for(n, &want), "device vs dft_naive diff {diff} at n={n}");
+    }
+}
+
+#[test]
+fn device_gpu_stage_is_bitwise_the_four_step_reference() {
+    let mut dev = DeviceBackend::new(GpuCostModel::Analytical);
+    for (n, m1, m2) in [(1usize << 8, 1usize << 5, 1usize << 3), (1 << 13, 1 << 7, 1 << 6)] {
+        let fs = FourStep::new(n, m1, m2);
+        let x = SoaVec::random(n, (n + m1) as u64);
+        let outs =
+            dev.execute(&PlanComponent::GpuStage { n, m1, m2, batch: 1 }, &[x.clone()]).unwrap();
+        let want = fs.gpu_component_ref(&x);
+        assert_eq!(outs[0].re, want.re, "n={n} m1={m1}");
+        assert_eq!(outs[0].im, want.im, "n={n} m1={m1}");
+    }
+}
+
+#[test]
+fn device_outputs_are_bitwise_identical_across_thread_counts() {
+    let mut seq = DeviceBackend::new(GpuCostModel::Analytical);
+    let mut par = DeviceBackend::new(GpuCostModel::Analytical)
+        .with_pool(Arc::new(ThreadPool::new(3)));
+    // 8 × 4096 points clears the MIN_PAR_POINTS floor, so the pooled
+    // backend really fans out.
+    let (n, batch) = (1usize << 12, 8usize);
+    let inputs: Vec<SoaVec> = (0..batch).map(|i| SoaVec::random(n, 500 + i as u64)).collect();
+    for comp in [
+        PlanComponent::FullFft { n, batch },
+        PlanComponent::GpuStage { n, m1: 1 << 7, m2: 1 << 5, batch },
+    ] {
+        let a = seq.execute(&comp, &inputs).unwrap();
+        let b = par.execute(&comp, &inputs).unwrap();
+        for i in 0..batch {
+            assert_eq!(a[i].re, b[i].re, "{comp} signal {i}");
+            assert_eq!(a[i].im, b[i].im, "{comp} signal {i}");
+        }
+    }
+}
+
+#[test]
+fn device_engine_matches_host_engine_on_every_workload_kind() {
+    let (sys, passes) = hw_sys();
+    let mut host = FftEngine::builder().system(&sys).passes(passes).build();
+    let mut dev = FftEngine::builder().system(&sys).passes(passes).device().build();
+    for &kind in &ALL_KINDS {
+        for logn in 4..=13u32 {
+            let n = 1usize << logn;
+            if n < kind.min_n() {
+                continue;
+            }
+            let batch = 2 * kind.signal_multiple();
+            let signals: Vec<SoaVec> =
+                (0..batch).map(|i| SoaVec::random(n, logn as u64 * 97 + i as u64)).collect();
+            let h = host.run_workload(kind, n, &signals).unwrap().outputs;
+            let d = dev.run_workload(kind, n, &signals).unwrap().outputs;
+            assert_eq!(h.len(), d.len(), "{kind} n=2^{logn} output counts");
+            for (i, (hx, dx)) in h.iter().zip(&d).enumerate() {
+                let diff = hx.max_abs_diff(dx);
+                let tol = tol_for(n, hx);
+                assert!(
+                    diff < tol,
+                    "{kind} n=2^{logn} output {i}: device vs host diff {diff} > tol {tol}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_random_shapes_agree_between_device_and_host_engines() {
+    let (sys, passes) = hw_sys();
+    let mut host = FftEngine::builder().system(&sys).passes(passes).build();
+    let mut dev = FftEngine::builder().system(&sys).passes(passes).device().build();
+    let mut rng = Rng::new(0xDEC0DE);
+    for round in 0..24 {
+        let kind = *rng.choose(&ALL_KINDS);
+        // 2^4 already clears every kind's min_n.
+        let n = rng.pow2(4, 12);
+        let batch = rng.range(1, 4) * kind.signal_multiple();
+        let signals: Vec<SoaVec> = (0..batch)
+            .map(|i| SoaVec::random(n, round as u64 * 1000 + i as u64))
+            .collect();
+        let h = host.run_workload(kind, n, &signals).unwrap().outputs;
+        let d = dev.run_workload(kind, n, &signals).unwrap().outputs;
+        assert_eq!(h.len(), d.len(), "round {round}: {kind} n={n} batch={batch}");
+        for (i, (hx, dx)) in h.iter().zip(&d).enumerate() {
+            let diff = hx.max_abs_diff(dx);
+            let tol = tol_for(n, hx);
+            assert!(
+                diff < tol,
+                "round {round}: {kind} n={n} batch={batch} output {i}: diff {diff} > tol {tol}"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_vectors_replay_through_the_device_backend() {
+    let fixture =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/golden_vectors.json");
+    let text = std::fs::read_to_string(Path::new(fixture))
+        .expect("missing golden fixture — run `cargo test --test golden_vectors -- --ignored`");
+    let j = Json::parse(&text).unwrap();
+    let mut dev = DeviceBackend::new(GpuCostModel::Analytical);
+    let tau = std::f64::consts::TAU;
+    let mut replayed = 0usize;
+    for case in j.field("cases").unwrap().as_arr().unwrap() {
+        // The device backend serves the 1D complex path; real/2D fixtures
+        // exercise pack/transpose layers above it.
+        if case.field("transform").unwrap().as_str().unwrap() != "fft1d" {
+            continue;
+        }
+        let n = case.field("n").unwrap().as_usize().unwrap();
+        let input = case.field("input").unwrap().as_str().unwrap();
+        let tol = case.field("tol").unwrap().as_f64().unwrap() as f32;
+        let mut x = SoaVec::zeros(n);
+        match input {
+            "impulse" => x.set(0, 1.0, 0.0),
+            "constant" => (0..n).for_each(|t| x.set(t, 1.0, 0.0)),
+            "tone" => {
+                let k0 = (n / 4).max(1);
+                for t in 0..n {
+                    let ang = tau * (k0 * t % n) as f64 / n as f64;
+                    x.set(t, ang.cos() as f32, ang.sin() as f32);
+                }
+            }
+            other => panic!("unknown input '{other}'"),
+        }
+        let got = &dev.execute(&PlanComponent::FullFft { n, batch: 1 }, &[x]).unwrap()[0];
+        let label = format!("device fft1d n={n} {input}");
+        match case.field("expect").unwrap().as_str().unwrap() {
+            "uniform" => {
+                let re = case.field("re").unwrap().as_f64().unwrap() as f32;
+                let im = case.field("im").unwrap().as_f64().unwrap() as f32;
+                for k in 0..n {
+                    let (gr, gi) = got.get(k);
+                    assert!(
+                        (gr - re).abs() < tol && (gi - im).abs() < tol,
+                        "{label} bin {k}: got ({gr}, {gi}), want ({re}, {im})"
+                    );
+                }
+            }
+            "sparse" => {
+                let bins = case.field("bins").unwrap().as_arr().unwrap();
+                let mut listed = vec![false; n];
+                for b in bins {
+                    let k = b.field("k").unwrap().as_usize().unwrap();
+                    let re = b.field("re").unwrap().as_f64().unwrap() as f32;
+                    let im = b.field("im").unwrap().as_f64().unwrap() as f32;
+                    listed[k] = true;
+                    let (gr, gi) = got.get(k);
+                    assert!(
+                        (gr - re).abs() < tol && (gi - im).abs() < tol,
+                        "{label} bin {k}: got ({gr}, {gi}), want ({re}, {im})"
+                    );
+                }
+                for (k, &seen) in listed.iter().enumerate() {
+                    if !seen {
+                        let (gr, gi) = got.get(k);
+                        let mag = (gr * gr + gi * gi).sqrt();
+                        assert!(mag < tol, "{label}: leakage {mag} at unlisted bin {k}");
+                    }
+                }
+            }
+            other => panic!("unknown expect kind '{other}'"),
+        }
+        replayed += 1;
+    }
+    assert!(replayed >= 30, "fixture should carry 3 fft1d cases per size, got {replayed}");
+}
+
+#[test]
+fn every_fig17_plan_reconciles_executed_bytes_with_the_analytical_model() {
+    // The in-test sweep covers 2^5..=2^17 (crossing the §5.1 collaboration
+    // threshold so both FullFft and GpuStage plans appear) for two opt
+    // levels; the `device-audit` CLI runs the full 2^5..=2^27 figure range.
+    let arena = Arc::new(BufferArena::new());
+    let mut saw_stage = false;
+    for opt in [OptLevel::Sw, OptLevel::SwHw] {
+        let passes: PassConfig = opt.into();
+        let sys = if passes.needs_hw() {
+            SystemConfig::baseline().with_hw_opt()
+        } else {
+            SystemConfig::baseline()
+        };
+        let mut engine = FftEngine::builder().system(&sys).passes(passes).build();
+        let mut dev = DeviceBackend::new(GpuCostModel::Analytical)
+            .with_system(&sys)
+            .with_arena(Arc::clone(&arena));
+        for logn in 5..=17u32 {
+            let n = 1usize << logn;
+            let batch = ((1usize << 18) / n).clamp(1, 64);
+            let (plan, _) = engine.plan(n, batch).unwrap();
+            let component = match plan.kind {
+                PlanKind::GpuOnly => PlanComponent::FullFft { n, batch },
+                PlanKind::Collaborative { m1, m2 } => {
+                    saw_stage = true;
+                    PlanComponent::GpuStage { n, m1, m2, batch }
+                }
+            };
+            let inputs: Vec<SoaVec> =
+                (0..batch).map(|i| SoaVec::random(n, logn as u64 * 7 + i as u64)).collect();
+            let (outs, bytes) = dev.execute_audited(&component, &inputs).unwrap();
+            arena.give_soa_batch(outs);
+            arena.give_soa_batch(inputs);
+
+            // Per-dispatch exact equality, then the end-to-end totals.
+            dev.reconcile(&component, &sys).unwrap();
+            let predicted = predicted_pass_bytes(&component, &sys).unwrap();
+            assert_eq!(
+                dev.ledger().records().len(),
+                predicted.len(),
+                "n=2^{logn}: dispatch count vs analytical kernel passes"
+            );
+            if let PlanComponent::FullFft { .. } = component {
+                assert_eq!(
+                    predicted.len(),
+                    kernel_count(n, sys.gpu.lds_max_fft),
+                    "n=2^{logn}"
+                );
+                assert_eq!(bytes, gpu_bytes_moved(n, batch, &sys), "n=2^{logn} total bytes");
+            }
+        }
+    }
+    assert!(saw_stage, "the sweep must cross the collaboration threshold");
+}
+
+#[test]
+fn steady_state_device_execution_allocates_nothing() {
+    let arena = Arc::new(BufferArena::new());
+    let mut dev =
+        DeviceBackend::new(GpuCostModel::Analytical).with_arena(Arc::clone(&arena));
+    let (n, batch) = (1usize << 10, 4usize);
+    let comp = PlanComponent::FullFft { n, batch };
+    let inputs: Vec<SoaVec> = (0..batch).map(|i| SoaVec::random(n, i as u64)).collect();
+    // Warmup populates the free lists (ping/pong/tile/output buffers).
+    for _ in 0..3 {
+        let outs = dev.execute(&comp, &inputs).unwrap();
+        arena.give_soa_batch(outs);
+    }
+    let warm = arena.stats();
+    assert!(warm.alloc_bytes > 0, "warmup must route buffers through the arena");
+    for _ in 0..16 {
+        let outs = dev.execute(&comp, &inputs).unwrap();
+        arena.give_soa_batch(outs);
+    }
+    let steady = arena.stats();
+    assert_eq!(
+        steady.alloc_bytes, warm.alloc_bytes,
+        "steady-state device dispatch must not heap-allocate"
+    );
+    assert!(steady.recycled > warm.recycled, "steady-state checkouts must recycle");
+}
+
+#[test]
+fn host_backend_and_device_backend_execute_the_same_component_consistently() {
+    // Same component, same inputs, two substrates: the tuned host kernels
+    // and the stage-dispatch queue must agree within the golden tolerance
+    // at every size (they only differ in summation order).
+    let mut host = HostFftBackend::new(GpuCostModel::Analytical);
+    let mut dev = DeviceBackend::new(GpuCostModel::Analytical);
+    for logn in 2..=14u32 {
+        let n = 1usize << logn;
+        let comp = PlanComponent::FullFft { n, batch: 1 };
+        let x = SoaVec::random(n, 4096 + logn as u64);
+        let h = host.execute(&comp, &[x.clone()]).unwrap();
+        let d = dev.execute(&comp, &[x]).unwrap();
+        let diff = h[0].max_abs_diff(&d[0]);
+        let tol = tol_for(n, &h[0]);
+        assert!(diff < tol, "n=2^{logn}: host vs device diff {diff} > tol {tol}");
+    }
+}

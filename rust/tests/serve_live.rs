@@ -9,6 +9,7 @@
 
 use std::collections::BTreeSet;
 
+use pimacolaba::backend::EngineBackend;
 use pimacolaba::cluster::{run_cluster, ClusterConfig};
 use pimacolaba::config::SystemConfig;
 use pimacolaba::coordinator::{Arrival, SizeMix, Workload};
@@ -200,6 +201,54 @@ fn numeric_steady_state_recycles_all_payload_buffers() {
         assert!(snap.prometheus.contains(m), "metrics export missing {m}");
     }
     let report = server.shutdown().unwrap();
+    assert_eq!(report.unaccounted(), 0);
+}
+
+#[test]
+fn device_backend_shards_recycle_buffers_and_report_their_substrate() {
+    // Same steady-state contract as the numeric test above, but with the
+    // shard workers running on the stage-dispatch device queue: warm the
+    // arena's high-water mark, then prove the device path's ping-pong,
+    // tile, and output buffers all come from the free lists.
+    let (sys, passes) = hw_sys();
+    let mut cfg = ServeConfig::new(sys, passes);
+    cfg.shards = 2;
+    cfg.numeric = true;
+    cfg.backend = EngineBackend::Device;
+    let server = LiveServer::start(cfg).unwrap();
+    let client = server.client();
+    let serve_one = |id: u64, seed: u64| {
+        let rx = client.submit(LiveRequest::new(id, WorkloadKind::Batch1d, 256, 2, seed));
+        assert!(
+            matches!(rx.recv().unwrap(), pimacolaba::serve::LiveResult::Served { .. }),
+            "device-backend request {id} must serve"
+        );
+    };
+    let rxs: Vec<_> = (0..8)
+        .map(|i| client.submit(LiveRequest::new(i, WorkloadKind::Batch1d, 256, 2, 11 + i)))
+        .collect();
+    for rx in rxs {
+        assert!(matches!(rx.recv().unwrap(), pimacolaba::serve::LiveResult::Served { .. }));
+    }
+    for i in 0..4 {
+        serve_one(100 + i, 50 + i);
+    }
+    let warm = server.arena_stats();
+    assert!(warm.alloc_bytes > 0, "device mode must route payloads through the arena");
+
+    for i in 0..12 {
+        serve_one(1000 + i, 80 + i);
+    }
+    let steady = server.arena_stats();
+    assert_eq!(
+        steady.alloc_bytes, warm.alloc_bytes,
+        "steady-state device serving must not allocate payload buffers"
+    );
+    assert!(steady.recycled > warm.recycled, "steady-state requests must recycle");
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.backend, "device");
+    assert_eq!(report.to_json().field("backend").unwrap().as_str().unwrap(), "device");
     assert_eq!(report.unaccounted(), 0);
 }
 
